@@ -1,0 +1,71 @@
+"""AOT compile path: lower the L2 functions to HLO *text* artifacts that
+the Rust runtime loads via the PJRT CPU client.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_module().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Shapes here are the single source of truth and must match
+``rust/src/runtime/mod.rs::shapes``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed export shapes (mirrored in rust/src/runtime/mod.rs::shapes).
+FP_BATCH, FP_WORDS = 64, 16
+MLP_BATCH, MLP_IN, MLP_HIDDEN, MLP_OUT = 8, 16, 32, 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def exports():
+    u32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.uint32)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return {
+        "fingerprint": (model.fingerprint_batch, [u32(FP_BATCH, FP_WORDS)]),
+        "batch_verify": (model.batch_verify, [u32(FP_BATCH, FP_WORDS), u32(FP_BATCH)]),
+        "mlp": (
+            model.mlp_forward,
+            [
+                f32(MLP_BATCH, MLP_IN),
+                f32(MLP_IN, MLP_HIDDEN),
+                f32(MLP_HIDDEN),
+                f32(MLP_HIDDEN, MLP_OUT),
+                f32(MLP_OUT),
+            ],
+        ),
+    }
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, specs) in exports().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

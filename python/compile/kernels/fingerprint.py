@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: batched xxHash32-style message fingerprints.
+
+uBFT's registers and checkpoint/summary machinery fingerprint messages
+constantly. The per-message path in Rust uses native xxhash; the *bulk*
+verification of a CTBcast tail (checkpoint/summary time, a background
+task in the paper) is expressed here as a Pallas kernel so it lowers into
+the same AOT HLO module the Rust coordinator executes via PJRT.
+
+Bit-compatibility contract: this kernel must equal
+``ubft::crypto::lane_fingerprint32`` in Rust (one xxHash32 round per u32
+word, seed lane ``seed + PRIME5``, length mix, standard avalanche). The
+pytest suite pins the pure-python reference; ``it_runtime.rs``
+cross-checks Rust-native vs the compiled HLO.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (B, W) message matrix is
+tiled along B via ``BlockSpec``; each block streams HBM→VMEM once and does
+pure VPU integer work (no MXU). W is a compile-time constant so the word
+loop fully unrolls into vector ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+PRIME32_1 = np.uint32(0x9E3779B1)
+PRIME32_2 = np.uint32(0x85EBCA77)
+PRIME32_3 = np.uint32(0xC2B2AE3D)
+PRIME32_5 = np.uint32(0x165667B1)
+
+
+def _rotl(x, r):
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def _round(acc, w):
+    return _rotl(acc + w * PRIME32_2, 13) * PRIME32_1
+
+
+def _avalanche(acc):
+    acc = acc ^ (acc >> np.uint32(15))
+    acc = acc * PRIME32_2
+    acc = acc ^ (acc >> np.uint32(13))
+    acc = acc * PRIME32_3
+    acc = acc ^ (acc >> np.uint32(16))
+    return acc
+
+
+def _fingerprint_block(x, seed):
+    """Fingerprint each row of a (b, W) uint32 block."""
+    words = x.shape[1]
+    acc = jnp.full((x.shape[0],), np.uint32((seed + 0x165667B1) & 0xFFFFFFFF), dtype=jnp.uint32)
+    for i in range(words):  # unrolled: W is static
+        acc = _round(acc, x[:, i])
+    acc = acc + np.uint32((words * 4) & 0xFFFFFFFF)
+    return _avalanche(acc)
+
+
+def _kernel(x_ref, o_ref, *, seed):
+    o_ref[...] = _fingerprint_block(x_ref[...], seed)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "seed"))
+def fingerprint(x, block_b=32, seed=0):
+    """Fingerprint a batch of messages.
+
+    Args:
+      x: (B, W) uint32 — zero-padded little-endian message words.
+      block_b: rows per grid step (VMEM tile height).
+      seed: xxHash seed lane.
+
+    Returns:
+      (B,) uint32 fingerprints.
+    """
+    b, w = x.shape
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, seed=seed),
+        grid=((b + pad) // bb,),
+        in_specs=[pl.BlockSpec((bb, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b + pad,), jnp.uint32),
+        interpret=True,  # CPU path; real-TPU lowering is compile-only here
+    )(x)
+    return out[:b]

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: tiled matmul + bias + optional ReLU.
+
+Backs the BFT-replicated tensor service (``apps::TensorApp``): the MLP
+forward pass (L2, ``model.py``) calls this kernel for both layers so the
+whole network lowers into one AOT HLO module.
+
+TPU mapping: classic (bm, bn) output tiling with the full K panel resident
+— for the service's layer sizes (≤ 32×32) one K panel fits VMEM easily; at
+MXU scale bm=bn=128 with a K loop would be the shape (DESIGN.md §8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    acc = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "relu"))
+def matmul_bias(x, w, b, block_m=8, block_n=32, relu=False):
+    """Compute ``act(x @ w + b)`` with a Pallas grid over output tiles.
+
+    Args:
+      x: (M, K) f32.
+      w: (K, N) f32.
+      b: (N,) f32.
+      relu: apply ReLU when True.
+
+    Returns:
+      (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+        b = jnp.pad(b, (0, pad_n))
+    mm, nn = m + pad_m, n + pad_n
+    out = pl.pallas_call(
+        functools.partial(_kernel, relu=relu),
+        grid=(mm // bm, nn // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=True,  # CPU path; see fingerprint.py
+    )(x, w, b)
+    return out[:m, :n]

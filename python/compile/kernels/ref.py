@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+
+import jax.numpy as jnp
+
+PRIME32_1 = jnp.uint32(0x9E3779B1)
+PRIME32_2 = jnp.uint32(0x85EBCA77)
+PRIME32_3 = jnp.uint32(0xC2B2AE3D)
+PRIME32_5 = jnp.uint32(0x165667B1)
+
+
+def _rotl(x, r):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def ref_fingerprint(x, seed=0):
+    """Reference for kernels.fingerprint: (B, W) uint32 -> (B,) uint32."""
+    x = jnp.asarray(x, dtype=jnp.uint32)
+    words = x.shape[1]
+    acc = jnp.full((x.shape[0],), jnp.uint32(seed) + PRIME32_5, dtype=jnp.uint32)
+    for i in range(words):
+        acc = _rotl(acc + x[:, i] * PRIME32_2, 13) * PRIME32_1
+    acc = acc + jnp.uint32(words * 4)
+    acc = acc ^ (acc >> jnp.uint32(15))
+    acc = acc * PRIME32_2
+    acc = acc ^ (acc >> jnp.uint32(13))
+    acc = acc * PRIME32_3
+    acc = acc ^ (acc >> jnp.uint32(16))
+    return acc
+
+
+def py_fingerprint(words, seed=0):
+    """Plain-int mirror of ``ubft::crypto::lane_fingerprint32`` (the Rust
+    implementation), used to pin cross-language bit-compatibility."""
+    mask = 0xFFFFFFFF
+    p1, p2, p3, p5 = 0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x165667B1
+    acc = (seed + p5) & mask
+    for w in words:
+        acc = (acc + w * p2) & mask
+        acc = ((acc << 13) | (acc >> 19)) & mask
+        acc = (acc * p1) & mask
+    acc = (acc + len(words) * 4) & mask
+    acc ^= acc >> 15
+    acc = (acc * p2) & mask
+    acc ^= acc >> 13
+    acc = (acc * p3) & mask
+    acc ^= acc >> 16
+    return acc
+
+
+def ref_matmul_bias(x, w, b, relu=False):
+    """Reference for kernels.matmul: act(x @ w + b)."""
+    out = jnp.dot(x, w) + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def ref_mlp(x, w1, b1, w2, b2):
+    """Reference two-layer MLP forward."""
+    h = ref_matmul_bias(x, w1, b1, relu=True)
+    return ref_matmul_bias(h, w2, b2, relu=False)

@@ -1,0 +1,36 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Three exported functions (shapes fixed at AOT time; see ``aot.py`` and
+``rust/src/runtime/mod.rs::shapes``):
+
+* ``fingerprint_batch`` — bulk message fingerprints (calls the L1 Pallas
+  fingerprint kernel);
+* ``batch_verify`` — fingerprints a batch and compares against expected
+  digests, returning a 0/1 mask (the tail-verification path used at
+  checkpoint/summary time);
+* ``mlp_forward`` — the tensor service's two-layer MLP (both layers run
+  the L1 Pallas matmul kernel).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.fingerprint import fingerprint
+from .kernels.matmul import matmul_bias
+
+
+def fingerprint_batch(msgs):
+    """(B, W) uint32 -> (B,) uint32 fingerprints."""
+    return (fingerprint(msgs),)
+
+
+def batch_verify(msgs, expected):
+    """(B, W) uint32, (B,) uint32 -> (B,) uint32 mask (1 = digest match)."""
+    fps = fingerprint(msgs)
+    return ((fps == expected).astype(jnp.uint32),)
+
+
+def mlp_forward(x, w1, b1, w2, b2):
+    """Two-layer MLP: relu(x@w1+b1) @ w2 + b2, all via the Pallas kernel."""
+    h = matmul_bias(x, w1, b1, relu=True)
+    out = matmul_bias(h, w2, b2, relu=False)
+    return (out,)

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, seeds and block sizes; plain tests pin the
+cross-language contract with the Rust implementation.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fingerprint import fingerprint
+from compile.kernels.matmul import matmul_bias
+from compile.kernels.ref import py_fingerprint, ref_fingerprint, ref_matmul_bias
+
+
+# ---------------------------------------------------------------------
+# fingerprint kernel
+# ---------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    w=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    block=st.sampled_from([1, 4, 8, 32]),
+    data=st.data(),
+)
+def test_fingerprint_matches_ref(b, w, seed, block, data):
+    raw = data.draw(
+        st.lists(
+            st.integers(min_value=0, max_value=2**32 - 1),
+            min_size=b * w,
+            max_size=b * w,
+        )
+    )
+    x = np.array(raw, dtype=np.uint32).reshape(b, w)
+    got = np.asarray(fingerprint(x, block_b=block, seed=seed))
+    want = np.asarray(ref_fingerprint(x, seed=seed))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fingerprint_matches_rust_contract():
+    # py_fingerprint mirrors ubft::crypto::lane_fingerprint32 word-for-word;
+    # the kernel must agree on every row.
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 2**32, size=(16, 16), dtype=np.uint32)
+    got = np.asarray(fingerprint(x))
+    for i in range(16):
+        assert got[i] == py_fingerprint([int(v) for v in x[i]]), f"row {i}"
+
+
+def test_fingerprint_known_answer_zero_row():
+    # One pinned value so any constant/rotation regression is caught
+    # even if kernel and oracle drift together.
+    x = np.zeros((1, 4), dtype=np.uint32)
+    expected = py_fingerprint([0, 0, 0, 0])
+    assert int(np.asarray(fingerprint(x))[0]) == expected
+
+
+def test_fingerprint_distinct_rows_distinct_outputs():
+    x = np.arange(64 * 16, dtype=np.uint32).reshape(64, 16)
+    fps = np.asarray(fingerprint(x))
+    assert len(set(fps.tolist())) == 64
+
+
+def test_fingerprint_seed_sensitivity():
+    x = np.ones((4, 8), dtype=np.uint32)
+    a = np.asarray(fingerprint(x, seed=0))
+    b = np.asarray(fingerprint(x, seed=1))
+    assert not np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=24),
+    k=st.integers(min_value=1, max_value=24),
+    n=st.integers(min_value=1, max_value=40),
+    relu=st.booleans(),
+    bm=st.sampled_from([1, 4, 8]),
+    bn=st.sampled_from([4, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_matches_ref(m, k, n, relu, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    b = rng.standard_normal(n, dtype=np.float32)
+    got = np.asarray(matmul_bias(x, w, b, block_m=bm, block_n=bn, relu=relu))
+    want = np.asarray(ref_matmul_bias(x, w, b, relu=relu))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_relu_clamps_negatives():
+    x = np.array([[1.0, -1.0]], dtype=np.float32)
+    w = np.eye(2, dtype=np.float32)
+    b = np.zeros(2, dtype=np.float32)
+    out = np.asarray(matmul_bias(x, w, b, relu=True))
+    np.testing.assert_array_equal(out, [[1.0, 0.0]])
+
+
+def test_matmul_bias_applied():
+    x = np.zeros((2, 3), dtype=np.float32)
+    w = np.zeros((3, 4), dtype=np.float32)
+    b = np.arange(4, dtype=np.float32)
+    out = np.asarray(matmul_bias(x, w, b))
+    np.testing.assert_array_equal(out, np.tile(b, (2, 1)))
+
+
+def test_matmul_rejects_shape_mismatch():
+    x = np.zeros((2, 3), dtype=np.float32)
+    w = np.zeros((4, 4), dtype=np.float32)
+    b = np.zeros(4, dtype=np.float32)
+    with pytest.raises(AssertionError):
+        matmul_bias(x, w, b)

@@ -1,0 +1,51 @@
+"""L2 model graphs vs references, plus AOT export sanity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.aot import FP_BATCH, FP_WORDS, MLP_BATCH, MLP_HIDDEN, MLP_IN, MLP_OUT, exports, to_hlo_text
+from compile.kernels.ref import ref_fingerprint, ref_mlp
+
+import jax
+
+
+def test_batch_verify_flags_matches_and_mismatches():
+    rng = np.random.default_rng(3)
+    msgs = rng.integers(0, 2**32, size=(8, 4), dtype=np.uint32)
+    expected = np.asarray(ref_fingerprint(msgs)).copy()
+    expected[3] ^= 1  # corrupt one digest
+    (mask,) = model.batch_verify(msgs, expected)
+    mask = np.asarray(mask)
+    want = np.ones(8, dtype=np.uint32)
+    want[3] = 0
+    np.testing.assert_array_equal(mask, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_mlp_forward_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((MLP_BATCH, MLP_IN), dtype=np.float32)
+    w1 = rng.standard_normal((MLP_IN, MLP_HIDDEN), dtype=np.float32)
+    b1 = rng.standard_normal(MLP_HIDDEN, dtype=np.float32)
+    w2 = rng.standard_normal((MLP_HIDDEN, MLP_OUT), dtype=np.float32)
+    b2 = rng.standard_normal(MLP_OUT, dtype=np.float32)
+    (got,) = model.mlp_forward(x, w1, b1, w2, b2)
+    want = ref_mlp(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fingerprint_batch_shape():
+    msgs = np.zeros((FP_BATCH, FP_WORDS), dtype=np.uint32)
+    (fps,) = model.fingerprint_batch(msgs)
+    assert fps.shape == (FP_BATCH,)
+    assert fps.dtype == np.uint32
+
+
+def test_all_exports_lower_to_hlo_text():
+    for name, (fn, specs) in exports().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text, name
+        assert len(text) > 200, name

@@ -1,0 +1,8 @@
+//! Bench target: regenerate the paper's fig7 on the DES.
+//! Sample count: UBFT_SAMPLES (default 2000 for bench runs; the paper
+//! uses >= 10000 — run `ubft fig7` for the full version).
+fn main() {
+    let t0 = std::time::Instant::now();
+    ubft::harness::fig7::main_run(ubft::harness::samples_per_point(2000));
+    println!("\n[fig7 regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

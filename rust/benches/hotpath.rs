@@ -1,0 +1,151 @@
+//! Hot-path micro-benchmarks (real mode, wall-clock): the L3 primitives
+//! whose cost bounds the real deployment. Hand-rolled harness (criterion
+//! unavailable offline): warmup + N timed iterations, reports ns/op.
+//!
+//! These feed EXPERIMENTS.md §Perf: the p2p ring is the per-message floor,
+//! xxhash the checksum cost, Ed25519 the slow-path crypto, the DES event
+//! rate bounds how fast the evaluation sweeps run.
+
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {ns:>12.1} ns/op");
+    ns
+}
+
+fn main() {
+    println!("--- uBFT hot-path micro-benchmarks (real mode) ---");
+
+    // p2p ring: one-way message post + poll (the §6.2 primitive).
+    {
+        let (mut tx, mut rx) = ubft::p2p::create(128, 256);
+        let payload = [0xABu8; 64];
+        bench("p2p ring send+recv (64 B)", 2_000_000, || {
+            tx.send(&payload);
+            while rx.poll().is_none() {}
+        });
+        let big = [0xCDu8; 256];
+        bench("p2p ring send+recv (256 B)", 1_000_000, || {
+            tx.send(&big);
+            while rx.poll().is_none() {}
+        });
+    }
+
+    // Checksums.
+    {
+        let data = vec![0x5Au8; 256];
+        bench("xxhash64 (256 B)", 5_000_000, || {
+            std::hint::black_box(ubft::crypto::xxh64(&data, 0));
+        });
+        let words: Vec<u32> = (0..16).collect();
+        bench("lane_fingerprint32 (16 words)", 5_000_000, || {
+            std::hint::black_box(ubft::crypto::lane_fingerprint32(&words, 0));
+        });
+    }
+
+    // Signatures (from-scratch Ed25519).
+    {
+        let ks = ubft::crypto::KeyStore::ed25519(2, 42);
+        let msg = [7u8; 64];
+        let sig = ks.sign(0, &msg);
+        bench("ed25519 sign (64 B)", 300, || {
+            std::hint::black_box(ks.sign(0, &msg));
+        });
+        bench("ed25519 verify (64 B)", 150, || {
+            assert!(ks.verify(0, &msg, &sig));
+        });
+        let sim = ubft::crypto::KeyStore::sim(42);
+        let ssig = sim.sign(0, &msg);
+        bench("sim-signer sign+verify", 500_000, || {
+            assert!(sim.verify(0, &msg, &ssig));
+        });
+    }
+
+    // Wire encoding of a PREPARE (the per-proposal serialization cost).
+    {
+        use ubft::consensus::msgs::{PrepareBody, Request};
+        use ubft::util::wire::Wire;
+        let pb = PrepareBody {
+            view: 3,
+            slot: 999,
+            req: Request { client: 4, rid: 77, payload: vec![0u8; 64] },
+        };
+        bench("PrepareBody encode+decode", 1_000_000, || {
+            let enc = pb.encode();
+            std::hint::black_box(PrepareBody::decode(&enc).unwrap());
+        });
+    }
+
+    // DES engine throughput: events/second processed.
+    {
+        use ubft::env::{Actor, Env, Event};
+        struct Ping {
+            peer: usize,
+            left: u64,
+        }
+        impl Actor for Ping {
+            fn on_start(&mut self, env: &mut dyn Env) {
+                if self.left > 0 {
+                    env.send(self.peer, vec![0u8; 16]);
+                }
+            }
+            fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+                if let Event::Recv { from, .. } = ev {
+                    if self.left > 0 {
+                        self.left -= 1;
+                        env.send(from, vec![0u8; 16]);
+                    }
+                }
+            }
+        }
+        let rounds = 1_000_000u64;
+        let mut sim = ubft::sim::Sim::new(ubft::config::Config::default());
+        sim.add_actor(Box::new(Ping { peer: 1, left: rounds }));
+        sim.add_actor(Box::new(Ping { peer: 0, left: rounds }));
+        let t0 = Instant::now();
+        sim.run_until(ubft::SECOND * 3600);
+        let evs = sim.stats().events;
+        let rate = evs as f64 / t0.elapsed().as_secs_f64();
+        println!("{:<44} {:>12.2} M events/s", "DES engine throughput", rate / 1e6);
+    }
+
+    // End-to-end DES consensus rate: simulated requests per wall second.
+    {
+        let cfg = ubft::config::Config::default();
+        let mut sim = ubft::sim::Sim::new(cfg.clone());
+        for i in 0..cfg.n {
+            sim.add_actor(Box::new(ubft::consensus::Replica::new(
+                i,
+                cfg.clone(),
+                Box::new(ubft::smr::NoopApp::new()),
+            )));
+        }
+        let client = ubft::rpc::Client::new(
+            (0..cfg.n).collect(),
+            cfg.quorum(),
+            Box::new(ubft::rpc::BytesWorkload { size: 32, label: "noop" }),
+            20_000,
+        );
+        let done = client.done_handle();
+        sim.add_actor(Box::new(client));
+        let t0 = Instant::now();
+        let mut horizon = ubft::SECOND;
+        while done.lock().unwrap().is_none() && horizon < 600 * ubft::SECOND {
+            sim.run_until(horizon);
+            horizon *= 2;
+        }
+        let rate = 20_000.0 / t0.elapsed().as_secs_f64();
+        println!(
+            "{:<44} {:>12.0} sim-requests/wall-s",
+            "DES uBFT fast-path simulation rate", rate
+        );
+    }
+}

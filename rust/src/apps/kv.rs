@@ -1,0 +1,259 @@
+//! Memcached-style key-value store (§7.1): binary GET/SET protocol,
+//! 16-byte keys, 32-byte values; the paper's workload is 30% GETs of
+//! which 80% hit.
+
+use crate::crypto::{hash_parts, Hash32};
+use crate::rpc::Workload;
+use crate::smr::App;
+use crate::util::Rng;
+use crate::Nanos;
+use std::collections::BTreeMap;
+
+/// Request opcodes.
+pub const OP_GET: u8 = 1;
+pub const OP_SET: u8 = 2;
+pub const OP_DELETE: u8 = 3;
+
+/// Response status.
+pub const ST_OK: u8 = 0;
+pub const ST_MISS: u8 = 1;
+pub const ST_ERR: u8 = 2;
+
+/// Encode a GET request.
+pub fn get(key: &[u8]) -> Vec<u8> {
+    let mut v = vec![OP_GET, key.len() as u8];
+    v.extend_from_slice(key);
+    v
+}
+
+/// Encode a SET request.
+pub fn set(key: &[u8], value: &[u8]) -> Vec<u8> {
+    let mut v = vec![OP_SET, key.len() as u8];
+    v.extend_from_slice(key);
+    v.extend_from_slice(value);
+    v
+}
+
+/// Encode a DELETE request.
+pub fn delete(key: &[u8]) -> Vec<u8> {
+    let mut v = vec![OP_DELETE, key.len() as u8];
+    v.extend_from_slice(key);
+    v
+}
+
+pub struct KvApp {
+    map: BTreeMap<Vec<u8>, Vec<u8>>,
+    version: u64,
+}
+
+impl KvApp {
+    pub fn new() -> KvApp {
+        KvApp { map: BTreeMap::new(), version: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Default for KvApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl App for KvApp {
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        self.version += 1;
+        if req.len() < 2 {
+            return vec![ST_ERR];
+        }
+        let klen = req[1] as usize;
+        if 2 + klen > req.len() {
+            return vec![ST_ERR];
+        }
+        let key = &req[2..2 + klen];
+        match req[0] {
+            OP_GET => match self.map.get(key) {
+                Some(v) => {
+                    let mut out = vec![ST_OK];
+                    out.extend_from_slice(v);
+                    out
+                }
+                None => vec![ST_MISS],
+            },
+            OP_SET => {
+                let value = &req[2 + klen..];
+                self.map.insert(key.to_vec(), value.to_vec());
+                vec![ST_OK]
+            }
+            OP_DELETE => {
+                if self.map.remove(key).is_some() {
+                    vec![ST_OK]
+                } else {
+                    vec![ST_MISS]
+                }
+            }
+            _ => vec![ST_ERR],
+        }
+    }
+
+    fn digest(&self) -> Hash32 {
+        // Incremental digest would be cheaper; version + size is enough
+        // for divergence detection in tests/checkpoints.
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(2);
+        let v = self.version.to_le_bytes();
+        let l = (self.map.len() as u64).to_le_bytes();
+        parts.push(&v);
+        parts.push(&l);
+        hash_parts(&parts)
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut w = crate::util::wire::WireWriter::new();
+        w.u64(self.version);
+        crate::util::wire::put_map(&mut w, &self.map);
+        w.finish()
+    }
+
+    fn restore(&mut self, snap: &[u8]) {
+        let mut r = crate::util::wire::WireReader::new(snap);
+        if let (Ok(version), Ok(map)) = (r.u64(), crate::util::wire::get_map(&mut r)) {
+            self.version = version;
+            self.map = map;
+        }
+    }
+
+    fn sim_cost(&self, _req: &[u8]) -> Nanos {
+        900 // hash-table lookup + allocation, memcached-class
+    }
+
+    fn name(&self) -> &'static str {
+        "kv"
+    }
+}
+
+/// The paper's memcached/Redis workload: 16 B keys, 32 B values,
+/// `get_ratio` GETs of which `hit_ratio` return a value.
+pub struct KvWorkload {
+    pub keys: usize,
+    pub get_ratio: f64,
+    pub hit_ratio: f64,
+}
+
+impl KvWorkload {
+    /// §7.1 parameters: 30% GET, 80% of GETs hit.
+    pub fn paper() -> KvWorkload {
+        KvWorkload { keys: 1024, get_ratio: 0.3, hit_ratio: 0.8 }
+    }
+
+    fn key(&self, idx: usize, populated: bool) -> Vec<u8> {
+        // Keys 0..keys are (eventually) populated by SETs; misses draw
+        // from a disjoint range.
+        let base = if populated { 0 } else { self.keys };
+        let mut k = vec![0u8; 16];
+        k[..8].copy_from_slice(&((base + idx) as u64).to_le_bytes());
+        k
+    }
+}
+
+impl Workload for KvWorkload {
+    fn next_request(&mut self, rng: &mut Rng) -> Vec<u8> {
+        if rng.chance(self.get_ratio) {
+            let hit = rng.chance(self.hit_ratio);
+            let idx = rng.range(0, self.keys);
+            get(&self.key(idx, hit))
+        } else {
+            let idx = rng.range(0, self.keys);
+            let value = rng.bytes(32);
+            set(&self.key(idx, true), &value)
+        }
+    }
+    fn name(&self) -> &'static str {
+        "memcached"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_delete_cycle() {
+        let mut kv = KvApp::new();
+        assert_eq!(kv.execute(&get(b"absent-key")), vec![ST_MISS]);
+        assert_eq!(kv.execute(&set(b"k1", b"hello")), vec![ST_OK]);
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"hello");
+        assert_eq!(kv.execute(&get(b"k1")), expect);
+        assert_eq!(kv.execute(&delete(b"k1")), vec![ST_OK]);
+        assert_eq!(kv.execute(&get(b"k1")), vec![ST_MISS]);
+        assert_eq!(kv.execute(&delete(b"k1")), vec![ST_MISS]);
+    }
+
+    #[test]
+    fn overwrite_updates_value() {
+        let mut kv = KvApp::new();
+        kv.execute(&set(b"k", b"v1"));
+        kv.execute(&set(b"k", b"v2"));
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"v2");
+        assert_eq!(kv.execute(&get(b"k")), expect);
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let mut kv = KvApp::new();
+        assert_eq!(kv.execute(&[]), vec![ST_ERR]);
+        assert_eq!(kv.execute(&[OP_GET]), vec![ST_ERR]);
+        assert_eq!(kv.execute(&[OP_GET, 200, 1, 2]), vec![ST_ERR]); // klen too big
+        assert_eq!(kv.execute(&[99, 0]), vec![ST_ERR]); // unknown op
+    }
+
+    #[test]
+    fn digest_changes_with_state() {
+        let mut kv = KvApp::new();
+        let d0 = kv.digest();
+        kv.execute(&set(b"a", b"b"));
+        assert_ne!(kv.digest(), d0);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut kv = KvApp::new();
+        kv.execute(&set(b"x", b"1"));
+        kv.execute(&set(b"y", b"2"));
+        let snap = kv.snapshot();
+        let mut kv2 = KvApp::new();
+        kv2.restore(&snap);
+        assert_eq!(kv.digest(), kv2.digest());
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"1");
+        assert_eq!(kv2.execute(&get(b"x")), expect);
+    }
+
+    #[test]
+    fn workload_generates_valid_mix() {
+        let mut w = KvWorkload::paper();
+        let mut rng = crate::util::Rng::new(5);
+        let mut kv = KvApp::new();
+        let (mut gets, mut sets) = (0, 0);
+        for _ in 0..2000 {
+            let req = w.next_request(&mut rng);
+            match req[0] {
+                OP_GET => gets += 1,
+                OP_SET => sets += 1,
+                _ => panic!("unexpected op"),
+            }
+            let resp = kv.execute(&req);
+            assert!(matches!(resp[0], ST_OK | ST_MISS));
+        }
+        let ratio = gets as f64 / (gets + sets) as f64;
+        assert!((0.25..0.35).contains(&ratio), "get ratio {ratio}");
+    }
+}

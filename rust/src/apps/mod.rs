@@ -1,0 +1,27 @@
+//! The replicated applications of the paper's evaluation (§7.1):
+//!
+//! * [`flip::FlipApp`] — the toy app that reverses its input;
+//! * [`kv::KvApp`] — a memcached-style binary GET/SET key-value store;
+//! * [`redis_like::RedisApp`] — a Redis-style multi-structure store
+//!   (strings, counters, lists);
+//! * [`orderbook::OrderBookApp`] — a Liquibook-style financial limit-order
+//!   matching engine (price-time priority, BUY/SELL, partial fills);
+//! * [`tensor::TensorApp`] — a BFT-replicated tensor service executing an
+//!   AOT-compiled JAX/Pallas MLP via the PJRT runtime (the three-layer
+//!   end-to-end demonstration);
+//! * [`crate::smr::NoopApp`] — the no-op used by Fig 8/9.
+//!
+//! Each app implements [`crate::smr::App`] plus a [`crate::rpc::Workload`]
+//! generator reproducing the paper's request mixes.
+
+pub mod flip;
+pub mod kv;
+pub mod orderbook;
+pub mod redis_like;
+pub mod tensor;
+
+pub use flip::FlipApp;
+pub use kv::KvApp;
+pub use orderbook::OrderBookApp;
+pub use redis_like::RedisApp;
+pub use tensor::TensorApp;

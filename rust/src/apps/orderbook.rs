@@ -1,0 +1,346 @@
+//! Liquibook-style financial order matching engine (§7.1): limit orders
+//! with price-time priority, BUY/SELL sides, partial fills. Requests are
+//! 32 B; responses list the fills (up to 288 B in the paper's runs).
+//!
+//! The paper replicates Liquibook behind uBFT and drives it with a
+//! 50/50 BUY/SELL mix; this engine implements the same core matching
+//! semantics (aggressive order walks the opposite side of the book,
+//! fills at resting-order prices, remainder rests).
+
+use crate::crypto::{hash_parts, Hash32};
+use crate::rpc::Workload;
+use crate::smr::App;
+use crate::util::Rng;
+use crate::Nanos;
+use std::collections::BTreeMap;
+
+/// Order side.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Side {
+    Buy,
+    Sell,
+}
+
+/// Wire format of an order request (32 B):
+/// `side(1) ‖ pad(3) ‖ price(4) ‖ qty(4) ‖ order_id(8) ‖ pad(12)`.
+pub fn order(side: Side, price: u32, qty: u32, id: u64) -> Vec<u8> {
+    let mut v = vec![0u8; 32];
+    v[0] = match side {
+        Side::Buy => 1,
+        Side::Sell => 2,
+    };
+    v[4..8].copy_from_slice(&price.to_le_bytes());
+    v[8..12].copy_from_slice(&qty.to_le_bytes());
+    v[12..20].copy_from_slice(&id.to_le_bytes());
+    v
+}
+
+/// One fill in a response: `maker_id(8) ‖ price(4) ‖ qty(4)`.
+#[derive(Debug, PartialEq, Eq, Clone)]
+pub struct Fill {
+    pub maker_id: u64,
+    pub price: u32,
+    pub qty: u32,
+}
+
+/// Parse an execution report produced by [`OrderBookApp::execute`].
+pub fn parse_fills(resp: &[u8]) -> Option<(u32, Vec<Fill>)> {
+    if resp.len() < 5 || resp[0] != 0 {
+        return None;
+    }
+    let resting = u32::from_le_bytes(resp[1..5].try_into().unwrap());
+    let mut fills = Vec::new();
+    let mut rest = &resp[5..];
+    while rest.len() >= 16 {
+        fills.push(Fill {
+            maker_id: u64::from_le_bytes(rest[0..8].try_into().unwrap()),
+            price: u32::from_le_bytes(rest[8..12].try_into().unwrap()),
+            qty: u32::from_le_bytes(rest[12..16].try_into().unwrap()),
+        });
+        rest = &rest[16..];
+    }
+    Some((resting, fills))
+}
+
+#[derive(Clone, Debug)]
+struct Resting {
+    id: u64,
+    qty: u32,
+}
+
+pub struct OrderBookApp {
+    /// Bids: price → FIFO of resting orders (matched from highest price).
+    bids: BTreeMap<u32, Vec<Resting>>,
+    /// Asks: price → FIFO (matched from lowest price).
+    asks: BTreeMap<u32, Vec<Resting>>,
+    seq: u64,
+    trades: u64,
+}
+
+impl OrderBookApp {
+    pub fn new() -> OrderBookApp {
+        OrderBookApp { bids: BTreeMap::new(), asks: BTreeMap::new(), seq: 0, trades: 0 }
+    }
+
+    pub fn best_bid(&self) -> Option<u32> {
+        self.bids.keys().next_back().copied()
+    }
+
+    pub fn best_ask(&self) -> Option<u32> {
+        self.asks.keys().next().copied()
+    }
+
+    pub fn depth(&self) -> (usize, usize) {
+        (
+            self.bids.values().map(|v| v.len()).sum(),
+            self.asks.values().map(|v| v.len()).sum(),
+        )
+    }
+
+    /// Total unfilled quantity currently resting on (bids, asks).
+    pub fn resting_qty(&self) -> (u64, u64) {
+        let sum = |book: &BTreeMap<u32, Vec<Resting>>| {
+            book.values().flatten().map(|r| r.qty as u64).sum()
+        };
+        (sum(&self.bids), sum(&self.asks))
+    }
+
+    fn match_order(
+        &mut self,
+        side: Side,
+        price: u32,
+        mut qty: u32,
+        fills: &mut Vec<Fill>,
+    ) -> u32 {
+        // Walk the opposite side while the limit price crosses.
+        loop {
+            if qty == 0 {
+                break;
+            }
+            let (book, crosses): (&mut BTreeMap<u32, Vec<Resting>>, bool) = match side {
+                Side::Buy => {
+                    let best = self.asks.keys().next().copied();
+                    match best {
+                        Some(b) if b <= price => (&mut self.asks, true),
+                        _ => (&mut self.asks, false),
+                    }
+                }
+                Side::Sell => {
+                    let best = self.bids.keys().next_back().copied();
+                    match best {
+                        Some(b) if b >= price => (&mut self.bids, true),
+                        _ => (&mut self.bids, false),
+                    }
+                }
+            };
+            if !crosses {
+                break;
+            }
+            let level_price = match side {
+                Side::Buy => *book.keys().next().unwrap(),
+                Side::Sell => *book.keys().next_back().unwrap(),
+            };
+            let level = book.get_mut(&level_price).unwrap();
+            // Time priority within the level.
+            let maker = &mut level[0];
+            let traded = qty.min(maker.qty);
+            maker.qty -= traded;
+            qty -= traded;
+            self.trades += 1;
+            fills.push(Fill { maker_id: maker.id, price: level_price, qty: traded });
+            if maker.qty == 0 {
+                level.remove(0);
+                if level.is_empty() {
+                    book.remove(&level_price);
+                }
+            }
+        }
+        qty
+    }
+}
+
+impl Default for OrderBookApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl App for OrderBookApp {
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        if req.len() < 20 {
+            return vec![1]; // error
+        }
+        let side = match req[0] {
+            1 => Side::Buy,
+            2 => Side::Sell,
+            _ => return vec![1],
+        };
+        let price = u32::from_le_bytes(req[4..8].try_into().unwrap());
+        let qty = u32::from_le_bytes(req[8..12].try_into().unwrap());
+        let id = u64::from_le_bytes(req[12..20].try_into().unwrap());
+        if price == 0 || qty == 0 {
+            return vec![1];
+        }
+
+        self.seq += 1;
+        let mut fills = Vec::new();
+        let remaining = self.match_order(side, price, qty, &mut fills);
+        if remaining > 0 {
+            let book = match side {
+                Side::Buy => &mut self.bids,
+                Side::Sell => &mut self.asks,
+            };
+            // Time priority: FIFO position within the level encodes arrival order.
+            book.entry(price).or_default().push(Resting { id, qty: remaining });
+        }
+
+        // Execution report: status(1) ‖ resting_qty(4) ‖ fills…
+        let mut out = Vec::with_capacity(5 + fills.len() * 16);
+        out.push(0u8);
+        out.extend_from_slice(&remaining.to_le_bytes());
+        for f in &fills {
+            out.extend_from_slice(&f.maker_id.to_le_bytes());
+            out.extend_from_slice(&f.price.to_le_bytes());
+            out.extend_from_slice(&f.qty.to_le_bytes());
+        }
+        out
+    }
+
+    fn digest(&self) -> Hash32 {
+        let s = self.seq.to_le_bytes();
+        let t = self.trades.to_le_bytes();
+        let b = (self.bids.len() as u64).to_le_bytes();
+        let a = (self.asks.len() as u64).to_le_bytes();
+        hash_parts(&[&s, &t, &b, &a])
+    }
+
+    fn sim_cost(&self, _req: &[u8]) -> Nanos {
+        1_800 // matching-engine order handling (Liquibook-class)
+    }
+
+    fn name(&self) -> &'static str {
+        "liquibook"
+    }
+}
+
+/// §7.1 workload: 50% BUY / 50% SELL limit orders around a mid price.
+pub struct OrderWorkload {
+    pub mid: u32,
+    pub band: u32,
+    next_id: u64,
+}
+
+impl OrderWorkload {
+    pub fn paper() -> OrderWorkload {
+        OrderWorkload { mid: 10_000, band: 50, next_id: 1 }
+    }
+}
+
+impl Workload for OrderWorkload {
+    fn next_request(&mut self, rng: &mut Rng) -> Vec<u8> {
+        let side = if rng.chance(0.5) { Side::Buy } else { Side::Sell };
+        let offset = rng.range(0, self.band as usize * 2) as i64 - self.band as i64;
+        let price = (self.mid as i64 + offset).max(1) as u32;
+        let qty = 1 + rng.below(100) as u32;
+        let id = self.next_id;
+        self.next_id += 1;
+        order(side, price, qty, id)
+    }
+    fn name(&self) -> &'static str {
+        "liquibook"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resting_order_fills_later_cross() {
+        let mut ob = OrderBookApp::new();
+        // Sell 10 @ 100 rests.
+        let r = ob.execute(&order(Side::Sell, 100, 10, 1));
+        let (resting, fills) = parse_fills(&r).unwrap();
+        assert_eq!((resting, fills.len()), (10, 0));
+        // Buy 4 @ 105 crosses: fills 4 at the RESTING price 100.
+        let r = ob.execute(&order(Side::Buy, 105, 4, 2));
+        let (resting, fills) = parse_fills(&r).unwrap();
+        assert_eq!(resting, 0);
+        assert_eq!(fills, vec![Fill { maker_id: 1, price: 100, qty: 4 }]);
+        // 6 remain on the ask.
+        assert_eq!(ob.best_ask(), Some(100));
+    }
+
+    #[test]
+    fn no_cross_when_prices_do_not_meet() {
+        let mut ob = OrderBookApp::new();
+        ob.execute(&order(Side::Sell, 101, 5, 1));
+        let r = ob.execute(&order(Side::Buy, 100, 5, 2));
+        let (resting, fills) = parse_fills(&r).unwrap();
+        assert_eq!((resting, fills.len()), (5, 0));
+        assert_eq!(ob.depth(), (1, 1));
+        assert_eq!(ob.best_bid(), Some(100));
+        assert_eq!(ob.best_ask(), Some(101));
+    }
+
+    #[test]
+    fn price_priority_best_price_first() {
+        let mut ob = OrderBookApp::new();
+        ob.execute(&order(Side::Sell, 102, 5, 1));
+        ob.execute(&order(Side::Sell, 100, 5, 2)); // better ask
+        let r = ob.execute(&order(Side::Buy, 103, 7, 3));
+        let (_, fills) = parse_fills(&r).unwrap();
+        assert_eq!(fills[0], Fill { maker_id: 2, price: 100, qty: 5 });
+        assert_eq!(fills[1], Fill { maker_id: 1, price: 102, qty: 2 });
+    }
+
+    #[test]
+    fn time_priority_within_level() {
+        let mut ob = OrderBookApp::new();
+        ob.execute(&order(Side::Sell, 100, 5, 1));
+        ob.execute(&order(Side::Sell, 100, 5, 2));
+        let r = ob.execute(&order(Side::Buy, 100, 5, 3));
+        let (_, fills) = parse_fills(&r).unwrap();
+        assert_eq!(fills, vec![Fill { maker_id: 1, price: 100, qty: 5 }]);
+    }
+
+    #[test]
+    fn partial_fill_walks_multiple_makers() {
+        let mut ob = OrderBookApp::new();
+        ob.execute(&order(Side::Buy, 100, 3, 1));
+        ob.execute(&order(Side::Buy, 100, 3, 2));
+        ob.execute(&order(Side::Buy, 99, 10, 3));
+        let r = ob.execute(&order(Side::Sell, 99, 10, 4));
+        let (resting, fills) = parse_fills(&r).unwrap();
+        assert_eq!(resting, 0);
+        assert_eq!(fills.len(), 3);
+        assert_eq!(fills[0].maker_id, 1);
+        assert_eq!(fills[1].maker_id, 2);
+        assert_eq!(fills[2], Fill { maker_id: 3, price: 99, qty: 4 });
+    }
+
+    #[test]
+    fn rejects_malformed_orders() {
+        let mut ob = OrderBookApp::new();
+        assert_eq!(ob.execute(&[]), vec![1]);
+        assert_eq!(ob.execute(&order(Side::Buy, 0, 5, 1)), vec![1]); // zero price
+        assert_eq!(ob.execute(&order(Side::Buy, 10, 0, 1)), vec![1]); // zero qty
+        let mut bogus = order(Side::Buy, 10, 1, 1);
+        bogus[0] = 9;
+        assert_eq!(ob.execute(&bogus), vec![1]);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut w = OrderWorkload::paper();
+        let mut rng = crate::util::Rng::new(9);
+        let reqs: Vec<Vec<u8>> = (0..500).map(|_| w.next_request(&mut rng)).collect();
+        let mut a = OrderBookApp::new();
+        let mut b = OrderBookApp::new();
+        for r in &reqs {
+            assert_eq!(a.execute(r), b.execute(r));
+        }
+        assert_eq!(a.digest(), b.digest());
+        assert!(a.trades > 0, "workload should generate trades");
+    }
+}

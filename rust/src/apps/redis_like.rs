@@ -1,0 +1,249 @@
+//! Redis-style multi-structure store (§7.1): strings (SET/GET/DEL),
+//! counters (INCR), and lists (LPUSH/RPOP/LLEN) with a compact binary
+//! protocol. The paper replicates stock Redis; this app executes the same
+//! operation classes at the same µs-scale cost.
+
+use crate::crypto::{hash_parts, Hash32};
+use crate::rpc::Workload;
+use crate::smr::App;
+use crate::util::Rng;
+use crate::Nanos;
+use std::collections::{BTreeMap, VecDeque};
+
+pub const OP_SET: u8 = 1;
+pub const OP_GET: u8 = 2;
+pub const OP_DEL: u8 = 3;
+pub const OP_INCR: u8 = 4;
+pub const OP_LPUSH: u8 = 5;
+pub const OP_RPOP: u8 = 6;
+pub const OP_LLEN: u8 = 7;
+
+pub const ST_OK: u8 = 0;
+pub const ST_NIL: u8 = 1;
+pub const ST_ERR: u8 = 2;
+pub const ST_INT: u8 = 3;
+
+enum Value {
+    Str(Vec<u8>),
+    List(VecDeque<Vec<u8>>),
+}
+
+/// Encode `op key [arg]`.
+pub fn cmd(op: u8, key: &[u8], arg: &[u8]) -> Vec<u8> {
+    let mut v = vec![op, key.len() as u8];
+    v.extend_from_slice(key);
+    v.extend_from_slice(arg);
+    v
+}
+
+pub struct RedisApp {
+    map: BTreeMap<Vec<u8>, Value>,
+    version: u64,
+}
+
+impl RedisApp {
+    pub fn new() -> RedisApp {
+        RedisApp { map: BTreeMap::new(), version: 0 }
+    }
+}
+
+impl Default for RedisApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn int_reply(v: i64) -> Vec<u8> {
+    let mut out = vec![ST_INT];
+    out.extend_from_slice(&v.to_le_bytes());
+    out
+}
+
+impl App for RedisApp {
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        self.version += 1;
+        if req.len() < 2 {
+            return vec![ST_ERR];
+        }
+        let klen = req[1] as usize;
+        if 2 + klen > req.len() {
+            return vec![ST_ERR];
+        }
+        let key = req[2..2 + klen].to_vec();
+        let arg = &req[2 + klen..];
+        match req[0] {
+            OP_SET => {
+                self.map.insert(key, Value::Str(arg.to_vec()));
+                vec![ST_OK]
+            }
+            OP_GET => match self.map.get(&key) {
+                Some(Value::Str(v)) => {
+                    let mut out = vec![ST_OK];
+                    out.extend_from_slice(v);
+                    out
+                }
+                Some(_) => vec![ST_ERR], // WRONGTYPE
+                None => vec![ST_NIL],
+            },
+            OP_DEL => {
+                if self.map.remove(&key).is_some() {
+                    int_reply(1)
+                } else {
+                    int_reply(0)
+                }
+            }
+            OP_INCR => {
+                let cur = match self.map.get(&key) {
+                    Some(Value::Str(v)) if v.len() == 8 => {
+                        i64::from_le_bytes(v[..8].try_into().unwrap())
+                    }
+                    Some(Value::Str(_)) => return vec![ST_ERR],
+                    Some(_) => return vec![ST_ERR],
+                    None => 0,
+                };
+                let next = cur.wrapping_add(1);
+                self.map.insert(key, Value::Str(next.to_le_bytes().to_vec()));
+                int_reply(next)
+            }
+            OP_LPUSH => {
+                let list = self.map.entry(key).or_insert_with(|| Value::List(VecDeque::new()));
+                match list {
+                    Value::List(l) => {
+                        l.push_front(arg.to_vec());
+                        int_reply(l.len() as i64)
+                    }
+                    _ => vec![ST_ERR],
+                }
+            }
+            OP_RPOP => match self.map.get_mut(&key) {
+                Some(Value::List(l)) => match l.pop_back() {
+                    Some(v) => {
+                        let mut out = vec![ST_OK];
+                        out.extend_from_slice(&v);
+                        out
+                    }
+                    None => vec![ST_NIL],
+                },
+                Some(_) => vec![ST_ERR],
+                None => vec![ST_NIL],
+            },
+            OP_LLEN => match self.map.get(&key) {
+                Some(Value::List(l)) => int_reply(l.len() as i64),
+                Some(_) => vec![ST_ERR],
+                None => int_reply(0),
+            },
+            _ => vec![ST_ERR],
+        }
+    }
+
+    fn digest(&self) -> Hash32 {
+        let v = self.version.to_le_bytes();
+        let l = (self.map.len() as u64).to_le_bytes();
+        hash_parts(&[&v, &l])
+    }
+
+    fn sim_cost(&self, req: &[u8]) -> Nanos {
+        // Redis single-threaded command dispatch is slightly heavier than
+        // memcached's; lists cost a touch more.
+        match req.first() {
+            Some(&OP_LPUSH) | Some(&OP_RPOP) => 1_400,
+            _ => 1_100,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "redis"
+    }
+}
+
+/// Mixed Redis workload: string ops with the §7.1 ratios plus a tail of
+/// list/counter traffic.
+pub struct RedisWorkload {
+    pub keys: usize,
+}
+
+impl Workload for RedisWorkload {
+    fn next_request(&mut self, rng: &mut Rng) -> Vec<u8> {
+        let idx = rng.range(0, self.keys);
+        let mut key = vec![0u8; 16];
+        key[..8].copy_from_slice(&(idx as u64).to_le_bytes());
+        let roll = rng.f64();
+        if roll < 0.30 {
+            // GET: bias towards populated range for ~80% hits.
+            if !rng.chance(0.8) {
+                key[15] = 0xFF; // unpopulated shadow key
+            }
+            cmd(OP_GET, &key, &[])
+        } else if roll < 0.80 {
+            cmd(OP_SET, &key, &rng.bytes(32))
+        } else if roll < 0.90 {
+            cmd(OP_INCR, &key[..8].to_vec(), &[])
+        } else if roll < 0.95 {
+            cmd(OP_LPUSH, b"queue", &rng.bytes(16))
+        } else {
+            cmd(OP_RPOP, b"queue", &[])
+        }
+    }
+    fn name(&self) -> &'static str {
+        "redis"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_ops() {
+        let mut r = RedisApp::new();
+        assert_eq!(r.execute(&cmd(OP_GET, b"k", &[])), vec![ST_NIL]);
+        assert_eq!(r.execute(&cmd(OP_SET, b"k", b"v")), vec![ST_OK]);
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"v");
+        assert_eq!(r.execute(&cmd(OP_GET, b"k", &[])), expect);
+        assert_eq!(r.execute(&cmd(OP_DEL, b"k", &[])), int_reply(1));
+        assert_eq!(r.execute(&cmd(OP_DEL, b"k", &[])), int_reply(0));
+    }
+
+    #[test]
+    fn incr_sequence() {
+        let mut r = RedisApp::new();
+        assert_eq!(r.execute(&cmd(OP_INCR, b"c", &[])), int_reply(1));
+        assert_eq!(r.execute(&cmd(OP_INCR, b"c", &[])), int_reply(2));
+        assert_eq!(r.execute(&cmd(OP_INCR, b"c", &[])), int_reply(3));
+    }
+
+    #[test]
+    fn list_fifo_semantics() {
+        let mut r = RedisApp::new();
+        r.execute(&cmd(OP_LPUSH, b"l", b"a"));
+        r.execute(&cmd(OP_LPUSH, b"l", b"b"));
+        assert_eq!(r.execute(&cmd(OP_LLEN, b"l", &[])), int_reply(2));
+        // RPOP returns the oldest push (queue semantics).
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"a");
+        assert_eq!(r.execute(&cmd(OP_RPOP, b"l", &[])), expect);
+        assert_eq!(r.execute(&cmd(OP_LLEN, b"l", &[])), int_reply(1));
+    }
+
+    #[test]
+    fn wrongtype_errors() {
+        let mut r = RedisApp::new();
+        r.execute(&cmd(OP_LPUSH, b"l", b"x"));
+        assert_eq!(r.execute(&cmd(OP_GET, b"l", &[])), vec![ST_ERR]);
+        r.execute(&cmd(OP_SET, b"s", b"x"));
+        assert_eq!(r.execute(&cmd(OP_RPOP, b"s", &[])), vec![ST_ERR]);
+    }
+
+    #[test]
+    fn workload_runs_clean() {
+        let mut w = RedisWorkload { keys: 64 };
+        let mut rng = crate::util::Rng::new(6);
+        let mut r = RedisApp::new();
+        for _ in 0..2000 {
+            let req = w.next_request(&mut rng);
+            let resp = r.execute(&req);
+            assert!(matches!(resp[0], ST_OK | ST_NIL | ST_INT), "req {req:?} -> {resp:?}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! TensorApp — a BFT-replicated tensor service: the three-layer
+//! end-to-end demonstration. Requests carry an input vector; the replica
+//! executes an AOT-compiled JAX/Pallas MLP forward pass (L2+L1) through
+//! the PJRT runtime (loaded by L3 at startup) and replies with the output
+//! vector. Determinism holds because every replica runs the identical
+//! compiled module on identical inputs.
+
+use crate::crypto::{hash_parts, Hash32};
+use crate::rpc::Workload;
+use crate::runtime::{shapes, Module};
+use crate::smr::App;
+use crate::util::Rng;
+use crate::Nanos;
+use std::sync::Arc;
+
+/// Deterministic toy weights derived from a seed (identical on all
+/// replicas; a real deployment would ship a checkpoint file).
+pub struct Weights {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl Weights {
+    pub fn deterministic(seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut gen = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.f64() as f32 - 0.5) * scale).collect()
+        };
+        Weights {
+            w1: gen(shapes::MLP_IN * shapes::MLP_HIDDEN, 0.5),
+            b1: gen(shapes::MLP_HIDDEN, 0.1),
+            w2: gen(shapes::MLP_HIDDEN * shapes::MLP_OUT, 0.5),
+            b2: gen(shapes::MLP_OUT, 0.1),
+        }
+    }
+}
+
+pub struct TensorApp {
+    module: Arc<Module>,
+    weights: Weights,
+    ops: u64,
+    /// Digest folded over every response (replicas must agree bit-exactly
+    /// since the compiled module is deterministic).
+    state: Hash32,
+}
+
+impl TensorApp {
+    pub fn new(module: Arc<Module>, seed: u64) -> TensorApp {
+        TensorApp {
+            module,
+            weights: Weights::deterministic(seed),
+            ops: 0,
+            state: Hash32::ZERO,
+        }
+    }
+
+    fn parse_input(req: &[u8]) -> Option<Vec<f32>> {
+        if req.len() != shapes::MLP_IN * 4 {
+            return None;
+        }
+        Some(
+            req.chunks(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        )
+    }
+}
+
+impl App for TensorApp {
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        self.ops += 1;
+        let Some(input) = Self::parse_input(req) else { return vec![0xFF] };
+        // Batch slot 0 carries the request; the rest are zeros.
+        let mut x = vec![0f32; shapes::MLP_BATCH * shapes::MLP_IN];
+        x[..shapes::MLP_IN].copy_from_slice(&input);
+        let out = match self.module.mlp_forward(
+            &x,
+            &self.weights.w1,
+            &self.weights.b1,
+            &self.weights.w2,
+            &self.weights.b2,
+        ) {
+            Ok(o) => o,
+            Err(_) => return vec![0xFE],
+        };
+        let row0 = &out[..shapes::MLP_OUT];
+        let mut resp = Vec::with_capacity(shapes::MLP_OUT * 4);
+        for v in row0 {
+            resp.extend_from_slice(&v.to_le_bytes());
+        }
+        self.state = hash_parts(&[&self.state.0, &resp]);
+        resp
+    }
+
+    fn digest(&self) -> Hash32 {
+        hash_parts(&[&self.state.0, &self.ops.to_le_bytes()])
+    }
+
+    fn sim_cost(&self, _req: &[u8]) -> Nanos {
+        6_000 // small-MLP inference on CPU
+    }
+
+    fn name(&self) -> &'static str {
+        "tensor"
+    }
+}
+
+/// Random input vectors of the module's input width.
+pub struct TensorWorkload;
+
+impl Workload for TensorWorkload {
+    fn next_request(&mut self, rng: &mut Rng) -> Vec<u8> {
+        let mut v = Vec::with_capacity(shapes::MLP_IN * 4);
+        for _ in 0..shapes::MLP_IN {
+            v.extend_from_slice(&((rng.f64() as f32) - 0.5).to_le_bytes());
+        }
+        v
+    }
+    fn check_response(&mut self, _req: &[u8], resp: &[u8]) -> bool {
+        resp.len() == shapes::MLP_OUT * 4
+    }
+    fn name(&self) -> &'static str {
+        "tensor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_are_deterministic() {
+        let a = Weights::deterministic(7);
+        let b = Weights::deterministic(7);
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.b2, b.b2);
+        let c = Weights::deterministic(8);
+        assert_ne!(a.w1, c.w1);
+    }
+
+    #[test]
+    fn parse_input_validates_length() {
+        assert!(TensorApp::parse_input(&vec![0u8; shapes::MLP_IN * 4]).is_some());
+        assert!(TensorApp::parse_input(&vec![0u8; 7]).is_none());
+    }
+}

@@ -1,0 +1,297 @@
+//! MinBFT-style 2f+1 BFT SMR over a USIG trusted counter (Veronese et
+//! al., the paper's main BFT comparison, §7.2/§7.4).
+//!
+//! Protocol (stable leader, the configuration the paper measures):
+//! client → all replicas; the leader binds the request to its USIG
+//! counter and multicasts PREPARE; followers verify both the client's
+//! authenticator and the leader's UI inside the enclave, bind their own
+//! UI and multicast COMMIT; a replica accepts once it holds f+1
+//! commitments (the PREPARE counts as the leader's), executes, and
+//! replies; the client waits for f+1 matching replies.
+//!
+//! Two configurations, as in the paper:
+//! * **vanilla** — clients sign requests with public-key crypto and every
+//!   replica verifies the signature;
+//! * **HMAC** — clients also own an enclave, replacing public-key
+//!   operations with USIG HMACs.
+//!
+//! Latency constants are calibrated to the paper's own measurements
+//! (566 µs vanilla minimum E2E; enclave crossings 7–12.5 µs): MinBFT's
+//! publicly available implementation is not µs-optimized, which the
+//! paper addresses by swapping its TCP stack for VMA — the remaining
+//! per-hop software overhead is [`HOP_OVERHEAD`].
+
+use super::usig::{Usig, UI};
+use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
+use crate::crypto::{hash, Hash32};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::Category;
+use crate::smr::App;
+use crate::util::wire::{Wire, WireReader, WireWriter};
+use crate::{NodeId, Nanos};
+use std::collections::{BTreeSet, HashMap};
+
+/// Per-message software overhead of the MinBFT codebase (calibrated so
+/// the HMAC-only variant lands at the paper's Fig 8 values).
+pub const HOP_OVERHEAD: Nanos = 78_000;
+/// Vanilla client-side public-key signing cost (their crypto library;
+/// calibrated so vanilla's minimum E2E ≈ the paper's 566 µs).
+pub const VANILLA_CLIENT_SIGN: Nanos = 300_000;
+/// Vanilla replica-side verification of a client signature.
+pub const VANILLA_VERIFY: Nanos = 50_000;
+
+const TAG_MB_PREPARE: u8 = 0x40;
+const TAG_MB_COMMIT: u8 = 0x41;
+
+fn put_ui(w: &mut WireWriter, ui: &UI) {
+    w.u64(ui.signer as u64);
+    w.u64(ui.counter);
+    ui.mac.put(w);
+}
+
+fn get_ui(r: &mut WireReader) -> Option<UI> {
+    Some(UI {
+        signer: r.u64().ok()? as NodeId,
+        counter: r.u64().ok()?,
+        mac: Hash32::get(r).ok()?,
+    })
+}
+
+struct SlotEntry {
+    req: Request,
+    client: NodeId,
+    commitments: BTreeSet<NodeId>,
+    executed: bool,
+}
+
+pub struct MinBftReplica {
+    me: NodeId,
+    replicas: Vec<NodeId>,
+    f: usize,
+    vanilla: bool,
+    usig: Usig,
+    app: Box<dyn App>,
+    next_seq: u64,
+    slots: HashMap<u64, SlotEntry>,
+    exec_next: u64,
+}
+
+impl MinBftReplica {
+    pub fn new(
+        me: NodeId,
+        replicas: Vec<NodeId>,
+        f: usize,
+        vanilla: bool,
+        app: Box<dyn App>,
+        secret: [u8; 32],
+    ) -> MinBftReplica {
+        MinBftReplica {
+            me,
+            replicas,
+            f,
+            vanilla,
+            usig: Usig::new(me, secret),
+            app,
+            next_seq: 0,
+            slots: HashMap::new(),
+            exec_next: 0,
+        }
+    }
+
+    fn is_leader(&self) -> bool {
+        self.me == self.replicas[0]
+    }
+
+    fn charge_client_auth(&self, env: &mut dyn Env) {
+        if self.vanilla {
+            env.charge(Category::Crypto, VANILLA_VERIFY);
+        } else {
+            env.charge(Category::Crypto, Usig::CALL_NS);
+        }
+    }
+
+    fn record_commitment(&mut self, env: &mut dyn Env, seq: u64, who: NodeId) {
+        let Some(entry) = self.slots.get_mut(&seq) else { return };
+        entry.commitments.insert(who);
+        // Accept at f+1 distinct commitments; execute in sequence order.
+        while let Some(e) = self.slots.get_mut(&self.exec_next) {
+            if e.commitments.len() < self.f + 1 || e.executed {
+                break;
+            }
+            e.executed = true;
+            env.charge(Category::Other, self.app.sim_cost(&e.req.payload));
+            let resp = self.app.execute(&e.req.payload);
+            let frame = direct_frame(&DirectMsg::Response {
+                rid: e.req.rid,
+                slot: self.exec_next,
+                payload: resp,
+            });
+            let client = e.client;
+            env.send(client, frame);
+            self.exec_next += 1;
+        }
+    }
+}
+
+impl Actor for MinBftReplica {
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        let Event::Recv { from, bytes } = ev else { return };
+        match bytes.first() {
+            Some(&crate::tbcast::TAG_DIRECT) => {
+                let Some(DirectMsg::Request(req)) = parse_direct(&bytes) else { return };
+                env.charge(Category::Other, HOP_OVERHEAD);
+                if !self.is_leader() {
+                    return; // followers act on PREPARE (request is re-carried)
+                }
+                self.charge_client_auth(env);
+                // Bind to the USIG counter and multicast PREPARE.
+                env.charge(Category::Crypto, Usig::CALL_NS);
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                let body = req.encode();
+                let ui = self.usig.create_ui(&body);
+                let mut w = WireWriter::new();
+                w.u8(TAG_MB_PREPARE);
+                w.u64(seq);
+                req.put(&mut w);
+                put_ui(&mut w, &ui);
+                let frame = w.finish();
+                for &r in &self.replicas.clone() {
+                    if r != self.me {
+                        env.send(r, frame.clone());
+                    }
+                }
+                self.slots.insert(
+                    seq,
+                    SlotEntry {
+                        client: req.client as NodeId,
+                        req,
+                        commitments: [self.me].into(),
+                        executed: false,
+                    },
+                );
+            }
+            Some(&TAG_MB_PREPARE) => {
+                let mut r = WireReader::new(&bytes[1..]);
+                let Ok(seq) = r.u64() else { return };
+                let Ok(req) = Request::get(&mut r) else { return };
+                let Some(ui) = get_ui(&mut r) else { return };
+                env.charge(Category::Other, HOP_OVERHEAD);
+                self.charge_client_auth(env);
+                env.charge(Category::Crypto, Usig::CALL_NS); // verify leader UI
+                if !self.usig.verify_ui(&ui, &req.encode()) {
+                    return;
+                }
+                // Bind my own UI and multicast COMMIT.
+                env.charge(Category::Crypto, Usig::CALL_NS);
+                let digest = hash(&req.encode());
+                let my_ui = self.usig.create_ui(&digest.0);
+                let mut w = WireWriter::new();
+                w.u8(TAG_MB_COMMIT);
+                w.u64(seq);
+                digest.put(&mut w);
+                put_ui(&mut w, &my_ui);
+                let frame = w.finish();
+                for &rp in &self.replicas.clone() {
+                    if rp != self.me {
+                        env.send(rp, frame.clone());
+                    }
+                }
+                self.slots.insert(
+                    seq,
+                    SlotEntry {
+                        client: req.client as NodeId,
+                        req,
+                        commitments: [from, self.me].into(),
+                        executed: false,
+                    },
+                );
+                self.record_commitment(env, seq, self.me);
+            }
+            Some(&TAG_MB_COMMIT) => {
+                let mut r = WireReader::new(&bytes[1..]);
+                let Ok(seq) = r.u64() else { return };
+                let Ok(_digest) = Hash32::get(&mut r) else { return };
+                let Some(ui) = get_ui(&mut r) else { return };
+                env.charge(Category::Other, HOP_OVERHEAD);
+                env.charge(Category::Crypto, Usig::CALL_NS); // verify commit UI
+                if !self.usig.check_mac(&ui, &_digest.0) {
+                    return;
+                }
+                self.record_commitment(env, seq, from);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Client-side presend charge for the two configurations.
+pub fn client_presend(vanilla: bool) -> Nanos {
+    if vanilla {
+        VANILLA_CLIENT_SIGN
+    } else {
+        Usig::CALL_NS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::{BytesWorkload, Client};
+    use crate::sim::Sim;
+    use crate::smr::NoopApp;
+
+    fn run(vanilla: bool, reqs: usize) -> crate::metrics::Samples {
+        let cfg = crate::config::Config::default();
+        let mut sim = Sim::new(cfg.clone());
+        let secret = [9u8; 32];
+        for i in 0..3 {
+            sim.add_actor(Box::new(MinBftReplica::new(
+                i,
+                vec![0, 1, 2],
+                1,
+                vanilla,
+                Box::new(NoopApp::new()),
+                secret,
+            )));
+        }
+        let client = Client::new(
+            vec![0, 1, 2],
+            2,
+            Box::new(BytesWorkload { size: 32, label: "noop" }),
+            reqs,
+        )
+        .with_presend_charge(client_presend(vanilla))
+        .with_think(500 * crate::MICRO); // unloaded latency, as the paper measures
+        let samples = client.samples_handle();
+        sim.add_actor(Box::new(client));
+        sim.run_until(10 * crate::SECOND);
+        let s = samples.lock().unwrap().clone();
+        s
+    }
+
+    #[test]
+    fn vanilla_completes_at_papers_latency() {
+        let mut s = run(true, 30);
+        assert_eq!(s.len(), 30);
+        let p50 = s.median() as f64 / 1000.0;
+        // Paper: minimum end-to-end latency 566 µs (including the client's
+        // public-key signature).
+        assert!((450.0..700.0).contains(&p50), "vanilla MinBFT p50 = {p50} µs");
+    }
+
+    #[test]
+    fn hmac_variant_is_faster() {
+        let mut v = run(true, 20);
+        let mut h = run(false, 20);
+        assert_eq!(h.len(), 20);
+        assert!(
+            h.median() < v.median(),
+            "HMAC variant ({}) must beat vanilla ({})",
+            h.median(),
+            v.median()
+        );
+        let p50 = h.median() as f64 / 1000.0;
+        assert!((140.0..350.0).contains(&p50), "HMAC MinBFT p50 = {p50} µs");
+    }
+}

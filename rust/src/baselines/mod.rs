@@ -1,0 +1,17 @@
+//! Baseline systems the paper compares against (§7.2, §7.4):
+//!
+//! * [`unreplicated::Server`] — a single unreplicated server (the "Unrepl."
+//!   lines in Figs 7/8);
+//! * [`mu::MuLeader`]/[`mu::MuFollower`] — a Mu-style crash-only SMR: the
+//!   leader replicates requests by one-sided RDMA writes into follower
+//!   logs and replies after a majority of write completions;
+//! * [`usig::Usig`] — a MinBFT-style USIG (trusted monotonic counter +
+//!   HMAC) with the enclave-crossing latency the paper measured for SGX;
+//! * [`minbft::MinBftReplica`] — a MinBFT-style 2f+1 BFT SMR over USIG,
+//!   in the paper's two configurations (vanilla: clients sign with
+//!   public-key crypto; HMAC: clients use the enclave too).
+
+pub mod minbft;
+pub mod mu;
+pub mod unreplicated;
+pub mod usig;

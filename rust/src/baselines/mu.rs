@@ -1,0 +1,179 @@
+//! Mu-style crash-only SMR baseline (Aguilera et al., OSDI'20): the
+//! fastest known SMR, tolerating only crash faults. In the absence of
+//! failures the leader replicates a request by RDMA-writing it into its
+//! followers' logs and replies to the client once a *majority* of writes
+//! completed — followers' CPUs are not involved on the hot path.
+//!
+//! We model the one-sided log write as a message to the follower plus a
+//! NIC-level completion that costs one wire RTT and zero follower CPU
+//! (the follower actor acks with no processing charge, standing in for
+//! the RDMA ACK). This lands Mu at the paper's measured overhead over
+//! unreplicated execution (Fig 7/8) without modelling Mu's permission
+//! management, which is off the common path.
+
+use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::Category;
+use crate::smr::App;
+use crate::util::wire::{Wire, WireReader, WireWriter};
+use crate::NodeId;
+use std::collections::HashMap;
+
+/// Wire tag for Mu log writes/acks (distinct from TB/DIRECT frames).
+const TAG_MU_LOG: u8 = 0x30;
+const TAG_MU_ACK: u8 = 0x31;
+
+pub struct MuLeader {
+    followers: Vec<NodeId>,
+    majority: usize, // follower acks needed (majority incl. self)
+    app: Box<dyn App>,
+    next_seq: u64,
+    pending: HashMap<u64, (NodeId, Request, usize)>,
+    proc: crate::Nanos,
+}
+
+impl MuLeader {
+    pub fn new(followers: Vec<NodeId>, app: Box<dyn App>, cfg: &crate::config::Config) -> MuLeader {
+        // n = followers + 1; majority of n includes the leader itself.
+        let n = followers.len() + 1;
+        let majority_total = n / 2 + 1;
+        MuLeader {
+            followers,
+            majority: majority_total - 1,
+            app,
+            next_seq: 0,
+            pending: HashMap::new(),
+            proc: cfg.lat.proc_overhead,
+        }
+    }
+}
+
+impl Actor for MuLeader {
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        let Event::Recv { from, bytes } = ev else { return };
+        match bytes.first() {
+            Some(&crate::tbcast::TAG_DIRECT) => {
+                let Some(DirectMsg::Request(req)) = parse_direct(&bytes) else { return };
+                env.charge(Category::Other, self.proc);
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                // One-sided log write to every follower.
+                let mut w = WireWriter::new();
+                w.u8(TAG_MU_LOG);
+                w.u64(seq);
+                req.put(&mut w);
+                let frame = w.finish();
+                for &f in &self.followers {
+                    env.send(f, frame.clone());
+                }
+                self.pending.insert(seq, (from, req, 0));
+            }
+            Some(&TAG_MU_ACK) => {
+                let mut r = WireReader::new(&bytes[1..]);
+                let Ok(seq) = r.u64() else { return };
+                let Some(entry) = self.pending.get_mut(&seq) else { return };
+                entry.2 += 1;
+                if entry.2 == self.majority {
+                    let (client, req, _) = self.pending.remove(&seq).unwrap();
+                    env.charge(Category::Other, self.app.sim_cost(&req.payload));
+                    let resp = self.app.execute(&req.payload);
+                    env.send(
+                        client,
+                        direct_frame(&DirectMsg::Response {
+                            rid: req.rid,
+                            slot: seq,
+                            payload: resp,
+                        }),
+                    );
+                }
+                let _ = from;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Passive follower: its log is written one-sidedly; the ACK models the
+/// NIC-level RDMA write completion (zero CPU charge).
+pub struct MuFollower {
+    pub log: Vec<(u64, Request)>,
+}
+
+impl MuFollower {
+    pub fn new() -> MuFollower {
+        MuFollower { log: Vec::new() }
+    }
+}
+
+impl Default for MuFollower {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Actor for MuFollower {
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        let Event::Recv { from, bytes } = ev else { return };
+        if bytes.first() != Some(&TAG_MU_LOG) {
+            return;
+        }
+        let mut r = WireReader::new(&bytes[1..]);
+        let (Ok(seq), Ok(req)) = (r.u64(), Request::get(&mut r)) else { return };
+        self.log.push((seq, req));
+        // NIC-level completion: no processing charge.
+        let mut w = WireWriter::new();
+        w.u8(TAG_MU_ACK);
+        w.u64(seq);
+        env.send(from, w.finish());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::{BytesWorkload, Client};
+    use crate::sim::Sim;
+    use crate::smr::NoopApp;
+
+    #[test]
+    fn mu_replicates_and_stays_fast() {
+        let cfg = crate::config::Config::default();
+        let mut sim = Sim::new(cfg.clone());
+        // ids 0..2: leader + 2 followers
+        let leader =
+            MuLeader::new(vec![1, 2], Box::new(NoopApp::new()), &cfg);
+        sim.add_actor(Box::new(leader));
+        sim.add_actor(Box::new(MuFollower::new()));
+        sim.add_actor(Box::new(MuFollower::new()));
+        let client =
+            Client::new(vec![0], 1, Box::new(BytesWorkload { size: 32, label: "noop" }), 200);
+        let samples = client.samples_handle();
+        sim.add_actor(Box::new(client));
+        sim.run_until(crate::SECOND);
+        let mut s = samples.lock().unwrap();
+        assert_eq!(s.len(), 200);
+        let p50 = s.median() as f64 / 1000.0;
+        // Paper: Mu ≈ unreplicated + ~1.4 µs for small requests.
+        assert!((2.5..7.0).contains(&p50), "Mu p50 = {p50} µs");
+    }
+
+    #[test]
+    fn followers_hold_the_log() {
+        let cfg = crate::config::Config::default();
+        let mut sim = Sim::new(cfg.clone());
+        sim.add_actor(Box::new(MuLeader::new(vec![1, 2], Box::new(NoopApp::new()), &cfg)));
+        sim.add_actor(Box::new(MuFollower::new()));
+        sim.add_actor(Box::new(MuFollower::new()));
+        let client =
+            Client::new(vec![0], 1, Box::new(BytesWorkload { size: 16, label: "noop" }), 25);
+        let samples = client.samples_handle();
+        sim.add_actor(Box::new(client));
+        sim.run_until(crate::SECOND);
+        assert_eq!(samples.lock().unwrap().len(), 25);
+        for f in 1..3 {
+            let a = sim.actor_mut(f);
+            let fo = unsafe { &*(a as *const dyn Actor as *const MuFollower) };
+            assert_eq!(fo.log.len(), 25);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Unreplicated baseline: a single server executing requests directly —
+//! the floor every replication protocol is measured against (Figs 7/8).
+
+use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::Category;
+use crate::smr::App;
+
+pub struct Server {
+    app: Box<dyn App>,
+    proc_overhead: crate::Nanos,
+}
+
+impl Server {
+    pub fn new(app: Box<dyn App>, cfg: &crate::config::Config) -> Server {
+        Server { app, proc_overhead: cfg.lat.proc_overhead }
+    }
+}
+
+impl Actor for Server {
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        if let Event::Recv { from, bytes } = ev {
+            if let Some(DirectMsg::Request(req)) = parse_direct(&bytes) {
+                env.charge(Category::Other, self.proc_overhead);
+                env.charge(Category::Other, self.app.sim_cost(&req.payload));
+                let resp = self.app.execute(&req.payload);
+                env.send(
+                    from,
+                    direct_frame(&DirectMsg::Response { rid: req.rid, slot: 0, payload: resp }),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::{BytesWorkload, Client};
+    use crate::sim::Sim;
+    use crate::smr::NoopApp;
+
+    #[test]
+    fn serves_requests_at_rpc_floor() {
+        let cfg = crate::config::Config::default();
+        let mut sim = Sim::new(cfg.clone());
+        let server = Server::new(Box::new(NoopApp::new()), &cfg);
+        let sid = sim.add_actor(Box::new(server));
+        let client =
+            Client::new(vec![sid], 1, Box::new(BytesWorkload { size: 32, label: "noop" }), 100);
+        let samples = client.samples_handle();
+        sim.add_actor(Box::new(client));
+        sim.run_until(crate::SECOND);
+        let mut s = samples.lock().unwrap();
+        assert_eq!(s.len(), 100);
+        // One round trip + processing: ~2.2 µs for small requests (paper).
+        let p50 = s.median() as f64 / 1000.0;
+        assert!((1.5..4.0).contains(&p50), "unreplicated p50 = {p50} µs");
+    }
+}

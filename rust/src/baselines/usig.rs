@@ -1,0 +1,137 @@
+//! USIG — Unique Sequential Identifier Generator, the trusted component
+//! of MinBFT (Veronese et al.) and the SGX trusted counter of §7.4.
+//!
+//! Each process's enclave holds a monotonically increasing counter and a
+//! shared secret. `create_ui(msg)` binds the message to the next counter
+//! value with an HMAC: `HMAC(secret, msg ‖ counter ‖ process id)`; any
+//! replica can verify via its own enclave. Because the counter never
+//! repeats, a Byzantine process cannot assign the same identifier to two
+//! different messages — non-equivocation from a trusted monotonic counter.
+//!
+//! The paper emulates SGX latency (no SGX on its RDMA testbed) with
+//! measured enclave-crossing costs of 7–12.5 µs; [`Usig::CALL_NS`] mirrors
+//! that and is charged by callers per enclave call.
+
+use crate::crypto::{hmac, Hash32};
+use crate::NodeId;
+
+/// A unique identifier bound to a message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UI {
+    pub signer: NodeId,
+    pub counter: u64,
+    pub mac: Hash32,
+}
+
+/// One process's view of the USIG service. All enclaves share `secret`
+/// (provisioned at attestation time in real SGX deployments).
+pub struct Usig {
+    me: NodeId,
+    secret: [u8; 32],
+    counter: u64,
+    /// Highest counter verified per remote signer (replay/sequence check).
+    last_seen: std::collections::BTreeMap<NodeId, u64>,
+}
+
+impl Usig {
+    /// Mean enclave-crossing latency (paper §7.4: 7–12.5 µs measured).
+    pub const CALL_NS: crate::Nanos = 9_500;
+
+    pub fn new(me: NodeId, secret: [u8; 32]) -> Usig {
+        Usig { me, secret, counter: 0, last_seen: std::collections::BTreeMap::new() }
+    }
+
+    fn mac_for(&self, signer: NodeId, counter: u64, msg: &[u8]) -> Hash32 {
+        let mut data = Vec::with_capacity(msg.len() + 16);
+        data.extend_from_slice(msg);
+        data.extend_from_slice(&counter.to_le_bytes());
+        data.extend_from_slice(&(signer as u64).to_le_bytes());
+        hmac(&self.secret, &data)
+    }
+
+    /// Enclave call: bind `msg` to the next counter value.
+    pub fn create_ui(&mut self, msg: &[u8]) -> UI {
+        self.counter += 1;
+        UI { signer: self.me, counter: self.counter, mac: self.mac_for(self.me, self.counter, msg) }
+    }
+
+    /// Enclave call: verify a UI from another process. Enforces strictly
+    /// increasing counters per signer (sequentiality).
+    pub fn verify_ui(&mut self, ui: &UI, msg: &[u8]) -> bool {
+        if self.mac_for(ui.signer, ui.counter, msg) != ui.mac {
+            return false;
+        }
+        let last = self.last_seen.entry(ui.signer).or_insert(0);
+        if ui.counter <= *last {
+            return false; // replay or out-of-order
+        }
+        *last = ui.counter;
+        true
+    }
+
+    /// Verification without sequence tracking (used when a message may be
+    /// legitimately re-verified, e.g. on retransmission).
+    pub fn check_mac(&self, ui: &UI, msg: &[u8]) -> bool {
+        self.mac_for(ui.signer, ui.counter, msg) == ui.mac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Usig, Usig) {
+        let secret = [7u8; 32];
+        (Usig::new(0, secret), Usig::new(1, secret))
+    }
+
+    #[test]
+    fn create_verify_roundtrip() {
+        let (mut a, mut b) = pair();
+        let ui = a.create_ui(b"m1");
+        assert!(b.verify_ui(&ui, b"m1"));
+    }
+
+    #[test]
+    fn counters_are_sequential() {
+        let (mut a, _) = pair();
+        assert_eq!(a.create_ui(b"x").counter, 1);
+        assert_eq!(a.create_ui(b"y").counter, 2);
+    }
+
+    #[test]
+    fn tampered_message_rejected() {
+        let (mut a, mut b) = pair();
+        let ui = a.create_ui(b"m1");
+        assert!(!b.verify_ui(&ui, b"m2"));
+    }
+
+    #[test]
+    fn replay_rejected() {
+        let (mut a, mut b) = pair();
+        let ui = a.create_ui(b"m");
+        assert!(b.verify_ui(&ui, b"m"));
+        assert!(!b.verify_ui(&ui, b"m"), "same counter must not verify twice");
+    }
+
+    #[test]
+    fn equivocation_impossible_per_counter() {
+        // A Byzantine process cannot produce two different messages bound
+        // to the same counter without breaking the MAC.
+        let (mut a, mut b) = pair();
+        let ui1 = a.create_ui(b"v1");
+        let mut forged = ui1.clone();
+        // pretend v2 has the same counter
+        assert!(!b.verify_ui(&forged, b"v2"));
+        forged.mac = Hash32::ZERO;
+        assert!(!b.verify_ui(&forged, b"v2"));
+    }
+
+    #[test]
+    fn wrong_secret_rejected() {
+        let mut a = Usig::new(0, [1u8; 32]);
+        let mut b = Usig::new(1, [2u8; 32]);
+        let ui = a.create_ui(b"m");
+        assert!(!b.verify_ui(&ui, b"m"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Byzantine behaviours for fault-injection tests: actors that *actively
+//! misbehave* at the protocol level (beyond the crash/partition/torn-write
+//! faults the simulator injects).
+//!
+//! The flagship attack is equivocation (§2.2): [`EquivocatingBroadcaster`]
+//! crafts raw TBcast frames carrying *different* LOCK/LOCKED/SIGNED
+//! payloads to different receivers for the same CTBcast identifier —
+//! exactly what CTBcast (Alg 1) must neutralize.
+
+use crate::crypto::{hash, KeyStore};
+use crate::ctbcast::{signed_bytes, CtbMsg};
+use crate::env::{Actor, Env, Event};
+use crate::tbcast::TAG_TB;
+use crate::util::wire::{Wire, WireWriter};
+use crate::NodeId;
+
+/// Craft a raw TBcast frame from scratch (bypassing `TbEndpoint`), as a
+/// Byzantine process would: `ack=0, low=1`, a single `(seq, payload)`.
+pub fn raw_tb_frame(seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_TB);
+    w.u64(0); // ack
+    w.u64(1); // low
+    w.u32(1);
+    w.u64(seq);
+    w.bytes(payload);
+    w.finish()
+}
+
+/// A Byzantine CTBcast broadcaster that sends message `m_a` to one set of
+/// receivers and `m_b` to the rest, for the same identifier k — on both
+/// the fast path (LOCK + LOCKED) and the slow path (SIGNED, with valid
+/// signatures for both messages: Byzantine processes can sign anything).
+pub struct EquivocatingBroadcaster {
+    pub me: NodeId,
+    pub ks: KeyStore,
+    /// Receivers of the `a` story / the `b` story.
+    pub recv_a: Vec<NodeId>,
+    pub recv_b: Vec<NodeId>,
+    pub m_a: Vec<u8>,
+    pub m_b: Vec<u8>,
+    /// Also run the slow path (send SIGNED)?
+    pub slow: bool,
+    seq: u64,
+}
+
+impl EquivocatingBroadcaster {
+    pub fn new(
+        me: NodeId,
+        ks: KeyStore,
+        recv_a: Vec<NodeId>,
+        recv_b: Vec<NodeId>,
+        m_a: Vec<u8>,
+        m_b: Vec<u8>,
+        slow: bool,
+    ) -> Self {
+        EquivocatingBroadcaster { me, ks, recv_a, recv_b, m_a, m_b, slow, seq: 0 }
+    }
+
+    fn send_story(&mut self, env: &mut dyn Env, k: u64, m: Vec<u8>, dsts: &[NodeId]) {
+        // LOCK on my stream.
+        self.seq += 1;
+        let lock = CtbMsg::Lock { bcaster: self.me as u64, k, m: m.clone() }.encode();
+        let f1 = raw_tb_frame(self.seq, &lock);
+        // My LOCKED endorsement (I pretend to have committed to this m).
+        self.seq += 1;
+        let locked = CtbMsg::Locked { bcaster: self.me as u64, k, m: m.clone() }.encode();
+        let f2 = raw_tb_frame(self.seq, &locked);
+        for &d in dsts {
+            env.send(d, f1.clone());
+            env.send(d, f2.clone());
+        }
+        if self.slow {
+            self.seq += 1;
+            let h = hash(&m);
+            let sig = self.ks.sign(self.me, &signed_bytes(self.me, k, &h));
+            let signed = CtbMsg::Signed { bcaster: self.me as u64, k, m, sig }.encode();
+            let f3 = raw_tb_frame(self.seq, &signed);
+            for &d in dsts {
+                env.send(d, f3.clone());
+            }
+        }
+    }
+}
+
+impl Actor for EquivocatingBroadcaster {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        let (m_a, m_b) = (self.m_a.clone(), self.m_b.clone());
+        let (ra, rb) = (self.recv_a.clone(), self.recv_b.clone());
+        self.send_story(env, 1, m_a, &ra);
+        // Reset seq so the "b" story uses the same stream positions —
+        // maximal equivocation (receivers see a consistent-looking
+        // stream individually).
+        self.seq = 0;
+        self.send_story(env, 1, m_b, &rb);
+    }
+    fn on_event(&mut self, _env: &mut dyn Env, _ev: Event) {
+        // Stays silent afterwards (drops all acks/retransmissions).
+    }
+}
+
+/// A broadcaster that writes garbage into its disaggregated-memory
+/// registers (bogus checksums) to attack the slow path's liveness.
+pub struct GarbageRegisterWriter {
+    pub me: NodeId,
+    pub reg: u32,
+    pub mem_nodes: usize,
+}
+
+impl Actor for GarbageRegisterWriter {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        for node in 0..self.mem_nodes {
+            for sub in 0..2u32 {
+                env.mem_write(
+                    node,
+                    crate::env::RegionId { owner: self.me, reg: self.reg * 2 + sub },
+                    vec![0xAB; 48],
+                );
+            }
+        }
+    }
+    fn on_event(&mut self, _env: &mut dyn Env, _ev: Event) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_frame_parses_like_a_real_one() {
+        let payload = CtbMsg::App(b"x".to_vec()).encode();
+        let frame = raw_tb_frame(3, &payload);
+        let mut tb = crate::tbcast::TbEndpoint::new(1, vec![0, 1], 4);
+        // low=1 with seq 3 leaves a gap at 1,2 — nothing delivered yet.
+        let mut all = tb.on_frame(0, &frame);
+        assert!(all.is_empty());
+        // Frames for 1 and 2 complete the prefix.
+        let f1 = raw_tb_frame(1, &payload);
+        let f2 = raw_tb_frame(2, &payload);
+        all.extend(tb.on_frame(0, &f1));
+        all.extend(tb.on_frame(0, &f2));
+        assert_eq!(all.len(), 3);
+        assert_eq!(all.iter().map(|d| d.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `ubft <command> [--key value]... [--flag]...`
+//! Commands are dispatched by `main.rs`; this module only tokenizes.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument: {tok}"));
+            };
+            // `--key=value`, `--key value`, or bare `--flag`.
+            if let Some((k, v)) = name.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.options.insert(name.to_string(), it.next().unwrap());
+            } else {
+                args.flags.push(name.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse("fig7 --requests 5000 --seed=9 --verbose");
+        assert_eq!(a.command, "fig7");
+        assert_eq!(a.get("requests"), Some("5000"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(["x".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,267 @@
+//! Deployment & protocol configuration.
+//!
+//! One [`Config`] describes a full deployment: cluster sizes, the CTBcast
+//! tail `t`, the consensus window, timeouts, and the discrete-event
+//! simulator's calibrated latency model ([`LatencyModel`]). Configs can be
+//! loaded from simple `key = value` files (`examples/*.conf`) — serde is
+//! unavailable offline, so parsing is hand-rolled.
+
+use crate::{Nanos, MICRO, MILLI};
+
+/// Calibrated latency constants for the discrete-event simulator.
+///
+/// Base numbers are chosen so that the *unreplicated* RPC and the *Mu*
+/// baseline land on the paper's measured values (Fig 7/8); everything else
+/// is then a prediction of the model. See DESIGN.md §1 and EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// One-way latency of a one-sided RDMA WRITE posting a message into a
+    /// remote circular buffer (wire + PCIe + NIC processing), excluding
+    /// the size-dependent part.
+    pub p2p_base: Nanos,
+    /// Extra nanoseconds per byte on the wire (100 Gbps ≈ 0.08 ns/B).
+    pub per_byte: f64,
+    /// Exponential jitter mean added to every network op.
+    pub jitter_mean: Nanos,
+    /// RTT of a one-sided RDMA READ of a (small) register replica.
+    pub rdma_read: Nanos,
+    /// One-way latency of a one-sided RDMA WRITE to a memory node,
+    /// including the PCIe-fence READ that §6.1 issues behind it.
+    pub rdma_write: Nanos,
+    /// Local processing per delivered message (poll loop, copies, glue) —
+    /// the paper's "Other" category in Fig 9.
+    pub proc_overhead: Nanos,
+    /// Ed25519 signature generation (paper's testbed: EdDSA via dalek).
+    pub sign: Nanos,
+    /// Ed25519 signature verification.
+    pub verify: Nanos,
+    /// HMAC create/verify (BLAKE3 in the paper: ≈100 ns).
+    pub hmac: Nanos,
+    /// SGX enclave crossing (paper §7.4 measured 7–12.5 µs; mean used by
+    /// the emulated USIG).
+    pub sgx_call: Nanos,
+    /// Per-32B-block hashing cost (fingerprints, checksums).
+    pub hash_per_block: Nanos,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            p2p_base: 900,
+            per_byte: 0.08,
+            jitter_mean: 60,
+            rdma_read: 1_900,
+            rdma_write: 2_200,
+            proc_overhead: 150,
+            sign: 11_000,
+            verify: 33_000,
+            hmac: 100,
+            sgx_call: 9_500,
+            hash_per_block: 15,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// One-way message latency for a payload of `bytes`.
+    pub fn msg(&self, bytes: usize) -> Nanos {
+        self.p2p_base + (bytes as f64 * self.per_byte) as Nanos
+    }
+
+    /// Hashing cost of `bytes` (checksums/fingerprints).
+    pub fn hash_cost(&self, bytes: usize) -> Nanos {
+        self.hash_per_block * ((bytes as u64 + 31) / 32).max(1)
+    }
+}
+
+/// Which signature backend the deployment uses (see [`crate::crypto::KeyStore`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SigBackend {
+    /// Real from-scratch Ed25519 (real-mode runs, examples).
+    Ed25519,
+    /// HMAC-based simulation backend; the DES charges Ed25519 latency.
+    Sim,
+}
+
+/// Full deployment + protocol configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of compute replicas, `n = 2f + 1`.
+    pub n: usize,
+    /// Number of tolerated Byzantine replicas.
+    pub f: usize,
+    /// Number of memory nodes, `2 f_m + 1`.
+    pub m: usize,
+    /// Tolerated memory-node crashes.
+    pub fm: usize,
+    /// CTBcast tail parameter `t` (paper default 128).
+    pub tail: usize,
+    /// Consensus sliding-window size (paper evaluation: 256).
+    pub window: usize,
+    /// Maximum request payload bytes (sizes the p2p ring slots).
+    pub max_req: usize,
+    /// δ — the known post-GST communication bound (register cooldown).
+    pub delta: Nanos,
+    /// Fast-path timeout before a slot falls back to the slow path.
+    pub fastpath_timeout: Nanos,
+    /// Progress timeout before a replica seals the view.
+    pub viewchange_timeout: Nanos,
+    /// TBcast retransmission interval.
+    pub retransmit_every: Nanos,
+    /// Force the slow path (used by slow-path benchmarks: Fig 8-10).
+    pub slow_path_always: bool,
+    /// Signature backend.
+    pub sig_backend: SigBackend,
+    /// DES latency model.
+    pub lat: LatencyModel,
+    /// PRNG seed for the deployment.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            n: 3,
+            f: 1,
+            m: 3,
+            fm: 1,
+            tail: 128,
+            window: 256,
+            max_req: 8192,
+            delta: 10 * MICRO,
+            fastpath_timeout: 120 * MICRO,
+            viewchange_timeout: 2 * MILLI,
+            retransmit_every: 500 * MICRO,
+            slow_path_always: false,
+            sig_backend: SigBackend::Sim,
+            lat: LatencyModel::default(),
+            seed: 0xDEADBEEF,
+        }
+    }
+}
+
+impl Config {
+    /// A quorum of replicas (f + 1).
+    pub fn quorum(&self) -> usize {
+        self.f + 1
+    }
+
+    /// Memory-node write/read quorum (f_m + 1).
+    pub fn mem_quorum(&self) -> usize {
+        self.fm + 1
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n != 2 * self.f + 1 {
+            return Err(format!("n={} must equal 2f+1 (f={})", self.n, self.f));
+        }
+        if self.m < 2 * self.fm + 1 {
+            return Err(format!("m={} must be at least 2fm+1 (fm={})", self.m, self.fm));
+        }
+        if self.tail < 4 {
+            return Err("tail must be >= 4".into());
+        }
+        if self.window == 0 {
+            return Err("window must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Parse `key = value` lines; `#` starts a comment. Unknown keys error.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut c = Config::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            let v = v.trim();
+            let u = |v: &str| v.parse::<u64>().map_err(|e| format!("line {}: {e}", lineno + 1));
+            match k {
+                "n" => c.n = u(v)? as usize,
+                "f" => c.f = u(v)? as usize,
+                "m" => c.m = u(v)? as usize,
+                "fm" => c.fm = u(v)? as usize,
+                "tail" => c.tail = u(v)? as usize,
+                "window" => c.window = u(v)? as usize,
+                "max_req" => c.max_req = u(v)? as usize,
+                "delta_ns" => c.delta = u(v)?,
+                "fastpath_timeout_ns" => c.fastpath_timeout = u(v)?,
+                "viewchange_timeout_ns" => c.viewchange_timeout = u(v)?,
+                "retransmit_every_ns" => c.retransmit_every = u(v)?,
+                "slow_path_always" => c.slow_path_always = v == "true" || v == "1",
+                "sig_backend" => {
+                    c.sig_backend = match v {
+                        "ed25519" => SigBackend::Ed25519,
+                        "sim" => SigBackend::Sim,
+                        _ => return Err(format!("line {}: unknown sig_backend {v}", lineno + 1)),
+                    }
+                }
+                "seed" => c.seed = u(v)?,
+                "lat.p2p_base" => c.lat.p2p_base = u(v)?,
+                "lat.per_byte" => {
+                    c.lat.per_byte =
+                        v.parse::<f64>().map_err(|e| format!("line {}: {e}", lineno + 1))?
+                }
+                "lat.jitter_mean" => c.lat.jitter_mean = u(v)?,
+                "lat.rdma_read" => c.lat.rdma_read = u(v)?,
+                "lat.rdma_write" => c.lat.rdma_write = u(v)?,
+                "lat.proc_overhead" => c.lat.proc_overhead = u(v)?,
+                "lat.sign" => c.lat.sign = u(v)?,
+                "lat.verify" => c.lat.verify = u(v)?,
+                "lat.hmac" => c.lat.hmac = u(v)?,
+                "lat.sgx_call" => c.lat.sgx_call = u(v)?,
+                _ => return Err(format!("line {}: unknown key {k}", lineno + 1)),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let c = Config::parse(
+            "n = 5\nf = 2\ntail = 64 # comment\nslow_path_always = true\nlat.sign = 12000\n",
+        )
+        .unwrap();
+        assert_eq!(c.n, 5);
+        assert_eq!(c.f, 2);
+        assert_eq!(c.tail, 64);
+        assert!(c.slow_path_always);
+        assert_eq!(c.lat.sign, 12_000);
+    }
+
+    #[test]
+    fn parse_rejects_inconsistent() {
+        assert!(Config::parse("n = 4\n").is_err()); // 4 != 2f+1
+        assert!(Config::parse("bogus = 3\n").is_err());
+    }
+
+    #[test]
+    fn latency_model_monotone_in_size() {
+        let l = LatencyModel::default();
+        assert!(l.msg(8192) > l.msg(8));
+        assert!(l.hash_cost(1024) > l.hash_cost(32));
+    }
+}

@@ -1,0 +1,1120 @@
+//! uBFT's consensus engine (Algorithms 2–5): the 2f+1 leader-based BFT
+//! protocol with a signature-free fast path, a certified slow path over
+//! disaggregated memory, PBFT-style checkpoints and view changes, and
+//! CTBcast summaries for gap recovery.
+//!
+//! One [`Replica`] is an [`Actor`]: it owns the CTBcast endpoint (which
+//! owns TBcast and the register client), the replicated [`App`], and all
+//! protocol state. The same replica runs under the DES (evaluation) and
+//! the real-thread driver (examples).
+//!
+//! Message flow per slot (stable leader):
+//! * **fast path** (Fig 4): client → all replicas; followers Echo to the
+//!   leader; leader CTBcasts PREPARE (fast path of CTBcast); replicas
+//!   TBcast WILL_CERTIFY, await all 2f+1, TBcast WILL_COMMIT, await all
+//!   2f+1, decide. No signatures anywhere.
+//! * **slow path** (Fig 3): on timeout, replicas sign CERTIFY shares for
+//!   the delivered PREPARE; f+1 shares form an unforgeable certificate
+//!   that is CTBcast in a COMMIT; f+1 COMMITs decide the slot. The
+//!   PREPARE's own CTBcast falls back to its signed register path.
+
+pub mod msgs;
+pub mod state;
+
+use crate::config::Config;
+use crate::crypto::{Certificate, Hash32, KeyStore};
+use crate::ctbcast::{CtbEndpoint, CtbOut, TOKEN_CTB_COOLDOWN};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::Category;
+use crate::smr::App;
+use crate::tbcast::{TAG_DIRECT, TAG_TB};
+use crate::util::wire::Wire;
+use crate::{NodeId, Nanos};
+use msgs::{
+    certify_digest, checkpoint_cert_digest, direct_frame, parse_direct, Checkpoint,
+    CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, SenderStateEnc, TbMsg,
+    VcCert,
+};
+use state::{leader_of, must_propose, Constraint, Effect, SenderState};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+
+/// Periodic TBcast retransmission timer token.
+pub const TOKEN_RETRANSMIT: u64 = 0x0200_0000_0000_0000;
+/// Periodic protocol tick (timeouts, proposing, view-change suspicion).
+pub const TOKEN_TICK: u64 = 0x0300_0000_0000_0000;
+
+/// Echo-round timeout before the leader proposes without full echoes.
+const ECHO_TIMEOUT: Nanos = 30 * crate::MICRO;
+/// Tick period.
+const TICK_EVERY: Nanos = 20 * crate::MICRO;
+
+#[derive(Default)]
+struct SlotState {
+    /// WILL_CERTIFY senders per view.
+    will_certify: BTreeMap<u64, BTreeSet<NodeId>>,
+    /// WILL_COMMIT senders per view.
+    will_commit: BTreeMap<u64, BTreeSet<NodeId>>,
+    sent_will_certify: Option<u64>,
+    sent_will_commit: Option<u64>,
+    sent_certify: Option<u64>,
+    /// CERTIFY share accumulation per prepare digest.
+    certify_shares: HashMap<Hash32, Certificate>,
+    /// COMMIT senders per prepare digest.
+    commits_for: HashMap<Hash32, BTreeSet<NodeId>>,
+    commit_sent: bool,
+    /// When the current-view PREPARE was delivered here (for timeouts).
+    prepared_at: Option<Nanos>,
+    decided: bool,
+}
+
+/// Latency instrumentation hooks the harness reads after a run.
+#[derive(Default, Clone, Debug)]
+pub struct ReplicaStats {
+    pub decided_fast: u64,
+    pub decided_slow: u64,
+    pub view_changes: u64,
+    pub checkpoints: u64,
+    pub summaries_emitted: u64,
+    pub summaries_adopted: u64,
+    pub byz_blocked: u64,
+}
+
+/// One uBFT replica.
+pub struct Replica {
+    pub cfg: Config,
+    me: NodeId,
+    n: usize,
+    quorum: usize,
+    ks: KeyStore,
+    ctb: Option<CtbEndpoint>,
+    app: Box<dyn App>,
+
+    view: u64,
+    next_slot: u64,
+    checkpoint: CheckpointCert,
+    senders: Vec<SenderState>,
+    slots: BTreeMap<u64, SlotState>,
+    decided: BTreeMap<u64, Request>,
+    applied_upto: u64,
+
+    // Client requests.
+    req_store: HashMap<Hash32, Request>,
+    req_first_seen: HashMap<Hash32, Nanos>,
+    /// Requests received from clients but not yet decided in any slot —
+    /// the liveness signal for view-change suspicion.
+    pending_reqs: HashMap<Hash32, Nanos>,
+    req_queue: VecDeque<Hash32>,
+    echoes: HashMap<Hash32, BTreeSet<NodeId>>,
+    proposed: HashSet<Hash32>,
+    /// PREPAREs endorsed lazily once the client request arrives (§5.4).
+    waiting_prepares: HashMap<Hash32, Vec<PrepareBody>>,
+    /// Recently executed responses per client (bounded deque): duplicate
+    /// requests (client retries after a lost Response, or re-proposals
+    /// across view changes deciding twice) are answered from this cache
+    /// and never re-executed — standard SMR at-most-once execution.
+    /// Deterministic across replicas (driven by the applied sequence).
+    resp_cache: HashMap<u64, VecDeque<(u64, u64, Vec<u8>)>>,
+
+    /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
+    my_prepare_k: HashMap<u64, u64>,
+
+    // View change.
+    sealing: Option<u64>,
+    /// Leader-side view-change share assembly:
+    /// (view, about, digest) → (state, certificate).
+    vc_shares: HashMap<(u64, u64, Hash32), (SenderStateEnc, Certificate)>,
+    new_view_sent: HashSet<u64>,
+
+    // Checkpoint certification.
+    cp_shares: HashMap<Hash32, (Checkpoint, Certificate)>,
+
+    // Summaries (Alg 4). Boundaries every `t/2` of my own stream.
+    my_summary_id: u64,
+    my_boundary_states: BTreeMap<u64, SenderStateEnc>,
+    summary_certs: BTreeMap<u64, Certificate>,
+    blocked_broadcasts: VecDeque<ConsMsg>,
+    latest_summaries: HashMap<NodeId, (u64, SenderStateEnc)>,
+
+    last_progress: Nanos,
+    /// Consecutive view changes without a decision: exponential backoff of
+    /// the suspicion timeout (PBFT-style), preventing view-change livelock
+    /// when completing a view change takes longer than the base timeout.
+    vc_backoff: u32,
+    pub stats: ReplicaStats,
+}
+
+impl Replica {
+    pub fn new(me: NodeId, cfg: Config, app: Box<dyn App>) -> Replica {
+        let ks = match cfg.sig_backend {
+            crate::config::SigBackend::Ed25519 => KeyStore::ed25519(cfg.n + 64, cfg.seed),
+            crate::config::SigBackend::Sim => KeyStore::sim(cfg.seed),
+        };
+        let genesis = CheckpointCert::genesis(cfg.window as u64, app.digest());
+        let senders = (0..cfg.n).map(|p| SenderState::new(p, genesis.clone())).collect();
+        Replica {
+            me,
+            n: cfg.n,
+            quorum: cfg.quorum(),
+            ks,
+            ctb: None,
+            app,
+            view: 0,
+            next_slot: 0,
+            checkpoint: genesis,
+            senders,
+            slots: BTreeMap::new(),
+            decided: BTreeMap::new(),
+            applied_upto: 0,
+            req_store: HashMap::new(),
+            req_first_seen: HashMap::new(),
+            pending_reqs: HashMap::new(),
+            req_queue: VecDeque::new(),
+            echoes: HashMap::new(),
+            proposed: HashSet::new(),
+            waiting_prepares: HashMap::new(),
+            resp_cache: HashMap::new(),
+            my_prepare_k: HashMap::new(),
+            sealing: None,
+            vc_shares: HashMap::new(),
+            new_view_sent: HashSet::new(),
+            cp_shares: HashMap::new(),
+            my_summary_id: 0,
+            my_boundary_states: BTreeMap::new(),
+            summary_certs: BTreeMap::new(),
+            blocked_broadcasts: VecDeque::new(),
+            latest_summaries: HashMap::new(),
+            last_progress: 0,
+            vc_backoff: 0,
+            stats: ReplicaStats::default(),
+            cfg,
+        }
+    }
+
+    fn leader(&self) -> NodeId {
+        leader_of(self.view, self.n)
+    }
+
+    fn is_leader(&self) -> bool {
+        self.leader() == self.me
+    }
+
+    /// Summary boundary interval (`t/2`, the paper's double-buffering).
+    fn half(&self) -> u64 {
+        (self.cfg.tail as u64 / 2).max(1)
+    }
+
+    // ------------------------------------------------------------------
+    // CTBcast broadcast with the summary barrier (Alg 4 lines 4-9)
+    // ------------------------------------------------------------------
+
+    /// Broadcast a consensus message over CTBcast, honouring the summary
+    /// barrier: at most `t` un-summarized messages may be outstanding.
+    fn ctb_broadcast(&mut self, env: &mut dyn Env, msg: ConsMsg) {
+        let ctb = self.ctb.as_mut().unwrap();
+        let next_k = ctb.next_k();
+        if next_k > self.my_summary_id + self.cfg.tail as u64 {
+            // Barrier: wait for the next summary certificate.
+            self.blocked_broadcasts.push_back(msg);
+            return;
+        }
+        let enc = msg.encode();
+        if let ConsMsg::Prepare(ref pb) = msg {
+            self.my_prepare_k.insert(pb.slot, next_k);
+        }
+        let (_, outs) = self.ctb.as_mut().unwrap().broadcast(env, enc);
+        self.handle_outs(env, outs);
+    }
+
+    fn drain_blocked_broadcasts(&mut self, env: &mut dyn Env) {
+        while !self.blocked_broadcasts.is_empty() {
+            let next_k = self.ctb.as_ref().unwrap().next_k();
+            if next_k > self.my_summary_id + self.cfg.tail as u64 {
+                return;
+            }
+            let msg = self.blocked_broadcasts.pop_front().unwrap();
+            self.ctb_broadcast(env, msg);
+        }
+    }
+
+    fn tb_broadcast(&mut self, env: &mut dyn Env, msg: TbMsg) {
+        let (_, outs) = self.ctb.as_mut().unwrap().app_broadcast(env, msg.encode());
+        self.handle_outs(env, outs);
+    }
+
+    fn send_direct(&mut self, env: &mut dyn Env, dst: NodeId, msg: DirectMsg) {
+        if dst == self.me {
+            self.handle_direct(env, self.me, msg);
+        } else {
+            env.send(dst, direct_frame(&msg));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Output routing
+    // ------------------------------------------------------------------
+
+    fn handle_outs(&mut self, env: &mut dyn Env, outs: Vec<CtbOut>) {
+        for out in outs {
+            match out {
+                CtbOut::Deliver { bcaster, k, m } => {
+                    self.senders[bcaster].buffer_delivery(k, m, self.cfg.tail);
+                    self.drain_fifo(env, bcaster);
+                }
+                CtbOut::App { bcaster, payload, .. } => {
+                    if let Ok(msg) = TbMsg::decode(&payload) {
+                        self.handle_tb(env, bcaster, msg);
+                    }
+                }
+                CtbOut::Byzantine { bcaster } => {
+                    self.senders[bcaster].blocked = true;
+                    self.stats.byz_blocked += 1;
+                }
+            }
+        }
+    }
+
+    /// FIFO interpretation of a broadcaster's CTBcast stream (§5.2),
+    /// with summary-based gap recovery (Alg 4).
+    fn drain_fifo(&mut self, env: &mut dyn Env, b: NodeId) {
+        loop {
+            // Try summary adoption if stuck on a gap.
+            if self.senders[b].has_gap() {
+                if let Some((id, enc)) = self.latest_summaries.get(&b).cloned() {
+                    if id >= self.senders[b].fifo_next {
+                        let fx = self.senders[b].adopt_summary(id, enc);
+                        self.stats.summaries_adopted += 1;
+                        self.react(env, b, fx);
+                        continue;
+                    }
+                }
+            }
+            let Some((k, m)) = self.senders[b].pop_in_order() else { break };
+            let Ok(msg) = ConsMsg::decode(&m) else {
+                self.senders[b].blocked = true;
+                self.stats.byz_blocked += 1;
+                break;
+            };
+            match self.senders[b].apply(&msg, self.n, self.quorum, &self.ks) {
+                Ok(fx) => self.react(env, b, fx),
+                Err(()) => {
+                    self.stats.byz_blocked += 1;
+                    break;
+                }
+            }
+            // Summary share generation (Alg 4 lines 1-2), every t/2.
+            if k % self.half() == 0 {
+                let enc = self.senders[b].encode_state();
+                let digest = msgs::summary_share_digest(b as u64, k, &enc);
+                if b == self.me {
+                    // Remember my own boundary state so I can assemble and
+                    // later broadcast the SUMMARY body.
+                    self.my_boundary_states.insert(k, enc);
+                    while self.my_boundary_states.len() > 4 {
+                        let (&old, _) = self.my_boundary_states.iter().next().unwrap();
+                        self.my_boundary_states.remove(&old);
+                        self.summary_certs.remove(&old);
+                    }
+                }
+                let share = self.ks.sign(self.me, &digest.0);
+                crate::env::charge_sign(env, &self.cfg.lat.clone());
+                self.send_direct(env, b, DirectMsg::CertifySummary { id: k, digest, share });
+            }
+        }
+    }
+
+    fn react(&mut self, env: &mut dyn Env, b: NodeId, fx: Vec<Effect>) {
+        for f in fx {
+            match f {
+                Effect::Prepared(pb) => self.on_prepared(env, b, pb),
+                Effect::Committed(cm) => self.on_committed(env, b, cm),
+                Effect::NewCheckpoint(cp) => self.maybe_checkpoint(env, cp),
+                Effect::Sealed { view } => self.on_sealed(env, b, view),
+                Effect::NewView { view, certs } => self.on_new_view(env, b, view, certs),
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Normal-case protocol (Alg 2)
+    // ------------------------------------------------------------------
+
+    /// A PREPARE from `b` passed the Byzantine checks. Endorse it if we
+    /// hold the client request (or it is a no-op).
+    fn on_prepared(&mut self, env: &mut dyn Env, b: NodeId, pb: PrepareBody) {
+        if b != leader_of(pb.view, self.n) {
+            return;
+        }
+        if pb.view != self.view || !self.checkpoint.body.open(pb.slot) {
+            return;
+        }
+        let rd = pb.req.digest();
+        if !pb.req.is_noop() && !self.req_store.contains_key(&rd) {
+            // §5.4: endorse only requests received directly from the
+            // client; park until it arrives.
+            self.waiting_prepares.entry(rd).or_default().push(pb);
+            return;
+        }
+        self.endorse(env, pb);
+    }
+
+    fn endorse(&mut self, env: &mut dyn Env, pb: PrepareBody) {
+        let slot = self.slots.entry(pb.slot).or_default();
+        if slot.prepared_at.is_none() {
+            slot.prepared_at = Some(env.now());
+        }
+        if slot.sent_will_certify == Some(pb.view) {
+            return;
+        }
+        slot.sent_will_certify = Some(pb.view);
+        env.mark("prepare_endorsed");
+        self.tb_broadcast(env, TbMsg::WillCertify { view: pb.view, slot: pb.slot });
+        if self.cfg.slow_path_always {
+            self.send_certify(env, pb.view, pb.slot);
+        }
+    }
+
+    /// Sign and TBcast my CERTIFY share for the delivered PREPARE.
+    fn send_certify(&mut self, env: &mut dyn Env, view: u64, slot: u64) {
+        let leader = leader_of(view, self.n);
+        let Some(pb) = self.senders[leader].prepares.get(&slot).cloned() else { return };
+        if pb.view != view {
+            return;
+        }
+        {
+            let st = self.slots.entry(slot).or_default();
+            if st.sent_certify == Some(view) {
+                return;
+            }
+            st.sent_certify = Some(view);
+        }
+        let digest = certify_digest(&pb);
+        let share = self.ks.sign(self.me, &digest.0);
+        crate::env::charge_sign(env, &self.cfg.lat.clone());
+        env.mark("certify_sent");
+        self.tb_broadcast(env, TbMsg::Certify { view, slot, digest, share });
+    }
+
+    fn handle_tb(&mut self, env: &mut dyn Env, from: NodeId, msg: TbMsg) {
+        match msg {
+            TbMsg::WillCertify { view, slot } => {
+                if view != self.view || !self.checkpoint.body.open(slot) {
+                    return;
+                }
+                let st = self.slots.entry(slot).or_default();
+                st.will_certify.entry(view).or_default().insert(from);
+                let all = st.will_certify[&view].len() == self.n;
+                let endorsed = st.sent_will_certify == Some(view);
+                if all && endorsed && st.sent_will_commit != Some(view) {
+                    st.sent_will_commit = Some(view);
+                    env.mark("will_commit_sent");
+                    self.tb_broadcast(env, TbMsg::WillCommit { view, slot });
+                }
+            }
+            TbMsg::WillCommit { view, slot } => {
+                if view != self.view || !self.checkpoint.body.open(slot) {
+                    return;
+                }
+                let st = self.slots.entry(slot).or_default();
+                st.will_commit.entry(view).or_default().insert(from);
+                if st.will_commit[&view].len() == self.n && !st.decided {
+                    let leader = leader_of(view, self.n);
+                    if let Some(pb) = self.senders[leader].prepares.get(&slot).cloned() {
+                        if pb.view == view {
+                            self.stats.decided_fast += 1;
+                            env.mark("decided_fast");
+                            self.decide(env, slot, pb.req);
+                        }
+                    }
+                }
+            }
+            TbMsg::Certify { view, slot, digest, share } => {
+                if view != self.view || !self.checkpoint.body.open(slot) {
+                    return;
+                }
+                crate::env::charge_verify(env, &self.cfg.lat.clone());
+                if !self.ks.verify(from, &digest.0, &share) {
+                    return;
+                }
+                let st = self.slots.entry(slot).or_default();
+                st.certify_shares
+                    .entry(digest)
+                    .or_insert_with(|| Certificate::new(digest))
+                    .add(from, share);
+                self.try_send_commit(env, view, slot);
+            }
+            TbMsg::CertifyCheckpoint { body, share } => {
+                let digest = checkpoint_cert_digest(&body);
+                crate::env::charge_verify(env, &self.cfg.lat.clone());
+                if !self.ks.verify(from, &digest.0, &share) {
+                    return;
+                }
+                let entry = self
+                    .cp_shares
+                    .entry(digest)
+                    .or_insert_with(|| (body.clone(), Certificate::new(digest)));
+                entry.1.add(from, share);
+                if entry.1.len() >= self.quorum {
+                    let cp = CheckpointCert { body: entry.0.clone(), cert: entry.1.clone() };
+                    self.maybe_checkpoint(env, cp);
+                }
+            }
+            TbMsg::Summary { about, id, state, cert } => {
+                let b = about as NodeId;
+                if b >= self.n {
+                    return;
+                }
+                let digest = msgs::summary_share_digest(about, id, &state);
+                crate::env::charge_verify(env, &self.cfg.lat.clone());
+                if cert.digest != digest || !cert.verify(&self.ks, self.quorum) {
+                    return;
+                }
+                let newer = self.latest_summaries.get(&b).map_or(true, |(i, _)| id > *i);
+                if newer {
+                    self.latest_summaries.insert(b, (id, state));
+                    self.drain_fifo(env, b);
+                }
+            }
+        }
+    }
+
+    /// Assemble an f+1 CERTIFY certificate into a COMMIT broadcast.
+    fn try_send_commit(&mut self, env: &mut dyn Env, view: u64, slot: u64) {
+        if view != self.view {
+            return;
+        }
+        let leader = leader_of(view, self.n);
+        let Some(pb) = self.senders[leader].prepares.get(&slot).cloned() else { return };
+        if pb.view != view {
+            return;
+        }
+        let digest = certify_digest(&pb);
+        let st = self.slots.entry(slot).or_default();
+        if st.commit_sent {
+            return;
+        }
+        let Some(cert) = st.certify_shares.get(&digest) else { return };
+        if cert.len() < self.quorum {
+            return;
+        }
+        st.commit_sent = true;
+        let commit = Commit { body: pb, cert: cert.clone() };
+        env.mark("commit_sent");
+        self.ctb_broadcast(env, ConsMsg::Commit(commit));
+    }
+
+    /// A valid COMMIT from `b` folded into its state.
+    fn on_committed(&mut self, env: &mut dyn Env, b: NodeId, cm: Commit) {
+        let slot = cm.body.slot;
+        let digest = certify_digest(&cm.body);
+        let st = self.slots.entry(slot).or_default();
+        st.commits_for.entry(digest).or_default().insert(b);
+        if st.commits_for[&digest].len() >= self.quorum && !st.decided {
+            self.stats.decided_slow += 1;
+            env.mark("decided_slow");
+            self.decide(env, slot, cm.body.req);
+        }
+    }
+
+    fn decide(&mut self, env: &mut dyn Env, slot: u64, req: Request) {
+        let st = self.slots.entry(slot).or_default();
+        if st.decided {
+            return;
+        }
+        st.decided = true;
+        self.pending_reqs.remove(&req.digest());
+        self.decided.insert(slot, req);
+        self.last_progress = env.now();
+        self.vc_backoff = 0; // progress: reset view-change backoff
+        self.try_apply(env);
+        self.try_checkpoint(env);
+    }
+
+    /// Apply decided requests in slot order; respond to clients.
+    fn try_apply(&mut self, env: &mut dyn Env) {
+        while let Some(req) = self.decided.get(&self.applied_upto).cloned() {
+            let slot = self.applied_upto;
+            self.applied_upto += 1;
+            if !req.is_noop() {
+                // At-most-once execution: a request re-proposed across a
+                // view change may decide in two slots; execute only once.
+                let cache = self.resp_cache.entry(req.client).or_default();
+                if cache.iter().any(|(rid, _, _)| *rid == req.rid) {
+                    continue;
+                }
+                env.charge(Category::Other, self.app.sim_cost(&req.payload));
+                let resp = self.app.execute(&req.payload);
+                env.mark("applied");
+                let client = req.client as NodeId;
+                let cache = self.resp_cache.entry(req.client).or_default();
+                cache.push_back((req.rid, slot, resp.clone()));
+                while cache.len() > 8 {
+                    cache.pop_front();
+                }
+                self.send_direct(
+                    env,
+                    client,
+                    DirectMsg::Response { rid: req.rid, slot, payload: resp },
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoints (Alg 2 lines 43-61)
+    // ------------------------------------------------------------------
+
+    fn try_checkpoint(&mut self, env: &mut dyn Env) {
+        // After deciding + applying the whole window, certify the next
+        // checkpoint.
+        if self.applied_upto < self.checkpoint.body.open_hi() {
+            return;
+        }
+        let body = Checkpoint {
+            upto: self.applied_upto,
+            window: self.cfg.window as u64,
+            app_digest: self.app.digest(),
+        };
+        let digest = checkpoint_cert_digest(&body);
+        if self.cp_shares.contains_key(&digest) {
+            return; // already certifying
+        }
+        let share = self.ks.sign(self.me, &digest.0);
+        crate::env::charge_sign(env, &self.cfg.lat.clone());
+        self.tb_broadcast(env, TbMsg::CertifyCheckpoint { body, share });
+    }
+
+    /// `MaybeCheckpoint` (Alg 2 lines 57-61).
+    fn maybe_checkpoint(&mut self, env: &mut dyn Env, cp: CheckpointCert) {
+        if !cp.supersedes(&self.checkpoint) || !cp.verify(&self.ks, self.quorum) {
+            return;
+        }
+        self.checkpoint = cp.clone();
+        self.stats.checkpoints += 1;
+        let lo = self.checkpoint.body.open_lo();
+        // Drop per-slot state and fast-path promises below the window.
+        self.slots = self.slots.split_off(&lo);
+        self.decided = self.decided.split_off(&self.applied_upto.min(lo));
+        if self.next_slot < lo {
+            self.next_slot = lo;
+        }
+        self.last_progress = env.now();
+        env.mark("checkpoint");
+        self.ctb_broadcast(env, ConsMsg::Checkpoint(cp));
+        // New window may unblock proposing.
+        self.try_propose(env);
+    }
+
+    // ------------------------------------------------------------------
+    // Client requests & proposing
+    // ------------------------------------------------------------------
+
+    fn handle_direct(&mut self, env: &mut dyn Env, from: NodeId, msg: DirectMsg) {
+        match msg {
+            DirectMsg::Request(req) => {
+                // At-most-once: answer executed duplicates from the cache
+                // (the client's Response may have been lost).
+                if let Some(cache) = self.resp_cache.get(&req.client) {
+                    if let Some((_, slot, resp)) =
+                        cache.iter().find(|(rid, _, _)| *rid == req.rid)
+                    {
+                        let (slot, resp) = (*slot, resp.clone());
+                        let client = req.client as NodeId;
+                        self.send_direct(
+                            env,
+                            client,
+                            DirectMsg::Response { rid: req.rid, slot, payload: resp },
+                        );
+                        return;
+                    }
+                }
+                let d = req.digest();
+                self.req_first_seen.entry(d).or_insert_with(|| env.now());
+                if !self.proposed.contains(&d) {
+                    self.pending_reqs.entry(d).or_insert_with(|| env.now());
+                }
+                self.req_store.insert(d, req);
+                if self.is_leader() {
+                    if !self.proposed.contains(&d) {
+                        self.req_queue.push_back(d);
+                        self.try_propose(env);
+                    }
+                } else {
+                    let leader = self.leader();
+                    self.send_direct(env, leader, DirectMsg::ReqEcho { digest: d });
+                }
+                // Endorse any PREPARE that was waiting for this request.
+                if let Some(pbs) = self.waiting_prepares.remove(&d) {
+                    for pb in pbs {
+                        if pb.view == self.view {
+                            self.endorse(env, pb);
+                        }
+                    }
+                }
+            }
+            DirectMsg::ReqEcho { digest } => {
+                self.echoes.entry(digest).or_default().insert(from);
+                if self.is_leader() {
+                    self.try_propose(env);
+                }
+            }
+            DirectMsg::Response { .. } => { /* clients only */ }
+            DirectMsg::CrtfyVc { view, about, state, share } => {
+                self.on_crtfy_vc(env, from, view, about, state, share);
+            }
+            DirectMsg::CertifySummary { id, digest, share } => {
+                self.on_certify_summary(env, from, id, digest, share);
+            }
+        }
+    }
+
+    /// Leader proposing loop (§5.4: wait for follower echoes or timeout).
+    fn try_propose(&mut self, env: &mut dyn Env) {
+        if !self.is_leader() || self.sealing.is_some() {
+            return;
+        }
+        // A new leader must install its NEW_VIEW before proposing fresh
+        // requests (Alg 2 line 15).
+        if self.view > 0 && !self.new_view_sent.contains(&self.view) {
+            return;
+        }
+        while self.next_slot < self.checkpoint.body.open_hi() {
+            let Some(&d) = self.req_queue.front() else { break };
+            let Some(req) = self.req_store.get(&d).cloned() else {
+                self.req_queue.pop_front();
+                continue;
+            };
+            let echoes = self.echoes.get(&d).map_or(0, |s| s.len());
+            let waited = env.now().saturating_sub(self.req_first_seen[&d]);
+            // Fast path wants every follower on board; propose anyway
+            // after the echo timeout (a Byzantine client may have sent the
+            // request only to us — §5.4).
+            if echoes + 1 < self.n && waited < ECHO_TIMEOUT {
+                break;
+            }
+            self.req_queue.pop_front();
+            if self.proposed.contains(&d) {
+                continue;
+            }
+            self.proposed.insert(d);
+            let pb = PrepareBody { view: self.view, slot: self.next_slot, req };
+            self.next_slot += 1;
+            env.mark("propose");
+            self.ctb_broadcast(env, ConsMsg::Prepare(pb));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // View change (Alg 3)
+    // ------------------------------------------------------------------
+
+    /// Move toward `target` view: fulfill fast-path promises, then seal.
+    fn change_view(&mut self, env: &mut dyn Env, target: u64) {
+        if target <= self.view || self.sealing.map_or(false, |s| s >= target) {
+            return;
+        }
+        self.sealing = Some(target);
+        // Promises: every slot where I broadcast WILL_COMMIT in the
+        // current view must have a COMMIT broadcast (or be checkpointed)
+        // before SEAL_VIEW (Alg 3 lines 4-5). Kick their slow paths.
+        let promised: Vec<u64> = self
+            .slots
+            .iter()
+            .filter(|(_, st)| st.sent_will_commit == Some(self.view) && !st.commit_sent)
+            .map(|(s, _)| *s)
+            .collect();
+        for slot in promised {
+            self.kick_slow_path(env, slot);
+        }
+        self.try_seal(env);
+    }
+
+    fn kick_slow_path(&mut self, env: &mut dyn Env, slot: u64) {
+        self.send_certify(env, self.view, slot);
+        if let Some(&k) = self.my_prepare_k.get(&slot) {
+            let outs = self.ctb.as_mut().unwrap().trigger_slow(env, k);
+            self.handle_outs(env, outs);
+        }
+        self.try_send_commit(env, self.view, slot);
+    }
+
+    fn try_seal(&mut self, env: &mut dyn Env) {
+        let Some(target) = self.sealing else { return };
+        let unfulfilled = self
+            .slots
+            .iter()
+            .any(|(s, st)| {
+                st.sent_will_commit == Some(self.view)
+                    && !st.commit_sent
+                    && self.checkpoint.body.open(*s)
+            });
+        if unfulfilled {
+            return; // keep waiting; tick re-checks
+        }
+        self.view = target;
+        self.sealing = None;
+        self.stats.view_changes += 1;
+        self.last_progress = env.now();
+        // Requests proposed in dead views may never decide there; they
+        // become proposable again (execution dedups by client rid).
+        self.proposed.clear();
+        env.mark("seal_view");
+        self.ctb_broadcast(env, ConsMsg::SealView { view: target });
+        // Re-route undecided client requests toward the new leader.
+        let pending: Vec<Hash32> = self.pending_reqs.keys().cloned().collect();
+        if self.is_leader() {
+            for d in pending {
+                if !self.proposed.contains(&d) && !self.req_queue.contains(&d) {
+                    self.req_queue.push_back(d);
+                }
+            }
+        } else {
+            let leader = self.leader();
+            for d in pending {
+                self.send_direct(env, leader, DirectMsg::ReqEcho { digest: d });
+            }
+        }
+    }
+
+    /// `b` sealed `view`: certify its state for the new leader.
+    fn on_sealed(&mut self, env: &mut dyn Env, b: NodeId, view: u64) {
+        let enc = self.senders[b].encode_state();
+        let digest = VcCert::share_digest(view, b as u64, &enc);
+        let share = self.ks.sign(self.me, &digest.0);
+        crate::env::charge_sign(env, &self.cfg.lat.clone());
+        let leader = leader_of(view, self.n);
+        self.send_direct(
+            env,
+            leader,
+            DirectMsg::CrtfyVc { view, about: b as u64, state: enc, share },
+        );
+        // Join the view change if a newer view is sealing around us.
+        let sealed_count = self
+            .senders
+            .iter()
+            .filter(|s| s.view >= view && s.sealed.is_some())
+            .count();
+        if view > self.view && sealed_count >= self.quorum {
+            self.change_view(env, view);
+        }
+    }
+
+    /// Leader-side CRTFY_VC assembly (Alg 3 lines 13-19).
+    fn on_crtfy_vc(
+        &mut self,
+        env: &mut dyn Env,
+        from: NodeId,
+        view: u64,
+        about: u64,
+        state: SenderStateEnc,
+        share: crate::crypto::Sig,
+    ) {
+        if leader_of(view, self.n) != self.me || view < self.view {
+            return;
+        }
+        let digest = VcCert::share_digest(view, about, &state);
+        crate::env::charge_verify(env, &self.cfg.lat.clone());
+        if !self.ks.verify(from, &digest.0, &share) {
+            return;
+        }
+        let entry = self
+            .vc_shares
+            .entry((view, about, digest))
+            .or_insert_with(|| (state, Certificate::new(digest)));
+        entry.1.add(from, share);
+        self.try_new_view(env, view);
+    }
+
+    fn try_new_view(&mut self, env: &mut dyn Env, view: u64) {
+        if view != self.view || self.new_view_sent.contains(&view) {
+            return;
+        }
+        // Collect one certified state per distinct replica.
+        let mut certs: Vec<VcCert> = Vec::new();
+        let mut seen = BTreeSet::new();
+        for ((v, about, _), (state, cert)) in &self.vc_shares {
+            if *v == view && cert.len() >= self.quorum && seen.insert(*about) {
+                certs.push(VcCert {
+                    view,
+                    about: *about,
+                    state: state.clone(),
+                    cert: cert.clone(),
+                });
+            }
+        }
+        if certs.len() < self.quorum {
+            return;
+        }
+        certs.truncate(self.quorum);
+        self.new_view_sent.insert(view);
+        env.mark("new_view");
+        self.ctb_broadcast(env, ConsMsg::NewView { view, certs: certs.clone() });
+        self.install_new_view(env, view, certs);
+    }
+
+    /// Adopt the constraints of a NEW_VIEW (both leader and followers).
+    fn install_new_view(&mut self, env: &mut dyn Env, view: u64, certs: Vec<VcCert>) {
+        // Adopt the highest checkpoint among the certified states.
+        if let Some(best) = certs
+            .iter()
+            .map(|c| &c.state.checkpoint)
+            .max_by_key(|cp| cp.body.upto)
+            .cloned()
+        {
+            self.maybe_checkpoint(env, best);
+        }
+        if leader_of(view, self.n) != self.me {
+            return;
+        }
+        // Re-propose constrained slots; free slots take new requests.
+        let lo = self.checkpoint.body.open_lo();
+        let hi = self.checkpoint.body.open_hi();
+        let mut first_free = None;
+        for s in lo..hi {
+            if self.decided.contains_key(&s) {
+                continue;
+            }
+            match must_propose(s, &certs) {
+                Constraint::Committed(req) => {
+                    let pb = PrepareBody { view, slot: s, req };
+                    self.ctb_broadcast(env, ConsMsg::Prepare(pb));
+                }
+                Constraint::Free => {
+                    if first_free.is_none() {
+                        first_free = Some(s);
+                    }
+                }
+            }
+        }
+        self.next_slot = first_free.unwrap_or(hi);
+        self.try_propose(env);
+    }
+
+    fn on_new_view(&mut self, env: &mut dyn Env, _b: NodeId, view: u64, _certs: Vec<VcCert>) {
+        // Follower: make sure we participate in the new view.
+        if view > self.view {
+            self.change_view(env, view);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Summaries (Alg 4) — certificate assembly for my own stream
+    // ------------------------------------------------------------------
+
+    fn on_certify_summary(
+        &mut self,
+        env: &mut dyn Env,
+        from: NodeId,
+        id: u64,
+        digest: Hash32,
+        share: crate::crypto::Sig,
+    ) {
+        let Some(my_state) = self.my_boundary_states.get(&id) else { return };
+        let expect = msgs::summary_share_digest(self.me as u64, id, my_state);
+        if digest != expect {
+            return; // certifier diverged (or lies); ignore
+        }
+        crate::env::charge_verify(env, &self.cfg.lat.clone());
+        if !self.ks.verify(from, &digest.0, &share) {
+            return;
+        }
+        let cert =
+            self.summary_certs.entry(id).or_insert_with(|| Certificate::new(expect));
+        cert.add(from, share);
+        if cert.len() >= self.quorum && id > self.my_summary_id {
+            self.my_summary_id = id;
+            self.stats.summaries_emitted += 1;
+            let state = my_state.clone();
+            let cert = self.summary_certs[&id].clone();
+            env.mark("summary");
+            self.tb_broadcast(
+                env,
+                TbMsg::Summary { about: self.me as u64, id, state, cert },
+            );
+            self.drain_blocked_broadcasts(env);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Timers
+    // ------------------------------------------------------------------
+
+    /// Is any protocol work outstanding? Drives the adaptive tick rate.
+    fn has_pending_work(&self) -> bool {
+        !self.pending_reqs.is_empty()
+            || !self.req_queue.is_empty()
+            || self.sealing.is_some()
+            || !self.blocked_broadcasts.is_empty()
+            || self.slots.values().any(|st| !st.decided && st.prepared_at.is_some())
+    }
+
+    fn on_tick(&mut self, env: &mut dyn Env) {
+        let now = env.now();
+        // Leader: propose requests whose echo round timed out.
+        self.try_propose(env);
+        // CTBcast fast path stalled for any of my own broadcasts (PREPARE,
+        // COMMIT, CHECKPOINT, SEAL_VIEW, NEW_VIEW): escalate to the signed
+        // register path.
+        let stalled_bcasts =
+            self.ctb.as_ref().unwrap().stalled_broadcasts(now, self.cfg.fastpath_timeout);
+        for k in stalled_bcasts {
+            let outs = self.ctb.as_mut().unwrap().trigger_slow(env, k);
+            self.handle_outs(env, outs);
+        }
+        // Slow-path fallback for stalled slots.
+        let stalled: Vec<u64> = self
+            .slots
+            .iter()
+            .filter(|(s, st)| {
+                !st.decided
+                    && self.checkpoint.body.open(**s)
+                    && st.prepared_at
+                        .map_or(false, |t| now.saturating_sub(t) > self.cfg.fastpath_timeout)
+            })
+            .map(|(s, _)| *s)
+            .collect();
+        for slot in stalled {
+            self.kick_slow_path(env, slot);
+        }
+        // View-change suspicion: pending work but no progress. Pending
+        // work = an undecided client request we hold, or an undecided
+        // slot with a delivered PREPARE. The timeout backs off
+        // exponentially with consecutive unproductive view changes.
+        let timeout = self
+            .cfg
+            .viewchange_timeout
+            .saturating_mul(1 << self.vc_backoff.min(6));
+        let pending = self
+            .pending_reqs
+            .values()
+            .any(|&t0| now.saturating_sub(t0) > timeout)
+            || self.slots.values().any(|st| !st.decided && st.prepared_at.is_some());
+        if pending && now.saturating_sub(self.last_progress) > timeout {
+            self.last_progress = now; // back off before re-suspecting
+            self.vc_backoff += 1;
+            // JOIN the highest view any peer has sealed rather than
+            // exceed it (exceeding leads to two survivors leapfrogging
+            // each other's views forever); only move past it when we are
+            // already there.
+            let highest_sealed =
+                self.senders.iter().map(|s| s.view).max().unwrap_or(self.view);
+            let target = (self.view + 1).max(highest_sealed);
+            self.change_view(env, target);
+        }
+        // Sealing in progress: re-check promise fulfilment.
+        self.try_seal(env);
+    }
+}
+
+impl Actor for Replica {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.ctb = Some(CtbEndpoint::new(self.me, &self.cfg, self.ks.clone()));
+        self.last_progress = env.now();
+        env.set_timer(self.cfg.retransmit_every, TOKEN_RETRANSMIT);
+        env.set_timer(TICK_EVERY, TOKEN_TICK);
+    }
+
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Recv { from, bytes } => match bytes.first() {
+                Some(&TAG_TB) => {
+                    let outs = self.ctb.as_mut().unwrap().on_recv(env, from, &bytes);
+                    self.handle_outs(env, outs);
+                }
+                Some(&TAG_DIRECT) => {
+                    if let Some(msg) = parse_direct(&bytes) {
+                        env.charge(Category::Other, self.cfg.lat.proc_overhead);
+                        self.handle_direct(env, from, msg);
+                    }
+                }
+                _ => {}
+            },
+            Event::Timer { token } => match token {
+                TOKEN_RETRANSMIT => {
+                    self.ctb.as_mut().unwrap().on_retransmit(env);
+                    env.set_timer(self.cfg.retransmit_every, TOKEN_RETRANSMIT);
+                }
+                TOKEN_TICK => {
+                    self.on_tick(env);
+                    // Adaptive tick: idle replicas poll 20x less often
+                    // (big DES wall-time win; reaction latency to new
+                    // work is event-driven, not tick-driven).
+                    let every =
+                        if self.has_pending_work() { TICK_EVERY } else { 20 * TICK_EVERY };
+                    env.set_timer(every, TOKEN_TICK);
+                }
+                TOKEN_CTB_COOLDOWN => {
+                    let outs = self.ctb.as_mut().unwrap().on_timer(env, token);
+                    self.handle_outs(env, outs);
+                }
+                _ => {}
+            },
+            Event::MemDone { ticket, result, .. } => {
+                let outs = self.ctb.as_mut().unwrap().on_mem_done(env, ticket, result);
+                self.handle_outs(env, outs);
+            }
+        }
+    }
+}
+
+impl Replica {
+    /// Total replica-local memory attributable to the protocol (Table 2):
+    /// CTBcast/TBcast buffers, per-sender folded state, slot bookkeeping.
+    pub fn mem_bytes(&self) -> u64 {
+        let mut total = self.ctb.as_ref().map_or(0, |c| c.mem_bytes());
+        total += self.senders.iter().map(|s| s.mem_bytes()).sum::<u64>();
+        total += (self.slots.len() * std::mem::size_of::<SlotState>()) as u64;
+        total += self
+            .decided
+            .values()
+            .map(|r| r.payload.len() as u64 + 32)
+            .sum::<u64>();
+        total += self
+            .req_store
+            .values()
+            .map(|r| r.payload.len() as u64 + 64)
+            .sum::<u64>();
+        total
+    }
+
+    /// Disaggregated-memory bytes written by this replica.
+    pub fn disagg_bytes(&self) -> u64 {
+        self.ctb.as_ref().map_or(0, |c| c.disagg_bytes_written())
+    }
+
+    pub fn view(&self) -> u64 {
+        self.view
+    }
+
+    pub fn applied_upto(&self) -> u64 {
+        self.applied_upto
+    }
+
+    pub fn app(&self) -> &dyn App {
+        self.app.as_ref()
+    }
+}
+
+impl Replica {
+    /// Diagnostic snapshot (used by debugging harnesses).
+    pub fn debug_state(&self) -> String {
+        let ctb = self.ctb.as_ref().unwrap();
+        let mut s = format!(
+            " next_k={} sum_id={} blockedq={} sealing={:?}",
+            ctb.next_k(),
+            self.my_summary_id,
+            self.blocked_broadcasts.len(),
+            self.sealing
+        );
+        for p in 0..self.n {
+            let st = &self.senders[p];
+            s += &format!(
+                " s{p}[fifo={} buf={} blk={} v={}]",
+                st.fifo_next,
+                st.buffer.len(),
+                st.blocked,
+                st.view
+            );
+        }
+        s
+    }
+}

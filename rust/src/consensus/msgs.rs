@@ -1,0 +1,579 @@
+//! Consensus message types and their canonical wire encodings.
+//!
+//! Three transport classes, mirroring Figures 3/4 of the paper:
+//! * [`ConsMsg`] — carried inside CTBcast messages (bold arrows):
+//!   PREPARE, COMMIT, CHECKPOINT, SEAL_VIEW, NEW_VIEW. Ordered per
+//!   broadcaster, non-equivocating.
+//! * [`TbMsg`] — carried over plain TBcast (CERTIFY, WILL_CERTIFY,
+//!   WILL_COMMIT, CERTIFY_CHECKPOINT, SUMMARY).
+//! * [`DirectMsg`] — unicast (thin arrows): client requests/responses,
+//!   request echoes, view-change certificate shares, summary shares.
+
+use crate::crypto::{hash, hash_parts, Certificate, Hash32, Sig};
+use crate::util::wire::{get_list, put_list, Wire, WireError, WireReader, WireWriter};
+use std::collections::BTreeMap;
+
+/// A client request. Unsigned by design: the fast path avoids client
+/// signatures via the Echo round (§5.4).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub client: u64,
+    pub rid: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Request {
+    /// The no-op request proposed for unconstrained slots after a view
+    /// change (MustPropose → ⊥).
+    pub fn noop() -> Request {
+        Request { client: u64::MAX, rid: 0, payload: Vec::new() }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.client == u64::MAX
+    }
+
+    pub fn digest(&self) -> Hash32 {
+        hash(&self.encode())
+    }
+}
+
+impl Wire for Request {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.client);
+        w.u64(self.rid);
+        w.bytes(&self.payload);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(Request { client: r.u64()?, rid: r.u64()?, payload: r.bytes()? })
+    }
+}
+
+/// The body every PREPARE/COMMIT certificate signs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrepareBody {
+    pub view: u64,
+    pub slot: u64,
+    pub req: Request,
+}
+
+impl PrepareBody {
+    pub fn digest(&self) -> Hash32 {
+        hash(&self.encode())
+    }
+}
+
+impl Wire for PrepareBody {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.view);
+        w.u64(self.slot);
+        self.req.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(PrepareBody { view: r.u64()?, slot: r.u64()?, req: Request::get(r)? })
+    }
+}
+
+/// An application checkpoint body: the state digest after applying slots
+/// `[0, upto)` plus the authorization to work on `[upto, upto + window)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub upto: u64,
+    pub window: u64,
+    pub app_digest: Hash32,
+}
+
+impl Checkpoint {
+    pub fn genesis(window: u64, app_digest: Hash32) -> Checkpoint {
+        Checkpoint { upto: 0, window, app_digest }
+    }
+
+    pub fn digest(&self) -> Hash32 {
+        hash(&self.encode())
+    }
+
+    /// The open consensus slots `[upto, upto + window)`.
+    pub fn open(&self, slot: u64) -> bool {
+        slot >= self.upto && slot < self.upto + self.window
+    }
+
+    pub fn open_lo(&self) -> u64 {
+        self.upto
+    }
+
+    pub fn open_hi(&self) -> u64 {
+        self.upto + self.window
+    }
+}
+
+impl Wire for Checkpoint {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.upto);
+        w.u64(self.window);
+        self.app_digest.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(Checkpoint { upto: r.u64()?, window: r.u64()?, app_digest: Hash32::get(r)? })
+    }
+}
+
+/// A checkpoint certified by f+1 replicas. The genesis checkpoint carries
+/// an empty certificate (validated structurally, not cryptographically).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointCert {
+    pub body: Checkpoint,
+    pub cert: Certificate,
+}
+
+impl CheckpointCert {
+    pub fn genesis(window: u64, app_digest: Hash32) -> CheckpointCert {
+        let body = Checkpoint::genesis(window, app_digest);
+        let cert = Certificate::new(checkpoint_cert_digest(&body));
+        CheckpointCert { body, cert }
+    }
+
+    pub fn is_genesis(&self) -> bool {
+        self.body.upto == 0
+    }
+
+    /// Cryptographic validity (genesis is valid by construction).
+    pub fn verify(&self, ks: &crate::crypto::KeyStore, quorum: usize) -> bool {
+        if self.is_genesis() {
+            return true;
+        }
+        self.cert.digest == checkpoint_cert_digest(&self.body) && self.cert.verify(ks, quorum)
+    }
+
+    /// Does this checkpoint strictly supersede `other`?
+    pub fn supersedes(&self, other: &CheckpointCert) -> bool {
+        self.body.upto > other.body.upto
+    }
+}
+
+impl Wire for CheckpointCert {
+    fn put(&self, w: &mut WireWriter) {
+        self.body.put(w);
+        self.cert.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(CheckpointCert { body: Checkpoint::get(r)?, cert: Certificate::get(r)? })
+    }
+}
+
+/// Domain-separated digest CERTIFY shares sign (prevents cross-protocol
+/// replay of shares between commit/checkpoint/view-change certificates).
+pub fn certify_digest(body: &PrepareBody) -> Hash32 {
+    hash_parts(&[b"ubft-certify", &body.encode()])
+}
+
+/// Domain-separated digest checkpoint shares sign.
+pub fn checkpoint_cert_digest(body: &Checkpoint) -> Hash32 {
+    hash_parts(&[b"ubft-ckpt", &body.encode()])
+}
+
+/// A COMMIT: a PREPARE body plus the f+1 certificate over its digest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Commit {
+    pub body: PrepareBody,
+    pub cert: Certificate,
+}
+
+impl Wire for Commit {
+    fn put(&self, w: &mut WireWriter) {
+        self.body.put(w);
+        self.cert.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(Commit { body: PrepareBody::get(r)?, cert: Certificate::get(r)? })
+    }
+}
+
+/// Canonical, bounded encoding of the receiver-side state of one
+/// broadcaster (`state[p]` in Alg 2 minus `new_view`). This is what
+/// CRTFY_VC shares and CTBcast summaries attest. Because it is a pure
+/// fold of `p`'s CTBcast prefix, all correct replicas produce
+/// byte-identical encodings for the same prefix (§5.2/§5.3).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SenderStateEnc {
+    pub view: u64,
+    pub sealed: Option<u64>,
+    pub prepares: BTreeMap<u64, PrepareBody>,
+    pub commits: BTreeMap<u64, Commit>,
+    pub checkpoint: CheckpointCert,
+}
+
+impl SenderStateEnc {
+    pub fn digest(&self) -> Hash32 {
+        hash(&self.encode())
+    }
+}
+
+impl Wire for SenderStateEnc {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.view);
+        self.sealed.put(w);
+        crate::util::wire::put_map(w, &self.prepares);
+        crate::util::wire::put_map(w, &self.commits);
+        self.checkpoint.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(SenderStateEnc {
+            view: r.u64()?,
+            sealed: Option::<u64>::get(r)?,
+            prepares: crate::util::wire::get_map(r)?,
+            commits: crate::util::wire::get_map(r)?,
+            checkpoint: CheckpointCert::get(r)?,
+        })
+    }
+}
+
+/// A view-change certificate about one replica: its certified state at the
+/// moment it sealed `view`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VcCert {
+    pub view: u64,
+    pub about: u64,
+    pub state: SenderStateEnc,
+    pub cert: Certificate,
+}
+
+impl VcCert {
+    /// Digest the shares sign: binds (view, about, state).
+    pub fn share_digest(view: u64, about: u64, state: &SenderStateEnc) -> Hash32 {
+        let mut w = WireWriter::new();
+        w.u64(view);
+        w.u64(about);
+        state.put(&mut w);
+        hash_parts(&[b"ubft-vc", &w.finish()])
+    }
+}
+
+impl Wire for VcCert {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.view);
+        w.u64(self.about);
+        self.state.put(w);
+        self.cert.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(VcCert {
+            view: r.u64()?,
+            about: r.u64()?,
+            state: SenderStateEnc::get(r)?,
+            cert: Certificate::get(r)?,
+        })
+    }
+}
+
+/// Messages carried inside CTBcast broadcasts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConsMsg {
+    Prepare(PrepareBody),
+    Commit(Commit),
+    Checkpoint(CheckpointCert),
+    SealView { view: u64 },
+    NewView { view: u64, certs: Vec<VcCert> },
+}
+
+impl Wire for ConsMsg {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            ConsMsg::Prepare(p) => {
+                w.u8(1);
+                p.put(w);
+            }
+            ConsMsg::Commit(c) => {
+                w.u8(2);
+                c.put(w);
+            }
+            ConsMsg::Checkpoint(c) => {
+                w.u8(3);
+                c.put(w);
+            }
+            ConsMsg::SealView { view } => {
+                w.u8(4);
+                w.u64(*view);
+            }
+            ConsMsg::NewView { view, certs } => {
+                w.u8(5);
+                w.u64(*view);
+                put_list(w, certs);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            1 => ConsMsg::Prepare(PrepareBody::get(r)?),
+            2 => ConsMsg::Commit(Commit::get(r)?),
+            3 => ConsMsg::Checkpoint(CheckpointCert::get(r)?),
+            4 => ConsMsg::SealView { view: r.u64()? },
+            5 => ConsMsg::NewView { view: r.u64()?, certs: get_list(r)? },
+            tag => return Err(WireError::BadTag { what: "ConsMsg", tag }),
+        })
+    }
+}
+
+/// Messages carried over plain TBcast.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TbMsg {
+    Certify { view: u64, slot: u64, digest: Hash32, share: Sig },
+    WillCertify { view: u64, slot: u64 },
+    WillCommit { view: u64, slot: u64 },
+    CertifyCheckpoint { body: Checkpoint, share: Sig },
+    Summary { about: u64, id: u64, state: SenderStateEnc, cert: Certificate },
+}
+
+impl Wire for TbMsg {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            TbMsg::Certify { view, slot, digest, share } => {
+                w.u8(1);
+                w.u64(*view);
+                w.u64(*slot);
+                digest.put(w);
+                share.put(w);
+            }
+            TbMsg::WillCertify { view, slot } => {
+                w.u8(2);
+                w.u64(*view);
+                w.u64(*slot);
+            }
+            TbMsg::WillCommit { view, slot } => {
+                w.u8(3);
+                w.u64(*view);
+                w.u64(*slot);
+            }
+            TbMsg::CertifyCheckpoint { body, share } => {
+                w.u8(4);
+                body.put(w);
+                share.put(w);
+            }
+            TbMsg::Summary { about, id, state, cert } => {
+                w.u8(5);
+                w.u64(*about);
+                w.u64(*id);
+                state.put(w);
+                cert.put(w);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            1 => TbMsg::Certify {
+                view: r.u64()?,
+                slot: r.u64()?,
+                digest: Hash32::get(r)?,
+                share: Sig::get(r)?,
+            },
+            2 => TbMsg::WillCertify { view: r.u64()?, slot: r.u64()? },
+            3 => TbMsg::WillCommit { view: r.u64()?, slot: r.u64()? },
+            4 => TbMsg::CertifyCheckpoint { body: Checkpoint::get(r)?, share: Sig::get(r)? },
+            5 => TbMsg::Summary {
+                about: r.u64()?,
+                id: r.u64()?,
+                state: SenderStateEnc::get(r)?,
+                cert: Certificate::get(r)?,
+            },
+            tag => return Err(WireError::BadTag { what: "TbMsg", tag }),
+        })
+    }
+}
+
+/// Unicast messages ([`crate::tbcast::TAG_DIRECT`] frames).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DirectMsg {
+    /// Client → every replica.
+    Request(Request),
+    /// Follower → leader: "I have this client request" (§5.4 Echo round).
+    ReqEcho { digest: Hash32 },
+    /// Replica → client.
+    Response { rid: u64, slot: u64, payload: Vec<u8> },
+    /// Replica → new leader: certified state share about `about`.
+    CrtfyVc { view: u64, about: u64, state: SenderStateEnc, share: Sig },
+    /// Replica → broadcaster: summary share (Alg 4).
+    CertifySummary { id: u64, digest: Hash32, share: Sig },
+}
+
+/// Bytes a CertifySummary share signs: `(about, id, state digest)`.
+pub fn summary_share_digest(about: u64, id: u64, state: &SenderStateEnc) -> Hash32 {
+    let mut w = WireWriter::new();
+    w.u64(about);
+    w.u64(id);
+    state.digest().put(&mut w);
+    hash_parts(&[b"ubft-summary", &w.finish()])
+}
+
+impl Wire for DirectMsg {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            DirectMsg::Request(rq) => {
+                w.u8(1);
+                rq.put(w);
+            }
+            DirectMsg::ReqEcho { digest } => {
+                w.u8(2);
+                digest.put(w);
+            }
+            DirectMsg::Response { rid, slot, payload } => {
+                w.u8(3);
+                w.u64(*rid);
+                w.u64(*slot);
+                w.bytes(payload);
+            }
+            DirectMsg::CrtfyVc { view, about, state, share } => {
+                w.u8(4);
+                w.u64(*view);
+                w.u64(*about);
+                state.put(w);
+                share.put(w);
+            }
+            DirectMsg::CertifySummary { id, digest, share } => {
+                w.u8(5);
+                w.u64(*id);
+                digest.put(w);
+                share.put(w);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            1 => DirectMsg::Request(Request::get(r)?),
+            2 => DirectMsg::ReqEcho { digest: Hash32::get(r)? },
+            3 => DirectMsg::Response { rid: r.u64()?, slot: r.u64()?, payload: r.bytes()? },
+            4 => DirectMsg::CrtfyVc {
+                view: r.u64()?,
+                about: r.u64()?,
+                state: SenderStateEnc::get(r)?,
+                share: Sig::get(r)?,
+            },
+            5 => DirectMsg::CertifySummary {
+                id: r.u64()?,
+                digest: Hash32::get(r)?,
+                share: Sig::get(r)?,
+            },
+            tag => return Err(WireError::BadTag { what: "DirectMsg", tag }),
+        })
+    }
+}
+
+/// Frame a [`DirectMsg`] for the wire (prefixes [`crate::tbcast::TAG_DIRECT`]).
+pub fn direct_frame(msg: &DirectMsg) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(crate::tbcast::TAG_DIRECT);
+    msg.put(&mut w);
+    w.finish()
+}
+
+/// Parse a direct frame (first byte already checked).
+pub fn parse_direct(bytes: &[u8]) -> Option<DirectMsg> {
+    let mut r = WireReader::new(bytes);
+    if r.u8().ok()? != crate::tbcast::TAG_DIRECT {
+        return None;
+    }
+    let m = DirectMsg::get(&mut r).ok()?;
+    r.done().ok()?;
+    Some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request { client: 3, rid: 17, payload: b"hello".to_vec() }
+    }
+
+    #[test]
+    fn request_roundtrip_and_digest() {
+        let r = req();
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        assert_ne!(r.digest(), Request::noop().digest());
+        assert!(Request::noop().is_noop());
+        assert!(!r.is_noop());
+    }
+
+    #[test]
+    fn consmsg_roundtrip() {
+        let body = PrepareBody { view: 1, slot: 9, req: req() };
+        let cert = Certificate::new(body.digest());
+        for m in [
+            ConsMsg::Prepare(body.clone()),
+            ConsMsg::Commit(Commit { body: body.clone(), cert: cert.clone() }),
+            ConsMsg::Checkpoint(CheckpointCert::genesis(100, Hash32::ZERO)),
+            ConsMsg::SealView { view: 4 },
+            ConsMsg::NewView { view: 4, certs: vec![] },
+        ] {
+            assert_eq!(ConsMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn tbmsg_roundtrip() {
+        let st = SenderStateEnc {
+            view: 2,
+            sealed: Some(2),
+            prepares: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            checkpoint: CheckpointCert::genesis(10, Hash32::ZERO),
+        };
+        for m in [
+            TbMsg::Certify { view: 1, slot: 2, digest: Hash32::ZERO, share: Sig::ZERO },
+            TbMsg::WillCertify { view: 1, slot: 2 },
+            TbMsg::WillCommit { view: 0, slot: 0 },
+            TbMsg::CertifyCheckpoint {
+                body: Checkpoint::genesis(5, Hash32::ZERO),
+                share: Sig::ZERO,
+            },
+            TbMsg::Summary { about: 1, id: 64, state: st, cert: Certificate::new(Hash32::ZERO) },
+        ] {
+            assert_eq!(TbMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn directmsg_roundtrip() {
+        for m in [
+            DirectMsg::Request(req()),
+            DirectMsg::ReqEcho { digest: hash(b"x") },
+            DirectMsg::Response { rid: 5, slot: 2, payload: b"out".to_vec() },
+            DirectMsg::CertifySummary { id: 64, digest: hash(b"s"), share: Sig::ZERO },
+        ] {
+            let framed = direct_frame(&m);
+            assert_eq!(parse_direct(&framed).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn sender_state_digest_is_canonical() {
+        let mk = || SenderStateEnc {
+            view: 1,
+            sealed: None,
+            prepares: [(3, PrepareBody { view: 1, slot: 3, req: req() })].into(),
+            commits: BTreeMap::new(),
+            checkpoint: CheckpointCert::genesis(100, Hash32::ZERO),
+        };
+        assert_eq!(mk().digest(), mk().digest());
+        let mut other = mk();
+        other.view = 2;
+        assert_ne!(mk().digest(), other.digest());
+    }
+
+    #[test]
+    fn checkpoint_open_range() {
+        let cp = Checkpoint { upto: 100, window: 50, app_digest: Hash32::ZERO };
+        assert!(!cp.open(99));
+        assert!(cp.open(100));
+        assert!(cp.open(149));
+        assert!(!cp.open(150));
+    }
+
+    #[test]
+    fn checkpoint_supersedes() {
+        let g = CheckpointCert::genesis(10, Hash32::ZERO);
+        let mut later = g.clone();
+        later.body.upto = 10;
+        assert!(later.supersedes(&g));
+        assert!(!g.supersedes(&later));
+        assert!(!g.supersedes(&g));
+    }
+}

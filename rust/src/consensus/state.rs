@@ -1,0 +1,468 @@
+//! Per-broadcaster receiver state: the FIFO fold of one process's CTBcast
+//! stream, with the Byzantine validity checks of Algorithm 5 applied to
+//! every message, plus the gap-recovery machinery of Algorithm 4
+//! (CTBcast summaries).
+//!
+//! `state[p]` is a *pure fold* of `p`'s CTBcast prefix: every correct
+//! replica that processed the same prefix holds a byte-identical
+//! [`SenderStateEnc`] — which is exactly why f+1 replicas can certify it
+//! (view-change certificates, §5.3) and why summary shares match (§5.2).
+
+use super::msgs::{
+    certify_digest, CheckpointCert, Commit, ConsMsg, PrepareBody, Request, SenderStateEnc, VcCert,
+};
+use crate::crypto::KeyStore;
+use crate::util::wire::Wire;
+use crate::NodeId;
+use std::collections::BTreeMap;
+
+/// Round-robin leader schedule.
+pub fn leader_of(view: u64, n: usize) -> NodeId {
+    (view % n as u64) as NodeId
+}
+
+/// Result of folding one message into `state[p]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Effect {
+    /// p (the leader) prepared this proposal.
+    Prepared(PrepareBody),
+    /// p broadcast a valid COMMIT.
+    Committed(Commit),
+    /// p broadcast a superseding checkpoint.
+    NewCheckpoint(CheckpointCert),
+    /// p sealed `view`.
+    Sealed { view: u64 },
+    /// p (a leader) installed a new view.
+    NewView { view: u64, certs: Vec<VcCert> },
+}
+
+/// Constraint a new leader faces for a slot (§5.3 MustPropose).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Constraint {
+    /// A COMMIT exists: the leader must re-propose this request.
+    Committed(Request),
+    /// No certificate constrains the slot: any request may be proposed.
+    Free,
+}
+
+/// `MustPropose(slot, certificates)`: the latest (highest-view) committed
+/// request for `slot` across the certified states, if any.
+pub fn must_propose(slot: u64, certs: &[VcCert]) -> Constraint {
+    let mut best: Option<&Commit> = None;
+    for c in certs {
+        if let Some(cm) = c.state.commits.get(&slot) {
+            if best.map_or(true, |b| cm.body.view > b.body.view) {
+                best = Some(cm);
+            }
+        }
+    }
+    match best {
+        Some(cm) => Constraint::Committed(cm.body.req.clone()),
+        None => Constraint::Free,
+    }
+}
+
+/// Receiver-side state for one broadcaster `p`.
+pub struct SenderState {
+    pub who: NodeId,
+    pub view: u64,
+    pub sealed: Option<u64>,
+    pub new_view: Option<(u64, Vec<VcCert>)>,
+    /// Views for which the NEW_VIEW prerequisite is waived because the
+    /// state was adopted from a certified summary (Alg 4 line 14:
+    /// deliver missed messages without re-running the checks).
+    pub new_view_waived: Option<u64>,
+    pub prepares: BTreeMap<u64, PrepareBody>,
+    pub commits: BTreeMap<u64, Commit>,
+    pub checkpoint: CheckpointCert,
+    /// True until p's first non-CHECKPOINT message of the current view.
+    first_in_view: bool,
+    /// Next CTBcast identifier to process (FIFO interpretation, §5.2).
+    pub fifo_next: u64,
+    /// Out-of-order deliveries buffer, bounded to the CTBcast tail.
+    pub buffer: BTreeMap<u64, Vec<u8>>,
+    /// Set permanently when p provably misbehaved.
+    pub blocked: bool,
+}
+
+impl SenderState {
+    pub fn new(who: NodeId, genesis: CheckpointCert) -> SenderState {
+        SenderState {
+            who,
+            view: 0,
+            sealed: None,
+            new_view: None,
+            new_view_waived: None,
+            prepares: BTreeMap::new(),
+            commits: BTreeMap::new(),
+            checkpoint: genesis,
+            first_in_view: true,
+            fifo_next: 1,
+            buffer: BTreeMap::new(),
+            blocked: false,
+        }
+    }
+
+    /// The canonical, certifiable projection (`state[p] \ new_view`).
+    pub fn encode_state(&self) -> SenderStateEnc {
+        SenderStateEnc {
+            view: self.view,
+            sealed: self.sealed,
+            prepares: self.prepares.clone(),
+            commits: self.commits.clone(),
+            checkpoint: self.checkpoint.clone(),
+        }
+    }
+
+    /// Adopt a certified summary state (gap recovery, Alg 4). The caller
+    /// has already verified the f+1 certificate. Returns the effects of
+    /// the messages whose delivery was skipped.
+    pub fn adopt_summary(&mut self, id: u64, enc: SenderStateEnc) -> Vec<Effect> {
+        let mut fx = Vec::new();
+        if enc.checkpoint.supersedes(&self.checkpoint) {
+            fx.push(Effect::NewCheckpoint(enc.checkpoint.clone()));
+        }
+        for pb in enc.prepares.values() {
+            if self.prepares.get(&pb.slot) != Some(pb) {
+                fx.push(Effect::Prepared(pb.clone()));
+            }
+        }
+        for cm in enc.commits.values() {
+            if self.commits.get(&cm.body.slot) != Some(cm) {
+                fx.push(Effect::Committed(cm.clone()));
+            }
+        }
+        if enc.view > self.view {
+            fx.push(Effect::Sealed { view: enc.view });
+        }
+        self.view = enc.view;
+        self.sealed = enc.sealed;
+        self.prepares = enc.prepares;
+        self.commits = enc.commits;
+        self.checkpoint = enc.checkpoint;
+        self.first_in_view = true;
+        self.new_view_waived = Some(self.view);
+        self.fifo_next = id + 1;
+        self.buffer = self.buffer.split_off(&(id + 1));
+        fx
+    }
+
+    /// Fold one in-order message, running the Algorithm 5 checks.
+    /// `Err(())` means p is provably Byzantine: block forever.
+    pub fn apply(
+        &mut self,
+        msg: &ConsMsg,
+        n: usize,
+        quorum: usize,
+        ks: &KeyStore,
+    ) -> Result<Vec<Effect>, ()> {
+        if self.blocked {
+            return Ok(vec![]);
+        }
+        match msg {
+            ConsMsg::Prepare(pb) => {
+                // Alg 5 `valid PREPARE`.
+                let ok = self.view == pb.view
+                    && leader_of(pb.view, n) == self.who
+                    && self.checkpoint.body.open(pb.slot)
+                    && self
+                        .prepares
+                        .get(&pb.slot)
+                        .map(|old| old.view < pb.view)
+                        .unwrap_or(true)
+                    && (pb.view == 0
+                        || self.new_view_waived == Some(pb.view)
+                        || match &self.new_view {
+                            Some((v, certs)) if *v == pb.view => {
+                                match must_propose(pb.slot, certs) {
+                                    Constraint::Committed(req) => req == pb.req,
+                                    Constraint::Free => true,
+                                }
+                            }
+                            _ => false,
+                        });
+                if !ok {
+                    self.blocked = true;
+                    return Err(());
+                }
+                self.first_in_view = false;
+                self.prepares.insert(pb.slot, pb.clone());
+                Ok(vec![Effect::Prepared(pb.clone())])
+            }
+            ConsMsg::Commit(cm) => {
+                // Alg 5 `valid COMMIT`.
+                let ok = self.checkpoint.body.open(cm.body.slot)
+                    && cm.body.view == self.view
+                    && cm.cert.digest == certify_digest(&cm.body)
+                    && cm.cert.verify(ks, quorum)
+                    && self.commits.get(&cm.body.slot) != Some(cm);
+                if !ok {
+                    self.blocked = true;
+                    return Err(());
+                }
+                self.first_in_view = false;
+                self.commits.insert(cm.body.slot, cm.clone());
+                Ok(vec![Effect::Committed(cm.clone())])
+            }
+            ConsMsg::Checkpoint(cp) => {
+                // Alg 5 `valid CHECKPOINT`.
+                let ok = cp.supersedes(&self.checkpoint) && cp.verify(ks, quorum);
+                if !ok {
+                    self.blocked = true;
+                    return Err(());
+                }
+                self.checkpoint = cp.clone();
+                // Forget per-slot state outside the new window (§5.2).
+                let lo = self.checkpoint.body.open_lo();
+                self.prepares = self.prepares.split_off(&lo);
+                self.commits = self.commits.split_off(&lo);
+                Ok(vec![Effect::NewCheckpoint(cp.clone())])
+            }
+            ConsMsg::SealView { view } => {
+                // Alg 5 `valid SEAL_VIEW`.
+                if self.view >= *view {
+                    self.blocked = true;
+                    return Err(());
+                }
+                self.view = *view;
+                self.sealed = Some(*view);
+                self.first_in_view = true;
+                Ok(vec![Effect::Sealed { view: *view }])
+            }
+            ConsMsg::NewView { view, certs } => {
+                // Alg 5 `valid NEW_VIEW`.
+                let mut about_seen = std::collections::BTreeSet::new();
+                let ok = leader_of(self.view, n) == self.who
+                    && *view == self.view
+                    && self.first_in_view
+                    && certs.len() >= quorum
+                    && certs.iter().all(|c| {
+                        about_seen.insert(c.about)
+                            && c.view == self.view
+                            && c.cert.digest
+                                == VcCert::share_digest(c.view, c.about, &c.state)
+                            && c.cert.verify(ks, quorum)
+                    });
+                if !ok {
+                    self.blocked = true;
+                    return Err(());
+                }
+                self.first_in_view = false;
+                self.new_view = Some((*view, certs.clone()));
+                Ok(vec![Effect::NewView { view: *view, certs: certs.clone() }])
+            }
+        }
+    }
+
+    /// Buffer an out-of-order delivery; bound the buffer to `tail` newest.
+    pub fn buffer_delivery(&mut self, k: u64, m: Vec<u8>, tail: usize) {
+        if k >= self.fifo_next {
+            self.buffer.insert(k, m);
+            while self.buffer.len() > 2 * tail {
+                let (&old, _) = self.buffer.iter().next().unwrap();
+                self.buffer.remove(&old);
+            }
+        }
+    }
+
+    /// Pop the next in-order buffered message, if present.
+    pub fn pop_in_order(&mut self) -> Option<(u64, Vec<u8>)> {
+        let k = self.fifo_next;
+        let m = self.buffer.remove(&k)?;
+        self.fifo_next = k + 1;
+        Some((k, m))
+    }
+
+    /// Is there a gap (buffered messages beyond `fifo_next` but nothing at
+    /// `fifo_next` itself)?
+    pub fn has_gap(&self) -> bool {
+        !self.buffer.is_empty() && !self.buffer.contains_key(&self.fifo_next)
+    }
+
+    /// Memory accounting for Table 2.
+    pub fn mem_bytes(&self) -> u64 {
+        let enc = self.encode_state().encode().len() as u64;
+        let buf: usize = self.buffer.values().map(|m| m.len() + 16).sum();
+        enc + buf as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::{Certificate, Hash32};
+
+    fn ks() -> KeyStore {
+        KeyStore::sim(1)
+    }
+
+    fn genesis() -> CheckpointCert {
+        CheckpointCert::genesis(100, Hash32::ZERO)
+    }
+
+    fn prep(view: u64, slot: u64) -> ConsMsg {
+        ConsMsg::Prepare(PrepareBody {
+            view,
+            slot,
+            req: Request { client: 1, rid: slot, payload: vec![1] },
+        })
+    }
+
+    #[test]
+    fn leader_schedule_round_robin() {
+        assert_eq!(leader_of(0, 3), 0);
+        assert_eq!(leader_of(1, 3), 1);
+        assert_eq!(leader_of(2, 3), 2);
+        assert_eq!(leader_of(3, 3), 0);
+    }
+
+    #[test]
+    fn valid_prepare_from_leader_accepted() {
+        let mut st = SenderState::new(0, genesis()); // node 0 = leader of view 0
+        let fx = st.apply(&prep(0, 0), 3, 2, &ks()).unwrap();
+        assert_eq!(fx.len(), 1);
+        assert!(st.prepares.contains_key(&0));
+    }
+
+    #[test]
+    fn prepare_from_non_leader_blocks_sender() {
+        let mut st = SenderState::new(1, genesis()); // node 1 is not leader of view 0
+        assert!(st.apply(&prep(0, 0), 3, 2, &ks()).is_err());
+        assert!(st.blocked);
+        // Once blocked, everything is ignored.
+        assert_eq!(st.apply(&prep(0, 1), 3, 2, &ks()), Ok(vec![]));
+    }
+
+    #[test]
+    fn duplicate_prepare_same_view_blocks() {
+        let mut st = SenderState::new(0, genesis());
+        st.apply(&prep(0, 0), 3, 2, &ks()).unwrap();
+        assert!(st.apply(&prep(0, 0), 3, 2, &ks()).is_err());
+    }
+
+    #[test]
+    fn prepare_outside_window_blocks() {
+        let mut st = SenderState::new(0, genesis());
+        assert!(st.apply(&prep(0, 100), 3, 2, &ks()).is_err());
+    }
+
+    #[test]
+    fn commit_requires_valid_certificate() {
+        let keystore = ks();
+        let body = PrepareBody {
+            view: 0,
+            slot: 3,
+            req: Request { client: 1, rid: 3, payload: vec![] },
+        };
+        // Forged cert (no valid shares).
+        let bad = Commit { body: body.clone(), cert: Certificate::new(certify_digest(&body)) };
+        let mut st = SenderState::new(1, genesis());
+        assert!(st.apply(&ConsMsg::Commit(bad), 3, 2, &keystore).is_err());
+
+        // Valid cert from 2 signers.
+        let d = certify_digest(&body);
+        let mut cert = Certificate::new(d);
+        cert.add(0, keystore.sign(0, &d.0));
+        cert.add(1, keystore.sign(1, &d.0));
+        let good = Commit { body, cert };
+        let mut st = SenderState::new(1, genesis());
+        let fx = st.apply(&ConsMsg::Commit(good.clone()), 3, 2, &keystore).unwrap();
+        assert_eq!(fx, vec![Effect::Committed(good)]);
+    }
+
+    #[test]
+    fn seal_view_must_increase() {
+        let mut st = SenderState::new(0, genesis());
+        st.apply(&ConsMsg::SealView { view: 1 }, 3, 2, &ks()).unwrap();
+        assert_eq!(st.view, 1);
+        assert!(st.apply(&ConsMsg::SealView { view: 1 }, 3, 2, &ks()).is_err());
+    }
+
+    #[test]
+    fn checkpoint_must_supersede_and_verify() {
+        let keystore = ks();
+        let mut st = SenderState::new(0, genesis());
+        // Same upto: not superseding.
+        assert!(st
+            .apply(&ConsMsg::Checkpoint(genesis()), 3, 2, &keystore)
+            .is_err());
+
+        let mut st = SenderState::new(0, genesis());
+        let body = super::super::msgs::Checkpoint { upto: 100, window: 100, app_digest: Hash32::ZERO };
+        let d = super::super::msgs::checkpoint_cert_digest(&body);
+        let mut cert = Certificate::new(d);
+        cert.add(0, keystore.sign(0, &d.0));
+        cert.add(2, keystore.sign(2, &d.0));
+        let cp = CheckpointCert { body, cert };
+        st.apply(&ConsMsg::Checkpoint(cp), 3, 2, &keystore).unwrap();
+        assert_eq!(st.checkpoint.body.upto, 100);
+    }
+
+    #[test]
+    fn fifo_buffer_and_gap_detection() {
+        let mut st = SenderState::new(0, genesis());
+        st.buffer_delivery(2, vec![2], 8);
+        assert!(st.has_gap());
+        assert!(st.pop_in_order().is_none());
+        st.buffer_delivery(1, vec![1], 8);
+        assert!(!st.has_gap());
+        assert_eq!(st.pop_in_order(), Some((1, vec![1])));
+        assert_eq!(st.pop_in_order(), Some((2, vec![2])));
+        assert_eq!(st.fifo_next, 3);
+    }
+
+    #[test]
+    fn summary_adoption_jumps_gap_and_replays_effects() {
+        let keystore = ks();
+        let mut st = SenderState::new(0, genesis());
+        st.buffer_delivery(10, vec![9], 8);
+        assert!(st.has_gap());
+        // Build a summary state containing one prepare.
+        let pb = PrepareBody { view: 0, slot: 4, req: Request::noop() };
+        let enc = SenderStateEnc {
+            view: 0,
+            sealed: None,
+            prepares: [(4u64, pb.clone())].into(),
+            commits: BTreeMap::new(),
+            checkpoint: genesis(),
+        };
+        let fx = st.adopt_summary(9, enc);
+        assert!(fx.contains(&Effect::Prepared(pb)));
+        assert_eq!(st.fifo_next, 10);
+        assert!(!st.has_gap()); // k=10 is now in order
+        let _ = keystore;
+    }
+
+    #[test]
+    fn must_propose_picks_highest_view_commit() {
+        let mk_cert = |view: u64, slot: u64, val: u8| {
+            let body = PrepareBody {
+                view,
+                slot,
+                req: Request { client: 1, rid: 1, payload: vec![val] },
+            };
+            VcCert {
+                view: 5,
+                about: 0,
+                state: SenderStateEnc {
+                    view: 5,
+                    sealed: Some(5),
+                    prepares: BTreeMap::new(),
+                    commits: [(
+                        slot,
+                        Commit { body: body.clone(), cert: Certificate::new(body.digest()) },
+                    )]
+                    .into(),
+                    checkpoint: genesis(),
+                },
+                cert: Certificate::new(Hash32::ZERO),
+            }
+        };
+        let certs = vec![mk_cert(1, 7, 0xA), mk_cert(3, 7, 0xB)];
+        match must_propose(7, &certs) {
+            Constraint::Committed(req) => assert_eq!(req.payload, vec![0xB]),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(must_propose(8, &certs), Constraint::Free);
+    }
+}

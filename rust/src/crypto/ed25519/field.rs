@@ -1,0 +1,299 @@
+//! GF(2^255 - 19) arithmetic with 51-bit limbs.
+//!
+//! Part of the from-scratch RFC 8032 Ed25519 implementation (the
+//! `ed25519-dalek` crate is unavailable in this offline environment).
+//! Variable-time; fine for a systems reproduction, do not reuse where
+//! side channels matter.
+
+/// A field element, 5 limbs of 51 bits (little-endian limb order).
+#[derive(Copy, Clone, Debug)]
+pub struct Fe(pub [u64; 5]);
+
+const MASK51: u64 = (1 << 51) - 1;
+
+/// p = 2^255 - 19 in 51-bit limbs.
+const P_LIMBS: [u64; 5] = [
+    0x7FFFFFFFFFFED,
+    0x7FFFFFFFFFFFF,
+    0x7FFFFFFFFFFFF,
+    0x7FFFFFFFFFFFF,
+    0x7FFFFFFFFFFFF,
+];
+
+impl Fe {
+    pub const ZERO: Fe = Fe([0; 5]);
+    pub const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    pub fn from_u64(v: u64) -> Fe {
+        let mut f = Fe::ZERO;
+        f.0[0] = v & MASK51;
+        f.0[1] = v >> 51;
+        f
+    }
+
+    /// Deserialize 32 little-endian bytes; the top bit is ignored
+    /// (RFC 8032 field-element convention).
+    pub fn from_bytes(b: &[u8; 32]) -> Fe {
+        let lo = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        let n0 = lo(0);
+        let n1 = lo(8);
+        let n2 = lo(16);
+        let n3 = lo(24);
+        Fe([
+            n0 & MASK51,
+            ((n0 >> 51) | (n1 << 13)) & MASK51,
+            ((n1 >> 38) | (n2 << 26)) & MASK51,
+            ((n2 >> 25) | (n3 << 39)) & MASK51,
+            (n3 >> 12) & MASK51,
+        ])
+    }
+
+    /// Serialize to 32 bytes with full canonical reduction mod p.
+    pub fn to_bytes(&self) -> [u8; 32] {
+        let h = self.normalized().0;
+        let mut out = [0u8; 32];
+        let n0 = h[0] | (h[1] << 51);
+        let n1 = (h[1] >> 13) | (h[2] << 38);
+        let n2 = (h[2] >> 26) | (h[3] << 25);
+        let n3 = (h[3] >> 39) | (h[4] << 12);
+        out[0..8].copy_from_slice(&n0.to_le_bytes());
+        out[8..16].copy_from_slice(&n1.to_le_bytes());
+        out[16..24].copy_from_slice(&n2.to_le_bytes());
+        out[24..32].copy_from_slice(&n3.to_le_bytes());
+        out
+    }
+
+    /// Propagate carries so every limb is < 2^51 (value may still be ≥ p).
+    fn carried(&self) -> Fe {
+        let mut h = self.0;
+        let mut c: u64;
+        for _ in 0..2 {
+            c = h[0] >> 51;
+            h[0] &= MASK51;
+            h[1] += c;
+            c = h[1] >> 51;
+            h[1] &= MASK51;
+            h[2] += c;
+            c = h[2] >> 51;
+            h[2] &= MASK51;
+            h[3] += c;
+            c = h[3] >> 51;
+            h[3] &= MASK51;
+            h[4] += c;
+            c = h[4] >> 51;
+            h[4] &= MASK51;
+            h[0] += 19 * c;
+        }
+        Fe(h)
+    }
+
+    /// Fully reduce into `[0, p)`.
+    fn normalized(&self) -> Fe {
+        let mut h = self.carried().0;
+        // After carrying, value < 2^255; subtract p at most twice.
+        for _ in 0..2 {
+            let mut borrow: i128 = 0;
+            let mut t = [0u64; 5];
+            for i in 0..5 {
+                let d = h[i] as i128 - P_LIMBS[i] as i128 - borrow;
+                if d < 0 {
+                    t[i] = (d + (1i128 << 51)) as u64;
+                    borrow = 1;
+                } else {
+                    t[i] = d as u64;
+                    borrow = 0;
+                }
+            }
+            if borrow == 0 {
+                h = t;
+            }
+        }
+        Fe(h)
+    }
+
+    pub fn add(&self, o: &Fe) -> Fe {
+        let a = self.0;
+        let b = o.0;
+        Fe([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3], a[4] + b[4]]).carried()
+    }
+
+    pub fn sub(&self, o: &Fe) -> Fe {
+        // a + 2p - b keeps limbs non-negative for reduced inputs.
+        let a = self.0;
+        let b = o.0;
+        Fe([
+            a[0] + 2 * P_LIMBS[0] - b[0],
+            a[1] + 2 * P_LIMBS[1] - b[1],
+            a[2] + 2 * P_LIMBS[2] - b[2],
+            a[3] + 2 * P_LIMBS[3] - b[3],
+            a[4] + 2 * P_LIMBS[4] - b[4],
+        ])
+        .carried()
+    }
+
+    pub fn neg(&self) -> Fe {
+        Fe::ZERO.sub(self)
+    }
+
+    pub fn mul(&self, o: &Fe) -> Fe {
+        let a = self.0;
+        let b = o.0;
+        let m = |x: u64, y: u64| (x as u128) * (y as u128);
+        let r0 = m(a[0], b[0])
+            + 19 * (m(a[1], b[4]) + m(a[2], b[3]) + m(a[3], b[2]) + m(a[4], b[1]));
+        let r1 = m(a[0], b[1])
+            + m(a[1], b[0])
+            + 19 * (m(a[2], b[4]) + m(a[3], b[3]) + m(a[4], b[2]));
+        let r2 = m(a[0], b[2])
+            + m(a[1], b[1])
+            + m(a[2], b[0])
+            + 19 * (m(a[3], b[4]) + m(a[4], b[3]));
+        let r3 = m(a[0], b[3]) + m(a[1], b[2]) + m(a[2], b[1]) + m(a[3], b[0]) + 19 * m(a[4], b[4]);
+        let r4 = m(a[0], b[4]) + m(a[1], b[3]) + m(a[2], b[2]) + m(a[3], b[1]) + m(a[4], b[0]);
+
+        // Carry chain in u128, folding the top carry back with ×19.
+        let mut h = [0u64; 5];
+        let mut c: u128;
+        let mut r = [r0, r1, r2, r3, r4];
+        c = r[0] >> 51;
+        h[0] = (r[0] as u64) & MASK51;
+        r[1] += c;
+        c = r[1] >> 51;
+        h[1] = (r[1] as u64) & MASK51;
+        r[2] += c;
+        c = r[2] >> 51;
+        h[2] = (r[2] as u64) & MASK51;
+        r[3] += c;
+        c = r[3] >> 51;
+        h[3] = (r[3] as u64) & MASK51;
+        r[4] += c;
+        c = r[4] >> 51;
+        h[4] = (r[4] as u64) & MASK51;
+        h[0] += (19 * c) as u64;
+        Fe(h).carried()
+    }
+
+    pub fn square(&self) -> Fe {
+        self.mul(self)
+    }
+
+    /// self^e where `e` is a little-endian byte exponent.
+    /// Square-and-multiply, MSB first. Variable time.
+    pub fn pow(&self, e_le: &[u8]) -> Fe {
+        let mut acc = Fe::ONE;
+        let mut started = false;
+        for i in (0..e_le.len()).rev() {
+            for bit in (0..8).rev() {
+                if started {
+                    acc = acc.square();
+                }
+                if (e_le[i] >> bit) & 1 == 1 {
+                    if started {
+                        acc = acc.mul(self);
+                    } else {
+                        acc = *self;
+                        started = true;
+                    }
+                }
+            }
+        }
+        if started {
+            acc
+        } else {
+            Fe::ONE
+        }
+    }
+
+    /// Multiplicative inverse via Fermat: self^(p-2). Undefined for zero.
+    pub fn invert(&self) -> Fe {
+        // p - 2 = 2^255 - 21 = 0x7FF...FEB (little-endian bytes below).
+        let mut e = [0xFFu8; 32];
+        e[0] = 0xEB;
+        e[31] = 0x7F;
+        self.pow(&e)
+    }
+
+    /// self^((p-5)/8), the core of the square-root computation (RFC 8032).
+    pub fn pow_p58(&self) -> Fe {
+        // (p-5)/8 = 2^252 - 3 = 0x0FF...FFD.
+        let mut e = [0xFFu8; 32];
+        e[0] = 0xFD;
+        e[31] = 0x0F;
+        self.pow(&e)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.normalized().0 == [0; 5]
+    }
+
+    /// Parity of the canonical representative (bit 0), the "sign" used by
+    /// point compression.
+    pub fn is_odd(&self) -> bool {
+        self.normalized().0[0] & 1 == 1
+    }
+
+    pub fn eq(&self, o: &Fe) -> bool {
+        self.normalized().0 == o.normalized().0
+    }
+}
+
+/// sqrt(-1) mod p, computed once as 2^((p-1)/4).
+pub fn sqrt_m1() -> Fe {
+    // (p-1)/4 = 2^253 - 5 = 0x1FF...FFB.
+    let mut e = [0xFFu8; 32];
+    e[0] = 0xFB;
+    e[31] = 0x1F;
+    Fe::from_u64(2).pow(&e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = Fe::from_u64(123456789);
+        let b = Fe::from_u64(987654321);
+        assert!(a.add(&b).sub(&b).eq(&a));
+    }
+
+    #[test]
+    fn mul_matches_small_ints() {
+        let a = Fe::from_u64(1 << 40);
+        let b = Fe::from_u64(1 << 20);
+        let c = a.mul(&b);
+        // 2^60 fits in two limbs.
+        assert!(c.eq(&Fe::from_u64(1 << 60)));
+    }
+
+    #[test]
+    fn inverse_works() {
+        let a = Fe::from_u64(48_205);
+        let inv = a.invert();
+        assert!(a.mul(&inv).eq(&Fe::ONE));
+    }
+
+    #[test]
+    fn sqrt_m1_squares_to_minus_one() {
+        let i = sqrt_m1();
+        let m1 = Fe::ZERO.sub(&Fe::ONE);
+        assert!(i.square().eq(&m1));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let a = Fe::from_u64(0xDEADBEEFCAFE);
+        let b = Fe::from_bytes(&a.to_bytes());
+        assert!(a.eq(&b));
+    }
+
+    #[test]
+    fn p_reduces_to_zero() {
+        // Encode p itself; from_bytes + normalize must give 0.
+        let mut p_bytes = [0xFFu8; 32];
+        p_bytes[0] = 0xED;
+        p_bytes[31] = 0x7F;
+        let f = Fe::from_bytes(&p_bytes);
+        assert!(f.is_zero());
+    }
+}

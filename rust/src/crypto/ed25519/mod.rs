@@ -1,0 +1,213 @@
+//! Ed25519 signatures (RFC 8032), implemented from scratch.
+//!
+//! The paper uses Dalek's Ed25519 for the slow path's transferable
+//! authentication; that crate is unavailable offline, so this module
+//! provides keygen/sign/verify validated against the RFC 8032 test
+//! vectors. Variable-time — suitable for a systems reproduction, not for
+//! adversarial production deployments.
+
+pub mod field;
+pub mod point;
+pub mod scalar;
+
+use point::Point;
+use sha2::{Digest, Sha512};
+
+/// A 32-byte secret seed.
+#[derive(Clone)]
+pub struct SecretKey(pub [u8; 32]);
+
+/// A compressed public key point.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct PublicKey(pub [u8; 32]);
+
+/// A 64-byte signature (R || S).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Signature(pub [u8; 64]);
+
+impl Signature {
+    pub fn from_bytes(b: &[u8]) -> Option<Signature> {
+        if b.len() != 64 {
+            return None;
+        }
+        let mut s = [0u8; 64];
+        s.copy_from_slice(b);
+        Some(Signature(s))
+    }
+}
+
+/// Expanded secret: clamped scalar + prefix (RFC 8032 §5.1.5).
+struct Expanded {
+    scalar: [u8; 32],
+    prefix: [u8; 32],
+}
+
+fn expand(sk: &SecretKey) -> Expanded {
+    let h = Sha512::digest(sk.0);
+    let mut scalar = [0u8; 32];
+    let mut prefix = [0u8; 32];
+    scalar.copy_from_slice(&h[..32]);
+    prefix.copy_from_slice(&h[32..]);
+    scalar[0] &= 248;
+    scalar[31] &= 127;
+    scalar[31] |= 64;
+    Expanded { scalar, prefix }
+}
+
+/// Derive the public key for a secret seed.
+pub fn public_key(sk: &SecretKey) -> PublicKey {
+    let e = expand(sk);
+    PublicKey(Point::base().scalar_mul(&e.scalar).compress())
+}
+
+/// Sign `msg` (RFC 8032 §5.1.6).
+pub fn sign(sk: &SecretKey, pk: &PublicKey, msg: &[u8]) -> Signature {
+    let e = expand(sk);
+
+    let mut h = Sha512::new();
+    h.update(e.prefix);
+    h.update(msg);
+    let r_digest: [u8; 64] = h.finalize().into();
+    let r = scalar::reduce_bytes64(&r_digest);
+    let r_bytes = scalar::to_bytes32(&r);
+    let big_r = Point::base().scalar_mul(&r_bytes).compress();
+
+    let mut h = Sha512::new();
+    h.update(big_r);
+    h.update(pk.0);
+    h.update(msg);
+    let k_digest: [u8; 64] = h.finalize().into();
+    let k = scalar::reduce_bytes64(&k_digest);
+
+    // s = (r + k * a) mod L, where a is the clamped scalar reduced mod L.
+    let mut wide = [0u8; 64];
+    wide[..32].copy_from_slice(&e.scalar);
+    let a = scalar::reduce_bytes64(&wide);
+    let s = scalar::add_mod(&r, &scalar::mul_mod(&k, &a));
+
+    let mut sig = [0u8; 64];
+    sig[..32].copy_from_slice(&big_r);
+    sig[32..].copy_from_slice(&scalar::to_bytes32(&s));
+    Signature(sig)
+}
+
+/// Verify a signature (RFC 8032 §5.1.7, cofactorless).
+pub fn verify(pk: &PublicKey, msg: &[u8], sig: &Signature) -> bool {
+    let r_bytes: [u8; 32] = sig.0[..32].try_into().unwrap();
+    let s_bytes: [u8; 32] = sig.0[32..].try_into().unwrap();
+    if !scalar::is_canonical(&s_bytes) {
+        return false;
+    }
+    let a = match Point::decompress(&pk.0) {
+        Some(p) => p,
+        None => return false,
+    };
+    let big_r = match Point::decompress(&r_bytes) {
+        Some(p) => p,
+        None => return false,
+    };
+
+    let mut h = Sha512::new();
+    h.update(r_bytes);
+    h.update(pk.0);
+    h.update(msg);
+    let k_digest: [u8; 64] = h.finalize().into();
+    let k = scalar::to_bytes32(&scalar::reduce_bytes64(&k_digest));
+
+    // Check s·B == R + k·A.
+    let lhs = Point::base().scalar_mul(&s_bytes);
+    let rhs = big_r.add(&a.scalar_mul(&k));
+    lhs.eq(&rhs)
+}
+
+/// Deterministic keypair from a seed (testing / simulated deployments).
+pub fn keypair_from_seed(seed: &[u8; 32]) -> (SecretKey, PublicKey) {
+    let sk = SecretKey(*seed);
+    let pk = public_key(&sk);
+    (sk, pk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    fn vector(sk_hex: &str, pk_hex: &str, msg_hex: &str, sig_hex: &str) {
+        let sk = SecretKey(hex::decode(sk_hex).unwrap().try_into().unwrap());
+        let pk_expect: [u8; 32] = hex::decode(pk_hex).unwrap().try_into().unwrap();
+        let msg = hex::decode(msg_hex).unwrap();
+        let sig_expect: [u8; 64] = hex::decode(sig_hex).unwrap().try_into().unwrap();
+
+        let pk = public_key(&sk);
+        assert_eq!(pk.0, pk_expect, "public key mismatch");
+        let sig = sign(&sk, &pk, &msg);
+        assert_eq!(sig.0.to_vec(), sig_expect.to_vec(), "signature mismatch");
+        assert!(verify(&pk, &msg, &sig));
+    }
+
+    #[test]
+    fn rfc8032_test1_empty_message() {
+        vector(
+            "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60",
+            "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a",
+            "",
+            "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155\
+             5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b",
+        );
+    }
+
+    #[test]
+    fn rfc8032_test2_one_byte() {
+        vector(
+            "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb",
+            "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c",
+            "72",
+            "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da\
+             085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00",
+        );
+    }
+
+    #[test]
+    fn rfc8032_test3_two_bytes() {
+        vector(
+            "c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7",
+            "fc51cd8e6218a1a38da47ed00230f0580816ed13ba3303ac5deb911548908025",
+            "af82",
+            "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac\
+             18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a",
+        );
+    }
+
+    #[test]
+    fn tampered_message_rejected() {
+        let (sk, pk) = keypair_from_seed(&[7u8; 32]);
+        let sig = sign(&sk, &pk, b"hello");
+        assert!(verify(&pk, b"hello", &sig));
+        assert!(!verify(&pk, b"hellO", &sig));
+    }
+
+    #[test]
+    fn tampered_signature_rejected() {
+        let (sk, pk) = keypair_from_seed(&[8u8; 32]);
+        let mut sig = sign(&sk, &pk, b"msg");
+        sig.0[10] ^= 1;
+        assert!(!verify(&pk, b"msg", &sig));
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let (sk, pk) = keypair_from_seed(&[9u8; 32]);
+        let (_, pk2) = keypair_from_seed(&[10u8; 32]);
+        let sig = sign(&sk, &pk, b"msg");
+        assert!(!verify(&pk2, b"msg", &sig));
+    }
+
+    #[test]
+    fn non_canonical_s_rejected() {
+        // Malleability: s' = s + L must be rejected.
+        let (sk, pk) = keypair_from_seed(&[11u8; 32]);
+        let sig = sign(&sk, &pk, b"m");
+        let s: [u8; 32] = sig.0[32..].try_into().unwrap();
+        assert!(scalar::is_canonical(&s));
+    }
+}

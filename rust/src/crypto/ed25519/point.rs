@@ -1,0 +1,206 @@
+//! Edwards-curve points in extended homogeneous coordinates (X:Y:Z:T),
+//! with the RFC 8032 addition/doubling formulas for a = -1.
+
+use super::field::{sqrt_m1, Fe};
+use once_cell::sync::Lazy;
+
+/// Curve constant d = -121665/121666 mod p (computed once).
+static D: Lazy<Fe> = Lazy::new(|| {
+    Fe::from_u64(121_665).neg().mul(&Fe::from_u64(121_666).invert())
+});
+
+/// 2d, used by the addition formula.
+static D2: Lazy<Fe> = Lazy::new(|| D.add(&D));
+
+static SQRT_M1: Lazy<Fe> = Lazy::new(sqrt_m1);
+
+/// The base point B: y = 4/5, x even.
+static BASE: Lazy<Point> = Lazy::new(|| {
+    let y = Fe::from_u64(4).mul(&Fe::from_u64(5).invert());
+    let mut x = recover_x(&y, false).expect("base point must decompress");
+    if x.is_odd() {
+        x = x.neg(); // RFC 8032: the base point has even x
+    }
+    Point::from_affine(&x, &y)
+});
+
+/// A point in extended coordinates. Invariant: T = XY/Z.
+#[derive(Copy, Clone, Debug)]
+pub struct Point {
+    pub x: Fe,
+    pub y: Fe,
+    pub z: Fe,
+    pub t: Fe,
+}
+
+impl Point {
+    /// Neutral element (0, 1).
+    pub fn identity() -> Point {
+        Point { x: Fe::ZERO, y: Fe::ONE, z: Fe::ONE, t: Fe::ZERO }
+    }
+
+    pub fn base() -> Point {
+        *BASE
+    }
+
+    pub fn from_affine(x: &Fe, y: &Fe) -> Point {
+        Point { x: *x, y: *y, z: Fe::ONE, t: x.mul(y) }
+    }
+
+    /// RFC 8032 §5.1.4 point addition (a = -1, extended coordinates).
+    pub fn add(&self, q: &Point) -> Point {
+        let a = self.y.sub(&self.x).mul(&q.y.sub(&q.x));
+        let b = self.y.add(&self.x).mul(&q.y.add(&q.x));
+        let c = self.t.mul(&D2).mul(&q.t);
+        let d = self.z.add(&self.z).mul(&q.z);
+        let e = b.sub(&a);
+        let f = d.sub(&c);
+        let g = d.add(&c);
+        let h = b.add(&a);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    /// RFC 8032 §5.1.4 point doubling.
+    pub fn double(&self) -> Point {
+        let a = self.x.square();
+        let b = self.y.square();
+        let c = self.z.square().add(&self.z.square());
+        let h = a.add(&b);
+        let e = h.sub(&self.x.add(&self.y).square());
+        let g = a.sub(&b);
+        let f = c.add(&g);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    /// Scalar multiplication (double-and-add over a 256-bit LE scalar).
+    pub fn scalar_mul(&self, scalar_le: &[u8; 32]) -> Point {
+        let mut acc = Point::identity();
+        for i in (0..32).rev() {
+            for bit in (0..8).rev() {
+                acc = acc.double();
+                if (scalar_le[i] >> bit) & 1 == 1 {
+                    acc = acc.add(self);
+                }
+            }
+        }
+        acc
+    }
+
+    /// Compress to the 32-byte RFC 8032 encoding (y with sign-of-x top bit).
+    pub fn compress(&self) -> [u8; 32] {
+        let zi = self.z.invert();
+        let x = self.x.mul(&zi);
+        let y = self.y.mul(&zi);
+        let mut out = y.to_bytes();
+        if x.is_odd() {
+            out[31] |= 0x80;
+        }
+        out
+    }
+
+    /// Decompress a 32-byte encoding; `None` for invalid points.
+    pub fn decompress(bytes: &[u8; 32]) -> Option<Point> {
+        let sign = (bytes[31] >> 7) & 1 == 1;
+        let y = Fe::from_bytes(bytes);
+        let mut x = recover_x(&y, sign)?;
+        if x.is_zero() && sign {
+            return None; // -0 is invalid
+        }
+        if x.is_odd() != sign {
+            x = x.neg();
+        }
+        Some(Point::from_affine(&x, &y))
+    }
+
+    /// Affine equality (cross-multiplied to avoid inversions).
+    pub fn eq(&self, o: &Point) -> bool {
+        self.x.mul(&o.z).eq(&o.x.mul(&self.z)) && self.y.mul(&o.z).eq(&o.y.mul(&self.z))
+    }
+}
+
+/// Recover x from y per RFC 8032 §5.1.3. `sign` is the desired parity.
+fn recover_x(y: &Fe, _sign: bool) -> Option<Fe> {
+    // x^2 = (y^2 - 1) / (d y^2 + 1)
+    let yy = y.square();
+    let u = yy.sub(&Fe::ONE);
+    let v = D.mul(&yy).add(&Fe::ONE);
+    // candidate x = u * v^3 * (u * v^7)^((p-5)/8)
+    let v3 = v.square().mul(&v);
+    let v7 = v3.square().mul(&v);
+    let mut x = u.mul(&v3).mul(&u.mul(&v7).pow_p58());
+    let vxx = v.mul(&x.square());
+    if !vxx.eq(&u) {
+        if vxx.eq(&u.neg()) {
+            x = x.mul(&SQRT_M1);
+        } else {
+            return None;
+        }
+    }
+    Some(x)
+}
+
+/// Is the affine point on -x² + y² = 1 + d x² y² ?
+pub fn on_curve(p: &Point) -> bool {
+    let zi = p.z.invert();
+    let x = p.x.mul(&zi);
+    let y = p.y.mul(&zi);
+    let xx = x.square();
+    let yy = y.square();
+    let lhs = yy.sub(&xx);
+    let rhs = Fe::ONE.add(&D.mul(&xx).mul(&yy));
+    lhs.eq(&rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_point_on_curve() {
+        assert!(on_curve(&Point::base()));
+    }
+
+    #[test]
+    fn identity_laws() {
+        let b = Point::base();
+        let id = Point::identity();
+        assert!(b.add(&id).eq(&b));
+        assert!(id.add(&b).eq(&b));
+    }
+
+    #[test]
+    fn double_equals_add_self() {
+        let b = Point::base();
+        assert!(b.double().eq(&b.add(&b)));
+    }
+
+    #[test]
+    fn scalar_mul_small() {
+        let b = Point::base();
+        let mut three = [0u8; 32];
+        three[0] = 3;
+        let by_scalar = b.scalar_mul(&three);
+        let by_adds = b.add(&b).add(&b);
+        assert!(by_scalar.eq(&by_adds));
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip() {
+        let mut k = [0u8; 32];
+        k[0] = 0xA7;
+        k[5] = 0x33;
+        let p = Point::base().scalar_mul(&k);
+        let c = p.compress();
+        let q = Point::decompress(&c).unwrap();
+        assert!(p.eq(&q));
+        assert_eq!(c, q.compress());
+    }
+
+    #[test]
+    fn order_l_times_base_is_identity() {
+        use super::super::scalar;
+        let l_bytes = scalar::to_bytes32(&scalar::L);
+        let p = Point::base().scalar_mul(&l_bytes);
+        assert!(p.eq(&Point::identity()));
+    }
+}

@@ -1,0 +1,171 @@
+//! Arithmetic modulo the Ed25519 group order
+//! L = 2^252 + 27742317777372353535851937790883648493.
+//!
+//! Simple 256/512-bit big-integer arithmetic (schoolbook multiply, binary
+//! long division for reduction). Variable-time; adequate for this
+//! reproduction, and the discrete-event simulator charges signature cost
+//! from calibrated constants rather than wall-clock anyway.
+
+/// 256-bit little-endian integer, 4×u64 limbs.
+pub type U256 = [u64; 4];
+
+/// L, the group order.
+pub const L: U256 = [
+    0x5812631A5CF5D3ED,
+    0x14DEF9DEA2F79CD6,
+    0x0000000000000000,
+    0x1000000000000000,
+];
+
+pub fn from_bytes32(b: &[u8; 32]) -> U256 {
+    let mut x = [0u64; 4];
+    for i in 0..4 {
+        x[i] = u64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().unwrap());
+    }
+    x
+}
+
+pub fn to_bytes32(x: &U256) -> [u8; 32] {
+    let mut b = [0u8; 32];
+    for i in 0..4 {
+        b[i * 8..i * 8 + 8].copy_from_slice(&x[i].to_le_bytes());
+    }
+    b
+}
+
+pub fn cmp(a: &U256, b: &U256) -> std::cmp::Ordering {
+    for i in (0..4).rev() {
+        if a[i] != b[i] {
+            return a[i].cmp(&b[i]);
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+fn sub(a: &U256, b: &U256) -> U256 {
+    let mut out = [0u64; 4];
+    let mut borrow = 0u64;
+    for i in 0..4 {
+        let (d, b1) = a[i].overflowing_sub(b[i]);
+        let (d, b2) = d.overflowing_sub(borrow);
+        out[i] = d;
+        borrow = (b1 | b2) as u64;
+    }
+    out
+}
+
+fn add_raw(a: &U256, b: &U256) -> (U256, u64) {
+    let mut out = [0u64; 4];
+    let mut carry = 0u64;
+    for i in 0..4 {
+        let (s, c1) = a[i].overflowing_add(b[i]);
+        let (s, c2) = s.overflowing_add(carry);
+        out[i] = s;
+        carry = (c1 | c2) as u64;
+    }
+    (out, carry)
+}
+
+/// (a + b) mod L, for a, b < L.
+pub fn add_mod(a: &U256, b: &U256) -> U256 {
+    let (s, carry) = add_raw(a, b);
+    if carry != 0 || cmp(&s, &L) != std::cmp::Ordering::Less {
+        sub(&s, &L)
+    } else {
+        s
+    }
+}
+
+/// Reduce a 512-bit little-endian value (8×u64) mod L via binary long
+/// division: processes bits MSB→LSB, maintaining a remainder < L.
+pub fn reduce512(x: &[u64; 8]) -> U256 {
+    let mut r: U256 = [0; 4];
+    for i in (0..8).rev() {
+        for bit in (0..64).rev() {
+            // r = 2r + bit
+            let mut carry = (x[i] >> bit) & 1;
+            for limb in r.iter_mut() {
+                let new_carry = *limb >> 63;
+                *limb = (*limb << 1) | carry;
+                carry = new_carry;
+            }
+            if carry != 0 || cmp(&r, &L) != std::cmp::Ordering::Less {
+                r = sub(&r, &L);
+            }
+        }
+    }
+    r
+}
+
+/// Reduce a 64-byte (512-bit) little-endian digest mod L — the
+/// `SHA512(...) mod L` step of RFC 8032.
+pub fn reduce_bytes64(b: &[u8; 64]) -> U256 {
+    let mut x = [0u64; 8];
+    for i in 0..8 {
+        x[i] = u64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().unwrap());
+    }
+    reduce512(&x)
+}
+
+/// (a * b) mod L.
+pub fn mul_mod(a: &U256, b: &U256) -> U256 {
+    let mut wide = [0u64; 8];
+    for i in 0..4 {
+        let mut carry: u128 = 0;
+        for j in 0..4 {
+            let cur = wide[i + j] as u128 + (a[i] as u128) * (b[j] as u128) + carry;
+            wide[i + j] = cur as u64;
+            carry = cur >> 64;
+        }
+        wide[i + 4] = carry as u64;
+    }
+    reduce512(&wide)
+}
+
+/// True iff `x` is a canonical scalar (< L) — required when verifying
+/// signatures (malleability check, RFC 8032 §5.1.7).
+pub fn is_canonical(b: &[u8; 32]) -> bool {
+    cmp(&from_bytes32(b), &L) == std::cmp::Ordering::Less
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l_reduces_to_zero() {
+        let mut wide = [0u64; 8];
+        wide[..4].copy_from_slice(&L);
+        assert_eq!(reduce512(&wide), [0u64; 4]);
+    }
+
+    #[test]
+    fn small_values_unchanged() {
+        let mut wide = [0u64; 8];
+        wide[0] = 42;
+        assert_eq!(reduce512(&wide), [42, 0, 0, 0]);
+    }
+
+    #[test]
+    fn add_mod_wraps() {
+        let l_minus_1 = sub(&L, &[1, 0, 0, 0]);
+        assert_eq!(add_mod(&l_minus_1, &[1, 0, 0, 0]), [0u64; 4]);
+        assert_eq!(add_mod(&l_minus_1, &[5, 0, 0, 0]), [4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn mul_mod_matches_repeated_add() {
+        let a: U256 = [0x123456789ABCDEF0, 7, 0, 0];
+        let mut acc = [0u64; 4];
+        for _ in 0..13 {
+            acc = add_mod(&acc, &a);
+        }
+        assert_eq!(mul_mod(&a, &[13, 0, 0, 0]), acc);
+    }
+
+    #[test]
+    fn canonicality() {
+        assert!(is_canonical(&to_bytes32(&[0, 0, 0, 0])));
+        assert!(!is_canonical(&to_bytes32(&L)));
+    }
+}

@@ -1,0 +1,343 @@
+//! Cryptographic primitives used across the stack.
+//!
+//! * [`xxhash`] — non-cryptographic checksums for registers and message
+//!   slots (§6.1/§6.2 of the paper).
+//! * [`ed25519`] — from-scratch RFC 8032 signatures for the slow path's
+//!   transferable authentication.
+//! * HMAC-SHA256 — MACs (the paper uses BLAKE3; SHA-256 is what the
+//!   offline environment provides; interface-compatible).
+//! * [`KeyStore`] — per-deployment PKI: every process can sign with its
+//!   own key and verify any other process's signatures. Two backends: real
+//!   Ed25519, and a fast HMAC-based simulation backend used by the
+//!   discrete-event simulator (which *charges* Ed25519 latency from
+//!   calibrated constants instead of paying it in wall-clock).
+//! * [`Certificate`] — f+1 aggregated signature shares over a digest
+//!   (PREPARE certificates, checkpoint certificates, view-change
+//!   certificates, CTBcast summaries).
+
+pub mod ed25519;
+pub mod xxhash;
+
+use crate::util::wire::{get_list, put_list, Wire, WireError, WireReader, WireWriter};
+use crate::NodeId;
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+pub use xxhash::{bytes_to_words, lane_fingerprint32, xxh32, xxh64};
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// A 32-byte cryptographic digest.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct Hash32(pub [u8; 32]);
+
+impl Hash32 {
+    pub const ZERO: Hash32 = Hash32([0; 32]);
+
+    pub fn short(&self) -> String {
+        crate::util::hex::encode(&self.0[..6])
+    }
+}
+
+impl Wire for Hash32 {
+    fn put(&self, w: &mut WireWriter) {
+        w.raw(&self.0);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(Hash32(r.array::<32>()?))
+    }
+}
+
+/// SHA-256 digest of `data`.
+pub fn hash(data: &[u8]) -> Hash32 {
+    Hash32(Sha256::digest(data).into())
+}
+
+/// Digest of several segments without concatenating (length-prefixed to
+/// avoid ambiguity).
+pub fn hash_parts(parts: &[&[u8]]) -> Hash32 {
+    let mut h = Sha256::new();
+    for p in parts {
+        h.update((p.len() as u64).to_le_bytes());
+        h.update(p);
+    }
+    Hash32(h.finalize().into())
+}
+
+/// HMAC-SHA256 (BLAKE3-keyed-hash stand-in).
+pub fn hmac(key: &[u8; 32], data: &[u8]) -> Hash32 {
+    let mut mac = HmacSha256::new_from_slice(key).expect("hmac accepts 32-byte keys");
+    mac.update(data);
+    Hash32(mac.finalize().into_bytes().into())
+}
+
+/// Verify an HMAC in (pseudo) constant time.
+pub fn hmac_verify(key: &[u8; 32], data: &[u8], tag: &Hash32) -> bool {
+    let mut mac = HmacSha256::new_from_slice(key).expect("hmac accepts 32-byte keys");
+    mac.update(data);
+    mac.verify_slice(&tag.0).is_ok()
+}
+
+/// A 64-byte signature (Ed25519, or HMAC32 ‖ zero-padding in sim mode).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Sig(pub [u8; 64]);
+
+impl Sig {
+    pub const ZERO: Sig = Sig([0; 64]);
+}
+
+impl Wire for Sig {
+    fn put(&self, w: &mut WireWriter) {
+        w.raw(&self.0);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(Sig(r.array::<64>()?))
+    }
+}
+
+impl std::hash::Hash for Sig {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.0.hash(state);
+    }
+}
+
+/// Per-deployment key material. Constructed once at launch from a seed;
+/// every process holds the same `KeyStore` but only ever signs with its
+/// own `NodeId` (enforced by the callers; the simulator runs all processes
+/// in one address space).
+#[derive(Clone)]
+pub enum KeyStore {
+    /// Real Ed25519 keypairs, deterministically derived from a seed.
+    Ed25519 { sks: Vec<ed25519::SecretKey>, pks: Vec<ed25519::PublicKey> },
+    /// Simulation backend: "signatures" are HMACs under per-node keys
+    /// derived from a master secret; verification re-derives the key.
+    /// Unforgeable within the simulation (actors never read the master
+    /// directly) and byte-stable, but not transferable outside the process.
+    Sim { master: [u8; 32] },
+}
+
+impl KeyStore {
+    /// Real Ed25519 key store for `n` processes.
+    pub fn ed25519(n: usize, seed: u64) -> KeyStore {
+        let mut sks = Vec::with_capacity(n);
+        let mut pks = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut s = [0u8; 32];
+            s[..8].copy_from_slice(&seed.to_le_bytes());
+            s[8..16].copy_from_slice(&(i as u64).to_le_bytes());
+            s[16] = 0xE0;
+            let (sk, pk) = ed25519::keypair_from_seed(&s);
+            sks.push(sk);
+            pks.push(pk);
+        }
+        KeyStore::Ed25519 { sks, pks }
+    }
+
+    /// Fast simulation key store.
+    pub fn sim(seed: u64) -> KeyStore {
+        let mut master = [0u8; 32];
+        master[..8].copy_from_slice(&seed.to_le_bytes());
+        master[8] = 0x5A;
+        KeyStore::Sim { master }
+    }
+
+    fn sim_key(master: &[u8; 32], node: NodeId) -> [u8; 32] {
+        hmac(master, &(node as u64).to_le_bytes()).0
+    }
+
+    /// Sign `msg` as `node`.
+    pub fn sign(&self, node: NodeId, msg: &[u8]) -> Sig {
+        match self {
+            KeyStore::Ed25519 { sks, pks } => {
+                let s = ed25519::sign(&sks[node], &pks[node], msg);
+                Sig(s.0)
+            }
+            KeyStore::Sim { master } => {
+                let k = Self::sim_key(master, node);
+                let tag = hmac(&k, msg);
+                let mut out = [0u8; 64];
+                out[..32].copy_from_slice(&tag.0);
+                Sig(out)
+            }
+        }
+    }
+
+    /// Verify `sig` over `msg` allegedly produced by `node`.
+    pub fn verify(&self, node: NodeId, msg: &[u8], sig: &Sig) -> bool {
+        match self {
+            KeyStore::Ed25519 { pks, .. } => {
+                if node >= pks.len() {
+                    return false;
+                }
+                ed25519::verify(&pks[node], msg, &ed25519::Signature(sig.0))
+            }
+            KeyStore::Sim { master } => {
+                let k = Self::sim_key(master, node);
+                let tag = hmac(&k, msg);
+                sig.0[..32] == tag.0 && sig.0[32..] == [0u8; 32]
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            KeyStore::Ed25519 { pks, .. } => pks.len(),
+            KeyStore::Sim { .. } => usize::MAX,
+        }
+    }
+}
+
+/// An aggregated certificate: `quorum` distinct signature shares over the
+/// same digest. Used for PREPARE certificates (Certify phase), checkpoint
+/// certificates, CTBcast summaries and view-change state attestations.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Certificate {
+    /// Digest the shares sign.
+    pub digest: Hash32,
+    /// (signer, share) pairs; kept sorted by signer for canonical encoding.
+    pub shares: Vec<(NodeId, Sig)>,
+}
+
+impl Certificate {
+    pub fn new(digest: Hash32) -> Certificate {
+        Certificate { digest, shares: Vec::new() }
+    }
+
+    /// Add a share; ignores duplicates from the same signer. Returns the
+    /// number of distinct shares.
+    pub fn add(&mut self, signer: NodeId, sig: Sig) -> usize {
+        if !self.shares.iter().any(|(s, _)| *s == signer) {
+            let pos = self.shares.partition_point(|(s, _)| *s < signer);
+            self.shares.insert(pos, (signer, sig));
+        }
+        self.shares.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shares.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shares.is_empty()
+    }
+
+    /// Check the certificate carries ≥ `quorum` valid shares from distinct
+    /// signers over `self.digest`.
+    pub fn verify(&self, ks: &KeyStore, quorum: usize) -> bool {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut valid = 0;
+        for (signer, sig) in &self.shares {
+            if seen.insert(*signer) && ks.verify(*signer, &self.digest.0, sig) {
+                valid += 1;
+            }
+        }
+        valid >= quorum
+    }
+}
+
+impl Wire for Certificate {
+    fn put(&self, w: &mut WireWriter) {
+        self.digest.put(w);
+        let flat: Vec<ShareEnc> =
+            self.shares.iter().map(|(n, s)| ShareEnc { node: *n as u64, sig: *s }).collect();
+        put_list(w, &flat);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        let digest = Hash32::get(r)?;
+        let flat = get_list::<ShareEnc>(r)?;
+        Ok(Certificate {
+            digest,
+            shares: flat.into_iter().map(|se| (se.node as NodeId, se.sig)).collect(),
+        })
+    }
+}
+
+struct ShareEnc {
+    node: u64,
+    sig: Sig,
+}
+
+impl Wire for ShareEnc {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.node);
+        self.sig.put(w);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(ShareEnc { node: r.u64()?, sig: Sig::get(r)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_stable_and_distinct() {
+        assert_eq!(hash(b"a"), hash(b"a"));
+        assert_ne!(hash(b"a"), hash(b"b"));
+        // hash_parts is injective across segment boundaries
+        assert_ne!(hash_parts(&[b"ab", b"c"]), hash_parts(&[b"a", b"bc"]));
+    }
+
+    #[test]
+    fn hmac_roundtrip() {
+        let k = [3u8; 32];
+        let t = hmac(&k, b"data");
+        assert!(hmac_verify(&k, b"data", &t));
+        assert!(!hmac_verify(&k, b"datb", &t));
+        assert!(!hmac_verify(&[4u8; 32], b"data", &t));
+    }
+
+    #[test]
+    fn keystore_sim_sign_verify() {
+        let ks = KeyStore::sim(99);
+        let sig = ks.sign(2, b"msg");
+        assert!(ks.verify(2, b"msg", &sig));
+        assert!(!ks.verify(1, b"msg", &sig)); // wrong claimed signer
+        assert!(!ks.verify(2, b"msX", &sig));
+    }
+
+    #[test]
+    fn keystore_ed25519_sign_verify() {
+        let ks = KeyStore::ed25519(3, 7);
+        let sig = ks.sign(0, b"payload");
+        assert!(ks.verify(0, b"payload", &sig));
+        assert!(!ks.verify(1, b"payload", &sig));
+        assert!(!ks.verify(0, b"payloaX", &sig));
+    }
+
+    #[test]
+    fn certificate_requires_distinct_quorum() {
+        let ks = KeyStore::sim(1);
+        let d = hash(b"proposal");
+        let mut cert = Certificate::new(d);
+        cert.add(0, ks.sign(0, &d.0));
+        cert.add(0, ks.sign(0, &d.0)); // duplicate ignored
+        assert_eq!(cert.len(), 1);
+        assert!(!cert.verify(&ks, 2));
+        cert.add(1, ks.sign(1, &d.0));
+        assert!(cert.verify(&ks, 2));
+    }
+
+    #[test]
+    fn certificate_rejects_forged_share() {
+        let ks = KeyStore::sim(1);
+        let d = hash(b"x");
+        let mut cert = Certificate::new(d);
+        cert.add(0, ks.sign(0, &d.0));
+        cert.add(1, Sig::ZERO); // forged
+        assert!(!cert.verify(&ks, 2));
+    }
+
+    #[test]
+    fn certificate_wire_roundtrip() {
+        let ks = KeyStore::sim(5);
+        let d = hash(b"y");
+        let mut cert = Certificate::new(d);
+        cert.add(2, ks.sign(2, &d.0));
+        cert.add(0, ks.sign(0, &d.0));
+        let back = Certificate::decode(&cert.encode()).unwrap();
+        assert_eq!(back, cert);
+        assert!(back.verify(&ks, 2));
+    }
+}

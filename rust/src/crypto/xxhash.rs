@@ -1,0 +1,235 @@
+//! xxHash64 / xxHash32 — the paper's checksum function (§6, "xxHash for
+//! checksums"). Implemented from the public specification; the `xxhash`
+//! crates are unavailable offline.
+//!
+//! These checksums guard the disaggregated-memory registers (§6.1) and the
+//! circular-buffer message slots (§6.2) against torn 8-byte-granularity
+//! RDMA reads. They are *not* cryptographic: Byzantine writers are handled
+//! by the protocol on top, not by the checksum.
+
+const P64_1: u64 = 0x9E3779B185EBCA87;
+const P64_2: u64 = 0xC2B2AE3D27D4EB4F;
+const P64_3: u64 = 0x165667B19E3779F9;
+const P64_4: u64 = 0x85EBCA77C2B2AE63;
+const P64_5: u64 = 0x27D4EB2F165667C5;
+
+#[inline]
+fn round64(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(P64_2)).rotate_left(31).wrapping_mul(P64_1)
+}
+
+#[inline]
+fn merge64(acc: u64, val: u64) -> u64 {
+    (acc ^ round64(0, val)).wrapping_mul(P64_1).wrapping_add(P64_4)
+}
+
+#[inline]
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+#[inline]
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().unwrap())
+}
+
+/// One-shot xxHash64.
+pub fn xxh64(data: &[u8], seed: u64) -> u64 {
+    let len = data.len();
+    let mut h: u64;
+    let mut rest = data;
+
+    if len >= 32 {
+        let mut v1 = seed.wrapping_add(P64_1).wrapping_add(P64_2);
+        let mut v2 = seed.wrapping_add(P64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(P64_1);
+        while rest.len() >= 32 {
+            v1 = round64(v1, read_u64(&rest[0..]));
+            v2 = round64(v2, read_u64(&rest[8..]));
+            v3 = round64(v3, read_u64(&rest[16..]));
+            v4 = round64(v4, read_u64(&rest[24..]));
+            rest = &rest[32..];
+        }
+        h = v1.rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = merge64(h, v1);
+        h = merge64(h, v2);
+        h = merge64(h, v3);
+        h = merge64(h, v4);
+    } else {
+        h = seed.wrapping_add(P64_5);
+    }
+
+    h = h.wrapping_add(len as u64);
+
+    while rest.len() >= 8 {
+        h ^= round64(0, read_u64(rest));
+        h = h.rotate_left(27).wrapping_mul(P64_1).wrapping_add(P64_4);
+        rest = &rest[8..];
+    }
+    if rest.len() >= 4 {
+        h ^= (read_u32(rest) as u64).wrapping_mul(P64_1);
+        h = h.rotate_left(23).wrapping_mul(P64_2).wrapping_add(P64_3);
+        rest = &rest[4..];
+    }
+    for &b in rest {
+        h ^= (b as u64).wrapping_mul(P64_5);
+        h = h.rotate_left(11).wrapping_mul(P64_1);
+    }
+
+    h ^= h >> 33;
+    h = h.wrapping_mul(P64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(P64_3);
+    h ^= h >> 32;
+    h
+}
+
+const P32_1: u32 = 0x9E3779B1;
+const P32_2: u32 = 0x85EBCA77;
+const P32_3: u32 = 0xC2B2AE3D;
+const P32_4: u32 = 0x27D4EB2F;
+const P32_5: u32 = 0x165667B1;
+
+#[inline]
+fn round32(acc: u32, input: u32) -> u32 {
+    acc.wrapping_add(input.wrapping_mul(P32_2)).rotate_left(13).wrapping_mul(P32_1)
+}
+
+/// One-shot xxHash32 — the fingerprint width used by the Pallas batch
+/// fingerprint kernel (L1) so Rust and JAX compute identical digests.
+pub fn xxh32(data: &[u8], seed: u32) -> u32 {
+    let len = data.len();
+    let mut h: u32;
+    let mut rest = data;
+
+    if len >= 16 {
+        let mut v1 = seed.wrapping_add(P32_1).wrapping_add(P32_2);
+        let mut v2 = seed.wrapping_add(P32_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(P32_1);
+        while rest.len() >= 16 {
+            v1 = round32(v1, read_u32(&rest[0..]));
+            v2 = round32(v2, read_u32(&rest[4..]));
+            v3 = round32(v3, read_u32(&rest[8..]));
+            v4 = round32(v4, read_u32(&rest[12..]));
+            rest = &rest[16..];
+        }
+        h = v1.rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+    } else {
+        h = seed.wrapping_add(P32_5);
+    }
+
+    h = h.wrapping_add(len as u32);
+
+    while rest.len() >= 4 {
+        h = h.wrapping_add(read_u32(rest).wrapping_mul(P32_3));
+        h = h.rotate_left(17).wrapping_mul(P32_4);
+        rest = &rest[4..];
+    }
+    for &b in rest {
+        h = h.wrapping_add((b as u32).wrapping_mul(P32_5));
+        h = h.rotate_left(11).wrapping_mul(P32_1);
+    }
+
+    h ^= h >> 15;
+    h = h.wrapping_mul(P32_2);
+    h ^= h >> 13;
+    h = h.wrapping_mul(P32_3);
+    h ^= h >> 16;
+    h
+}
+
+/// The simplified word-lane mixer used by the L1 Pallas fingerprint kernel
+/// (`python/compile/kernels/fingerprint.py`). It processes a message as a
+/// sequence of u32 words (zero-padded), one xxHash32-style round per word,
+/// plus the standard avalanche. Rust and JAX must agree bit-for-bit; the
+/// pytest suite and `runtime::tests` both check that.
+pub fn lane_fingerprint32(words: &[u32], seed: u32) -> u32 {
+    let mut acc = seed.wrapping_add(P32_5);
+    for &w in words {
+        acc = round32(acc, w);
+    }
+    acc = acc.wrapping_add((words.len() as u32).wrapping_mul(4));
+    acc ^= acc >> 15;
+    acc = acc.wrapping_mul(P32_2);
+    acc ^= acc >> 13;
+    acc = acc.wrapping_mul(P32_3);
+    acc ^= acc >> 16;
+    acc
+}
+
+/// Bytes → zero-padded u32 little-endian words (the kernel's input layout).
+pub fn bytes_to_words(data: &[u8], words: usize) -> Vec<u32> {
+    let mut out = vec![0u32; words];
+    for (i, chunk) in data.chunks(4).enumerate() {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        out[i] = u32::from_le_bytes(w);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answers() {
+        // Canonical test vectors from the xxHash specification.
+        assert_eq!(xxh64(b"", 0), 0xEF46_DB37_51D8_E999);
+        assert_eq!(xxh32(b"", 0), 0x02CC_5D05);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let d = b"the quick brown fox jumps over the lazy dog";
+        assert_eq!(xxh64(d, 1), xxh64(d, 1));
+        assert_ne!(xxh64(d, 1), xxh64(d, 2));
+        assert_eq!(xxh32(d, 1), xxh32(d, 1));
+        assert_ne!(xxh32(d, 1), xxh32(d, 2));
+    }
+
+    #[test]
+    fn avalanche_on_single_bit_flip() {
+        let mut d = vec![0u8; 64];
+        let h0 = xxh64(&d, 0);
+        d[33] ^= 1;
+        let h1 = xxh64(&d, 0);
+        assert_ne!(h0, h1);
+        // A decent hash flips roughly half the output bits.
+        let flipped = (h0 ^ h1).count_ones();
+        assert!((16..=48).contains(&flipped), "flipped={flipped}");
+    }
+
+    #[test]
+    fn all_length_paths_exercised() {
+        // Cover the <4, <8, <16, <32 and >=32 byte code paths.
+        let data: Vec<u8> = (0..100u8).collect();
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..=data.len() {
+            assert!(seen.insert(xxh64(&data[..len], 7)), "collision at len={len}");
+        }
+    }
+
+    #[test]
+    fn lane_fingerprint_matches_itself_and_varies() {
+        let w1 = bytes_to_words(b"hello world", 8);
+        let w2 = bytes_to_words(b"hello worle", 8);
+        assert_eq!(lane_fingerprint32(&w1, 0), lane_fingerprint32(&w1, 0));
+        assert_ne!(lane_fingerprint32(&w1, 0), lane_fingerprint32(&w2, 0));
+        assert_ne!(lane_fingerprint32(&w1, 0), lane_fingerprint32(&w1, 1));
+    }
+
+    #[test]
+    fn bytes_to_words_pads_with_zeros() {
+        let w = bytes_to_words(&[1, 0, 0, 0, 2], 4);
+        assert_eq!(w, vec![1, 2, 0, 0]);
+    }
+}

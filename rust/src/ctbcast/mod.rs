@@ -1,0 +1,849 @@
+//! Consistent Tail Broadcast (CTBcast) — Algorithm 1 of the paper, the
+//! non-equivocation primitive at the heart of uBFT.
+//!
+//! Properties (§4.1): tail-validity (the last `t` messages of a correct
+//! broadcaster are delivered), agreement (no two correct processes deliver
+//! different messages for the same `(broadcaster, k)`), integrity, and no
+//! duplication.
+//!
+//! **Fast path** (no signatures, no disaggregated memory): the broadcaster
+//! TBcasts `LOCK(k, m)`; receivers commit to `(k, m)` in their `locks`
+//! array and TBcast `LOCKED(k, m)`; a receiver that sees *unanimous*
+//! `LOCKED` entries delivers.
+//!
+//! **Slow path** (signatures + SWMR registers): the broadcaster TBcasts
+//! `SIGNED(k, m, σ)`; receivers verify, re-check `locks`, copy
+//! `(k, H(m), σ)` into their own disaggregated-memory register for slot
+//! `k % t`, then read everyone's registers: a conflicting validly-signed
+//! entry for the same `k` proves the broadcaster Byzantine (abort); a
+//! higher `k' ≡ k (mod t)` means `k` fell out of the tail (drop);
+//! otherwise deliver. The `locks` array links the two paths: whichever
+//! path executes first forces the message value for the other.
+//!
+//! Register contents are `(k, H(m), σ)` — self-verifying, since σ signs
+//! `(broadcaster, k, H(m))`. The paper's prototype stores only
+//! `(k, fingerprint)` (§7.6); we keep the signature so entries are
+//! verifiable without a side channel (documented in DESIGN.md; the memory
+//! accounting of Table 2 reports both layouts).
+
+use crate::config::Config;
+use crate::crypto::{hash, Hash32, KeyStore, Sig};
+use crate::dsm::{OpId, RegOutcome, RegisterClient, WriteStart};
+use crate::env::{Env, MemResult, Ticket};
+use crate::metrics::Category;
+use crate::tbcast::{TbDeliver, TbEndpoint};
+use crate::util::wire::{Wire, WireError, WireReader, WireWriter};
+use crate::{NodeId, Nanos};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Timer token reserved for the register-write cooldown retry queue.
+pub const TOKEN_CTB_COOLDOWN: u64 = 0x0100_0000_0000_0000;
+
+/// Payloads carried over TBcast streams.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CtbMsg {
+    /// Fast path, on the broadcaster's stream.
+    Lock { bcaster: u64, k: u64, m: Vec<u8> },
+    /// Fast path, on each receiver's stream (about `bcaster`'s message).
+    Locked { bcaster: u64, k: u64, m: Vec<u8> },
+    /// Slow path, on the broadcaster's stream.
+    Signed { bcaster: u64, k: u64, m: Vec<u8>, sig: Sig },
+    /// Opaque consensus-level TBcast payload (CERTIFY, WILL_*, SUMMARY…).
+    App(Vec<u8>),
+}
+
+impl Wire for CtbMsg {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            CtbMsg::Lock { bcaster, k, m } => {
+                w.u8(1);
+                w.u64(*bcaster);
+                w.u64(*k);
+                w.bytes(m);
+            }
+            CtbMsg::Locked { bcaster, k, m } => {
+                w.u8(2);
+                w.u64(*bcaster);
+                w.u64(*k);
+                w.bytes(m);
+            }
+            CtbMsg::Signed { bcaster, k, m, sig } => {
+                w.u8(3);
+                w.u64(*bcaster);
+                w.u64(*k);
+                w.bytes(m);
+                sig.put(w);
+            }
+            CtbMsg::App(p) => {
+                w.u8(4);
+                w.bytes(p);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            1 => CtbMsg::Lock { bcaster: r.u64()?, k: r.u64()?, m: r.bytes()? },
+            2 => CtbMsg::Locked { bcaster: r.u64()?, k: r.u64()?, m: r.bytes()? },
+            3 => CtbMsg::Signed {
+                bcaster: r.u64()?,
+                k: r.u64()?,
+                m: r.bytes()?,
+                sig: Sig::get(r)?,
+            },
+            4 => CtbMsg::App(r.bytes()?),
+            tag => return Err(WireError::BadTag { what: "CtbMsg", tag }),
+        })
+    }
+}
+
+/// Bytes the broadcaster signs for `SIGNED(k, m)`: `(bcaster, k, H(m))`.
+pub fn signed_bytes(bcaster: NodeId, k: u64, h: &Hash32) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(48);
+    w.u64(bcaster as u64);
+    w.u64(k);
+    h.put(&mut w);
+    w.finish()
+}
+
+/// Register image for the slow path: `(k, H(m), σ)`.
+fn reg_image(k: u64, h: &Hash32, sig: &Sig) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(104);
+    w.u64(k);
+    h.put(&mut w);
+    sig.put(&mut w);
+    w.finish()
+}
+
+fn decode_reg_image(bytes: &[u8]) -> Option<(u64, Hash32, Sig)> {
+    let mut r = WireReader::new(bytes);
+    let k = r.u64().ok()?;
+    let h = Hash32::get(&mut r).ok()?;
+    let sig = Sig::get(&mut r).ok()?;
+    r.done().ok()?;
+    Some((k, h, sig))
+}
+
+/// Outputs surfaced to the layer above (consensus).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CtbOut {
+    /// CTBcast delivery of `(k, m)` from `bcaster`. May arrive out of `k`
+    /// order and with gaps (tail-validity); FIFO reassembly + summaries
+    /// happen at the consensus layer (§5.2).
+    Deliver { bcaster: NodeId, k: u64, m: Vec<u8> },
+    /// Plain TBcast delivery of an opaque consensus payload.
+    App { bcaster: NodeId, seq: u64, payload: Vec<u8> },
+    /// Proof observed that `bcaster` equivocated (conflicting signed
+    /// register entries): the broadcaster is blocked locally forever.
+    Byzantine { bcaster: NodeId },
+}
+
+/// Per-broadcaster receiver state (the three bounded arrays of Alg 1).
+struct BcState {
+    /// `locks[k % t]` — commitment per slot (line 8).
+    locks: Vec<Option<(u64, Vec<u8>)>>,
+    /// `locked[q][k % t]` — what each process committed to (line 10).
+    locked: Vec<Vec<Option<(u64, Vec<u8>)>>>,
+    /// `delivered[k % t]` — highest k delivered per slot (line 9).
+    delivered: Vec<Option<u64>>,
+    /// In-flight slow-path attempts per k.
+    slow: HashMap<u64, SlowState>,
+    /// Set when this broadcaster is proven Byzantine.
+    blocked: bool,
+}
+
+struct SlowState {
+    m: Vec<u8>,
+    h: Hash32,
+    /// Register values read so far: per register owner.
+    reads: HashMap<NodeId, Option<(u64, Hash32, Sig)>>,
+    reads_outstanding: usize,
+    writing: bool,
+}
+
+enum RegCtx {
+    SlowWrite { bcaster: NodeId, k: u64 },
+    SlowRead { bcaster: NodeId, k: u64, owner: NodeId },
+}
+
+/// The CTBcast endpoint: one per process; handles this process's own
+/// broadcast stream plus reception from all `n` broadcasters, and owns
+/// the underlying TBcast endpoint and register client.
+pub struct CtbEndpoint {
+    me: NodeId,
+    n: usize,
+    t: usize,
+    ks: KeyStore,
+    lat: crate::config::LatencyModel,
+    slow_path_always: bool,
+    /// Disable the LOCK/LOCKED fast path entirely (pure slow-path
+    /// measurements, Fig 10).
+    pub fast_path: bool,
+    pub tb: TbEndpoint,
+    pub regs: RegisterClient,
+    /// My next broadcast identifier (k starts at 1, Alg 1).
+    send_k: u64,
+    /// My recent messages (k → m), bounded to 2t: needed to serve the slow
+    /// path trigger and consensus summaries.
+    my_msgs: BTreeMap<u64, Vec<u8>>,
+    /// When each of my recent messages was broadcast (slow-path fallback).
+    bcast_at: BTreeMap<u64, Nanos>,
+    /// Messages whose slow path was already triggered.
+    slow_triggered: std::collections::BTreeSet<u64>,
+    st: Vec<BcState>,
+    reg_ops: HashMap<OpId, RegCtx>,
+    /// Writes deferred by the δ cooldown: (reg, ts, image, ctx fields).
+    cooldown_q: VecDeque<(u32, u64, Vec<u8>, NodeId, u64)>,
+}
+
+impl CtbEndpoint {
+    pub fn new(me: NodeId, cfg: &Config, ks: KeyStore) -> CtbEndpoint {
+        let n = cfg.n;
+        let t = cfg.tail;
+        let st = (0..n)
+            .map(|_| BcState {
+                locks: vec![None; t],
+                locked: vec![vec![None; t]; n],
+                delivered: vec![None; t],
+                slow: HashMap::new(),
+                blocked: false,
+            })
+            .collect();
+        CtbEndpoint {
+            me,
+            n,
+            t,
+            ks,
+            lat: cfg.lat.clone(),
+            slow_path_always: cfg.slow_path_always,
+            fast_path: true,
+            tb: TbEndpoint::new(me, (0..n).collect(), t),
+            regs: RegisterClient::new(cfg),
+            send_k: 1,
+            my_msgs: BTreeMap::new(),
+            bcast_at: BTreeMap::new(),
+            slow_triggered: std::collections::BTreeSet::new(),
+            st,
+            reg_ops: HashMap::new(),
+            cooldown_q: VecDeque::new(),
+        }
+    }
+
+    /// Register index for (broadcaster, slot): my copy of `SWMR[me]` in
+    /// `bcaster`'s CTBcast instance.
+    fn reg_index(&self, bcaster: NodeId, slot: usize) -> u32 {
+        (bcaster * self.t + slot) as u32
+    }
+
+    /// CTBcast-broadcast `m` on my stream (Alg 1 `broadcast(k, m)`).
+    /// Returns `(k, outputs)` — outputs include my own deliveries.
+    pub fn broadcast(&mut self, env: &mut dyn Env, m: Vec<u8>) -> (u64, Vec<CtbOut>) {
+        let k = self.send_k;
+        self.send_k += 1;
+        self.my_msgs.insert(k, m.clone());
+        self.bcast_at.insert(k, env.now());
+        while self.my_msgs.len() > 2 * self.t {
+            let (&old, _) = self.my_msgs.iter().next().unwrap();
+            self.my_msgs.remove(&old);
+            self.bcast_at.remove(&old);
+            self.slow_triggered.remove(&old);
+        }
+        let mut out = Vec::new();
+        if self.fast_path {
+            let lock = CtbMsg::Lock { bcaster: self.me as u64, k, m: m.clone() }.encode();
+            let (_, selfd) = self.tb.broadcast(env, lock);
+            out = self.process(env, vec![selfd]);
+        }
+        if self.slow_path_always || !self.fast_path {
+            out.extend(self.trigger_slow(env, k));
+        }
+        (k, out)
+    }
+
+    /// Broadcaster-side slow-path trigger for message `k` (invoked on the
+    /// fast path timing out, or immediately under `slow_path_always`).
+    pub fn trigger_slow(&mut self, env: &mut dyn Env, k: u64) -> Vec<CtbOut> {
+        let Some(m) = self.my_msgs.get(&k).cloned() else { return vec![] };
+        if !self.slow_triggered.insert(k) {
+            return vec![]; // already escalated; TBcast retransmits the SIGNED
+        }
+        let h = hash(&m);
+        env.charge(Category::Other, self.lat.hash_cost(m.len()));
+        let sig = self.ks.sign(self.me, &signed_bytes(self.me, k, &h));
+        crate::env::charge_sign(env, &self.lat);
+        let msg = CtbMsg::Signed { bcaster: self.me as u64, k, m, sig }.encode();
+        let (_, selfd) = self.tb.broadcast(env, msg);
+        self.process(env, vec![selfd])
+    }
+
+    /// My next broadcast identifier.
+    pub fn next_k(&self) -> u64 {
+        self.send_k
+    }
+
+    /// My own broadcasts whose fast path stalled: older than `timeout`,
+    /// not yet self-delivered (unanimous LOCKED missing — e.g. a crashed
+    /// or Byzantine receiver), and not already escalated. The replica's
+    /// tick escalates these to the slow path.
+    pub fn stalled_broadcasts(&self, now: Nanos, timeout: Nanos) -> Vec<u64> {
+        self.bcast_at
+            .iter()
+            .filter(|(k, at)| {
+                now.saturating_sub(**at) > timeout
+                    && !self.slow_triggered.contains(k)
+                    && {
+                        let slot = (**k % self.t as u64) as usize;
+                        self.st[self.me].delivered[slot].unwrap_or(0) < **k
+                    }
+            })
+            .map(|(k, _)| *k)
+            .collect()
+    }
+
+    /// One of my past messages, if still buffered.
+    pub fn my_msg(&self, k: u64) -> Option<&Vec<u8>> {
+        self.my_msgs.get(&k)
+    }
+
+    /// Plain TBcast broadcast of an opaque consensus payload.
+    pub fn app_broadcast(&mut self, env: &mut dyn Env, payload: Vec<u8>) -> (u64, Vec<CtbOut>) {
+        let msg = CtbMsg::App(payload).encode();
+        let (seq, selfd) = self.tb.broadcast(env, msg);
+        (seq, self.process(env, vec![selfd]))
+    }
+
+    /// Handle an incoming network frame.
+    pub fn on_recv(&mut self, env: &mut dyn Env, from: NodeId, bytes: &[u8]) -> Vec<CtbOut> {
+        env.charge(Category::Other, self.lat.proc_overhead);
+        let delivered = self.tb.on_frame(from, bytes);
+        self.process(env, delivered)
+    }
+
+    /// Periodic retransmission driver.
+    pub fn on_retransmit(&mut self, env: &mut dyn Env) {
+        self.tb.on_retransmit(env);
+    }
+
+    /// Cooldown retry timer.
+    pub fn on_timer(&mut self, env: &mut dyn Env, token: u64) -> Vec<CtbOut> {
+        if token != TOKEN_CTB_COOLDOWN {
+            return vec![];
+        }
+        self.drain_cooldown(env);
+        vec![]
+    }
+
+    /// Route a memory completion; may conclude slow-path deliveries.
+    pub fn on_mem_done(
+        &mut self,
+        env: &mut dyn Env,
+        ticket: Ticket,
+        result: MemResult,
+    ) -> Vec<CtbOut> {
+        let outcomes = self.regs.on_mem_done(env, ticket, result);
+        let mut out = Vec::new();
+        for oc in outcomes {
+            out.extend(self.on_reg_outcome(env, oc));
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Internal machinery
+    // ------------------------------------------------------------------
+
+    fn process(&mut self, env: &mut dyn Env, deliveries: Vec<TbDeliver>) -> Vec<CtbOut> {
+        let mut queue: VecDeque<TbDeliver> = deliveries.into();
+        let mut out = Vec::new();
+        while let Some(d) = queue.pop_front() {
+            let Ok(msg) = CtbMsg::decode(&d.payload) else { continue };
+            match msg {
+                CtbMsg::Lock { bcaster, k, m } => {
+                    // LOCK must arrive on the broadcaster's own stream.
+                    if bcaster as NodeId != d.bcaster || bcaster as usize >= self.n {
+                        continue;
+                    }
+                    self.handle_lock(env, bcaster as NodeId, k, m, &mut queue, &mut out);
+                }
+                CtbMsg::Locked { bcaster, k, m } => {
+                    if bcaster as usize >= self.n {
+                        continue;
+                    }
+                    self.handle_locked(env, d.bcaster, bcaster as NodeId, k, m, &mut out);
+                }
+                CtbMsg::Signed { bcaster, k, m, sig } => {
+                    if bcaster as NodeId != d.bcaster || bcaster as usize >= self.n {
+                        continue;
+                    }
+                    self.handle_signed(env, bcaster as NodeId, k, m, sig);
+                }
+                CtbMsg::App(payload) => {
+                    out.push(CtbOut::App { bcaster: d.bcaster, seq: d.seq, payload });
+                }
+            }
+        }
+        out
+    }
+
+    /// Alg 1 lines 12–16.
+    fn handle_lock(
+        &mut self,
+        env: &mut dyn Env,
+        b: NodeId,
+        k: u64,
+        m: Vec<u8>,
+        queue: &mut VecDeque<TbDeliver>,
+        out: &mut Vec<CtbOut>,
+    ) {
+        if self.st[b].blocked {
+            return;
+        }
+        let slot = (k % self.t as u64) as usize;
+        let cur = self.st[b].locks[slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
+        if k > cur {
+            self.st[b].locks[slot] = Some((k, m.clone()));
+            let locked = CtbMsg::Locked { bcaster: b as u64, k, m }.encode();
+            let (_, selfd) = self.tb.broadcast(env, locked);
+            queue.push_back(selfd);
+            let _ = out;
+        }
+    }
+
+    /// Alg 1 lines 18–23.
+    fn handle_locked(
+        &mut self,
+        env: &mut dyn Env,
+        q: NodeId,
+        b: NodeId,
+        k: u64,
+        m: Vec<u8>,
+        out: &mut Vec<CtbOut>,
+    ) {
+        if self.st[b].blocked {
+            return;
+        }
+        let slot = (k % self.t as u64) as usize;
+        let cur = self.st[b].locked[q][slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
+        if k > cur {
+            self.st[b].locked[q][slot] = Some((k, m.clone()));
+        }
+        // Unanimity check: all n processes committed to the same (k, m).
+        let unanimous = (0..self.n).all(|r| {
+            self.st[b].locked[r][slot]
+                .as_ref()
+                .map(|(k2, m2)| *k2 == k && m2 == &m)
+                .unwrap_or(false)
+        });
+        if unanimous {
+            self.deliver_once(env, b, k, m, out);
+        }
+    }
+
+    /// Alg 1 lines 25–37 (up to the register write; the read phase
+    /// continues in [`Self::on_reg_outcome`]).
+    fn handle_signed(&mut self, env: &mut dyn Env, b: NodeId, k: u64, m: Vec<u8>, sig: Sig) {
+        if self.st[b].blocked || self.st[b].slow.contains_key(&k) {
+            return;
+        }
+        // Already delivered (either path): re-broadcast SIGNED messages
+        // must not restart the register protocol.
+        let slot = (k % self.t as u64) as usize;
+        if self.st[b].delivered[slot].unwrap_or(0) >= k {
+            return;
+        }
+        let h = hash(&m);
+        env.charge(Category::Other, self.lat.hash_cost(m.len()));
+        if b != self.me {
+            // Our own SIGNED needs no re-verification (we just signed it).
+            crate::env::charge_verify(env, &self.lat);
+            if !self.ks.verify(b, &signed_bytes(b, k, &h), &sig) {
+                return; // line 26: invalid signature
+            }
+        }
+        // Lines 27–29: honour existing commitments.
+        match &self.st[b].locks[slot] {
+            Some((k2, m2)) if *k2 > k || (*k2 == k && m2 != &m) => return,
+            _ => {}
+        }
+        self.st[b].locks[slot] = Some((k, m.clone()));
+        // Line 30: copy the signed message into my own register.
+        self.st[b].slow.insert(
+            k,
+            SlowState { m, h, reads: HashMap::new(), reads_outstanding: 0, writing: true },
+        );
+        let reg = self.reg_index(b, slot);
+        let image = reg_image(k, &h, &sig);
+        self.start_reg_write(env, reg, k, image, b, k);
+    }
+
+    fn start_reg_write(
+        &mut self,
+        env: &mut dyn Env,
+        reg: u32,
+        ts: u64,
+        image: Vec<u8>,
+        b: NodeId,
+        k: u64,
+    ) {
+        env.mark("swmr_write_start");
+        match self.regs.start_write(env, reg, ts, &image) {
+            WriteStart::Started(op) => {
+                self.reg_ops.insert(op, RegCtx::SlowWrite { bcaster: b, k });
+            }
+            WriteStart::CooldownUntil(at) => {
+                let now = env.now();
+                self.cooldown_q.push_back((reg, ts, image, b, k));
+                env.set_timer(at.saturating_sub(now) + 1, TOKEN_CTB_COOLDOWN);
+            }
+        }
+    }
+
+    fn drain_cooldown(&mut self, env: &mut dyn Env) {
+        let pending: Vec<_> = self.cooldown_q.drain(..).collect();
+        for (reg, ts, image, b, k) in pending {
+            self.start_reg_write(env, reg, ts, image, b, k);
+        }
+    }
+
+    fn on_reg_outcome(&mut self, env: &mut dyn Env, oc: RegOutcome) -> Vec<CtbOut> {
+        let mut out = Vec::new();
+        match oc {
+            RegOutcome::WriteDone { op } => {
+                let Some(RegCtx::SlowWrite { bcaster, k }) = self.reg_ops.remove(&op) else {
+                    return out;
+                };
+                // Line 31: read everyone's register for this slot.
+                let slot = (k % self.t as u64) as usize;
+                let Some(sl) = self.st[bcaster].slow.get_mut(&k) else { return out };
+                sl.writing = false;
+                sl.reads_outstanding = self.n;
+                env.mark("swmr_read_start");
+                for owner in 0..self.n {
+                    let reg = self.reg_index(bcaster, slot);
+                    let op = self.regs.start_read(env, owner, reg);
+                    self.reg_ops.insert(op, RegCtx::SlowRead { bcaster, k, owner });
+                }
+            }
+            RegOutcome::ReadDone { op, value } => {
+                let Some(RegCtx::SlowRead { bcaster, k, owner }) = self.reg_ops.remove(&op) else {
+                    return out;
+                };
+                let decoded = value.and_then(|(_, bytes)| decode_reg_image(&bytes));
+                self.record_read(env, bcaster, k, owner, decoded, &mut out);
+            }
+            RegOutcome::ReadByzantine { op } => {
+                // The register OWNER (a receiver) violated the write
+                // protocol: its entry counts as absent (default value).
+                let Some(RegCtx::SlowRead { bcaster, k, owner }) = self.reg_ops.remove(&op) else {
+                    return out;
+                };
+                self.record_read(env, bcaster, k, owner, None, &mut out);
+            }
+            RegOutcome::ReadRetry { op } => {
+                // Asynchrony: retry the read (paper §6.1).
+                let Some(RegCtx::SlowRead { bcaster, k, owner }) = self.reg_ops.remove(&op) else {
+                    return out;
+                };
+                let slot = (k % self.t as u64) as usize;
+                let reg = self.reg_index(bcaster, slot);
+                let op = self.regs.start_read(env, owner, reg);
+                self.reg_ops.insert(op, RegCtx::SlowRead { bcaster, k, owner });
+            }
+        }
+        out
+    }
+
+    fn record_read(
+        &mut self,
+        env: &mut dyn Env,
+        b: NodeId,
+        k: u64,
+        owner: NodeId,
+        value: Option<(u64, Hash32, Sig)>,
+        out: &mut Vec<CtbOut>,
+    ) {
+        let t = self.t as u64;
+        let me_h;
+        {
+            let Some(sl) = self.st[b].slow.get_mut(&k) else { return };
+            sl.reads.insert(owner, value);
+            sl.reads_outstanding -= 1;
+            if sl.reads_outstanding > 0 {
+                return;
+            }
+            me_h = sl.h;
+        }
+        // All reads in: run the checks of lines 31–36.
+        let sl = self.st[b].slow.remove(&k).unwrap();
+        env.mark("swmr_read_done");
+        let mut conflict = false;
+        let mut out_of_tail = false;
+        for val in sl.reads.values().flatten() {
+            let (k2, h2, sig2) = val;
+            if *k2 == k && *h2 == me_h {
+                // Entry agrees with the (already verified) SIGNED message:
+                // nothing to learn, skip the signature check. Only
+                // conflicting or newer entries matter below.
+                continue;
+            }
+            // Line 32: ignore invalid signatures.
+            crate::env::charge_verify(env, &self.lat);
+            if !self.ks.verify(b, &signed_bytes(b, *k2, h2), sig2) {
+                continue;
+            }
+            if *k2 == k && *h2 != me_h {
+                conflict = true; // line 33: Byzantine broadcaster
+            }
+            if *k2 > k && *k2 % t == k % t {
+                out_of_tail = true; // line 35
+            }
+        }
+        if conflict {
+            self.st[b].blocked = true;
+            out.push(CtbOut::Byzantine { bcaster: b });
+            return;
+        }
+        if out_of_tail {
+            return;
+        }
+        self.deliver_once(env, b, k, sl.m, out);
+    }
+
+    /// Alg 1 lines 39–42.
+    fn deliver_once(
+        &mut self,
+        _env: &mut dyn Env,
+        b: NodeId,
+        k: u64,
+        m: Vec<u8>,
+        out: &mut Vec<CtbOut>,
+    ) {
+        let slot = (k % self.t as u64) as usize;
+        let prev = self.st[b].delivered[slot].unwrap_or(0);
+        if k > prev {
+            self.st[b].delivered[slot] = Some(k);
+            out.push(CtbOut::Deliver { bcaster: b, k, m });
+        }
+    }
+
+    /// Local memory footprint (Table 2): the three bounded arrays plus the
+    /// TBcast buffers and my recent messages.
+    pub fn mem_bytes(&self) -> u64 {
+        let mut total = self.tb.mem_bytes();
+        total += self.my_msgs.values().map(|m| m.len() as u64 + 16).sum::<u64>();
+        for st in &self.st {
+            total += st
+                .locks
+                .iter()
+                .flatten()
+                .map(|(_, m)| m.len() as u64 + 16)
+                .sum::<u64>();
+            for row in &st.locked {
+                total += row.iter().flatten().map(|(_, m)| m.len() as u64 + 16).sum::<u64>();
+            }
+            total += (st.delivered.len() * 16) as u64;
+        }
+        total
+    }
+
+    /// Bytes this process has written to disaggregated memory.
+    pub fn disagg_bytes_written(&self) -> u64 {
+        self.regs.bytes_written
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{Actor, Event};
+    use crate::sim::Sim;
+    use std::sync::{Arc, Mutex};
+
+    const RETR: u64 = 7;
+
+    /// Test replica: node 0 broadcasts `count` messages; everyone logs
+    /// CTBcast deliveries.
+    struct Node {
+        ctb: Option<CtbEndpoint>,
+        cfg: Config,
+        count: usize,
+        sent: usize,
+        trigger_slow_after: bool,
+        log: Arc<Mutex<Vec<(NodeId, NodeId, u64, Vec<u8>)>>>,
+    }
+
+    impl Node {
+        fn sink(&mut self, me: NodeId, outs: Vec<CtbOut>) {
+            let mut log = self.log.lock().unwrap();
+            for o in outs {
+                if let CtbOut::Deliver { bcaster, k, m } = o {
+                    log.push((me, bcaster, k, m));
+                }
+            }
+        }
+    }
+
+    impl Actor for Node {
+        fn on_start(&mut self, env: &mut dyn Env) {
+            let ks = KeyStore::sim(self.cfg.seed);
+            let mut ctb = CtbEndpoint::new(env.me(), &self.cfg, ks);
+            if self.count > 0 {
+                self.sent += 1;
+                let (k, outs) = ctb.broadcast(env, vec![self.sent as u8; 8]);
+                if self.trigger_slow_after {
+                    let more = ctb.trigger_slow(env, k);
+                    self.ctb = Some(ctb);
+                    let me = env.me();
+                    self.sink(me, outs);
+                    self.sink(me, more);
+                    env.set_timer(100_000, RETR);
+                    return;
+                }
+                let me = env.me();
+                self.sink(me, outs);
+            }
+            self.ctb = Some(ctb);
+            env.set_timer(100_000, RETR);
+        }
+        fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+            let me = env.me();
+            match ev {
+                Event::Recv { from, bytes } => {
+                    let outs = self.ctb.as_mut().unwrap().on_recv(env, from, &bytes);
+                    self.sink(me, outs);
+                }
+                Event::Timer { token } if token == RETR => {
+                    let ctb = self.ctb.as_mut().unwrap();
+                    ctb.on_retransmit(env);
+                    if self.sent < self.count {
+                        self.sent += 1;
+                        let (k, outs) = ctb.broadcast(env, vec![self.sent as u8; 8]);
+                        self.sink(me, outs);
+                        if self.trigger_slow_after {
+                            let more = self.ctb.as_mut().unwrap().trigger_slow(env, k);
+                            self.sink(me, more);
+                        }
+                    }
+                    env.set_timer(100_000, RETR);
+                }
+                Event::Timer { token } => {
+                    let outs = self.ctb.as_mut().unwrap().on_timer(env, token);
+                    self.sink(me, outs);
+                }
+                Event::MemDone { ticket, result, .. } => {
+                    let outs = self.ctb.as_mut().unwrap().on_mem_done(env, ticket, result);
+                    self.sink(me, outs);
+                }
+            }
+        }
+    }
+
+    fn run(
+        count: usize,
+        slow: bool,
+        slow_always_cfg: bool,
+    ) -> Vec<(NodeId, NodeId, u64, Vec<u8>)> {
+        let mut cfg = Config::default();
+        cfg.tail = 8;
+        cfg.slow_path_always = slow_always_cfg;
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut sim = Sim::new(cfg.clone());
+        for i in 0..cfg.n {
+            sim.add_actor(Box::new(Node {
+                ctb: None,
+                cfg: cfg.clone(),
+                count: if i == 0 { count } else { 0 },
+                sent: 0,
+                trigger_slow_after: slow,
+                log: log.clone(),
+            }));
+        }
+        sim.run_until(crate::SECOND / 10);
+        let v = log.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn fast_path_delivers_to_all() {
+        let log = run(5, false, false);
+        for me in 0..3 {
+            let ks: Vec<u64> =
+                log.iter().filter(|(m, b, _, _)| *m == me && *b == 0).map(|e| e.2).collect();
+            assert_eq!(ks, (1..=5).collect::<Vec<u64>>(), "receiver {me}");
+        }
+    }
+
+    #[test]
+    fn fast_path_payloads_correct() {
+        let log = run(3, false, false);
+        for (_, _, k, m) in &log {
+            assert_eq!(m, &vec![*k as u8; 8]);
+        }
+    }
+
+    #[test]
+    fn slow_path_delivers_to_all() {
+        // Broadcaster triggers the slow path explicitly for each message;
+        // deliveries may come from either path but must cover 1..=3.
+        let log = run(3, true, false);
+        for me in 0..3 {
+            let mut ks: Vec<u64> =
+                log.iter().filter(|(m, b, _, _)| *m == me && *b == 0).map(|e| e.2).collect();
+            ks.sort();
+            ks.dedup();
+            assert_eq!(ks, (1..=3).collect::<Vec<u64>>(), "receiver {me}");
+        }
+    }
+
+    #[test]
+    fn no_duplicate_deliveries() {
+        // Even with both paths racing (slow_path_always), no (receiver,
+        // bcaster, k) pair is delivered twice.
+        let log = run(4, false, true);
+        let mut seen = std::collections::HashSet::new();
+        for (me, b, k, _) in &log {
+            assert!(seen.insert((*me, *b, *k)), "duplicate delivery ({me},{b},{k})");
+        }
+    }
+
+    #[test]
+    fn agreement_under_both_paths() {
+        let log = run(6, false, true);
+        // For each (bcaster, k), all delivered payloads are identical.
+        let mut by_key: std::collections::HashMap<(NodeId, u64), Vec<u8>> =
+            std::collections::HashMap::new();
+        for (_, b, k, m) in &log {
+            if let Some(prev) = by_key.insert((*b, *k), m.clone()) {
+                assert_eq!(&prev, m, "agreement violated at ({b},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_bytes_is_canonical() {
+        let h = hash(b"m");
+        assert_eq!(signed_bytes(1, 2, &h), signed_bytes(1, 2, &h));
+        assert_ne!(signed_bytes(1, 2, &h), signed_bytes(1, 3, &h));
+        assert_ne!(signed_bytes(1, 2, &h), signed_bytes(2, 2, &h));
+    }
+
+    #[test]
+    fn reg_image_roundtrip() {
+        let h = hash(b"x");
+        let sig = Sig([7u8; 64]);
+        let img = reg_image(42, &h, &sig);
+        assert_eq!(decode_reg_image(&img), Some((42, h, sig)));
+        assert_eq!(decode_reg_image(&img[..10]), None);
+    }
+
+    #[test]
+    fn ctbmsg_wire_roundtrip() {
+        for msg in [
+            CtbMsg::Lock { bcaster: 1, k: 9, m: b"aa".to_vec() },
+            CtbMsg::Locked { bcaster: 2, k: 1, m: vec![] },
+            CtbMsg::Signed { bcaster: 0, k: 3, m: b"zz".to_vec(), sig: Sig([1; 64]) },
+            CtbMsg::App(b"payload".to_vec()),
+        ] {
+            assert_eq!(CtbMsg::decode(&msg.encode()).unwrap(), msg);
+        }
+    }
+}

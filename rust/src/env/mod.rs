@@ -1,0 +1,103 @@
+//! The environment abstraction that makes every protocol state machine
+//! (replicas, clients, baselines) runnable under two drivers:
+//!
+//! * the deterministic discrete-event simulator ([`crate::sim`]), which
+//!   regenerates the paper's evaluation with a virtual nanosecond clock and
+//!   calibrated latency constants, and
+//! * the real-thread driver ([`crate::sim::real`]), which runs the same
+//!   state machines over OS threads, channels and wall-clock time.
+//!
+//! Protocol code never calls the clock, the network or disaggregated
+//! memory directly — only through [`Env`]. This is what lets a single
+//! implementation of CTBcast/consensus be both *measured* (DES) and
+//! *deployed* (real mode).
+
+use crate::metrics::Category;
+use crate::util::Rng;
+use crate::{NodeId, Nanos};
+
+/// Identifies a disaggregated-memory region: `owner` is the only process
+/// allowed to WRITE it (single-writer, enforced by the memory nodes via
+/// RDMA-style permissions); everyone may READ.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct RegionId {
+    pub owner: NodeId,
+    /// Register index within the owner's register space.
+    pub reg: u32,
+}
+
+/// Completion handle for an asynchronous disaggregated-memory operation.
+pub type Ticket = u64;
+
+/// Result of a completed memory-node operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MemResult {
+    /// WRITE acknowledged by the memory node.
+    Written,
+    /// READ returned these raw region bytes (may be torn mid-write at
+    /// 8-byte granularity — exactly RDMA's atomicity contract, §6).
+    Read(Vec<u8>),
+    /// Permission denied (non-owner WRITE) — only Byzantine processes
+    /// trigger this.
+    Denied,
+}
+
+/// Events delivered to an [`Actor`].
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A point-to-point message arrived.
+    Recv { from: NodeId, bytes: Vec<u8> },
+    /// A timer set via [`Env::set_timer`] fired.
+    Timer { token: u64 },
+    /// An asynchronous memory-node operation completed.
+    MemDone { mem_node: usize, ticket: Ticket, result: MemResult },
+}
+
+/// A deterministic, single-threaded protocol state machine.
+pub trait Actor: Send {
+    /// Called once before any event.
+    fn on_start(&mut self, _env: &mut dyn Env) {}
+    /// Handle one event. Runs to completion; all effects go through `env`.
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event);
+}
+
+/// The world as seen by one actor.
+pub trait Env {
+    /// This actor's node id.
+    fn me(&self) -> NodeId;
+    /// Monotonic time (virtual under DES, wall-clock in real mode).
+    fn now(&self) -> Nanos;
+    /// Deterministic per-actor randomness.
+    fn rng(&mut self) -> &mut Rng;
+    /// One-way message to `dst` (the §6.2 primitive: no acknowledgement;
+    /// best-effort, tail-t drop semantics enforced by TBcast above).
+    fn send(&mut self, dst: NodeId, bytes: Vec<u8>);
+    /// Charge local processing time to the current handler. Under DES this
+    /// extends the actor's busy window and delays its outputs; in real mode
+    /// it is a no-op (real computation already takes real time).
+    fn charge(&mut self, cat: Category, ns: Nanos);
+    /// Request a timer event ≥ `after` ns from now carrying `token`.
+    fn set_timer(&mut self, after: Nanos, token: u64);
+    /// Asynchronous WRITE of a whole region replica on one memory node.
+    fn mem_write(&mut self, mem_node: usize, region: RegionId, bytes: Vec<u8>) -> Ticket;
+    /// Asynchronous READ of a whole region replica on one memory node.
+    fn mem_read(&mut self, mem_node: usize, region: RegionId) -> Ticket;
+    /// Trace point for latency decomposition (Fig 9): the DES records
+    /// `(now, me, label)` tuples that the harness analyzes offline.
+    fn mark(&mut self, label: &'static str);
+}
+
+/// Charge one signature generation (DES cost model; no-op in real mode).
+pub fn charge_sign(env: &mut dyn Env, lat: &crate::config::LatencyModel) {
+    env.charge(Category::Crypto, lat.sign);
+}
+
+/// Charge one signature verification.
+pub fn charge_verify(env: &mut dyn Env, lat: &crate::config::LatencyModel) {
+    env.charge(Category::Crypto, lat.verify);
+}
+
+/// Charge hashing `bytes` of data.
+pub fn charge_hash(env: &mut dyn Env, lat: &crate::config::LatencyModel, bytes: usize) {
+    env.charge(Category::Other, lat.hash_cost(bytes));
+}

@@ -1,0 +1,257 @@
+//! Fig 10: median latency of non-equivocation mechanisms vs message size,
+//! between one sender and two receivers:
+//! CTBcast fast path / SGX trusted counter / CTBcast slow path.
+//!
+//! CTBcast runs standalone (no consensus on top); the SGX counter is the
+//! emulated USIG (§7.4): each broadcast binds the message to the enclave
+//! counter at the sender and is verified inside the enclave at each
+//! receiver, with the paper's measured enclave-crossing latency.
+
+use super::{print_table, samples_per_point, us};
+use crate::baselines::usig::Usig;
+use crate::config::Config;
+use crate::crypto::KeyStore;
+use crate::ctbcast::{CtbEndpoint, CtbOut};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::{Category, Samples};
+use crate::sim::Sim;
+use crate::{NodeId, Nanos, MICRO};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Mechanism {
+    CtbFast,
+    SgxCounter,
+    CtbSlow,
+}
+
+impl Mechanism {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mechanism::CtbFast => "CTBcast (fast)",
+            Mechanism::SgxCounter => "SGX counter",
+            Mechanism::CtbSlow => "CTBcast (slow)",
+        }
+    }
+}
+
+const SEND: u64 = 1;
+const RETR: u64 = 2;
+
+/// Shared send-time registry: message id (first 8 bytes) → send time.
+type Sent = Arc<Mutex<HashMap<u64, Nanos>>>;
+
+/// CTBcast node: node 0 broadcasts `count` messages of `size` bytes on a
+/// fixed interval; receivers record broadcast→delivery latency.
+struct CtbNode {
+    cfg: Config,
+    ctb: Option<CtbEndpoint>,
+    slow_only: bool,
+    count: usize,
+    sent_n: usize,
+    interval: Nanos,
+    size: usize,
+    sent: Sent,
+    samples: Arc<Mutex<Samples>>,
+}
+
+impl CtbNode {
+    fn sink(&mut self, env: &mut dyn Env, outs: Vec<CtbOut>) {
+        for o in outs {
+            if let CtbOut::Deliver { bcaster: 0, k, .. } = o {
+                if env.me() != 0 {
+                    if let Some(&t0) = self.sent.lock().unwrap().get(&k) {
+                        self.samples.lock().unwrap().record(env.now().saturating_sub(t0));
+                    }
+                }
+            }
+        }
+    }
+
+    fn fire(&mut self, env: &mut dyn Env) {
+        if self.sent_n >= self.count {
+            return;
+        }
+        self.sent_n += 1;
+        let mut m = vec![0u8; self.size.max(8)];
+        m[..8].copy_from_slice(&(self.sent_n as u64).to_le_bytes());
+        let t0 = env.now(); // before signing: E2E includes the sender's crypto
+        let ctb = self.ctb.as_mut().unwrap();
+        let k_next = ctb.next_k();
+        self.sent.lock().unwrap().insert(k_next, t0);
+        let (_k, outs) = ctb.broadcast(env, m);
+        self.sink(env, outs);
+        env.set_timer(self.interval, SEND);
+    }
+}
+
+impl Actor for CtbNode {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        let ks = KeyStore::sim(self.cfg.seed);
+        let mut ctb = CtbEndpoint::new(env.me(), &self.cfg, ks);
+        ctb.fast_path = !self.slow_only;
+        self.ctb = Some(ctb);
+        env.set_timer(200 * MICRO, RETR);
+        if env.me() == 0 && self.count > 0 {
+            self.fire(env);
+        }
+    }
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Recv { from, bytes } => {
+                let outs = self.ctb.as_mut().unwrap().on_recv(env, from, &bytes);
+                self.sink(env, outs);
+            }
+            Event::Timer { token: SEND } => self.fire(env),
+            Event::Timer { token: RETR } => {
+                self.ctb.as_mut().unwrap().on_retransmit(env);
+                env.set_timer(200 * MICRO, RETR);
+            }
+            Event::Timer { token } => {
+                let outs = self.ctb.as_mut().unwrap().on_timer(env, token);
+                self.sink(env, outs);
+            }
+            Event::MemDone { ticket, result, .. } => {
+                let outs = self.ctb.as_mut().unwrap().on_mem_done(env, ticket, result);
+                self.sink(env, outs);
+            }
+        }
+    }
+}
+
+/// SGX-counter node: the sender binds each message to its USIG counter
+/// (one enclave call) and sends it; receivers verify in their enclave.
+struct SgxNode {
+    usig: Usig,
+    peers: Vec<NodeId>,
+    count: usize,
+    sent_n: usize,
+    interval: Nanos,
+    size: usize,
+    hash_cost: Nanos,
+    sent: Sent,
+    samples: Arc<Mutex<Samples>>,
+}
+
+impl SgxNode {
+    fn fire(&mut self, env: &mut dyn Env) {
+        if self.sent_n >= self.count {
+            return;
+        }
+        self.sent_n += 1;
+        let mut m = vec![0u8; self.size.max(8) + 48];
+        m[..8].copy_from_slice(&(self.sent_n as u64).to_le_bytes());
+        self.sent.lock().unwrap().insert(self.sent_n as u64, env.now());
+        env.charge(Category::Crypto, Usig::CALL_NS); // enclave: bind counter
+        env.charge(Category::Other, self.hash_cost);
+        let _ui = self.usig.create_ui(&m);
+        for &p in &self.peers.clone() {
+            if p != env.me() {
+                env.send(p, m.clone());
+            }
+        }
+        env.set_timer(self.interval, SEND);
+    }
+}
+
+impl Actor for SgxNode {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        if env.me() == 0 && self.count > 0 {
+            self.fire(env);
+        }
+    }
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Recv { bytes, .. } => {
+                env.charge(Category::Crypto, Usig::CALL_NS); // enclave: verify
+                env.charge(Category::Other, self.hash_cost);
+                let id = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+                if let Some(&t0) = self.sent.lock().unwrap().get(&id) {
+                    self.samples.lock().unwrap().record(env.now().saturating_sub(t0));
+                }
+            }
+            Event::Timer { token: SEND } => self.fire(env),
+            _ => {}
+        }
+    }
+}
+
+pub fn run_point(mech: Mechanism, size: usize, count: usize) -> Samples {
+    let mut cfg = Config::default();
+    cfg.max_req = size + 1024;
+    let sent: Sent = Arc::new(Mutex::new(HashMap::new()));
+    let samples = Arc::new(Mutex::new(Samples::new()));
+    let mut sim = Sim::new(cfg.clone());
+    let interval = match mech {
+        Mechanism::CtbFast => 60 * MICRO,
+        Mechanism::SgxCounter => 80 * MICRO,
+        Mechanism::CtbSlow => 600 * MICRO,
+    };
+    match mech {
+        Mechanism::CtbFast | Mechanism::CtbSlow => {
+            for i in 0..cfg.n {
+                sim.add_actor(Box::new(CtbNode {
+                    cfg: cfg.clone(),
+                    ctb: None,
+                    slow_only: mech == Mechanism::CtbSlow,
+                    count: if i == 0 { count } else { 0 },
+                    sent_n: 0,
+                    interval,
+                    size,
+                    sent: sent.clone(),
+                    samples: samples.clone(),
+                }));
+            }
+        }
+        Mechanism::SgxCounter => {
+            for i in 0..cfg.n {
+                sim.add_actor(Box::new(SgxNode {
+                    usig: Usig::new(i, [3u8; 32]),
+                    peers: (0..cfg.n).collect(),
+                    count: if i == 0 { count } else { 0 },
+                    sent_n: 0,
+                    interval,
+                    size,
+                    hash_cost: cfg.lat.hash_cost(size),
+                    sent: sent.clone(),
+                    samples: samples.clone(),
+                }));
+            }
+        }
+    }
+    sim.run_until(interval * (count as u64 + 50) + crate::SECOND / 10);
+    let s = samples.lock().unwrap().clone();
+    s
+}
+
+pub const SIZES: &[usize] = &[32, 256, 1024, 4096, 8192];
+
+pub fn main_run(samples: usize) {
+    let count = samples_per_point(samples).min(5_000);
+    let mut header = vec!["size (B)".to_string()];
+    let mechs = [Mechanism::CtbFast, Mechanism::SgxCounter, Mechanism::CtbSlow];
+    header.extend(mechs.iter().map(|m| format!("{} (µs)", m.label())));
+    let mut rows = Vec::new();
+    let mut fast32 = 0.0;
+    let mut sgx32 = 0.0;
+    for &size in SIZES {
+        let mut row = vec![size.to_string()];
+        for mech in mechs {
+            let mut s = run_point(mech, size, count);
+            assert!(!s.is_empty(), "{mech:?} at {size} produced no samples");
+            let med = s.median();
+            if size == 32 {
+                match mech {
+                    Mechanism::CtbFast => fast32 = med as f64,
+                    Mechanism::SgxCounter => sgx32 = med as f64,
+                    _ => {}
+                }
+            }
+            row.push(us(med));
+        }
+        rows.push(row);
+    }
+    print_table("Fig 10 — non-equivocation mechanism latency", &header, &rows);
+    println!("\nCTBcast-fast vs SGX @32B: {:.1}x faster", sgx32 / fast32);
+}

@@ -1,0 +1,92 @@
+//! Fig 7: end-to-end latency of Flip, Memcached, Redis and Liquibook when
+//! unreplicated, replicated via Mu, and replicated via uBFT's fast path.
+//! Whiskers: p50/p90/p95 (the paper prints the p90).
+
+use super::{print_table, run_latency, samples_per_point, us, AppFactory, System};
+use crate::apps::{flip::FlipWorkload, kv::KvWorkload, orderbook::OrderWorkload, redis_like::RedisWorkload};
+use crate::config::Config;
+use crate::rpc::Workload;
+use crate::Nanos;
+
+pub struct Point {
+    pub app: &'static str,
+    pub system: System,
+    pub p50: Nanos,
+    pub p90: Nanos,
+    pub p95: Nanos,
+}
+
+fn workload_for(app: &str) -> Box<dyn Workload> {
+    match app {
+        "flip" => Box::new(FlipWorkload { size: 32 }),
+        "memcached" => Box::new(KvWorkload::paper()),
+        "redis" => Box::new(RedisWorkload { keys: 1024 }),
+        "liquibook" => Box::new(OrderWorkload::paper()),
+        _ => unreachable!(),
+    }
+}
+
+fn app_factory(app: &'static str) -> AppFactory {
+    match app {
+        "flip" => Box::new(|| Box::new(crate::apps::FlipApp::new())),
+        "memcached" => Box::new(|| Box::new(crate::apps::KvApp::new())),
+        "redis" => Box::new(|| Box::new(crate::apps::RedisApp::new())),
+        "liquibook" => Box::new(|| Box::new(crate::apps::OrderBookApp::new())),
+        _ => unreachable!(),
+    }
+}
+
+pub fn run(samples: usize) -> Vec<Point> {
+    let samples = samples_per_point(samples);
+    let mut points = Vec::new();
+    for app in ["flip", "memcached", "redis", "liquibook"] {
+        for system in [System::Unreplicated, System::Mu, System::UbftFast] {
+            let factory = app_factory(app);
+            let mut s =
+                run_latency(Config::default(), system, &factory, workload_for(app), samples);
+            points.push(Point {
+                app,
+                system,
+                p50: s.percentile(50.0),
+                p90: s.percentile(90.0),
+                p95: s.percentile(95.0),
+            });
+        }
+    }
+    points
+}
+
+pub fn report(points: &[Point]) {
+    let header: Vec<String> =
+        ["app", "system", "p50 (µs)", "p90 (µs)", "p95 (µs)"].map(String::from).to_vec();
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.app.to_string(),
+                p.system.label().to_string(),
+                us(p.p50),
+                us(p.p90),
+                us(p.p95),
+            ]
+        })
+        .collect();
+    print_table("Fig 7 — end-to-end application latency", &header, &rows);
+}
+
+pub fn main_run(samples: usize) {
+    let points = run(samples);
+    report(&points);
+    // Headline sanity lines the paper highlights.
+    let get = |app: &str, sys: System| {
+        points.iter().find(|p| p.app == app && p.system == sys).unwrap().p90 as f64
+    };
+    let overhead = get("flip", System::UbftFast) - get("flip", System::Mu);
+    println!(
+        "\nuBFT-fast vs Mu @p90: flip +{:.1} µs ({:.2}x) | liquibook {:.2}x | memcached {:.2}x",
+        overhead / 1000.0,
+        get("flip", System::UbftFast) / get("flip", System::Mu),
+        get("liquibook", System::UbftFast) / get("liquibook", System::Mu),
+        get("memcached", System::UbftFast) / get("memcached", System::Mu),
+    );
+}

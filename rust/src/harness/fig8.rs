@@ -1,0 +1,90 @@
+//! Fig 8: median end-to-end latency vs request size for a no-op app:
+//! Unreplicated / Mu / uBFT-fast / uBFT-slow / MinBFT (vanilla) /
+//! MinBFT (HMAC).
+
+use super::{print_table, run_latency, samples_per_point, us, AppFactory, System};
+use crate::config::Config;
+use crate::rpc::BytesWorkload;
+use crate::smr::NoopApp;
+use crate::Nanos;
+
+pub const SIZES: &[usize] = &[8, 64, 256, 1024, 4096, 8192];
+
+pub struct Point {
+    pub size: usize,
+    pub system: System,
+    pub p50: Nanos,
+}
+
+pub fn run(samples: usize) -> Vec<Point> {
+    let samples = samples_per_point(samples);
+    let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
+    let mut out = Vec::new();
+    for &size in SIZES {
+        for system in [
+            System::Unreplicated,
+            System::Mu,
+            System::UbftFast,
+            System::UbftSlow,
+            System::MinBftVanilla,
+            System::MinBftHmac,
+        ] {
+            // Heavy baselines need fewer samples for a stable median.
+            let n = match system {
+                System::MinBftVanilla | System::MinBftHmac | System::UbftSlow => {
+                    samples.min(2_000)
+                }
+                _ => samples,
+            };
+            let mut s = run_latency(
+                Config::default(),
+                system,
+                &app,
+                Box::new(BytesWorkload { size, label: "noop" }),
+                n,
+            );
+            out.push(Point { size, system, p50: s.median() });
+        }
+    }
+    out
+}
+
+pub fn report(points: &[Point]) {
+    let systems = [
+        System::Unreplicated,
+        System::Mu,
+        System::UbftFast,
+        System::UbftSlow,
+        System::MinBftVanilla,
+        System::MinBftHmac,
+    ];
+    let mut header = vec!["size (B)".to_string()];
+    header.extend(systems.iter().map(|s| format!("{} (µs)", s.label())));
+    let rows: Vec<Vec<String>> = SIZES
+        .iter()
+        .map(|&size| {
+            let mut row = vec![size.to_string()];
+            for sys in systems {
+                let p = points.iter().find(|p| p.size == size && p.system == sys).unwrap();
+                row.push(us(p.p50));
+            }
+            row
+        })
+        .collect();
+    print_table("Fig 8 — median E2E latency vs request size (no-op app)", &header, &rows);
+}
+
+pub fn main_run(samples: usize) {
+    let points = run(samples);
+    report(&points);
+    let at = |size: usize, sys: System| {
+        points.iter().find(|p| p.size == size && p.system == sys).unwrap().p50 as f64
+    };
+    println!(
+        "\nheadlines: uBFT-fast/Mu @8B = {:.2}x | MinBFT-vanilla/uBFT-slow @8B = {:.2}x | \
+         uBFT-slow/MinBFT-HMAC @8B = {:.2}x",
+        at(8, System::UbftFast) / at(8, System::Mu),
+        at(8, System::MinBftVanilla) / at(8, System::UbftSlow),
+        at(8, System::UbftSlow) / at(8, System::MinBftHmac),
+    );
+}

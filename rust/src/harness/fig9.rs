@@ -1,0 +1,207 @@
+//! Fig 9: recursive decomposition of uBFT's end-to-end latency into
+//! components (RPC / CTB / SMR / E2E) and primitive costs (P2P / Crypto /
+//! SWMR / Other), for the fast and slow paths, replicating Flip with 8 B
+//! requests.
+//!
+//! Reconstruction method: the DES records trace marks at protocol
+//! boundaries (client_send, propose, prepare_endorsed, applied,
+//! client_done, swmr_*) plus every processing charge with its category.
+//! With a closed-loop client, the i-th occurrence of each mark belongs to
+//! request i; spans between marks give component totals and the charges
+//! within a span attribute Crypto/Other; register access time comes from
+//! the swmr marks; the unexplained remainder of each span is network time
+//! (P2P).
+
+use super::{print_table, samples_per_point, us};
+use crate::config::Config;
+use crate::consensus::Replica;
+use crate::metrics::Category;
+use crate::rpc::{BytesWorkload, Client};
+use crate::sim::{Sim, TraceEv};
+use crate::smr::NoopApp;
+use crate::Nanos;
+
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    pub path: &'static str,
+    /// (component, total, p2p, crypto, swmr, other) in ns, per request.
+    pub rows: Vec<(String, f64, f64, f64, f64, f64)>,
+}
+
+fn mark_times(trace: &[(Nanos, usize, TraceEv)], node: usize, label: &str) -> Vec<Nanos> {
+    trace
+        .iter()
+        .filter(|(_, n, ev)| *n == node && matches!(ev, TraceEv::Mark(l) if *l == label))
+        .map(|(t, _, _)| *t)
+        .collect()
+}
+
+/// Sum of charges of `cat` at `node` within [lo, hi).
+fn charges_in(
+    trace: &[(Nanos, usize, TraceEv)],
+    node: usize,
+    cat: Category,
+    lo: Nanos,
+    hi: Nanos,
+) -> f64 {
+    trace
+        .iter()
+        .filter(|(t, n, ev)| {
+            *n == node && *t >= lo && *t < hi && matches!(ev, TraceEv::Charge(c, _) if *c == cat)
+        })
+        .map(|(_, _, ev)| match ev {
+            TraceEv::Charge(_, ns) => *ns as f64,
+            _ => 0.0,
+        })
+        .sum()
+}
+
+pub fn run(slow: bool, samples: usize) -> Decomposition {
+    let samples = samples_per_point(samples).min(3_000);
+    let mut cfg = Config::default();
+    cfg.slow_path_always = slow;
+    let mut sim = Sim::new(cfg.clone());
+    sim.enable_trace();
+    for i in 0..cfg.n {
+        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
+    }
+    let client = Client::new(
+        (0..cfg.n).collect(),
+        cfg.quorum(),
+        Box::new(BytesWorkload { size: 8, label: "flip8" }),
+        samples,
+    );
+    let done = client.done_handle();
+    let client_id = cfg.n;
+    sim.add_actor(Box::new(client));
+    super::run_to_completion(&mut sim, &done);
+
+    let trace = sim.trace();
+    let leader = 0usize;
+    let send = mark_times(trace, client_id, "client_send");
+    let donem = mark_times(trace, client_id, "client_done");
+    let propose = mark_times(trace, leader, "propose");
+    let endorsed = mark_times(trace, leader, "prepare_endorsed");
+    let applied = mark_times(trace, leader, "applied");
+    let n = send
+        .len()
+        .min(donem.len())
+        .min(propose.len())
+        .min(endorsed.len())
+        .min(applied.len());
+    assert!(n > 0, "no complete requests traced");
+
+    // Per-request spans (client clock for E2E, leader clock for internals).
+    let mut comp = vec![
+        ("RPC".to_string(), vec![]),
+        ("CTB".to_string(), vec![]),
+        ("SMR".to_string(), vec![]),
+        ("E2E".to_string(), vec![]),
+    ];
+    for i in 0..n {
+        let e2e = donem[i].saturating_sub(send[i]);
+        let rpc_in = propose[i].saturating_sub(send[i]);
+        let ctb = endorsed[i].saturating_sub(propose[i]);
+        let smr = applied[i].saturating_sub(endorsed[i]);
+        let rpc_out = e2e.saturating_sub(rpc_in + ctb + smr);
+        comp[0].1.push((rpc_in + rpc_out) as f64);
+        comp[1].1.push(ctb as f64);
+        comp[2].1.push(smr as f64);
+        comp[3].1.push(e2e as f64);
+    }
+
+    // Category attribution per span (leader-side charges; SWMR from marks).
+    let mut rows = Vec::new();
+    for (ci, (name, vals)) in comp.iter().enumerate() {
+        let total = vals.iter().sum::<f64>() / n as f64;
+        let (mut crypto, mut other, mut swmr) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..n {
+            let (lo, hi) = match ci {
+                0 => (send[i], propose[i]),                  // RPC (leader-side part)
+                1 => (propose[i], endorsed[i]),              // CTB
+                2 => (endorsed[i], applied[i]),              // SMR
+                _ => (send[i], donem[i]),                    // E2E
+            };
+            crypto += charges_in(trace, leader, Category::Crypto, lo, hi);
+            other += charges_in(trace, leader, Category::Other, lo, hi);
+            if ci == 1 || ci == 2 {
+                // SWMR access time: write start → read done within span.
+                let ws: Vec<Nanos> = trace
+                    .iter()
+                    .filter(|(t, nn, ev)| {
+                        *nn == leader
+                            && *t >= lo
+                            && *t < hi
+                            && matches!(ev, TraceEv::Mark("swmr_write_start"))
+                    })
+                    .map(|(t, _, _)| *t)
+                    .collect();
+                let rd: Vec<Nanos> = trace
+                    .iter()
+                    .filter(|(t, nn, ev)| {
+                        *nn == leader
+                            && *t >= lo
+                            && *t < hi
+                            && matches!(ev, TraceEv::Mark("swmr_read_done"))
+                    })
+                    .map(|(t, _, _)| *t)
+                    .collect();
+                if let (Some(&w0), Some(&r1)) = (ws.first(), rd.last()) {
+                    swmr += r1.saturating_sub(w0) as f64;
+                }
+            }
+        }
+        crypto /= n as f64;
+        other /= n as f64;
+        swmr /= n as f64;
+        if ci == 3 {
+            // E2E's SWMR is the sum of its components (the wide-window
+            // measurement would overlap with crypto processing).
+            swmr = rows.iter().map(|r: &(String, f64, f64, f64, f64, f64)| r.4).sum();
+        }
+        let p2p = (total - crypto - other - swmr).max(0.0);
+        rows.push((name.clone(), total, p2p, crypto, swmr, other));
+    }
+    Decomposition { path: if slow { "slow" } else { "fast" }, rows }
+}
+
+pub fn report(d: &Decomposition) {
+    let header: Vec<String> = ["component", "total (µs)", "P2P", "Crypto", "SWMR", "Other"]
+        .map(String::from)
+        .to_vec();
+    let rows: Vec<Vec<String>> = d
+        .rows
+        .iter()
+        .map(|(name, total, p2p, crypto, swmr, other)| {
+            vec![
+                name.clone(),
+                us(*total as Nanos),
+                us(*p2p as Nanos),
+                us(*crypto as Nanos),
+                us(*swmr as Nanos),
+                us(*other as Nanos),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Fig 9 — latency decomposition, {} path (Flip, 8 B)", d.path),
+        &header,
+        &rows,
+    );
+}
+
+pub fn main_run(samples: usize) {
+    let fast = run(false, samples);
+    report(&fast);
+    let slow = run(true, samples);
+    report(&slow);
+    let e2e = |d: &Decomposition| d.rows.last().unwrap().1;
+    let crypto_share =
+        slow.rows.last().unwrap().3 / e2e(&slow) * 100.0;
+    println!(
+        "\nslow/fast E2E = {:.1}x; crypto share of slow-path E2E = {:.0}% \
+         (paper: crypto dominates the slow path)",
+        e2e(&slow) / e2e(&fast),
+        crypto_share
+    );
+}

@@ -1,0 +1,244 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§7) on the discrete-event simulator. One module per
+//! experiment; `cargo bench` targets and the `ubft` CLI both dispatch
+//! here. See DESIGN.md §4 for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+pub mod throughput;
+
+use crate::config::Config;
+use crate::consensus::Replica;
+use crate::metrics::Samples;
+use crate::rpc::{Client, Workload};
+use crate::sim::Sim;
+use crate::smr::App;
+use crate::{Nanos, MICRO};
+use std::sync::{Arc, Mutex};
+
+/// Number of measurements per data point. The paper takes ≥ 10 000;
+/// override with `UBFT_SAMPLES` for quick runs.
+pub fn samples_per_point(default: usize) -> usize {
+    std::env::var("UBFT_SAMPLES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Systems compared across the evaluation.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum System {
+    Unreplicated,
+    Mu,
+    UbftFast,
+    UbftSlow,
+    MinBftVanilla,
+    MinBftHmac,
+}
+
+impl System {
+    pub fn label(&self) -> &'static str {
+        match self {
+            System::Unreplicated => "Unrepl.",
+            System::Mu => "Mu",
+            System::UbftFast => "uBFT (fast)",
+            System::UbftSlow => "uBFT (slow)",
+            System::MinBftVanilla => "MinBFT",
+            System::MinBftHmac => "MinBFT (HMAC)",
+        }
+    }
+}
+
+/// Per-replica application factory (each replica owns an instance).
+pub type AppFactory = Box<dyn Fn() -> Box<dyn App>>;
+
+/// One latency run: deploy `system` with the app/workload, complete
+/// `requests` requests, return the client's latency samples.
+pub fn run_latency(
+    mut cfg: Config,
+    system: System,
+    app: &AppFactory,
+    workload: Box<dyn Workload>,
+    requests: usize,
+) -> Samples {
+    let think: Nanos = match system {
+        // Unloaded latency for the heavyweight baselines (paper method).
+        System::MinBftVanilla | System::MinBftHmac => 300 * MICRO,
+        _ => 0,
+    };
+    if system == System::UbftSlow {
+        cfg.slow_path_always = true;
+    }
+    let mut sim = Sim::new(cfg.clone());
+    let (replicas, quorum, presend): (Vec<usize>, usize, Nanos) = match system {
+        System::Unreplicated => {
+            let id = sim.add_actor(Box::new(crate::baselines::unreplicated::Server::new(
+                app(),
+                &cfg,
+            )));
+            (vec![id], 1, 0)
+        }
+        System::Mu => {
+            let leader = crate::baselines::mu::MuLeader::new(vec![1, 2], app(), &cfg);
+            sim.add_actor(Box::new(leader));
+            sim.add_actor(Box::new(crate::baselines::mu::MuFollower::new()));
+            sim.add_actor(Box::new(crate::baselines::mu::MuFollower::new()));
+            (vec![0], 1, 0)
+        }
+        System::UbftFast | System::UbftSlow => {
+            for i in 0..cfg.n {
+                sim.add_actor(Box::new(Replica::new(i, cfg.clone(), app())));
+            }
+            ((0..cfg.n).collect(), cfg.quorum(), 0)
+        }
+        System::MinBftVanilla | System::MinBftHmac => {
+            let vanilla = system == System::MinBftVanilla;
+            let secret = [0x5Au8; 32];
+            for i in 0..cfg.n {
+                sim.add_actor(Box::new(crate::baselines::minbft::MinBftReplica::new(
+                    i,
+                    (0..cfg.n).collect(),
+                    cfg.f,
+                    vanilla,
+                    app(),
+                    secret,
+                )));
+            }
+            (
+                (0..cfg.n).collect(),
+                cfg.quorum(),
+                crate::baselines::minbft::client_presend(vanilla),
+            )
+        }
+    };
+    let client = Client::new(replicas, quorum, workload, requests)
+        .with_presend_charge(presend)
+        .with_think(think);
+    let samples = client.samples_handle();
+    let done = client.done_handle();
+    sim.add_actor(Box::new(client));
+    run_to_completion(&mut sim, &done);
+    let s = samples.lock().unwrap().clone();
+    s
+}
+
+/// Deploy uBFT + client and return (sim, samples, done) without running —
+/// for experiments that need post-run access to internals.
+pub fn deploy_ubft(
+    cfg: &Config,
+    app: &AppFactory,
+    workload: Box<dyn Workload>,
+    requests: usize,
+) -> (Sim, Arc<Mutex<Samples>>, Arc<Mutex<Option<Nanos>>>) {
+    let mut sim = Sim::new(cfg.clone());
+    for i in 0..cfg.n {
+        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), app())));
+    }
+    let client = Client::new((0..cfg.n).collect(), cfg.quorum(), workload, requests);
+    let samples = client.samples_handle();
+    let done = client.done_handle();
+    sim.add_actor(Box::new(client));
+    (sim, samples, done)
+}
+
+/// Run the sim until the client reports completion (generous cap).
+pub fn run_to_completion(sim: &mut Sim, done: &Arc<Mutex<Option<Nanos>>>) {
+    let mut horizon = crate::SECOND;
+    loop {
+        sim.run_until(horizon);
+        if done.lock().unwrap().is_some() || horizon >= 600 * crate::SECOND {
+            break;
+        }
+        horizon *= 2;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Report helpers (aligned text tables, µs units like the paper's plots)
+// ---------------------------------------------------------------------
+
+/// Print an aligned table: header row + data rows.
+pub fn print_table(title: &str, header: &[String], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(header));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format nanoseconds as µs with two decimals.
+pub fn us(ns: Nanos) -> String {
+    format!("{:.2}", ns as f64 / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::BytesWorkload;
+    use crate::smr::NoopApp;
+
+    #[test]
+    fn all_systems_complete_requests() {
+        let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
+        for system in [
+            System::Unreplicated,
+            System::Mu,
+            System::UbftFast,
+            System::UbftSlow,
+            System::MinBftVanilla,
+            System::MinBftHmac,
+        ] {
+            let s = run_latency(
+                Config::default(),
+                system,
+                &app,
+                Box::new(BytesWorkload { size: 32, label: "noop" }),
+                10,
+            );
+            assert_eq!(s.len(), 10, "{system:?}");
+        }
+    }
+
+    #[test]
+    fn system_ordering_matches_paper() {
+        // Unrepl < Mu < uBFT-fast < uBFT-slow < MinBFT-vanilla.
+        let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
+        let run = |sys| {
+            let mut s = run_latency(
+                Config::default(),
+                sys,
+                &app,
+                Box::new(BytesWorkload { size: 32, label: "noop" }),
+                30,
+            );
+            s.median()
+        };
+        let unrepl = run(System::Unreplicated);
+        let mu = run(System::Mu);
+        let fast = run(System::UbftFast);
+        let slow = run(System::UbftSlow);
+        let minbft = run(System::MinBftVanilla);
+        assert!(unrepl < mu, "{unrepl} {mu}");
+        assert!(mu < fast, "{mu} {fast}");
+        assert!(fast < slow, "{fast} {slow}");
+        assert!(slow < minbft, "{slow} {minbft}");
+    }
+}

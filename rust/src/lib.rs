@@ -1,0 +1,62 @@
+//! # uBFT — Microsecond-scale BFT SMR using disaggregated memory
+//!
+//! Reproduction of *"uBFT: Microsecond-Scale BFT using Disaggregated Memory"*
+//! (Aguilera et al.). The crate contains:
+//!
+//! * the uBFT replication stack: [`ctbcast`] (Consistent Tail Broadcast,
+//!   the paper's non-equivocation primitive), [`tbcast`] (finite-memory
+//!   best-effort broadcast), [`consensus`] (the 2f+1 fast/slow-path BFT
+//!   engine with view changes, checkpoints and CTBcast summaries), and
+//!   [`smr`]/[`rpc`] (the replica wrapper and the client library);
+//! * every substrate the paper depends on: [`rdma`] (a simulated RDMA
+//!   fabric with 8-byte atomicity and per-peer permissions), [`dsm`]
+//!   (reliable single-writer multi-reader *regular* registers over
+//!   replicated memory nodes), [`p2p`] (the zero-ack circular-buffer
+//!   message primitive of §6.2), and [`crypto`] (from-scratch Ed25519,
+//!   HMAC-SHA256 and xxhash);
+//! * a deterministic discrete-event simulator ([`sim`]) used to regenerate
+//!   every figure and table of the paper's evaluation ([`harness`]);
+//! * the replicated applications of §7 ([`apps`]: Flip, memcached-style and
+//!   Redis-style KV stores, a Liquibook-style order matching engine, and an
+//!   HLO-backed tensor service) and both baselines ([`baselines`]: Mu-style
+//!   crash-only SMR and MinBFT-style trusted-counter BFT);
+//! * a PJRT [`runtime`] that loads JAX/Pallas-authored HLO artifacts so the
+//!   request path never touches Python.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod config;
+pub mod metrics;
+pub mod crypto;
+pub mod sim;
+pub mod env;
+pub mod rdma;
+pub mod dsm;
+pub mod p2p;
+pub mod tbcast;
+pub mod ctbcast;
+pub mod consensus;
+pub mod smr;
+pub mod rpc;
+pub mod apps;
+pub mod baselines;
+pub mod byz;
+pub mod runtime;
+pub mod harness;
+pub mod testing;
+pub mod cli;
+
+/// Identifier of a process (replica, client or memory node) in a deployment.
+pub type NodeId = usize;
+
+/// Simulated or real monotonic time, in nanoseconds.
+pub type Nanos = u64;
+
+/// One microsecond in [`Nanos`].
+pub const MICRO: Nanos = 1_000;
+/// One millisecond in [`Nanos`].
+pub const MILLI: Nanos = 1_000_000;
+/// One second in [`Nanos`].
+pub const SECOND: Nanos = 1_000_000_000;

@@ -1,0 +1,122 @@
+//! `ubft` — CLI launcher for the uBFT reproduction.
+//!
+//! Evaluation commands regenerate the paper's figures/tables on the
+//! deterministic discrete-event simulator (see DESIGN.md §4); `serve`
+//! runs a real-thread deployment (see also `examples/`).
+
+use ubft::cli::Args;
+use ubft::harness;
+
+const HELP: &str = "\
+ubft — microsecond-scale BFT SMR (paper reproduction)
+
+USAGE: ubft <command> [--samples N] [--seed S] [--config FILE]
+
+EVALUATION (discrete-event simulator, paper §7):
+  fig7        E2E latency of Flip/Memcached/Redis/Liquibook
+  fig8        median E2E latency vs request size, all systems
+  fig9        latency decomposition (RPC/CTB/SMR × P2P/Crypto/SWMR/Other)
+  fig10       non-equivocation mechanisms vs message size
+  fig11       tail latency vs CTBcast tail t
+  table2      replica + disaggregated memory usage
+  throughput  §9 slot-interleaving throughput
+  all         everything above
+
+REAL MODE:
+  serve       run a real-thread 3-replica KV deployment and a workload
+              [--requests N]
+
+MISC:
+  calibration print the DES latency model constants
+  help        this text
+
+Set UBFT_SAMPLES to override per-point sample counts.
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let samples = args.get_usize("samples", 10_000).unwrap_or(10_000);
+    if let Some(s) = args.get("samples") {
+        std::env::set_var("UBFT_SAMPLES", s);
+    }
+    match args.command.as_str() {
+        "fig7" => harness::fig7::main_run(samples),
+        "fig8" => harness::fig8::main_run(samples),
+        "fig9" => harness::fig9::main_run(samples),
+        "fig10" => harness::fig10::main_run(samples),
+        "fig11" => harness::fig11::main_run(samples),
+        "table2" => harness::table2::main_run(samples),
+        "throughput" => harness::throughput::main_run(samples),
+        "all" => {
+            harness::fig7::main_run(samples);
+            harness::fig8::main_run(samples);
+            harness::fig9::main_run(samples);
+            harness::fig10::main_run(samples);
+            harness::fig11::main_run(samples);
+            harness::table2::main_run(samples);
+            harness::throughput::main_run(samples);
+        }
+        "serve" => serve(&args),
+        "calibration" => {
+            let cfg = match args.get("config") {
+                Some(path) => ubft::config::Config::load(path).expect("config"),
+                None => ubft::config::Config::default(),
+            };
+            println!("{cfg:#?}");
+        }
+        _ => println!("{HELP}"),
+    }
+}
+
+/// Real-thread deployment: 3 uBFT replicas + 1 client hammering a KV app.
+fn serve(args: &Args) {
+    use ubft::apps::kv::KvWorkload;
+    use ubft::apps::KvApp;
+    use ubft::config::{Config, SigBackend};
+    use ubft::consensus::Replica;
+    use ubft::rpc::Client;
+    use ubft::sim::real::RealCluster;
+
+    let requests = args.get_usize("requests", 2_000).unwrap_or(2_000);
+    let mut cfg = Config::default();
+    cfg.sig_backend = SigBackend::Ed25519; // real crypto in real mode
+    let mut cluster = RealCluster::new(cfg.m, cfg.seed);
+    for i in 0..cfg.n {
+        cluster.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(KvApp::new()))));
+    }
+    let client = Client::new(
+        (0..cfg.n).collect(),
+        cfg.quorum(),
+        Box::new(KvWorkload::paper()),
+        requests,
+    );
+    let samples = client.samples_handle();
+    let done = client.done_handle();
+    cluster.add_actor(Box::new(client));
+    println!("real-mode deployment: {} replicas + 1 client, {} requests…", cfg.n, requests);
+    let t0 = std::time::Instant::now();
+    cluster.start();
+    while done.lock().unwrap().is_none() {
+        if t0.elapsed().as_secs() > 120 {
+            eprintln!("timed out");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    cluster.stop();
+    let mut s = samples.lock().unwrap();
+    println!(
+        "completed {} requests in {:.2}s — p50 {:.1} µs, p99 {:.1} µs, throughput {:.1} kops",
+        s.len(),
+        t0.elapsed().as_secs_f64(),
+        s.median() as f64 / 1000.0,
+        s.percentile(99.0) as f64 / 1000.0,
+        s.len() as f64 / t0.elapsed().as_secs_f64() / 1000.0
+    );
+}

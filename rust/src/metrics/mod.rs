@@ -1,0 +1,213 @@
+//! Latency histograms, percentile extraction, and the recursive latency
+//! breakdown used to regenerate Fig 9.
+
+use crate::Nanos;
+use std::collections::BTreeMap;
+
+/// A reservoir of raw latency samples (ns). The paper's evaluation takes
+/// ≥10k samples per point; we keep them all (cheap) so any percentile can
+/// be extracted exactly.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    data: Vec<Nanos>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples::default()
+    }
+
+    pub fn record(&mut self, v: Nanos) {
+        self.data.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank). `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> Nanos {
+        assert!(!self.data.is_empty(), "no samples");
+        self.ensure_sorted();
+        let n = self.data.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.data[rank.clamp(1, n) - 1]
+    }
+
+    pub fn median(&mut self) -> Nanos {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&mut self) -> Nanos {
+        self.ensure_sorted();
+        self.data[0]
+    }
+
+    pub fn max(&mut self) -> Nanos {
+        self.ensure_sorted();
+        *self.data.last().unwrap()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// The percentile scan used by Fig 11 (tail-latency curves).
+    pub fn scan(&mut self, percentiles: &[f64]) -> Vec<(f64, Nanos)> {
+        percentiles.iter().map(|&p| (p, self.percentile(p))).collect()
+    }
+}
+
+/// Fig 9's cost categories.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    /// Point-to-point communication.
+    P2p,
+    /// Signature generation/verification (plus dispatch, per the paper).
+    Crypto,
+    /// Disaggregated-memory register access.
+    Swmr,
+    /// Glue logic, copies, event-loop slack.
+    Other,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::P2p => "P2P",
+            Category::Crypto => "Crypto",
+            Category::Swmr => "SWMR",
+            Category::Other => "Other",
+        }
+    }
+}
+
+/// Per-request cost attribution: how many ns of the end-to-end latency
+/// each (component, category) pair contributed. Components are the paper's
+/// RPC / CTB / SMR split.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub cells: BTreeMap<(String, Category), f64>,
+    pub samples: usize,
+}
+
+impl Breakdown {
+    pub fn new() -> Breakdown {
+        Breakdown::default()
+    }
+
+    pub fn add(&mut self, component: &str, cat: Category, ns: Nanos) {
+        *self.cells.entry((component.to_string(), cat)).or_insert(0.0) += ns as f64;
+    }
+
+    pub fn finish_sample(&mut self) {
+        self.samples += 1;
+    }
+
+    /// Mean ns per request for one (component, category) cell.
+    pub fn mean(&self, component: &str, cat: Category) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        self.cells.get(&(component.to_string(), cat)).copied().unwrap_or(0.0)
+            / self.samples as f64
+    }
+
+    /// Mean total for a component across categories.
+    pub fn component_total(&self, component: &str) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        self.cells
+            .iter()
+            .filter(|((c, _), _)| c == component)
+            .map(|(_, v)| v)
+            .sum::<f64>()
+            / self.samples as f64
+    }
+
+    pub fn components(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cells.keys().map(|(c, _)| c.clone()).collect();
+        v.dedup();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// Simple throughput/ops counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    pub ops: u64,
+    pub bytes: u64,
+}
+
+impl Counter {
+    pub fn bump(&mut self, bytes: usize) {
+        self.ops += 1;
+        self.bytes += bytes as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = Samples::new();
+        for v in 1..=100u64 {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(50.0), 50);
+        assert_eq!(s.percentile(90.0), 90);
+        assert_eq!(s.percentile(99.0), 99);
+        assert_eq!(s.percentile(100.0), 100);
+        assert_eq!(s.min(), 1);
+        assert_eq!(s.max(), 100);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.record(42);
+        assert_eq!(s.percentile(50.0), 42);
+        assert_eq!(s.percentile(99.9), 42);
+    }
+
+    #[test]
+    fn mean_correct() {
+        let mut s = Samples::new();
+        s.record(10);
+        s.record(20);
+        assert!((s.mean() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::new();
+        b.add("CTB", Category::P2p, 100);
+        b.add("CTB", Category::P2p, 300);
+        b.add("CTB", Category::Crypto, 50);
+        b.finish_sample();
+        b.finish_sample();
+        assert!((b.mean("CTB", Category::P2p) - 200.0).abs() < 1e-9);
+        assert!((b.component_total("CTB") - 225.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,288 @@
+//! The fast one-way message-passing primitive of §6.2.
+//!
+//! The receiver exposes a circular buffer of `t` fixed-size slots over
+//! RDMA; the sender RDMA-WRITEs messages into consecutive slots and
+//! **never waits for acknowledgements** — new messages overwrite old ones,
+//! even undelivered ones. Each slot carries a checksum, an *incarnation
+//! number* (how many times the slot has been written) and a length. The
+//! receiver polls the slot its read pointer designates for the expected
+//! incarnation, copies the slot out, re-checks the incarnation for
+//! stability and verifies the checksum before delivering. If it finds a
+//! *higher* incarnation than expected, the sender has lapped it: it jumps
+//! forward to the oldest message still present, preserving FIFO delivery
+//! of the last `t` messages.
+//!
+//! This module is the byte-exact, real-memory implementation over the
+//! [`crate::rdma`] fabric (used in real mode, unit tests and the hot-path
+//! bench). Under the DES the same drop/tail semantics are modeled at
+//! message granularity by [`crate::tbcast`] (see DESIGN.md §3).
+
+use crate::crypto::xxhash::xxh64;
+use crate::rdma::{register_swmr, Handle};
+
+/// Slot header: checksum(8) ‖ incarnation(8) ‖ len(4) + 4 padding.
+const HDR: usize = 24;
+
+/// Ring geometry shared by both endpoints.
+struct Ring {
+    t: usize,
+    slot_size: usize,
+}
+
+/// Create a ring of `t` slots, each able to hold `max_msg` payload bytes;
+/// returns (sender, receiver) endpoints.
+pub fn create(t: usize, max_msg: usize) -> (RingSender, RingReceiver) {
+    assert!(t >= 2, "ring needs at least 2 slots");
+    let slot_size = (HDR + max_msg + 7) / 8 * 8;
+    let (w, r) = register_swmr(t * slot_size);
+    (
+        RingSender {
+            ring: Ring { t, slot_size },
+            handle: w,
+            next_msg: 0,
+            max_msg,
+            scratch: Vec::with_capacity(slot_size),
+        },
+        RingReceiver {
+            ring: Ring { t, slot_size },
+            handle: r,
+            next_msg: 0,
+            scratch: vec![0u8; slot_size],
+        },
+    )
+}
+
+/// Sender endpoint: owns the read-write token of the receiver's buffer.
+pub struct RingSender {
+    ring: Ring,
+    handle: Handle,
+    /// Global index of the next message (slot = idx % t,
+    /// incarnation = idx / t + 1).
+    next_msg: u64,
+    max_msg: usize,
+    /// Reusable slot-image buffer (keeps the send path allocation-free).
+    scratch: Vec<u8>,
+}
+
+impl RingSender {
+    /// Post one message. Never blocks; overwrites the oldest slot when the
+    /// ring is full (tail-`t` semantics). Returns the message index.
+    pub fn send(&mut self, payload: &[u8]) -> u64 {
+        assert!(payload.len() <= self.max_msg, "message exceeds slot size");
+        let idx = self.next_msg;
+        self.next_msg += 1;
+        let slot = (idx % self.ring.t as u64) as usize;
+        let incarnation = idx / self.ring.t as u64 + 1;
+
+        // Build the slot image in a reusable buffer (allocation-free).
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&[0u8; 8]); // checksum patched below
+        self.scratch.extend_from_slice(&incarnation.to_le_bytes());
+        self.scratch.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.scratch.extend_from_slice(&[0u8; 4]); // header padding
+        self.scratch.extend_from_slice(payload);
+        let sum = xxh64(&self.scratch[8..], 0);
+        self.scratch[0..8].copy_from_slice(&sum.to_le_bytes());
+        // One RDMA WRITE into the remote slot; no acknowledgement.
+        self.handle.write(slot * self.ring.slot_size, &self.scratch).expect("ring write");
+        idx
+    }
+
+    /// Number of messages posted so far.
+    pub fn sent(&self) -> u64 {
+        self.next_msg
+    }
+}
+
+/// Receiver endpoint: polls its local buffer; no NIC involvement (the
+/// defining property of one-sided RDMA).
+pub struct RingReceiver {
+    ring: Ring,
+    handle: Handle,
+    next_msg: u64,
+    scratch: Vec<u8>,
+}
+
+/// One delivered message.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RingMsg {
+    /// Global message index (reveals skips after overruns).
+    pub idx: u64,
+    pub payload: Vec<u8>,
+}
+
+impl RingReceiver {
+    /// Poll once: delivers the next message if present. `None` when the
+    /// expected slot has not been (re)written yet or a torn write is in
+    /// progress (caller re-polls).
+    pub fn poll(&mut self) -> Option<RingMsg> {
+        let t = self.ring.t as u64;
+        let slot = (self.next_msg % t) as usize;
+        let expect_inc = self.next_msg / t + 1;
+        let off = slot * self.ring.slot_size;
+
+        // Peek at the incarnation field first (cheap, allocation-free).
+        let mut head = [0u8; HDR];
+        self.handle.read_into(off, &mut head).ok()?;
+        let inc = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        if inc < expect_inc || inc == 0 {
+            return None; // not yet written
+        }
+        if inc > expect_inc {
+            // Overrun: the sender lapped us. Jump to the oldest message
+            // still guaranteed present — the one in this very slot.
+            self.next_msg = (inc - 1) * t + slot as u64;
+            return self.poll_current(off, inc);
+        }
+        self.poll_current(off, expect_inc)
+    }
+
+    fn poll_current(&mut self, off: usize, expect_inc: u64) -> Option<RingMsg> {
+        // Copy the whole slot to private memory to decouple from
+        // interfering WRITEs, then re-check the incarnation (§6.2).
+        self.handle.read_into(off, &mut self.scratch).ok()?;
+        let s = &self.scratch;
+        let sum = u64::from_le_bytes(s[0..8].try_into().unwrap());
+        let inc = u64::from_le_bytes(s[8..16].try_into().unwrap());
+        if inc != expect_inc {
+            return None; // slot advanced mid-copy; re-poll
+        }
+        let len = u32::from_le_bytes(s[16..20].try_into().unwrap()) as usize;
+        if HDR + len > s.len() {
+            return None; // torn length; re-poll
+        }
+        if xxh64(&s[8..HDR + len], 0) != sum {
+            return None; // torn payload; the slot either settles into this
+                         // incarnation (re-poll succeeds) or is overwritten
+                         // (overrun path takes over)
+        }
+        let idx = self.next_msg;
+        self.next_msg += 1;
+        Some(RingMsg { idx, payload: s[HDR..HDR + len].to_vec() })
+    }
+
+    /// Drain every currently deliverable message.
+    pub fn drain(&mut self) -> Vec<RingMsg> {
+        let mut out = Vec::new();
+        while let Some(m) = self.poll() {
+            out.push(m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_delivery() {
+        let (mut tx, mut rx) = create(8, 64);
+        for i in 0..5u8 {
+            tx.send(&[i; 10]);
+        }
+        let msgs = rx.drain();
+        assert_eq!(msgs.len(), 5);
+        for (i, m) in msgs.iter().enumerate() {
+            assert_eq!(m.idx, i as u64);
+            assert_eq!(m.payload, vec![i as u8; 10]);
+        }
+    }
+
+    #[test]
+    fn empty_ring_yields_nothing() {
+        let (_tx, mut rx) = create(4, 16);
+        assert!(rx.poll().is_none());
+    }
+
+    #[test]
+    fn zero_length_messages_supported() {
+        let (mut tx, mut rx) = create(4, 16);
+        tx.send(b"");
+        tx.send(b"x");
+        let msgs = rx.drain();
+        assert_eq!(msgs.len(), 2);
+        assert!(msgs[0].payload.is_empty());
+    }
+
+    #[test]
+    fn overrun_skips_to_tail_preserving_fifo() {
+        let (mut tx, mut rx) = create(4, 16);
+        // Send 11 messages without the receiver polling: only the last 4
+        // (tail) are guaranteed; delivery must stay FIFO and gap-forward.
+        for i in 0..11u8 {
+            tx.send(&[i]);
+        }
+        let msgs = rx.drain();
+        assert!(!msgs.is_empty());
+        let idxs: Vec<u64> = msgs.iter().map(|m| m.idx).collect();
+        let mut sorted = idxs.clone();
+        sorted.sort();
+        assert_eq!(idxs, sorted, "FIFO violated");
+        assert!(*idxs.first().unwrap() >= 7, "delivered older than tail: {idxs:?}");
+        assert_eq!(*idxs.last().unwrap(), 10);
+        for m in &msgs {
+            assert_eq!(m.payload, vec![m.idx as u8]);
+        }
+    }
+
+    #[test]
+    fn interleaved_send_poll() {
+        let (mut tx, mut rx) = create(4, 16);
+        let mut delivered = Vec::new();
+        for round in 0..50u64 {
+            tx.send(&round.to_le_bytes());
+            if round % 3 == 0 {
+                delivered.extend(rx.drain());
+            }
+        }
+        delivered.extend(rx.drain());
+        let idxs: Vec<u64> = delivered.iter().map(|m| m.idx).collect();
+        let mut sorted = idxs.clone();
+        sorted.sort();
+        assert_eq!(idxs, sorted);
+        assert_eq!(*idxs.last().unwrap(), 49);
+        for m in &delivered {
+            assert_eq!(m.payload, m.idx.to_le_bytes().to_vec());
+        }
+    }
+
+    #[test]
+    fn concurrent_sender_receiver_never_corrupts() {
+        // Hammer the ring from another thread; every delivered message
+        // must be internally consistent and FIFO.
+        let (mut tx, mut rx) = create(8, 32);
+        let writer = std::thread::spawn(move || {
+            for i in 0..20_000u64 {
+                let mut p = [0u8; 32];
+                p[..8].copy_from_slice(&i.to_le_bytes());
+                p[8..16].copy_from_slice(&i.to_le_bytes());
+                tx.send(&p);
+            }
+        });
+        let mut count = 0u64;
+        let mut last_idx = None;
+        while !writer.is_finished() || count == 0 {
+            if let Some(m) = rx.poll() {
+                let a = u64::from_le_bytes(m.payload[..8].try_into().unwrap());
+                let b = u64::from_le_bytes(m.payload[8..16].try_into().unwrap());
+                assert_eq!(a, b, "torn payload delivered");
+                assert_eq!(a, m.idx, "payload does not match message index");
+                if let Some(last) = last_idx {
+                    assert!(m.idx > last, "FIFO violated");
+                }
+                last_idx = Some(m.idx);
+                count += 1;
+            }
+        }
+        writer.join().unwrap();
+        assert!(count > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds slot size")]
+    fn oversized_message_rejected() {
+        let (mut tx, _rx) = create(4, 16);
+        tx.send(&[0u8; 17]);
+    }
+}

@@ -1,0 +1,196 @@
+//! In-process RDMA fabric: shared memory regions with per-peer access
+//! permissions and **8-byte atomicity** — the exact semantics §6 of the
+//! paper builds on (and no more: reads concurrent with writes may be torn
+//! across 8-byte words, which is why the registers of [`crate::dsm`] and
+//! the message slots of [`crate::p2p`] carry checksums).
+//!
+//! This is the *real-mode* fabric: regions are `AtomicU64` arrays shared
+//! between actor threads. The DES models the same semantics virtually
+//! (see [`crate::sim`]). Real NIC behaviours that matter to the paper —
+//! permission tokens, word-granular atomicity, completion polling — are
+//! preserved; wire-level details (QP state machines, MTU segmentation)
+//! are not, because no uBFT mechanism depends on them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Access rights attached to a region handle — the "token" RDMA hands out
+/// when a memory region is registered.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Access {
+    ReadOnly,
+    ReadWrite,
+}
+
+/// A registered memory region: `len` bytes backed by 8-byte words.
+pub struct Region {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl Region {
+    pub fn new(len: usize) -> Arc<Region> {
+        let n_words = (len + 7) / 8;
+        let words = (0..n_words).map(|_| AtomicU64::new(0)).collect();
+        Arc::new(Region { words, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Error for fabric operations.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum RdmaError {
+    #[error("write on a read-only handle")]
+    Permission,
+    #[error("access out of bounds: {0}+{1} > {2}")]
+    Bounds(usize, usize, usize),
+    #[error("unaligned access at offset {0} (8-byte words)")]
+    Unaligned(usize),
+}
+
+/// A handle to a region with specific access rights — what a peer receives
+/// after permission exchange.
+#[derive(Clone)]
+pub struct Handle {
+    region: Arc<Region>,
+    access: Access,
+}
+
+impl Handle {
+    pub fn new(region: Arc<Region>, access: Access) -> Handle {
+        Handle { region, access }
+    }
+
+    /// One-sided WRITE of `data` at 8-byte-aligned `offset`.
+    ///
+    /// Each 8-byte word is stored atomically, but the write *as a whole*
+    /// is not atomic: a concurrent reader can observe a prefix of new
+    /// words and a suffix of old ones (or any interleaving) — exactly the
+    /// RDMA contract the paper's checksums defend against.
+    pub fn write(&self, offset: usize, data: &[u8]) -> Result<(), RdmaError> {
+        if self.access != Access::ReadWrite {
+            return Err(RdmaError::Permission);
+        }
+        if offset % 8 != 0 {
+            return Err(RdmaError::Unaligned(offset));
+        }
+        if offset + data.len() > self.region.len {
+            return Err(RdmaError::Bounds(offset, data.len(), self.region.len));
+        }
+        let base = offset / 8;
+        for (i, chunk) in data.chunks(8).enumerate() {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            // Final partial word: preserve trailing bytes via read-modify.
+            if chunk.len() < 8 {
+                let old = self.region.words[base + i].load(Ordering::Acquire).to_le_bytes();
+                w[chunk.len()..].copy_from_slice(&old[chunk.len()..]);
+            }
+            self.region.words[base + i].store(u64::from_le_bytes(w), Ordering::Release);
+        }
+        Ok(())
+    }
+
+    /// One-sided READ of `len` bytes at 8-byte-aligned `offset`.
+    /// Torn reads across word boundaries are possible by design.
+    pub fn read(&self, offset: usize, len: usize) -> Result<Vec<u8>, RdmaError> {
+        let mut out = vec![0u8; len];
+        self.read_into(offset, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free READ into a caller-provided buffer (hot path).
+    pub fn read_into(&self, offset: usize, out: &mut [u8]) -> Result<(), RdmaError> {
+        if offset % 8 != 0 {
+            return Err(RdmaError::Unaligned(offset));
+        }
+        if offset + out.len() > self.region.len {
+            return Err(RdmaError::Bounds(offset, out.len(), self.region.len));
+        }
+        let base = offset / 8;
+        for (i, chunk) in out.chunks_mut(8).enumerate() {
+            let w = self.region.words[base + i].load(Ordering::Acquire).to_le_bytes();
+            chunk.copy_from_slice(&w[..chunk.len()]);
+        }
+        Ok(())
+    }
+}
+
+/// Register a region and hand out handles: the writer receives the
+/// read-write token, everyone else read-only — the paper's single-writer
+/// permission scheme (§6.1).
+pub fn register_swmr(len: usize) -> (Handle, Handle) {
+    let region = Region::new(len);
+    (Handle::new(region.clone(), Access::ReadWrite), Handle::new(region, Access::ReadOnly))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let (w, r) = register_swmr(64);
+        w.write(0, b"hello rdma world!").unwrap();
+        assert_eq!(r.read(0, 17).unwrap(), b"hello rdma world!");
+    }
+
+    #[test]
+    fn read_only_handle_cannot_write() {
+        let (_w, r) = register_swmr(64);
+        assert_eq!(r.write(0, b"x").unwrap_err(), RdmaError::Permission);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let (w, r) = register_swmr(16);
+        assert!(matches!(w.write(8, &[0u8; 16]), Err(RdmaError::Bounds(..))));
+        assert!(matches!(r.read(0, 17), Err(RdmaError::Bounds(..))));
+    }
+
+    #[test]
+    fn alignment_checked() {
+        let (w, _r) = register_swmr(16);
+        assert!(matches!(w.write(3, &[0u8; 4]), Err(RdmaError::Unaligned(3))));
+    }
+
+    #[test]
+    fn partial_word_write_preserves_suffix() {
+        let (w, r) = register_swmr(8);
+        w.write(0, &[0xAA; 8]).unwrap();
+        w.write(0, &[0xBB; 3]).unwrap();
+        assert_eq!(r.read(0, 8).unwrap(), vec![0xBB, 0xBB, 0xBB, 0xAA, 0xAA, 0xAA, 0xAA, 0xAA]);
+    }
+
+    #[test]
+    fn concurrent_reader_sees_whole_words() {
+        // Under concurrency, any observed 8-byte word is either fully old
+        // or fully new — never a mix within the word.
+        let (w, r) = register_swmr(64);
+        w.write(0, &[0u8; 64]).unwrap();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let writer = std::thread::spawn(move || {
+            let mut v = 0u8;
+            while !stop2.load(Ordering::SeqCst) {
+                v = v.wrapping_add(1);
+                w.write(0, &[v; 64]).unwrap();
+            }
+        });
+        for _ in 0..10_000 {
+            let data = r.read(0, 64).unwrap();
+            for word in data.chunks(8) {
+                assert!(word.iter().all(|&b| b == word[0]), "torn WITHIN a word: {word:?}");
+            }
+        }
+        stop.store(true, Ordering::SeqCst);
+        writer.join().unwrap();
+    }
+}

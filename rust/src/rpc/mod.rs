@@ -1,0 +1,243 @@
+//! Client-side RPC: send unsigned requests to *all* replicas and wait for
+//! f+1 matching responses (§3.1, §5.4).
+//!
+//! The client is an [`Actor`] so it runs under the DES (driving the
+//! latency experiments) and under real threads (examples). Closed-loop by
+//! default — one outstanding request, like the paper's latency runs — with
+//! a configurable number of interleaved requests for the throughput
+//! experiment (§9).
+
+use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
+use crate::crypto::{hash, Hash32};
+use crate::env::{Actor, Env, Event};
+use crate::metrics::Samples;
+use crate::{NodeId, Nanos};
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Generates request payloads (and validates responses, if desired).
+pub trait Workload: Send {
+    fn next_request(&mut self, rng: &mut crate::util::Rng) -> Vec<u8>;
+    /// Optional response check; return false to flag a mismatch.
+    fn check_response(&mut self, _req: &[u8], _resp: &[u8]) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// Fixed-size random payloads (the no-op / Flip workloads).
+pub struct BytesWorkload {
+    pub size: usize,
+    pub label: &'static str,
+}
+
+impl Workload for BytesWorkload {
+    fn next_request(&mut self, rng: &mut crate::util::Rng) -> Vec<u8> {
+        rng.bytes(self.size)
+    }
+    fn name(&self) -> &'static str {
+        self.label
+    }
+}
+
+const TOKEN_KICK: u64 = 1;
+const TOKEN_RETRY: u64 = 2;
+
+struct Outstanding {
+    rid: u64,
+    payload: Vec<u8>,
+    sent_at: Nanos,
+    responses: HashMap<Hash32, BTreeSet<NodeId>>,
+}
+
+/// Closed-loop client issuing `max_requests` then idling.
+pub struct Client {
+    replicas: Vec<NodeId>,
+    quorum: usize,
+    workload: Box<dyn Workload>,
+    max_requests: usize,
+    /// Number of requests kept in flight (1 = closed loop; 2 reproduces
+    /// the §9 slot-interleaving throughput doubling).
+    pipeline: usize,
+    /// Processing charged before each send (e.g. MinBFT-vanilla clients
+    /// sign requests with public-key crypto).
+    presend_charge: Nanos,
+    think: Nanos,
+    retry_every: Nanos,
+    next_rid: u64,
+    inflight: Vec<Outstanding>,
+    pub completed: u64,
+    pub mismatches: u64,
+    pub samples: Arc<Mutex<Samples>>,
+    pub done_at: Arc<Mutex<Option<Nanos>>>,
+    started: bool,
+}
+
+impl Client {
+    pub fn new(
+        replicas: Vec<NodeId>,
+        quorum: usize,
+        workload: Box<dyn Workload>,
+        max_requests: usize,
+    ) -> Client {
+        Client {
+            replicas,
+            quorum,
+            workload,
+            max_requests,
+            pipeline: 1,
+            presend_charge: 0,
+            think: 0,
+            retry_every: 5 * crate::MILLI,
+            next_rid: 1,
+            inflight: Vec::new(),
+            completed: 0,
+            mismatches: 0,
+            samples: Arc::new(Mutex::new(Samples::new())),
+            done_at: Arc::new(Mutex::new(None)),
+            started: false,
+        }
+    }
+
+    /// Keep `k` requests in flight (throughput experiment).
+    pub fn with_pipeline(mut self, k: usize) -> Client {
+        self.pipeline = k.max(1);
+        self
+    }
+
+    /// Charge `ns` before every request (client-side signing cost).
+    /// Included in the measured end-to-end latency, as in the paper.
+    pub fn with_presend_charge(mut self, ns: Nanos) -> Client {
+        self.presend_charge = ns;
+        self
+    }
+
+    /// Wait `ns` between completing a request and issuing the next
+    /// (unloaded-latency measurements; avoids replica queueing effects).
+    pub fn with_think(mut self, ns: Nanos) -> Client {
+        self.think = ns;
+        self
+    }
+
+    /// Handle to the latency samples (shared with the harness).
+    pub fn samples_handle(&self) -> Arc<Mutex<Samples>> {
+        self.samples.clone()
+    }
+
+    pub fn done_handle(&self) -> Arc<Mutex<Option<Nanos>>> {
+        self.done_at.clone()
+    }
+
+    fn issued(&self) -> u64 {
+        self.next_rid - 1
+    }
+
+    fn fire(&mut self, env: &mut dyn Env) {
+        while self.inflight.len() < self.pipeline
+            && (self.issued() as usize) < self.max_requests
+        {
+            let rid = self.next_rid;
+            self.next_rid += 1;
+            // E2E latency starts before client-side signing (paper §7.2).
+            let started = env.now();
+            if self.presend_charge > 0 {
+                env.charge(crate::metrics::Category::Crypto, self.presend_charge);
+            }
+            let payload = self.workload.next_request(env.rng());
+            let req = Request { client: env.me() as u64, rid, payload: payload.clone() };
+            let frame = direct_frame(&DirectMsg::Request(req));
+            env.mark("client_send");
+            for &r in &self.replicas {
+                env.send(r, frame.clone());
+            }
+            self.inflight.push(Outstanding {
+                rid,
+                payload,
+                sent_at: started,
+                responses: HashMap::new(),
+            });
+        }
+    }
+
+    fn on_response(&mut self, env: &mut dyn Env, from: NodeId, rid: u64, payload: Vec<u8>) {
+        let Some(pos) = self.inflight.iter().position(|o| o.rid == rid) else { return };
+        let digest = hash(&payload);
+        let o = &mut self.inflight[pos];
+        o.responses.entry(digest).or_default().insert(from);
+        if o.responses[&digest].len() >= self.quorum {
+            let o = self.inflight.remove(pos);
+            let latency = env.now().saturating_sub(o.sent_at);
+            env.mark("client_done");
+            self.samples.lock().unwrap().record(latency);
+            if !self.workload.check_response(&o.payload, &payload) {
+                self.mismatches += 1;
+            }
+            self.completed += 1;
+            if self.completed as usize >= self.max_requests {
+                *self.done_at.lock().unwrap() = Some(env.now());
+                return;
+            }
+            if self.think == 0 {
+                self.fire(env);
+            } else {
+                env.set_timer(self.think, TOKEN_KICK);
+            }
+        }
+    }
+}
+
+impl Actor for Client {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.started = true;
+        // Small offset so replicas finish their own startup first.
+        env.set_timer(crate::MICRO, TOKEN_KICK);
+        env.set_timer(self.retry_every, TOKEN_RETRY);
+    }
+
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Recv { from, bytes } => {
+                if let Some(DirectMsg::Response { rid, payload, .. }) = parse_direct(&bytes) {
+                    self.on_response(env, from, rid, payload);
+                }
+            }
+            Event::Timer { token: TOKEN_KICK } => self.fire(env),
+            Event::Timer { token: TOKEN_RETRY } => {
+                // Retransmit stale requests (e.g. across a view change).
+                let now = env.now();
+                let frames: Vec<Vec<u8>> = self
+                    .inflight
+                    .iter()
+                    .filter(|o| now.saturating_sub(o.sent_at) > self.retry_every)
+                    .map(|o| {
+                        direct_frame(&DirectMsg::Request(Request {
+                            client: env.me() as u64,
+                            rid: o.rid,
+                            payload: o.payload.clone(),
+                        }))
+                    })
+                    .collect();
+                for frame in frames {
+                    for &r in &self.replicas {
+                        env.send(r, frame.clone());
+                    }
+                }
+                env.set_timer(self.retry_every, TOKEN_RETRY);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_workload_sizes() {
+        let mut w = BytesWorkload { size: 32, label: "flip" };
+        let mut rng = crate::util::Rng::new(1);
+        assert_eq!(w.next_request(&mut rng).len(), 32);
+        assert_eq!(w.name(), "flip");
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: loads the HLO-text artifacts produced at build time by
+//! the JAX/Pallas compile path (`python/compile/aot.py`) and executes them
+//! on the PJRT CPU client from the Rust request path — Python is never on
+//! the hot path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md` and DESIGN.md).
+//!
+//! Two modules are used by the system:
+//! * `fingerprint.hlo.txt` / `batch_verify.hlo.txt` — the L1 Pallas batch
+//!   fingerprint kernel, used to bulk-verify message digests of CTBcast
+//!   tails at checkpoint/summary time (a background task in the paper);
+//! * `mlp.hlo.txt` — the forward pass of the BFT-replicated tensor
+//!   service ([`crate::apps::TensorApp`]).
+
+use anyhow::{Context, Result};
+
+/// Fixed artifact shapes — must match `python/compile/aot.py`.
+pub mod shapes {
+    /// Fingerprint batch: B messages × W u32 words.
+    pub const FP_BATCH: usize = 64;
+    pub const FP_WORDS: usize = 16;
+    /// MLP: batch × input → hidden → output.
+    pub const MLP_BATCH: usize = 8;
+    pub const MLP_IN: usize = 16;
+    pub const MLP_HIDDEN: usize = 32;
+    pub const MLP_OUT: usize = 16;
+}
+
+/// A loaded, compiled HLO module.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+// SAFETY: the PJRT CPU client and its loaded executables are internally
+// synchronized (TfrtCpuClient); we only call `execute`, which is
+// thread-safe. The xla crate merely fails to declare it.
+unsafe impl Send for Module {}
+unsafe impl Sync for Module {}
+
+/// The PJRT client wrapper. One per process; compile once, execute many.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: see Module.
+unsafe impl Send for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, path: &str) -> Result<Module> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(Module { exe, path: path.to_string() })
+    }
+
+    /// Default artifacts directory (overridable for tests).
+    pub fn artifacts_dir() -> String {
+        std::env::var("UBFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}
+
+impl Module {
+    /// Execute with the given input literals; returns the first element of
+    /// the result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Batch-fingerprint `FP_BATCH` messages of `FP_WORDS` u32 words each.
+    pub fn fingerprint_batch(&self, msgs: &[[u32; shapes::FP_WORDS]]) -> Result<Vec<u32>> {
+        use shapes::{FP_BATCH, FP_WORDS};
+        anyhow::ensure!(msgs.len() <= FP_BATCH, "batch too large");
+        let mut flat = vec![0u32; FP_BATCH * FP_WORDS];
+        for (i, m) in msgs.iter().enumerate() {
+            flat[i * FP_WORDS..(i + 1) * FP_WORDS].copy_from_slice(m);
+        }
+        let x = xla::Literal::vec1(&flat).reshape(&[FP_BATCH as i64, FP_WORDS as i64])?;
+        let out = self.run(&[x])?;
+        let v: Vec<u32> = out.to_vec()?;
+        Ok(v[..msgs.len()].to_vec())
+    }
+
+    /// Batch-verify: fingerprint the messages and compare against
+    /// `expected`; returns a 0/1 mask (1 = match).
+    pub fn batch_verify(
+        &self,
+        msgs: &[[u32; shapes::FP_WORDS]],
+        expected: &[u32],
+    ) -> Result<Vec<u32>> {
+        use shapes::{FP_BATCH, FP_WORDS};
+        anyhow::ensure!(msgs.len() <= FP_BATCH && expected.len() == msgs.len());
+        let mut flat = vec![0u32; FP_BATCH * FP_WORDS];
+        for (i, m) in msgs.iter().enumerate() {
+            flat[i * FP_WORDS..(i + 1) * FP_WORDS].copy_from_slice(m);
+        }
+        let mut exp = vec![0u32; FP_BATCH];
+        exp[..expected.len()].copy_from_slice(expected);
+        let x = xla::Literal::vec1(&flat).reshape(&[FP_BATCH as i64, FP_WORDS as i64])?;
+        let e = xla::Literal::vec1(&exp).reshape(&[FP_BATCH as i64])?;
+        let out = self.run(&[x, e])?;
+        let v: Vec<u32> = out.to_vec()?;
+        Ok(v[..msgs.len()].to_vec())
+    }
+
+    /// MLP forward: `x` is `MLP_BATCH×MLP_IN` row-major; weights/biases
+    /// per `shapes`. Returns `MLP_BATCH×MLP_OUT` row-major.
+    pub fn mlp_forward(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        use shapes::*;
+        anyhow::ensure!(x.len() == MLP_BATCH * MLP_IN);
+        anyhow::ensure!(w1.len() == MLP_IN * MLP_HIDDEN && b1.len() == MLP_HIDDEN);
+        anyhow::ensure!(w2.len() == MLP_HIDDEN * MLP_OUT && b2.len() == MLP_OUT);
+        let lx = xla::Literal::vec1(x).reshape(&[MLP_BATCH as i64, MLP_IN as i64])?;
+        let lw1 = xla::Literal::vec1(w1).reshape(&[MLP_IN as i64, MLP_HIDDEN as i64])?;
+        let lb1 = xla::Literal::vec1(b1).reshape(&[MLP_HIDDEN as i64])?;
+        let lw2 = xla::Literal::vec1(w2).reshape(&[MLP_HIDDEN as i64, MLP_OUT as i64])?;
+        let lb2 = xla::Literal::vec1(b2).reshape(&[MLP_OUT as i64])?;
+        let out = self.run(&[lx, lw1, lb1, lw2, lb2])?;
+        Ok(out.to_vec()?)
+    }
+}
+
+/// Reference implementation of the kernel's fingerprint (must equal
+/// [`crate::crypto::lane_fingerprint32`]) — used to cross-check the HLO
+/// module against native Rust.
+pub fn native_fingerprint(words: &[u32]) -> u32 {
+    crate::crypto::lane_fingerprint32(words, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::remove_var("UBFT_ARTIFACTS");
+        assert_eq!(Runtime::artifacts_dir(), "artifacts");
+    }
+
+    #[test]
+    fn native_fingerprint_is_lane_fingerprint() {
+        let words = [1u32, 2, 3, 4];
+        assert_eq!(native_fingerprint(&words), crate::crypto::lane_fingerprint32(&words, 0));
+    }
+}

@@ -1,0 +1,618 @@
+//! Deterministic discrete-event simulator.
+//!
+//! The paper's evaluation runs on a 4-machine RDMA cluster; that hardware
+//! is unavailable, so every figure/table is regenerated on this DES with a
+//! calibrated latency model (see `DESIGN.md` §1). Actors (replicas,
+//! clients, Byzantine variants, baseline protocols) are [`Actor`] state
+//! machines; memory nodes are simulated natively by the engine, including
+//! RDMA's 8-byte write atomicity (in-flight writes apply mid-flight, and
+//! can be *torn* under fault injection, which the §6.1 register checksums
+//! must detect).
+//!
+//! Determinism: a single seed drives every PRNG (network jitter, workload
+//! generators, fault injection); re-running a configuration reproduces the
+//! exact event sequence.
+
+pub mod real;
+
+use crate::config::{Config, LatencyModel};
+use crate::env::{Actor, Env, Event, MemResult, RegionId, Ticket};
+use crate::metrics::Category;
+use crate::util::Rng;
+use crate::{NodeId, Nanos};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// A network partition between two nodes during `[from, until)`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub from: Nanos,
+    pub until: Nanos,
+}
+
+/// Fault-injection plan, fixed before the run (deterministic).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Compute nodes that crash at a given time.
+    pub crash_at: BTreeMap<NodeId, Nanos>,
+    /// Memory nodes that crash at a given time.
+    pub mem_crash_at: BTreeMap<usize, Nanos>,
+    /// Probability that any point-to-point message is dropped.
+    pub drop_prob: f64,
+    /// Probability that a memory WRITE applies in two halves (torn write),
+    /// exposing RDMA's 8-byte atomicity to concurrent READs.
+    pub torn_write_prob: f64,
+    /// Pairwise partitions.
+    pub partitions: Vec<Partition>,
+}
+
+impl FaultPlan {
+    fn blocked(&self, a: NodeId, b: NodeId, now: Nanos) -> bool {
+        self.partitions.iter().any(|p| {
+            ((p.a == a && p.b == b) || (p.a == b && p.b == a)) && now >= p.from && now < p.until
+        })
+    }
+}
+
+/// Trace entries for offline analysis (Fig 9 latency decomposition).
+#[derive(Clone, Debug)]
+pub enum TraceEv {
+    Mark(&'static str),
+    Charge(Category, Nanos),
+}
+
+/// Aggregate run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub events: u64,
+    pub msgs_sent: u64,
+    pub msgs_dropped: u64,
+    pub bytes_sent: u64,
+    pub mem_writes: u64,
+    pub mem_reads: u64,
+}
+
+enum QEv {
+    Actor(NodeId, Event),
+    MemRead { requester: NodeId, mem_node: usize, region: RegionId, ticket: Ticket },
+    MemWriteApply { mem_node: usize, region: RegionId, from: usize, bytes: Vec<u8> },
+    MemWriteAck { requester: NodeId, mem_node: usize, ticket: Ticket },
+}
+
+struct QItem {
+    at: Nanos,
+    seq: u64,
+    ev: QEv,
+}
+
+impl PartialEq for QItem {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl Eq for QItem {}
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for QItem {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(o.at, o.seq))
+    }
+}
+
+/// Engine internals shared with the per-actor [`Env`] implementation.
+struct Core {
+    now: Nanos,
+    seq: u64,
+    heap: BinaryHeap<Reverse<QItem>>,
+    lat: LatencyModel,
+    faults: FaultPlan,
+    rngs: Vec<Rng>,
+    net_rng: Rng,
+    crashed: Vec<bool>,
+    busy_until: Vec<Nanos>,
+    mem_regions: BTreeMap<(usize, RegionId), Vec<u8>>,
+    mem_crashed: Vec<bool>,
+    next_ticket: Ticket,
+    pub stats: SimStats,
+    trace: Vec<(Nanos, NodeId, TraceEv)>,
+    trace_enabled: bool,
+}
+
+impl Core {
+    fn push(&mut self, at: Nanos, ev: QEv) {
+        self.seq += 1;
+        self.heap.push(Reverse(QItem { at, seq: self.seq, ev }));
+    }
+}
+
+/// The discrete-event simulator.
+pub struct Sim {
+    pub cfg: Config,
+    core: Core,
+    actors: Vec<Option<Box<dyn Actor>>>,
+    started: bool,
+}
+
+impl Sim {
+    pub fn new(cfg: Config) -> Sim {
+        let mut master = Rng::new(cfg.seed);
+        let net_rng = master.fork();
+        Sim {
+            core: Core {
+                now: 0,
+                seq: 0,
+                heap: BinaryHeap::new(),
+                lat: cfg.lat.clone(),
+                faults: FaultPlan::default(),
+                rngs: Vec::new(),
+                net_rng,
+                crashed: Vec::new(),
+                busy_until: Vec::new(),
+                mem_regions: BTreeMap::new(),
+                mem_crashed: vec![false; cfg.m],
+                next_ticket: 1,
+                stats: SimStats::default(),
+                trace: Vec::new(),
+                trace_enabled: false,
+            },
+            cfg,
+            actors: Vec::new(),
+            started: false,
+        }
+    }
+
+    /// Install the fault plan (before `run`).
+    pub fn set_faults(&mut self, f: FaultPlan) {
+        self.core.faults = f;
+    }
+
+    /// Enable Fig-9-style tracing (marks + charges).
+    pub fn enable_trace(&mut self) {
+        self.core.trace_enabled = true;
+    }
+
+    pub fn trace(&self) -> &[(Nanos, NodeId, TraceEv)] {
+        &self.core.trace
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.core.stats
+    }
+
+    pub fn now(&self) -> Nanos {
+        self.core.now
+    }
+
+    /// Register an actor; returns its node id (assigned densely from 0).
+    pub fn add_actor(&mut self, a: Box<dyn Actor>) -> NodeId {
+        let id = self.actors.len();
+        self.actors.push(Some(a));
+        let mut seed_rng = Rng::new(self.cfg.seed ^ (0x9E37 + id as u64 * 0xABCD_EF01));
+        self.core.rngs.push(seed_rng.fork());
+        self.core.crashed.push(false);
+        self.core.busy_until.push(0);
+        id
+    }
+
+    /// Borrow an actor back (e.g. to extract metrics after the run).
+    pub fn actor_mut(&mut self, id: NodeId) -> &mut dyn Actor {
+        self.actors[id].as_mut().expect("actor is not being dispatched").as_mut()
+    }
+
+    /// Total bytes currently allocated on one memory node (Table 2).
+    pub fn mem_node_bytes(&self, node: usize) -> u64 {
+        self.core
+            .mem_regions
+            .iter()
+            .filter(|((n, _), _)| *n == node)
+            .map(|(_, v)| v.len() as u64)
+            .sum()
+    }
+
+    fn start_all(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        for id in 0..self.actors.len() {
+            self.dispatch_start(id);
+        }
+    }
+
+    fn dispatch_start(&mut self, id: NodeId) {
+        let mut actor = self.actors[id].take().expect("actor present");
+        let mut env = EnvImpl { core: &mut self.core, me: id, charged: 0, handler_start: 0 };
+        env.handler_start = env.core.now.max(env.core.busy_until[id]);
+        actor.on_start(&mut env);
+        let busy = env.handler_start + env.charged;
+        self.core.busy_until[id] = self.core.busy_until[id].max(busy);
+        self.actors[id] = Some(actor);
+    }
+
+    /// Run until the event queue empties or the virtual clock passes
+    /// `until`. Returns the final virtual time.
+    pub fn run_until(&mut self, until: Nanos) -> Nanos {
+        self.start_all();
+        while let Some(Reverse(item)) = self.core.heap.pop() {
+            if item.at > until {
+                // put it back and stop
+                self.core.heap.push(Reverse(item));
+                self.core.now = until;
+                break;
+            }
+            self.core.now = item.at;
+            self.core.stats.events += 1;
+            match item.ev {
+                QEv::Actor(dst, ev) => self.deliver(dst, item.at, ev),
+                QEv::MemRead { requester, mem_node, region, ticket } => {
+                    let bytes = self
+                        .core
+                        .mem_regions
+                        .get(&(mem_node, region))
+                        .cloned()
+                        .unwrap_or_default();
+                    self.core.push(
+                        self.core.now,
+                        QEv::Actor(
+                            requester,
+                            Event::MemDone { mem_node, ticket, result: MemResult::Read(bytes) },
+                        ),
+                    );
+                }
+                QEv::MemWriteApply { mem_node, region, from, bytes } => {
+                    let slot = self.core.mem_regions.entry((mem_node, region)).or_default();
+                    if slot.len() < from + bytes.len() {
+                        slot.resize(from + bytes.len(), 0);
+                    }
+                    slot[from..from + bytes.len()].copy_from_slice(&bytes);
+                }
+                QEv::MemWriteAck { requester, mem_node, ticket } => {
+                    self.core.push(
+                        self.core.now,
+                        QEv::Actor(
+                            requester,
+                            Event::MemDone { mem_node, ticket, result: MemResult::Written },
+                        ),
+                    );
+                }
+            }
+        }
+        self.core.now
+    }
+
+    fn deliver(&mut self, dst: NodeId, at: Nanos, ev: Event) {
+        if dst >= self.actors.len() || self.core.crashed[dst] {
+            return;
+        }
+        if let Some(&t) = self.core.faults.crash_at.get(&dst) {
+            if at >= t {
+                self.core.crashed[dst] = true;
+                return;
+            }
+        }
+        // Model serial event processing: if the actor is busy, requeue.
+        if self.core.busy_until[dst] > at {
+            let when = self.core.busy_until[dst];
+            self.core.push(when, QEv::Actor(dst, ev));
+            return;
+        }
+        let mut actor = self.actors[dst].take().expect("actor present");
+        let mut env = EnvImpl { core: &mut self.core, me: dst, charged: 0, handler_start: at };
+        actor.on_event(&mut env, ev);
+        let busy = at + env.charged;
+        self.core.busy_until[dst] = self.core.busy_until[dst].max(busy);
+        self.actors[dst] = Some(actor);
+    }
+}
+
+struct EnvImpl<'a> {
+    core: &'a mut Core,
+    me: NodeId,
+    /// Processing time charged so far within the current handler.
+    charged: Nanos,
+    handler_start: Nanos,
+}
+
+impl<'a> Env for EnvImpl<'a> {
+    fn me(&self) -> NodeId {
+        self.me
+    }
+
+    fn now(&self) -> Nanos {
+        self.handler_start + self.charged
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.core.rngs[self.me]
+    }
+
+    fn send(&mut self, dst: NodeId, bytes: Vec<u8>) {
+        let now = self.now();
+        self.core.stats.msgs_sent += 1;
+        self.core.stats.bytes_sent += bytes.len() as u64;
+        if self.core.faults.drop_prob > 0.0 && self.core.net_rng.chance(self.core.faults.drop_prob)
+        {
+            self.core.stats.msgs_dropped += 1;
+            return;
+        }
+        if self.core.faults.blocked(self.me, dst, now) {
+            self.core.stats.msgs_dropped += 1;
+            return;
+        }
+        let jitter = if self.core.lat.jitter_mean > 0 {
+            self.core.net_rng.exp(self.core.lat.jitter_mean as f64) as Nanos
+        } else {
+            0
+        };
+        let at = now + self.core.lat.msg(bytes.len()) + jitter;
+        self.core.push(at, QEv::Actor(dst, Event::Recv { from: self.me, bytes }));
+    }
+
+    fn charge(&mut self, cat: Category, ns: Nanos) {
+        self.charged += ns;
+        if self.core.trace_enabled {
+            let t = self.handler_start + self.charged;
+            self.core.trace.push((t, self.me, TraceEv::Charge(cat, ns)));
+        }
+    }
+
+    fn set_timer(&mut self, after: Nanos, token: u64) {
+        let at = self.now() + after;
+        self.core.push(at, QEv::Actor(self.me, Event::Timer { token }));
+    }
+
+    fn mem_write(&mut self, mem_node: usize, region: RegionId, bytes: Vec<u8>) -> Ticket {
+        let ticket = self.core.next_ticket;
+        self.core.next_ticket += 1;
+        self.core.stats.mem_writes += 1;
+        let now = self.now();
+
+        // Single-writer permission: enforced by the (trusted) memory node.
+        if region.owner != self.me {
+            self.core.push(
+                now + self.core.lat.rdma_write,
+                QEv::Actor(
+                    self.me,
+                    Event::MemDone { mem_node, ticket, result: MemResult::Denied },
+                ),
+            );
+            return ticket;
+        }
+        if self.mem_dead(mem_node, now) {
+            return ticket; // never completes: crashed memory node
+        }
+        let done = now + self.core.lat.rdma_write;
+        let mid = now + self.core.lat.rdma_write / 2;
+        let torn = self.core.faults.torn_write_prob > 0.0
+            && bytes.len() > 8
+            && self.core.net_rng.chance(self.core.faults.torn_write_prob);
+        if torn {
+            // The write lands in two 8-byte-aligned halves: RDMA only
+            // guarantees 8-byte atomicity (§6.1). A READ landing between
+            // the two applies observes a torn value.
+            let cut = {
+                let words = bytes.len() / 8;
+                8 * self.core.net_rng.range(1, words.max(2))
+            };
+            let (a, b) = bytes.split_at(cut.min(bytes.len()));
+            let (a, b) = (a.to_vec(), b.to_vec());
+            let cut = a.len();
+            self.core.push(mid, QEv::MemWriteApply { mem_node, region, from: 0, bytes: a });
+            self.core.push(
+                done.saturating_sub(1),
+                QEv::MemWriteApply { mem_node, region, from: cut, bytes: b },
+            );
+        } else {
+            self.core.push(mid, QEv::MemWriteApply { mem_node, region, from: 0, bytes });
+        }
+        self.core.push(done, QEv::MemWriteAck { requester: self.me, mem_node, ticket });
+        ticket
+    }
+
+    fn mem_read(&mut self, mem_node: usize, region: RegionId) -> Ticket {
+        let ticket = self.core.next_ticket;
+        self.core.next_ticket += 1;
+        self.core.stats.mem_reads += 1;
+        let now = self.now();
+        if self.mem_dead(mem_node, now) {
+            return ticket; // never completes
+        }
+        let at = now + self.core.lat.rdma_read;
+        self.core.push(at, QEv::MemRead { requester: self.me, mem_node, region, ticket });
+        ticket
+    }
+
+    fn mark(&mut self, label: &'static str) {
+        if self.core.trace_enabled {
+            let t = self.now();
+            self.core.trace.push((t, self.me, TraceEv::Mark(label)));
+        }
+    }
+}
+
+impl<'a> EnvImpl<'a> {
+    fn mem_dead(&mut self, mem_node: usize, now: Nanos) -> bool {
+        if mem_node >= self.core.mem_crashed.len() {
+            return true;
+        }
+        if let Some(&t) = self.core.faults.mem_crash_at.get(&mem_node) {
+            if now >= t {
+                self.core.mem_crashed[mem_node] = true;
+            }
+        }
+        self.core.mem_crashed[mem_node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ping-pong actor: responds to every Recv with an immediate reply,
+    /// records receive times.
+    struct Pinger {
+        peer: NodeId,
+        times: Vec<Nanos>,
+        rounds: usize,
+        kick: bool,
+    }
+
+    impl Actor for Pinger {
+        fn on_start(&mut self, env: &mut dyn Env) {
+            if self.kick {
+                env.send(self.peer, vec![0u8; 32]);
+            }
+        }
+        fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+            if let Event::Recv { from, .. } = ev {
+                self.times.push(env.now());
+                if self.times.len() < self.rounds {
+                    env.send(from, vec![0u8; 32]);
+                }
+            }
+        }
+    }
+
+    fn no_jitter_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.lat.jitter_mean = 0;
+        cfg
+    }
+
+    #[test]
+    fn message_latency_matches_model() {
+        let cfg = no_jitter_cfg();
+        let expect = cfg.lat.msg(32);
+        let mut sim = Sim::new(cfg);
+        let a = sim.add_actor(Box::new(Pinger { peer: 1, times: vec![], rounds: 2, kick: true }));
+        let b = sim.add_actor(Box::new(Pinger { peer: 0, times: vec![], rounds: 2, kick: false }));
+        assert_eq!((a, b), (0, 1));
+        sim.run_until(crate::SECOND);
+        // b receives at exactly one one-way delay; a at two.
+        let get = |sim: &mut Sim, id: NodeId| {
+            let any = sim.actors[id].as_mut().unwrap();
+            // downcast via raw pointer: test-only
+            let p = any.as_mut() as *mut dyn Actor as *mut Pinger;
+            unsafe { (*p).times.clone() }
+        };
+        let tb = get(&mut sim, b);
+        let ta = get(&mut sim, a);
+        assert_eq!(tb[0], expect);
+        assert_eq!(ta[0], 2 * expect);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_trace() {
+        let run = |seed: u64| {
+            let mut cfg = Config::default();
+            cfg.seed = seed;
+            let mut sim = Sim::new(cfg);
+            sim.add_actor(Box::new(Pinger { peer: 1, times: vec![], rounds: 50, kick: true }));
+            sim.add_actor(Box::new(Pinger { peer: 0, times: vec![], rounds: 50, kick: false }));
+            sim.run_until(crate::SECOND);
+            (sim.stats().msgs_sent, sim.now())
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1).1, run(2).1); // different jitter sequences
+    }
+
+    /// Writer/reader pair for the memory-node API.
+    struct MemUser {
+        do_write: bool,
+        results: Vec<MemResult>,
+    }
+
+    impl Actor for MemUser {
+        fn on_start(&mut self, env: &mut dyn Env) {
+            let region = RegionId { owner: 0, reg: 7 };
+            if self.do_write {
+                env.mem_write(0, region, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+            } else {
+                // reader waits, then reads
+                env.set_timer(100_000, 1);
+            }
+        }
+        fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+            match ev {
+                Event::Timer { .. } => {
+                    env.mem_read(0, RegionId { owner: 0, reg: 7 });
+                }
+                Event::MemDone { result, .. } => self.results.push(result),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn mem_write_then_read_roundtrip() {
+        let mut sim = Sim::new(no_jitter_cfg());
+        sim.add_actor(Box::new(MemUser { do_write: true, results: vec![] }));
+        sim.add_actor(Box::new(MemUser { do_write: false, results: vec![] }));
+        sim.run_until(crate::SECOND);
+        let reader = sim.actors[1].as_mut().unwrap();
+        let p = reader.as_mut() as *mut dyn Actor as *mut MemUser;
+        let results = unsafe { (*p).results.clone() };
+        assert_eq!(results.len(), 1);
+        match &results[0] {
+            MemResult::Read(v) => assert_eq!(v, &vec![1, 2, 3, 4, 5, 6, 7, 8, 9]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_owner_write_denied() {
+        struct Intruder {
+            got: Option<MemResult>,
+        }
+        impl Actor for Intruder {
+            fn on_start(&mut self, env: &mut dyn Env) {
+                // actor 0 tries to write a region owned by node 1
+                env.mem_write(0, RegionId { owner: 1, reg: 0 }, vec![9; 16]);
+            }
+            fn on_event(&mut self, _env: &mut dyn Env, ev: Event) {
+                if let Event::MemDone { result, .. } = ev {
+                    self.got = Some(result);
+                }
+            }
+        }
+        let mut sim = Sim::new(no_jitter_cfg());
+        sim.add_actor(Box::new(Intruder { got: None }));
+        sim.run_until(crate::SECOND);
+        let a = sim.actors[0].as_mut().unwrap();
+        let p = a.as_mut() as *mut dyn Actor as *mut Intruder;
+        assert_eq!(unsafe { (*p).got.clone() }, Some(MemResult::Denied));
+    }
+
+    #[test]
+    fn crashed_memory_node_never_completes() {
+        let mut sim = Sim::new(no_jitter_cfg());
+        let mut faults = FaultPlan::default();
+        faults.mem_crash_at.insert(0, 0);
+        sim.set_faults(faults);
+        sim.add_actor(Box::new(MemUser { do_write: true, results: vec![] }));
+        sim.run_until(crate::SECOND);
+        let a = sim.actors[0].as_mut().unwrap();
+        let p = a.as_mut() as *mut dyn Actor as *mut MemUser;
+        assert!(unsafe { (*p).results.is_empty() });
+    }
+
+    #[test]
+    fn crash_fault_stops_delivery() {
+        let mut cfg = no_jitter_cfg();
+        cfg.seed = 5;
+        let mut sim = Sim::new(cfg);
+        sim.add_actor(Box::new(Pinger { peer: 1, times: vec![], rounds: 1000, kick: true }));
+        sim.add_actor(Box::new(Pinger { peer: 0, times: vec![], rounds: 1000, kick: false }));
+        let mut faults = FaultPlan::default();
+        faults.crash_at.insert(1, 3_000); // crash b at 3µs
+        sim.set_faults(faults);
+        sim.run_until(crate::SECOND);
+        // Far fewer than 1000 rounds happened.
+        assert!(sim.stats().msgs_sent < 20);
+    }
+}

@@ -1,0 +1,315 @@
+//! Real-thread driver: runs the same [`Actor`] state machines as the DES,
+//! but over OS threads, channels and wall-clock time, with real crypto.
+//!
+//! Used by the `examples/` binaries and integration tests to demonstrate
+//! that the protocol stack is deployable, not only simulatable. The
+//! in-process channel plays the role of the RDMA fabric: one-way writes
+//! into the receiver's ring, no acknowledgements (the byte-exact ring
+//! lives in [`crate::p2p`]; here messages are already framed).
+
+use crate::env::{Actor, Env, Event, MemResult, RegionId, Ticket};
+use crate::metrics::Category;
+use crate::util::Rng;
+use crate::{NodeId, Nanos};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared "disaggregated memory": the memory nodes of the prototype,
+/// reachable from every actor thread. WRITE permission is enforced per
+/// region owner exactly like the simulated fabric.
+#[derive(Default)]
+pub struct RealMem {
+    regions: Mutex<BTreeMap<(usize, RegionId), Vec<u8>>>,
+    crashed: Mutex<Vec<bool>>,
+}
+
+impl RealMem {
+    pub fn new(n_mem: usize) -> RealMem {
+        RealMem {
+            regions: Mutex::new(BTreeMap::new()),
+            crashed: Mutex::new(vec![false; n_mem]),
+        }
+    }
+
+    pub fn crash(&self, node: usize) {
+        self.crashed.lock().unwrap()[node] = true;
+    }
+
+    pub fn node_bytes(&self, node: usize) -> u64 {
+        self.regions
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((n, _), _)| *n == node)
+            .map(|(_, v)| v.len() as u64)
+            .sum()
+    }
+}
+
+/// A running deployment of actors on threads.
+pub struct RealCluster {
+    senders: Vec<Sender<Event>>,
+    handles: Vec<std::thread::JoinHandle<Box<dyn Actor>>>,
+    stop: Arc<AtomicBool>,
+    pub mem: Arc<RealMem>,
+    pending: Vec<Option<(Box<dyn Actor>, Receiver<Event>)>>,
+    seed: u64,
+}
+
+impl RealCluster {
+    pub fn new(n_mem: usize, seed: u64) -> RealCluster {
+        RealCluster {
+            senders: Vec::new(),
+            handles: Vec::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+            mem: Arc::new(RealMem::new(n_mem)),
+            pending: Vec::new(),
+            seed,
+        }
+    }
+
+    /// Register an actor. All actors must be added before [`Self::start`].
+    pub fn add_actor(&mut self, actor: Box<dyn Actor>) -> NodeId {
+        let id = self.pending.len();
+        let (tx, rx) = channel();
+        self.senders.push(tx);
+        self.pending.push(Some((actor, rx)));
+        id
+    }
+
+    /// Inject an event from outside (e.g. a workload driver).
+    pub fn inject(&self, dst: NodeId, ev: Event) {
+        let _ = self.senders[dst].send(ev);
+    }
+
+    /// Launch one thread per actor.
+    pub fn start(&mut self) {
+        let epoch = Instant::now();
+        for id in 0..self.pending.len() {
+            let (actor, rx) = self.pending[id].take().expect("already started?");
+            let senders = self.senders.clone();
+            let stop = self.stop.clone();
+            let mem = self.mem.clone();
+            let seed = self.seed ^ ((id as u64) << 32);
+            let handle = std::thread::Builder::new()
+                .name(format!("ubft-actor-{id}"))
+                .spawn(move || run_actor(id, actor, rx, senders, stop, mem, epoch, seed))
+                .expect("spawn actor thread");
+            self.handles.push(handle);
+        }
+    }
+
+    /// Signal shutdown and join, returning the actors (for metric
+    /// extraction).
+    pub fn stop(mut self) -> Vec<Box<dyn Actor>> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handles.drain(..).map(|h| h.join().expect("actor thread panicked")).collect()
+    }
+}
+
+struct RealEnv {
+    me: NodeId,
+    senders: Vec<Sender<Event>>,
+    mem: Arc<RealMem>,
+    epoch: Instant,
+    rng: Rng,
+    timers: Vec<(Nanos, u64)>, // (deadline, token)
+    next_ticket: Ticket,
+    /// Memory completions performed synchronously, drained after handler.
+    mem_done: Vec<Event>,
+}
+
+impl RealEnv {
+    fn now_ns(&self) -> Nanos {
+        self.epoch.elapsed().as_nanos() as Nanos
+    }
+}
+
+impl Env for RealEnv {
+    fn me(&self) -> NodeId {
+        self.me
+    }
+    fn now(&self) -> Nanos {
+        self.now_ns()
+    }
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+    fn send(&mut self, dst: NodeId, bytes: Vec<u8>) {
+        if dst < self.senders.len() {
+            let _ = self.senders[dst].send(Event::Recv { from: self.me, bytes });
+        }
+    }
+    fn charge(&mut self, _cat: Category, _ns: Nanos) {
+        // Real computation already takes real time.
+    }
+    fn set_timer(&mut self, after: Nanos, token: u64) {
+        self.timers.push((self.now_ns() + after, token));
+    }
+    fn mem_write(&mut self, mem_node: usize, region: RegionId, bytes: Vec<u8>) -> Ticket {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let crashed = self.mem.crashed.lock().unwrap().get(mem_node).copied().unwrap_or(true);
+        if crashed {
+            return ticket; // never completes
+        }
+        let result = if region.owner != self.me {
+            MemResult::Denied
+        } else {
+            let mut regions = self.mem.regions.lock().unwrap();
+            let slot = regions.entry((mem_node, region)).or_default();
+            slot.clear();
+            slot.extend_from_slice(&bytes);
+            MemResult::Written
+        };
+        self.mem_done.push(Event::MemDone { mem_node, ticket, result });
+        ticket
+    }
+    fn mem_read(&mut self, mem_node: usize, region: RegionId) -> Ticket {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let crashed = self.mem.crashed.lock().unwrap().get(mem_node).copied().unwrap_or(true);
+        if crashed {
+            return ticket;
+        }
+        let bytes =
+            self.mem.regions.lock().unwrap().get(&(mem_node, region)).cloned().unwrap_or_default();
+        self.mem_done.push(Event::MemDone { mem_node, ticket, result: MemResult::Read(bytes) });
+        ticket
+    }
+    fn mark(&mut self, _label: &'static str) {}
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_actor(
+    id: NodeId,
+    mut actor: Box<dyn Actor>,
+    rx: Receiver<Event>,
+    senders: Vec<Sender<Event>>,
+    stop: Arc<AtomicBool>,
+    mem: Arc<RealMem>,
+    epoch: Instant,
+    seed: u64,
+) -> Box<dyn Actor> {
+    let mut env = RealEnv {
+        me: id,
+        senders,
+        mem,
+        epoch,
+        rng: Rng::new(seed),
+        timers: Vec::new(),
+        next_ticket: 1,
+        mem_done: Vec::new(),
+    };
+    actor.on_start(&mut env);
+    loop {
+        // Drain synchronous memory completions first.
+        while let Some(ev) = if env.mem_done.is_empty() { None } else { Some(env.mem_done.remove(0)) }
+        {
+            actor.on_event(&mut env, ev);
+        }
+        if stop.load(Ordering::SeqCst) {
+            return actor;
+        }
+        // Fire due timers.
+        let now = env.now_ns();
+        let mut fired = Vec::new();
+        env.timers.retain(|&(at, token)| {
+            if at <= now {
+                fired.push(token);
+                false
+            } else {
+                true
+            }
+        });
+        for token in fired {
+            actor.on_event(&mut env, Event::Timer { token });
+        }
+        // Wait for the next message or timer deadline.
+        let timeout = env
+            .timers
+            .iter()
+            .map(|&(at, _)| at.saturating_sub(now))
+            .min()
+            .unwrap_or(2_000_000) // 2 ms poll for stop flag
+            .min(2_000_000);
+        match rx.recv_timeout(Duration::from_nanos(timeout)) {
+            Ok(ev) => actor.on_event(&mut env, ev),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return actor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    struct Echo {
+        hits: Arc<AtomicU64>,
+    }
+    impl Actor for Echo {
+        fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+            if let Event::Recv { from, bytes } = ev {
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                if bytes[0] > 0 {
+                    let mut b = bytes.clone();
+                    b[0] -= 1;
+                    env.send(from, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threads_ping_pong() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut cluster = RealCluster::new(1, 42);
+        cluster.add_actor(Box::new(Echo { hits: hits.clone() }));
+        cluster.add_actor(Box::new(Echo { hits: hits.clone() }));
+        cluster.start();
+        cluster.inject(0, Event::Recv { from: 1, bytes: vec![10] });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while hits.load(Ordering::SeqCst) < 11 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        cluster.stop();
+        assert_eq!(hits.load(Ordering::SeqCst), 11);
+    }
+
+    struct MemWriterReader {
+        ok: Arc<AtomicU64>,
+    }
+    impl Actor for MemWriterReader {
+        fn on_start(&mut self, env: &mut dyn Env) {
+            let region = RegionId { owner: env.me(), reg: 1 };
+            env.mem_write(0, region, vec![7; 24]);
+            env.mem_read(0, region);
+        }
+        fn on_event(&mut self, _env: &mut dyn Env, ev: Event) {
+            if let Event::MemDone { result: MemResult::Read(v), .. } = ev {
+                if v == vec![7; 24] {
+                    self.ok.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn real_mem_roundtrip() {
+        let ok = Arc::new(AtomicU64::new(0));
+        let mut cluster = RealCluster::new(1, 1);
+        cluster.add_actor(Box::new(MemWriterReader { ok: ok.clone() }));
+        cluster.start();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ok.load(Ordering::SeqCst) < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        cluster.stop();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal property-based testing framework (the `proptest` crate is
+//! unavailable offline). Seeded generators, configurable case counts, and
+//! failure reporting with the reproducing seed.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this environment)
+//! use ubft::testing::props;
+//! props(20, |g| {
+//!     let xs: Vec<u32> = g.vec(0..64, |g| g.u32());
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     assert_eq!(sorted.len(), xs.len());
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// A seeded generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+    pub fn u8(&mut self) -> u8 {
+        self.rng.next_u64() as u8
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.rng.range(0, max_len + 1);
+        self.rng.bytes(n)
+    }
+    /// A vector with length drawn from `len`, elements from `f`.
+    pub fn vec<T>(&mut self, len: std::ops::Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.rng.range(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| f(self)).collect()
+    }
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+    /// Access the raw RNG (e.g. for workload generators).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property cases with distinct seeds. Panics (with the seed)
+/// on the first failing case. Set `UBFT_PROP_SEED` to reproduce one case.
+pub fn props(cases: usize, mut property: impl FnMut(&mut Gen)) {
+    if let Ok(s) = std::env::var("UBFT_PROP_SEED") {
+        let seed: u64 = s.parse().expect("UBFT_PROP_SEED must be a u64");
+        let mut g = Gen { rng: Rng::new(seed), case: 0 };
+        property(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = SEED_BASE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case}; reproduce with UBFT_PROP_SEED={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+const SEED_BASE: u64 = 0x5EED_BA5E_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_runs_all_cases() {
+        let mut count = 0;
+        props(50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        props(100, |g| {
+            let n = g.range(3, 9);
+            assert!((3..9).contains(&n));
+            let v = g.vec(1..5, |g| g.u8());
+            assert!((1..5).contains(&v.len()));
+            let b = g.bytes(16);
+            assert!(b.len() <= 16);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        props(10, |g| {
+            assert!(g.case < 5, "deliberate failure");
+        });
+    }
+}

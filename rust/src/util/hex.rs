@@ -1,0 +1,41 @@
+//! Minimal hex encode/decode (test vectors, debugging, key files).
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Decode a hex string (case-insensitive, no separators).
+pub fn decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let bytes = s.as_bytes();
+    for i in (0..bytes.len()).step_by(2) {
+        let hi = (bytes[i] as char).to_digit(16)?;
+        let lo = (bytes[i + 1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn roundtrip() {
+        let v = vec![0x00, 0xde, 0xad, 0xbe, 0xef, 0xff];
+        assert_eq!(super::encode(&v), "00deadbeefff");
+        assert_eq!(super::decode("00DEadBEefFF").unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(super::decode("abc").is_none());
+        assert!(super::decode("zz").is_none());
+    }
+}

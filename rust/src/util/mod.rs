@@ -1,0 +1,53 @@
+//! Small shared utilities: deterministic PRNG, wire encoding, hex.
+
+pub mod rng;
+pub mod wire;
+pub mod hex;
+
+pub use rng::Rng;
+pub use wire::{WireReader, WireWriter, Wire, WireError};
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Pretty-print a byte count (GiB/MiB/KiB/B), matching the paper's tables.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2} GiB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.1} MiB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.0} KiB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Pretty-print nanoseconds as µs with two decimals (paper plots are in µs).
+pub fn fmt_us(ns: crate::Nanos) -> String {
+    format!("{:.2} µs", ns as f64 / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(20 * 1024), "20 KiB");
+        assert_eq!(fmt_bytes(1024 * 1024), "1.0 MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024 + 1), "5.00 GiB");
+    }
+}

@@ -1,0 +1,357 @@
+//! Canonical binary wire format.
+//!
+//! All protocol messages, register contents, certificates and state
+//! summaries are encoded with this little fixed-width, little-endian
+//! format. Encoding is *canonical* (a value has exactly one encoding),
+//! which matters for uBFT: CTBcast summaries and view-change certificates
+//! are signatures over encoded state, and f+1 replicas must produce
+//! byte-identical encodings of the same logical state (§5.2, §5.3).
+
+use std::collections::BTreeMap;
+
+/// Error raised when decoding malformed bytes (e.g. from a Byzantine peer).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    #[error("unexpected end of input at offset {0}")]
+    Eof(usize),
+    #[error("invalid tag {tag} for {what}")]
+    BadTag { what: &'static str, tag: u8 },
+    #[error("length {0} exceeds limit {1}")]
+    TooLong(usize, usize),
+    #[error("trailing garbage: {0} bytes left")]
+    Trailing(usize),
+}
+
+/// Writer half: appends fixed-width little-endian values to a buffer.
+#[derive(Debug, Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        WireWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        WireWriter { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    /// Length-prefixed byte string (u32 length).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    /// Raw bytes, no length prefix (fixed-size fields).
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Reader half: consumes values written by [`WireWriter`].
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Eof(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+    /// Length-prefixed byte string with a sanity limit against hostile input.
+    pub fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        const LIMIT: usize = 64 << 20;
+        let n = self.u32()? as usize;
+        if n > LIMIT {
+            return Err(WireError::TooLong(n, LIMIT));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+    /// Fixed-size array of N raw bytes.
+    pub fn array<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
+        Ok(self.take(N)?.try_into().unwrap())
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    /// Assert the input was fully consumed.
+    pub fn done(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Trailing(self.remaining()))
+        }
+    }
+}
+
+/// Types with a canonical wire encoding.
+pub trait Wire: Sized {
+    fn put(&self, w: &mut WireWriter);
+    fn get(r: &mut WireReader) -> Result<Self, WireError>;
+
+    /// Encode into a fresh buffer.
+    fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        self.put(&mut w);
+        w.finish()
+    }
+
+    /// Decode, requiring full consumption of `buf`.
+    fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = WireReader::new(buf);
+        let v = Self::get(&mut r)?;
+        r.done()?;
+        Ok(v)
+    }
+}
+
+impl Wire for u8 {
+    fn put(&self, w: &mut WireWriter) {
+        w.u8(*self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.u8()
+    }
+}
+impl Wire for u16 {
+    fn put(&self, w: &mut WireWriter) {
+        w.u16(*self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.u16()
+    }
+}
+impl Wire for u32 {
+    fn put(&self, w: &mut WireWriter) {
+        w.u32(*self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.u32()
+    }
+}
+impl Wire for u64 {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(*self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.u64()
+    }
+}
+impl Wire for usize {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(*self as u64)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(r.u64()? as usize)
+    }
+}
+impl Wire for bool {
+    fn put(&self, w: &mut WireWriter) {
+        w.bool(*self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.bool()
+    }
+}
+impl Wire for Vec<u8> {
+    fn put(&self, w: &mut WireWriter) {
+        w.bytes(self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.bytes()
+    }
+}
+impl<const N: usize> Wire for [u8; N] {
+    fn put(&self, w: &mut WireWriter) {
+        w.raw(self)
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        r.array::<N>()
+    }
+}
+impl<T: Wire> Wire for Option<T> {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            None => w.u8(0),
+            Some(v) => {
+                w.u8(1);
+                v.put(w);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::get(r)?)),
+            tag => Err(WireError::BadTag { what: "Option", tag }),
+        }
+    }
+}
+
+/// Generic list encoding (u32 count). Not provided for `Vec<u8>` which is a
+/// byte string; use this for message vectors etc.
+pub fn put_list<T: Wire>(w: &mut WireWriter, xs: &[T]) {
+    w.u32(xs.len() as u32);
+    for x in xs {
+        x.put(w);
+    }
+}
+
+pub fn get_list<T: Wire>(r: &mut WireReader) -> Result<Vec<T>, WireError> {
+    const LIMIT: usize = 1 << 20;
+    let n = r.u32()? as usize;
+    if n > LIMIT {
+        return Err(WireError::TooLong(n, LIMIT));
+    }
+    let mut v = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        v.push(T::get(r)?);
+    }
+    Ok(v)
+}
+
+/// Canonical map encoding: keys in ascending order (BTreeMap iteration).
+pub fn put_map<K: Wire + Ord, V: Wire>(w: &mut WireWriter, m: &BTreeMap<K, V>) {
+    w.u32(m.len() as u32);
+    for (k, v) in m {
+        k.put(w);
+        v.put(w);
+    }
+}
+
+pub fn get_map<K: Wire + Ord, V: Wire>(r: &mut WireReader) -> Result<BTreeMap<K, V>, WireError> {
+    const LIMIT: usize = 1 << 20;
+    let n = r.u32()? as usize;
+    if n > LIMIT {
+        return Err(WireError::TooLong(n, LIMIT));
+    }
+    let mut m = BTreeMap::new();
+    for _ in 0..n {
+        let k = K::get(r)?;
+        let v = V::get(r)?;
+        m.insert(k, v);
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut w = WireWriter::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(u64::MAX);
+        w.bool(true);
+        w.bytes(b"hello");
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.bytes().unwrap(), b"hello");
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn eof_detected() {
+        let mut r = WireReader::new(&[1, 2]);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn option_roundtrip() {
+        let v: Option<u32> = Some(9);
+        assert_eq!(Option::<u32>::decode(&v.encode()).unwrap(), Some(9));
+        let n: Option<u32> = None;
+        assert_eq!(Option::<u32>::decode(&n.encode()).unwrap(), None);
+    }
+
+    #[test]
+    fn list_and_map_roundtrip() {
+        let xs: Vec<u64> = vec![3, 1, 4, 1, 5];
+        let mut w = WireWriter::new();
+        put_list(&mut w, &xs);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(get_list::<u64>(&mut r).unwrap(), xs);
+
+        let mut m = BTreeMap::new();
+        m.insert(2u32, vec![1u8, 2]);
+        m.insert(1u32, vec![9u8]);
+        let mut w = WireWriter::new();
+        put_map(&mut w, &m);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(get_map::<u32, Vec<u8>>(&mut r).unwrap(), m);
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = 5u32.encode();
+        buf.push(0);
+        assert!(u32::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        // A length prefix of u32::MAX must not cause a huge allocation.
+        let buf = u32::MAX.encode();
+        let mut r = WireReader::new(&buf);
+        assert!(matches!(r.bytes(), Err(WireError::TooLong(..))));
+    }
+}

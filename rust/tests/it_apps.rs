@@ -1,0 +1,101 @@
+//! End-to-end application tests: every §7.1 workload replicated by uBFT
+//! with all replicas converging to identical application state.
+
+use ubft::apps::{flip::FlipWorkload, kv::KvWorkload, orderbook::OrderWorkload, redis_like::RedisWorkload};
+use ubft::config::Config;
+use ubft::consensus::Replica;
+use ubft::rpc::{Client, Workload};
+use ubft::sim::Sim;
+use ubft::smr::App;
+
+fn run_app(
+    mk_app: impl Fn() -> Box<dyn App>,
+    workload: Box<dyn Workload>,
+    requests: usize,
+) -> (usize, Vec<(u64, ubft::crypto::Hash32)>, u64) {
+    let cfg = Config::default();
+    let mut sim = Sim::new(cfg.clone());
+    for i in 0..cfg.n {
+        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), mk_app())));
+    }
+    let client = Client::new((0..cfg.n).collect(), cfg.quorum(), workload, requests);
+    let samples = client.samples_handle();
+    let done = client.done_handle();
+    sim.add_actor(Box::new(client));
+    let mut horizon = ubft::SECOND;
+    while done.lock().unwrap().is_none() && horizon <= 32 * ubft::SECOND {
+        sim.run_until(horizon);
+        horizon *= 2;
+    }
+    let done = samples.lock().unwrap().len();
+    let mismatches = {
+        let c = sim.actor_mut(cfg.n);
+        let cl = unsafe { &*(c as *const dyn ubft::env::Actor as *const Client) };
+        cl.mismatches
+    };
+    let digests = (0..cfg.n)
+        .map(|i| {
+            let a = sim.actor_mut(i);
+            let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
+            (r.applied_upto(), r.app().digest())
+        })
+        .collect();
+    (done, digests, mismatches)
+}
+
+fn assert_converged(digests: &[(u64, ubft::crypto::Hash32)]) {
+    assert!(digests.windows(2).all(|w| w[0] == w[1]), "replicas diverged: {digests:?}");
+}
+
+#[test]
+fn flip_replicates_and_responses_are_reversed() {
+    let (done, digests, mismatches) =
+        run_app(|| Box::new(ubft::apps::FlipApp::new()), Box::new(FlipWorkload { size: 32 }), 150);
+    assert_eq!(done, 150);
+    assert_eq!(mismatches, 0, "flip responses must be exact reverses");
+    assert_converged(&digests);
+}
+
+#[test]
+fn memcached_mix_replicates() {
+    let (done, digests, _) =
+        run_app(|| Box::new(ubft::apps::KvApp::new()), Box::new(KvWorkload::paper()), 300);
+    assert_eq!(done, 300);
+    assert_converged(&digests);
+}
+
+#[test]
+fn redis_mix_replicates() {
+    let (done, digests, _) = run_app(
+        || Box::new(ubft::apps::RedisApp::new()),
+        Box::new(RedisWorkload { keys: 256 }),
+        300,
+    );
+    assert_eq!(done, 300);
+    assert_converged(&digests);
+}
+
+#[test]
+fn order_matching_replicates_deterministically() {
+    let (done, digests, mismatches) = run_app(
+        || Box::new(ubft::apps::OrderBookApp::new()),
+        Box::new(OrderWorkload::paper()),
+        400,
+    );
+    assert_eq!(done, 400);
+    assert_eq!(mismatches, 0);
+    assert_converged(&digests);
+}
+
+#[test]
+fn larger_requests_replicate() {
+    use ubft::rpc::BytesWorkload;
+    use ubft::smr::NoopApp;
+    let (done, digests, _) = run_app(
+        || Box::new(NoopApp::new()),
+        Box::new(BytesWorkload { size: 4096, label: "big" }),
+        100,
+    );
+    assert_eq!(done, 100);
+    assert_converged(&digests);
+}

@@ -1,0 +1,75 @@
+//! Baseline-system integration: the cross-system latency ordering the
+//! whole evaluation rests on, plus Mu/MinBFT behavioural checks.
+
+use ubft::config::Config;
+use ubft::harness::{run_latency, AppFactory, System};
+use ubft::rpc::BytesWorkload;
+use ubft::smr::NoopApp;
+
+fn noop() -> AppFactory {
+    Box::new(|| Box::new(NoopApp::new()))
+}
+
+fn median(sys: System, size: usize, n: usize) -> u64 {
+    let mut s = run_latency(
+        Config::default(),
+        sys,
+        &noop(),
+        Box::new(BytesWorkload { size, label: "noop" }),
+        n,
+    );
+    assert_eq!(s.len(), n, "{sys:?} did not complete");
+    s.median()
+}
+
+#[test]
+fn cross_system_latency_ordering() {
+    // The paper's Fig 8 ordering at small requests: unrepl < Mu <
+    // uBFT-fast ≪ {uBFT-slow ≈ MinBFT-HMAC} < MinBFT-vanilla. The paper
+    // puts the slow path within 24% of the HMAC variant (§7.2); we assert
+    // proximity rather than a strict order between those two.
+    let unrepl = median(System::Unreplicated, 32, 50);
+    let mu = median(System::Mu, 32, 50);
+    let fast = median(System::UbftFast, 32, 50);
+    let hmac = median(System::MinBftHmac, 32, 30) as f64;
+    let slow = median(System::UbftSlow, 32, 30) as f64;
+    let vanilla = median(System::MinBftVanilla, 32, 30) as f64;
+    assert!(unrepl < mu && mu < fast, "floor ordering broken: {unrepl} {mu} {fast}");
+    assert!((fast as f64) * 10.0 < slow, "slow path suspiciously close to fast");
+    let ratio = slow / hmac;
+    assert!((0.6..=1.3).contains(&ratio), "uBFT-slow/MinBFT-HMAC = {ratio:.2}");
+    assert!(slow < vanilla && hmac < vanilla);
+}
+
+#[test]
+fn paper_headline_ratios_hold() {
+    let mu = median(System::Mu, 32, 100) as f64;
+    let fast = median(System::UbftFast, 32, 100) as f64;
+    let slow = median(System::UbftSlow, 32, 50) as f64;
+    let vanilla = median(System::MinBftVanilla, 32, 50) as f64;
+    // Abstract: fast path ≥ 50x faster than MinBFT.
+    assert!(vanilla / fast > 50.0, "only {:.1}x faster than MinBFT", vanilla / fast);
+    // Abstract: ~2x Mu while adding BFT.
+    let vs_mu = fast / mu;
+    assert!((1.5..3.5).contains(&vs_mu), "uBFT/Mu = {vs_mu:.2}");
+    // §7.2: slow path faster than vanilla MinBFT.
+    assert!(slow < vanilla);
+}
+
+#[test]
+fn latency_grows_with_request_size() {
+    for sys in [System::Unreplicated, System::Mu, System::UbftFast] {
+        let small = median(sys, 8, 50);
+        let large = median(sys, 8192, 50);
+        assert!(large > small, "{sys:?}: {small} !< {large}");
+    }
+}
+
+#[test]
+fn minbft_usig_prevents_replay_end_to_end() {
+    // Behavioural USIG test at the protocol level is in baselines::usig;
+    // here: the full MinBFT deployment completes with matching responses
+    // (f+1 quorum implies no equivocation slipped through).
+    let n = median(System::MinBftHmac, 64, 40);
+    assert!(n > 0);
+}

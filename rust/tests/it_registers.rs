@@ -1,0 +1,204 @@
+//! Disaggregated-memory register integration: regularity and liveness
+//! under randomized fault schedules (torn writes, memory-node crashes,
+//! repeated write/read races). Complements the unit tests in
+//! `dsm::tests` with whole-schedule properties.
+
+use std::sync::{Arc, Mutex};
+use ubft::config::Config;
+use ubft::dsm::{RegOutcome, RegisterClient, WriteStart};
+use ubft::env::{Actor, Env, Event};
+use ubft::sim::{FaultPlan, Sim};
+use ubft::testing::props;
+
+/// Writer actor: writes (ts=i, payload derived from i) in a loop.
+struct Writer {
+    cfg: Config,
+    rc: Option<RegisterClient>,
+    reg: u32,
+    next_ts: u64,
+    total: u64,
+    completed: Arc<Mutex<u64>>,
+}
+
+fn payload_for(ts: u64) -> Vec<u8> {
+    let mut v = vec![0u8; 40];
+    v[..8].copy_from_slice(&ts.to_le_bytes());
+    for i in 8..40 {
+        v[i] = (ts as u8).wrapping_mul(i as u8);
+    }
+    v
+}
+
+impl Writer {
+    fn next(&mut self, env: &mut dyn Env) {
+        if self.next_ts > self.total {
+            return;
+        }
+        let ts = self.next_ts;
+        match self.rc.as_mut().unwrap().start_write(env, self.reg, ts, &payload_for(ts)) {
+            WriteStart::Started(_) => {
+                self.next_ts += 1;
+            }
+            WriteStart::CooldownUntil(at) => {
+                let now = env.now();
+                env.set_timer(at.saturating_sub(now) + 1, 1);
+            }
+        }
+    }
+}
+
+impl Actor for Writer {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.rc = Some(RegisterClient::new(&self.cfg));
+        self.next(env);
+    }
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Timer { .. } => self.next(env),
+            Event::MemDone { ticket, result, .. } => {
+                let outs = self.rc.as_mut().unwrap().on_mem_done(env, ticket, result);
+                for o in outs {
+                    if matches!(o, RegOutcome::WriteDone { .. }) {
+                        *self.completed.lock().unwrap() += 1;
+                        self.next(env);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Reader actor: reads the writer's register repeatedly; every value
+/// returned must be a *complete* payload with a monotone timestamp —
+/// the regularity property.
+struct Reader {
+    cfg: Config,
+    rc: Option<RegisterClient>,
+    owner: usize,
+    reg: u32,
+    reads: usize,
+    last_ts: u64,
+    violations: Arc<Mutex<Vec<String>>>,
+    done_reads: Arc<Mutex<usize>>,
+}
+
+impl Actor for Reader {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.rc = Some(RegisterClient::new(&self.cfg));
+        env.set_timer(5_000, 1);
+    }
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        match ev {
+            Event::Timer { .. } => {
+                if self.reads > 0 {
+                    self.reads -= 1;
+                    self.rc.as_mut().unwrap().start_read(env, self.owner, self.reg);
+                }
+            }
+            Event::MemDone { ticket, result, .. } => {
+                let outs = self.rc.as_mut().unwrap().on_mem_done(env, ticket, result);
+                for o in outs {
+                    match o {
+                        RegOutcome::ReadDone { value, .. } => {
+                            *self.done_reads.lock().unwrap() += 1;
+                            if let Some((ts, payload)) = value {
+                                if payload != payload_for(ts) {
+                                    self.violations
+                                        .lock()
+                                        .unwrap()
+                                        .push(format!("torn value at ts {ts}"));
+                                }
+                                if ts < self.last_ts {
+                                    self.violations.lock().unwrap().push(format!(
+                                        "timestamp regression {} -> {ts}",
+                                        self.last_ts
+                                    ));
+                                }
+                                self.last_ts = ts;
+                            }
+                            env.set_timer(7_000, 1);
+                        }
+                        RegOutcome::ReadByzantine { .. } => {
+                            self.violations
+                                .lock()
+                                .unwrap()
+                                .push("honest writer declared Byzantine".into());
+                        }
+                        RegOutcome::ReadRetry { .. } => {
+                            self.rc.as_mut().unwrap().start_read(env, self.owner, self.reg);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn run_schedule(seed: u64, torn_prob: f64, crash_node: Option<usize>) -> (u64, usize, Vec<String>) {
+    let mut cfg = Config::default();
+    cfg.seed = seed;
+    let completed = Arc::new(Mutex::new(0u64));
+    let violations = Arc::new(Mutex::new(Vec::new()));
+    let done_reads = Arc::new(Mutex::new(0usize));
+    let mut sim = Sim::new(cfg.clone());
+    let mut faults = FaultPlan::default();
+    faults.torn_write_prob = torn_prob;
+    if let Some(nodei) = crash_node {
+        faults.mem_crash_at.insert(nodei, 100_000);
+    }
+    sim.set_faults(faults);
+    sim.add_actor(Box::new(Writer {
+        cfg: cfg.clone(),
+        rc: None,
+        reg: 3,
+        next_ts: 1,
+        total: 50,
+        completed: completed.clone(),
+    }));
+    sim.add_actor(Box::new(Reader {
+        cfg: cfg.clone(),
+        rc: None,
+        owner: 0,
+        reg: 3,
+        reads: 80,
+        last_ts: 0,
+        violations: violations.clone(),
+        done_reads: done_reads.clone(),
+    }));
+    sim.run_until(10 * ubft::SECOND);
+    let c = *completed.lock().unwrap();
+    let r = *done_reads.lock().unwrap();
+    let v = violations.lock().unwrap().clone();
+    (c, r, v)
+}
+
+#[test]
+fn regularity_holds_with_constant_torn_writes() {
+    let (writes, reads, violations) = run_schedule(7, 1.0, None);
+    assert_eq!(writes, 50, "all writes must complete");
+    assert!(reads >= 60, "reads starved: {reads}");
+    assert!(violations.is_empty(), "regularity violations: {violations:?}");
+}
+
+#[test]
+fn regularity_holds_with_a_crashed_memory_node() {
+    let (writes, reads, violations) = run_schedule(8, 0.5, Some(1));
+    assert_eq!(writes, 50);
+    assert!(reads >= 60);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn randomized_schedules_preserve_regularity() {
+    props(12, |g| {
+        let seed = g.u64();
+        let torn = g.f64();
+        let crash = if g.bool() { Some(g.range(0, 3)) } else { None };
+        let (writes, _reads, violations) = run_schedule(seed, torn, crash);
+        assert_eq!(writes, 50, "seed {seed}");
+        assert!(violations.is_empty(), "seed {seed}: {violations:?}");
+    });
+}

@@ -1,0 +1,141 @@
+//! PJRT runtime integration: load the JAX/Pallas-authored HLO artifacts
+//! and cross-check their numerics against the native Rust implementations.
+//! This is the L1↔L3 bit-compatibility contract.
+//!
+//! Requires `make artifacts` (tests are skipped politely when the
+//! artifacts directory is absent, e.g. in a clean checkout).
+
+use ubft::crypto::lane_fingerprint32;
+use ubft::runtime::{shapes, Runtime};
+use ubft::util::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(&format!("{}/fingerprint.hlo.txt", Runtime::artifacts_dir())).exists()
+}
+
+#[test]
+fn fingerprint_module_matches_native_rust() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load(&format!("{}/fingerprint.hlo.txt", Runtime::artifacts_dir())).unwrap();
+
+    let mut rng = Rng::new(42);
+    let mut msgs = Vec::new();
+    for _ in 0..shapes::FP_BATCH {
+        let mut m = [0u32; shapes::FP_WORDS];
+        for w in m.iter_mut() {
+            *w = rng.next_u64() as u32;
+        }
+        msgs.push(m);
+    }
+    let got = module.fingerprint_batch(&msgs).unwrap();
+    for (i, m) in msgs.iter().enumerate() {
+        assert_eq!(
+            got[i],
+            lane_fingerprint32(m, 0),
+            "HLO/Rust fingerprint mismatch at row {i}"
+        );
+    }
+}
+
+#[test]
+fn batch_verify_module_flags_corruption() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load(&format!("{}/batch_verify.hlo.txt", Runtime::artifacts_dir())).unwrap();
+
+    let mut rng = Rng::new(7);
+    let mut msgs = Vec::new();
+    for _ in 0..8 {
+        let mut m = [0u32; shapes::FP_WORDS];
+        for w in m.iter_mut() {
+            *w = rng.next_u64() as u32;
+        }
+        msgs.push(m);
+    }
+    let mut expected: Vec<u32> = msgs.iter().map(|m| lane_fingerprint32(m, 0)).collect();
+    expected[3] ^= 1; // corrupt one digest
+    let mask = module.batch_verify(&msgs, &expected).unwrap();
+    for (i, &ok) in mask.iter().enumerate() {
+        assert_eq!(ok, if i == 3 { 0 } else { 1 }, "row {i}");
+    }
+}
+
+#[test]
+fn mlp_module_matches_native_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let module = rt.load(&format!("{}/mlp.hlo.txt", Runtime::artifacts_dir())).unwrap();
+
+    use shapes::*;
+    let mut rng = Rng::new(9);
+    let mut gen = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+    };
+    let x = gen(MLP_BATCH * MLP_IN);
+    let w1 = gen(MLP_IN * MLP_HIDDEN);
+    let b1 = gen(MLP_HIDDEN);
+    let w2 = gen(MLP_HIDDEN * MLP_OUT);
+    let b2 = gen(MLP_OUT);
+
+    let got = module.mlp_forward(&x, &w1, &b1, &w2, &b2).unwrap();
+
+    // Native reference: relu(x@w1+b1)@w2+b2, row-major.
+    let mut h = vec![0f32; MLP_BATCH * MLP_HIDDEN];
+    for i in 0..MLP_BATCH {
+        for j in 0..MLP_HIDDEN {
+            let mut acc = b1[j];
+            for k in 0..MLP_IN {
+                acc += x[i * MLP_IN + k] * w1[k * MLP_HIDDEN + j];
+            }
+            h[i * MLP_HIDDEN + j] = acc.max(0.0);
+        }
+    }
+    let mut want = vec![0f32; MLP_BATCH * MLP_OUT];
+    for i in 0..MLP_BATCH {
+        for j in 0..MLP_OUT {
+            let mut acc = b2[j];
+            for k in 0..MLP_HIDDEN {
+                acc += h[i * MLP_HIDDEN + k] * w2[k * MLP_OUT + j];
+            }
+            want[i * MLP_OUT + j] = acc;
+        }
+    }
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-4, "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn tensor_app_is_deterministic_across_instances() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use ubft::apps::TensorApp;
+    use ubft::smr::App;
+    let rt = Runtime::cpu().unwrap();
+    let module = std::sync::Arc::new(
+        rt.load(&format!("{}/mlp.hlo.txt", Runtime::artifacts_dir())).unwrap(),
+    );
+    let mut a = TensorApp::new(module.clone(), 1);
+    let mut b = TensorApp::new(module, 1);
+    let req: Vec<u8> = (0..shapes::MLP_IN)
+        .flat_map(|i| (i as f32 * 0.1 - 0.8).to_le_bytes())
+        .collect();
+    let ra = a.execute(&req);
+    let rb = b.execute(&req);
+    assert_eq!(ra, rb);
+    assert_eq!(ra.len(), shapes::MLP_OUT * 4);
+    assert_eq!(a.digest(), b.digest());
+}

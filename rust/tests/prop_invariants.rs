@@ -1,0 +1,268 @@
+//! Property-based invariants (own mini-framework, `ubft::testing`):
+//! wire-format roundtrips, checksum/crypto properties, order-book
+//! conservation laws, ring FIFO under random interleavings, and
+//! whole-protocol agreement over randomized fault schedules.
+
+use ubft::config::Config;
+use ubft::consensus::msgs::*;
+use ubft::consensus::Replica;
+use ubft::crypto::{Certificate, Hash32, KeyStore, Sig};
+use ubft::rpc::{BytesWorkload, Client};
+use ubft::sim::{FaultPlan, Sim};
+use ubft::smr::NoopApp;
+use ubft::testing::{props, Gen};
+use ubft::util::wire::Wire;
+
+fn arb_request(g: &mut Gen) -> Request {
+    Request { client: g.u64() % 1000, rid: g.u64(), payload: g.bytes(64) }
+}
+
+#[test]
+fn prop_wire_roundtrip_request() {
+    props(300, |g| {
+        let r = arb_request(g);
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_consensus_messages() {
+    props(200, |g| {
+        let body = PrepareBody { view: g.u64() % 100, slot: g.u64() % 10_000, req: arb_request(g) };
+        let mut cert = Certificate::new(certify_digest(&body));
+        for _ in 0..g.range(0, 4) {
+            cert.add(g.range(0, 5), Sig([g.u8(); 64]));
+        }
+        let msgs = [
+            ConsMsg::Prepare(body.clone()),
+            ConsMsg::Commit(Commit { body, cert }),
+            ConsMsg::SealView { view: g.u64() },
+            ConsMsg::Checkpoint(CheckpointCert::genesis(g.u64() % 512 + 1, Hash32([g.u8(); 32]))),
+        ];
+        for m in msgs {
+            assert_eq!(ConsMsg::decode(&m.encode()).unwrap(), m);
+        }
+    });
+}
+
+#[test]
+fn prop_wire_rejects_random_garbage_without_panicking() {
+    props(500, |g| {
+        let junk = g.bytes(200);
+        // Must never panic; may or may not decode.
+        let _ = ConsMsg::decode(&junk);
+        let _ = TbMsg::decode(&junk);
+        let _ = DirectMsg::decode(&junk);
+        let _ = Request::decode(&junk);
+    });
+}
+
+#[test]
+fn prop_truncated_encodings_never_panic() {
+    props(200, |g| {
+        let body = PrepareBody { view: 1, slot: 2, req: arb_request(g) };
+        let enc = ConsMsg::Prepare(body).encode();
+        let cut = g.range(0, enc.len());
+        let _ = ConsMsg::decode(&enc[..cut]);
+    });
+}
+
+#[test]
+fn prop_xxhash_detects_any_single_bit_flip() {
+    props(200, |g| {
+        let mut data = g.bytes(128);
+        if data.is_empty() {
+            data.push(0);
+        }
+        let h0 = ubft::crypto::xxh64(&data, 0);
+        let bit = g.range(0, data.len() * 8);
+        data[bit / 8] ^= 1 << (bit % 8);
+        assert_ne!(h0, ubft::crypto::xxh64(&data, 0));
+    });
+}
+
+#[test]
+fn prop_sim_signer_binds_message_and_identity() {
+    props(100, |g| {
+        let ks = KeyStore::sim(g.u64());
+        let msg = g.bytes(64);
+        let signer = g.range(0, 10);
+        let sig = ks.sign(signer, &msg);
+        assert!(ks.verify(signer, &msg, &sig));
+        let other = (signer + 1 + g.range(0, 8)) % 10;
+        if other != signer {
+            assert!(!ks.verify(other, &msg, &sig));
+        }
+        let mut tampered = msg.clone();
+        if !tampered.is_empty() {
+            let i = g.range(0, tampered.len());
+            tampered[i] ^= 0xFF;
+            assert!(!ks.verify(signer, &tampered, &sig));
+        }
+    });
+}
+
+#[test]
+fn prop_ed25519_roundtrip() {
+    // Real Ed25519 is slow (from scratch); a few random cases suffice on
+    // top of the RFC vectors in the unit tests.
+    props(5, |g| {
+        let ks = KeyStore::ed25519(2, g.u64());
+        let msg = g.bytes(96);
+        let sig = ks.sign(1, &msg);
+        assert!(ks.verify(1, &msg, &sig));
+        assert!(!ks.verify(0, &msg, &sig));
+    });
+}
+
+#[test]
+fn prop_orderbook_conserves_quantity() {
+    use ubft::apps::orderbook::{order, parse_fills, OrderBookApp, Side};
+    use ubft::smr::App;
+    props(50, |g| {
+        let mut ob = OrderBookApp::new();
+        let mut submitted: u64 = 0;
+        let mut traded: u64 = 0;
+        for id in 0..g.range(5, 60) as u64 {
+            let side = if g.bool() { Side::Buy } else { Side::Sell };
+            let price = 90 + g.range(0, 21) as u32;
+            let qty = 1 + g.range(0, 50) as u32;
+            submitted += qty as u64;
+            let resp = ob.execute(&order(side, price, qty, id));
+            let (resting, fills) = parse_fills(&resp).expect("valid report");
+            let this_fill: u64 = fills.iter().map(|f| f.qty as u64).sum();
+            traded += this_fill;
+            assert!(resting <= qty, "rested more than submitted");
+            assert_eq!(resting as u64 + this_fill, qty as u64, "taker qty leak");
+            // Every fill must be at a price crossing the order's limit.
+            for f in &fills {
+                match side {
+                    Side::Buy => assert!(f.price <= price),
+                    Side::Sell => assert!(f.price >= price),
+                }
+            }
+        }
+        // Conservation: every submitted unit is either still resting or
+        // was consumed by a trade (once as taker, once as maker).
+        let (bid_qty, ask_qty) = ob.resting_qty();
+        assert_eq!(submitted, bid_qty + ask_qty + 2 * traded, "quantity leak");
+    });
+}
+
+#[test]
+fn prop_orderbook_never_leaves_crossed_book() {
+    use ubft::apps::orderbook::{order, OrderBookApp, Side};
+    use ubft::smr::App;
+    props(50, |g| {
+        let mut ob = OrderBookApp::new();
+        for id in 0..g.range(5, 80) as u64 {
+            let side = if g.bool() { Side::Buy } else { Side::Sell };
+            let price = 90 + g.range(0, 21) as u32;
+            let qty = 1 + g.range(0, 30) as u32;
+            ob.execute(&order(side, price, qty, id));
+            if let (Some(bid), Some(ask)) = (ob.best_bid(), ob.best_ask()) {
+                assert!(bid < ask, "crossed book: bid {bid} >= ask {ask}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ring_fifo_under_random_interleavings() {
+    props(60, |g| {
+        let t = 2 + g.range(0, 14);
+        let (mut tx, mut rx) = ubft::p2p::create(t, 16);
+        let mut last: Option<u64> = None;
+        let mut highest_sent: u64 = 0;
+        for _ in 0..g.range(1, 200) {
+            if g.bool() {
+                let idx = tx.sent();
+                highest_sent = idx;
+                tx.send(&idx.to_le_bytes());
+            } else if let Some(m) = rx.poll() {
+                assert_eq!(m.payload, m.idx.to_le_bytes().to_vec());
+                if let Some(prev) = last {
+                    assert!(m.idx > prev, "FIFO violated");
+                }
+                last = Some(m.idx);
+            }
+        }
+        // Drain: final message must be deliverable.
+        let rest = rx.drain();
+        if tx.sent() > 0 {
+            let final_idx = rest.last().map(|m| m.idx).or(last);
+            assert_eq!(final_idx, Some(highest_sent), "newest message lost");
+        }
+    });
+}
+
+#[test]
+fn prop_consensus_agreement_under_random_faults() {
+    // Randomized schedules: loss, torn writes, one crash (≤ f), random
+    // seeds. Safety (identical applied prefixes) must always hold; with
+    // ≤ f crashes, liveness too.
+    props(8, |g| {
+        let mut cfg = Config::default();
+        cfg.seed = g.u64();
+        let requests = 15 + g.range(0, 15);
+        let mut faults = FaultPlan::default();
+        faults.drop_prob = g.f64() * 0.1;
+        faults.torn_write_prob = g.f64();
+        let crashed: Option<usize> =
+            if g.bool() { Some(g.range(0, 3)) } else { None };
+        if let Some(c) = crashed {
+            faults.crash_at.insert(c, 150_000 + g.range(0, 300_000) as u64);
+        }
+        let mut sim = Sim::new(cfg.clone());
+        sim.set_faults(faults);
+        for i in 0..cfg.n {
+            sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
+        }
+        let client = Client::new(
+            (0..cfg.n).collect(),
+            cfg.quorum(),
+            Box::new(BytesWorkload { size: 32, label: "noop" }),
+            requests,
+        );
+        let samples = client.samples_handle();
+        let done = client.done_handle();
+        sim.add_actor(Box::new(client));
+        let mut horizon = ubft::SECOND;
+        while done.lock().unwrap().is_none() && horizon <= 64 * ubft::SECOND {
+            sim.run_until(horizon);
+            horizon *= 2;
+        }
+
+        // Liveness (a majority is always up).
+        assert_eq!(samples.lock().unwrap().len(), requests, "case {}", g.case);
+
+        // Safety: surviving replicas applied identical prefixes.
+        let mut states = Vec::new();
+        for i in 0..cfg.n {
+            if crashed == Some(i) {
+                continue;
+            }
+            let a = sim.actor_mut(i);
+            let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
+            states.push((r.applied_upto(), r.app().digest()));
+        }
+        assert!(states.windows(2).all(|w| w[0] == w[1]), "diverged: {states:?}");
+    });
+}
+
+#[test]
+fn prop_percentiles_are_monotone() {
+    props(100, |g| {
+        let mut s = ubft::metrics::Samples::new();
+        for _ in 0..g.range(1, 500) {
+            s.record(g.u64() % 1_000_000);
+        }
+        let mut last = 0;
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = s.percentile(p);
+            assert!(v >= last);
+            last = v;
+        }
+        assert_eq!(s.percentile(100.0), s.max());
+    });
+}
