@@ -1,93 +1,64 @@
-//! Byzantine fault demo: an equivocating CTBcast broadcaster tells two
-//! different stories to two receivers — on both the fast path (LOCK /
-//! LOCKED) and the slow path (validly signed conflicting SIGNED
-//! messages). CTBcast's agreement property must hold: the correct
-//! receivers never deliver different messages for the same identifier.
+//! Byzantine fault demo through the deployment builder: replica 0 — the
+//! view-0 leader — is replaced by an equivocating CTBcast broadcaster
+//! that tells two different stories to the two correct replicas, on both
+//! the fast path (LOCK / LOCKED) and the slow path (validly signed
+//! conflicting SIGNED messages).
+//!
+//! CTBcast's agreement property (§2.2, Alg 1) must neutralize the attack:
+//! the correct replicas never adopt conflicting messages, treat the
+//! silent Byzantine leader like a crashed one, run a view change, and
+//! serve the client from view 1 — state-machine safety and liveness both
+//! hold with f = 1 actively malicious replica.
 //!
 //! ```sh
 //! cargo run --release --example byzantine_faults
 //! ```
 
-use std::sync::{Arc, Mutex};
-use ubft::byz::EquivocatingBroadcaster;
 use ubft::config::Config;
-use ubft::crypto::KeyStore;
-use ubft::ctbcast::{CtbEndpoint, CtbOut};
-use ubft::env::{Actor, Env, Event};
-use ubft::sim::Sim;
-
-/// Honest receiver running a real CTBcast endpoint.
-struct Receiver {
-    cfg: Config,
-    ctb: Option<CtbEndpoint>,
-    log: Arc<Mutex<Vec<(usize, usize, u64, Vec<u8>)>>>,
-}
-
-impl Actor for Receiver {
-    fn on_start(&mut self, env: &mut dyn Env) {
-        self.ctb = Some(CtbEndpoint::new(env.me(), &self.cfg, KeyStore::sim(self.cfg.seed)));
-        env.set_timer(200 * ubft::MICRO, 1);
-    }
-    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
-        let outs = match ev {
-            Event::Recv { from, bytes } => self.ctb.as_mut().unwrap().on_recv(env, from, &bytes),
-            Event::MemDone { ticket, result, .. } => {
-                self.ctb.as_mut().unwrap().on_mem_done(env, ticket, result)
-            }
-            Event::Timer { token: 1 } => {
-                self.ctb.as_mut().unwrap().on_retransmit(env);
-                env.set_timer(200 * ubft::MICRO, 1);
-                vec![]
-            }
-            Event::Timer { token } => self.ctb.as_mut().unwrap().on_timer(env, token),
-        };
-        for o in outs {
-            match o {
-                CtbOut::Deliver { bcaster, k, m } => {
-                    self.log.lock().unwrap().push((env.me(), bcaster, k, m));
-                }
-                CtbOut::Byzantine { bcaster } => {
-                    println!("  receiver {} PROVED broadcaster {} Byzantine (register conflict)",
-                        env.me(), bcaster);
-                }
-                CtbOut::App { .. } => {}
-            }
-        }
-    }
-}
+use ubft::deploy::{Deployment, FaultPlan, System};
+use ubft::rpc::BytesWorkload;
 
 fn main() {
     let cfg = Config::default();
-    let ks = KeyStore::sim(cfg.seed);
-    let log = Arc::new(Mutex::new(Vec::new()));
+    let requests = 30;
 
-    let mut sim = Sim::new(cfg.clone());
-    // Node 0 is the Byzantine broadcaster: story A to node 1, story B to 2.
-    sim.add_actor(Box::new(EquivocatingBroadcaster::new(
+    // Replica 0 equivocates: story A to replica 1, story B to replica 2.
+    let attack = FaultPlan::equivocate(
         0,
-        ks,
         vec![1],
         vec![2],
         b"transfer $100 to alice".to_vec(),
         b"transfer $100 to mallory".to_vec(),
-        true, // also attack the slow path with valid signatures
-    )));
-    sim.add_actor(Box::new(Receiver { cfg: cfg.clone(), ctb: None, log: log.clone() }));
-    sim.add_actor(Box::new(Receiver { cfg: cfg.clone(), ctb: None, log: log.clone() }));
-    sim.run_until(ubft::SECOND);
+    );
 
-    let log = log.lock().unwrap();
-    println!("\nequivocation attack on CTBcast identifier k=1:");
-    for (me, b, k, m) in log.iter() {
-        println!("  receiver {me} delivered ({b},{k}) = {:?}", String::from_utf8_lossy(m));
+    let mut cluster = Deployment::new(cfg.clone())
+        .system(System::UbftFast)
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(requests)
+        .faults(attack)
+        .build()
+        .expect("valid Byzantine deployment");
+
+    println!("equivocation attack: Byzantine replica(s) {:?} of n = {}", cluster.byz_ids(), cfg.n);
+    let completed = cluster.run_to_completion();
+
+    // Liveness: with f = 1 Byzantine, the two correct replicas must still
+    // serve every request (after a view change away from the attacker).
+    assert!(completed, "client starved by a single Byzantine replica");
+    let mut s = cluster.samples();
+    println!("client completed {}/{} requests (p50 {:.1} µs)", s.len(), requests,
+        s.median() as f64 / 1000.0);
+
+    // Safety: the correct replicas applied identical sequences.
+    let digests = cluster.digests();
+    println!("correct replica states (applied_upto, digest): {} entries", digests.len());
+    assert!(cluster.converged(), "AGREEMENT VIOLATED: correct replicas diverged");
+
+    // The survivors moved past the Byzantine leader's view.
+    for &i in &[1usize, 2] {
+        let p = cluster.probe(i).expect("correct replica probes");
+        println!("  replica {i}: view {} applied {}", p.view, p.applied_upto);
+        assert!(p.view >= 1, "replica {i} never left the Byzantine leader's view");
     }
-    // Agreement: for (broadcaster 0, k=1), all deliveries identical.
-    let values: Vec<&Vec<u8>> =
-        log.iter().filter(|(_, b, k, _)| *b == 0 && *k == 1).map(|(_, _, _, m)| m).collect();
-    let agree = values.windows(2).all(|w| w[0] == w[1]);
-    assert!(agree, "AGREEMENT VIOLATED");
-    if values.is_empty() {
-        println!("  no receiver delivered — safe (tail-validity only binds correct broadcasters)");
-    }
-    println!("\nagreement holds: no two correct receivers accepted different stories ✓");
+    println!("\nagreement + progress hold under equivocation: attack neutralized ✓");
 }

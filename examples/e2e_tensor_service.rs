@@ -8,9 +8,10 @@
 //!   the artifact via PJRT and serve BFT-replicated inference requests,
 //!   with the client accepting f+1 matching replies.
 //!
+//! The whole deployment is described through the [`ubft::deploy`] builder.
 //! Prints latency/throughput, verifies every response against a native
 //! re-computation, and checks replica state digests agree — proving all
-//! layers compose. Results are recorded in EXPERIMENTS.md.
+//! layers compose.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_tensor_service
@@ -20,10 +21,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use ubft::apps::tensor::{TensorApp, TensorWorkload, Weights};
 use ubft::config::{Config, SigBackend};
-use ubft::consensus::Replica;
-use ubft::rpc::Client;
+use ubft::deploy::{Deployment, System};
 use ubft::runtime::{shapes, Runtime};
-use ubft::sim::real::RealCluster;
 
 fn main() {
     let dir = Runtime::artifacts_dir();
@@ -43,34 +42,29 @@ fn main() {
     cfg.fastpath_timeout = 30 * ubft::MILLI;
     cfg.viewchange_timeout = 400 * ubft::MILLI;
     cfg.retransmit_every = 20 * ubft::MILLI;
+    let n = cfg.n;
     let seed = 2024;
-
-    let mut cluster = RealCluster::new(cfg.m, cfg.seed);
-    for i in 0..cfg.n {
-        let app = TensorApp::new(module.clone(), seed);
-        cluster.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(app))));
-    }
     let requests = 500;
-    let client =
-        Client::new((0..cfg.n).collect(), cfg.quorum(), Box::new(TensorWorkload), requests);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    cluster.add_actor(Box::new(client));
 
-    println!("serving {requests} BFT-replicated inference requests (3 replicas, Ed25519)…");
+    let app_module = module.clone();
+    let mut cluster = Deployment::new(cfg)
+        .system(System::UbftFast)
+        .app(move || Box::new(TensorApp::new(app_module.clone(), seed)))
+        .client(Box::new(TensorWorkload))
+        .requests(requests)
+        .build_real()
+        .expect("valid real-mode deployment");
+
+    println!("serving {requests} BFT-replicated inference requests ({n} replicas, Ed25519)…");
     let t0 = Instant::now();
     cluster.start();
-    while done.lock().unwrap().is_none() {
-        if t0.elapsed().as_secs() > 300 {
-            eprintln!("timed out");
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(5));
+    if !cluster.wait(Duration::from_secs(300)) {
+        eprintln!("timed out");
     }
     let wall = t0.elapsed();
-    let actors = cluster.stop();
+    let mut s = cluster.samples();
+    let stopped = cluster.stop();
 
-    let mut s = samples.lock().unwrap();
     println!(
         "\ncompleted {} / {requests} requests in {:.2}s",
         s.len(),
@@ -92,16 +86,9 @@ fn main() {
     );
 
     // Replica agreement: identical applied counts and state digests.
-    let mut digests = Vec::new();
-    for (i, actor) in actors.iter().enumerate().take(cfg.n) {
-        let r = unsafe { &*(actor.as_ref() as *const dyn ubft::env::Actor as *const Replica) };
-        digests.push((i, r.applied_upto(), r.app().digest()));
-    }
+    let digests = stopped.digests();
     println!("  replica states: {digests:?}");
-    assert!(
-        digests.windows(2).all(|w| (w[0].1, w[0].2) == (w[1].1, w[1].2)),
-        "replicas diverged!"
-    );
+    assert!(stopped.converged(), "replicas diverged!");
     println!("  all replicas agree ✓");
 
     // Cross-check one inference against a native recomputation.

@@ -1,6 +1,6 @@
 //! Real-mode replicated KV store: three uBFT replicas on OS threads with
 //! real (from-scratch) Ed25519, serving the paper's memcached workload —
-//! then a live crash of one follower to show fault tolerance.
+//! then a live crash of one memory node to show fault tolerance.
 //!
 //! ```sh
 //! cargo run --release --example kv_store
@@ -10,11 +10,9 @@ use std::time::{Duration, Instant};
 use ubft::apps::kv::KvWorkload;
 use ubft::apps::KvApp;
 use ubft::config::{Config, SigBackend};
-use ubft::consensus::Replica;
-use ubft::rpc::Client;
-use ubft::sim::real::RealCluster;
+use ubft::deploy::{Deployment, System};
 
-fn run(requests: usize, crash_follower: bool) {
+fn run(requests: usize, crash_mem_node: bool) {
     let mut cfg = Config::default();
     cfg.sig_backend = SigBackend::Ed25519;
     // Real-thread timeouts are in wall-clock ns; widen them (channel
@@ -23,35 +21,30 @@ fn run(requests: usize, crash_follower: bool) {
     cfg.viewchange_timeout = 400 * ubft::MILLI;
     cfg.retransmit_every = 20 * ubft::MILLI;
 
-    let mut cluster = RealCluster::new(cfg.m, cfg.seed);
-    for i in 0..cfg.n {
-        cluster.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(KvApp::new()))));
-    }
-    let client =
-        Client::new((0..cfg.n).collect(), cfg.quorum(), Box::new(KvWorkload::paper()), requests);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    cluster.add_actor(Box::new(client));
+    let mut cluster = Deployment::new(cfg)
+        .system(System::UbftFast)
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload::paper()))
+        .requests(requests)
+        .build_real()
+        .expect("valid real-mode deployment");
 
     let t0 = Instant::now();
     cluster.start();
-    if crash_follower {
+    if crash_mem_node {
         // Let some requests through, then "crash" one memory node to show
         // the register quorums absorb it (the paper's f_m tolerance).
         std::thread::sleep(Duration::from_millis(200));
-        cluster.mem.crash(2);
+        cluster.mem().crash(2);
         println!("  [crashed memory node 2 at t={:?} — majority quorums continue]", t0.elapsed());
     }
-    while done.lock().unwrap().is_none() {
-        if t0.elapsed().as_secs() > 180 {
-            println!("  [timed out]");
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(2));
+    if !cluster.wait(Duration::from_secs(180)) {
+        println!("  [timed out]");
     }
     let wall = t0.elapsed();
-    cluster.stop();
-    let mut s = samples.lock().unwrap();
+    let mut s = cluster.samples();
+    let stopped = cluster.stop();
+    assert!(stopped.converged(), "replicas diverged");
     println!(
         "  {} requests in {:.2}s — p50 {:.0} µs, p99 {:.0} µs, {:.1} kops",
         s.len(),

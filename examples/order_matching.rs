@@ -9,10 +9,8 @@
 use ubft::apps::orderbook::{parse_fills, OrderWorkload};
 use ubft::apps::OrderBookApp;
 use ubft::config::Config;
-use ubft::consensus::Replica;
-use ubft::rpc::{Client, Workload};
-use ubft::sim::Sim;
-use ubft::smr::App;
+use ubft::deploy::{Deployment, System};
+use ubft::rpc::Workload;
 
 /// Wrapper workload that counts fills from the execution reports.
 struct CountingWorkload {
@@ -39,30 +37,23 @@ impl Workload for CountingWorkload {
 }
 
 fn main() {
-    let cfg = Config::default();
-    let mut sim = Sim::new(cfg.clone());
-    for i in 0..cfg.n {
-        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(OrderBookApp::new()))));
-    }
-    let fills = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
     let orders = 10_000;
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(CountingWorkload { inner: OrderWorkload::paper(), fills: fills.clone() }),
-        orders,
-    );
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    sim.add_actor(Box::new(client));
-    let mut horizon = ubft::SECOND;
-    while done.lock().unwrap().is_none() && horizon <= 64 * ubft::SECOND {
-        sim.run_until(horizon);
-        horizon *= 2;
-    }
+    let fills = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut cluster = Deployment::new(Config::default())
+        .system(System::UbftFast)
+        .app(|| Box::new(OrderBookApp::new()))
+        .client(Box::new(CountingWorkload {
+            inner: OrderWorkload::paper(),
+            fills: fills.clone(),
+        }))
+        .requests(orders)
+        .build()
+        .expect("valid deployment");
+    cluster.run_to_completion();
 
-    let mut s = samples.lock().unwrap();
+    let mut s = cluster.samples();
     println!("BFT order matching: {} orders executed", s.len());
+    assert_eq!(cluster.mismatches(), 0, "malformed execution reports");
     println!("  fills generated : {}", fills.load(std::sync::atomic::Ordering::Relaxed));
     println!("  p50 / p90 / p99 : {:.2} / {:.2} / {:.2} µs",
         s.percentile(50.0) as f64 / 1000.0,
@@ -70,13 +61,6 @@ fn main() {
         s.percentile(99.0) as f64 / 1000.0);
 
     // Replicas must hold identical books (state-machine safety).
-    let digests: Vec<_> = (0..cfg.n)
-        .map(|i| {
-            let a = sim.actor_mut(i);
-            let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
-            r.app().digest()
-        })
-        .collect();
-    assert!(digests.windows(2).all(|w| w[0] == w[1]), "books diverged!");
-    println!("  all {} replicas hold identical order books ✓", cfg.n);
+    assert!(cluster.converged(), "books diverged!");
+    println!("  all {} replicas hold identical order books ✓", cluster.config().n);
 }

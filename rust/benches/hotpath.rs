@@ -2,7 +2,7 @@
 //! whose cost bounds the real deployment. Hand-rolled harness (criterion
 //! unavailable offline): warmup + N timed iterations, reports ns/op.
 //!
-//! These feed EXPERIMENTS.md §Perf: the p2p ring is the per-message floor,
+//! These report the hot-path costs: the p2p ring is the per-message floor,
 //! xxhash the checksum cost, Ed25519 the slow-path crypto, the DES event
 //! rate bounds how fast the evaluation sweeps run.
 
@@ -128,12 +128,11 @@ fn main() {
                 Box::new(ubft::smr::NoopApp::new()),
             )));
         }
-        let client = ubft::rpc::Client::new(
-            (0..cfg.n).collect(),
-            cfg.quorum(),
+        let client = ubft::rpc::Client::for_cluster(
+            &cfg,
             Box::new(ubft::rpc::BytesWorkload { size: 32, label: "noop" }),
-            20_000,
-        );
+        )
+        .with_max_requests(20_000);
         let done = client.done_handle();
         sim.add_actor(Box::new(client));
         let t0 = Instant::now();

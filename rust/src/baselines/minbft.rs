@@ -24,6 +24,7 @@
 use super::usig::{Usig, UI};
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
 use crate::crypto::{hash, Hash32};
+use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
 use crate::smr::App;
@@ -55,6 +56,35 @@ fn get_ui(r: &mut WireReader) -> Option<UI> {
         counter: r.u64().ok()?,
         mac: Hash32::get(r).ok()?,
     })
+}
+
+/// [`SystemSpawner`] wiring for the two MinBFT configurations: `n`
+/// replicas over a shared USIG secret; clients wait for f+1 replies.
+pub struct Spawner {
+    /// Vanilla (public-key clients) vs HMAC (enclave clients).
+    pub vanilla: bool,
+}
+
+impl SystemSpawner for Spawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let cfg = d.config();
+        let secret = [0x5Au8; 32];
+        for i in 0..cfg.n {
+            sink.add_actor(Box::new(MinBftReplica::new(
+                i,
+                (0..cfg.n).collect(),
+                cfg.f,
+                self.vanilla,
+                d.make_app(),
+                secret,
+            )));
+        }
+        (0..cfg.n).collect()
+    }
+
+    fn quorum(&self, cfg: &crate::config::Config) -> usize {
+        cfg.quorum()
+    }
 }
 
 struct SlotEntry {
@@ -255,14 +285,12 @@ mod tests {
                 secret,
             )));
         }
-        let client = Client::new(
-            vec![0, 1, 2],
-            2,
-            Box::new(BytesWorkload { size: 32, label: "noop" }),
-            reqs,
-        )
-        .with_presend_charge(client_presend(vanilla))
-        .with_think(500 * crate::MICRO); // unloaded latency, as the paper measures
+        let client = Client::new(Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .with_replicas(vec![0, 1, 2])
+            .with_quorum(2)
+            .with_max_requests(reqs)
+            .with_presend_charge(client_presend(vanilla))
+            .with_think(500 * crate::MICRO); // unloaded latency, as the paper measures
         let samples = client.samples_handle();
         sim.add_actor(Box::new(client));
         sim.run_until(10 * crate::SECOND);

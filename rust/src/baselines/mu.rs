@@ -12,6 +12,7 @@
 //! management, which is off the common path.
 
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
+use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
 use crate::smr::App;
@@ -45,6 +46,27 @@ impl MuLeader {
             pending: HashMap::new(),
             proc: cfg.lat.proc_overhead,
         }
+    }
+}
+
+/// [`SystemSpawner`] wiring for [`crate::deploy::System::Mu`]: one leader
+/// (actor 0, the only node clients talk to) plus `n - 1` passive
+/// followers whose logs the leader writes one-sidedly.
+pub struct Spawner;
+
+impl SystemSpawner for Spawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let cfg = d.config();
+        let leader = MuLeader::new((1..cfg.n).collect(), d.make_app(), cfg);
+        sink.add_actor(Box::new(leader));
+        for _ in 1..cfg.n {
+            sink.add_actor(Box::new(MuFollower::new()));
+        }
+        vec![0]
+    }
+
+    fn quorum(&self, _cfg: &crate::config::Config) -> usize {
+        1
     }
 }
 
@@ -145,8 +167,9 @@ mod tests {
         sim.add_actor(Box::new(leader));
         sim.add_actor(Box::new(MuFollower::new()));
         sim.add_actor(Box::new(MuFollower::new()));
-        let client =
-            Client::new(vec![0], 1, Box::new(BytesWorkload { size: 32, label: "noop" }), 200);
+        let client = Client::new(Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .with_replicas(vec![0])
+            .with_max_requests(200);
         let samples = client.samples_handle();
         sim.add_actor(Box::new(client));
         sim.run_until(crate::SECOND);
@@ -164,8 +187,9 @@ mod tests {
         sim.add_actor(Box::new(MuLeader::new(vec![1, 2], Box::new(NoopApp::new()), &cfg)));
         sim.add_actor(Box::new(MuFollower::new()));
         sim.add_actor(Box::new(MuFollower::new()));
-        let client =
-            Client::new(vec![0], 1, Box::new(BytesWorkload { size: 16, label: "noop" }), 25);
+        let client = Client::new(Box::new(BytesWorkload { size: 16, label: "noop" }))
+            .with_replicas(vec![0])
+            .with_max_requests(25);
         let samples = client.samples_handle();
         sim.add_actor(Box::new(client));
         sim.run_until(crate::SECOND);

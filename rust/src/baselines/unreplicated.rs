@@ -2,9 +2,11 @@
 //! the floor every replication protocol is measured against (Figs 7/8).
 
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg};
+use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
 use crate::smr::App;
+use crate::NodeId;
 
 pub struct Server {
     app: Box<dyn App>,
@@ -14,6 +16,21 @@ pub struct Server {
 impl Server {
     pub fn new(app: Box<dyn App>, cfg: &crate::config::Config) -> Server {
         Server { app, proc_overhead: cfg.lat.proc_overhead }
+    }
+}
+
+/// [`SystemSpawner`] wiring for [`crate::deploy::System::Unreplicated`]:
+/// a single server; clients accept its lone reply.
+pub struct Spawner;
+
+impl SystemSpawner for Spawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let id = sink.add_actor(Box::new(Server::new(d.make_app(), d.config())));
+        vec![id]
+    }
+
+    fn quorum(&self, _cfg: &crate::config::Config) -> usize {
+        1
     }
 }
 
@@ -46,8 +63,9 @@ mod tests {
         let mut sim = Sim::new(cfg.clone());
         let server = Server::new(Box::new(NoopApp::new()), &cfg);
         let sid = sim.add_actor(Box::new(server));
-        let client =
-            Client::new(vec![sid], 1, Box::new(BytesWorkload { size: 32, label: "noop" }), 100);
+        let client = Client::new(Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .with_replicas(vec![sid])
+            .with_max_requests(100);
         let samples = client.samples_handle();
         sim.add_actor(Box::new(client));
         sim.run_until(crate::SECOND);

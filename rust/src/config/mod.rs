@@ -12,7 +12,7 @@ use crate::{Nanos, MICRO, MILLI};
 ///
 /// Base numbers are chosen so that the *unreplicated* RPC and the *Mu*
 /// baseline land on the paper's measured values (Fig 7/8); everything else
-/// is then a prediction of the model. See DESIGN.md §1 and EXPERIMENTS.md.
+/// is then a prediction of the model (see README.md).
 #[derive(Clone, Debug)]
 pub struct LatencyModel {
     /// One-way latency of a one-sided RDMA WRITE posting a message into a

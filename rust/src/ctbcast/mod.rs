@@ -23,7 +23,7 @@
 //! Register contents are `(k, H(m), σ)` — self-verifying, since σ signs
 //! `(broadcaster, k, H(m))`. The paper's prototype stores only
 //! `(k, fingerprint)` (§7.6); we keep the signature so entries are
-//! verifiable without a side channel (documented in DESIGN.md; the memory
+//! verifiable without a side channel (the memory
 //! accounting of Table 2 reports both layouts).
 
 use crate::config::Config;

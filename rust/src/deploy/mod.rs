@@ -1,0 +1,1178 @@
+//! Unified deployment builder: one entry point for every system the
+//! evaluation compares (§7), for the clients that drive them, and for
+//! fault injection — network-level ([`crate::sim::FaultPlan`]) and
+//! protocol-level Byzantine behaviours ([`crate::byz`]).
+//!
+//! Before this module every harness function and example hand-wired its
+//! own `Sim`/`Replica`/`Client` plumbing; now a deployment is described
+//! declaratively and validated up front:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this environment)
+//! use ubft::apps::{kv::KvWorkload, KvApp};
+//! use ubft::config::Config;
+//! use ubft::deploy::{Deployment, System};
+//!
+//! let mut cluster = Deployment::new(Config::default())
+//!     .system(System::UbftFast)
+//!     .app(|| Box::new(KvApp::new()))
+//!     .clients(4, |_i| Box::new(KvWorkload::paper()))
+//!     .requests(1_000)
+//!     .build()
+//!     .expect("valid deployment");
+//! cluster.run_to_completion();
+//! assert_eq!(cluster.completed(), 4_000);
+//! assert!(cluster.converged());
+//! let mut merged = cluster.samples();
+//! println!("p50 = {} ns over {} requests", merged.median(), merged.len());
+//! ```
+//!
+//! The returned [`Cluster`] owns the simulator and exposes run control
+//! (`run_to_completion`, `run_until`, single-event `step`), per-replica
+//! introspection ([`Cluster::probe`]: `mem_bytes`, `disagg_bytes`, `view`,
+//! `applied_upto`, app digest), and aggregated client results (merged
+//! latency [`Cluster::samples`], completion and mismatch counters).
+//!
+//! Byzantine scenarios ride on the same builder: a [`FaultPlan`] can
+//! replace a replica slot with an actively misbehaving actor, e.g.
+//! [`FaultPlan::equivocate`] installs an equivocating CTBcast broadcaster
+//! (§2.2) in place of an honest replica, on top of the simulator-level
+//! crash/partition/drop/torn-write faults.
+//!
+//! Real-thread deployments (OS threads, real Ed25519 — the `examples/`)
+//! use the same description via [`Deployment::build_real`].
+
+use crate::byz::{EquivocatingBroadcaster, GarbageRegisterWriter};
+use crate::config::Config;
+use crate::consensus::Replica;
+use crate::crypto::{Hash32, KeyStore};
+use crate::metrics::Samples;
+use crate::rpc::{BytesWorkload, Client, ClientStats, Workload};
+use crate::sim::real::{RealCluster, RealMem};
+use crate::sim::{self, Sim, TraceEv};
+use crate::smr::{App, NoopApp};
+use crate::{Nanos, NodeId, MICRO, SECOND};
+use std::sync::{Arc, Mutex};
+
+/// Systems compared across the evaluation (§7, §9).
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub enum System {
+    /// Single unreplicated server — the latency floor.
+    Unreplicated,
+    /// Mu-style crash-only SMR (leader + passive RDMA-written followers).
+    Mu,
+    /// uBFT on the common-case fast path.
+    UbftFast,
+    /// uBFT forced onto the signature-based slow path.
+    UbftSlow,
+    /// uBFT fast path with two interleaved consensus slots — the §9
+    /// throughput configuration (client pipeline depth 2).
+    UbftPipelined,
+    /// MinBFT-style BFT over a trusted counter; clients sign requests
+    /// with public-key crypto.
+    MinBftVanilla,
+    /// MinBFT variant where clients use the enclave's HMAC instead.
+    MinBftHmac,
+}
+
+impl System {
+    pub fn label(&self) -> &'static str {
+        match self {
+            System::Unreplicated => "Unrepl.",
+            System::Mu => "Mu",
+            System::UbftFast => "uBFT (fast)",
+            System::UbftSlow => "uBFT (slow)",
+            System::UbftPipelined => "uBFT (2-slot)",
+            System::MinBftVanilla => "MinBFT",
+            System::MinBftHmac => "MinBFT (HMAC)",
+        }
+    }
+
+    /// Every deployable system, in the evaluation's canonical order.
+    pub fn all() -> [System; 7] {
+        [
+            System::Unreplicated,
+            System::Mu,
+            System::UbftFast,
+            System::UbftSlow,
+            System::UbftPipelined,
+            System::MinBftVanilla,
+            System::MinBftHmac,
+        ]
+    }
+
+    /// Does this system run the uBFT consensus engine (and thus support
+    /// replica introspection and Byzantine replica replacement)?
+    pub fn is_ubft(&self) -> bool {
+        matches!(self, System::UbftFast | System::UbftSlow | System::UbftPipelined)
+    }
+
+    /// Number of server-side actors this system deploys.
+    pub fn server_actors(&self, cfg: &Config) -> usize {
+        match self {
+            System::Unreplicated => 1,
+            _ => cfg.n,
+        }
+    }
+
+    /// The spawner that wires this system's server side into a cluster.
+    pub fn spawner(&self) -> Box<dyn SystemSpawner> {
+        match self {
+            System::Unreplicated => Box::new(crate::baselines::unreplicated::Spawner),
+            System::Mu => Box::new(crate::baselines::mu::Spawner),
+            System::UbftFast | System::UbftSlow | System::UbftPipelined => Box::new(UbftSpawner),
+            System::MinBftVanilla => Box::new(crate::baselines::minbft::Spawner { vanilla: true }),
+            System::MinBftHmac => Box::new(crate::baselines::minbft::Spawner { vanilla: false }),
+        }
+    }
+}
+
+/// Per-replica application factory (each replica owns an instance).
+pub type AppFactory = Arc<dyn Fn() -> Box<dyn App>>;
+
+/// Wrap a closure as an [`AppFactory`].
+pub fn app_factory(f: impl Fn() -> Box<dyn App> + 'static) -> AppFactory {
+    Arc::new(f)
+}
+
+/// Per-client workload factory (argument: client index 0..N).
+pub type WorkloadFactory = Box<dyn Fn(usize) -> Box<dyn Workload>>;
+
+// ---------------------------------------------------------------------
+// Fault plan: simulator faults + Byzantine replica replacement
+// ---------------------------------------------------------------------
+
+/// Protocol-level Byzantine behaviour installed in a replica slot.
+#[derive(Clone, Debug)]
+pub(crate) enum ByzSpec {
+    /// Replace the replica with an equivocating CTBcast broadcaster that
+    /// tells story `m_a` to `recv_a` and `m_b` to `recv_b` (§2.2).
+    Equivocate {
+        replica: NodeId,
+        recv_a: Vec<NodeId>,
+        recv_b: Vec<NodeId>,
+        m_a: Vec<u8>,
+        m_b: Vec<u8>,
+        slow: bool,
+    },
+    /// Replace the replica with a process that writes garbage checksums
+    /// into its disaggregated-memory registers.
+    GarbageRegisters { replica: NodeId, reg: u32 },
+}
+
+impl ByzSpec {
+    fn replica(&self) -> NodeId {
+        match self {
+            ByzSpec::Equivocate { replica, .. } => *replica,
+            ByzSpec::GarbageRegisters { replica, .. } => *replica,
+        }
+    }
+}
+
+/// Declarative fault-injection plan for a deployment: simulator-level
+/// faults (crashes, partitions, message loss, torn writes) plus
+/// protocol-level Byzantine replica replacements. Built by chaining
+/// `with_*` methods onto a constructor:
+///
+/// ```
+/// use ubft::deploy::FaultPlan;
+/// let plan = FaultPlan::crash(2, 300_000).with_drop_prob(0.01);
+/// assert!(!plan.is_empty());
+/// ```
+#[derive(Default)]
+pub struct FaultPlan {
+    pub(crate) net: sim::FaultPlan,
+    pub(crate) byz: Vec<ByzSpec>,
+}
+
+impl FaultPlan {
+    /// The fault-free plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Crash compute node `node` at virtual time `at`.
+    pub fn crash(node: NodeId, at: Nanos) -> FaultPlan {
+        FaultPlan::none().with_crash(node, at)
+    }
+
+    /// Replace `replica` with an equivocating CTBcast broadcaster: story
+    /// `m_a` goes to `recv_a`, story `m_b` to `recv_b`, attacking both the
+    /// fast path and (with valid signatures) the slow path.
+    pub fn equivocate(
+        replica: NodeId,
+        recv_a: Vec<NodeId>,
+        recv_b: Vec<NodeId>,
+        m_a: Vec<u8>,
+        m_b: Vec<u8>,
+    ) -> FaultPlan {
+        FaultPlan::none().with_equivocation(replica, recv_a, recv_b, m_a, m_b)
+    }
+
+    /// Replace `replica` with a writer of garbage register checksums.
+    pub fn garbage_registers(replica: NodeId, reg: u32) -> FaultPlan {
+        let mut p = FaultPlan::none();
+        p.byz.push(ByzSpec::GarbageRegisters { replica, reg });
+        p
+    }
+
+    pub fn with_crash(mut self, node: NodeId, at: Nanos) -> FaultPlan {
+        self.net.crash_at.insert(node, at);
+        self
+    }
+
+    /// Crash memory node `node` at virtual time `at`.
+    pub fn with_mem_crash(mut self, node: usize, at: Nanos) -> FaultPlan {
+        self.net.mem_crash_at.insert(node, at);
+        self
+    }
+
+    /// Drop every point-to-point message with probability `p`.
+    pub fn with_drop_prob(mut self, p: f64) -> FaultPlan {
+        self.net.drop_prob = p;
+        self
+    }
+
+    /// Tear memory WRITEs into 8-byte-aligned halves with probability `p`.
+    pub fn with_torn_write_prob(mut self, p: f64) -> FaultPlan {
+        self.net.torn_write_prob = p;
+        self
+    }
+
+    /// Partition nodes `a` and `b` during `[from, until)`.
+    pub fn with_partition(mut self, a: NodeId, b: NodeId, from: Nanos, until: Nanos) -> FaultPlan {
+        self.net.partitions.push(sim::Partition { a, b, from, until });
+        self
+    }
+
+    pub fn with_equivocation(
+        mut self,
+        replica: NodeId,
+        recv_a: Vec<NodeId>,
+        recv_b: Vec<NodeId>,
+        m_a: Vec<u8>,
+        m_b: Vec<u8>,
+    ) -> FaultPlan {
+        self.byz.push(ByzSpec::Equivocate { replica, recv_a, recv_b, m_a, m_b, slow: true });
+        self
+    }
+
+    /// No faults of any kind?
+    pub fn is_empty(&self) -> bool {
+        self.net.crash_at.is_empty()
+            && self.net.mem_crash_at.is_empty()
+            && self.net.drop_prob == 0.0
+            && self.net.torn_write_prob == 0.0
+            && self.net.partitions.is_empty()
+            && self.byz.is_empty()
+    }
+
+    /// Replica slots replaced by Byzantine actors.
+    pub fn byz_replicas(&self) -> Vec<NodeId> {
+        self.byz.iter().map(|b| b.replica()).collect()
+    }
+
+    pub(crate) fn byz_for(&self, replica: NodeId) -> Option<&ByzSpec> {
+        self.byz.iter().find(|b| b.replica() == replica)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Validation errors
+// ---------------------------------------------------------------------
+
+/// Structured validation failure from [`Deployment::build`] /
+/// [`Deployment::build_real`]. The builder never panics on a bad
+/// description — every inconsistency maps to a variant here.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeployError {
+    /// The protocol [`Config`] is internally inconsistent.
+    InvalidConfig(String),
+    /// Zero clients requested.
+    NoClients,
+    /// Zero requests per client.
+    NoRequests,
+    /// Client pipeline depth of zero.
+    ZeroPipeline,
+    /// Byzantine replica replacement on a system without uBFT replicas.
+    ByzUnsupported(&'static str),
+    /// Byzantine spec names a replica outside `0..n`.
+    ByzReplicaOutOfRange { replica: NodeId, n: usize },
+    /// More Byzantine replicas than the deployment tolerates (`f`).
+    TooManyByzantine { byz: usize, f: usize },
+    /// A fault references a compute node outside the deployment.
+    NodeOutOfRange { node: NodeId, nodes: usize },
+    /// A fault references a memory node outside `0..m`.
+    MemNodeOutOfRange { node: usize, m: usize },
+    /// A probability is outside `[0, 1]`.
+    BadProbability { what: &'static str, p: f64 },
+    /// The requested feature is unavailable in real-thread mode.
+    RealModeUnsupported(&'static str),
+}
+
+impl std::fmt::Display for DeployError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeployError::InvalidConfig(e) => write!(f, "invalid config: {e}"),
+            DeployError::NoClients => write!(f, "deployment needs at least one client"),
+            DeployError::NoRequests => write!(f, "deployment needs at least one request"),
+            DeployError::ZeroPipeline => write!(f, "client pipeline depth must be >= 1"),
+            DeployError::ByzUnsupported(sys) => {
+                write!(f, "Byzantine replica replacement requires a uBFT system, got {sys}")
+            }
+            DeployError::ByzReplicaOutOfRange { replica, n } => {
+                write!(f, "Byzantine spec names replica {replica}, but n = {n}")
+            }
+            DeployError::TooManyByzantine { byz, f: tol } => {
+                write!(f, "{byz} Byzantine replicas exceed the tolerated f = {tol}")
+            }
+            DeployError::NodeOutOfRange { node, nodes } => {
+                write!(f, "fault references compute node {node}, deployment has {nodes}")
+            }
+            DeployError::MemNodeOutOfRange { node, m } => {
+                write!(f, "fault references memory node {node}, deployment has {m}")
+            }
+            DeployError::BadProbability { what, p } => {
+                write!(f, "{what} = {p} outside [0, 1]")
+            }
+            DeployError::RealModeUnsupported(what) => {
+                write!(f, "real-thread mode does not support {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeployError {}
+
+// ---------------------------------------------------------------------
+// System spawners
+// ---------------------------------------------------------------------
+
+/// Anything that can host a deployment's actors. Both drivers implement
+/// it — the deterministic simulator and the real-thread cluster — so one
+/// [`SystemSpawner`] wires a system identically in both modes.
+pub trait ActorSink {
+    /// Register an actor; ids are assigned densely from 0.
+    fn add_actor(&mut self, a: Box<dyn crate::env::Actor>) -> NodeId;
+}
+
+impl ActorSink for Sim {
+    fn add_actor(&mut self, a: Box<dyn crate::env::Actor>) -> NodeId {
+        Sim::add_actor(self, a)
+    }
+}
+
+impl ActorSink for RealCluster {
+    fn add_actor(&mut self, a: Box<dyn crate::env::Actor>) -> NodeId {
+        RealCluster::add_actor(self, a)
+    }
+}
+
+/// How a [`System`]'s server side is wired into a deployment. Implemented
+/// by uBFT and every baseline so the builder dispatches through one trait
+/// instead of a per-system match.
+pub trait SystemSpawner {
+    /// Spawn the server actors into `sink` (ids are assigned densely from
+    /// 0); return the replica set clients address their requests to.
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId>;
+
+    /// Response quorum clients wait for (f+1 matching replies for BFT
+    /// systems; 1 for the single-reply baselines).
+    fn quorum(&self, cfg: &Config) -> usize;
+}
+
+/// Spawner for the uBFT consensus engine, honouring Byzantine replica
+/// replacements from the deployment's [`FaultPlan`].
+pub struct UbftSpawner;
+
+impl SystemSpawner for UbftSpawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let cfg = d.config();
+        for i in 0..cfg.n {
+            match d.faults.byz_for(i) {
+                None => {
+                    sink.add_actor(Box::new(Replica::new(i, cfg.clone(), d.make_app())));
+                }
+                Some(ByzSpec::Equivocate { recv_a, recv_b, m_a, m_b, slow, .. }) => {
+                    sink.add_actor(Box::new(EquivocatingBroadcaster::new(
+                        i,
+                        KeyStore::sim(cfg.seed),
+                        recv_a.clone(),
+                        recv_b.clone(),
+                        m_a.clone(),
+                        m_b.clone(),
+                        *slow,
+                    )));
+                }
+                Some(ByzSpec::GarbageRegisters { reg, .. }) => {
+                    sink.add_actor(Box::new(GarbageRegisterWriter {
+                        me: i,
+                        reg: *reg,
+                        mem_nodes: cfg.m,
+                    }));
+                }
+            }
+        }
+        (0..cfg.n).collect()
+    }
+
+    fn quorum(&self, cfg: &Config) -> usize {
+        cfg.quorum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The builder
+// ---------------------------------------------------------------------
+
+enum ClientSpec {
+    /// One client running the default 32 B no-op workload.
+    Default,
+    /// One client with an explicit workload.
+    Single(Box<dyn Workload>),
+    /// `n` clients; the factory builds each client's workload by index.
+    Many(usize, WorkloadFactory),
+}
+
+/// Fluent, validated description of a full deployment: which [`System`],
+/// which application, how many clients with which workloads, and which
+/// faults. See the [module docs](self) for a worked example.
+pub struct Deployment {
+    cfg: Config,
+    system: System,
+    app: AppFactory,
+    clients: ClientSpec,
+    requests: usize,
+    pipeline: Option<usize>,
+    think: Option<Nanos>,
+    presend: Option<Nanos>,
+    faults: FaultPlan,
+    trace: bool,
+}
+
+impl Deployment {
+    /// Start describing a deployment. Defaults: [`System::UbftFast`], a
+    /// [`NoopApp`], one client with a 32 B random-bytes workload, 100
+    /// requests, no faults.
+    pub fn new(cfg: Config) -> Deployment {
+        Deployment {
+            cfg,
+            system: System::UbftFast,
+            app: Arc::new(|| Box::new(NoopApp::new())),
+            clients: ClientSpec::Default,
+            requests: 100,
+            pipeline: None,
+            think: None,
+            presend: None,
+            faults: FaultPlan::none(),
+            trace: false,
+        }
+    }
+
+    /// Which system to deploy.
+    pub fn system(mut self, s: System) -> Deployment {
+        self.system = s;
+        self
+    }
+
+    /// Application factory: called once per replica.
+    pub fn app(mut self, f: impl Fn() -> Box<dyn App> + 'static) -> Deployment {
+        self.app = Arc::new(f);
+        self
+    }
+
+    /// Application factory, pre-wrapped (see [`app_factory`]).
+    pub fn app_factory(mut self, f: AppFactory) -> Deployment {
+        self.app = f;
+        self
+    }
+
+    /// `n` clients, each with a workload built by `f(client_index)`.
+    pub fn clients(mut self, n: usize, f: impl Fn(usize) -> Box<dyn Workload> + 'static) -> Deployment {
+        self.clients = ClientSpec::Many(n, Box::new(f));
+        self
+    }
+
+    /// A single client with an explicit workload.
+    pub fn client(mut self, w: Box<dyn Workload>) -> Deployment {
+        self.clients = ClientSpec::Single(w);
+        self
+    }
+
+    /// Requests *per client*.
+    pub fn requests(mut self, n: usize) -> Deployment {
+        self.requests = n;
+        self
+    }
+
+    /// Requests kept in flight per client (default 1; [`System::UbftPipelined`]
+    /// defaults to 2).
+    pub fn pipeline(mut self, k: usize) -> Deployment {
+        self.pipeline = Some(k);
+        self
+    }
+
+    /// Client think time between requests, overriding the per-system
+    /// default (MinBFT variants default to the paper's 300 µs unloaded-
+    /// latency method; everything else to 0).
+    pub fn think(mut self, ns: Nanos) -> Deployment {
+        self.think = Some(ns);
+        self
+    }
+
+    /// Client-side pre-send processing charge, overriding the per-system
+    /// default (MinBFT clients pay their signing cost; everything else 0).
+    pub fn presend_charge(mut self, ns: Nanos) -> Deployment {
+        self.presend = Some(ns);
+        self
+    }
+
+    /// Install a fault plan.
+    pub fn faults(mut self, plan: FaultPlan) -> Deployment {
+        self.faults = plan;
+        self
+    }
+
+    /// Enable Fig-9-style tracing (marks and charges).
+    pub fn trace(mut self) -> Deployment {
+        self.trace = true;
+        self
+    }
+
+    /// The (possibly adjusted) deployment configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Instantiate one application (used by [`SystemSpawner`]s).
+    pub fn make_app(&self) -> Box<dyn App> {
+        (self.app)()
+    }
+
+    fn n_clients(&self) -> usize {
+        match &self.clients {
+            ClientSpec::Default | ClientSpec::Single(_) => 1,
+            ClientSpec::Many(n, _) => *n,
+        }
+    }
+
+    fn resolved_pipeline(&self) -> usize {
+        self.pipeline.unwrap_or(match self.system {
+            System::UbftPipelined => 2,
+            _ => 1,
+        })
+    }
+
+    fn resolved_think(&self) -> Nanos {
+        self.think.unwrap_or(match self.system {
+            // Unloaded latency for the heavyweight baselines (paper method).
+            System::MinBftVanilla | System::MinBftHmac => 300 * MICRO,
+            _ => 0,
+        })
+    }
+
+    fn resolved_presend(&self) -> Nanos {
+        self.presend.unwrap_or(match self.system {
+            System::MinBftVanilla => crate::baselines::minbft::client_presend(true),
+            System::MinBftHmac => crate::baselines::minbft::client_presend(false),
+            _ => 0,
+        })
+    }
+
+    fn validate(&self) -> Result<(), DeployError> {
+        self.cfg.validate().map_err(DeployError::InvalidConfig)?;
+        if self.n_clients() == 0 {
+            return Err(DeployError::NoClients);
+        }
+        if self.requests == 0 {
+            return Err(DeployError::NoRequests);
+        }
+        if self.resolved_pipeline() == 0 {
+            return Err(DeployError::ZeroPipeline);
+        }
+        let nodes = self.system.server_actors(&self.cfg) + self.n_clients();
+        if !self.faults.byz.is_empty() {
+            if !self.system.is_ubft() {
+                return Err(DeployError::ByzUnsupported(self.system.label()));
+            }
+            for spec in &self.faults.byz {
+                if spec.replica() >= self.cfg.n {
+                    return Err(DeployError::ByzReplicaOutOfRange {
+                        replica: spec.replica(),
+                        n: self.cfg.n,
+                    });
+                }
+                // Equivocation receivers must be replicas, too — a send
+                // to a nonexistent node would silently defuse the attack.
+                if let ByzSpec::Equivocate { recv_a, recv_b, .. } = spec {
+                    for &r in recv_a.iter().chain(recv_b) {
+                        if r >= self.cfg.n {
+                            return Err(DeployError::ByzReplicaOutOfRange {
+                                replica: r,
+                                n: self.cfg.n,
+                            });
+                        }
+                    }
+                }
+            }
+            let mut byz = self.faults.byz_replicas();
+            byz.sort_unstable();
+            byz.dedup();
+            if byz.len() > self.cfg.f {
+                return Err(DeployError::TooManyByzantine { byz: byz.len(), f: self.cfg.f });
+            }
+        }
+        for (&node, _) in &self.faults.net.crash_at {
+            if node >= nodes {
+                return Err(DeployError::NodeOutOfRange { node, nodes });
+            }
+        }
+        for (&node, _) in &self.faults.net.mem_crash_at {
+            if node >= self.cfg.m {
+                return Err(DeployError::MemNodeOutOfRange { node, m: self.cfg.m });
+            }
+        }
+        for p in &self.faults.net.partitions {
+            for node in [p.a, p.b] {
+                if node >= nodes {
+                    return Err(DeployError::NodeOutOfRange { node, nodes });
+                }
+            }
+        }
+        for (what, p) in [
+            ("drop_prob", self.faults.net.drop_prob),
+            ("torn_write_prob", self.faults.net.torn_write_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) || p.is_nan() {
+                return Err(DeployError::BadProbability { what, p });
+            }
+        }
+        Ok(())
+    }
+
+    fn take_workloads(clients: ClientSpec) -> Vec<Box<dyn Workload>> {
+        match clients {
+            ClientSpec::Default => vec![Box::new(BytesWorkload { size: 32, label: "noop" })],
+            ClientSpec::Single(w) => vec![w],
+            ClientSpec::Many(n, f) => (0..n).map(|i| f(i)).collect(),
+        }
+    }
+
+    /// Validate and instantiate the deployment on the deterministic
+    /// simulator, returning a [`Cluster`] handle.
+    pub fn build(mut self) -> Result<Cluster, DeployError> {
+        self.validate()?;
+        if self.system == System::UbftSlow {
+            self.cfg.slow_path_always = true;
+        }
+        let mut sim = Sim::new(self.cfg.clone());
+        if self.trace {
+            sim.enable_trace();
+        }
+        sim.set_faults(self.faults.net.clone());
+        let spawner = self.system.spawner();
+        let replicas = spawner.spawn(&self, &mut sim);
+        let quorum = spawner.quorum(&self.cfg);
+        let (pipeline, think, presend) =
+            (self.resolved_pipeline(), self.resolved_think(), self.resolved_presend());
+        let (requests, system, cfg) = (self.requests, self.system, self.cfg.clone());
+        let byz = self.faults.byz_replicas();
+        let mut clients = Vec::new();
+        for workload in Deployment::take_workloads(self.clients) {
+            let client = Client::new(workload)
+                .with_replicas(replicas.clone())
+                .with_quorum(quorum)
+                .with_max_requests(requests)
+                .with_pipeline(pipeline)
+                .with_think(think)
+                .with_presend_charge(presend);
+            let (samples, done, stats) =
+                (client.samples_handle(), client.done_handle(), client.stats_handle());
+            let id = sim.add_actor(Box::new(client));
+            clients.push(ClientHandle { id, samples, done, stats });
+        }
+        Ok(Cluster { sim, cfg, system, replicas, byz, clients })
+    }
+
+    /// Validate and instantiate the deployment on OS threads with real
+    /// crypto ([`crate::sim::real`]). Simulator-level faults and Byzantine
+    /// replacements are rejected — real-mode fault demos crash memory
+    /// nodes live through [`RealHandle::mem`].
+    pub fn build_real(mut self) -> Result<RealHandle, DeployError> {
+        self.validate()?;
+        if !self.faults.is_empty() {
+            return Err(DeployError::RealModeUnsupported(
+                "fault plans (crash memory nodes live via RealHandle::mem)",
+            ));
+        }
+        if self.system == System::UbftSlow {
+            self.cfg.slow_path_always = true;
+        }
+        let mut cluster = RealCluster::new(self.cfg.m, self.cfg.seed);
+        let n_replicas = self.system.server_actors(&self.cfg);
+        let spawner = self.system.spawner();
+        let replicas = spawner.spawn(&self, &mut cluster);
+        let quorum = spawner.quorum(&self.cfg);
+        let (pipeline, think, presend) =
+            (self.resolved_pipeline(), self.resolved_think(), self.resolved_presend());
+        let (requests, system) = (self.requests, self.system);
+        let mut clients = Vec::new();
+        for workload in Deployment::take_workloads(self.clients) {
+            let client = Client::new(workload)
+                .with_replicas(replicas.clone())
+                .with_quorum(quorum)
+                .with_max_requests(requests)
+                .with_pipeline(pipeline)
+                .with_think(think)
+                .with_presend_charge(presend);
+            let (samples, done, stats) =
+                (client.samples_handle(), client.done_handle(), client.stats_handle());
+            let id = cluster.add_actor(Box::new(client));
+            clients.push(ClientHandle { id, samples, done, stats });
+        }
+        Ok(RealHandle { cluster, system, n_replicas, clients, started: false })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster handle (simulator mode)
+// ---------------------------------------------------------------------
+
+/// Shared handles into one deployed client.
+pub struct ClientHandle {
+    /// The client's actor/node id in the deployment.
+    pub id: NodeId,
+    samples: Arc<Mutex<Samples>>,
+    done: Arc<Mutex<Option<Nanos>>>,
+    stats: Arc<Mutex<ClientStats>>,
+}
+
+impl ClientHandle {
+    pub fn samples(&self) -> Samples {
+        self.samples.lock().unwrap().clone()
+    }
+
+    pub fn done_at(&self) -> Option<Nanos> {
+        *self.done.lock().unwrap()
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+fn merged_samples(clients: &[ClientHandle]) -> Samples {
+    let mut out = Samples::new();
+    for c in clients {
+        out.merge(&c.samples.lock().unwrap());
+    }
+    out
+}
+
+fn all_clients_done(clients: &[ClientHandle]) -> bool {
+    clients.iter().all(|c| c.done_at().is_some())
+}
+
+/// Point-in-time introspection of one replica (uBFT systems).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaProbe {
+    /// Replica-local protocol memory (Table 2).
+    pub mem_bytes: u64,
+    /// Disaggregated-memory bytes this replica wrote.
+    pub disagg_bytes: u64,
+    /// Current view number.
+    pub view: u64,
+    /// Highest contiguously applied slot.
+    pub applied_upto: u64,
+    /// Digest of the replica's application state.
+    pub app_digest: Hash32,
+}
+
+/// A deployed cluster on the deterministic simulator: owns the [`Sim`],
+/// tracks every client, and exposes run control plus introspection.
+pub struct Cluster {
+    sim: Sim,
+    cfg: Config,
+    system: System,
+    replicas: Vec<NodeId>,
+    byz: Vec<NodeId>,
+    clients: Vec<ClientHandle>,
+}
+
+impl Cluster {
+    /// The deployed system.
+    pub fn system(&self) -> System {
+        self.system
+    }
+
+    /// The deployment configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Replica node ids clients address (dense from 0).
+    pub fn replica_ids(&self) -> &[NodeId] {
+        &self.replicas
+    }
+
+    /// Replica slots occupied by Byzantine actors.
+    pub fn byz_ids(&self) -> &[NodeId] {
+        &self.byz
+    }
+
+    /// Per-client handles (samples / completion / stats), in spawn order.
+    pub fn clients(&self) -> &[ClientHandle] {
+        &self.clients
+    }
+
+    /// Escape hatch to the underlying simulator.
+    pub fn sim(&mut self) -> &mut Sim {
+        &mut self.sim
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Nanos {
+        self.sim.now()
+    }
+
+    /// Run until the virtual clock reaches `until` (or the event queue
+    /// drains); returns the final virtual time.
+    pub fn run_until(&mut self, until: Nanos) -> Nanos {
+        self.sim.run_until(until)
+    }
+
+    /// Process a single simulator event (step-wise execution for tests);
+    /// returns its virtual time, or `None` when the queue is empty.
+    pub fn step(&mut self) -> Option<Nanos> {
+        self.sim.step()
+    }
+
+    /// Run until every client completed its requests (true) or the
+    /// 600-virtual-second cap expired (false).
+    pub fn run_to_completion(&mut self) -> bool {
+        let mut horizon = SECOND;
+        loop {
+            self.sim.run_until(horizon);
+            if self.all_done() {
+                return true;
+            }
+            if horizon >= 600 * SECOND {
+                return false;
+            }
+            horizon *= 2;
+        }
+    }
+
+    /// Have all clients completed their requests?
+    pub fn all_done(&self) -> bool {
+        all_clients_done(&self.clients)
+    }
+
+    /// Virtual time at which the *last* client finished (None while any
+    /// client is still running).
+    pub fn done_at(&self) -> Option<Nanos> {
+        let mut latest = 0;
+        for c in &self.clients {
+            latest = latest.max(c.done_at()?);
+        }
+        Some(latest)
+    }
+
+    /// Latency samples merged across every client.
+    pub fn samples(&self) -> Samples {
+        merged_samples(&self.clients)
+    }
+
+    /// Requests completed, summed over clients.
+    pub fn completed(&self) -> u64 {
+        self.clients.iter().map(|c| c.stats().completed).sum()
+    }
+
+    /// Response-validation mismatches, summed over clients.
+    pub fn mismatches(&self) -> u64 {
+        self.clients.iter().map(|c| c.stats().mismatches).sum()
+    }
+
+    /// Borrow a (correct, uBFT) replica for introspection. `None` for
+    /// baselines and for Byzantine-replaced slots.
+    pub fn replica(&mut self, i: NodeId) -> Option<&Replica> {
+        if !self.system.is_ubft() || i >= self.cfg.n || self.byz.contains(&i) {
+            return None;
+        }
+        let actor = self.sim.actor_mut(i);
+        // The uBFT spawner put a `Replica` in every non-Byzantine slot
+        // `0..n`, so the downcast is sound under the guard above.
+        Some(unsafe { &*(actor as *const dyn crate::env::Actor as *const Replica) })
+    }
+
+    /// Snapshot one replica's introspection counters.
+    pub fn probe(&mut self, i: NodeId) -> Option<ReplicaProbe> {
+        let r = self.replica(i)?;
+        Some(ReplicaProbe {
+            mem_bytes: r.mem_bytes(),
+            disagg_bytes: r.disagg_bytes(),
+            view: r.view(),
+            applied_upto: r.applied_upto(),
+            app_digest: r.app().digest(),
+        })
+    }
+
+    /// `(applied_upto, app_digest)` for every correct uBFT replica.
+    pub fn digests(&mut self) -> Vec<(u64, Hash32)> {
+        let n = self.cfg.n;
+        (0..n)
+            .filter_map(|i| self.probe(i).map(|p| (p.applied_upto, p.app_digest)))
+            .collect()
+    }
+
+    /// Do all correct replicas hold identical `(applied_upto, digest)`
+    /// state? (Vacuously true for non-uBFT systems.)
+    pub fn converged(&mut self) -> bool {
+        let d = self.digests();
+        d.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Bytes resident on one disaggregated-memory node (Table 2).
+    pub fn mem_node_bytes(&self, node: usize) -> u64 {
+        self.sim.mem_node_bytes(node)
+    }
+
+    /// The simulator's trace (requires [`Deployment::trace`]).
+    pub fn trace(&self) -> &[(Nanos, NodeId, TraceEv)] {
+        self.sim.trace()
+    }
+
+    /// Aggregate simulator statistics.
+    pub fn stats(&self) -> &sim::SimStats {
+        self.sim.stats()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real-thread handle
+// ---------------------------------------------------------------------
+
+/// A deployment instantiated on OS threads ([`Deployment::build_real`]).
+pub struct RealHandle {
+    cluster: RealCluster,
+    system: System,
+    n_replicas: usize,
+    clients: Vec<ClientHandle>,
+    started: bool,
+}
+
+impl RealHandle {
+    /// Launch one thread per actor.
+    pub fn start(&mut self) {
+        if !self.started {
+            self.started = true;
+            self.cluster.start();
+        }
+    }
+
+    /// The shared disaggregated memory (e.g. to crash a node live).
+    pub fn mem(&self) -> &Arc<RealMem> {
+        &self.cluster.mem
+    }
+
+    /// Per-client handles, in spawn order.
+    pub fn clients(&self) -> &[ClientHandle] {
+        &self.clients
+    }
+
+    pub fn all_done(&self) -> bool {
+        all_clients_done(&self.clients)
+    }
+
+    /// Merged latency samples across every client.
+    pub fn samples(&self) -> Samples {
+        merged_samples(&self.clients)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.clients.iter().map(|c| c.stats().completed).sum()
+    }
+
+    pub fn mismatches(&self) -> u64 {
+        self.clients.iter().map(|c| c.stats().mismatches).sum()
+    }
+
+    /// Block until every client finished or `timeout` elapsed; returns
+    /// whether all clients completed.
+    pub fn wait(&self, timeout: std::time::Duration) -> bool {
+        let t0 = std::time::Instant::now();
+        while !self.all_done() {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Signal shutdown, join the actor threads, and return a handle that
+    /// still allows replica introspection.
+    pub fn stop(self) -> StoppedCluster {
+        StoppedCluster {
+            actors: self.cluster.stop(),
+            system: self.system,
+            n_replicas: self.n_replicas,
+        }
+    }
+}
+
+/// Actors of a stopped real-thread deployment, retained for metric
+/// extraction and state-agreement checks.
+pub struct StoppedCluster {
+    actors: Vec<Box<dyn crate::env::Actor>>,
+    system: System,
+    n_replicas: usize,
+}
+
+impl StoppedCluster {
+    /// Borrow a uBFT replica back for introspection.
+    pub fn replica(&self, i: NodeId) -> Option<&Replica> {
+        if !self.system.is_ubft() || i >= self.n_replicas {
+            return None;
+        }
+        let actor = self.actors.get(i)?;
+        Some(unsafe { &*(actor.as_ref() as *const dyn crate::env::Actor as *const Replica) })
+    }
+
+    /// `(applied_upto, app_digest)` for every uBFT replica.
+    pub fn digests(&self) -> Vec<(u64, Hash32)> {
+        (0..self.n_replicas)
+            .filter_map(|i| self.replica(i).map(|r| (r.applied_upto(), r.app().digest())))
+            .collect()
+    }
+
+    /// Do all replicas hold identical state?
+    pub fn converged(&self) -> bool {
+        let d = self.digests();
+        d.windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::flip::FlipWorkload;
+    use crate::apps::FlipApp;
+
+    #[test]
+    fn default_deployment_completes() {
+        let mut cluster = Deployment::new(Config::default())
+            .requests(25)
+            .build()
+            .expect("default deployment is valid");
+        assert!(cluster.run_to_completion());
+        assert_eq!(cluster.samples().len(), 25);
+        assert_eq!(cluster.completed(), 25);
+        assert_eq!(cluster.mismatches(), 0);
+        assert!(cluster.converged());
+    }
+
+    #[test]
+    fn builder_validates_instead_of_panicking() {
+        let mut bad = Config::default();
+        bad.n = 4; // != 2f+1
+        assert!(matches!(
+            Deployment::new(bad).build().err().unwrap(),
+            DeployError::InvalidConfig(_)
+        ));
+        assert_eq!(
+            Deployment::new(Config::default()).clients(0, |_| unreachable!()).build().err(),
+            Some(DeployError::NoClients)
+        );
+        assert_eq!(
+            Deployment::new(Config::default()).requests(0).build().err(),
+            Some(DeployError::NoRequests)
+        );
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .system(System::Mu)
+                .faults(FaultPlan::garbage_registers(0, 0))
+                .build()
+                .err().unwrap(),
+            DeployError::ByzUnsupported(_)
+        ));
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .faults(FaultPlan::garbage_registers(7, 0))
+                .build()
+                .err().unwrap(),
+            DeployError::ByzReplicaOutOfRange { .. }
+        ));
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .faults(
+                    FaultPlan::garbage_registers(0, 0)
+                        .with_equivocation(1, vec![2], vec![0], vec![1], vec![2])
+                )
+                .build()
+                .err().unwrap(),
+            DeployError::TooManyByzantine { .. }
+        ));
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .faults(FaultPlan::none().with_drop_prob(1.5))
+                .build()
+                .err().unwrap(),
+            DeployError::BadProbability { .. }
+        ));
+    }
+
+    #[test]
+    fn stepwise_execution_reaches_completion() {
+        let mut cluster = Deployment::new(Config::default())
+            .app(|| Box::new(FlipApp::new()))
+            .client(Box::new(FlipWorkload { size: 32 }))
+            .requests(5)
+            .build()
+            .unwrap();
+        let mut steps = 0u64;
+        while !cluster.all_done() {
+            assert!(cluster.step().is_some(), "queue drained before completion");
+            steps += 1;
+            assert!(steps < 5_000_000, "runaway");
+        }
+        assert_eq!(cluster.samples().len(), 5);
+        assert_eq!(cluster.mismatches(), 0);
+    }
+
+    #[test]
+    fn multi_client_samples_merge() {
+        let mut cluster = Deployment::new(Config::default())
+            .clients(4, |_i| Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .requests(10)
+            .build()
+            .unwrap();
+        assert!(cluster.run_to_completion());
+        assert_eq!(cluster.clients().len(), 4);
+        for c in cluster.clients() {
+            assert_eq!(c.samples().len(), 10);
+        }
+        assert_eq!(cluster.samples().len(), 40);
+        assert_eq!(cluster.completed(), 40);
+        assert!(cluster.converged());
+    }
+
+    #[test]
+    fn probe_exposes_replica_state() {
+        let mut cluster =
+            Deployment::new(Config::default()).requests(30).build().unwrap();
+        assert!(cluster.run_to_completion());
+        let p = cluster.probe(0).expect("uBFT replica 0 probes");
+        assert!(p.applied_upto >= 30, "applied_upto = {}", p.applied_upto);
+        assert_eq!(p.view, 0);
+        assert!(p.mem_bytes > 0);
+        // Baselines expose no replica internals.
+        let mut mu = Deployment::new(Config::default())
+            .system(System::Mu)
+            .requests(5)
+            .build()
+            .unwrap();
+        assert!(mu.run_to_completion());
+        assert!(mu.probe(0).is_none());
+    }
+}

@@ -6,7 +6,7 @@
 //! broadcaster's CTBcast blocks (Alg 4) — the latency spike moves to
 //! lower percentiles as t shrinks, exactly the paper's plot shape.
 
-use super::{deploy_ubft, print_table, run_to_completion, samples_per_point, us, AppFactory};
+use super::{app_factory, deploy_ubft, print_table, samples_per_point, us, AppFactory};
 use crate::apps::flip::FlipWorkload;
 use crate::config::Config;
 use crate::metrics::Samples;
@@ -18,12 +18,10 @@ pub fn run_point(tail: usize, size: usize, requests: usize) -> Samples {
     let mut cfg = Config::default();
     cfg.tail = tail;
     cfg.max_req = size + 1024;
-    let app: AppFactory = Box::new(|| Box::new(crate::apps::FlipApp::new()));
-    let (mut sim, samples, done) =
-        deploy_ubft(&cfg, &app, Box::new(FlipWorkload { size }), requests);
-    run_to_completion(&mut sim, &done);
-    let s = samples.lock().unwrap().clone();
-    s
+    let app: AppFactory = app_factory(|| Box::new(crate::apps::FlipApp::new()));
+    let mut cluster = deploy_ubft(&cfg, &app, Box::new(FlipWorkload { size }), requests);
+    cluster.run_to_completion();
+    cluster.samples()
 }
 
 pub fn main_run(samples: usize) {

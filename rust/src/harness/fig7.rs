@@ -28,10 +28,10 @@ fn workload_for(app: &str) -> Box<dyn Workload> {
 
 fn app_factory(app: &'static str) -> AppFactory {
     match app {
-        "flip" => Box::new(|| Box::new(crate::apps::FlipApp::new())),
-        "memcached" => Box::new(|| Box::new(crate::apps::KvApp::new())),
-        "redis" => Box::new(|| Box::new(crate::apps::RedisApp::new())),
-        "liquibook" => Box::new(|| Box::new(crate::apps::OrderBookApp::new())),
+        "flip" => super::app_factory(|| Box::new(crate::apps::FlipApp::new())),
+        "memcached" => super::app_factory(|| Box::new(crate::apps::KvApp::new())),
+        "redis" => super::app_factory(|| Box::new(crate::apps::RedisApp::new())),
+        "liquibook" => super::app_factory(|| Box::new(crate::apps::OrderBookApp::new())),
         _ => unreachable!(),
     }
 }

@@ -2,7 +2,7 @@
 //! Unreplicated / Mu / uBFT-fast / uBFT-slow / MinBFT (vanilla) /
 //! MinBFT (HMAC).
 
-use super::{print_table, run_latency, samples_per_point, us, AppFactory, System};
+use super::{app_factory, print_table, run_latency, samples_per_point, us, AppFactory, System};
 use crate::config::Config;
 use crate::rpc::BytesWorkload;
 use crate::smr::NoopApp;
@@ -18,7 +18,7 @@ pub struct Point {
 
 pub fn run(samples: usize) -> Vec<Point> {
     let samples = samples_per_point(samples);
-    let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
+    let app: AppFactory = app_factory(|| Box::new(NoopApp::new()));
     let mut out = Vec::new();
     for &size in SIZES {
         for system in [

@@ -14,11 +14,10 @@
 
 use super::{print_table, samples_per_point, us};
 use crate::config::Config;
-use crate::consensus::Replica;
+use crate::deploy::{Deployment, System};
 use crate::metrics::Category;
-use crate::rpc::{BytesWorkload, Client};
-use crate::sim::{Sim, TraceEv};
-use crate::smr::NoopApp;
+use crate::rpc::BytesWorkload;
+use crate::sim::TraceEv;
 use crate::Nanos;
 
 #[derive(Debug, Clone)]
@@ -58,25 +57,17 @@ fn charges_in(
 
 pub fn run(slow: bool, samples: usize) -> Decomposition {
     let samples = samples_per_point(samples).min(3_000);
-    let mut cfg = Config::default();
-    cfg.slow_path_always = slow;
-    let mut sim = Sim::new(cfg.clone());
-    sim.enable_trace();
-    for i in 0..cfg.n {
-        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
-    }
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(BytesWorkload { size: 8, label: "flip8" }),
-        samples,
-    );
-    let done = client.done_handle();
-    let client_id = cfg.n;
-    sim.add_actor(Box::new(client));
-    super::run_to_completion(&mut sim, &done);
+    let mut cluster = Deployment::new(Config::default())
+        .system(if slow { System::UbftSlow } else { System::UbftFast })
+        .client(Box::new(BytesWorkload { size: 8, label: "flip8" }))
+        .requests(samples)
+        .trace()
+        .build()
+        .expect("fig9 deployment is valid");
+    let client_id = cluster.clients()[0].id;
+    cluster.run_to_completion();
 
-    let trace = sim.trace();
+    let trace = cluster.trace();
     let leader = 0usize;
     let send = mark_times(trace, client_id, "client_send");
     let donem = mark_times(trace, client_id, "client_done");

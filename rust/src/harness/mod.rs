@@ -1,8 +1,11 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation (§7) on the discrete-event simulator. One module per
 //! experiment; `cargo bench` targets and the `ubft` CLI both dispatch
-//! here. See DESIGN.md §4 for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! here.
+//!
+//! All deployments go through the [`crate::deploy`] builder — the
+//! functions here are thin measurement wrappers (see the README for the
+//! experiment index).
 
 pub mod fig10;
 pub mod fig11;
@@ -13,13 +16,14 @@ pub mod table2;
 pub mod throughput;
 
 use crate::config::Config;
-use crate::consensus::Replica;
+use crate::deploy::{Cluster, Deployment};
 use crate::metrics::Samples;
-use crate::rpc::{Client, Workload};
-use crate::sim::Sim;
-use crate::smr::App;
-use crate::{Nanos, MICRO};
-use std::sync::{Arc, Mutex};
+use crate::rpc::Workload;
+use crate::Nanos;
+
+// The harness's system/factory vocabulary now lives in `crate::deploy`;
+// re-exported here so `harness::System` keeps working.
+pub use crate::deploy::{app_factory, AppFactory, System};
 
 /// Number of measurements per data point. The paper takes ≥ 10 000;
 /// override with `UBFT_SAMPLES` for quick runs.
@@ -27,132 +31,43 @@ pub fn samples_per_point(default: usize) -> usize {
     std::env::var("UBFT_SAMPLES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
-/// Systems compared across the evaluation.
-#[derive(Copy, Clone, PartialEq, Eq, Debug)]
-pub enum System {
-    Unreplicated,
-    Mu,
-    UbftFast,
-    UbftSlow,
-    MinBftVanilla,
-    MinBftHmac,
-}
-
-impl System {
-    pub fn label(&self) -> &'static str {
-        match self {
-            System::Unreplicated => "Unrepl.",
-            System::Mu => "Mu",
-            System::UbftFast => "uBFT (fast)",
-            System::UbftSlow => "uBFT (slow)",
-            System::MinBftVanilla => "MinBFT",
-            System::MinBftHmac => "MinBFT (HMAC)",
-        }
-    }
-}
-
-/// Per-replica application factory (each replica owns an instance).
-pub type AppFactory = Box<dyn Fn() -> Box<dyn App>>;
-
-/// One latency run: deploy `system` with the app/workload, complete
-/// `requests` requests, return the client's latency samples.
+/// One latency run: deploy `system` with the app/workload through the
+/// [`Deployment`] builder, complete `requests` requests, return the
+/// client's latency samples.
 pub fn run_latency(
-    mut cfg: Config,
+    cfg: Config,
     system: System,
     app: &AppFactory,
     workload: Box<dyn Workload>,
     requests: usize,
 ) -> Samples {
-    let think: Nanos = match system {
-        // Unloaded latency for the heavyweight baselines (paper method).
-        System::MinBftVanilla | System::MinBftHmac => 300 * MICRO,
-        _ => 0,
-    };
-    if system == System::UbftSlow {
-        cfg.slow_path_always = true;
-    }
-    let mut sim = Sim::new(cfg.clone());
-    let (replicas, quorum, presend): (Vec<usize>, usize, Nanos) = match system {
-        System::Unreplicated => {
-            let id = sim.add_actor(Box::new(crate::baselines::unreplicated::Server::new(
-                app(),
-                &cfg,
-            )));
-            (vec![id], 1, 0)
-        }
-        System::Mu => {
-            let leader = crate::baselines::mu::MuLeader::new(vec![1, 2], app(), &cfg);
-            sim.add_actor(Box::new(leader));
-            sim.add_actor(Box::new(crate::baselines::mu::MuFollower::new()));
-            sim.add_actor(Box::new(crate::baselines::mu::MuFollower::new()));
-            (vec![0], 1, 0)
-        }
-        System::UbftFast | System::UbftSlow => {
-            for i in 0..cfg.n {
-                sim.add_actor(Box::new(Replica::new(i, cfg.clone(), app())));
-            }
-            ((0..cfg.n).collect(), cfg.quorum(), 0)
-        }
-        System::MinBftVanilla | System::MinBftHmac => {
-            let vanilla = system == System::MinBftVanilla;
-            let secret = [0x5Au8; 32];
-            for i in 0..cfg.n {
-                sim.add_actor(Box::new(crate::baselines::minbft::MinBftReplica::new(
-                    i,
-                    (0..cfg.n).collect(),
-                    cfg.f,
-                    vanilla,
-                    app(),
-                    secret,
-                )));
-            }
-            (
-                (0..cfg.n).collect(),
-                cfg.quorum(),
-                crate::baselines::minbft::client_presend(vanilla),
-            )
-        }
-    };
-    let client = Client::new(replicas, quorum, workload, requests)
-        .with_presend_charge(presend)
-        .with_think(think);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    sim.add_actor(Box::new(client));
-    run_to_completion(&mut sim, &done);
-    let s = samples.lock().unwrap().clone();
-    s
+    let mut cluster = Deployment::new(cfg)
+        .system(system)
+        .app_factory(app.clone())
+        .client(workload)
+        .requests(requests)
+        .build()
+        .expect("harness deployment is valid");
+    cluster.run_to_completion();
+    cluster.samples()
 }
 
-/// Deploy uBFT + client and return (sim, samples, done) without running —
-/// for experiments that need post-run access to internals.
+/// Deploy uBFT (fast path) + one client and return the [`Cluster`]
+/// without running — for experiments that need post-run access to
+/// replica internals and memory nodes.
 pub fn deploy_ubft(
     cfg: &Config,
     app: &AppFactory,
     workload: Box<dyn Workload>,
     requests: usize,
-) -> (Sim, Arc<Mutex<Samples>>, Arc<Mutex<Option<Nanos>>>) {
-    let mut sim = Sim::new(cfg.clone());
-    for i in 0..cfg.n {
-        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), app())));
-    }
-    let client = Client::new((0..cfg.n).collect(), cfg.quorum(), workload, requests);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    sim.add_actor(Box::new(client));
-    (sim, samples, done)
-}
-
-/// Run the sim until the client reports completion (generous cap).
-pub fn run_to_completion(sim: &mut Sim, done: &Arc<Mutex<Option<Nanos>>>) {
-    let mut horizon = crate::SECOND;
-    loop {
-        sim.run_until(horizon);
-        if done.lock().unwrap().is_some() || horizon >= 600 * crate::SECOND {
-            break;
-        }
-        horizon *= 2;
-    }
+) -> Cluster {
+    Deployment::new(cfg.clone())
+        .system(System::UbftFast)
+        .app_factory(app.clone())
+        .client(workload)
+        .requests(requests)
+        .build()
+        .expect("uBFT deployment is valid")
 }
 
 // ---------------------------------------------------------------------
@@ -197,15 +112,8 @@ mod tests {
 
     #[test]
     fn all_systems_complete_requests() {
-        let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
-        for system in [
-            System::Unreplicated,
-            System::Mu,
-            System::UbftFast,
-            System::UbftSlow,
-            System::MinBftVanilla,
-            System::MinBftHmac,
-        ] {
+        let app: AppFactory = app_factory(|| Box::new(NoopApp::new()));
+        for system in System::all() {
             let s = run_latency(
                 Config::default(),
                 system,
@@ -220,7 +128,7 @@ mod tests {
     #[test]
     fn system_ordering_matches_paper() {
         // Unrepl < Mu < uBFT-fast < uBFT-slow < MinBFT-vanilla.
-        let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
+        let app: AppFactory = app_factory(|| Box::new(NoopApp::new()));
         let run = |sys| {
             let mut s = run_latency(
                 Config::default(),
@@ -240,5 +148,19 @@ mod tests {
         assert!(mu < fast, "{mu} {fast}");
         assert!(fast < slow, "{fast} {slow}");
         assert!(slow < minbft, "{slow} {minbft}");
+    }
+
+    #[test]
+    fn deploy_ubft_exposes_cluster_internals() {
+        let app: AppFactory = app_factory(|| Box::new(NoopApp::new()));
+        let mut cluster = deploy_ubft(
+            &Config::default(),
+            &app,
+            Box::new(BytesWorkload { size: 32, label: "noop" }),
+            20,
+        );
+        assert!(cluster.run_to_completion());
+        assert_eq!(cluster.samples().len(), 20);
+        assert!(cluster.probe(0).is_some());
     }
 }

@@ -15,9 +15,8 @@
 //! depends only on t, not on the request size (registers store
 //! fingerprints, not payloads).
 
-use super::{deploy_ubft, print_table, run_to_completion, samples_per_point, AppFactory};
+use super::{app_factory, deploy_ubft, print_table, samples_per_point, AppFactory};
 use crate::config::Config;
-use crate::consensus::Replica;
 use crate::rpc::BytesWorkload;
 use crate::smr::NoopApp;
 use crate::util::fmt_bytes;
@@ -53,20 +52,16 @@ pub fn run_point(tail: usize, size: usize, requests: usize) -> Cell {
     cfg.max_req = size + 1024;
     // Exercise the slow path now and then so registers are used.
     cfg.slow_path_always = true;
-    let app: AppFactory = Box::new(|| Box::new(NoopApp::new()));
-    let (mut sim, _samples, done) = deploy_ubft(
+    let app: AppFactory = app_factory(|| Box::new(NoopApp::new()));
+    let mut cluster = deploy_ubft(
         &cfg,
         &app,
         Box::new(BytesWorkload { size, label: "mem" }),
         requests,
     );
-    run_to_completion(&mut sim, &done);
-    let live = {
-        let actor = sim.actor_mut(0);
-        let r = unsafe { &*(actor as *const dyn crate::env::Actor as *const Replica) };
-        r.mem_bytes()
-    };
-    let disagg_node = sim.mem_node_bytes(0);
+    cluster.run_to_completion();
+    let live = cluster.probe(0).expect("replica 0 probes").mem_bytes;
+    let disagg_node = cluster.mem_node_bytes(0);
     Cell { tail, size, prealloc: prealloc_model(&cfg), live, disagg_node }
 }
 

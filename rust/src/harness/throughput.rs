@@ -5,10 +5,8 @@
 
 use super::{print_table, samples_per_point};
 use crate::config::Config;
-use crate::consensus::Replica;
-use crate::rpc::{BytesWorkload, Client};
-use crate::sim::Sim;
-use crate::smr::NoopApp;
+use crate::deploy::Deployment;
+use crate::rpc::BytesWorkload;
 
 pub struct Point {
     pub pipeline: usize,
@@ -17,24 +15,15 @@ pub struct Point {
 }
 
 pub fn run_point(pipeline: usize, requests: usize) -> Point {
-    let cfg = Config::default();
-    let mut sim = Sim::new(cfg.clone());
-    for i in 0..cfg.n {
-        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
-    }
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(BytesWorkload { size: 32, label: "noop" }),
-        requests,
-    )
-    .with_pipeline(pipeline);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    sim.add_actor(Box::new(client));
-    super::run_to_completion(&mut sim, &done);
-    let finished = done.lock().unwrap().expect("client must finish");
-    let mut s = samples.lock().unwrap();
+    let mut cluster = Deployment::new(Config::default())
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(requests)
+        .pipeline(pipeline)
+        .build()
+        .expect("throughput deployment is valid");
+    cluster.run_to_completion();
+    let finished = cluster.done_at().expect("client must finish");
+    let mut s = cluster.samples();
     Point {
         pipeline,
         kops: requests as f64 / (finished as f64 / 1e9) / 1e3,

@@ -20,11 +20,15 @@
 //!   Redis-style KV stores, a Liquibook-style order matching engine, and an
 //!   HLO-backed tensor service) and both baselines ([`baselines`]: Mu-style
 //!   crash-only SMR and MinBFT-style trusted-counter BFT);
+//! * a unified [`deploy`] builder — `Deployment::new(cfg).system(…)
+//!   .app(…).clients(…).faults(…).build()` — through which every system,
+//!   client fleet and fault scenario (including Byzantine replicas) is
+//!   instantiated, on the simulator or on real threads;
 //! * a PJRT [`runtime`] that loads JAX/Pallas-authored HLO artifacts so the
 //!   request path never touches Python.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the top-level `README.md` for a builder quickstart and the
+//! experiment index, and `ROADMAP.md` for the project's direction.
 
 pub mod util;
 pub mod config;
@@ -43,6 +47,7 @@ pub mod rpc;
 pub mod apps;
 pub mod baselines;
 pub mod byz;
+pub mod deploy;
 pub mod runtime;
 pub mod harness;
 pub mod testing;

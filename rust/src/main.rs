@@ -1,7 +1,7 @@
 //! `ubft` — CLI launcher for the uBFT reproduction.
 //!
 //! Evaluation commands regenerate the paper's figures/tables on the
-//! deterministic discrete-event simulator (see DESIGN.md §4); `serve`
+//! deterministic discrete-event simulator (see README.md); `serve`
 //! runs a real-thread deployment (see also `examples/`).
 
 use ubft::cli::Args;
@@ -79,38 +79,27 @@ fn serve(args: &Args) {
     use ubft::apps::kv::KvWorkload;
     use ubft::apps::KvApp;
     use ubft::config::{Config, SigBackend};
-    use ubft::consensus::Replica;
-    use ubft::rpc::Client;
-    use ubft::sim::real::RealCluster;
+    use ubft::deploy::{Deployment, System};
 
     let requests = args.get_usize("requests", 2_000).unwrap_or(2_000);
     let mut cfg = Config::default();
     cfg.sig_backend = SigBackend::Ed25519; // real crypto in real mode
-    let mut cluster = RealCluster::new(cfg.m, cfg.seed);
-    for i in 0..cfg.n {
-        cluster.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(KvApp::new()))));
-    }
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(KvWorkload::paper()),
-        requests,
-    );
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    cluster.add_actor(Box::new(client));
-    println!("real-mode deployment: {} replicas + 1 client, {} requests…", cfg.n, requests);
+    let n = cfg.n;
+    let mut cluster = Deployment::new(cfg)
+        .system(System::UbftFast)
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload::paper()))
+        .requests(requests)
+        .build_real()
+        .expect("valid real-mode deployment");
+    println!("real-mode deployment: {n} replicas + 1 client, {requests} requests…");
     let t0 = std::time::Instant::now();
     cluster.start();
-    while done.lock().unwrap().is_none() {
-        if t0.elapsed().as_secs() > 120 {
-            eprintln!("timed out");
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(5));
+    if !cluster.wait(std::time::Duration::from_secs(120)) {
+        eprintln!("timed out");
     }
+    let mut s = cluster.samples();
     cluster.stop();
-    let mut s = samples.lock().unwrap();
     println!(
         "completed {} requests in {:.2}s — p50 {:.1} µs, p99 {:.1} µs, throughput {:.1} kops",
         s.len(),

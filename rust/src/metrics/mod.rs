@@ -68,6 +68,12 @@ impl Samples {
         self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
     }
 
+    /// Absorb every sample of `other` (multi-client aggregation).
+    pub fn merge(&mut self, other: &Samples) {
+        self.data.extend_from_slice(&other.data);
+        self.sorted = false;
+    }
+
     /// The percentile scan used by Fig 11 (tail-latency curves).
     pub fn scan(&mut self, percentiles: &[f64]) -> Vec<(f64, Nanos)> {
         percentiles.iter().map(|&p| (p, self.percentile(p))).collect()
@@ -197,6 +203,19 @@ mod tests {
         s.record(10);
         s.record(20);
         assert!((s.mean() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_sample_sets() {
+        let mut a = Samples::new();
+        a.record(10);
+        a.record(30);
+        let mut b = Samples::new();
+        b.record(20);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.percentile(50.0), 20);
+        assert_eq!(a.max(), 30);
     }
 
     #[test]

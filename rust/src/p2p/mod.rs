@@ -15,7 +15,7 @@
 //! This module is the byte-exact, real-memory implementation over the
 //! [`crate::rdma`] fabric (used in real mode, unit tests and the hot-path
 //! bench). Under the DES the same drop/tail semantics are modeled at
-//! message granularity by [`crate::tbcast`] (see DESIGN.md §3).
+//! message granularity by [`crate::tbcast`].
 
 use crate::crypto::xxhash::xxh64;
 use crate::rdma::{register_swmr, Handle};

@@ -50,10 +50,34 @@ struct Outstanding {
     responses: HashMap<Hash32, BTreeSet<NodeId>>,
 }
 
+/// Shared completion/validation counters, readable while the client runs
+/// under a [`crate::sim::Sim`] or a real-thread cluster.
+#[derive(Clone, Debug, Default)]
+pub struct ClientStats {
+    /// Requests that reached a response quorum.
+    pub completed: u64,
+    /// Responses the workload's `check_response` rejected.
+    pub mismatches: u64,
+}
+
 /// Closed-loop client issuing `max_requests` then idling.
+///
+/// Construction is builder-style — `Client::new(workload)` plus `with_*`
+/// setters — so call sites can't transpose the old positional
+/// `(replicas, quorum, …)` arguments, and the response quorum defaults
+/// from the replica-set size (f+1 for n = 2f+1) unless set explicitly:
+///
+/// ```
+/// use ubft::rpc::{BytesWorkload, Client};
+/// let client = Client::new(Box::new(BytesWorkload { size: 32, label: "noop" }))
+///     .with_replicas(vec![0, 1, 2]) // quorum defaults to f+1 = 2
+///     .with_max_requests(500);
+/// # let _ = client;
+/// ```
 pub struct Client {
     replicas: Vec<NodeId>,
-    quorum: usize,
+    /// `None` = derive f+1 from the replica-set size.
+    quorum: Option<usize>,
     workload: Box<dyn Workload>,
     max_requests: usize,
     /// Number of requests kept in flight (1 = closed loop; 2 reproduces
@@ -66,37 +90,60 @@ pub struct Client {
     retry_every: Nanos,
     next_rid: u64,
     inflight: Vec<Outstanding>,
-    pub completed: u64,
-    pub mismatches: u64,
-    pub samples: Arc<Mutex<Samples>>,
-    pub done_at: Arc<Mutex<Option<Nanos>>>,
+    stats: Arc<Mutex<ClientStats>>,
+    samples: Arc<Mutex<Samples>>,
+    done_at: Arc<Mutex<Option<Nanos>>>,
     started: bool,
 }
 
 impl Client {
-    pub fn new(
-        replicas: Vec<NodeId>,
-        quorum: usize,
-        workload: Box<dyn Workload>,
-        max_requests: usize,
-    ) -> Client {
+    /// A client for `workload`. Defaults: no replicas (set
+    /// [`Client::with_replicas`] or use [`Client::for_cluster`]), quorum
+    /// derived from the replica count, 100 requests, closed loop.
+    pub fn new(workload: Box<dyn Workload>) -> Client {
         Client {
-            replicas,
-            quorum,
+            replicas: Vec::new(),
+            quorum: None,
             workload,
-            max_requests,
+            max_requests: 100,
             pipeline: 1,
             presend_charge: 0,
             think: 0,
             retry_every: 5 * crate::MILLI,
             next_rid: 1,
             inflight: Vec::new(),
-            completed: 0,
-            mismatches: 0,
+            stats: Arc::new(Mutex::new(ClientStats::default())),
             samples: Arc::new(Mutex::new(Samples::new())),
             done_at: Arc::new(Mutex::new(None)),
             started: false,
         }
+    }
+
+    /// A client addressing replicas `0..cfg.n` with the config's f+1
+    /// response quorum — the standard wiring for a full BFT cluster.
+    pub fn for_cluster(cfg: &crate::config::Config, workload: Box<dyn Workload>) -> Client {
+        Client::new(workload)
+            .with_replicas((0..cfg.n).collect())
+            .with_quorum(cfg.quorum())
+    }
+
+    /// Replica node ids every request is sent to.
+    pub fn with_replicas(mut self, replicas: Vec<NodeId>) -> Client {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Matching responses required before a request counts as complete.
+    /// Without this, f+1 is derived from the replica-set size (n = 2f+1).
+    pub fn with_quorum(mut self, q: usize) -> Client {
+        self.quorum = Some(q.max(1));
+        self
+    }
+
+    /// Total requests to issue before idling.
+    pub fn with_max_requests(mut self, n: usize) -> Client {
+        self.max_requests = n;
+        self
     }
 
     /// Keep `k` requests in flight (throughput experiment).
@@ -126,6 +173,17 @@ impl Client {
 
     pub fn done_handle(&self) -> Arc<Mutex<Option<Nanos>>> {
         self.done_at.clone()
+    }
+
+    /// Handle to the completion/mismatch counters.
+    pub fn stats_handle(&self) -> Arc<Mutex<ClientStats>> {
+        self.stats.clone()
+    }
+
+    /// The effective response quorum: explicit, or f+1 derived from the
+    /// replica-set size (n = 2f+1).
+    pub fn quorum(&self) -> usize {
+        self.quorum.unwrap_or(self.replicas.len() / 2 + 1)
     }
 
     fn issued(&self) -> u64 {
@@ -160,20 +218,25 @@ impl Client {
     }
 
     fn on_response(&mut self, env: &mut dyn Env, from: NodeId, rid: u64, payload: Vec<u8>) {
+        let quorum = self.quorum();
         let Some(pos) = self.inflight.iter().position(|o| o.rid == rid) else { return };
         let digest = hash(&payload);
         let o = &mut self.inflight[pos];
         o.responses.entry(digest).or_default().insert(from);
-        if o.responses[&digest].len() >= self.quorum {
+        if o.responses[&digest].len() >= quorum {
             let o = self.inflight.remove(pos);
             let latency = env.now().saturating_sub(o.sent_at);
             env.mark("client_done");
             self.samples.lock().unwrap().record(latency);
-            if !self.workload.check_response(&o.payload, &payload) {
-                self.mismatches += 1;
-            }
-            self.completed += 1;
-            if self.completed as usize >= self.max_requests {
+            let completed = {
+                let mut stats = self.stats.lock().unwrap();
+                if !self.workload.check_response(&o.payload, &payload) {
+                    stats.mismatches += 1;
+                }
+                stats.completed += 1;
+                stats.completed
+            };
+            if completed as usize >= self.max_requests {
                 *self.done_at.lock().unwrap() = Some(env.now());
                 return;
             }
@@ -189,6 +252,10 @@ impl Client {
 impl Actor for Client {
     fn on_start(&mut self, env: &mut dyn Env) {
         self.started = true;
+        if self.max_requests == 0 || self.replicas.is_empty() {
+            *self.done_at.lock().unwrap() = Some(env.now());
+            return;
+        }
         // Small offset so replicas finish their own startup first.
         env.set_timer(crate::MICRO, TOKEN_KICK);
         env.set_timer(self.retry_every, TOKEN_RETRY);
@@ -239,5 +306,21 @@ mod tests {
         let mut rng = crate::util::Rng::new(1);
         assert_eq!(w.next_request(&mut rng).len(), 32);
         assert_eq!(w.name(), "flip");
+    }
+
+    #[test]
+    fn quorum_defaults_from_replica_set() {
+        let mk = || Client::new(Box::new(BytesWorkload { size: 8, label: "q" }));
+        assert_eq!(mk().with_replicas(vec![0, 1, 2]).quorum(), 2); // f+1 for n=3
+        assert_eq!(mk().with_replicas(vec![0, 1, 2, 3, 4]).quorum(), 3); // n=5
+        assert_eq!(mk().with_replicas(vec![7]).quorum(), 1);
+        assert_eq!(mk().with_replicas(vec![0, 1, 2]).with_quorum(1).quorum(), 1);
+    }
+
+    #[test]
+    fn for_cluster_matches_config() {
+        let cfg = crate::config::Config::default();
+        let c = Client::for_cluster(&cfg, Box::new(BytesWorkload { size: 8, label: "q" }));
+        assert_eq!(c.quorum(), cfg.quorum());
     }
 }

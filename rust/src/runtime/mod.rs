@@ -5,8 +5,7 @@
 //!
 //! Interchange format is **HLO text**, not serialized `HloModuleProto`:
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
-//! `/opt/xla-example/README.md` and DESIGN.md).
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 //!
 //! Two modules are used by the system:
 //! * `fingerprint.hlo.txt` / `batch_verify.hlo.txt` — the L1 Pallas batch
@@ -14,7 +13,15 @@
 //!   tails at checkpoint/summary time (a background task in the paper);
 //! * `mlp.hlo.txt` — the forward pass of the BFT-replicated tensor
 //!   service ([`crate::apps::TensorApp`]).
+//!
+//! The real PJRT backend needs the `xla` crate (and its bundled
+//! `xla_extension` shared library), which is unavailable in offline
+//! builds — it sits behind the `pjrt` cargo feature. Without the feature
+//! this module keeps the identical public API but every load/execute
+//! returns a structured error, so the rest of the crate (and its tests,
+//! which skip when artifacts are absent) builds and runs unchanged.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
 /// Fixed artifact shapes — must match `python/compile/aot.py`.
@@ -29,8 +36,27 @@ pub mod shapes {
     pub const MLP_OUT: usize = 16;
 }
 
+/// Error type of the stub backend (`pjrt` feature disabled).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug, Clone)]
+pub struct RuntimeUnavailable;
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "built without the `pjrt` feature: PJRT/XLA backend unavailable")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::error::Error for RuntimeUnavailable {}
+
+#[cfg(not(feature = "pjrt"))]
+pub type Result<T> = std::result::Result<T, RuntimeUnavailable>;
+
 /// A loaded, compiled HLO module.
 pub struct Module {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub path: String,
 }
@@ -38,17 +64,29 @@ pub struct Module {
 // SAFETY: the PJRT CPU client and its loaded executables are internally
 // synchronized (TfrtCpuClient); we only call `execute`, which is
 // thread-safe. The xla crate merely fails to declare it.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Module {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Module {}
 
 /// The PJRT client wrapper. One per process; compile once, execute many.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 // SAFETY: see Module.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Runtime {}
 
+impl Runtime {
+    /// Default artifacts directory (overridable for tests).
+    pub fn artifacts_dir() -> String {
+        std::env::var("UBFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -64,13 +102,22 @@ impl Runtime {
         let exe = self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
         Ok(Module { exe, path: path.to_string() })
     }
+}
 
-    /// Default artifacts directory (overridable for tests).
-    pub fn artifacts_dir() -> String {
-        std::env::var("UBFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub backend: creating the client reports the missing feature.
+    pub fn cpu() -> Result<Runtime> {
+        Err(RuntimeUnavailable)
+    }
+
+    /// Stub backend: loading always fails with a structured error.
+    pub fn load(&self, _path: &str) -> Result<Module> {
+        Err(RuntimeUnavailable)
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Module {
     /// Execute with the given input literals; returns the first element of
     /// the result tuple (aot.py lowers with `return_tuple=True`).
@@ -139,6 +186,32 @@ impl Module {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Module {
+    pub fn fingerprint_batch(&self, _msgs: &[[u32; shapes::FP_WORDS]]) -> Result<Vec<u32>> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn batch_verify(
+        &self,
+        _msgs: &[[u32; shapes::FP_WORDS]],
+        _expected: &[u32],
+    ) -> Result<Vec<u32>> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn mlp_forward(
+        &self,
+        _x: &[f32],
+        _w1: &[f32],
+        _b1: &[f32],
+        _w2: &[f32],
+        _b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(RuntimeUnavailable)
+    }
+}
+
 /// Reference implementation of the kernel's fingerprint (must equal
 /// [`crate::crypto::lane_fingerprint32`]) — used to cross-check the HLO
 /// module against native Rust.
@@ -160,5 +233,11 @@ mod tests {
     fn native_fingerprint_is_lane_fingerprint() {
         let words = [1u32, 2, 3, 4];
         assert_eq!(native_fingerprint(&words), crate::crypto::lane_fingerprint32(&words, 0));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_reports_unavailable() {
+        assert!(Runtime::cpu().is_err());
     }
 }

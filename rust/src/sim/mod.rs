@@ -2,7 +2,7 @@
 //!
 //! The paper's evaluation runs on a 4-machine RDMA cluster; that hardware
 //! is unavailable, so every figure/table is regenerated on this DES with a
-//! calibrated latency model (see `DESIGN.md` §1). Actors (replicas,
+//! calibrated latency model (see [`crate::config::LatencyModel`]). Actors (replicas,
 //! clients, Byzantine variants, baseline protocols) are [`Actor`] state
 //! machines; memory nodes are simulated natively by the engine, including
 //! RDMA's 8-byte write atomicity (in-flight writes apply mid-flight, and
@@ -245,44 +245,58 @@ impl Sim {
                 self.core.now = until;
                 break;
             }
-            self.core.now = item.at;
-            self.core.stats.events += 1;
-            match item.ev {
-                QEv::Actor(dst, ev) => self.deliver(dst, item.at, ev),
-                QEv::MemRead { requester, mem_node, region, ticket } => {
-                    let bytes = self
-                        .core
-                        .mem_regions
-                        .get(&(mem_node, region))
-                        .cloned()
-                        .unwrap_or_default();
-                    self.core.push(
-                        self.core.now,
-                        QEv::Actor(
-                            requester,
-                            Event::MemDone { mem_node, ticket, result: MemResult::Read(bytes) },
-                        ),
-                    );
-                }
-                QEv::MemWriteApply { mem_node, region, from, bytes } => {
-                    let slot = self.core.mem_regions.entry((mem_node, region)).or_default();
-                    if slot.len() < from + bytes.len() {
-                        slot.resize(from + bytes.len(), 0);
-                    }
-                    slot[from..from + bytes.len()].copy_from_slice(&bytes);
-                }
-                QEv::MemWriteAck { requester, mem_node, ticket } => {
-                    self.core.push(
-                        self.core.now,
-                        QEv::Actor(
-                            requester,
-                            Event::MemDone { mem_node, ticket, result: MemResult::Written },
-                        ),
-                    );
-                }
-            }
+            self.dispatch(item);
         }
         self.core.now
+    }
+
+    /// Process exactly one queued event (step-wise execution for tests);
+    /// returns its virtual time, or `None` when the queue is empty.
+    pub fn step(&mut self) -> Option<Nanos> {
+        self.start_all();
+        let Reverse(item) = self.core.heap.pop()?;
+        let at = item.at;
+        self.dispatch(item);
+        Some(at)
+    }
+
+    fn dispatch(&mut self, item: QItem) {
+        self.core.now = item.at;
+        self.core.stats.events += 1;
+        match item.ev {
+            QEv::Actor(dst, ev) => self.deliver(dst, item.at, ev),
+            QEv::MemRead { requester, mem_node, region, ticket } => {
+                let bytes = self
+                    .core
+                    .mem_regions
+                    .get(&(mem_node, region))
+                    .cloned()
+                    .unwrap_or_default();
+                self.core.push(
+                    self.core.now,
+                    QEv::Actor(
+                        requester,
+                        Event::MemDone { mem_node, ticket, result: MemResult::Read(bytes) },
+                    ),
+                );
+            }
+            QEv::MemWriteApply { mem_node, region, from, bytes } => {
+                let slot = self.core.mem_regions.entry((mem_node, region)).or_default();
+                if slot.len() < from + bytes.len() {
+                    slot.resize(from + bytes.len(), 0);
+                }
+                slot[from..from + bytes.len()].copy_from_slice(&bytes);
+            }
+            QEv::MemWriteAck { requester, mem_node, ticket } => {
+                self.core.push(
+                    self.core.now,
+                    QEv::Actor(
+                        requester,
+                        Event::MemDone { mem_node, ticket, result: MemResult::Written },
+                    ),
+                );
+            }
+        }
     }
 
     fn deliver(&mut self, dst: NodeId, at: Nanos, ev: Event) {

@@ -1,49 +1,30 @@
 //! End-to-end application tests: every §7.1 workload replicated by uBFT
-//! with all replicas converging to identical application state.
+//! through the [`Deployment`] builder, with all replicas converging to
+//! identical application state.
 
 use ubft::apps::{flip::FlipWorkload, kv::KvWorkload, orderbook::OrderWorkload, redis_like::RedisWorkload};
 use ubft::config::Config;
-use ubft::consensus::Replica;
-use ubft::rpc::{Client, Workload};
-use ubft::sim::Sim;
+use ubft::crypto::Hash32;
+use ubft::deploy::Deployment;
+use ubft::rpc::Workload;
 use ubft::smr::App;
 
 fn run_app(
-    mk_app: impl Fn() -> Box<dyn App>,
+    mk_app: impl Fn() -> Box<dyn App> + 'static,
     workload: Box<dyn Workload>,
     requests: usize,
-) -> (usize, Vec<(u64, ubft::crypto::Hash32)>, u64) {
-    let cfg = Config::default();
-    let mut sim = Sim::new(cfg.clone());
-    for i in 0..cfg.n {
-        sim.add_actor(Box::new(Replica::new(i, cfg.clone(), mk_app())));
-    }
-    let client = Client::new((0..cfg.n).collect(), cfg.quorum(), workload, requests);
-    let samples = client.samples_handle();
-    let done = client.done_handle();
-    sim.add_actor(Box::new(client));
-    let mut horizon = ubft::SECOND;
-    while done.lock().unwrap().is_none() && horizon <= 32 * ubft::SECOND {
-        sim.run_until(horizon);
-        horizon *= 2;
-    }
-    let done = samples.lock().unwrap().len();
-    let mismatches = {
-        let c = sim.actor_mut(cfg.n);
-        let cl = unsafe { &*(c as *const dyn ubft::env::Actor as *const Client) };
-        cl.mismatches
-    };
-    let digests = (0..cfg.n)
-        .map(|i| {
-            let a = sim.actor_mut(i);
-            let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
-            (r.applied_upto(), r.app().digest())
-        })
-        .collect();
-    (done, digests, mismatches)
+) -> (usize, Vec<(u64, Hash32)>, u64) {
+    let mut cluster = Deployment::new(Config::default())
+        .app(mk_app)
+        .client(workload)
+        .requests(requests)
+        .build()
+        .expect("valid deployment");
+    cluster.run_to_completion();
+    (cluster.samples().len(), cluster.digests(), cluster.mismatches())
 }
 
-fn assert_converged(digests: &[(u64, ubft::crypto::Hash32)]) {
+fn assert_converged(digests: &[(u64, Hash32)]) {
     assert!(digests.windows(2).all(|w| w[0] == w[1]), "replicas diverged: {digests:?}");
 }
 

@@ -2,12 +2,12 @@
 //! whole evaluation rests on, plus Mu/MinBFT behavioural checks.
 
 use ubft::config::Config;
-use ubft::harness::{run_latency, AppFactory, System};
+use ubft::harness::{app_factory, run_latency, AppFactory, System};
 use ubft::rpc::BytesWorkload;
 use ubft::smr::NoopApp;
 
 fn noop() -> AppFactory {
-    Box::new(|| Box::new(NoopApp::new()))
+    app_factory(|| Box::new(NoopApp::new()))
 }
 
 fn median(sys: System, size: usize, n: usize) -> u64 {

@@ -1,47 +1,27 @@
 //! End-to-end integration tests for the uBFT consensus engine under the
 //! discrete-event simulator: fast path, slow path, checkpoints, crash
-//! faults, and agreement across replicas.
+//! faults, and agreement across replicas — all deployed through the
+//! [`Deployment`] builder.
 
 use ubft::config::Config;
-use ubft::consensus::Replica;
-use ubft::rpc::{BytesWorkload, Client};
-use ubft::sim::{FaultPlan, Sim};
-use ubft::smr::NoopApp;
+use ubft::deploy::{Cluster, Deployment, FaultPlan};
+use ubft::rpc::BytesWorkload;
 
-/// Build a 3-replica + 1-client deployment; returns (sim, samples handle).
-fn deploy(
-    cfg: Config,
-    requests: usize,
-    faults: FaultPlan,
-) -> (Sim, std::sync::Arc<std::sync::Mutex<ubft::metrics::Samples>>) {
-    let mut sim = Sim::new(cfg.clone());
-    sim.set_faults(faults);
-    for i in 0..cfg.n {
-        let r = Replica::new(i, cfg.clone(), Box::new(NoopApp::new()));
-        assert_eq!(sim.add_actor(Box::new(r)), i);
-    }
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(BytesWorkload { size: 32, label: "noop" }),
-        requests,
-    );
-    let samples = client.samples_handle();
-    sim.add_actor(Box::new(client));
-    (sim, samples)
-}
-
-fn replica_ref(sim: &mut Sim, id: usize) -> &Replica {
-    let actor = sim.actor_mut(id);
-    unsafe { &*(actor as *const dyn ubft::env::Actor as *const Replica) }
+/// Build a 3-replica + 1-client deployment.
+fn deploy(cfg: Config, requests: usize, faults: FaultPlan) -> Cluster {
+    Deployment::new(cfg)
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(requests)
+        .faults(faults)
+        .build()
+        .expect("valid deployment")
 }
 
 #[test]
 fn fast_path_replicates_requests() {
-    let cfg = Config::default();
-    let (mut sim, samples) = deploy(cfg, 50, FaultPlan::default());
-    sim.run_until(ubft::SECOND);
-    let mut s = samples.lock().unwrap();
+    let mut cluster = deploy(Config::default(), 50, FaultPlan::none());
+    cluster.run_until(ubft::SECOND);
+    let mut s = cluster.samples();
     assert_eq!(s.len(), 50, "all requests must complete");
     let p50 = s.median();
     assert!(p50 < 100 * ubft::MICRO, "p50 = {} ns too slow", p50);
@@ -51,10 +31,9 @@ fn fast_path_replicates_requests() {
 fn fast_path_latency_in_paper_regime() {
     // The paper reports ~10µs end-to-end for small requests; our DES
     // should land in the same regime.
-    let cfg = Config::default();
-    let (mut sim, samples) = deploy(cfg, 200, FaultPlan::default());
-    sim.run_until(ubft::SECOND);
-    let mut s = samples.lock().unwrap();
+    let mut cluster = deploy(Config::default(), 200, FaultPlan::none());
+    cluster.run_until(ubft::SECOND);
+    let mut s = cluster.samples();
     assert_eq!(s.len(), 200);
     let p50 = s.median() as f64 / 1000.0;
     assert!(
@@ -67,9 +46,9 @@ fn fast_path_latency_in_paper_regime() {
 fn slow_path_replicates_requests() {
     let mut cfg = Config::default();
     cfg.slow_path_always = true;
-    let (mut sim, samples) = deploy(cfg, 20, FaultPlan::default());
-    sim.run_until(2 * ubft::SECOND);
-    let mut s = samples.lock().unwrap();
+    let mut cluster = deploy(cfg, 20, FaultPlan::none());
+    cluster.run_until(2 * ubft::SECOND);
+    let mut s = cluster.samples();
     assert_eq!(s.len(), 20, "all requests must complete on the slow path");
     let p50 = s.median();
     assert!(p50 > 30 * ubft::MICRO, "slow path suspiciously fast: {p50} ns");
@@ -79,25 +58,21 @@ fn slow_path_replicates_requests() {
 fn replicas_apply_same_sequence() {
     let cfg = Config::default();
     let n = cfg.n;
-    let (mut sim, samples) = deploy(cfg, 120, FaultPlan::default());
-    sim.run_until(ubft::SECOND);
-    assert_eq!(samples.lock().unwrap().len(), 120);
-    let mut digests = Vec::new();
-    for i in 0..n {
-        let r = replica_ref(&mut sim, i);
-        digests.push((r.applied_upto(), r.app().digest()));
-    }
-    assert!(digests.windows(2).all(|w| w[0] == w[1]), "replicas diverged: {digests:?}");
+    let mut cluster = deploy(cfg, 120, FaultPlan::none());
+    cluster.run_until(ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 120);
+    assert_eq!(cluster.digests().len(), n);
+    assert!(cluster.converged(), "replicas diverged: {:?}", cluster.digests());
 }
 
 #[test]
 fn checkpoints_advance_with_load() {
     let mut cfg = Config::default();
     cfg.window = 32; // force several checkpoints in one run
-    let (mut sim, samples) = deploy(cfg, 200, FaultPlan::default());
-    sim.run_until(2 * ubft::SECOND);
-    assert_eq!(samples.lock().unwrap().len(), 200);
-    let r = replica_ref(&mut sim, 0);
+    let mut cluster = deploy(cfg, 200, FaultPlan::none());
+    cluster.run_until(2 * ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 200);
+    let r = cluster.replica(0).expect("replica 0");
     assert!(r.stats.checkpoints >= 4, "checkpoints = {}", r.stats.checkpoints);
     assert!(r.applied_upto() >= 200);
 }
@@ -106,13 +81,10 @@ fn checkpoints_advance_with_load() {
 fn survives_follower_crash() {
     // Crashing one follower (f = 1) must not stop progress: the fast path
     // stalls but the slow path picks up after the timeout.
-    let cfg = Config::default();
-    let mut faults = FaultPlan::default();
-    faults.crash_at.insert(2, 300 * ubft::MICRO);
-    let (mut sim, samples) = deploy(cfg, 40, faults);
-    sim.run_until(4 * ubft::SECOND);
-    let s = samples.lock().unwrap();
-    assert_eq!(s.len(), 40, "requests must still complete with f crashed");
+    let mut cluster =
+        deploy(Config::default(), 40, FaultPlan::crash(2, 300 * ubft::MICRO));
+    cluster.run_until(4 * ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 40, "requests must still complete with f crashed");
 }
 
 #[test]
@@ -120,9 +92,9 @@ fn deterministic_given_seed() {
     let run = |seed: u64| {
         let mut cfg = Config::default();
         cfg.seed = seed;
-        let (mut sim, samples) = deploy(cfg, 30, FaultPlan::default());
-        sim.run_until(ubft::SECOND);
-        let mut s = samples.lock().unwrap();
+        let mut cluster = deploy(cfg, 30, FaultPlan::none());
+        cluster.run_until(ubft::SECOND);
+        let mut s = cluster.samples();
         (s.len(), s.median(), s.percentile(99.0))
     };
     assert_eq!(run(42), run(42));

@@ -1,0 +1,171 @@
+//! Deployment-builder integration: every [`System`] variant deploys
+//! through the single [`Deployment`] entry point and completes a real
+//! workload with validated responses; multi-client deployments merge
+//! their samples; Byzantine fault scenarios inject through the builder's
+//! [`FaultPlan`]; and random builder configurations either build or
+//! return a structured validation error — never panic.
+
+use ubft::apps::flip::FlipWorkload;
+use ubft::apps::FlipApp;
+use ubft::config::Config;
+use ubft::deploy::{Deployment, FaultPlan, System};
+use ubft::rpc::BytesWorkload;
+use ubft::testing::props;
+
+fn flip_deployment(system: System, requests: usize) -> Deployment {
+    Deployment::new(Config::default())
+        .system(system)
+        .app(|| Box::new(FlipApp::new()))
+        .client(Box::new(FlipWorkload { size: 32 }))
+        .requests(requests)
+        .think(0) // full speed even for the MinBFT variants
+}
+
+#[test]
+fn every_system_completes_a_validated_workload() {
+    for system in System::all() {
+        let mut cluster = flip_deployment(system, 200).build().expect("valid deployment");
+        assert!(cluster.run_to_completion(), "{system:?} starved");
+        assert_eq!(cluster.samples().len(), 200, "{system:?} lost samples");
+        assert_eq!(cluster.completed(), 200, "{system:?} lost requests");
+        assert_eq!(cluster.mismatches(), 0, "{system:?} returned corrupt responses");
+        assert!(cluster.converged(), "{system:?} replicas diverged");
+    }
+}
+
+#[test]
+fn multi_client_deployment_merges_samples() {
+    let mut cluster = Deployment::new(Config::default())
+        .system(System::UbftFast)
+        .app(|| Box::new(FlipApp::new()))
+        .clients(4, |_i| Box::new(FlipWorkload { size: 32 }))
+        .requests(50)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "multi-client run starved");
+    assert_eq!(cluster.clients().len(), 4);
+    for (i, c) in cluster.clients().iter().enumerate() {
+        assert_eq!(c.samples().len(), 50, "client {i}");
+        assert_eq!(c.stats().mismatches, 0, "client {i}");
+    }
+    assert_eq!(cluster.samples().len(), 200, "merged sample count");
+    assert_eq!(cluster.completed(), 200);
+    assert!(cluster.converged(), "replicas diverged under concurrent clients");
+}
+
+#[test]
+fn per_client_workloads_by_index() {
+    // Clients 0/1 run flip, clients 2/3 plain bytes — the factory gets
+    // the client index.
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(FlipApp::new()))
+        .clients(4, |i| {
+            if i < 2 {
+                Box::new(FlipWorkload { size: 32 })
+            } else {
+                Box::new(BytesWorkload { size: 64, label: "bytes" })
+            }
+        })
+        .requests(25)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion());
+    assert_eq!(cluster.samples().len(), 100);
+    assert_eq!(cluster.mismatches(), 0);
+}
+
+#[test]
+fn equivocating_leader_is_neutralized() {
+    // Replica 0 (the view-0 leader) equivocates at the CTBcast level:
+    // conflicting stories to the two correct replicas, on both paths.
+    // Agreement must hold and a view change must restore progress.
+    let attack = FaultPlan::equivocate(
+        0,
+        vec![1],
+        vec![2],
+        b"story a".to_vec(),
+        b"story b".to_vec(),
+    );
+    let mut cluster = Deployment::new(Config::default())
+        .system(System::UbftFast)
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(25)
+        .faults(attack)
+        .build()
+        .expect("valid Byzantine deployment");
+    assert_eq!(cluster.byz_ids().to_vec(), vec![0]);
+    assert!(cluster.run_to_completion(), "Byzantine leader starved the cluster");
+    assert_eq!(cluster.samples().len(), 25);
+    assert_eq!(cluster.mismatches(), 0);
+    assert!(cluster.converged(), "correct replicas diverged under equivocation");
+    assert!(cluster.probe(0).is_none(), "Byzantine slot must not expose replica state");
+    for i in [1, 2] {
+        let p = cluster.probe(i).expect("correct replica probes");
+        assert!(p.view >= 1, "replica {i} never view-changed away from the attacker");
+        assert!(p.applied_upto >= 25);
+    }
+}
+
+#[test]
+fn crash_fault_plan_through_builder() {
+    // The simulator-level faults ride in the same FaultPlan: crash one
+    // follower; the cluster keeps serving.
+    let mut cluster = Deployment::new(Config::default())
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(40)
+        .faults(FaultPlan::crash(2, 300 * ubft::MICRO))
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "crash of f replicas must not stop progress");
+    assert_eq!(cluster.samples().len(), 40);
+}
+
+#[test]
+fn prop_random_builder_configs_never_panic() {
+    props(60, |g| {
+        let mut cfg = Config::default();
+        // Half the cases draw a deliberately unconstrained shape.
+        if g.bool() {
+            cfg.f = g.range(0, 4);
+            cfg.n = g.range(1, 9); // often violates n = 2f+1
+            cfg.m = g.range(0, 6);
+            cfg.fm = g.range(0, 3);
+            cfg.tail = g.range(0, 64);
+            cfg.window = g.range(0, 64);
+        }
+        cfg.seed = g.u64();
+        let mut d = Deployment::new(cfg.clone())
+            .system(*g.pick(&System::all()))
+            .clients(g.range(0, 5), |_i| Box::new(BytesWorkload { size: 16, label: "p" }))
+            .requests(g.range(0, 50));
+        if g.bool() {
+            d = d.pipeline(g.range(0, 4));
+        }
+        if g.bool() {
+            // Fault plans with possibly out-of-range nodes / probabilities.
+            let mut plan = FaultPlan::none()
+                .with_crash(g.range(0, 12), g.u64() % 1_000_000)
+                .with_mem_crash(g.range(0, 8), g.u64() % 1_000_000)
+                .with_drop_prob(g.f64() * 1.5)
+                .with_torn_write_prob(g.f64());
+            if g.bool() {
+                plan = plan.with_equivocation(
+                    g.range(0, 8),
+                    vec![g.range(0, 8)],
+                    vec![g.range(0, 8)],
+                    vec![0xA; 8],
+                    vec![0xB; 8],
+                );
+            }
+            d = d.faults(plan);
+        }
+        // The property: build() classifies every description — Ok or a
+        // structured DeployError — without panicking.
+        match d.build() {
+            Ok(_) => assert!(cfg.validate().is_ok(), "invalid config accepted"),
+            Err(e) => {
+                let _ = e.to_string(); // Display must not panic either
+            }
+        }
+    });
+}

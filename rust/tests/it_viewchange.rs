@@ -1,73 +1,43 @@
 //! View-change integration tests: leader crashes, leader partitions, and
-//! state agreement across the change (Alg 3).
+//! state agreement across the change (Alg 3), deployed through the
+//! [`Deployment`] builder.
 
 use ubft::config::Config;
-use ubft::consensus::Replica;
-use ubft::rpc::{BytesWorkload, Client};
-use ubft::sim::{FaultPlan, Sim};
-use ubft::smr::NoopApp;
+use ubft::deploy::{Cluster, Deployment, FaultPlan};
+use ubft::rpc::BytesWorkload;
 
-fn deploy(
-    cfg: Config,
-    requests: usize,
-    faults: FaultPlan,
-) -> (Sim, std::sync::Arc<std::sync::Mutex<ubft::metrics::Samples>>) {
-    let mut sim = Sim::new(cfg.clone());
-    sim.set_faults(faults);
-    for i in 0..cfg.n {
-        let r = Replica::new(i, cfg.clone(), Box::new(NoopApp::new()));
-        sim.add_actor(Box::new(r));
-    }
-    let client = Client::new(
-        (0..cfg.n).collect(),
-        cfg.quorum(),
-        Box::new(BytesWorkload { size: 32, label: "noop" }),
-        requests,
-    );
-    let samples = client.samples_handle();
-    sim.add_actor(Box::new(client));
-    (sim, samples)
-}
-
-fn replica_ref(sim: &mut Sim, id: usize) -> &Replica {
-    let actor = sim.actor_mut(id);
-    unsafe { &*(actor as *const dyn ubft::env::Actor as *const Replica) }
+fn deploy(cfg: Config, requests: usize, faults: FaultPlan) -> Cluster {
+    Deployment::new(cfg)
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(requests)
+        .faults(faults)
+        .build()
+        .expect("valid deployment")
 }
 
 #[test]
 fn leader_crash_triggers_view_change_and_progress_resumes() {
-    let cfg = Config::default();
-    let mut faults = FaultPlan::default();
     // Crash the view-0 leader (replica 0) mid-run (~10 of 30 requests in).
-    faults.crash_at.insert(0, 100 * ubft::MICRO);
-    let (mut sim, samples) = deploy(cfg, 30, faults);
-    sim.run_until(6 * ubft::SECOND);
-    let s_len = samples.lock().unwrap().len();
-    assert_eq!(s_len, 30, "requests must complete after the view change");
+    let mut cluster =
+        deploy(Config::default(), 30, FaultPlan::crash(0, 100 * ubft::MICRO));
+    cluster.run_until(6 * ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 30, "requests must complete after the view change");
     // Survivors moved past view 0.
     for i in 1..3 {
-        let r = replica_ref(&mut sim, i);
-        assert!(r.view() >= 1, "replica {i} still in view {}", r.view());
-        assert!(r.stats.view_changes >= 1);
+        let p = cluster.probe(i).expect("survivor probes");
+        assert!(p.view >= 1, "replica {i} still in view {}", p.view);
+        assert!(cluster.replica(i).unwrap().stats.view_changes >= 1);
     }
 }
 
 #[test]
 fn survivors_agree_after_view_change() {
-    let cfg = Config::default();
-    let mut faults = FaultPlan::default();
-    faults.crash_at.insert(0, 80 * ubft::MICRO);
-    let (mut sim, samples) = deploy(cfg, 25, faults);
-    sim.run_until(6 * ubft::SECOND);
-    assert_eq!(samples.lock().unwrap().len(), 25);
-    let a = {
-        let r = replica_ref(&mut sim, 1);
-        (r.applied_upto(), r.app().digest())
-    };
-    let b = {
-        let r = replica_ref(&mut sim, 2);
-        (r.applied_upto(), r.app().digest())
-    };
+    let mut cluster =
+        deploy(Config::default(), 25, FaultPlan::crash(0, 80 * ubft::MICRO));
+    cluster.run_until(6 * ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 25);
+    let a = cluster.probe(1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+    let b = cluster.probe(2).map(|p| (p.applied_upto, p.app_digest)).unwrap();
     assert_eq!(a, b, "survivors diverged after view change");
 }
 
@@ -75,31 +45,13 @@ fn survivors_agree_after_view_change() {
 fn leader_partition_then_rejoin_converges() {
     // A temporary partition of the leader (not a crash) forces a view
     // change; the old leader rejoins and the cluster keeps agreement.
-    let cfg = Config::default();
-    let mut faults = FaultPlan::default();
-    faults.partitions.push(ubft::sim::Partition {
-        a: 0,
-        b: 1,
-        from: 300 * ubft::MICRO,
-        until: 4 * ubft::MILLI,
-    });
-    faults.partitions.push(ubft::sim::Partition {
-        a: 0,
-        b: 2,
-        from: 300 * ubft::MICRO,
-        until: 4 * ubft::MILLI,
-    });
-    let (mut sim, samples) = deploy(cfg, 25, faults);
-    sim.run_until(8 * ubft::SECOND);
-    let done = samples.lock().unwrap().len();
-    assert_eq!(done, 25, "client must eventually complete all requests");
-    let d1 = {
-        let r = replica_ref(&mut sim, 1);
-        (r.applied_upto(), r.app().digest())
-    };
-    let d2 = {
-        let r = replica_ref(&mut sim, 2);
-        (r.applied_upto(), r.app().digest())
-    };
+    let faults = FaultPlan::none()
+        .with_partition(0, 1, 300 * ubft::MICRO, 4 * ubft::MILLI)
+        .with_partition(0, 2, 300 * ubft::MICRO, 4 * ubft::MILLI);
+    let mut cluster = deploy(Config::default(), 25, faults);
+    cluster.run_until(8 * ubft::SECOND);
+    assert_eq!(cluster.samples().len(), 25, "client must eventually complete all requests");
+    let d1 = cluster.probe(1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+    let d2 = cluster.probe(2).map(|p| (p.applied_upto, p.app_digest)).unwrap();
     assert_eq!(d1, d2);
 }

@@ -5,11 +5,9 @@
 
 use ubft::config::Config;
 use ubft::consensus::msgs::*;
-use ubft::consensus::Replica;
 use ubft::crypto::{Certificate, Hash32, KeyStore, Sig};
-use ubft::rpc::{BytesWorkload, Client};
-use ubft::sim::{FaultPlan, Sim};
-use ubft::smr::NoopApp;
+use ubft::deploy::{Deployment, FaultPlan};
+use ubft::rpc::BytesWorkload;
 use ubft::testing::{props, Gen};
 use ubft::util::wire::Wire;
 
@@ -204,47 +202,35 @@ fn prop_consensus_agreement_under_random_faults() {
     props(8, |g| {
         let mut cfg = Config::default();
         cfg.seed = g.u64();
+        let n = cfg.n;
         let requests = 15 + g.range(0, 15);
-        let mut faults = FaultPlan::default();
-        faults.drop_prob = g.f64() * 0.1;
-        faults.torn_write_prob = g.f64();
+        let mut plan = FaultPlan::none()
+            .with_drop_prob(g.f64() * 0.1)
+            .with_torn_write_prob(g.f64());
         let crashed: Option<usize> =
             if g.bool() { Some(g.range(0, 3)) } else { None };
         if let Some(c) = crashed {
-            faults.crash_at.insert(c, 150_000 + g.range(0, 300_000) as u64);
+            plan = plan.with_crash(c, 150_000 + g.range(0, 300_000) as u64);
         }
-        let mut sim = Sim::new(cfg.clone());
-        sim.set_faults(faults);
-        for i in 0..cfg.n {
-            sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
-        }
-        let client = Client::new(
-            (0..cfg.n).collect(),
-            cfg.quorum(),
-            Box::new(BytesWorkload { size: 32, label: "noop" }),
-            requests,
-        );
-        let samples = client.samples_handle();
-        let done = client.done_handle();
-        sim.add_actor(Box::new(client));
-        let mut horizon = ubft::SECOND;
-        while done.lock().unwrap().is_none() && horizon <= 64 * ubft::SECOND {
-            sim.run_until(horizon);
-            horizon *= 2;
-        }
+        let mut cluster = Deployment::new(cfg)
+            .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .requests(requests)
+            .faults(plan)
+            .build()
+            .expect("valid deployment");
+        cluster.run_to_completion();
 
         // Liveness (a majority is always up).
-        assert_eq!(samples.lock().unwrap().len(), requests, "case {}", g.case);
+        assert_eq!(cluster.samples().len(), requests, "case {}", g.case);
 
         // Safety: surviving replicas applied identical prefixes.
         let mut states = Vec::new();
-        for i in 0..cfg.n {
+        for i in 0..n {
             if crashed == Some(i) {
                 continue;
             }
-            let a = sim.actor_mut(i);
-            let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
-            states.push((r.applied_upto(), r.app().digest()));
+            let p = cluster.probe(i).expect("correct replica probes");
+            states.push((p.applied_upto, p.app_digest));
         }
         assert!(states.windows(2).all(|w| w[0] == w[1]), "diverged: {states:?}");
     });

@@ -1,46 +1,53 @@
+//! Debug companion to `prop_invariants`: replays one randomized fault
+//! schedule through the [`Deployment`] builder, printing replica state at
+//! increasing horizons. Reproduce a failing case with
+//! `UBFT_PROP_SEED=<seed> cargo test --test prop_invariants_dbg -- --nocapture`.
+
 use ubft::config::Config;
-use ubft::consensus::Replica;
-use ubft::rpc::{BytesWorkload, Client};
-use ubft::sim::{FaultPlan, Sim};
-use ubft::smr::NoopApp;
+use ubft::deploy::{Deployment, FaultPlan};
+use ubft::rpc::BytesWorkload;
 use ubft::testing::{props, Gen};
 
 #[test]
 fn dbg() {
-    // replicate case: UBFT_PROP_SEED=5330250683544530024 draws
     props(1, |g: &mut Gen| {
         let mut cfg = Config::default();
         cfg.seed = g.u64();
         let requests = 15 + g.range(0, 15);
-        let mut faults = FaultPlan::default();
-        faults.drop_prob = g.f64() * 0.1;
-        faults.torn_write_prob = g.f64();
+        let mut plan = FaultPlan::none()
+            .with_drop_prob(g.f64() * 0.1)
+            .with_torn_write_prob(g.f64());
         let crashed: Option<usize> = if g.bool() { Some(g.range(0, 3)) } else { None };
         if let Some(c) = crashed {
-            faults.crash_at.insert(c, 150_000 + g.range(0, 300_000) as u64);
+            plan = plan.with_crash(c, 150_000 + g.range(0, 300_000) as u64);
         }
-        println!("seed={} requests={} drop={:.3} torn={:.2} crash={:?}",
-            cfg.seed, requests, faults.drop_prob, faults.torn_write_prob, crashed);
-        let mut sim = Sim::new(cfg.clone());
-        sim.set_faults(faults);
-        for i in 0..cfg.n {
-            sim.add_actor(Box::new(Replica::new(i, cfg.clone(), Box::new(NoopApp::new()))));
-        }
-        let client = Client::new((0..cfg.n).collect(), cfg.quorum(),
-            Box::new(BytesWorkload { size: 32, label: "noop" }), requests);
-        let samples = client.samples_handle();
-        sim.add_actor(Box::new(client));
+        println!("seed={} requests={} crash={:?}", cfg.seed, requests, crashed);
+        let mut cluster = Deployment::new(cfg)
+            .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+            .requests(requests)
+            .faults(plan)
+            .build()
+            .expect("valid deployment");
         for sec in [1u64, 5, 20, 60] {
-            sim.run_until(sec * ubft::SECOND);
-            let done = samples.lock().unwrap().len();
+            cluster.run_until(sec * ubft::SECOND);
+            let done = cluster.samples().len();
             let mut info = String::new();
             for i in 0..3 {
-                if crashed == Some(i) { continue; }
-                let a = sim.actor_mut(i);
-                let r = unsafe { &*(a as *const dyn ubft::env::Actor as *const Replica) };
-                info += &format!(" r{i}[v={} au={} vc={} df={} ds={} byz={} sum={}/{}]",
-                    r.view(), r.applied_upto(), r.stats.view_changes, r.stats.decided_fast,
-                    r.stats.decided_slow, r.stats.byz_blocked, r.stats.summaries_emitted, r.stats.summaries_adopted);
+                if crashed == Some(i) {
+                    continue;
+                }
+                let r = cluster.replica(i).expect("correct replica");
+                info += &format!(
+                    " r{i}[v={} au={} vc={} df={} ds={} byz={} sum={}/{}]",
+                    r.view(),
+                    r.applied_upto(),
+                    r.stats.view_changes,
+                    r.stats.decided_fast,
+                    r.stats.decided_slow,
+                    r.stats.byz_blocked,
+                    r.stats.summaries_emitted,
+                    r.stats.summaries_adopted
+                );
             }
             println!("t={sec}s done={done}{info}");
         }
