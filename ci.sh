@@ -8,6 +8,10 @@ cd "$(dirname "$0")/rust"
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --release --benches =="
+# Compile-check every bench target so hot-path benchmarks can't rot.
+cargo build --release --benches
+
 echo "== cargo test -q =="
 cargo test -q
 

@@ -3,37 +3,112 @@
 //! unavailable offline): warmup + N timed iterations, reports ns/op.
 //!
 //! These report the hot-path costs: the p2p ring is the per-message floor,
-//! xxhash the checksum cost, Ed25519 the slow-path crypto, the DES event
-//! rate bounds how fast the evaluation sweeps run.
+//! xxhash the checksum cost, Ed25519 the slow-path crypto, batched
+//! PREPARE encoding the per-slot serialization cost, the TBcast fan-out
+//! the encode-once broadcast cost, and the DES event rate bounds how fast
+//! the evaluation sweeps run.
+//!
+//! Every result is also appended to `BENCH_hotpath.json` (override the
+//! path with `UBFT_BENCH_JSON`) so future PRs have a perf trajectory:
+//! `{"schema":"ubft-hotpath-v1","results":[{"name":...,"value":...,
+//! "unit":...},...]}`.
 
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
-    for _ in 0..(iters / 10).max(1) {
-        f();
+/// Collected `(name, value, unit)` rows for the JSON report.
+struct Report {
+    rows: Vec<(String, f64, &'static str)>,
+}
+
+impl Report {
+    fn new() -> Report {
+        Report { rows: Vec::new() }
     }
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        f();
+
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: u64, mut f: F) -> f64 {
+        for _ in 0..(iters / 10).max(1) {
+            f();
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        println!("{name:<52} {ns:>12.1} ns/op");
+        self.rows.push((name.to_string(), ns, "ns_per_op"));
+        ns
     }
-    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
-    println!("{name:<44} {ns:>12.1} ns/op");
-    ns
+
+    fn record(&mut self, name: &str, value: f64, unit: &'static str) {
+        self.rows.push((name.to_string(), value, unit));
+    }
+
+    /// Hand-rolled JSON (serde unavailable offline). Names are ASCII
+    /// identifiers; only `"` and `\` would need escaping and none occur.
+    fn write_json(&self) {
+        let path = std::env::var("UBFT_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        let mut out = String::from("{\"schema\":\"ubft-hotpath-v1\",\"results\":[");
+        for (i, (name, value, unit)) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{name}\",\"value\":{value:.3},\"unit\":\"{unit}\"}}"
+            ));
+        }
+        out.push_str("]}\n");
+        match std::fs::write(&path, out) {
+            Ok(()) => println!("\n[results written to {path}]"),
+            Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+        }
+    }
+}
+
+/// Minimal no-op environment for driving endpoints outside the DES.
+struct SinkEnv;
+
+impl ubft::env::Env for SinkEnv {
+    fn me(&self) -> ubft::NodeId {
+        0
+    }
+    fn now(&self) -> ubft::Nanos {
+        0
+    }
+    fn rng(&mut self) -> &mut ubft::util::Rng {
+        unreachable!("benchmark env has no rng")
+    }
+    fn send(&mut self, _: ubft::NodeId, _: Vec<u8>) {}
+    fn charge(&mut self, _: ubft::metrics::Category, _: ubft::Nanos) {}
+    fn set_timer(&mut self, _: ubft::Nanos, _: u64) {}
+    fn mem_write(
+        &mut self,
+        _: usize,
+        _: ubft::env::RegionId,
+        _: Vec<u8>,
+    ) -> ubft::env::Ticket {
+        0
+    }
+    fn mem_read(&mut self, _: usize, _: ubft::env::RegionId) -> ubft::env::Ticket {
+        0
+    }
+    fn mark(&mut self, _: &'static str) {}
 }
 
 fn main() {
+    let mut rep = Report::new();
     println!("--- uBFT hot-path micro-benchmarks (real mode) ---");
 
     // p2p ring: one-way message post + poll (the §6.2 primitive).
     {
         let (mut tx, mut rx) = ubft::p2p::create(128, 256);
         let payload = [0xABu8; 64];
-        bench("p2p ring send+recv (64 B)", 2_000_000, || {
+        rep.bench("p2p ring send+recv (64 B)", 2_000_000, || {
             tx.send(&payload);
             while rx.poll().is_none() {}
         });
         let big = [0xCDu8; 256];
-        bench("p2p ring send+recv (256 B)", 1_000_000, || {
+        rep.bench("p2p ring send+recv (256 B)", 1_000_000, || {
             tx.send(&big);
             while rx.poll().is_none() {}
         });
@@ -42,11 +117,11 @@ fn main() {
     // Checksums.
     {
         let data = vec![0x5Au8; 256];
-        bench("xxhash64 (256 B)", 5_000_000, || {
+        rep.bench("xxhash64 (256 B)", 5_000_000, || {
             std::hint::black_box(ubft::crypto::xxh64(&data, 0));
         });
         let words: Vec<u32> = (0..16).collect();
-        bench("lane_fingerprint32 (16 words)", 5_000_000, || {
+        rep.bench("lane_fingerprint32 (16 words)", 5_000_000, || {
             std::hint::black_box(ubft::crypto::lane_fingerprint32(&words, 0));
         });
     }
@@ -56,32 +131,88 @@ fn main() {
         let ks = ubft::crypto::KeyStore::ed25519(2, 42);
         let msg = [7u8; 64];
         let sig = ks.sign(0, &msg);
-        bench("ed25519 sign (64 B)", 300, || {
+        rep.bench("ed25519 sign (64 B)", 300, || {
             std::hint::black_box(ks.sign(0, &msg));
         });
-        bench("ed25519 verify (64 B)", 150, || {
+        rep.bench("ed25519 verify (64 B)", 150, || {
             assert!(ks.verify(0, &msg, &sig));
         });
         let sim = ubft::crypto::KeyStore::sim(42);
         let ssig = sim.sign(0, &msg);
-        bench("sim-signer sign+verify", 500_000, || {
+        rep.bench("sim-signer sign+verify", 500_000, || {
             assert!(sim.verify(0, &msg, &ssig));
         });
     }
 
-    // Wire encoding of a PREPARE (the per-proposal serialization cost).
+    // Wire encoding of a PREPARE at batch sizes 1/8/32: the per-slot
+    // serialization cost the adaptive batching amortizes.
     {
         use ubft::consensus::msgs::{PrepareBody, Request};
         use ubft::util::wire::Wire;
-        let pb = PrepareBody {
+        let mk = |batch: usize| PrepareBody {
             view: 3,
             slot: 999,
-            req: Request { client: 4, rid: 77, payload: vec![0u8; 64] },
+            reqs: (0..batch as u64)
+                .map(|i| Request { client: 4 + i, rid: 77 + i, payload: vec![0u8; 64] })
+                .collect(),
         };
-        bench("PrepareBody encode+decode", 1_000_000, || {
-            let enc = pb.encode();
-            std::hint::black_box(PrepareBody::decode(&enc).unwrap());
+        for batch in [1usize, 8, 32] {
+            let pb = mk(batch);
+            rep.bench(
+                &format!("PrepareBody encode+decode (batch={batch}, 64 B reqs)"),
+                1_000_000 / batch as u64,
+                || {
+                    let enc = pb.encode();
+                    std::hint::black_box(PrepareBody::decode(&enc).unwrap());
+                },
+            );
+            rep.bench(
+                &format!("PrepareBody batch_digest (batch={batch})"),
+                1_000_000 / batch as u64,
+                || {
+                    std::hint::black_box(pb.batch_digest());
+                },
+            );
+        }
+    }
+
+    // Encode-once broadcast: the LOCK frame is encoded once from a
+    // borrowed payload (new) vs cloned into the enum and encoded (old
+    // per-recipient pattern), then fanned out over TBcast where every
+    // recipient's frame and the retransmit buffer share one Arc.
+    {
+        use ubft::ctbcast::CtbMsg;
+        use ubft::util::wire::Wire;
+        let m = vec![0x42u8; 1024];
+        rep.bench("LOCK encode (clone into enum, 1 KiB)", 1_000_000, || {
+            std::hint::black_box(
+                CtbMsg::Lock { bcaster: 0, k: 7, m: m.clone() }.encode(),
+            );
         });
+        rep.bench("LOCK encode (encode-once helper, 1 KiB)", 1_000_000, || {
+            std::hint::black_box(CtbMsg::encode_lock(0, 7, &m));
+        });
+        let mut env = SinkEnv;
+        for batch in [1usize, 8, 32] {
+            use ubft::consensus::msgs::{ConsMsg, PrepareBody, Request};
+            let pb = PrepareBody {
+                view: 0,
+                slot: 1,
+                reqs: (0..batch as u64)
+                    .map(|i| Request { client: i, rid: i, payload: vec![0u8; 64] })
+                    .collect(),
+            };
+            let enc = ConsMsg::Prepare(pb).encode();
+            let mut tb = ubft::tbcast::TbEndpoint::new(0, vec![0, 1, 2], 128);
+            rep.bench(
+                &format!("Prepare encode+TB fan-out n=3 (batch={batch})"),
+                200_000,
+                || {
+                    let frame = CtbMsg::encode_lock(0, 1, &enc);
+                    std::hint::black_box(tb.broadcast(&mut env, frame));
+                },
+            );
+        }
     }
 
     // DES engine throughput: events/second processed.
@@ -114,7 +245,8 @@ fn main() {
         sim.run_until(ubft::SECOND * 3600);
         let evs = sim.stats().events;
         let rate = evs as f64 / t0.elapsed().as_secs_f64();
-        println!("{:<44} {:>12.2} M events/s", "DES engine throughput", rate / 1e6);
+        println!("{:<52} {:>12.2} M events/s", "DES engine throughput", rate / 1e6);
+        rep.record("DES engine throughput", rate, "events_per_s");
     }
 
     // End-to-end DES consensus rate: simulated requests per wall second.
@@ -143,8 +275,11 @@ fn main() {
         }
         let rate = 20_000.0 / t0.elapsed().as_secs_f64();
         println!(
-            "{:<44} {:>12.0} sim-requests/wall-s",
+            "{:<52} {:>12.0} sim-requests/wall-s",
             "DES uBFT fast-path simulation rate", rate
         );
+        rep.record("DES uBFT fast-path simulation rate", rate, "sim_requests_per_wall_s");
     }
+
+    rep.write_json();
 }

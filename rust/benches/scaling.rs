@@ -1,0 +1,7 @@
+//! Bench target: multi-client scaling sweep on the DES (smaller default
+//! sample count; run `ubft scaling` for the full version).
+fn main() {
+    let t0 = std::time::Instant::now();
+    ubft::harness::scaling::main_run(ubft::harness::samples_per_point(2000));
+    println!("\n[scaling regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

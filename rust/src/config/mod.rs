@@ -100,6 +100,17 @@ pub struct Config {
     pub window: usize,
     /// Maximum request payload bytes (sizes the p2p ring slots).
     pub max_req: usize,
+    /// Maximum requests per consensus slot (adaptive batching; 1 = the
+    /// paper's one-request-per-slot shape, the default).
+    pub max_batch_reqs: usize,
+    /// Maximum summed request payload bytes per batch. The first request
+    /// of a batch always fits, so an oversized request stays proposable.
+    pub max_batch_bytes: usize,
+    /// Proposed-but-undecided slots the leader keeps in flight (the §9
+    /// consensus pipeline, generalized). 0 = unbounded (the window is
+    /// the only limit — the seed's behaviour). Small values (2–4) make
+    /// the request queue accumulate so batches actually fill under load.
+    pub max_inflight_slots: usize,
     /// δ — the known post-GST communication bound (register cooldown).
     pub delta: Nanos,
     /// Fast-path timeout before a slot falls back to the slow path.
@@ -128,6 +139,9 @@ impl Default for Config {
             tail: 128,
             window: 256,
             max_req: 8192,
+            max_batch_reqs: 1,
+            max_batch_bytes: 64 * 1024,
+            max_inflight_slots: 0,
             delta: 10 * MICRO,
             fastpath_timeout: 120 * MICRO,
             viewchange_timeout: 2 * MILLI,
@@ -165,6 +179,21 @@ impl Config {
         if self.window == 0 {
             return Err("window must be > 0".into());
         }
+        if self.max_batch_reqs == 0 {
+            return Err("max_batch_reqs must be >= 1".into());
+        }
+        if self.max_batch_bytes == 0 {
+            return Err("max_batch_bytes must be >= 1".into());
+        }
+        if self.max_batch_reqs > self.window {
+            // A batch rides in one slot; capping it at the window keeps
+            // the per-window request (and memory) bound within window×
+            // of the unbatched accounting (§7).
+            return Err(format!(
+                "max_batch_reqs = {} must not exceed window = {}",
+                self.max_batch_reqs, self.window
+            ));
+        }
         Ok(())
     }
 
@@ -190,6 +219,9 @@ impl Config {
                 "tail" => c.tail = u(v)? as usize,
                 "window" => c.window = u(v)? as usize,
                 "max_req" => c.max_req = u(v)? as usize,
+                "max_batch_reqs" => c.max_batch_reqs = u(v)? as usize,
+                "max_batch_bytes" => c.max_batch_bytes = u(v)? as usize,
+                "max_inflight_slots" => c.max_inflight_slots = u(v)? as usize,
                 "delta_ns" => c.delta = u(v)?,
                 "fastpath_timeout_ns" => c.fastpath_timeout = u(v)?,
                 "viewchange_timeout_ns" => c.viewchange_timeout = u(v)?,
@@ -256,6 +288,22 @@ mod tests {
     fn parse_rejects_inconsistent() {
         assert!(Config::parse("n = 4\n").is_err()); // 4 != 2f+1
         assert!(Config::parse("bogus = 3\n").is_err());
+    }
+
+    #[test]
+    fn batch_knobs_parse_and_validate() {
+        let c = Config::parse(
+            "max_batch_reqs = 32\nmax_batch_bytes = 4096\nmax_inflight_slots = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.max_batch_reqs, 32);
+        assert_eq!(c.max_batch_bytes, 4096);
+        assert_eq!(c.max_inflight_slots, 2);
+        assert!(Config::parse("max_batch_reqs = 0\n").is_err());
+        assert!(Config::parse("max_batch_bytes = 0\n").is_err());
+        // Batches are capped at the consensus window.
+        assert!(Config::parse("window = 16\nmax_batch_reqs = 17\n").is_err());
+        assert!(Config::parse("window = 16\nmax_batch_reqs = 16\n").is_ok());
     }
 
     #[test]

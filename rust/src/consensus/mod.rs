@@ -77,6 +77,24 @@ pub struct ReplicaStats {
     pub summaries_emitted: u64,
     pub summaries_adopted: u64,
     pub byz_blocked: u64,
+    /// Fresh batches this replica proposed as leader (one per slot).
+    pub batches_proposed: u64,
+    /// Requests carried by those batches (occupancy numerator).
+    pub batched_reqs: u64,
+    /// Largest batch proposed.
+    pub max_batch: u64,
+}
+
+impl ReplicaStats {
+    /// Mean requests per proposed batch (1.0 = the unbatched seed shape;
+    /// 0.0 when this replica never led).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches_proposed == 0 {
+            0.0
+        } else {
+            self.batched_reqs as f64 / self.batches_proposed as f64
+        }
+    }
 }
 
 /// One uBFT replica.
@@ -94,7 +112,8 @@ pub struct Replica {
     checkpoint: CheckpointCert,
     senders: Vec<SenderState>,
     slots: BTreeMap<u64, SlotState>,
-    decided: BTreeMap<u64, Request>,
+    /// Decided request batch per slot (len 1 in the unbatched shape).
+    decided: BTreeMap<u64, Vec<Request>>,
     applied_upto: u64,
 
     // Client requests.
@@ -339,7 +358,7 @@ impl Replica {
     // ------------------------------------------------------------------
 
     /// A PREPARE from `b` passed the Byzantine checks. Endorse it if we
-    /// hold the client request (or it is a no-op).
+    /// hold every client request of its batch (no-ops need no request).
     fn on_prepared(&mut self, env: &mut dyn Env, b: NodeId, pb: PrepareBody) {
         if b != leader_of(pb.view, self.n) {
             return;
@@ -347,14 +366,40 @@ impl Replica {
         if pb.view != self.view || !self.checkpoint.body.open(pb.slot) {
             return;
         }
-        let rd = pb.req.digest();
-        if !pb.req.is_noop() && !self.req_store.contains_key(&rd) {
-            // §5.4: endorse only requests received directly from the
-            // client; park until it arrives.
-            self.waiting_prepares.entry(rd).or_default().push(pb);
+        // §5.4: endorse only requests received directly from the client.
+        // Park the batch under its *first* missing request; when that one
+        // arrives, the batch re-runs this check (and may re-park under
+        // the next missing digest) until every request is held.
+        if let Some(missing) = pb
+            .reqs
+            .iter()
+            .find(|r| !r.is_noop() && !self.req_store.contains_key(&r.digest()))
+        {
+            let key = missing.digest();
+            let parked = self.waiting_prepares.entry(key).or_default();
+            // The batch digest is the parked batch's identity: summary
+            // adoption can replay the same Prepared effect, which must
+            // not park a second copy.
+            let id = pb.batch_digest();
+            if !parked.iter().any(|p| p.batch_digest() == id) {
+                parked.push(pb);
+            }
             return;
         }
         self.endorse(env, pb);
+    }
+
+    /// Drop parked PREPAREs that can no longer be endorsed — stale view
+    /// or slot outside the checkpoint window — so the §5.4 parking
+    /// buffer stays bounded even against a leader whose batches name
+    /// requests no client ever sends.
+    fn prune_waiting_prepares(&mut self) {
+        let view = self.view;
+        let cp = self.checkpoint.body.clone();
+        self.waiting_prepares.retain(|_, pbs| {
+            pbs.retain(|pb| pb.view == view && cp.open(pb.slot));
+            !pbs.is_empty()
+        });
     }
 
     fn endorse(&mut self, env: &mut dyn Env, pb: PrepareBody) {
@@ -422,7 +467,7 @@ impl Replica {
                         if pb.view == view {
                             self.stats.decided_fast += 1;
                             env.mark("decided_fast");
-                            self.decide(env, slot, pb.req);
+                            self.decide(env, slot, pb.reqs);
                         }
                     }
                 }
@@ -511,30 +556,39 @@ impl Replica {
         if st.commits_for[&digest].len() >= self.quorum && !st.decided {
             self.stats.decided_slow += 1;
             env.mark("decided_slow");
-            self.decide(env, slot, cm.body.req);
+            self.decide(env, slot, cm.body.reqs);
         }
     }
 
-    fn decide(&mut self, env: &mut dyn Env, slot: u64, req: Request) {
+    fn decide(&mut self, env: &mut dyn Env, slot: u64, reqs: Vec<Request>) {
         let st = self.slots.entry(slot).or_default();
         if st.decided {
             return;
         }
         st.decided = true;
-        self.pending_reqs.remove(&req.digest());
-        self.decided.insert(slot, req);
+        for req in &reqs {
+            self.pending_reqs.remove(&req.digest());
+        }
+        self.decided.insert(slot, reqs);
         self.last_progress = env.now();
         self.vc_backoff = 0; // progress: reset view-change backoff
         self.try_apply(env);
         self.try_checkpoint(env);
+        // A decided slot frees consensus-pipeline capacity: the leader's
+        // queued requests may now form the next batch.
+        self.try_propose(env);
     }
 
-    /// Apply decided requests in slot order; respond to clients.
+    /// Apply decided slots in order — every request of a slot's batch, in
+    /// batch order — and respond to clients per request.
     fn try_apply(&mut self, env: &mut dyn Env) {
-        while let Some(req) = self.decided.get(&self.applied_upto).cloned() {
+        while let Some(reqs) = self.decided.get(&self.applied_upto).cloned() {
             let slot = self.applied_upto;
             self.applied_upto += 1;
-            if !req.is_noop() {
+            for req in reqs {
+                if req.is_noop() {
+                    continue;
+                }
                 // At-most-once execution: a request re-proposed across a
                 // view change may decide in two slots; execute only once.
                 let cache = self.resp_cache.entry(req.client).or_default();
@@ -598,6 +652,7 @@ impl Replica {
             self.next_slot = lo;
         }
         self.last_progress = env.now();
+        self.prune_waiting_prepares();
         env.mark("checkpoint");
         self.ctb_broadcast(env, ConsMsg::Checkpoint(cp));
         // New window may unblock proposing.
@@ -642,11 +697,14 @@ impl Replica {
                     let leader = self.leader();
                     self.send_direct(env, leader, DirectMsg::ReqEcho { digest: d });
                 }
-                // Endorse any PREPARE that was waiting for this request.
+                // Re-check any PREPARE batch that was parked on this
+                // request: it endorses now, or re-parks on its next
+                // missing request.
                 if let Some(pbs) = self.waiting_prepares.remove(&d) {
                     for pb in pbs {
                         if pb.view == self.view {
-                            self.endorse(env, pb);
+                            let leader = leader_of(pb.view, self.n);
+                            self.on_prepared(env, leader, pb);
                         }
                     }
                 }
@@ -667,7 +725,26 @@ impl Replica {
         }
     }
 
-    /// Leader proposing loop (§5.4: wait for follower echoes or timeout).
+    /// Proposed-but-undecided slots (the consensus pipeline in flight).
+    /// Slots below `applied_upto` are decided by construction; the window
+    /// bounds the scan.
+    fn inflight_slots(&self) -> usize {
+        (self.applied_upto..self.next_slot)
+            .filter(|s| !self.decided.contains_key(s))
+            .count()
+    }
+
+    /// Leader proposing loop (§5.4: wait for follower echoes or timeout),
+    /// draining the request queue into per-slot *batches*.
+    ///
+    /// Adaptive close policy: a batch closes at `max_batch_reqs` /
+    /// `max_batch_bytes`, or as soon as no further request is proposable
+    /// (queue empty, or the next request still awaits its echo round) —
+    /// so an uncontended deployment proposes one request per slot
+    /// immediately and the single-request latency path is untouched.
+    /// Under load, `max_inflight_slots` holds proposals back while slots
+    /// are in flight, which is what lets the queue accumulate into full
+    /// batches (§9's slot interleaving generalized to depth k).
     fn try_propose(&mut self, env: &mut dyn Env) {
         if !self.is_leader() || self.sealing.is_some() {
             return;
@@ -677,26 +754,53 @@ impl Replica {
         if self.view > 0 && !self.new_view_sent.contains(&self.view) {
             return;
         }
-        while self.next_slot < self.checkpoint.body.open_hi() {
-            let Some(&d) = self.req_queue.front() else { break };
-            let Some(req) = self.req_store.get(&d).cloned() else {
+        let inflight_cap = match self.cfg.max_inflight_slots {
+            0 => usize::MAX, // unbounded: the window is the only limit
+            k => k,
+        };
+        // The unbounded default short-circuits the O(window) inflight
+        // scan: the seed's proposing loop does no extra per-slot work.
+        while self.next_slot < self.checkpoint.body.open_hi()
+            && (inflight_cap == usize::MAX || self.inflight_slots() < inflight_cap)
+        {
+            let mut reqs: Vec<Request> = Vec::new();
+            let mut batch_bytes = 0usize;
+            while reqs.len() < self.cfg.max_batch_reqs {
+                let Some(&d) = self.req_queue.front() else { break };
+                let Some(req) = self.req_store.get(&d).cloned() else {
+                    self.req_queue.pop_front();
+                    continue;
+                };
+                let echoes = self.echoes.get(&d).map_or(0, |s| s.len());
+                let waited = env.now().saturating_sub(self.req_first_seen[&d]);
+                // Fast path wants every follower on board; propose anyway
+                // after the echo timeout (a Byzantine client may have sent
+                // the request only to us — §5.4).
+                if echoes + 1 < self.n && waited < ECHO_TIMEOUT {
+                    break;
+                }
+                // Byte budget: the first request always fits (a single
+                // oversized request must remain proposable).
+                if !reqs.is_empty()
+                    && batch_bytes + req.payload.len() > self.cfg.max_batch_bytes
+                {
+                    break;
+                }
                 self.req_queue.pop_front();
-                continue;
-            };
-            let echoes = self.echoes.get(&d).map_or(0, |s| s.len());
-            let waited = env.now().saturating_sub(self.req_first_seen[&d]);
-            // Fast path wants every follower on board; propose anyway
-            // after the echo timeout (a Byzantine client may have sent the
-            // request only to us — §5.4).
-            if echoes + 1 < self.n && waited < ECHO_TIMEOUT {
-                break;
+                if self.proposed.contains(&d) {
+                    continue;
+                }
+                self.proposed.insert(d);
+                batch_bytes += req.payload.len();
+                reqs.push(req);
             }
-            self.req_queue.pop_front();
-            if self.proposed.contains(&d) {
-                continue;
+            if reqs.is_empty() {
+                break; // nothing proposable right now
             }
-            self.proposed.insert(d);
-            let pb = PrepareBody { view: self.view, slot: self.next_slot, req };
+            self.stats.batches_proposed += 1;
+            self.stats.batched_reqs += reqs.len() as u64;
+            self.stats.max_batch = self.stats.max_batch.max(reqs.len() as u64);
+            let pb = PrepareBody { view: self.view, slot: self.next_slot, reqs };
             self.next_slot += 1;
             env.mark("propose");
             self.ctb_broadcast(env, ConsMsg::Prepare(pb));
@@ -757,6 +861,8 @@ impl Replica {
         // Requests proposed in dead views may never decide there; they
         // become proposable again (execution dedups by client rid).
         self.proposed.clear();
+        // Batches parked for the dead view can never be endorsed now.
+        self.prune_waiting_prepares();
         env.mark("seal_view");
         self.ctb_broadcast(env, ConsMsg::SealView { view: target });
         // Re-route undecided client requests toward the new leader.
@@ -874,8 +980,8 @@ impl Replica {
                 continue;
             }
             match must_propose(s, &certs) {
-                Constraint::Committed(req) => {
-                    let pb = PrepareBody { view, slot: s, req };
+                Constraint::Committed(reqs) => {
+                    let pb = PrepareBody { view, slot: s, reqs };
                     self.ctb_broadcast(env, ConsMsg::Prepare(pb));
                 }
                 Constraint::Free => {
@@ -1063,15 +1169,26 @@ impl Replica {
         let mut total = self.ctb.as_ref().map_or(0, |c| c.mem_bytes());
         total += self.senders.iter().map(|s| s.mem_bytes()).sum::<u64>();
         total += (self.slots.len() * std::mem::size_of::<SlotState>()) as u64;
+        // Decided batches: count every request of every slot, so the §7
+        // bounded-memory accounting stays honest under batching.
         total += self
             .decided
             .values()
+            .flat_map(|reqs| reqs.iter())
             .map(|r| r.payload.len() as u64 + 32)
             .sum::<u64>();
         total += self
             .req_store
             .values()
             .map(|r| r.payload.len() as u64 + 64)
+            .sum::<u64>();
+        // Parked PREPARE batches (§5.4) — bounded by prune_waiting_prepares,
+        // but they hold full request payloads and must be counted.
+        total += self
+            .waiting_prepares
+            .values()
+            .flat_map(|pbs| pbs.iter())
+            .map(|pb| pb.batch_bytes() as u64 + 48)
             .sum::<u64>();
         total
     }

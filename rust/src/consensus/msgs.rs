@@ -49,17 +49,49 @@ impl Wire for Request {
     }
 }
 
-/// The body every PREPARE/COMMIT certificate signs.
+/// The body every PREPARE/COMMIT certificate signs. One consensus slot
+/// carries a *batch* of requests (adaptive batching: the leader closes a
+/// batch at the config's `max_batch_reqs`/`max_batch_bytes`, or
+/// immediately when its queue is empty, so the uncontended path stays
+/// one-request-per-slot). A batch is never empty; `reqs.len() == 1` is
+/// the paper's original one-request-per-slot shape.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PrepareBody {
     pub view: u64,
     pub slot: u64,
-    pub req: Request,
+    pub reqs: Vec<Request>,
 }
 
 impl PrepareBody {
+    /// A single-request slot (the seed's shape; also used for no-ops).
+    pub fn single(view: u64, slot: u64, req: Request) -> PrepareBody {
+        PrepareBody { view, slot, reqs: vec![req] }
+    }
+
     pub fn digest(&self) -> Hash32 {
         hash(&self.encode())
+    }
+
+    /// Order-sensitive digest over the batch's request digests: the
+    /// compact identity of a slot's batch. Used to deduplicate parked
+    /// PREPAREs (§5.4 — summary adoption may replay a delivery), and
+    /// two PREPAREs for the same `(view, slot)` with different batch
+    /// digests are equivocation evidence, exactly like two different
+    /// single requests were.
+    pub fn batch_digest(&self) -> Hash32 {
+        let mut w = WireWriter::with_capacity(24 + 32 * self.reqs.len());
+        w.u64(self.view);
+        w.u64(self.slot);
+        w.u32(self.reqs.len() as u32);
+        for r in &self.reqs {
+            r.digest().put(&mut w);
+        }
+        hash_parts(&[b"ubft-batch", &w.finish()])
+    }
+
+    /// Summed request payload bytes (the batch-close byte budget).
+    pub fn batch_bytes(&self) -> usize {
+        self.reqs.iter().map(|r| r.payload.len()).sum()
     }
 }
 
@@ -67,10 +99,10 @@ impl Wire for PrepareBody {
     fn put(&self, w: &mut WireWriter) {
         w.u64(self.view);
         w.u64(self.slot);
-        self.req.put(w);
+        put_list(w, &self.reqs);
     }
     fn get(r: &mut WireReader) -> Result<Self, WireError> {
-        Ok(PrepareBody { view: r.u64()?, slot: r.u64()?, req: Request::get(r)? })
+        Ok(PrepareBody { view: r.u64()?, slot: r.u64()?, reqs: get_list(r)? })
     }
 }
 
@@ -494,7 +526,7 @@ mod tests {
 
     #[test]
     fn consmsg_roundtrip() {
-        let body = PrepareBody { view: 1, slot: 9, req: req() };
+        let body = PrepareBody::single(1, 9, req());
         let cert = Certificate::new(body.digest());
         for m in [
             ConsMsg::Prepare(body.clone()),
@@ -544,11 +576,36 @@ mod tests {
     }
 
     #[test]
+    fn batched_prepare_roundtrips_and_batch_digest_is_canonical() {
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request { client: i, rid: 100 + i, payload: vec![i as u8; 16] })
+            .collect();
+        let pb = PrepareBody { view: 2, slot: 11, reqs: reqs.clone() };
+        // Wire roundtrip preserves the whole batch, in order.
+        let back = PrepareBody::decode(&pb.encode()).unwrap();
+        assert_eq!(back, pb);
+        assert_eq!(back.batch_digest(), pb.batch_digest());
+        assert_eq!(back.batch_bytes(), 8 * 16);
+        // The batch digest is order-sensitive and content-sensitive.
+        let mut reordered = pb.clone();
+        reordered.reqs.swap(0, 1);
+        assert_ne!(reordered.batch_digest(), pb.batch_digest());
+        let mut truncated = pb.clone();
+        truncated.reqs.pop();
+        assert_ne!(truncated.batch_digest(), pb.batch_digest());
+        // And distinct from the single-request shape's digest.
+        assert_ne!(
+            PrepareBody::single(2, 11, req()).batch_digest(),
+            pb.batch_digest()
+        );
+    }
+
+    #[test]
     fn sender_state_digest_is_canonical() {
         let mk = || SenderStateEnc {
             view: 1,
             sealed: None,
-            prepares: [(3, PrepareBody { view: 1, slot: 3, req: req() })].into(),
+            prepares: [(3, PrepareBody::single(1, 3, req()))].into(),
             commits: BTreeMap::new(),
             checkpoint: CheckpointCert::genesis(100, Hash32::ZERO),
         };

@@ -12,6 +12,7 @@ use super::msgs::{
     certify_digest, CheckpointCert, Commit, ConsMsg, PrepareBody, Request, SenderStateEnc, VcCert,
 };
 use crate::crypto::KeyStore;
+use crate::tbcast::Bytes;
 use crate::util::wire::Wire;
 use crate::NodeId;
 use std::collections::BTreeMap;
@@ -39,14 +40,14 @@ pub enum Effect {
 /// Constraint a new leader faces for a slot (§5.3 MustPropose).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Constraint {
-    /// A COMMIT exists: the leader must re-propose this request.
-    Committed(Request),
-    /// No certificate constrains the slot: any request may be proposed.
+    /// A COMMIT exists: the leader must re-propose this request batch.
+    Committed(Vec<Request>),
+    /// No certificate constrains the slot: any batch may be proposed.
     Free,
 }
 
 /// `MustPropose(slot, certificates)`: the latest (highest-view) committed
-/// request for `slot` across the certified states, if any.
+/// request batch for `slot` across the certified states, if any.
 pub fn must_propose(slot: u64, certs: &[VcCert]) -> Constraint {
     let mut best: Option<&Commit> = None;
     for c in certs {
@@ -57,7 +58,7 @@ pub fn must_propose(slot: u64, certs: &[VcCert]) -> Constraint {
         }
     }
     match best {
-        Some(cm) => Constraint::Committed(cm.body.req.clone()),
+        Some(cm) => Constraint::Committed(cm.body.reqs.clone()),
         None => Constraint::Free,
     }
 }
@@ -80,7 +81,9 @@ pub struct SenderState {
     /// Next CTBcast identifier to process (FIFO interpretation, §5.2).
     pub fifo_next: u64,
     /// Out-of-order deliveries buffer, bounded to the CTBcast tail.
-    pub buffer: BTreeMap<u64, Vec<u8>>,
+    /// Payloads are shared (`Arc`) with the CTBcast layer — buffering a
+    /// delivery never copies the message bytes.
+    pub buffer: BTreeMap<u64, Bytes>,
     /// Set permanently when p provably misbehaved.
     pub blocked: bool,
 }
@@ -161,8 +164,10 @@ impl SenderState {
         }
         match msg {
             ConsMsg::Prepare(pb) => {
-                // Alg 5 `valid PREPARE`.
-                let ok = self.view == pb.view
+                // Alg 5 `valid PREPARE`. An empty batch is malformed —
+                // a correct leader always proposes at least one request.
+                let ok = !pb.reqs.is_empty()
+                    && self.view == pb.view
                     && leader_of(pb.view, n) == self.who
                     && self.checkpoint.body.open(pb.slot)
                     && self
@@ -175,7 +180,7 @@ impl SenderState {
                         || match &self.new_view {
                             Some((v, certs)) if *v == pb.view => {
                                 match must_propose(pb.slot, certs) {
-                                    Constraint::Committed(req) => req == pb.req,
+                                    Constraint::Committed(reqs) => reqs == pb.reqs,
                                     Constraint::Free => true,
                                 }
                             }
@@ -255,7 +260,7 @@ impl SenderState {
     }
 
     /// Buffer an out-of-order delivery; bound the buffer to `tail` newest.
-    pub fn buffer_delivery(&mut self, k: u64, m: Vec<u8>, tail: usize) {
+    pub fn buffer_delivery(&mut self, k: u64, m: Bytes, tail: usize) {
         if k >= self.fifo_next {
             self.buffer.insert(k, m);
             while self.buffer.len() > 2 * tail {
@@ -266,7 +271,7 @@ impl SenderState {
     }
 
     /// Pop the next in-order buffered message, if present.
-    pub fn pop_in_order(&mut self) -> Option<(u64, Vec<u8>)> {
+    pub fn pop_in_order(&mut self) -> Option<(u64, Bytes)> {
         let k = self.fifo_next;
         let m = self.buffer.remove(&k)?;
         self.fifo_next = k + 1;
@@ -301,11 +306,15 @@ mod tests {
     }
 
     fn prep(view: u64, slot: u64) -> ConsMsg {
-        ConsMsg::Prepare(PrepareBody {
+        ConsMsg::Prepare(PrepareBody::single(
             view,
             slot,
-            req: Request { client: 1, rid: slot, payload: vec![1] },
-        })
+            Request { client: 1, rid: slot, payload: vec![1] },
+        ))
+    }
+
+    fn share(bytes: Vec<u8>) -> Bytes {
+        std::sync::Arc::new(bytes)
     }
 
     #[test]
@@ -341,6 +350,37 @@ mod tests {
     }
 
     #[test]
+    fn equivocating_batches_for_one_slot_block_sender() {
+        // A leader that sends two *different batches* for the same
+        // (view, slot) is caught exactly like a single-request
+        // equivocator: the second PREPARE fails Alg 5 validity.
+        let mk = |rids: &[u64]| {
+            PrepareBody {
+                view: 0,
+                slot: 0,
+                reqs: rids
+                    .iter()
+                    .map(|&rid| Request { client: 1, rid, payload: vec![rid as u8; 8] })
+                    .collect(),
+            }
+        };
+        let (a, b) = (mk(&[1, 2, 3]), mk(&[1, 2, 4]));
+        assert_ne!(a.batch_digest(), b.batch_digest());
+        let mut st = SenderState::new(0, genesis());
+        st.apply(&ConsMsg::Prepare(a), 3, 2, &ks()).unwrap();
+        assert!(st.apply(&ConsMsg::Prepare(b), 3, 2, &ks()).is_err());
+        assert!(st.blocked);
+    }
+
+    #[test]
+    fn empty_batch_prepare_blocks_sender() {
+        let mut st = SenderState::new(0, genesis());
+        let empty = PrepareBody { view: 0, slot: 0, reqs: vec![] };
+        assert!(st.apply(&ConsMsg::Prepare(empty), 3, 2, &ks()).is_err());
+        assert!(st.blocked);
+    }
+
+    #[test]
     fn prepare_outside_window_blocks() {
         let mut st = SenderState::new(0, genesis());
         assert!(st.apply(&prep(0, 100), 3, 2, &ks()).is_err());
@@ -349,11 +389,7 @@ mod tests {
     #[test]
     fn commit_requires_valid_certificate() {
         let keystore = ks();
-        let body = PrepareBody {
-            view: 0,
-            slot: 3,
-            req: Request { client: 1, rid: 3, payload: vec![] },
-        };
+        let body = PrepareBody::single(0, 3, Request { client: 1, rid: 3, payload: vec![] });
         // Forged cert (no valid shares).
         let bad = Commit { body: body.clone(), cert: Certificate::new(certify_digest(&body)) };
         let mut st = SenderState::new(1, genesis());
@@ -401,13 +437,13 @@ mod tests {
     #[test]
     fn fifo_buffer_and_gap_detection() {
         let mut st = SenderState::new(0, genesis());
-        st.buffer_delivery(2, vec![2], 8);
+        st.buffer_delivery(2, share(vec![2]), 8);
         assert!(st.has_gap());
         assert!(st.pop_in_order().is_none());
-        st.buffer_delivery(1, vec![1], 8);
+        st.buffer_delivery(1, share(vec![1]), 8);
         assert!(!st.has_gap());
-        assert_eq!(st.pop_in_order(), Some((1, vec![1])));
-        assert_eq!(st.pop_in_order(), Some((2, vec![2])));
+        assert_eq!(st.pop_in_order(), Some((1, share(vec![1]))));
+        assert_eq!(st.pop_in_order(), Some((2, share(vec![2]))));
         assert_eq!(st.fifo_next, 3);
     }
 
@@ -415,10 +451,10 @@ mod tests {
     fn summary_adoption_jumps_gap_and_replays_effects() {
         let keystore = ks();
         let mut st = SenderState::new(0, genesis());
-        st.buffer_delivery(10, vec![9], 8);
+        st.buffer_delivery(10, share(vec![9]), 8);
         assert!(st.has_gap());
         // Build a summary state containing one prepare.
-        let pb = PrepareBody { view: 0, slot: 4, req: Request::noop() };
+        let pb = PrepareBody::single(0, 4, Request::noop());
         let enc = SenderStateEnc {
             view: 0,
             sealed: None,
@@ -436,11 +472,11 @@ mod tests {
     #[test]
     fn must_propose_picks_highest_view_commit() {
         let mk_cert = |view: u64, slot: u64, val: u8| {
-            let body = PrepareBody {
+            let body = PrepareBody::single(
                 view,
                 slot,
-                req: Request { client: 1, rid: 1, payload: vec![val] },
-            };
+                Request { client: 1, rid: 1, payload: vec![val] },
+            );
             VcCert {
                 view: 5,
                 about: 0,
@@ -460,7 +496,10 @@ mod tests {
         };
         let certs = vec![mk_cert(1, 7, 0xA), mk_cert(3, 7, 0xB)];
         match must_propose(7, &certs) {
-            Constraint::Committed(req) => assert_eq!(req.payload, vec![0xB]),
+            Constraint::Committed(reqs) => {
+                assert_eq!(reqs.len(), 1);
+                assert_eq!(reqs[0].payload, vec![0xB]);
+            }
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(must_propose(8, &certs), Constraint::Free);

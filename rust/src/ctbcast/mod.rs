@@ -31,10 +31,11 @@ use crate::crypto::{hash, Hash32, KeyStore, Sig};
 use crate::dsm::{OpId, RegOutcome, RegisterClient, WriteStart};
 use crate::env::{Env, MemResult, Ticket};
 use crate::metrics::Category;
-use crate::tbcast::{TbDeliver, TbEndpoint};
+use crate::tbcast::{Bytes, TbDeliver, TbEndpoint};
 use crate::util::wire::{Wire, WireError, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Timer token reserved for the register-write cooldown retry queue.
 pub const TOKEN_CTB_COOLDOWN: u64 = 0x0100_0000_0000_0000;
@@ -96,6 +97,41 @@ impl Wire for CtbMsg {
     }
 }
 
+impl CtbMsg {
+    /// Encode a LOCK frame directly from a borrowed payload — the
+    /// encode-once path: no enum construction, no payload clone. Byte-
+    /// identical to `CtbMsg::Lock { .. }.encode()`.
+    pub fn encode_lock(bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(21 + m.len());
+        w.u8(1);
+        w.u64(bcaster);
+        w.u64(k);
+        w.bytes(m);
+        w.finish()
+    }
+
+    /// Encode a LOCKED frame from a borrowed payload (see [`Self::encode_lock`]).
+    pub fn encode_locked(bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(21 + m.len());
+        w.u8(2);
+        w.u64(bcaster);
+        w.u64(k);
+        w.bytes(m);
+        w.finish()
+    }
+
+    /// Encode a SIGNED frame from a borrowed payload (see [`Self::encode_lock`]).
+    pub fn encode_signed(bcaster: u64, k: u64, m: &[u8], sig: &Sig) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(85 + m.len());
+        w.u8(3);
+        w.u64(bcaster);
+        w.u64(k);
+        w.bytes(m);
+        sig.put(&mut w);
+        w.finish()
+    }
+}
+
 /// Bytes the broadcaster signs for `SIGNED(k, m)`: `(bcaster, k, H(m))`.
 pub fn signed_bytes(bcaster: NodeId, k: u64, h: &Hash32) -> Vec<u8> {
     let mut w = WireWriter::with_capacity(48);
@@ -128,8 +164,9 @@ fn decode_reg_image(bytes: &[u8]) -> Option<(u64, Hash32, Sig)> {
 pub enum CtbOut {
     /// CTBcast delivery of `(k, m)` from `bcaster`. May arrive out of `k`
     /// order and with gaps (tail-validity); FIFO reassembly + summaries
-    /// happen at the consensus layer (§5.2).
-    Deliver { bcaster: NodeId, k: u64, m: Vec<u8> },
+    /// happen at the consensus layer (§5.2). The payload is shared with
+    /// this endpoint's internal buffers (no copy per delivery).
+    Deliver { bcaster: NodeId, k: u64, m: Bytes },
     /// Plain TBcast delivery of an opaque consensus payload.
     App { bcaster: NodeId, seq: u64, payload: Vec<u8> },
     /// Proof observed that `bcaster` equivocated (conflicting signed
@@ -138,11 +175,13 @@ pub enum CtbOut {
 }
 
 /// Per-broadcaster receiver state (the three bounded arrays of Alg 1).
+/// Payloads are reference-counted: the `locks` and `locked` arrays share
+/// one buffer per message instead of holding n+1 copies.
 struct BcState {
     /// `locks[k % t]` — commitment per slot (line 8).
-    locks: Vec<Option<(u64, Vec<u8>)>>,
+    locks: Vec<Option<(u64, Bytes)>>,
     /// `locked[q][k % t]` — what each process committed to (line 10).
-    locked: Vec<Vec<Option<(u64, Vec<u8>)>>>,
+    locked: Vec<Vec<Option<(u64, Bytes)>>>,
     /// `delivered[k % t]` — highest k delivered per slot (line 9).
     delivered: Vec<Option<u64>>,
     /// In-flight slow-path attempts per k.
@@ -152,7 +191,7 @@ struct BcState {
 }
 
 struct SlowState {
-    m: Vec<u8>,
+    m: Bytes,
     h: Hash32,
     /// Register values read so far: per register owner.
     reads: HashMap<NodeId, Option<(u64, Hash32, Sig)>>,
@@ -183,8 +222,9 @@ pub struct CtbEndpoint {
     /// My next broadcast identifier (k starts at 1, Alg 1).
     send_k: u64,
     /// My recent messages (k → m), bounded to 2t: needed to serve the slow
-    /// path trigger and consensus summaries.
-    my_msgs: BTreeMap<u64, Vec<u8>>,
+    /// path trigger and consensus summaries. Shared buffers — the slow
+    /// path re-uses them without copying.
+    my_msgs: BTreeMap<u64, Bytes>,
     /// When each of my recent messages was broadcast (slow-path fallback).
     bcast_at: BTreeMap<u64, Nanos>,
     /// Messages whose slow path was already triggered.
@@ -236,7 +276,10 @@ impl CtbEndpoint {
 
     /// CTBcast-broadcast `m` on my stream (Alg 1 `broadcast(k, m)`).
     /// Returns `(k, outputs)` — outputs include my own deliveries.
+    /// Encode-once: the payload is wrapped in a shared buffer and the
+    /// LOCK frame is encoded a single time for all recipients.
     pub fn broadcast(&mut self, env: &mut dyn Env, m: Vec<u8>) -> (u64, Vec<CtbOut>) {
+        let m: Bytes = Arc::new(m);
         let k = self.send_k;
         self.send_k += 1;
         self.my_msgs.insert(k, m.clone());
@@ -249,7 +292,7 @@ impl CtbEndpoint {
         }
         let mut out = Vec::new();
         if self.fast_path {
-            let lock = CtbMsg::Lock { bcaster: self.me as u64, k, m: m.clone() }.encode();
+            let lock = CtbMsg::encode_lock(self.me as u64, k, &m);
             let (_, selfd) = self.tb.broadcast(env, lock);
             out = self.process(env, vec![selfd]);
         }
@@ -270,7 +313,7 @@ impl CtbEndpoint {
         env.charge(Category::Other, self.lat.hash_cost(m.len()));
         let sig = self.ks.sign(self.me, &signed_bytes(self.me, k, &h));
         crate::env::charge_sign(env, &self.lat);
-        let msg = CtbMsg::Signed { bcaster: self.me as u64, k, m, sig }.encode();
+        let msg = CtbMsg::encode_signed(self.me as u64, k, &m, &sig);
         let (_, selfd) = self.tb.broadcast(env, msg);
         self.process(env, vec![selfd])
     }
@@ -300,7 +343,7 @@ impl CtbEndpoint {
     }
 
     /// One of my past messages, if still buffered.
-    pub fn my_msg(&self, k: u64) -> Option<&Vec<u8>> {
+    pub fn my_msg(&self, k: u64) -> Option<&Bytes> {
         self.my_msgs.get(&k)
     }
 
@@ -400,8 +443,9 @@ impl CtbEndpoint {
         let slot = (k % self.t as u64) as usize;
         let cur = self.st[b].locks[slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
         if k > cur {
+            let m: Bytes = Arc::new(m);
             self.st[b].locks[slot] = Some((k, m.clone()));
-            let locked = CtbMsg::Locked { bcaster: b as u64, k, m }.encode();
+            let locked = CtbMsg::encode_locked(b as u64, k, &m);
             let (_, selfd) = self.tb.broadcast(env, locked);
             queue.push_back(selfd);
             let _ = out;
@@ -422,6 +466,7 @@ impl CtbEndpoint {
             return;
         }
         let slot = (k % self.t as u64) as usize;
+        let m: Bytes = Arc::new(m);
         let cur = self.st[b].locked[q][slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
         if k > cur {
             self.st[b].locked[q][slot] = Some((k, m.clone()));
@@ -450,6 +495,7 @@ impl CtbEndpoint {
         if self.st[b].delivered[slot].unwrap_or(0) >= k {
             return;
         }
+        let m: Bytes = Arc::new(m);
         let h = hash(&m);
         env.charge(Category::Other, self.lat.hash_cost(m.len()));
         if b != self.me {
@@ -614,7 +660,7 @@ impl CtbEndpoint {
         _env: &mut dyn Env,
         b: NodeId,
         k: u64,
-        m: Vec<u8>,
+        m: Bytes,
         out: &mut Vec<CtbOut>,
     ) {
         let slot = (k % self.t as u64) as usize;
@@ -676,7 +722,7 @@ mod tests {
             let mut log = self.log.lock().unwrap();
             for o in outs {
                 if let CtbOut::Deliver { bcaster, k, m } = o {
-                    log.push((me, bcaster, k, m));
+                    log.push((me, bcaster, k, m.to_vec()));
                 }
             }
         }
@@ -833,6 +879,26 @@ mod tests {
         let img = reg_image(42, &h, &sig);
         assert_eq!(decode_reg_image(&img), Some((42, h, sig)));
         assert_eq!(decode_reg_image(&img[..10]), None);
+    }
+
+    #[test]
+    fn encode_once_helpers_match_enum_encodings() {
+        // The borrowed-payload fast encoders must stay byte-identical to
+        // the enum encodings receivers decode.
+        let m = b"payload".to_vec();
+        let sig = Sig([9u8; 64]);
+        assert_eq!(
+            CtbMsg::encode_lock(3, 7, &m),
+            CtbMsg::Lock { bcaster: 3, k: 7, m: m.clone() }.encode()
+        );
+        assert_eq!(
+            CtbMsg::encode_locked(3, 7, &m),
+            CtbMsg::Locked { bcaster: 3, k: 7, m: m.clone() }.encode()
+        );
+        assert_eq!(
+            CtbMsg::encode_signed(3, 7, &m, &sig),
+            CtbMsg::Signed { bcaster: 3, k: 7, m, sig }.encode()
+        );
     }
 
     #[test]

@@ -294,6 +294,11 @@ pub enum DeployError {
     NoRequests,
     /// Client pipeline depth of zero.
     ZeroPipeline,
+    /// Batch knob of zero requests or zero bytes.
+    ZeroBatch,
+    /// Batch request cap exceeding the consensus window (a batch rides in
+    /// one slot; see [`crate::config::Config::validate`]).
+    OversizedBatch { reqs: usize, window: usize },
     /// Byzantine replica replacement on a system without uBFT replicas.
     ByzUnsupported(&'static str),
     /// Byzantine spec names a replica outside `0..n`.
@@ -317,6 +322,12 @@ impl std::fmt::Display for DeployError {
             DeployError::NoClients => write!(f, "deployment needs at least one client"),
             DeployError::NoRequests => write!(f, "deployment needs at least one request"),
             DeployError::ZeroPipeline => write!(f, "client pipeline depth must be >= 1"),
+            DeployError::ZeroBatch => {
+                write!(f, "batch knobs must be >= 1 request and >= 1 byte")
+            }
+            DeployError::OversizedBatch { reqs, window } => {
+                write!(f, "batch of {reqs} requests exceeds the consensus window {window}")
+            }
             DeployError::ByzUnsupported(sys) => {
                 write!(f, "Byzantine replica replacement requires a uBFT system, got {sys}")
             }
@@ -444,6 +455,8 @@ pub struct Deployment {
     clients: ClientSpec,
     requests: usize,
     pipeline: Option<usize>,
+    batch: Option<(usize, usize)>,
+    slot_pipeline: Option<usize>,
     think: Option<Nanos>,
     presend: Option<Nanos>,
     faults: FaultPlan,
@@ -462,6 +475,8 @@ impl Deployment {
             clients: ClientSpec::Default,
             requests: 100,
             pipeline: None,
+            batch: None,
+            slot_pipeline: None,
             think: None,
             presend: None,
             faults: FaultPlan::none(),
@@ -509,6 +524,25 @@ impl Deployment {
     /// defaults to 2).
     pub fn pipeline(mut self, k: usize) -> Deployment {
         self.pipeline = Some(k);
+        self
+    }
+
+    /// Adaptive request batching: at most `reqs` requests / `bytes`
+    /// summed payload bytes per consensus slot (plumbed into the
+    /// [`Config`] of every uBFT variant). The close policy is adaptive —
+    /// an idle queue still proposes single-request slots immediately, so
+    /// the uncontended latency path is unchanged.
+    pub fn batch(mut self, reqs: usize, bytes: usize) -> Deployment {
+        self.batch = Some((reqs, bytes));
+        self
+    }
+
+    /// Consensus-slot pipeline depth: proposed-but-undecided slots the
+    /// leader keeps in flight (0 = unbounded, the default). Depth 2 is
+    /// the paper's §9 interleaving; small depths under load are what let
+    /// batches fill.
+    pub fn slot_pipeline(mut self, depth: usize) -> Deployment {
+        self.slot_pipeline = Some(depth);
         self
     }
 
@@ -590,6 +624,14 @@ impl Deployment {
         if self.resolved_pipeline() == 0 {
             return Err(DeployError::ZeroPipeline);
         }
+        if let Some((reqs, bytes)) = self.batch {
+            if reqs == 0 || bytes == 0 {
+                return Err(DeployError::ZeroBatch);
+            }
+            if reqs > self.cfg.window {
+                return Err(DeployError::OversizedBatch { reqs, window: self.cfg.window });
+            }
+        }
         let nodes = self.system.server_actors(&self.cfg) + self.n_clients();
         if !self.faults.byz.is_empty() {
             if !self.system.is_ubft() {
@@ -658,13 +700,26 @@ impl Deployment {
         }
     }
 
+    /// Fold the builder's performance knobs into the deployment config
+    /// (after validation, before spawning).
+    fn apply_perf_knobs(&mut self) {
+        if self.system == System::UbftSlow {
+            self.cfg.slow_path_always = true;
+        }
+        if let Some((reqs, bytes)) = self.batch {
+            self.cfg.max_batch_reqs = reqs;
+            self.cfg.max_batch_bytes = bytes;
+        }
+        if let Some(depth) = self.slot_pipeline {
+            self.cfg.max_inflight_slots = depth;
+        }
+    }
+
     /// Validate and instantiate the deployment on the deterministic
     /// simulator, returning a [`Cluster`] handle.
     pub fn build(mut self) -> Result<Cluster, DeployError> {
         self.validate()?;
-        if self.system == System::UbftSlow {
-            self.cfg.slow_path_always = true;
-        }
+        self.apply_perf_knobs();
         let mut sim = Sim::new(self.cfg.clone());
         if self.trace {
             sim.enable_trace();
@@ -705,9 +760,7 @@ impl Deployment {
                 "fault plans (crash memory nodes live via RealHandle::mem)",
             ));
         }
-        if self.system == System::UbftSlow {
-            self.cfg.slow_path_always = true;
-        }
+        self.apply_perf_knobs();
         let mut cluster = RealCluster::new(self.cfg.m, self.cfg.seed);
         let n_replicas = self.system.server_actors(&self.cfg);
         let spawner = self.system.spawner();

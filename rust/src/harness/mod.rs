@@ -12,6 +12,7 @@ pub mod fig11;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scaling;
 pub mod table2;
 pub mod throughput;
 

@@ -1,0 +1,97 @@
+//! Multi-client scaling sweep (ROADMAP follow-up): deploy N ≫ 4
+//! concurrent clients against one uBFT cluster via
+//! [`Deployment::clients`] and report aggregate throughput and p50
+//! latency vs N — with batching off (the seed's per-request slots) and
+//! on (adaptive batches amortizing the per-slot broadcast cost). This
+//! doubles as the macro-benchmark for the batching hot path: leader-side
+//! batch occupancy grows with client concurrency, and with it the gap
+//! between the two columns.
+
+use super::{print_table, samples_per_point};
+use crate::config::Config;
+use crate::deploy::Deployment;
+use crate::rpc::BytesWorkload;
+
+/// Batch request cap used for the "batched" column.
+pub const BATCH: usize = 32;
+
+pub struct Point {
+    pub clients: usize,
+    /// (kops, p50 µs, leader batch occupancy) with batching off.
+    pub unbatched: (f64, f64, f64),
+    /// Same, with `BATCH`-request adaptive batching.
+    pub batched: (f64, f64, f64),
+}
+
+fn run_one(clients: usize, requests_per_client: usize, batch: usize) -> (f64, f64, f64) {
+    let mut cluster = Deployment::new(Config::default())
+        .clients(clients, |_i| Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(requests_per_client)
+        .batch(batch, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("scaling deployment is valid");
+    assert!(cluster.run_to_completion(), "scaling run starved ({clients} clients)");
+    let finished = cluster.done_at().expect("all clients finish");
+    let total = (clients * requests_per_client) as f64;
+    let mut s = cluster.samples();
+    let occupancy =
+        cluster.replica(0).map(|r| r.stats.batch_occupancy()).unwrap_or(0.0);
+    (
+        total / (finished as f64 / 1e9) / 1e3,
+        s.median() as f64 / 1000.0,
+        occupancy,
+    )
+}
+
+pub fn run_point(clients: usize, requests_per_client: usize) -> Point {
+    Point {
+        clients,
+        unbatched: run_one(clients, requests_per_client, 1),
+        batched: run_one(clients, requests_per_client, BATCH),
+    }
+}
+
+pub fn main_run(samples: usize) {
+    let budget = samples_per_point(samples);
+    let sweep = [1usize, 2, 4, 8, 16, 32];
+    let points: Vec<Point> = sweep
+        .iter()
+        .map(|&n| run_point(n, (budget / n).clamp(50, 2_000)))
+        .collect();
+    let header: Vec<String> = [
+        "clients",
+        "kops (batch=1)",
+        "p50 µs",
+        "kops (batch=32)",
+        "p50 µs",
+        "occupancy",
+    ]
+    .map(String::from)
+    .to_vec();
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.clients.to_string(),
+                format!("{:.1}", p.unbatched.0),
+                format!("{:.2}", p.unbatched.1),
+                format!("{:.1}", p.batched.0),
+                format!("{:.2}", p.batched.1),
+                format!("{:.1}", p.batched.2),
+            ]
+        })
+        .collect();
+    print_table(
+        "Scaling — throughput vs concurrent clients (32 B requests, slot pipeline 2)",
+        &header,
+        &rows,
+    );
+    let last = points.last().unwrap();
+    println!(
+        "\nbatching gain at {} clients: {:.2}x (occupancy {:.1} reqs/slot)",
+        last.clients,
+        last.batched.0 / last.unbatched.0,
+        last.batched.2
+    );
+}

@@ -19,7 +19,8 @@ EVALUATION (discrete-event simulator, paper §7):
   fig10       non-equivocation mechanisms vs message size
   fig11       tail latency vs CTBcast tail t
   table2      replica + disaggregated memory usage
-  throughput  §9 slot-interleaving throughput
+  throughput  §9 throughput: batch size × pipeline depth
+  scaling     throughput vs concurrent clients (batched vs unbatched)
   all         everything above
 
 REAL MODE:
@@ -53,6 +54,7 @@ fn main() {
         "fig11" => harness::fig11::main_run(samples),
         "table2" => harness::table2::main_run(samples),
         "throughput" => harness::throughput::main_run(samples),
+        "scaling" => harness::scaling::main_run(samples),
         "all" => {
             harness::fig7::main_run(samples);
             harness::fig8::main_run(samples);
@@ -61,6 +63,7 @@ fn main() {
             harness::fig11::main_run(samples);
             harness::table2::main_run(samples);
             harness::throughput::main_run(samples);
+            harness::scaling::main_run(samples);
         }
         "serve" => serve(&args),
         "calibration" => {

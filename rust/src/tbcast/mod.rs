@@ -18,18 +18,25 @@ use crate::env::Env;
 use crate::util::wire::{WireReader, WireWriter};
 use crate::NodeId;
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 /// First byte of every wire message: TBcast frame.
 pub const TAG_TB: u8 = 1;
 /// First byte of every wire message: direct (unicast) protocol message.
 pub const TAG_DIRECT: u8 = 2;
 
+/// Reference-counted payload bytes, shared between the broadcaster's
+/// retransmission buffer, every per-recipient frame, and local
+/// deliveries. A broadcast encodes its payload **once**; fan-out and
+/// buffering only bump a refcount (the encode-once hot-path fix).
+pub type Bytes = Arc<Vec<u8>>;
+
 /// A TBcast delivery: message `seq` of `bcaster`'s stream.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TbDeliver {
     pub bcaster: NodeId,
     pub seq: u64,
-    pub payload: Vec<u8>,
+    pub payload: Bytes,
 }
 
 struct RecvState {
@@ -47,7 +54,7 @@ pub struct TbEndpoint {
     /// Buffer capacity = 2t (paper §4.2).
     cap: usize,
     next_seq: u64,
-    buf: VecDeque<(u64, Vec<u8>)>,
+    buf: VecDeque<(u64, Bytes)>,
     /// acked_by[i]: highest contiguous seq of MY stream that peer index i
     /// has acknowledged.
     acked_by: BTreeMap<NodeId, u64>,
@@ -77,17 +84,21 @@ impl TbEndpoint {
 
     /// TBcast-broadcast `payload` on my stream. Returns the assigned
     /// sequence number and the self-delivery (a correct process delivers
-    /// its own broadcasts).
+    /// its own broadcasts). The payload is shared, never copied: the
+    /// retransmission buffer, every recipient's frame, and the
+    /// self-delivery all reference the same encoded bytes.
     pub fn broadcast(&mut self, env: &mut dyn Env, payload: Vec<u8>) -> (u64, TbDeliver) {
+        let payload: Bytes = Arc::new(payload);
         let seq = self.next_seq;
         self.next_seq += 1;
         if self.buf.len() == self.cap {
             self.buf.pop_front(); // evict oldest (tail semantics)
         }
         self.buf.push_back((seq, payload.clone()));
+        let msgs = [(seq, payload.clone())];
         for &p in &self.peers.clone() {
             if p != self.me {
-                let frame = self.frame_for(p, &[(seq, payload.clone())]);
+                let frame = self.frame_for(p, &msgs);
                 env.send(p, frame);
             }
         }
@@ -100,7 +111,7 @@ impl TbEndpoint {
 
     /// Build a frame to `dst` carrying `msgs` of my stream plus the
     /// piggybacked ack of `dst`'s stream and my buffer's low watermark.
-    fn frame_for(&self, dst: NodeId, msgs: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    fn frame_for(&self, dst: NodeId, msgs: &[(u64, Bytes)]) -> Vec<u8> {
         let ack = self.recv.get(&dst).map_or(0, |r| r.next - 1);
         let low = self.buf.front().map_or(self.next_seq, |(s, _)| *s);
         let mut w = WireWriter::with_capacity(64);
@@ -152,7 +163,7 @@ impl TbEndpoint {
         // Deliver contiguously.
         let mut out = Vec::new();
         while let Some(m) = st.pending.remove(&st.next) {
-            out.push(TbDeliver { bcaster: from, seq: st.next, payload: m });
+            out.push(TbDeliver { bcaster: from, seq: st.next, payload: Arc::new(m) });
             st.next += 1;
         }
         out
@@ -171,8 +182,9 @@ impl TbEndpoint {
             let acked = self.acked_by.get(&p).copied().unwrap_or(0);
             // Oldest-first, bounded batch: a crashed/partitioned peer must
             // not make us re-encode the whole 2t buffer every tick.
+            // (Shared payloads: collecting here only bumps refcounts.)
             const RETRANSMIT_BATCH: usize = 32;
-            let msgs: Vec<(u64, Vec<u8>)> = self
+            let msgs: Vec<(u64, Bytes)> = self
                 .buf
                 .iter()
                 .filter(|(s, _)| *s > acked)
@@ -236,7 +248,7 @@ mod tests {
             if self.to_send > 0 {
                 self.sent += 1;
                 let (_, d) = tb.broadcast(env, vec![self.sent as u8]);
-                self.log.lock().unwrap().push((env.me(), d.bcaster, d.seq, d.payload));
+                self.log.lock().unwrap().push((env.me(), d.bcaster, d.seq, d.payload.to_vec()));
             }
             self.tb = Some(tb);
             env.set_timer(200_000, RETRANSMIT);
@@ -247,7 +259,7 @@ mod tests {
                     let delivered = self.tb.as_mut().unwrap().on_frame(from, &bytes);
                     let me = env.me();
                     for d in delivered {
-                        self.log.lock().unwrap().push((me, d.bcaster, d.seq, d.payload));
+                        self.log.lock().unwrap().push((me, d.bcaster, d.seq, d.payload.to_vec()));
                     }
                 }
                 Event::Timer { token: RETRANSMIT } => {
@@ -256,7 +268,7 @@ mod tests {
                     if self.sent < self.to_send {
                         self.sent += 1;
                         let (_, d) = tb.broadcast(env, vec![self.sent as u8]);
-                        self.log.lock().unwrap().push((env.me(), d.bcaster, d.seq, d.payload));
+                        self.log.lock().unwrap().push((env.me(), d.bcaster, d.seq, d.payload.to_vec()));
                     }
                     env.set_timer(200_000, RETRANSMIT);
                 }

@@ -99,3 +99,53 @@ fn deterministic_given_seed() {
     };
     assert_eq!(run(42), run(42));
 }
+
+#[test]
+fn batch_size_one_keeps_fast_path_latency() {
+    // Batching is off by default; an explicit batch(1, ..) config with a
+    // closed-loop client must land in the same ~10 µs regime as the
+    // seed's single-request fast path (the adaptive close policy never
+    // waits for a batch to fill).
+    let mut cluster = Deployment::new(Config::default())
+        .client(Box::new(BytesWorkload { size: 32, label: "noop" }))
+        .requests(200)
+        .batch(1, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("valid deployment");
+    cluster.run_until(ubft::SECOND);
+    let mut s = cluster.samples();
+    assert_eq!(s.len(), 200);
+    let p50 = s.median() as f64 / 1000.0;
+    assert!(
+        (4.0..30.0).contains(&p50),
+        "batch=1 fast-path p50 = {p50} µs left the paper regime"
+    );
+    // Every slot carried exactly one request.
+    let stats = cluster.replica(0).expect("leader").stats.clone();
+    assert_eq!(stats.batches_proposed, 200);
+    assert_eq!(stats.batched_reqs, 200);
+    assert_eq!(stats.max_batch, 1);
+}
+
+#[test]
+fn batching_multiplies_throughput_under_load() {
+    // The tentpole acceptance: at the same client pipeline depth and
+    // consensus interleaving, a 32-request batch cap must deliver >= 3x
+    // the requests/sec of the batch-1 configuration.
+    let base = ubft::harness::throughput::run_point(1, 32, 2, 1_500);
+    let batched = ubft::harness::throughput::run_point(32, 32, 2, 1_500);
+    assert!(
+        batched.kops >= 3.0 * base.kops,
+        "batching gain {:.2}x below 3x ({:.1} vs {:.1} kops, occupancy {:.1})",
+        batched.kops / base.kops,
+        batched.kops,
+        base.kops,
+        batched.occupancy
+    );
+    assert!(
+        batched.occupancy > 2.0,
+        "batches never filled: occupancy = {:.2}",
+        batched.occupancy
+    );
+}

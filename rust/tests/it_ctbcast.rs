@@ -30,7 +30,7 @@ impl Node {
         for o in outs {
             match o {
                 CtbOut::Deliver { bcaster, k, m } => {
-                    self.log.lock().unwrap().push((me, bcaster, k, m));
+                    self.log.lock().unwrap().push((me, bcaster, k, m.to_vec()));
                 }
                 CtbOut::Byzantine { bcaster } => {
                     self.byz_flags.lock().unwrap().push(bcaster);

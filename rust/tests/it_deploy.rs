@@ -8,7 +8,7 @@
 use ubft::apps::flip::FlipWorkload;
 use ubft::apps::FlipApp;
 use ubft::config::Config;
-use ubft::deploy::{Deployment, FaultPlan, System};
+use ubft::deploy::{DeployError, Deployment, FaultPlan, System};
 use ubft::rpc::BytesWorkload;
 use ubft::testing::props;
 
@@ -107,6 +107,95 @@ fn equivocating_leader_is_neutralized() {
 }
 
 #[test]
+fn batch_knobs_validate_like_pipeline() {
+    // Zero/oversized batch knobs map to structured DeployErrors, exactly
+    // like ZeroPipeline does for the client pipeline.
+    assert_eq!(
+        Deployment::new(Config::default()).batch(0, 4096).build().err(),
+        Some(DeployError::ZeroBatch)
+    );
+    assert_eq!(
+        Deployment::new(Config::default()).batch(8, 0).build().err(),
+        Some(DeployError::ZeroBatch)
+    );
+    let window = Config::default().window;
+    assert_eq!(
+        Deployment::new(Config::default()).batch(window + 1, 4096).build().err(),
+        Some(DeployError::OversizedBatch { reqs: window + 1, window })
+    );
+    assert!(Deployment::new(Config::default()).batch(window, 4096).build().is_ok());
+    assert_eq!(
+        Deployment::new(Config::default()).pipeline(0).build().err(),
+        Some(DeployError::ZeroPipeline)
+    );
+}
+
+#[test]
+fn batched_deployment_fills_slots_and_converges() {
+    // Many concurrent pipelined clients against a bounded consensus
+    // pipeline: batches must actually fill (occupancy > 1), every
+    // request must complete with a validated response, and replicas
+    // must agree.
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(FlipApp::new()))
+        .clients(8, |_i| Box::new(FlipWorkload { size: 32 }))
+        .requests(100)
+        .pipeline(4)
+        .batch(16, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("valid batched deployment");
+    assert!(cluster.run_to_completion(), "batched run starved");
+    assert_eq!(cluster.completed(), 800);
+    assert_eq!(cluster.mismatches(), 0);
+    assert!(cluster.converged(), "replicas diverged under batching");
+    let r = cluster.replica(0).expect("leader");
+    let stats = r.stats.clone();
+    assert!(stats.batches_proposed > 0);
+    assert_eq!(stats.batched_reqs, 800, "every request proposed exactly once");
+    assert!(
+        stats.batch_occupancy() > 1.5,
+        "batches never filled: occupancy = {:.2}",
+        stats.batch_occupancy()
+    );
+    assert!(stats.max_batch > 1 && stats.max_batch <= 16);
+}
+
+#[test]
+fn batched_checkpointing_survives_leader_crash_without_loss_or_double_apply() {
+    // A small window forces several checkpoints mid-stream while batches
+    // are in flight, and crashing the leader forces a view change with
+    // re-proposals. No request may be lost or double-applied: every
+    // client completes with validated responses, and the surviving
+    // replicas hold identical state.
+    let mut cfg = Config::default();
+    cfg.window = 32;
+    let mut cluster = Deployment::new(cfg)
+        .app(|| Box::new(FlipApp::new()))
+        .clients(2, |_i| Box::new(FlipWorkload { size: 32 }))
+        .requests(150)
+        .pipeline(8)
+        .batch(8, 64 * 1024)
+        .slot_pipeline(2)
+        .faults(FaultPlan::crash(0, 60 * ubft::MICRO))
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "leader crash starved the batched cluster");
+    assert_eq!(cluster.completed(), 300, "requests lost across checkpoint/view change");
+    assert_eq!(cluster.mismatches(), 0, "corrupt (double-applied?) responses");
+    let p1 = cluster.probe(1).expect("survivor 1");
+    let p2 = cluster.probe(2).expect("survivor 2");
+    assert!(p1.view >= 1, "survivors never left the crashed leader's view");
+    assert_eq!(
+        (p1.applied_upto, p1.app_digest),
+        (p2.applied_upto, p2.app_digest),
+        "survivors diverged"
+    );
+    let r = cluster.replica(1).expect("survivor 1");
+    assert!(r.stats.checkpoints >= 1, "checkpoints = {}", r.stats.checkpoints);
+}
+
+#[test]
 fn crash_fault_plan_through_builder() {
     // The simulator-level faults ride in the same FaultPlan: crash one
     // follower; the cluster keeps serving.
@@ -140,6 +229,10 @@ fn prop_random_builder_configs_never_panic() {
             .requests(g.range(0, 50));
         if g.bool() {
             d = d.pipeline(g.range(0, 4));
+        }
+        if g.bool() {
+            // Batch knobs, often zero or larger than the window.
+            d = d.batch(g.range(0, 80), g.range(0, 4096)).slot_pipeline(g.range(0, 4));
         }
         if g.bool() {
             // Fault plans with possibly out-of-range nodes / probabilities.

@@ -26,7 +26,12 @@ fn prop_wire_roundtrip_request() {
 #[test]
 fn prop_wire_roundtrip_consensus_messages() {
     props(200, |g| {
-        let body = PrepareBody { view: g.u64() % 100, slot: g.u64() % 10_000, req: arb_request(g) };
+        let nreqs = g.range(1, 9);
+        let body = PrepareBody {
+            view: g.u64() % 100,
+            slot: g.u64() % 10_000,
+            reqs: (0..nreqs).map(|_| arb_request(g)).collect(),
+        };
         let mut cert = Certificate::new(certify_digest(&body));
         for _ in 0..g.range(0, 4) {
             cert.add(g.range(0, 5), Sig([g.u8(); 64]));
@@ -58,7 +63,7 @@ fn prop_wire_rejects_random_garbage_without_panicking() {
 #[test]
 fn prop_truncated_encodings_never_panic() {
     props(200, |g| {
-        let body = PrepareBody { view: 1, slot: 2, req: arb_request(g) };
+        let body = PrepareBody::single(1, 2, arb_request(g));
         let enc = ConsMsg::Prepare(body).encode();
         let cut = g.range(0, enc.len());
         let _ = ConsMsg::decode(&enc[..cut]);
