@@ -15,6 +15,14 @@ cargo build --release --benches
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== read-mix smoke: ubft scaling --reads 90 =="
+# Short end-to-end run of the typed-Service read lane: 90% GETs on the
+# KV store, consensus routing vs the direct read lane.
+UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --reads 90
+
+echo "== cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== cargo fmt --check (advisory) =="
 # The seed predates rustfmt enforcement; surface drift without failing
 # the gate until the tree is formatted wholesale.

@@ -3,7 +3,7 @@
 
 use crate::crypto::Hash32;
 use crate::rpc::Workload;
-use crate::smr::App;
+use crate::smr::{Checkpointable, Service};
 use crate::Nanos;
 
 pub struct FlipApp {
@@ -22,15 +22,26 @@ impl Default for FlipApp {
     }
 }
 
-impl App for FlipApp {
+impl Checkpointable for FlipApp {
+    fn digest(&self) -> Hash32 {
+        crate::crypto::hash(&self.ops.to_le_bytes())
+    }
+    fn snapshot(&self) -> Vec<u8> {
+        self.ops.to_le_bytes().to_vec()
+    }
+    fn restore(&mut self, snap: &[u8]) {
+        if snap.len() == 8 {
+            self.ops = u64::from_le_bytes(snap.try_into().unwrap());
+        }
+    }
+}
+
+impl Service for FlipApp {
     fn execute(&mut self, req: &[u8]) -> Vec<u8> {
         self.ops += 1;
         let mut out = req.to_vec();
         out.reverse();
         out
-    }
-    fn digest(&self) -> Hash32 {
-        crate::crypto::hash(&self.ops.to_le_bytes())
     }
     fn sim_cost(&self, _req: &[u8]) -> Nanos {
         120 // trivial in-memory reverse

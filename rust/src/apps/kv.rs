@@ -1,10 +1,11 @@
 //! Memcached-style key-value store (§7.1): binary GET/SET protocol,
 //! 16-byte keys, 32-byte values; the paper's workload is 30% GETs of
-//! which 80% hit.
+//! which 80% hit. GETs are classified [`Operation::ReadOnly`] and served
+//! on the read lane under `ReadMode::Direct`.
 
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
-use crate::smr::App;
+use crate::smr::{Checkpointable, Operation, Service};
 use crate::util::Rng;
 use crate::Nanos;
 use std::collections::BTreeMap;
@@ -66,42 +67,29 @@ impl Default for KvApp {
     }
 }
 
-impl App for KvApp {
-    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
-        self.version += 1;
-        if req.len() < 2 {
-            return vec![ST_ERR];
-        }
-        let klen = req[1] as usize;
-        if 2 + klen > req.len() {
-            return vec![ST_ERR];
-        }
-        let key = &req[2..2 + klen];
-        match req[0] {
-            OP_GET => match self.map.get(key) {
-                Some(v) => {
-                    let mut out = vec![ST_OK];
-                    out.extend_from_slice(v);
-                    out
-                }
-                None => vec![ST_MISS],
-            },
-            OP_SET => {
-                let value = &req[2 + klen..];
-                self.map.insert(key.to_vec(), value.to_vec());
-                vec![ST_OK]
-            }
-            OP_DELETE => {
-                if self.map.remove(key).is_some() {
-                    vec![ST_OK]
-                } else {
-                    vec![ST_MISS]
-                }
-            }
-            _ => vec![ST_ERR],
-        }
+/// Split a request into `(op, key, value)`; `None` if malformed.
+fn parse(req: &[u8]) -> Option<(u8, &[u8], &[u8])> {
+    if req.len() < 2 {
+        return None;
     }
+    let klen = req[1] as usize;
+    if 2 + klen > req.len() {
+        return None;
+    }
+    Some((req[0], &req[2..2 + klen], &req[2 + klen..]))
+}
 
+/// Operation class of a KV request — the single source both the service
+/// and the workload classify with (they must agree, or reads take the
+/// consensus fallback).
+pub fn classify_op(req: &[u8]) -> Operation {
+    match req.first() {
+        Some(&OP_GET) => Operation::ReadOnly,
+        _ => Operation::ReadWrite,
+    }
+}
+
+impl Checkpointable for KvApp {
     fn digest(&self) -> Hash32 {
         // Incremental digest would be cheaper; version + size is enough
         // for divergence detection in tests/checkpoints.
@@ -125,6 +113,50 @@ impl App for KvApp {
         if let (Ok(version), Ok(map)) = (r.u64(), crate::util::wire::get_map(&mut r)) {
             self.version = version;
             self.map = map;
+        }
+    }
+}
+
+impl Service for KvApp {
+    fn classify(&self, req: &[u8]) -> Operation {
+        classify_op(req)
+    }
+
+    fn query(&self, req: &[u8]) -> Vec<u8> {
+        let Some((op, key, _)) = parse(req) else { return vec![ST_ERR] };
+        if op != OP_GET {
+            return vec![ST_ERR]; // only GETs are read-only
+        }
+        match self.map.get(key) {
+            Some(v) => {
+                let mut out = vec![ST_OK];
+                out.extend_from_slice(v);
+                out
+            }
+            None => vec![ST_MISS],
+        }
+    }
+
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        let Some((op, key, value)) = parse(req) else { return vec![ST_ERR] };
+        match op {
+            // Reads leave the state (and its digest) untouched — required
+            // for the read-lane contract.
+            OP_GET => self.query(req),
+            OP_SET => {
+                self.version += 1;
+                self.map.insert(key.to_vec(), value.to_vec());
+                vec![ST_OK]
+            }
+            OP_DELETE => {
+                self.version += 1;
+                if self.map.remove(key).is_some() {
+                    vec![ST_OK]
+                } else {
+                    vec![ST_MISS]
+                }
+            }
+            _ => vec![ST_ERR],
         }
     }
 
@@ -172,6 +204,9 @@ impl Workload for KvWorkload {
             let value = rng.bytes(32);
             set(&self.key(idx, true), &value)
         }
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        classify_op(req)
     }
     fn name(&self) -> &'static str {
         "memcached"
@@ -221,6 +256,23 @@ mod tests {
         let d0 = kv.digest();
         kv.execute(&set(b"a", b"b"));
         assert_ne!(kv.digest(), d0);
+    }
+
+    #[test]
+    fn gets_are_readonly_and_query_matches_execute() {
+        let mut kv = KvApp::new();
+        kv.execute(&set(b"k", b"v"));
+        let d0 = kv.digest();
+        assert_eq!(kv.classify(&get(b"k")), Operation::ReadOnly);
+        assert_eq!(kv.classify(&set(b"k", b"v")), Operation::ReadWrite);
+        assert_eq!(kv.classify(&delete(b"k")), Operation::ReadWrite);
+        // The read lane and the consensus path answer identically, and
+        // neither changes the digest.
+        let via_query = kv.query(&get(b"k"));
+        let via_execute = kv.execute(&get(b"k"));
+        assert_eq!(via_query, via_execute);
+        assert_eq!(kv.query(&get(b"missing")), vec![ST_MISS]);
+        assert_eq!(kv.digest(), d0);
     }
 
     #[test]

@@ -11,8 +11,12 @@
 //!   end-to-end demonstration);
 //! * [`crate::smr::NoopApp`] — the no-op used by Fig 8/9.
 //!
-//! Each app implements [`crate::smr::App`] plus a [`crate::rpc::Workload`]
-//! generator reproducing the paper's request mixes.
+//! Each app implements the typed [`crate::smr::Service`] API (plus
+//! [`crate::smr::Checkpointable`] for snapshot-driven state transfer) and
+//! a [`crate::rpc::Workload`] generator reproducing the paper's request
+//! mixes. The read-dominated stores classify their lookups
+//! ([`crate::smr::Operation::ReadOnly`]: KV `GET`, Redis `GET`/`LLEN`) so
+//! deployments with `ReadMode::Direct` serve them off the read lane.
 
 pub mod flip;
 pub mod kv;

@@ -1,12 +1,14 @@
 //! Redis-style multi-structure store (§7.1): strings (SET/GET/DEL),
 //! counters (INCR), and lists (LPUSH/RPOP/LLEN) with a compact binary
 //! protocol. The paper replicates stock Redis; this app executes the same
-//! operation classes at the same µs-scale cost.
+//! operation classes at the same µs-scale cost. GET and LLEN are
+//! classified [`Operation::ReadOnly`] and eligible for the read lane.
 
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
-use crate::smr::App;
+use crate::smr::{Checkpointable, Operation, Service};
 use crate::util::Rng;
+use crate::util::wire::{WireReader, WireWriter};
 use crate::Nanos;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -59,24 +61,36 @@ fn int_reply(v: i64) -> Vec<u8> {
     out
 }
 
-impl App for RedisApp {
-    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
-        self.version += 1;
-        if req.len() < 2 {
-            return vec![ST_ERR];
-        }
-        let klen = req[1] as usize;
-        if 2 + klen > req.len() {
-            return vec![ST_ERR];
-        }
-        let key = req[2..2 + klen].to_vec();
-        let arg = &req[2 + klen..];
-        match req[0] {
-            OP_SET => {
-                self.map.insert(key, Value::Str(arg.to_vec()));
-                vec![ST_OK]
-            }
-            OP_GET => match self.map.get(&key) {
+/// Split a request into `(op, key, arg)`; `None` if malformed.
+fn parse(req: &[u8]) -> Option<(u8, &[u8], &[u8])> {
+    if req.len() < 2 {
+        return None;
+    }
+    let klen = req[1] as usize;
+    if 2 + klen > req.len() {
+        return None;
+    }
+    Some((req[0], &req[2..2 + klen], &req[2 + klen..]))
+}
+
+/// Operation class of a Redis request — the single source both the
+/// service and the workload classify with.
+pub fn classify_op(req: &[u8]) -> Operation {
+    match req.first() {
+        Some(&OP_GET) | Some(&OP_LLEN) => Operation::ReadOnly,
+        _ => Operation::ReadWrite,
+    }
+}
+
+impl Service for RedisApp {
+    fn classify(&self, req: &[u8]) -> Operation {
+        classify_op(req)
+    }
+
+    fn query(&self, req: &[u8]) -> Vec<u8> {
+        let Some((op, key, _)) = parse(req) else { return vec![ST_ERR] };
+        match op {
+            OP_GET => match self.map.get(key) {
                 Some(Value::Str(v)) => {
                     let mut out = vec![ST_OK];
                     out.extend_from_slice(v);
@@ -85,6 +99,28 @@ impl App for RedisApp {
                 Some(_) => vec![ST_ERR], // WRONGTYPE
                 None => vec![ST_NIL],
             },
+            OP_LLEN => match self.map.get(key) {
+                Some(Value::List(l)) => int_reply(l.len() as i64),
+                Some(_) => vec![ST_ERR],
+                None => int_reply(0),
+            },
+            _ => vec![ST_ERR], // only GET/LLEN are read-only
+        }
+    }
+
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        let Some((op, key, arg)) = parse(req) else { return vec![ST_ERR] };
+        // Reads must not move the digest (read-lane contract).
+        if matches!(op, OP_GET | OP_LLEN) {
+            return self.query(req);
+        }
+        self.version += 1;
+        let key = key.to_vec();
+        match op {
+            OP_SET => {
+                self.map.insert(key, Value::Str(arg.to_vec()));
+                vec![ST_OK]
+            }
             OP_DEL => {
                 if self.map.remove(&key).is_some() {
                     int_reply(1)
@@ -127,19 +163,8 @@ impl App for RedisApp {
                 Some(_) => vec![ST_ERR],
                 None => vec![ST_NIL],
             },
-            OP_LLEN => match self.map.get(&key) {
-                Some(Value::List(l)) => int_reply(l.len() as i64),
-                Some(_) => vec![ST_ERR],
-                None => int_reply(0),
-            },
             _ => vec![ST_ERR],
         }
-    }
-
-    fn digest(&self) -> Hash32 {
-        let v = self.version.to_le_bytes();
-        let l = (self.map.len() as u64).to_le_bytes();
-        hash_parts(&[&v, &l])
     }
 
     fn sim_cost(&self, req: &[u8]) -> Nanos {
@@ -153,6 +178,74 @@ impl App for RedisApp {
 
     fn name(&self) -> &'static str {
         "redis"
+    }
+}
+
+/// Value tags in the snapshot encoding.
+const SNAP_STR: u8 = 0;
+const SNAP_LIST: u8 = 1;
+
+impl Checkpointable for RedisApp {
+    fn digest(&self) -> Hash32 {
+        let v = self.version.to_le_bytes();
+        let l = (self.map.len() as u64).to_le_bytes();
+        hash_parts(&[&v, &l])
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u64(self.version);
+        w.u32(self.map.len() as u32);
+        for (key, value) in &self.map {
+            w.bytes(key);
+            match value {
+                Value::Str(v) => {
+                    w.u8(SNAP_STR);
+                    w.bytes(v);
+                }
+                Value::List(l) => {
+                    w.u8(SNAP_LIST);
+                    w.u32(l.len() as u32);
+                    for item in l {
+                        w.bytes(item);
+                    }
+                }
+            }
+        }
+        w.finish()
+    }
+
+    fn restore(&mut self, snap: &[u8]) {
+        // Parse fully before installing: a malformed snapshot leaves the
+        // current state untouched.
+        fn parse_snap(snap: &[u8]) -> Option<(u64, BTreeMap<Vec<u8>, Value>)> {
+            let mut r = WireReader::new(snap);
+            let version = r.u64().ok()?;
+            let n = r.u32().ok()? as usize;
+            let mut map = BTreeMap::new();
+            for _ in 0..n {
+                let key = r.bytes().ok()?;
+                let value = match r.u8().ok()? {
+                    SNAP_STR => Value::Str(r.bytes().ok()?),
+                    SNAP_LIST => {
+                        let len = r.u32().ok()? as usize;
+                        let mut l = VecDeque::with_capacity(len.min(4096));
+                        for _ in 0..len {
+                            l.push_back(r.bytes().ok()?);
+                        }
+                        Value::List(l)
+                    }
+                    _ => return None,
+                };
+                map.insert(key, value);
+            }
+            r.done().ok()?;
+            Some((version, map))
+        }
+        if let Some((version, map)) = parse_snap(snap) {
+            self.version = version;
+            self.map = map;
+        }
     }
 }
 
@@ -183,6 +276,9 @@ impl Workload for RedisWorkload {
         } else {
             cmd(OP_RPOP, b"queue", &[])
         }
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        classify_op(req)
     }
     fn name(&self) -> &'static str {
         "redis"
@@ -233,6 +329,43 @@ mod tests {
         assert_eq!(r.execute(&cmd(OP_GET, b"l", &[])), vec![ST_ERR]);
         r.execute(&cmd(OP_SET, b"s", b"x"));
         assert_eq!(r.execute(&cmd(OP_RPOP, b"s", &[])), vec![ST_ERR]);
+    }
+
+    #[test]
+    fn reads_are_readonly_and_query_matches_execute() {
+        let mut r = RedisApp::new();
+        r.execute(&cmd(OP_SET, b"k", b"v"));
+        r.execute(&cmd(OP_LPUSH, b"l", b"x"));
+        let d0 = r.digest();
+        assert_eq!(r.classify(&cmd(OP_GET, b"k", &[])), Operation::ReadOnly);
+        assert_eq!(r.classify(&cmd(OP_LLEN, b"l", &[])), Operation::ReadOnly);
+        assert_eq!(r.classify(&cmd(OP_SET, b"k", b"v")), Operation::ReadWrite);
+        assert_eq!(r.classify(&cmd(OP_RPOP, b"l", &[])), Operation::ReadWrite);
+        assert_eq!(r.query(&cmd(OP_GET, b"k", &[])), r.execute(&cmd(OP_GET, b"k", &[])));
+        assert_eq!(r.query(&cmd(OP_LLEN, b"l", &[])), int_reply(1));
+        assert_eq!(r.digest(), d0, "reads moved the digest");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut r = RedisApp::new();
+        r.execute(&cmd(OP_SET, b"s", b"value"));
+        r.execute(&cmd(OP_INCR, b"c", &[]));
+        r.execute(&cmd(OP_LPUSH, b"l", b"a"));
+        r.execute(&cmd(OP_LPUSH, b"l", b"b"));
+        let snap = r.snapshot();
+        let mut fresh = RedisApp::new();
+        fresh.restore(&snap);
+        assert_eq!(fresh.digest(), r.digest());
+        // Restored structures behave identically.
+        assert_eq!(fresh.query(&cmd(OP_LLEN, b"l", &[])), int_reply(2));
+        let mut expect = vec![ST_OK];
+        expect.extend_from_slice(b"value");
+        assert_eq!(fresh.query(&cmd(OP_GET, b"s", &[])), expect);
+        // Malformed snapshots are rejected wholesale.
+        let mut untouched = RedisApp::new();
+        untouched.restore(b"garbage");
+        assert_eq!(untouched.digest(), RedisApp::new().digest());
     }
 
     #[test]

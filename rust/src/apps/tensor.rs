@@ -8,7 +8,7 @@
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
 use crate::runtime::{shapes, Module};
-use crate::smr::App;
+use crate::smr::{Checkpointable, Service};
 use crate::util::Rng;
 use crate::Nanos;
 use std::sync::Arc;
@@ -68,7 +68,26 @@ impl TensorApp {
     }
 }
 
-impl App for TensorApp {
+impl Checkpointable for TensorApp {
+    fn digest(&self) -> Hash32 {
+        hash_parts(&[&self.state.0, &self.ops.to_le_bytes()])
+    }
+    fn snapshot(&self) -> Vec<u8> {
+        // The compiled module and weights are deployment constants; the
+        // replicated state is the op count and the folded response hash.
+        let mut snap = self.ops.to_le_bytes().to_vec();
+        snap.extend_from_slice(&self.state.0);
+        snap
+    }
+    fn restore(&mut self, snap: &[u8]) {
+        if snap.len() == 8 + 32 {
+            self.ops = u64::from_le_bytes(snap[..8].try_into().unwrap());
+            self.state = Hash32(snap[8..].try_into().unwrap());
+        }
+    }
+}
+
+impl Service for TensorApp {
     fn execute(&mut self, req: &[u8]) -> Vec<u8> {
         self.ops += 1;
         let Some(input) = Self::parse_input(req) else { return vec![0xFF] };
@@ -92,10 +111,6 @@ impl App for TensorApp {
         }
         self.state = hash_parts(&[&self.state.0, &resp]);
         resp
-    }
-
-    fn digest(&self) -> Hash32 {
-        hash_parts(&[&self.state.0, &self.ops.to_le_bytes()])
     }
 
     fn sim_cost(&self, _req: &[u8]) -> Nanos {

@@ -27,7 +27,7 @@ use crate::crypto::{hash, Hash32};
 use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
-use crate::smr::App;
+use crate::smr::Service;
 use crate::util::wire::{Wire, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use std::collections::{BTreeSet, HashMap};
@@ -100,7 +100,7 @@ pub struct MinBftReplica {
     f: usize,
     vanilla: bool,
     usig: Usig,
-    app: Box<dyn App>,
+    app: Box<dyn Service>,
     next_seq: u64,
     slots: HashMap<u64, SlotEntry>,
     exec_next: u64,
@@ -112,7 +112,7 @@ impl MinBftReplica {
         replicas: Vec<NodeId>,
         f: usize,
         vanilla: bool,
-        app: Box<dyn App>,
+        app: Box<dyn Service>,
         secret: [u8; 32],
     ) -> MinBftReplica {
         MinBftReplica {

@@ -15,7 +15,7 @@ use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
 use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
-use crate::smr::App;
+use crate::smr::Service;
 use crate::util::wire::{Wire, WireReader, WireWriter};
 use crate::NodeId;
 use std::collections::HashMap;
@@ -27,14 +27,14 @@ const TAG_MU_ACK: u8 = 0x31;
 pub struct MuLeader {
     followers: Vec<NodeId>,
     majority: usize, // follower acks needed (majority incl. self)
-    app: Box<dyn App>,
+    app: Box<dyn Service>,
     next_seq: u64,
     pending: HashMap<u64, (NodeId, Request, usize)>,
     proc: crate::Nanos,
 }
 
 impl MuLeader {
-    pub fn new(followers: Vec<NodeId>, app: Box<dyn App>, cfg: &crate::config::Config) -> MuLeader {
+    pub fn new(followers: Vec<NodeId>, app: Box<dyn Service>, cfg: &crate::config::Config) -> MuLeader {
         // n = followers + 1; majority of n includes the leader itself.
         let n = followers.len() + 1;
         let majority_total = n / 2 + 1;

@@ -5,16 +5,16 @@ use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg};
 use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
-use crate::smr::App;
+use crate::smr::Service;
 use crate::NodeId;
 
 pub struct Server {
-    app: Box<dyn App>,
+    app: Box<dyn Service>,
     proc_overhead: crate::Nanos,
 }
 
 impl Server {
-    pub fn new(app: Box<dyn App>, cfg: &crate::config::Config) -> Server {
+    pub fn new(app: Box<dyn Service>, cfg: &crate::config::Config) -> Server {
         Server { app, proc_overhead: cfg.lat.proc_overhead }
     }
 }

@@ -6,6 +6,7 @@
 //! loaded from simple `key = value` files (`examples/*.conf`) — serde is
 //! unavailable offline, so parsing is hand-rolled.
 
+use crate::smr::ReadMode;
 use crate::{Nanos, MICRO, MILLI};
 
 /// Calibrated latency constants for the discrete-event simulator.
@@ -121,6 +122,9 @@ pub struct Config {
     pub retransmit_every: Nanos,
     /// Force the slow path (used by slow-path benchmarks: Fig 8-10).
     pub slow_path_always: bool,
+    /// How clients route `ReadOnly`-classified requests (the typed
+    /// `Service` read lane). Default: everything through consensus.
+    pub read_mode: ReadMode,
     /// Signature backend.
     pub sig_backend: SigBackend,
     /// DES latency model.
@@ -147,6 +151,7 @@ impl Default for Config {
             viewchange_timeout: 2 * MILLI,
             retransmit_every: 500 * MICRO,
             slow_path_always: false,
+            read_mode: ReadMode::Consensus,
             sig_backend: SigBackend::Sim,
             lat: LatencyModel::default(),
             seed: 0xDEADBEEF,
@@ -227,6 +232,13 @@ impl Config {
                 "viewchange_timeout_ns" => c.viewchange_timeout = u(v)?,
                 "retransmit_every_ns" => c.retransmit_every = u(v)?,
                 "slow_path_always" => c.slow_path_always = v == "true" || v == "1",
+                "read_mode" => {
+                    c.read_mode = match v {
+                        "consensus" => ReadMode::Consensus,
+                        "direct" => ReadMode::Direct,
+                        _ => return Err(format!("line {}: unknown read_mode {v}", lineno + 1)),
+                    }
+                }
                 "sig_backend" => {
                     c.sig_backend = match v {
                         "ed25519" => SigBackend::Ed25519,
@@ -304,6 +316,16 @@ mod tests {
         // Batches are capped at the consensus window.
         assert!(Config::parse("window = 16\nmax_batch_reqs = 17\n").is_err());
         assert!(Config::parse("window = 16\nmax_batch_reqs = 16\n").is_ok());
+    }
+
+    #[test]
+    fn read_mode_parses_and_rejects_unknown() {
+        assert_eq!(Config::parse("read_mode = direct\n").unwrap().read_mode, ReadMode::Direct);
+        assert_eq!(
+            Config::parse("read_mode = consensus\n").unwrap().read_mode,
+            ReadMode::Consensus
+        );
+        assert!(Config::parse("read_mode = sometimes\n").is_err());
     }
 
     #[test]

@@ -4,9 +4,16 @@
 //! CTBcast summaries for gap recovery.
 //!
 //! One [`Replica`] is an [`Actor`]: it owns the CTBcast endpoint (which
-//! owns TBcast and the register client), the replicated [`App`], and all
-//! protocol state. The same replica runs under the DES (evaluation) and
-//! the real-thread driver (examples).
+//! owns TBcast and the register client), the replicated [`Service`], and
+//! all protocol state. The same replica runs under the DES (evaluation)
+//! and the real-thread driver (examples).
+//!
+//! On top of the slot protocol, the typed `Service` API adds a non-slot
+//! *read lane* (`ReadRequest`/`ReadReply`: `ReadOnly`-classified requests
+//! answered from applied state, completing on f+1 matching replies at the
+//! client), one aggregated `Responses` frame per client per decided slot,
+//! and checkpoint-driven state transfer (certified execution snapshots
+//! fetched by lagging replicas instead of replaying pruned slots).
 //!
 //! Message flow per slot (stable leader):
 //! * **fast path** (Fig 4): client → all replicas; followers Echo to the
@@ -22,18 +29,18 @@ pub mod msgs;
 pub mod state;
 
 use crate::config::Config;
-use crate::crypto::{Certificate, Hash32, KeyStore};
+use crate::crypto::{hash, Certificate, Hash32, KeyStore};
 use crate::ctbcast::{CtbEndpoint, CtbOut, TOKEN_CTB_COOLDOWN};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
-use crate::smr::App;
+use crate::smr::{Checkpointable, Operation, Service};
 use crate::tbcast::{TAG_DIRECT, TAG_TB};
-use crate::util::wire::Wire;
+use crate::util::wire::{Wire, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use msgs::{
     certify_digest, checkpoint_cert_digest, direct_frame, parse_direct, Checkpoint,
-    CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, SenderStateEnc, TbMsg,
-    VcCert,
+    CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, RespEntry,
+    SenderStateEnc, TbMsg, VcCert,
 };
 use state::{leader_of, must_propose, Constraint, Effect, SenderState};
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
@@ -83,6 +90,18 @@ pub struct ReplicaStats {
     pub batched_reqs: u64,
     /// Largest batch proposed.
     pub max_batch: u64,
+    /// Read-lane requests answered from applied state (never a slot).
+    pub reads_served: u64,
+    /// Aggregated `Responses` frames sent (one per client per slot).
+    pub resp_frames: u64,
+    /// Individual replies carried inside those frames.
+    pub resp_replies: u64,
+    /// Execution snapshots served to lagging replicas.
+    pub snapshots_served: u64,
+    /// Times this replica caught up by restoring a fetched snapshot.
+    pub snapshots_restored: u64,
+    /// Decided-but-unreplayed slots skipped via snapshot restore.
+    pub snapshot_slots_skipped: u64,
 }
 
 impl ReplicaStats {
@@ -105,7 +124,7 @@ pub struct Replica {
     quorum: usize,
     ks: KeyStore,
     ctb: Option<CtbEndpoint>,
-    app: Box<dyn App>,
+    service: Box<dyn Service>,
 
     view: u64,
     next_slot: u64,
@@ -131,8 +150,10 @@ pub struct Replica {
     /// requests (client retries after a lost Response, or re-proposals
     /// across view changes deciding twice) are answered from this cache
     /// and never re-executed — standard SMR at-most-once execution.
-    /// Deterministic across replicas (driven by the applied sequence).
-    resp_cache: HashMap<u64, VecDeque<(u64, u64, Vec<u8>)>>,
+    /// Deterministic across replicas (driven by the applied sequence),
+    /// which is why it is part of the certified execution snapshot —
+    /// ordered (BTreeMap) so the snapshot encoding is canonical.
+    resp_cache: BTreeMap<u64, VecDeque<(u64, u64, Vec<u8>)>>,
 
     /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
     my_prepare_k: HashMap<u64, u64>,
@@ -146,6 +167,19 @@ pub struct Replica {
 
     // Checkpoint certification.
     cp_shares: HashMap<Hash32, (Checkpoint, Certificate)>,
+
+    // Checkpoint-driven state transfer.
+    /// Execution snapshot taken when this replica initiated certification
+    /// of a checkpoint at `.0`; promoted to `latest_snapshot` once the
+    /// matching certificate is adopted.
+    snapshot_stash: Option<(u64, Vec<u8>)>,
+    /// Newest certified checkpoint whose execution snapshot this replica
+    /// holds (its own, or one it restored from) — what it serves to
+    /// lagging peers on `SnapshotRequest`.
+    latest_snapshot: Option<(CheckpointCert, Vec<u8>)>,
+    /// Checkpoint boundary this replica is currently fetching a snapshot
+    /// for (guards duplicate requests).
+    pending_snapshot: Option<u64>,
 
     // Summaries (Alg 4). Boundaries every `t/2` of my own stream.
     my_summary_id: u64,
@@ -163,12 +197,12 @@ pub struct Replica {
 }
 
 impl Replica {
-    pub fn new(me: NodeId, cfg: Config, app: Box<dyn App>) -> Replica {
+    pub fn new(me: NodeId, cfg: Config, service: Box<dyn Service>) -> Replica {
         let ks = match cfg.sig_backend {
             crate::config::SigBackend::Ed25519 => KeyStore::ed25519(cfg.n + 64, cfg.seed),
             crate::config::SigBackend::Sim => KeyStore::sim(cfg.seed),
         };
-        let genesis = CheckpointCert::genesis(cfg.window as u64, app.digest());
+        let genesis = CheckpointCert::genesis(cfg.window as u64, service.digest());
         let senders = (0..cfg.n).map(|p| SenderState::new(p, genesis.clone())).collect();
         Replica {
             me,
@@ -176,7 +210,7 @@ impl Replica {
             quorum: cfg.quorum(),
             ks,
             ctb: None,
-            app,
+            service,
             view: 0,
             next_slot: 0,
             checkpoint: genesis,
@@ -191,12 +225,15 @@ impl Replica {
             echoes: HashMap::new(),
             proposed: HashSet::new(),
             waiting_prepares: HashMap::new(),
-            resp_cache: HashMap::new(),
+            resp_cache: BTreeMap::new(),
             my_prepare_k: HashMap::new(),
             sealing: None,
             vc_shares: HashMap::new(),
             new_view_sent: HashSet::new(),
             cp_shares: HashMap::new(),
+            snapshot_stash: None,
+            latest_snapshot: None,
+            pending_snapshot: None,
             my_summary_id: 0,
             my_boundary_states: BTreeMap::new(),
             summary_certs: BTreeMap::new(),
@@ -579,37 +616,67 @@ impl Replica {
         self.try_propose(env);
     }
 
-    /// Apply decided slots in order — every request of a slot's batch, in
-    /// batch order — and respond to clients per request.
+    /// Apply decided slots in order — each slot's batch goes through
+    /// [`Service::apply_batch`] as a unit — and answer clients with one
+    /// aggregated `Responses` frame per client per slot.
     fn try_apply(&mut self, env: &mut dyn Env) {
         while let Some(reqs) = self.decided.get(&self.applied_upto).cloned() {
             let slot = self.applied_upto;
             self.applied_upto += 1;
+            // At-most-once execution: a request re-proposed across a view
+            // change may decide in two slots (and a Byzantine leader may
+            // repeat a request within one batch); execute only once.
+            let mut fresh: Vec<Request> = Vec::new();
+            let mut seen: HashSet<(u64, u64)> = HashSet::new();
             for req in reqs {
                 if req.is_noop() {
                     continue;
                 }
-                // At-most-once execution: a request re-proposed across a
-                // view change may decide in two slots; execute only once.
-                let cache = self.resp_cache.entry(req.client).or_default();
-                if cache.iter().any(|(rid, _, _)| *rid == req.rid) {
+                let cached = self
+                    .resp_cache
+                    .get(&req.client)
+                    .map_or(false, |c| c.iter().any(|(rid, _, _)| *rid == req.rid));
+                if cached || !seen.insert((req.client, req.rid)) {
                     continue;
                 }
-                env.charge(Category::Other, self.app.sim_cost(&req.payload));
-                let resp = self.app.execute(&req.payload);
+                fresh.push(req);
+            }
+            if fresh.is_empty() {
+                continue;
+            }
+            for req in &fresh {
+                env.charge(Category::Other, self.service.sim_cost(&req.payload));
+            }
+            let replies = self.service.apply_batch(&fresh);
+            debug_assert_eq!(replies.len(), fresh.len(), "apply_batch reply misalignment");
+            let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
+            for reply in replies {
                 env.mark("applied");
-                let client = req.client as NodeId;
-                let cache = self.resp_cache.entry(req.client).or_default();
-                cache.push_back((req.rid, slot, resp.clone()));
+                let cache = self.resp_cache.entry(reply.client).or_default();
+                cache.push_back((reply.rid, slot, reply.payload.clone()));
                 while cache.len() > 8 {
                     cache.pop_front();
                 }
+                per_client
+                    .entry(reply.client)
+                    .or_default()
+                    .push(RespEntry { rid: reply.rid, payload: reply.payload });
+            }
+            for (client, replies) in per_client {
+                self.stats.resp_frames += 1;
+                self.stats.resp_replies += replies.len() as u64;
                 self.send_direct(
                     env,
-                    client,
-                    DirectMsg::Response { rid: req.rid, slot, payload: resp },
+                    client as NodeId,
+                    DirectMsg::Responses { slot, replies },
                 );
             }
+        }
+        // If replaying decided slots caught us up past a boundary we were
+        // fetching, stand down the fetch — otherwise the retransmit
+        // heartbeat would keep soliciting (and discarding) full snapshots.
+        if self.pending_snapshot.map_or(false, |t| self.applied_upto >= t) {
+            self.pending_snapshot = None;
         }
     }
 
@@ -623,15 +690,20 @@ impl Replica {
         if self.applied_upto < self.checkpoint.body.open_hi() {
             return;
         }
+        let snap = self.exec_snapshot();
         let body = Checkpoint {
             upto: self.applied_upto,
             window: self.cfg.window as u64,
-            app_digest: self.app.digest(),
+            app_digest: self.service.digest(),
+            snap_digest: hash(&snap),
         };
         let digest = checkpoint_cert_digest(&body);
         if self.cp_shares.contains_key(&digest) {
             return; // already certifying
         }
+        // Retain the snapshot the certificate will vouch for; promoted to
+        // `latest_snapshot` when the f+1 certificate is adopted.
+        self.snapshot_stash = Some((body.upto, snap));
         let share = self.ks.sign(self.me, &digest.0);
         crate::env::charge_sign(env, &self.cfg.lat.clone());
         self.tb_broadcast(env, TbMsg::CertifyCheckpoint { body, share });
@@ -644,6 +716,16 @@ impl Replica {
         }
         self.checkpoint = cp.clone();
         self.stats.checkpoints += 1;
+        // Promote the stashed execution snapshot this certificate vouches
+        // for: it is what lagging peers fetch instead of replaying.
+        let promote = self
+            .snapshot_stash
+            .as_ref()
+            .map_or(false, |(upto, _)| *upto == cp.body.upto);
+        if promote {
+            let (_, snap) = self.snapshot_stash.take().unwrap();
+            self.latest_snapshot = Some((cp.clone(), snap));
+        }
         let lo = self.checkpoint.body.open_lo();
         // Drop per-slot state and fast-path promises below the window.
         self.slots = self.slots.split_off(&lo);
@@ -655,8 +737,138 @@ impl Replica {
         self.prune_waiting_prepares();
         env.mark("checkpoint");
         self.ctb_broadcast(env, ConsMsg::Checkpoint(cp));
+        // Behind the certified boundary: the decided slots below it may
+        // already be pruned cluster-wide, so fetch the certified execution
+        // snapshot instead of waiting to replay them (§5.1 state transfer).
+        if self.applied_upto < lo {
+            self.request_snapshot(env, lo);
+        }
         // New window may unblock proposing.
         self.try_propose(env);
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoint-driven state transfer
+    // ------------------------------------------------------------------
+
+    /// Canonical encoding of the execution state a checkpoint certifies:
+    /// the at-most-once reply cache plus the [`Service`] snapshot. All
+    /// correct replicas at the same applied prefix encode byte-identical
+    /// snapshots, so `Checkpoint::snap_digest` certifies with f+1 shares.
+    fn exec_snapshot(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u32(self.resp_cache.len() as u32);
+        for (client, entries) in &self.resp_cache {
+            w.u64(*client);
+            w.u32(entries.len() as u32);
+            for (rid, slot, payload) in entries {
+                w.u64(*rid);
+                w.u64(*slot);
+                w.bytes(payload);
+            }
+        }
+        w.bytes(&self.service.snapshot());
+        w.finish()
+    }
+
+    /// Parse an execution snapshot; `None` on malformed bytes.
+    fn decode_exec_snapshot(
+        snap: &[u8],
+    ) -> Option<(BTreeMap<u64, VecDeque<(u64, u64, Vec<u8>)>>, Vec<u8>)> {
+        let mut r = WireReader::new(snap);
+        let clients = r.u32().ok()? as usize;
+        let mut cache = BTreeMap::new();
+        for _ in 0..clients {
+            let client = r.u64().ok()?;
+            let n = r.u32().ok()? as usize;
+            let mut entries = VecDeque::with_capacity(n.min(64));
+            for _ in 0..n {
+                entries.push_back((r.u64().ok()?, r.u64().ok()?, r.bytes().ok()?));
+            }
+            cache.insert(client, entries);
+        }
+        let service_snap = r.bytes().ok()?;
+        r.done().ok()?;
+        Some((cache, service_snap))
+    }
+
+    /// Ask every peer for the execution snapshot at checkpoint `upto`.
+    fn request_snapshot(&mut self, env: &mut dyn Env, upto: u64) {
+        if self.pending_snapshot.map_or(false, |t| t >= upto) {
+            return; // already fetching this boundary (or a newer one)
+        }
+        self.pending_snapshot = Some(upto);
+        env.mark("snapshot_requested");
+        for peer in 0..self.n {
+            if peer != self.me {
+                self.send_direct(env, peer, DirectMsg::SnapshotRequest { upto });
+            }
+        }
+    }
+
+    /// Serve a lagging peer: reply with our newest certified snapshot if
+    /// it is at least as fresh as the requested boundary.
+    fn on_snapshot_request(&mut self, env: &mut dyn Env, from: NodeId, upto: u64) {
+        if from >= self.n {
+            return; // only replicas transfer state
+        }
+        let Some((cp, snap)) = self.latest_snapshot.clone() else { return };
+        if cp.body.upto < upto {
+            return; // we cannot serve that boundary (yet)
+        }
+        self.stats.snapshots_served += 1;
+        env.mark("snapshot_served");
+        self.send_direct(env, from, DirectMsg::SnapshotReply { cp, snap });
+    }
+
+    /// Adopt a fetched snapshot: verify it against the certified
+    /// `snap_digest`, restore service + reply cache, and jump
+    /// `applied_upto` to the checkpoint boundary without replaying the
+    /// pre-checkpoint slots.
+    fn on_snapshot_reply(&mut self, env: &mut dyn Env, cp: CheckpointCert, snap: Vec<u8>) {
+        // Accept only snapshots at (or past) the boundary we asked for: a
+        // Byzantine peer replaying an older certified snapshot must not
+        // cancel the fetch and strand us below the checkpoint window.
+        let Some(target) = self.pending_snapshot else { return };
+        if cp.body.upto < target || cp.body.upto <= self.applied_upto {
+            return;
+        }
+        if cp.is_genesis() || !cp.verify(&self.ks, self.quorum) {
+            return;
+        }
+        crate::env::charge_verify(env, &self.cfg.lat.clone());
+        if hash(&snap) != cp.body.snap_digest {
+            return; // not the certified snapshot; wait for an honest peer
+        }
+        let Some((cache, service_snap)) = Replica::decode_exec_snapshot(&snap) else {
+            return; // certified bytes are self-consistent, so this is hostile
+        };
+        // We are about to restore to this boundary: pre-claim it so the
+        // checkpoint adoption below doesn't fan out a redundant round of
+        // SnapshotRequests (whose full-state replies we would discard).
+        self.pending_snapshot = Some(cp.body.upto);
+        // Adopt the checkpoint first (prunes per-slot state, moves the
+        // window), then jump execution state over the pruned slots.
+        self.maybe_checkpoint(env, cp.clone());
+        let skipped = cp.body.upto.saturating_sub(self.applied_upto);
+        self.service.restore(&service_snap);
+        self.resp_cache = cache;
+        self.applied_upto = cp.body.upto;
+        self.decided = self.decided.split_off(&cp.body.upto);
+        // Requests decided before the boundary were answered by the
+        // replicas that executed them; live clients re-send anything that
+        // still matters, so don't let stale entries feed view-change
+        // suspicion.
+        self.pending_reqs.clear();
+        self.pending_snapshot = None;
+        self.latest_snapshot = Some((cp, snap));
+        self.stats.snapshots_restored += 1;
+        self.stats.snapshot_slots_skipped += skipped;
+        self.last_progress = env.now();
+        env.mark("snapshot_restored");
+        // Slots decided at/after the boundary may now apply in order.
+        self.try_apply(env);
+        self.try_checkpoint(env);
     }
 
     // ------------------------------------------------------------------
@@ -715,7 +927,41 @@ impl Replica {
                     self.try_propose(env);
                 }
             }
-            DirectMsg::Response { .. } => { /* clients only */ }
+            DirectMsg::Response { .. } | DirectMsg::Responses { .. } => { /* clients only */ }
+            DirectMsg::ReadReply { .. } => { /* clients only */ }
+            DirectMsg::ReadRequest(req) => {
+                // The replica re-classifies: only genuinely read-only
+                // requests take the non-slot lane. Anything else from a
+                // confused (or Byzantine) client falls back to consensus,
+                // so the lane can never mutate state out of order.
+                match self.service.classify(&req.payload) {
+                    Operation::ReadOnly => {
+                        env.charge(Category::Other, self.service.sim_cost(&req.payload));
+                        let payload = self.service.query(&req.payload);
+                        self.stats.reads_served += 1;
+                        env.mark("read_served");
+                        let client = req.client as NodeId;
+                        self.send_direct(
+                            env,
+                            client,
+                            DirectMsg::ReadReply {
+                                rid: req.rid,
+                                applied_upto: self.applied_upto,
+                                payload,
+                            },
+                        );
+                    }
+                    Operation::ReadWrite => {
+                        self.handle_direct(env, from, DirectMsg::Request(req));
+                    }
+                }
+            }
+            DirectMsg::SnapshotRequest { upto } => {
+                self.on_snapshot_request(env, from, upto);
+            }
+            DirectMsg::SnapshotReply { cp, snap } => {
+                self.on_snapshot_reply(env, cp, snap);
+            }
             DirectMsg::CrtfyVc { view, about, state, share } => {
                 self.on_crtfy_vc(env, from, view, about, state, share);
             }
@@ -1137,6 +1383,16 @@ impl Actor for Replica {
             Event::Timer { token } => match token {
                 TOKEN_RETRANSMIT => {
                     self.ctb.as_mut().unwrap().on_retransmit(env);
+                    // A pending state-transfer fetch rides the same
+                    // heartbeat: re-ask the peers until a certified
+                    // snapshot lands (requests/replies may be lost).
+                    if let Some(upto) = self.pending_snapshot {
+                        for peer in 0..self.n {
+                            if peer != self.me {
+                                self.send_direct(env, peer, DirectMsg::SnapshotRequest { upto });
+                            }
+                        }
+                    }
                     env.set_timer(self.cfg.retransmit_every, TOKEN_RETRANSMIT);
                 }
                 TOKEN_TICK => {
@@ -1190,6 +1446,10 @@ impl Replica {
             .flat_map(|pbs| pbs.iter())
             .map(|pb| pb.batch_bytes() as u64 + 48)
             .sum::<u64>();
+        // Retained execution snapshots (state transfer): at most one
+        // stashed + one certified per replica.
+        total += self.snapshot_stash.as_ref().map_or(0, |(_, s)| s.len() as u64);
+        total += self.latest_snapshot.as_ref().map_or(0, |(_, s)| s.len() as u64);
         total
     }
 
@@ -1206,8 +1466,14 @@ impl Replica {
         self.applied_upto
     }
 
-    pub fn app(&self) -> &dyn App {
-        self.app.as_ref()
+    /// The replicated [`Service`] (read-only introspection).
+    pub fn service(&self) -> &dyn Service {
+        self.service.as_ref()
+    }
+
+    /// Seed-era name for [`Replica::service`].
+    pub fn app(&self) -> &dyn Service {
+        self.service.as_ref()
     }
 }
 

@@ -108,16 +108,26 @@ impl Wire for PrepareBody {
 
 /// An application checkpoint body: the state digest after applying slots
 /// `[0, upto)` plus the authorization to work on `[upto, upto + window)`.
+///
+/// `snap_digest` is the hash of the replica's *execution snapshot* (the
+/// [`crate::smr::Checkpointable`] service snapshot plus the at-most-once
+/// reply cache) at `upto`. Because f+1 replicas certify it, a lagging
+/// replica can fetch the snapshot from any single peer and verify it
+/// against the certificate — checkpoint-driven state transfer instead of
+/// replaying pre-checkpoint slots.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Checkpoint {
     pub upto: u64,
     pub window: u64,
     pub app_digest: Hash32,
+    pub snap_digest: Hash32,
 }
 
 impl Checkpoint {
+    /// The genesis checkpoint. Its snapshot digest is never fetched
+    /// (nothing is behind slot 0), so it is pinned to zero.
     pub fn genesis(window: u64, app_digest: Hash32) -> Checkpoint {
-        Checkpoint { upto: 0, window, app_digest }
+        Checkpoint { upto: 0, window, app_digest, snap_digest: Hash32::ZERO }
     }
 
     pub fn digest(&self) -> Hash32 {
@@ -143,9 +153,15 @@ impl Wire for Checkpoint {
         w.u64(self.upto);
         w.u64(self.window);
         self.app_digest.put(w);
+        self.snap_digest.put(w);
     }
     fn get(r: &mut WireReader) -> Result<Self, WireError> {
-        Ok(Checkpoint { upto: r.u64()?, window: r.u64()?, app_digest: Hash32::get(r)? })
+        Ok(Checkpoint {
+            upto: r.u64()?,
+            window: r.u64()?,
+            app_digest: Hash32::get(r)?,
+            snap_digest: Hash32::get(r)?,
+        })
     }
 }
 
@@ -411,6 +427,24 @@ impl Wire for TbMsg {
     }
 }
 
+/// One `(rid, payload)` reply inside an aggregated [`DirectMsg::Responses`]
+/// frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RespEntry {
+    pub rid: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Wire for RespEntry {
+    fn put(&self, w: &mut WireWriter) {
+        w.u64(self.rid);
+        w.bytes(&self.payload);
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(RespEntry { rid: r.u64()?, payload: r.bytes()? })
+    }
+}
+
 /// Unicast messages ([`crate::tbcast::TAG_DIRECT`] frames).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DirectMsg {
@@ -418,12 +452,29 @@ pub enum DirectMsg {
     Request(Request),
     /// Follower → leader: "I have this client request" (§5.4 Echo round).
     ReqEcho { digest: Hash32 },
-    /// Replica → client.
+    /// Replica → client: a single retransmitted reply (at-most-once cache
+    /// hits). Freshly applied slots use the aggregated [`DirectMsg::Responses`].
     Response { rid: u64, slot: u64, payload: Vec<u8> },
     /// Replica → new leader: certified state share about `about`.
     CrtfyVc { view: u64, about: u64, state: SenderStateEnc, share: Sig },
     /// Replica → broadcaster: summary share (Alg 4).
     CertifySummary { id: u64, digest: Hash32, share: Sig },
+    /// Replica → client: every reply for this client decided in `slot` —
+    /// exactly one frame per client per slot, however many of its requests
+    /// the slot's batch carried.
+    Responses { slot: u64, replies: Vec<RespEntry> },
+    /// Client → every replica: an [`crate::smr::Operation::ReadOnly`]
+    /// request on the non-slot read lane.
+    ReadRequest(Request),
+    /// Replica → client: a read-lane answer from applied state. The client
+    /// completes the read on f+1 matching payloads.
+    ReadReply { rid: u64, applied_upto: u64, payload: Vec<u8> },
+    /// Lagging replica → peers: fetch the execution snapshot of the
+    /// checkpoint at `upto` (or any newer certified one).
+    SnapshotRequest { upto: u64 },
+    /// Peer → lagging replica: a certified checkpoint plus the execution
+    /// snapshot whose hash the certificate's `snap_digest` vouches for.
+    SnapshotReply { cp: CheckpointCert, snap: Vec<u8> },
 }
 
 /// Bytes a CertifySummary share signs: `(about, id, state digest)`.
@@ -465,6 +516,30 @@ impl Wire for DirectMsg {
                 digest.put(w);
                 share.put(w);
             }
+            DirectMsg::Responses { slot, replies } => {
+                w.u8(6);
+                w.u64(*slot);
+                put_list(w, replies);
+            }
+            DirectMsg::ReadRequest(rq) => {
+                w.u8(7);
+                rq.put(w);
+            }
+            DirectMsg::ReadReply { rid, applied_upto, payload } => {
+                w.u8(8);
+                w.u64(*rid);
+                w.u64(*applied_upto);
+                w.bytes(payload);
+            }
+            DirectMsg::SnapshotRequest { upto } => {
+                w.u8(9);
+                w.u64(*upto);
+            }
+            DirectMsg::SnapshotReply { cp, snap } => {
+                w.u8(10);
+                cp.put(w);
+                w.bytes(snap);
+            }
         }
     }
     fn get(r: &mut WireReader) -> Result<Self, WireError> {
@@ -483,6 +558,15 @@ impl Wire for DirectMsg {
                 digest: Hash32::get(r)?,
                 share: Sig::get(r)?,
             },
+            6 => DirectMsg::Responses { slot: r.u64()?, replies: get_list(r)? },
+            7 => DirectMsg::ReadRequest(Request::get(r)?),
+            8 => DirectMsg::ReadReply {
+                rid: r.u64()?,
+                applied_upto: r.u64()?,
+                payload: r.bytes()?,
+            },
+            9 => DirectMsg::SnapshotRequest { upto: r.u64()? },
+            10 => DirectMsg::SnapshotReply { cp: CheckpointCert::get(r)?, snap: r.bytes()? },
             tag => return Err(WireError::BadTag { what: "DirectMsg", tag }),
         })
     }
@@ -569,10 +653,40 @@ mod tests {
             DirectMsg::ReqEcho { digest: hash(b"x") },
             DirectMsg::Response { rid: 5, slot: 2, payload: b"out".to_vec() },
             DirectMsg::CertifySummary { id: 64, digest: hash(b"s"), share: Sig::ZERO },
+            DirectMsg::Responses {
+                slot: 9,
+                replies: vec![
+                    RespEntry { rid: 5, payload: b"a".to_vec() },
+                    RespEntry { rid: 6, payload: Vec::new() },
+                ],
+            },
+            DirectMsg::ReadRequest(req()),
+            DirectMsg::ReadReply { rid: 8, applied_upto: 40, payload: b"v".to_vec() },
+            DirectMsg::SnapshotRequest { upto: 256 },
+            DirectMsg::SnapshotReply {
+                cp: CheckpointCert::genesis(100, Hash32::ZERO),
+                snap: b"snapbytes".to_vec(),
+            },
         ] {
             let framed = direct_frame(&m);
             assert_eq!(parse_direct(&framed).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn checkpoint_wire_covers_snapshot_digest() {
+        let cp = Checkpoint {
+            upto: 64,
+            window: 32,
+            app_digest: hash(b"app"),
+            snap_digest: hash(b"snap"),
+        };
+        assert_eq!(Checkpoint::decode(&cp.encode()).unwrap(), cp);
+        // The certified digest binds the snapshot digest: tampering with
+        // the snapshot identity invalidates the certificate digest.
+        let mut other = cp.clone();
+        other.snap_digest = hash(b"forged");
+        assert_ne!(checkpoint_cert_digest(&cp), checkpoint_cert_digest(&other));
     }
 
     #[test]
@@ -617,7 +731,12 @@ mod tests {
 
     #[test]
     fn checkpoint_open_range() {
-        let cp = Checkpoint { upto: 100, window: 50, app_digest: Hash32::ZERO };
+        let cp = Checkpoint {
+            upto: 100,
+            window: 50,
+            app_digest: Hash32::ZERO,
+            snap_digest: Hash32::ZERO,
+        };
         assert!(!cp.open(99));
         assert!(cp.open(100));
         assert!(cp.open(149));

@@ -424,7 +424,12 @@ mod tests {
             .is_err());
 
         let mut st = SenderState::new(0, genesis());
-        let body = super::super::msgs::Checkpoint { upto: 100, window: 100, app_digest: Hash32::ZERO };
+        let body = super::super::msgs::Checkpoint {
+            upto: 100,
+            window: 100,
+            app_digest: Hash32::ZERO,
+            snap_digest: Hash32::ZERO,
+        };
         let d = super::super::msgs::checkpoint_cert_digest(&body);
         let mut cert = Certificate::new(d);
         cert.add(0, keystore.sign(0, &d.0));

@@ -50,7 +50,7 @@ use crate::metrics::Samples;
 use crate::rpc::{BytesWorkload, Client, ClientStats, Workload};
 use crate::sim::real::{RealCluster, RealMem};
 use crate::sim::{self, Sim, TraceEv};
-use crate::smr::{App, NoopApp};
+use crate::smr::{Checkpointable, NoopApp, ReadMode, Service};
 use crate::{Nanos, NodeId, MICRO, SECOND};
 use std::sync::{Arc, Mutex};
 
@@ -127,11 +127,19 @@ impl System {
     }
 }
 
-/// Per-replica application factory (each replica owns an instance).
-pub type AppFactory = Arc<dyn Fn() -> Box<dyn App>>;
+/// Per-replica service factory (each replica owns an instance).
+pub type ServiceFactory = Arc<dyn Fn() -> Box<dyn Service>>;
 
-/// Wrap a closure as an [`AppFactory`].
-pub fn app_factory(f: impl Fn() -> Box<dyn App> + 'static) -> AppFactory {
+/// Seed-era name for [`ServiceFactory`] (`App` → `Service` migration).
+pub type AppFactory = ServiceFactory;
+
+/// Wrap a closure as a [`ServiceFactory`].
+pub fn service_factory(f: impl Fn() -> Box<dyn Service> + 'static) -> ServiceFactory {
+    Arc::new(f)
+}
+
+/// Seed-era name for [`service_factory`].
+pub fn app_factory(f: impl Fn() -> Box<dyn Service> + 'static) -> ServiceFactory {
     Arc::new(f)
 }
 
@@ -313,6 +321,9 @@ pub enum DeployError {
     BadProbability { what: &'static str, p: f64 },
     /// The requested feature is unavailable in real-thread mode.
     RealModeUnsupported(&'static str),
+    /// `ReadMode::Direct` on a system whose servers don't speak the read
+    /// lane (the baselines answer `Request` frames only).
+    ReadLaneUnsupported(&'static str),
 }
 
 impl std::fmt::Display for DeployError {
@@ -348,6 +359,9 @@ impl std::fmt::Display for DeployError {
             }
             DeployError::RealModeUnsupported(what) => {
                 write!(f, "real-thread mode does not support {what}")
+            }
+            DeployError::ReadLaneUnsupported(sys) => {
+                write!(f, "ReadMode::Direct requires a uBFT system, got {sys}")
             }
         }
     }
@@ -402,7 +416,7 @@ impl SystemSpawner for UbftSpawner {
         for i in 0..cfg.n {
             match d.faults.byz_for(i) {
                 None => {
-                    sink.add_actor(Box::new(Replica::new(i, cfg.clone(), d.make_app())));
+                    sink.add_actor(Box::new(Replica::new(i, cfg.clone(), d.make_service())));
                 }
                 Some(ByzSpec::Equivocate { recv_a, recv_b, m_a, m_b, slow, .. }) => {
                     sink.add_actor(Box::new(EquivocatingBroadcaster::new(
@@ -451,12 +465,17 @@ enum ClientSpec {
 pub struct Deployment {
     cfg: Config,
     system: System,
-    app: AppFactory,
+    /// A custom server-side wiring overriding `system.spawner()` — the
+    /// extension point raw experiments (e.g. `harness::fig10`'s CTB/SGX
+    /// broadcast actors) use to deploy through the same builder.
+    custom_spawner: Option<Box<dyn SystemSpawner>>,
+    app: ServiceFactory,
     clients: ClientSpec,
     requests: usize,
     pipeline: Option<usize>,
     batch: Option<(usize, usize)>,
     slot_pipeline: Option<usize>,
+    read_mode: Option<ReadMode>,
     think: Option<Nanos>,
     presend: Option<Nanos>,
     faults: FaultPlan,
@@ -471,12 +490,14 @@ impl Deployment {
         Deployment {
             cfg,
             system: System::UbftFast,
+            custom_spawner: None,
             app: Arc::new(|| Box::new(NoopApp::new())),
             clients: ClientSpec::Default,
             requests: 100,
             pipeline: None,
             batch: None,
             slot_pipeline: None,
+            read_mode: None,
             think: None,
             presend: None,
             faults: FaultPlan::none(),
@@ -490,14 +511,28 @@ impl Deployment {
         self
     }
 
-    /// Application factory: called once per replica.
-    pub fn app(mut self, f: impl Fn() -> Box<dyn App> + 'static) -> Deployment {
+    /// Deploy a custom [`SystemSpawner`] instead of a [`System`]'s stock
+    /// wiring. The cluster then exposes no replica introspection
+    /// ([`Cluster::probe`] returns `None`) — the spawner owns its actors.
+    pub fn with_spawner(mut self, s: Box<dyn SystemSpawner>) -> Deployment {
+        self.custom_spawner = Some(s);
+        self
+    }
+
+    /// Service factory: called once per replica.
+    pub fn service(mut self, f: impl Fn() -> Box<dyn Service> + 'static) -> Deployment {
         self.app = Arc::new(f);
         self
     }
 
-    /// Application factory, pre-wrapped (see [`app_factory`]).
-    pub fn app_factory(mut self, f: AppFactory) -> Deployment {
+    /// Seed-era name for [`Deployment::service`].
+    pub fn app(mut self, f: impl Fn() -> Box<dyn Service> + 'static) -> Deployment {
+        self.app = Arc::new(f);
+        self
+    }
+
+    /// Service factory, pre-wrapped (see [`service_factory`]).
+    pub fn app_factory(mut self, f: ServiceFactory) -> Deployment {
         self.app = f;
         self
     }
@@ -546,6 +581,16 @@ impl Deployment {
         self
     }
 
+    /// How clients route `ReadOnly`-classified requests: through a
+    /// consensus slot like every write ([`ReadMode::Consensus`], the
+    /// default) or on the direct read lane ([`ReadMode::Direct`]:
+    /// answered from applied state, f+1 matching replies, zero slots
+    /// consumed). Overrides the [`Config::read_mode`] default.
+    pub fn reads(mut self, mode: ReadMode) -> Deployment {
+        self.read_mode = Some(mode);
+        self
+    }
+
     /// Client think time between requests, overriding the per-system
     /// default (MinBFT variants default to the paper's 300 µs unloaded-
     /// latency method; everything else to 0).
@@ -578,8 +623,13 @@ impl Deployment {
         &self.cfg
     }
 
-    /// Instantiate one application (used by [`SystemSpawner`]s).
-    pub fn make_app(&self) -> Box<dyn App> {
+    /// Instantiate one service (used by [`SystemSpawner`]s).
+    pub fn make_service(&self) -> Box<dyn Service> {
+        (self.app)()
+    }
+
+    /// Seed-era name for [`Deployment::make_service`].
+    pub fn make_app(&self) -> Box<dyn Service> {
         (self.app)()
     }
 
@@ -613,6 +663,10 @@ impl Deployment {
         })
     }
 
+    fn resolved_read_mode(&self) -> ReadMode {
+        self.read_mode.unwrap_or(self.cfg.read_mode)
+    }
+
     fn validate(&self) -> Result<(), DeployError> {
         self.cfg.validate().map_err(DeployError::InvalidConfig)?;
         if self.n_clients() == 0 {
@@ -623,6 +677,14 @@ impl Deployment {
         }
         if self.resolved_pipeline() == 0 {
             return Err(DeployError::ZeroPipeline);
+        }
+        // The read lane is a uBFT replica capability; a custom spawner is
+        // trusted to wire servers that speak it.
+        if self.resolved_read_mode() == ReadMode::Direct
+            && self.custom_spawner.is_none()
+            && !self.system.is_ubft()
+        {
+            return Err(DeployError::ReadLaneUnsupported(self.system.label()));
         }
         if let Some((reqs, bytes)) = self.batch {
             if reqs == 0 || bytes == 0 {
@@ -725,11 +787,16 @@ impl Deployment {
             sim.enable_trace();
         }
         sim.set_faults(self.faults.net.clone());
-        let spawner = self.system.spawner();
-        let replicas = spawner.spawn(&self, &mut sim);
-        let quorum = spawner.quorum(&self.cfg);
-        let (pipeline, think, presend) =
-            (self.resolved_pipeline(), self.resolved_think(), self.resolved_presend());
+        let custom = self.custom_spawner.is_some();
+        let spawner =
+            self.custom_spawner.take().unwrap_or_else(|| self.system.spawner());
+        let (replicas, quorum) = (spawner.spawn(&self, &mut sim), spawner.quorum(&self.cfg));
+        let (pipeline, think, presend, read_mode) = (
+            self.resolved_pipeline(),
+            self.resolved_think(),
+            self.resolved_presend(),
+            self.resolved_read_mode(),
+        );
         let (requests, system, cfg) = (self.requests, self.system, self.cfg.clone());
         let byz = self.faults.byz_replicas();
         let mut clients = Vec::new();
@@ -739,6 +806,7 @@ impl Deployment {
                 .with_quorum(quorum)
                 .with_max_requests(requests)
                 .with_pipeline(pipeline)
+                .with_read_mode(read_mode)
                 .with_think(think)
                 .with_presend_charge(presend);
             let (samples, done, stats) =
@@ -746,7 +814,7 @@ impl Deployment {
             let id = sim.add_actor(Box::new(client));
             clients.push(ClientHandle { id, samples, done, stats });
         }
-        Ok(Cluster { sim, cfg, system, replicas, byz, clients })
+        Ok(Cluster { sim, cfg, system, custom, replicas, byz, clients })
     }
 
     /// Validate and instantiate the deployment on OS threads with real
@@ -763,11 +831,17 @@ impl Deployment {
         self.apply_perf_knobs();
         let mut cluster = RealCluster::new(self.cfg.m, self.cfg.seed);
         let n_replicas = self.system.server_actors(&self.cfg);
-        let spawner = self.system.spawner();
-        let replicas = spawner.spawn(&self, &mut cluster);
-        let quorum = spawner.quorum(&self.cfg);
-        let (pipeline, think, presend) =
-            (self.resolved_pipeline(), self.resolved_think(), self.resolved_presend());
+        let custom = self.custom_spawner.is_some();
+        let spawner =
+            self.custom_spawner.take().unwrap_or_else(|| self.system.spawner());
+        let (replicas, quorum) =
+            (spawner.spawn(&self, &mut cluster), spawner.quorum(&self.cfg));
+        let (pipeline, think, presend, read_mode) = (
+            self.resolved_pipeline(),
+            self.resolved_think(),
+            self.resolved_presend(),
+            self.resolved_read_mode(),
+        );
         let (requests, system) = (self.requests, self.system);
         let mut clients = Vec::new();
         for workload in Deployment::take_workloads(self.clients) {
@@ -776,6 +850,7 @@ impl Deployment {
                 .with_quorum(quorum)
                 .with_max_requests(requests)
                 .with_pipeline(pipeline)
+                .with_read_mode(read_mode)
                 .with_think(think)
                 .with_presend_charge(presend);
             let (samples, done, stats) =
@@ -783,7 +858,7 @@ impl Deployment {
             let id = cluster.add_actor(Box::new(client));
             clients.push(ClientHandle { id, samples, done, stats });
         }
-        Ok(RealHandle { cluster, system, n_replicas, clients, started: false })
+        Ok(RealHandle { cluster, system, custom, n_replicas, clients, started: false })
     }
 }
 
@@ -847,6 +922,9 @@ pub struct Cluster {
     sim: Sim,
     cfg: Config,
     system: System,
+    /// Deployed through a custom [`SystemSpawner`]: server actors are not
+    /// guaranteed to be uBFT [`Replica`]s, so introspection is disabled.
+    custom: bool,
     replicas: Vec<NodeId>,
     byz: Vec<NodeId>,
     clients: Vec<ClientHandle>,
@@ -947,9 +1025,9 @@ impl Cluster {
     }
 
     /// Borrow a (correct, uBFT) replica for introspection. `None` for
-    /// baselines and for Byzantine-replaced slots.
+    /// baselines, custom-spawned systems, and Byzantine-replaced slots.
     pub fn replica(&mut self, i: NodeId) -> Option<&Replica> {
-        if !self.system.is_ubft() || i >= self.cfg.n || self.byz.contains(&i) {
+        if self.custom || !self.system.is_ubft() || i >= self.cfg.n || self.byz.contains(&i) {
             return None;
         }
         let actor = self.sim.actor_mut(i);
@@ -966,7 +1044,7 @@ impl Cluster {
             disagg_bytes: r.disagg_bytes(),
             view: r.view(),
             applied_upto: r.applied_upto(),
-            app_digest: r.app().digest(),
+            app_digest: r.service().digest(),
         })
     }
 
@@ -1009,6 +1087,7 @@ impl Cluster {
 pub struct RealHandle {
     cluster: RealCluster,
     system: System,
+    custom: bool,
     n_replicas: usize,
     clients: Vec<ClientHandle>,
     started: bool,
@@ -1069,6 +1148,7 @@ impl RealHandle {
         StoppedCluster {
             actors: self.cluster.stop(),
             system: self.system,
+            custom: self.custom,
             n_replicas: self.n_replicas,
         }
     }
@@ -1079,13 +1159,14 @@ impl RealHandle {
 pub struct StoppedCluster {
     actors: Vec<Box<dyn crate::env::Actor>>,
     system: System,
+    custom: bool,
     n_replicas: usize,
 }
 
 impl StoppedCluster {
     /// Borrow a uBFT replica back for introspection.
     pub fn replica(&self, i: NodeId) -> Option<&Replica> {
-        if !self.system.is_ubft() || i >= self.n_replicas {
+        if self.custom || !self.system.is_ubft() || i >= self.n_replicas {
             return None;
         }
         let actor = self.actors.get(i)?;
@@ -1095,7 +1176,7 @@ impl StoppedCluster {
     /// `(applied_upto, app_digest)` for every uBFT replica.
     pub fn digests(&self) -> Vec<(u64, Hash32)> {
         (0..self.n_replicas)
-            .filter_map(|i| self.replica(i).map(|r| (r.applied_upto(), r.app().digest())))
+            .filter_map(|i| self.replica(i).map(|r| (r.applied_upto(), r.service().digest())))
             .collect()
     }
 
@@ -1173,6 +1254,26 @@ mod tests {
                 .err().unwrap(),
             DeployError::BadProbability { .. }
         ));
+    }
+
+    #[test]
+    fn read_lane_validates_against_baselines() {
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .system(System::Mu)
+                .reads(ReadMode::Direct)
+                .build()
+                .err()
+                .unwrap(),
+            DeployError::ReadLaneUnsupported(_)
+        ));
+        // uBFT systems accept it; Consensus mode is fine anywhere.
+        assert!(Deployment::new(Config::default()).reads(ReadMode::Direct).build().is_ok());
+        assert!(Deployment::new(Config::default())
+            .system(System::Mu)
+            .reads(ReadMode::Consensus)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -6,15 +6,19 @@
 //! emulated USIG (§7.4): each broadcast binds the message to the enclave
 //! counter at the sender and is verified inside the enclave at each
 //! receiver, with the paper's measured enclave-crossing latency.
+//!
+//! The raw broadcast actors are wired through the [`Deployment`] builder
+//! via a custom [`Fig10Spawner`] (the PR-1 follow-up): the builder owns
+//! simulator construction and run control, the spawner owns the actors.
 
 use super::{print_table, samples_per_point, us};
 use crate::baselines::usig::Usig;
 use crate::config::Config;
 use crate::crypto::KeyStore;
 use crate::ctbcast::{CtbEndpoint, CtbOut};
+use crate::deploy::{ActorSink, Deployment, SystemSpawner};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::{Category, Samples};
-use crate::sim::Sim;
 use crate::{NodeId, Nanos, MICRO};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -177,50 +181,96 @@ impl Actor for SgxNode {
     }
 }
 
+/// Custom [`SystemSpawner`] wiring the raw broadcast actors (node 0 is
+/// the sender; the rest receive) into any [`Deployment`]-built cluster.
+/// Returns no RPC-addressable replicas: the sender drives itself on a
+/// timer, so the builder's placeholder client idles from the start.
+pub struct Fig10Spawner {
+    pub mech: Mechanism,
+    pub size: usize,
+    pub count: usize,
+    pub interval: Nanos,
+    sent: Sent,
+    samples: Arc<Mutex<Samples>>,
+}
+
+impl Fig10Spawner {
+    pub fn new(mech: Mechanism, size: usize, count: usize) -> Fig10Spawner {
+        let interval = match mech {
+            Mechanism::CtbFast => 60 * MICRO,
+            Mechanism::SgxCounter => 80 * MICRO,
+            Mechanism::CtbSlow => 600 * MICRO,
+        };
+        Fig10Spawner {
+            mech,
+            size,
+            count,
+            interval,
+            sent: Arc::new(Mutex::new(HashMap::new())),
+            samples: Arc::new(Mutex::new(Samples::new())),
+        }
+    }
+
+    /// Handle to the receiver-side latency samples.
+    pub fn samples_handle(&self) -> Arc<Mutex<Samples>> {
+        self.samples.clone()
+    }
+}
+
+impl SystemSpawner for Fig10Spawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let cfg = d.config();
+        match self.mech {
+            Mechanism::CtbFast | Mechanism::CtbSlow => {
+                for i in 0..cfg.n {
+                    sink.add_actor(Box::new(CtbNode {
+                        cfg: cfg.clone(),
+                        ctb: None,
+                        slow_only: self.mech == Mechanism::CtbSlow,
+                        count: if i == 0 { self.count } else { 0 },
+                        sent_n: 0,
+                        interval: self.interval,
+                        size: self.size,
+                        sent: self.sent.clone(),
+                        samples: self.samples.clone(),
+                    }));
+                }
+            }
+            Mechanism::SgxCounter => {
+                for i in 0..cfg.n {
+                    sink.add_actor(Box::new(SgxNode {
+                        usig: Usig::new(i, [3u8; 32]),
+                        peers: (0..cfg.n).collect(),
+                        count: if i == 0 { self.count } else { 0 },
+                        sent_n: 0,
+                        interval: self.interval,
+                        size: self.size,
+                        hash_cost: cfg.lat.hash_cost(self.size),
+                        sent: self.sent.clone(),
+                        samples: self.samples.clone(),
+                    }));
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    fn quorum(&self, _cfg: &Config) -> usize {
+        1
+    }
+}
+
 pub fn run_point(mech: Mechanism, size: usize, count: usize) -> Samples {
     let mut cfg = Config::default();
     cfg.max_req = size + 1024;
-    let sent: Sent = Arc::new(Mutex::new(HashMap::new()));
-    let samples = Arc::new(Mutex::new(Samples::new()));
-    let mut sim = Sim::new(cfg.clone());
-    let interval = match mech {
-        Mechanism::CtbFast => 60 * MICRO,
-        Mechanism::SgxCounter => 80 * MICRO,
-        Mechanism::CtbSlow => 600 * MICRO,
-    };
-    match mech {
-        Mechanism::CtbFast | Mechanism::CtbSlow => {
-            for i in 0..cfg.n {
-                sim.add_actor(Box::new(CtbNode {
-                    cfg: cfg.clone(),
-                    ctb: None,
-                    slow_only: mech == Mechanism::CtbSlow,
-                    count: if i == 0 { count } else { 0 },
-                    sent_n: 0,
-                    interval,
-                    size,
-                    sent: sent.clone(),
-                    samples: samples.clone(),
-                }));
-            }
-        }
-        Mechanism::SgxCounter => {
-            for i in 0..cfg.n {
-                sim.add_actor(Box::new(SgxNode {
-                    usig: Usig::new(i, [3u8; 32]),
-                    peers: (0..cfg.n).collect(),
-                    count: if i == 0 { count } else { 0 },
-                    sent_n: 0,
-                    interval,
-                    size,
-                    hash_cost: cfg.lat.hash_cost(size),
-                    sent: sent.clone(),
-                    samples: samples.clone(),
-                }));
-            }
-        }
-    }
-    sim.run_until(interval * (count as u64 + 50) + crate::SECOND / 10);
+    let spawner = Fig10Spawner::new(mech, size, count);
+    let interval = spawner.interval;
+    let samples = spawner.samples_handle();
+    let mut cluster = Deployment::new(cfg)
+        .with_spawner(Box::new(spawner))
+        .build()
+        .expect("fig10 deployment is valid");
+    cluster.run_until(interval * (count as u64 + 50) + crate::SECOND / 10);
     let s = samples.lock().unwrap().clone();
     s
 }

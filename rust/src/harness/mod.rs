@@ -24,12 +24,51 @@ use crate::Nanos;
 
 // The harness's system/factory vocabulary now lives in `crate::deploy`;
 // re-exported here so `harness::System` keeps working.
-pub use crate::deploy::{app_factory, AppFactory, System};
+pub use crate::deploy::{app_factory, service_factory, AppFactory, ServiceFactory, System};
 
 /// Number of measurements per data point. The paper takes ≥ 10 000;
 /// override with `UBFT_SAMPLES` for quick runs.
 pub fn samples_per_point(default: usize) -> usize {
     std::env::var("UBFT_SAMPLES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Machine-readable sweep results, mirroring `benches/hotpath.rs`'s
+/// `BENCH_hotpath.json` so every harness sweep leaves a perf trajectory:
+/// `{"schema":"<schema>","results":[{"name":..,"value":..,"unit":..},..]}`.
+pub struct BenchJson {
+    schema: &'static str,
+    rows: Vec<(String, f64, &'static str)>,
+}
+
+impl BenchJson {
+    pub fn new(schema: &'static str) -> BenchJson {
+        BenchJson { schema, rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, value: f64, unit: &'static str) {
+        self.rows.push((name.into(), value, unit));
+    }
+
+    /// Write to `default_path` (override with the `env_key` environment
+    /// variable). Hand-rolled JSON — serde is unavailable offline; names
+    /// are ASCII identifiers so no escaping is needed.
+    pub fn write(&self, default_path: &str, env_key: &str) {
+        let path = std::env::var(env_key).unwrap_or_else(|_| default_path.to_string());
+        let mut out = format!("{{\"schema\":\"{}\",\"results\":[", self.schema);
+        for (i, (name, value, unit)) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{name}\",\"value\":{value:.3},\"unit\":\"{unit}\"}}"
+            ));
+        }
+        out.push_str("]}\n");
+        match std::fs::write(&path, out) {
+            Ok(()) => println!("\n[results written to {path}]"),
+            Err(e) => eprintln!("\n[could not write {path}: {e}]"),
+        }
+    }
 }
 
 /// One latency run: deploy `system` with the app/workload through the

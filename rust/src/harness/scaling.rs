@@ -1,19 +1,33 @@
-//! Multi-client scaling sweep (ROADMAP follow-up): deploy N ≫ 4
-//! concurrent clients against one uBFT cluster via
-//! [`Deployment::clients`] and report aggregate throughput and p50
-//! latency vs N — with batching off (the seed's per-request slots) and
-//! on (adaptive batches amortizing the per-slot broadcast cost). This
-//! doubles as the macro-benchmark for the batching hot path: leader-side
-//! batch occupancy grows with client concurrency, and with it the gap
-//! between the two columns.
+//! Multi-client scaling sweeps (ROADMAP follow-ups):
+//!
+//! * **Client sweep** — N ≫ 4 concurrent clients against one uBFT
+//!   cluster via [`Deployment::clients`], batched vs unbatched: leader
+//!   batch occupancy grows with concurrency and with it the gap between
+//!   the columns.
+//! * **Read-mix sweep** — the typed `Service` read lane: a KV workload at
+//!   varying GET ratios, routed all-through-consensus
+//!   ([`ReadMode::Consensus`]) vs with reads on the direct lane
+//!   ([`ReadMode::Direct`]). Writes take the identical slot path in both
+//!   modes, so the gap isolates what classification buys on
+//!   read-dominated stores (§7's memcached/Redis regime).
+//!
+//! Both sweeps also emit machine-readable `BENCH_scaling.json`
+//! (override the path with `UBFT_BENCH_SCALING_JSON`) so the perf
+//! trajectory is diffable across PRs.
 
-use super::{print_table, samples_per_point};
+use super::{print_table, samples_per_point, BenchJson};
+use crate::apps::kv::KvWorkload;
+use crate::apps::KvApp;
 use crate::config::Config;
 use crate::deploy::Deployment;
 use crate::rpc::BytesWorkload;
+use crate::smr::ReadMode;
 
 /// Batch request cap used for the "batched" column.
 pub const BATCH: usize = 32;
+
+/// Clients used for the read-mix sweep.
+pub const READ_CLIENTS: usize = 8;
 
 pub struct Point {
     pub clients: usize,
@@ -52,8 +66,89 @@ pub fn run_point(clients: usize, requests_per_client: usize) -> Point {
     }
 }
 
+/// One read-mix run: `READ_CLIENTS` KV clients at `get_ratio` GETs,
+/// identical batch/pipeline config in both modes. Returns
+/// `(kops, p50 µs, reads completed on the lane)`.
+pub fn run_read_point(
+    requests_per_client: usize,
+    get_ratio: f64,
+    mode: ReadMode,
+) -> (f64, f64, u64) {
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .clients(READ_CLIENTS, move |_i| {
+            Box::new(KvWorkload { keys: 256, get_ratio, hit_ratio: 0.8 })
+        })
+        .requests(requests_per_client)
+        .batch(BATCH, 64 * 1024)
+        .slot_pipeline(2)
+        .reads(mode)
+        .build()
+        .expect("read-mix deployment is valid");
+    assert!(
+        cluster.run_to_completion(),
+        "read-mix run starved (ratio {get_ratio}, {mode:?})"
+    );
+    let finished = cluster.done_at().expect("all clients finish");
+    let total = (READ_CLIENTS * requests_per_client) as f64;
+    let mut s = cluster.samples();
+    let reads: u64 = cluster.clients().iter().map(|c| c.stats().reads).sum();
+    assert!(cluster.converged(), "replicas diverged under the read mix");
+    (
+        total / (finished as f64 / 1e9) / 1e3,
+        s.median() as f64 / 1000.0,
+        reads,
+    )
+}
+
+pub struct ReadMixPoint {
+    pub read_pct: u32,
+    /// (kops, p50 µs) with every request through consensus.
+    pub consensus: (f64, f64),
+    /// Same config, reads on the direct lane.
+    pub direct: (f64, f64),
+    /// Requests that completed on the lane in Direct mode.
+    pub reads: u64,
+}
+
+pub fn run_read_mix(read_pct: u32, requests_per_client: usize) -> ReadMixPoint {
+    let ratio = read_pct as f64 / 100.0;
+    let c = run_read_point(requests_per_client, ratio, ReadMode::Consensus);
+    let d = run_read_point(requests_per_client, ratio, ReadMode::Direct);
+    ReadMixPoint {
+        read_pct,
+        consensus: (c.0, c.1),
+        direct: (d.0, d.1),
+        reads: d.2,
+    }
+}
+
+/// CI smoke: one read-mix point (e.g. 90% reads), printed and asserted
+/// to complete — `ubft scaling --reads 90`.
+pub fn read_smoke(read_pct: u32, samples: usize) {
+    let per_client = (samples_per_point(samples) / READ_CLIENTS).clamp(50, 2_000);
+    let p = run_read_mix(read_pct, per_client);
+    println!(
+        "read-mix smoke @{}% reads: consensus {:.1} kops (p50 {:.2} µs) vs direct {:.1} kops \
+         (p50 {:.2} µs) — {:.2}x, {} lane reads",
+        p.read_pct,
+        p.consensus.0,
+        p.consensus.1,
+        p.direct.0,
+        p.direct.1,
+        p.direct.0 / p.consensus.0,
+        p.reads
+    );
+    if read_pct > 0 {
+        assert!(p.reads > 0, "direct mode never used the read lane");
+    }
+}
+
 pub fn main_run(samples: usize) {
     let budget = samples_per_point(samples);
+    let mut json = BenchJson::new("ubft-scaling-v1");
+
+    // ---- client sweep (batched vs unbatched) -------------------------
     let sweep = [1usize, 2, 4, 8, 16, 32];
     let points: Vec<Point> = sweep
         .iter()
@@ -94,4 +189,66 @@ pub fn main_run(samples: usize) {
         last.batched.0 / last.unbatched.0,
         last.batched.2
     );
+    for p in &points {
+        json.push(format!("clients={}/batch=1/kops", p.clients), p.unbatched.0, "kops");
+        json.push(format!("clients={}/batch=1/p50", p.clients), p.unbatched.1, "us");
+        json.push(format!("clients={}/batch={BATCH}/kops", p.clients), p.batched.0, "kops");
+        json.push(format!("clients={}/batch={BATCH}/p50", p.clients), p.batched.1, "us");
+        json.push(
+            format!("clients={}/batch={BATCH}/occupancy", p.clients),
+            p.batched.2,
+            "reqs_per_slot",
+        );
+    }
+
+    // ---- read-mix sweep (consensus vs direct read lane) --------------
+    let per_client = (budget / READ_CLIENTS).clamp(50, 2_000);
+    let mixes = [0u32, 50, 90, 99];
+    let rpoints: Vec<ReadMixPoint> =
+        mixes.iter().map(|&pct| run_read_mix(pct, per_client)).collect();
+    let header: Vec<String> = [
+        "reads %",
+        "kops (consensus)",
+        "p50 µs",
+        "kops (direct)",
+        "p50 µs",
+        "gain",
+        "lane reads",
+    ]
+    .map(String::from)
+    .to_vec();
+    let rows: Vec<Vec<String>> = rpoints
+        .iter()
+        .map(|p| {
+            vec![
+                p.read_pct.to_string(),
+                format!("{:.1}", p.consensus.0),
+                format!("{:.2}", p.consensus.1),
+                format!("{:.1}", p.direct.0),
+                format!("{:.2}", p.direct.1),
+                format!("{:.2}x", p.direct.0 / p.consensus.0),
+                p.reads.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Read mix — KV store, all-through-consensus vs direct read lane (8 clients)",
+        &header,
+        &rows,
+    );
+    let ninety = rpoints.iter().find(|p| p.read_pct == 90).unwrap();
+    println!(
+        "\nread-lane gain at 90% reads: {:.2}x ({:.1} vs {:.1} kops)",
+        ninety.direct.0 / ninety.consensus.0,
+        ninety.direct.0,
+        ninety.consensus.0
+    );
+    for p in &rpoints {
+        json.push(format!("reads={}/consensus/kops", p.read_pct), p.consensus.0, "kops");
+        json.push(format!("reads={}/consensus/p50", p.read_pct), p.consensus.1, "us");
+        json.push(format!("reads={}/direct/kops", p.read_pct), p.direct.0, "kops");
+        json.push(format!("reads={}/direct/p50", p.read_pct), p.direct.1, "us");
+    }
+
+    json.write("BENCH_scaling.json", "UBFT_BENCH_SCALING_JSON");
 }

@@ -13,7 +13,7 @@
 //! adaptive close policy proposes immediately when the queue is empty,
 //! so an uncontended deployment never waits for a batch to fill.
 
-use super::{print_table, samples_per_point};
+use super::{print_table, samples_per_point, BenchJson};
 use crate::config::Config;
 use crate::deploy::Deployment;
 use crate::rpc::BytesWorkload;
@@ -93,6 +93,16 @@ pub fn main_run(samples: usize) {
         &header,
         &rows,
     );
+    // Machine-readable trajectory (BENCH_throughput.json, override with
+    // UBFT_BENCH_THROUGHPUT_JSON).
+    let mut json = BenchJson::new("ubft-throughput-v1");
+    for p in &points {
+        let key = format!("batch={}/inflight={}/slots={}", p.batch, p.pipeline, p.slots);
+        json.push(format!("{key}/kops"), p.kops, "kops");
+        json.push(format!("{key}/p50"), p.p50_us, "us");
+        json.push(format!("{key}/occupancy"), p.occupancy, "reqs_per_slot");
+    }
+    json.write("BENCH_throughput.json", "UBFT_BENCH_THROUGHPUT_JSON");
     let by = |b: usize, pl: usize, sl: usize| {
         points
             .iter()

@@ -20,7 +20,10 @@ EVALUATION (discrete-event simulator, paper §7):
   fig11       tail latency vs CTBcast tail t
   table2      replica + disaggregated memory usage
   throughput  §9 throughput: batch size × pipeline depth
-  scaling     throughput vs concurrent clients (batched vs unbatched)
+              (emits BENCH_throughput.json)
+  scaling     throughput vs concurrent clients + KV read-mix sweep
+              (consensus vs direct read lane; emits BENCH_scaling.json)
+              [--reads PCT]  run only the read-mix smoke at PCT% reads
   all         everything above
 
 REAL MODE:
@@ -54,7 +57,18 @@ fn main() {
         "fig11" => harness::fig11::main_run(samples),
         "table2" => harness::table2::main_run(samples),
         "throughput" => harness::throughput::main_run(samples),
-        "scaling" => harness::scaling::main_run(samples),
+        "scaling" => match args.get_u64("reads", u64::MAX) {
+            Ok(u64::MAX) => harness::scaling::main_run(samples),
+            Ok(pct) if pct <= 100 => harness::scaling::read_smoke(pct as u32, samples),
+            Ok(pct) => {
+                eprintln!("error: --reads {pct} outside 0..=100");
+                std::process::exit(2);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        },
         "all" => {
             harness::fig7::main_run(samples);
             harness::fig8::main_run(samples);

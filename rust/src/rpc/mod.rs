@@ -6,11 +6,20 @@
 //! default — one outstanding request, like the paper's latency runs — with
 //! a configurable number of interleaved requests for the throughput
 //! experiment (§9).
+//!
+//! Requests are *typed* ([`Operation`]): with
+//! [`ReadMode::Direct`], a [`Workload`]'s `ReadOnly`-classified requests
+//! take the non-slot read lane (`ReadRequest` → f+1 matching
+//! `ReadReply`s from applied state) while writes keep the full
+//! Consistent-Tail-Broadcast path. Replicas answer decided slots with one
+//! aggregated `Responses` frame per client per slot; the client unpacks
+//! the per-rid replies and applies the same quorum rule per request.
 
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
 use crate::crypto::{hash, Hash32};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Samples;
+use crate::smr::{Operation, ReadMode};
 use crate::{NodeId, Nanos};
 use std::collections::{BTreeSet, HashMap};
 use std::sync::{Arc, Mutex};
@@ -21,6 +30,13 @@ pub trait Workload: Send {
     /// Optional response check; return false to flag a mismatch.
     fn check_response(&mut self, _req: &[u8], _resp: &[u8]) -> bool {
         true
+    }
+    /// Classify a generated request ([`Operation::ReadOnly`] requests may
+    /// take the read lane under [`ReadMode::Direct`]). Must agree with the
+    /// service's own classification — replicas re-classify and route
+    /// misdeclared reads back through consensus. Default: all writes.
+    fn classify(&self, _req: &[u8]) -> Operation {
+        Operation::ReadWrite
     }
     fn name(&self) -> &'static str;
 }
@@ -46,8 +62,23 @@ const TOKEN_RETRY: u64 = 2;
 struct Outstanding {
     rid: u64,
     payload: Vec<u8>,
+    /// Sent on the read lane (completes on f+1 matching `ReadReply`s).
+    read: bool,
     sent_at: Nanos,
     responses: HashMap<Hash32, BTreeSet<NodeId>>,
+}
+
+impl Outstanding {
+    /// The frame (re)sent to every replica for this request.
+    fn frame(&self, client: u64) -> Vec<u8> {
+        let req = Request { client, rid: self.rid, payload: self.payload.clone() };
+        let msg = if self.read {
+            DirectMsg::ReadRequest(req)
+        } else {
+            DirectMsg::Request(req)
+        };
+        direct_frame(&msg)
+    }
 }
 
 /// Shared completion/validation counters, readable while the client runs
@@ -58,6 +89,8 @@ pub struct ClientStats {
     pub completed: u64,
     /// Responses the workload's `check_response` rejected.
     pub mismatches: u64,
+    /// Requests completed on the direct read lane (subset of `completed`).
+    pub reads: u64,
 }
 
 /// Closed-loop client issuing `max_requests` then idling.
@@ -83,6 +116,8 @@ pub struct Client {
     /// Number of requests kept in flight (1 = closed loop; 2 reproduces
     /// the §9 slot-interleaving throughput doubling).
     pipeline: usize,
+    /// How `ReadOnly`-classified requests are routed.
+    read_mode: ReadMode,
     /// Processing charged before each send (e.g. MinBFT-vanilla clients
     /// sign requests with public-key crypto).
     presend_charge: Nanos,
@@ -107,6 +142,7 @@ impl Client {
             workload,
             max_requests: 100,
             pipeline: 1,
+            read_mode: ReadMode::Consensus,
             presend_charge: 0,
             think: 0,
             retry_every: 5 * crate::MILLI,
@@ -149,6 +185,13 @@ impl Client {
     /// Keep `k` requests in flight (throughput experiment).
     pub fn with_pipeline(mut self, k: usize) -> Client {
         self.pipeline = k.max(1);
+        self
+    }
+
+    /// Route `ReadOnly`-classified requests on the direct read lane
+    /// (default: [`ReadMode::Consensus`], every request through a slot).
+    pub fn with_read_mode(mut self, mode: ReadMode) -> Client {
+        self.read_mode = mode;
         self
     }
 
@@ -202,22 +245,36 @@ impl Client {
                 env.charge(crate::metrics::Category::Crypto, self.presend_charge);
             }
             let payload = self.workload.next_request(env.rng());
-            let req = Request { client: env.me() as u64, rid, payload: payload.clone() };
-            let frame = direct_frame(&DirectMsg::Request(req));
-            env.mark("client_send");
+            let read = self.read_mode == ReadMode::Direct
+                && self.workload.classify(&payload) == Operation::ReadOnly;
+            let o = Outstanding {
+                rid,
+                payload,
+                read,
+                sent_at: started,
+                responses: HashMap::new(),
+            };
+            let frame = o.frame(env.me() as u64);
+            env.mark(if read { "client_read" } else { "client_send" });
             for &r in &self.replicas {
                 env.send(r, frame.clone());
             }
-            self.inflight.push(Outstanding {
-                rid,
-                payload,
-                sent_at: started,
-                responses: HashMap::new(),
-            });
+            self.inflight.push(o);
         }
     }
 
-    fn on_response(&mut self, env: &mut dyn Env, from: NodeId, rid: u64, payload: Vec<u8>) {
+    /// Fold one reply into the matching outstanding request. `via_lane`
+    /// is true when the reply arrived as a `ReadReply` (the read lane) —
+    /// replicas may legitimately re-route a misdeclared read through
+    /// consensus, and only genuine lane completions count as `reads`.
+    fn on_response(
+        &mut self,
+        env: &mut dyn Env,
+        from: NodeId,
+        rid: u64,
+        payload: Vec<u8>,
+        via_lane: bool,
+    ) {
         let quorum = self.quorum();
         let Some(pos) = self.inflight.iter().position(|o| o.rid == rid) else { return };
         let digest = hash(&payload);
@@ -233,6 +290,9 @@ impl Client {
                 if !self.workload.check_response(&o.payload, &payload) {
                     stats.mismatches += 1;
                 }
+                if o.read && via_lane {
+                    stats.reads += 1;
+                }
                 stats.completed += 1;
                 stats.completed
             };
@@ -244,6 +304,26 @@ impl Client {
                 self.fire(env);
             } else {
                 env.set_timer(self.think, TOKEN_KICK);
+            }
+        } else if self.inflight[pos].read {
+            // A read that raced concurrent writes can split the replica
+            // set across values with no f+1 agreement. Once every replica
+            // has answered without a quorum, re-poll immediately — the
+            // replicas converge within a slot, so the next round agrees.
+            let o = &mut self.inflight[pos];
+            let responders: BTreeSet<NodeId> =
+                o.responses.values().flat_map(|s| s.iter().copied()).collect();
+            // Every replica that can still answer has (n - f of them —
+            // up to f may be crashed or Byzantine-silent): waiting longer
+            // cannot produce a quorum, so re-poll now.
+            let expected = self.replicas.len().saturating_sub(quorum - 1).max(1);
+            if responders.len() >= expected {
+                o.responses.clear();
+                let frame = o.frame(env.me() as u64);
+                env.mark("read_retry");
+                for &r in &self.replicas {
+                    env.send(r, frame.clone());
+                }
             }
         }
     }
@@ -263,26 +343,32 @@ impl Actor for Client {
 
     fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
         match ev {
-            Event::Recv { from, bytes } => {
-                if let Some(DirectMsg::Response { rid, payload, .. }) = parse_direct(&bytes) {
-                    self.on_response(env, from, rid, payload);
+            Event::Recv { from, bytes } => match parse_direct(&bytes) {
+                Some(DirectMsg::Response { rid, payload, .. }) => {
+                    self.on_response(env, from, rid, payload, false);
                 }
-            }
+                Some(DirectMsg::Responses { replies, .. }) => {
+                    // One aggregated frame per slot: unpack the per-rid
+                    // replies and apply the quorum rule per request.
+                    for entry in replies {
+                        self.on_response(env, from, entry.rid, entry.payload, false);
+                    }
+                }
+                Some(DirectMsg::ReadReply { rid, payload, .. }) => {
+                    self.on_response(env, from, rid, payload, true);
+                }
+                _ => {}
+            },
             Event::Timer { token: TOKEN_KICK } => self.fire(env),
             Event::Timer { token: TOKEN_RETRY } => {
                 // Retransmit stale requests (e.g. across a view change).
                 let now = env.now();
+                let me = env.me() as u64;
                 let frames: Vec<Vec<u8>> = self
                     .inflight
                     .iter()
                     .filter(|o| now.saturating_sub(o.sent_at) > self.retry_every)
-                    .map(|o| {
-                        direct_frame(&DirectMsg::Request(Request {
-                            client: env.me() as u64,
-                            rid: o.rid,
-                            payload: o.payload.clone(),
-                        }))
-                    })
+                    .map(|o| o.frame(me))
                     .collect();
                 for frame in frames {
                     for &r in &self.replicas {
@@ -306,6 +392,9 @@ mod tests {
         let mut rng = crate::util::Rng::new(1);
         assert_eq!(w.next_request(&mut rng).len(), 32);
         assert_eq!(w.name(), "flip");
+        // Untyped byte workloads are all writes, so Direct read mode is a
+        // no-op for them.
+        assert_eq!(w.classify(b"anything"), Operation::ReadWrite);
     }
 
     #[test]

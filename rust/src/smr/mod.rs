@@ -1,29 +1,145 @@
-//! State-machine-replication glue: the [`App`] trait every replicated
-//! service implements, plus deterministic execution bookkeeping.
+//! State-machine-replication glue: the typed [`Service`] API every
+//! replicated application implements, plus deterministic execution
+//! bookkeeping.
 //!
 //! The consensus engine ([`crate::consensus::Replica`]) owns a `Box<dyn
-//! App>` and applies decided requests in slot order; checkpoints certify
-//! the app digest (§5.1). Applications live in [`crate::apps`].
+//! Service>`, applies decided request *batches* in slot order through
+//! [`Service::apply_batch`], serves [`Operation::ReadOnly`]-classified
+//! requests from applied state through [`Service::query`] (the non-slot
+//! read lane), and certifies/transfers the [`Checkpointable`] state in
+//! checkpoints (§5.1). Applications live in [`crate::apps`].
+//!
+//! # Migrating from the seed's `App` trait
+//!
+//! The untyped `App` trait (one `execute(&mut self, &[u8]) -> Vec<u8>`
+//! per request) was replaced by two traits:
+//!
+//! * [`Checkpointable`] — `digest` / `snapshot` / `restore`, now actually
+//!   consumed by the protocol: checkpoints certify the snapshot digest
+//!   and a lagging replica catches up by fetching the snapshot instead of
+//!   replaying pre-checkpoint slots.
+//! * [`Service`] — classification ([`Service::classify`]), per-request
+//!   state transitions ([`Service::execute`]), the read lane
+//!   ([`Service::query`]), and batch execution ([`Service::apply_batch`],
+//!   the protocol-facing entry point; the default loops over `execute`).
+//!
+//! Mechanical changes for implementors:
+//!
+//! | seed (`App`)                  | now (`Service`)                               |
+//! |-------------------------------|-----------------------------------------------|
+//! | `impl App for X { execute, digest, snapshot, restore, sim_cost, name }` | `impl Checkpointable for X { digest, snapshot, restore }` + `impl Service for X { execute, sim_cost, name, … }` |
+//! | `Box<dyn App>`                | `Box<dyn Service>`                            |
+//! | `deploy::AppFactory`          | unchanged alias of `deploy::ServiceFactory`   |
+//! | `Deployment::app(..)`         | unchanged (or the synonym `.service(..)`)     |
+//! | every byte in a consensus slot| `classify` routes `ReadOnly` ops around consensus (`Deployment::reads(ReadMode::Direct)`) |
+//!
+//! Read-only requests **must not** mutate observable state: executing a
+//! `ReadOnly`-classified request through `execute` (the consensus
+//! fallback path) must leave [`Checkpointable::digest`] unchanged, and
+//! `query` must answer it identically. This is what makes the read lane
+//! safe to serve from any replica's applied state.
 
+use crate::consensus::msgs::Request;
 use crate::crypto::Hash32;
 use crate::Nanos;
 
-/// A deterministic replicated application.
-pub trait App: Send {
-    /// Apply one request, returning the response sent back to the client.
-    /// Must be deterministic: all replicas execute the same sequence.
-    fn execute(&mut self, req: &[u8]) -> Vec<u8>;
+/// How a request interacts with service state (the typed operation
+/// classes of the `Service` API).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Operation {
+    /// Observes state only. Eligible for the non-slot read lane: answered
+    /// from applied state, never occupies a consensus slot.
+    ReadOnly,
+    /// May mutate state. Always ordered through Consistent Tail Broadcast.
+    ReadWrite,
+}
 
+/// How clients route [`Operation::ReadOnly`] requests
+/// ([`crate::deploy::Deployment::reads`]).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Every request goes through a consensus slot (the seed's behaviour,
+    /// and the default).
+    Consensus,
+    /// Read-only requests are sent on the direct read lane and complete on
+    /// f+1 matching replies from applied state. Writes are unaffected, so
+    /// agreement on state is untouched; a read may observe a replica a few
+    /// slots behind the freshest commit.
+    Direct,
+}
+
+/// One executed request's reply, produced by [`Service::apply_batch`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reply {
+    /// Client the originating request came from.
+    pub client: u64,
+    /// The request id the reply answers.
+    pub rid: u64,
+    /// Response payload sent back to the client.
+    pub payload: Vec<u8>,
+}
+
+/// State that checkpoints certify and state transfer moves between
+/// replicas. `digest` is the identity certified by f+1 checkpoint
+/// signatures; `snapshot`/`restore` must round-trip digest-equal
+/// (`restore(snapshot())` yields an identical digest on a fresh
+/// instance) for snapshot-driven catch-up to converge.
+pub trait Checkpointable {
     /// Digest of the current application state (certified by checkpoints).
     fn digest(&self) -> Hash32;
 
-    /// Serialize the full state (used by the state-transfer extension).
+    /// Serialize the full state (fetched by lagging replicas instead of
+    /// replaying pre-checkpoint slots).
     fn snapshot(&self) -> Vec<u8> {
         Vec::new()
     }
 
-    /// Restore from a snapshot produced by [`App::snapshot`].
+    /// Restore from a snapshot produced by [`Checkpointable::snapshot`].
     fn restore(&mut self, _snap: &[u8]) {}
+}
+
+/// A deterministic replicated service (the typed successor of the seed's
+/// `App` trait — see the [module docs](self) for the migration guide).
+pub trait Service: Checkpointable + Send {
+    /// Classify a request payload. `ReadOnly` requests are eligible for
+    /// the read lane and **must not** mutate observable state when
+    /// executed. Default: everything is a write.
+    fn classify(&self, _req: &[u8]) -> Operation {
+        Operation::ReadWrite
+    }
+
+    /// Apply one request, returning the response sent back to the client.
+    /// Must be deterministic: all replicas execute the same sequence.
+    fn execute(&mut self, req: &[u8]) -> Vec<u8>;
+
+    /// Answer a [`Operation::ReadOnly`]-classified request from current
+    /// state without mutating it (the read lane). Must agree with what
+    /// [`Service::execute`] would answer for the same request against the
+    /// same state. Only invoked for requests this service classified
+    /// `ReadOnly`, so any service that overrides [`Service::classify`]
+    /// must override `query` too — the default panics rather than let a
+    /// forgotten override serve silently-empty replies to clients.
+    fn query(&self, _req: &[u8]) -> Vec<u8> {
+        panic!(
+            "{}: classify() returned ReadOnly but query() is not implemented",
+            self.name()
+        )
+    }
+
+    /// Execute one decided slot's request batch, returning exactly one
+    /// [`Reply`] per request, in batch order. This is the protocol-facing
+    /// entry point; the default loops over [`Service::execute`]. Override
+    /// to exploit intra-batch locality (shared index lookups, vectorized
+    /// application) — replies must stay positionally aligned with `reqs`.
+    fn apply_batch(&mut self, reqs: &[Request]) -> Vec<Reply> {
+        reqs.iter()
+            .map(|r| Reply {
+                client: r.client,
+                rid: r.rid,
+                payload: self.execute(&r.payload),
+            })
+            .collect()
+    }
 
     /// Simulated execution cost charged by the DES per request (ns).
     /// Calibrated per application (Fig 7 workloads).
@@ -52,11 +168,7 @@ impl Default for NoopApp {
     }
 }
 
-impl App for NoopApp {
-    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
-        self.executed += 1;
-        req.to_vec()
-    }
+impl Checkpointable for NoopApp {
     fn digest(&self) -> Hash32 {
         crate::crypto::hash(&self.executed.to_le_bytes())
     }
@@ -67,6 +179,13 @@ impl App for NoopApp {
         if snap.len() == 8 {
             self.executed = u64::from_le_bytes(snap.try_into().unwrap());
         }
+    }
+}
+
+impl Service for NoopApp {
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        self.executed += 1;
+        req.to_vec()
     }
     fn sim_cost(&self, _req: &[u8]) -> Nanos {
         100
@@ -97,5 +216,25 @@ mod tests {
         let mut b = NoopApp::new();
         b.restore(&snap);
         assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn default_apply_batch_aligns_replies_with_requests() {
+        let mut a = NoopApp::new();
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request { client: 10 + i, rid: 100 + i, payload: vec![i as u8; 4] })
+            .collect();
+        let replies = a.apply_batch(&reqs);
+        assert_eq!(replies.len(), 3);
+        for (req, reply) in reqs.iter().zip(&replies) {
+            assert_eq!((reply.client, reply.rid), (req.client, req.rid));
+            assert_eq!(reply.payload, req.payload);
+        }
+    }
+
+    #[test]
+    fn default_classification_is_readwrite() {
+        let a = NoopApp::new();
+        assert_eq!(a.classify(b"anything"), Operation::ReadWrite);
     }
 }

@@ -7,10 +7,10 @@ use ubft::config::Config;
 use ubft::crypto::Hash32;
 use ubft::deploy::Deployment;
 use ubft::rpc::Workload;
-use ubft::smr::App;
+use ubft::smr::Service;
 
 fn run_app(
-    mk_app: impl Fn() -> Box<dyn App> + 'static,
+    mk_app: impl Fn() -> Box<dyn Service> + 'static,
     workload: Box<dyn Workload>,
     requests: usize,
 ) -> (usize, Vec<(u64, Hash32)>, u64) {

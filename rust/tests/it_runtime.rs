@@ -123,7 +123,7 @@ fn tensor_app_is_deterministic_across_instances() {
         return;
     }
     use ubft::apps::TensorApp;
-    use ubft::smr::App;
+    use ubft::smr::{Checkpointable, Service};
     let rt = Runtime::cpu().unwrap();
     let module = std::sync::Arc::new(
         rt.load(&format!("{}/mlp.hlo.txt", Runtime::artifacts_dir())).unwrap(),

@@ -1,0 +1,325 @@
+//! Typed `Service` API integration: the direct read lane (throughput and
+//! write-path neutrality), per-client response aggregation, and
+//! checkpoint-driven snapshot state transfer — plus property tests of the
+//! `Service`/`Checkpointable` contracts every app must uphold.
+
+use ubft::apps::flip::FlipWorkload;
+use ubft::apps::kv::KvWorkload;
+use ubft::apps::orderbook::OrderWorkload;
+use ubft::apps::redis_like::RedisWorkload;
+use ubft::apps::{FlipApp, KvApp, OrderBookApp, RedisApp};
+use ubft::config::Config;
+use ubft::deploy::{Deployment, FaultPlan};
+use ubft::rpc::{BytesWorkload, Workload};
+use ubft::smr::{Checkpointable, NoopApp, Operation, ReadMode, Service};
+use ubft::testing::{props, Gen};
+
+// ---------------------------------------------------------------------
+// Read lane
+// ---------------------------------------------------------------------
+
+#[test]
+fn read_lane_doubles_throughput_at_ninety_percent_reads() {
+    // The tentpole acceptance: a 90%-read KV workload at identical
+    // batch/pipeline config must gain >= 2x from the direct read lane.
+    let (c_kops, _, c_reads) =
+        ubft::harness::scaling::run_read_point(150, 0.9, ReadMode::Consensus);
+    let (d_kops, _, d_reads) =
+        ubft::harness::scaling::run_read_point(150, 0.9, ReadMode::Direct);
+    assert_eq!(c_reads, 0, "consensus mode must never use the lane");
+    assert!(d_reads > 0, "direct mode never used the lane");
+    assert!(
+        d_kops >= 2.0 * c_kops,
+        "read-lane gain {:.2}x below 2x ({d_kops:.1} vs {c_kops:.1} kops)",
+        d_kops / c_kops
+    );
+}
+
+#[test]
+fn write_only_latency_unchanged_by_read_mode() {
+    // With a 100%-write workload, Direct mode must be byte-for-byte the
+    // consensus path: same completions, matching latency distribution.
+    let run = |mode: ReadMode| {
+        let mut cluster = Deployment::new(Config::default())
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(KvWorkload { keys: 128, get_ratio: 0.0, hit_ratio: 0.0 }))
+            .requests(200)
+            .reads(mode)
+            .build()
+            .expect("valid deployment");
+        assert!(cluster.run_to_completion());
+        let reads: u64 = cluster.clients().iter().map(|c| c.stats().reads).sum();
+        let mut s = cluster.samples();
+        (s.len(), s.median(), s.percentile(99.0), reads)
+    };
+    let (c_len, c_p50, c_p99, c_reads) = run(ReadMode::Consensus);
+    let (d_len, d_p50, d_p99, d_reads) = run(ReadMode::Direct);
+    assert_eq!((c_len, c_reads), (200, 0));
+    assert_eq!((d_len, d_reads), (200, 0), "a write took the read lane");
+    let close = |a: u64, b: u64, what: &str| {
+        let diff = (a as f64 - b as f64).abs();
+        assert!(diff <= 0.02 * (a.max(b) as f64), "{what} moved: {a} vs {b} ns");
+    };
+    close(c_p50, d_p50, "write-only p50");
+    close(c_p99, d_p99, "write-only p99");
+}
+
+#[test]
+fn read_lane_returns_committed_values() {
+    // Populate the store through consensus, then read it back on the
+    // lane: a workload that SETs a known key then GETs it, validating the
+    // response. Single closed-loop client, so every GET follows its SET.
+    struct SetThenGet {
+        n: u64,
+    }
+    impl Workload for SetThenGet {
+        fn next_request(&mut self, _rng: &mut ubft::util::Rng) -> Vec<u8> {
+            self.n += 1;
+            let key = (self.n / 2).to_le_bytes();
+            if self.n % 2 == 1 {
+                ubft::apps::kv::set(&key, b"stable-value")
+            } else {
+                ubft::apps::kv::get(&key)
+            }
+        }
+        fn classify(&self, req: &[u8]) -> Operation {
+            ubft::apps::kv::classify_op(req)
+        }
+        fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
+            if req.first() == Some(&ubft::apps::kv::OP_GET) {
+                let mut expect = vec![ubft::apps::kv::ST_OK];
+                expect.extend_from_slice(b"stable-value");
+                resp == expect
+            } else {
+                resp == [ubft::apps::kv::ST_OK].as_slice()
+            }
+        }
+        fn name(&self) -> &'static str {
+            "set-then-get"
+        }
+    }
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(SetThenGet { n: 0 }))
+        .requests(120)
+        .reads(ReadMode::Direct)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion());
+    assert_eq!(cluster.completed(), 120);
+    assert_eq!(cluster.mismatches(), 0, "a lane read returned a wrong value");
+    let reads: u64 = cluster.clients().iter().map(|c| c.stats().reads).sum();
+    assert_eq!(reads, 60, "every GET should complete on the lane");
+    // Reads consumed no consensus slots: the replicas decided only the
+    // 60 writes (and served the 60 reads from applied state).
+    let r = cluster.replica(0).expect("replica 0");
+    assert_eq!(r.stats.batched_reqs, 60, "reads leaked into consensus slots");
+    assert!(r.stats.reads_served > 0);
+}
+
+// ---------------------------------------------------------------------
+// Aggregated responses
+// ---------------------------------------------------------------------
+
+#[test]
+fn one_response_frame_per_client_per_slot() {
+    // A single pipelined client with multi-request batches: every decided
+    // slot must produce exactly one Responses frame (per replica), not
+    // one frame per request.
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(FlipApp::new()))
+        .client(Box::new(FlipWorkload { size: 32 }))
+        .requests(400)
+        .pipeline(8)
+        .batch(8, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "batched run starved");
+    assert_eq!(cluster.completed(), 400);
+    assert_eq!(cluster.mismatches(), 0);
+    let leader = cluster.replica(0).expect("leader").stats.clone();
+    assert_eq!(leader.resp_replies, 400, "every request answered exactly once");
+    assert_eq!(
+        leader.resp_frames, leader.batches_proposed,
+        "expected exactly one frame per (single-client) slot"
+    );
+    assert!(
+        leader.resp_frames < leader.resp_replies,
+        "no aggregation happened: {} frames for {} replies",
+        leader.resp_frames,
+        leader.resp_replies
+    );
+    // Followers execute the same slots and aggregate identically.
+    for i in 1..3 {
+        let s = cluster.replica(i).expect("follower").stats.clone();
+        assert_eq!((s.resp_replies, s.resp_frames), (leader.resp_replies, leader.resp_frames));
+    }
+}
+
+#[test]
+fn aggregation_holds_across_concurrent_clients() {
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(FlipApp::new()))
+        .clients(4, |_i| Box::new(FlipWorkload { size: 32 }))
+        .requests(200)
+        .pipeline(4)
+        .batch(16, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "multi-client batched run starved");
+    assert_eq!(cluster.completed(), 800);
+    assert_eq!(cluster.mismatches(), 0);
+    assert!(cluster.converged());
+    let s = cluster.replica(0).expect("leader").stats.clone();
+    assert_eq!(s.resp_replies, 800);
+    // Each slot sends at most one frame per client, and at least one
+    // frame overall — aggregation must beat per-request fan-out.
+    assert!(s.resp_frames >= s.batches_proposed);
+    assert!(
+        s.resp_frames < s.resp_replies,
+        "no aggregation across {} replies ({} frames)",
+        s.resp_replies,
+        s.resp_frames
+    );
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint-driven state transfer
+// ---------------------------------------------------------------------
+
+#[test]
+fn lagging_replica_catches_up_via_snapshot_transfer() {
+    // Cut replica 2 off (from both peers and the client) long enough for
+    // the cluster to advance several checkpoints past it; after the
+    // partition heals it must converge by fetching a certified execution
+    // snapshot — not by replaying the pruned pre-checkpoint slots.
+    let mut cfg = Config::default();
+    cfg.window = 16;
+    cfg.tail = 16;
+    cfg.fastpath_timeout = 40 * ubft::MICRO;
+    let from = 50 * ubft::MICRO;
+    let heal = 4_000 * ubft::MICRO;
+    let plan = FaultPlan::none()
+        .with_partition(2, 0, from, heal)
+        .with_partition(2, 1, from, heal)
+        .with_partition(2, 3, from, heal); // node 3 = the client
+    let mut cluster = Deployment::new(cfg)
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 128, get_ratio: 0.0, hit_ratio: 0.0 }))
+        .requests(600)
+        .pipeline(4)
+        .batch(4, 64 * 1024)
+        .slot_pipeline(2)
+        .faults(plan)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "partitioned run starved");
+    assert_eq!(cluster.completed(), 600);
+    assert!(cluster.converged(), "replica 2 never converged: {:?}", cluster.digests());
+    let r2 = cluster.replica(2).expect("replica 2").stats.clone();
+    assert!(r2.snapshots_restored >= 1, "replica 2 caught up without snapshot transfer");
+    assert!(
+        r2.snapshot_slots_skipped > 0,
+        "snapshot restore replayed instead of skipping slots"
+    );
+    let served: u64 = (0..2)
+        .map(|i| cluster.replica(i).expect("peer").stats.snapshots_served)
+        .sum();
+    assert!(served >= 1, "no peer served a snapshot");
+}
+
+// ---------------------------------------------------------------------
+// Service / Checkpointable contract properties
+// ---------------------------------------------------------------------
+
+type ServiceCase = (
+    &'static str,
+    fn() -> Box<dyn Service>,
+    fn() -> Box<dyn Workload>,
+);
+
+fn all_apps() -> Vec<ServiceCase> {
+    vec![
+        ("noop", || Box::new(NoopApp::new()), || {
+            Box::new(BytesWorkload { size: 32, label: "noop" })
+        }),
+        ("flip", || Box::new(FlipApp::new()), || Box::new(FlipWorkload { size: 32 })),
+        ("kv", || Box::new(KvApp::new()), || Box::new(KvWorkload::paper())),
+        ("redis", || Box::new(RedisApp::new()), || {
+            Box::new(RedisWorkload { keys: 64 })
+        }),
+        ("orderbook", || Box::new(OrderBookApp::new()), || {
+            Box::new(OrderWorkload::paper())
+        }),
+    ]
+}
+
+#[test]
+fn prop_readonly_ops_never_move_the_digest() {
+    // For every app: requests the service classifies ReadOnly leave the
+    // digest untouched on BOTH paths (query and the consensus-fallback
+    // execute), answer identically on both, and the workload's
+    // classification agrees with the service's.
+    props(12, |g: &mut Gen| {
+        for (name, make_service, make_workload) in all_apps() {
+            let mut service = make_service();
+            let mut workload = make_workload();
+            let mut saw_read = false;
+            for _ in 0..g.range(30, 90) {
+                let req = workload.next_request(g.rng());
+                assert_eq!(
+                    workload.classify(&req),
+                    service.classify(&req),
+                    "{name}: workload/service classification disagree"
+                );
+                match service.classify(&req) {
+                    Operation::ReadOnly => {
+                        saw_read = true;
+                        let d0 = service.digest();
+                        let q1 = service.query(&req);
+                        assert_eq!(q1, service.query(&req), "{name}: query not stable");
+                        assert_eq!(service.digest(), d0, "{name}: query moved the digest");
+                        let via_exec = service.execute(&req);
+                        assert_eq!(via_exec, q1, "{name}: execute/query disagree on a read");
+                        assert_eq!(service.digest(), d0, "{name}: a read moved the digest");
+                    }
+                    Operation::ReadWrite => {
+                        service.execute(&req);
+                    }
+                }
+            }
+            if name == "kv" || name == "redis" {
+                assert!(saw_read, "{name}: workload generated no reads");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_restore_roundtrips_digest_equal() {
+    // KvApp, RedisApp and OrderBookApp: after any op sequence, a fresh
+    // instance restored from the snapshot is digest-equal AND behaves
+    // identically on the next request.
+    props(12, |g: &mut Gen| {
+        for (name, make_service, make_workload) in all_apps() {
+            if !matches!(name, "kv" | "redis" | "orderbook") {
+                continue;
+            }
+            let mut a = make_service();
+            let mut workload = make_workload();
+            for _ in 0..g.range(10, 60) {
+                let req = workload.next_request(g.rng());
+                a.execute(&req);
+            }
+            let snap = a.snapshot();
+            let mut b = make_service();
+            b.restore(&snap);
+            assert_eq!(a.digest(), b.digest(), "{name}: snapshot/restore digest drift");
+            let next = workload.next_request(g.rng());
+            assert_eq!(a.execute(&next), b.execute(&next), "{name}: post-restore divergence");
+            assert_eq!(a.digest(), b.digest(), "{name}: post-restore digest drift");
+        }
+    });
+}

@@ -121,7 +121,7 @@ fn prop_ed25519_roundtrip() {
 #[test]
 fn prop_orderbook_conserves_quantity() {
     use ubft::apps::orderbook::{order, parse_fills, OrderBookApp, Side};
-    use ubft::smr::App;
+    use ubft::smr::Service;
     props(50, |g| {
         let mut ob = OrderBookApp::new();
         let mut submitted: u64 = 0;
@@ -155,7 +155,7 @@ fn prop_orderbook_conserves_quantity() {
 #[test]
 fn prop_orderbook_never_leaves_crossed_book() {
     use ubft::apps::orderbook::{order, OrderBookApp, Side};
-    use ubft::smr::App;
+    use ubft::smr::Service;
     props(50, |g| {
         let mut ob = OrderBookApp::new();
         for id in 0..g.range(5, 80) as u64 {
