@@ -17,17 +17,16 @@ cargo test -q
 
 echo "== read-mix smoke: ubft scaling --reads 90 =="
 # Short end-to-end run of the typed-Service read lane: 90% GETs on the
-# KV store, consensus routing vs the direct read lane.
+# KV store across all three read modes (consensus / linearizable /
+# direct).
 UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --reads 90
 
 echo "== cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-echo "== cargo fmt --check (advisory) =="
-# The seed predates rustfmt enforcement; surface drift without failing
-# the gate until the tree is formatted wholesale.
-if ! cargo fmt --check; then
-  echo "WARNING: formatting drift detected (run 'cargo fmt' in rust/)."
-fi
+echo "== cargo fmt --check (blocking) =="
+# Blocking as of PR 4 (the standing ROADMAP item): drift fails the gate.
+# Fix with 'cargo fmt' in rust/.
+cargo fmt --check
 
 echo "CI gate passed."

@@ -7,6 +7,8 @@
 //! payloads to different receivers for the same CTBcast identifier —
 //! exactly what CTBcast (Alg 1) must neutralize.
 
+use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg};
+use crate::consensus::Replica;
 use crate::crypto::{hash, KeyStore};
 use crate::ctbcast::{signed_bytes, CtbMsg};
 use crate::env::{Actor, Env, Event};
@@ -96,6 +98,51 @@ impl Actor for EquivocatingBroadcaster {
     }
     fn on_event(&mut self, _env: &mut dyn Env, _ev: Event) {
         // Stays silent afterwards (drops all acks/retransmissions).
+    }
+}
+
+/// A colluding replica for the stale-read attack on the direct read
+/// lane: it participates in consensus *correctly* (wrapping a real
+/// [`Replica`], so writes keep completing and it may even be part of
+/// their response quorum), but answers every read-lane request with a
+/// fixed stale payload while claiming maximal freshness
+/// (`applied_upto = decided_upto = u64::MAX`, sailing past any naive
+/// freshness filter). Together with one correct-but-lagging replica
+/// this forms f+1 *matching* stale `ReadReply`s — exactly the quorum
+/// [`crate::smr::ReadMode::Direct`] accepts and
+/// [`crate::smr::ReadMode::Linearizable`] rejects (the lagging
+/// partner's honest `applied_upto` fails the read-index check, and the
+/// liar alone is short of a quorum).
+pub struct StaleReadReplier {
+    inner: Replica,
+    stale: Vec<u8>,
+}
+
+impl StaleReadReplier {
+    pub fn new(inner: Replica, stale: Vec<u8>) -> StaleReadReplier {
+        StaleReadReplier { inner, stale }
+    }
+}
+
+impl Actor for StaleReadReplier {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.inner.on_start(env);
+    }
+
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        if let Event::Recv { bytes, .. } = &ev {
+            if let Some(DirectMsg::ReadRequest { req, .. }) = parse_direct(bytes) {
+                let reply = DirectMsg::ReadReply {
+                    rid: req.rid,
+                    applied_upto: u64::MAX,
+                    decided_upto: u64::MAX,
+                    payload: self.stale.clone(),
+                };
+                env.send(req.client as NodeId, direct_frame(&reply));
+                return; // the honest inner replica never sees the read
+            }
+        }
+        self.inner.on_event(env, ev);
     }
 }
 

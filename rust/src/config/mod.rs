@@ -236,6 +236,7 @@ impl Config {
                     c.read_mode = match v {
                         "consensus" => ReadMode::Consensus,
                         "direct" => ReadMode::Direct,
+                        "linearizable" => ReadMode::Linearizable,
                         _ => return Err(format!("line {}: unknown read_mode {v}", lineno + 1)),
                     }
                 }
@@ -324,6 +325,10 @@ mod tests {
         assert_eq!(
             Config::parse("read_mode = consensus\n").unwrap().read_mode,
             ReadMode::Consensus
+        );
+        assert_eq!(
+            Config::parse("read_mode = linearizable\n").unwrap().read_mode,
+            ReadMode::Linearizable
         );
         assert!(Config::parse("read_mode = sometimes\n").is_err());
     }

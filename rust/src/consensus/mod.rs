@@ -11,9 +11,13 @@
 //! On top of the slot protocol, the typed `Service` API adds a non-slot
 //! *read lane* (`ReadRequest`/`ReadReply`: `ReadOnly`-classified requests
 //! answered from applied state, completing on f+1 matching replies at the
-//! client), one aggregated `Responses` frame per client per decided slot,
-//! and checkpoint-driven state transfer (certified execution snapshots
-//! fetched by lagging replicas instead of replaying pruned slots).
+//! client; every reply vouches the replica's certified decided bound, and
+//! under [`crate::smr::ReadMode::Linearizable`] reads demanding a fresher
+//! index than this replica has applied park on a wait queue drained by
+//! the apply loop), one aggregated `Responses` frame per client per
+//! decided slot, and checkpoint-driven state transfer (certified
+//! execution snapshots fetched by lagging replicas instead of replaying
+//! pruned slots).
 //!
 //! Message flow per slot (stable leader):
 //! * **fast path** (Fig 4): client → all replicas; followers Echo to the
@@ -54,6 +58,11 @@ pub const TOKEN_TICK: u64 = 0x0300_0000_0000_0000;
 const ECHO_TIMEOUT: Nanos = 30 * crate::MICRO;
 /// Tick period.
 const TICK_EVERY: Nanos = 20 * crate::MICRO;
+/// Park-queue bound for too-early reads (beyond it, reads are shed and
+/// the client's retry timer re-solicits them).
+const MAX_PARKED_READS: usize = 256;
+/// Read-lane at-most-once cache bound (entries, not bytes).
+const READ_CACHE_CAP: usize = 128;
 
 #[derive(Default)]
 struct SlotState {
@@ -91,7 +100,17 @@ pub struct ReplicaStats {
     /// Largest batch proposed.
     pub max_batch: u64,
     /// Read-lane requests answered from applied state (never a slot).
+    /// Counts actual `query` executions — retransmitted reads answered
+    /// from the read cache don't inflate it.
     pub reads_served: u64,
+    /// Read-lane requests parked because the client demanded a read
+    /// index beyond this replica's applied state (drained as
+    /// `try_apply` catches up).
+    pub reads_parked: u64,
+    /// Too-early reads dropped instead of parked: the park queue was
+    /// full, or the demanded index was beyond any bound this replica
+    /// could certify soon (a Byzantine or wildly stale client).
+    pub reads_stale_rejected: u64,
     /// Aggregated `Responses` frames sent (one per client per slot).
     pub resp_frames: u64,
     /// Individual replies carried inside those frames.
@@ -154,6 +173,21 @@ pub struct Replica {
     /// which is why it is part of the certified execution snapshot —
     /// ordered (BTreeMap) so the snapshot encoding is canonical.
     resp_cache: BTreeMap<u64, VecDeque<(u64, u64, Vec<u8>)>>,
+    /// At-most-once cache for the read lane, keyed by (client, rid):
+    /// the applied bound the answer was served at plus the payload. A
+    /// retransmitted `ReadRequest` whose answer cannot have changed
+    /// (same `applied_upto`) is re-answered from here without
+    /// re-executing `query` or re-charging `sim_cost`.
+    read_cache: HashMap<(u64, u64), (u64, Vec<u8>)>,
+    /// Insertion order of `read_cache` keys (bounded eviction).
+    read_cache_order: VecDeque<(u64, u64)>,
+    /// Read-lane requests whose freshness demand exceeds `applied_upto`,
+    /// parked per demanded index and drained by `try_apply` — the
+    /// read-index wait queue (a briefly-lagging replica answers as soon
+    /// as it catches up instead of forcing a client re-poll).
+    parked_reads: BTreeMap<u64, Vec<Request>>,
+    /// (client, rid) of every parked read (dedupes retransmissions).
+    parked_keys: HashSet<(u64, u64)>,
 
     /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
     my_prepare_k: HashMap<u64, u64>,
@@ -226,6 +260,10 @@ impl Replica {
             proposed: HashSet::new(),
             waiting_prepares: HashMap::new(),
             resp_cache: BTreeMap::new(),
+            read_cache: HashMap::new(),
+            read_cache_order: VecDeque::new(),
+            parked_reads: BTreeMap::new(),
+            parked_keys: HashSet::new(),
             my_prepare_k: HashMap::new(),
             sealing: None,
             vc_shares: HashMap::new(),
@@ -678,6 +716,8 @@ impl Replica {
         if self.pending_snapshot.map_or(false, |t| self.applied_upto >= t) {
             self.pending_snapshot = None;
         }
+        // Freshly applied slots may satisfy parked read-index demands.
+        self.drain_parked_reads(env);
     }
 
     // ------------------------------------------------------------------
@@ -688,6 +728,12 @@ impl Replica {
         // After deciding + applying the whole window, certify the next
         // checkpoint.
         if self.applied_upto < self.checkpoint.body.open_hi() {
+            return;
+        }
+        // Already certifying this boundary: don't re-serialize the full
+        // execution snapshot on every decided slot while the certificate
+        // is in flight (the stash is cleared when it is adopted).
+        if self.snapshot_stash.as_ref().map_or(false, |(upto, _)| *upto == self.applied_upto) {
             return;
         }
         let snap = self.exec_snapshot();
@@ -872,6 +918,115 @@ impl Replica {
     }
 
     // ------------------------------------------------------------------
+    // Read lane (ReadRequest/ReadReply + read-index parking)
+    // ------------------------------------------------------------------
+
+    /// Highest slot bound `b` such that every slot below `b` is decided
+    /// here: `applied_upto` plus any contiguously-decided run still
+    /// awaiting execution. This is the certified bound every `ReadReply`
+    /// vouches for the client's read index.
+    fn decided_bound(&self) -> u64 {
+        let mut b = self.applied_upto;
+        while self.decided.contains_key(&b) {
+            b += 1;
+        }
+        b
+    }
+
+    /// Serve a read-lane request, honouring the client's freshness
+    /// demand: a read demanding an index beyond `applied_upto` parks
+    /// until execution catches up, and a retransmitted read whose
+    /// answer cannot have changed is re-answered from the at-most-once
+    /// read cache without re-executing `query` (so client retries don't
+    /// inflate `reads_served` or sim-cost charges).
+    fn serve_read(&mut self, env: &mut dyn Env, req: Request, min_index: u64) {
+        if let Some((answered_at, payload)) = self.read_cache.get(&(req.client, req.rid)) {
+            // Same applied state as the original answer (and fresh enough
+            // for the client's demand): the reply is byte-identical, so
+            // resend it instead of re-executing. A demand beyond the
+            // cached bound falls through to the park queue below.
+            if *answered_at == self.applied_upto && *answered_at >= min_index {
+                let reply = DirectMsg::ReadReply {
+                    rid: req.rid,
+                    applied_upto: *answered_at,
+                    decided_upto: self.decided_bound(),
+                    payload: payload.clone(),
+                };
+                let client = req.client as NodeId;
+                self.send_direct(env, client, reply);
+                return;
+            }
+        }
+        if self.applied_upto < min_index {
+            self.park_read(env, req, min_index);
+            return;
+        }
+        self.answer_read(env, req);
+    }
+
+    /// Execute `query` against applied state and answer the client,
+    /// stamping both the applied bound the answer reflects and the
+    /// certified decided bound this replica vouches.
+    fn answer_read(&mut self, env: &mut dyn Env, req: Request) {
+        env.charge(Category::Other, self.service.sim_cost(&req.payload));
+        let payload = self.service.query(&req.payload);
+        self.stats.reads_served += 1;
+        env.mark("read_served");
+        let key = (req.client, req.rid);
+        if self.read_cache.insert(key, (self.applied_upto, payload.clone())).is_none() {
+            self.read_cache_order.push_back(key);
+            while self.read_cache_order.len() > READ_CACHE_CAP {
+                let old = self.read_cache_order.pop_front().unwrap();
+                self.read_cache.remove(&old);
+            }
+        }
+        let reply = DirectMsg::ReadReply {
+            rid: req.rid,
+            applied_upto: self.applied_upto,
+            decided_upto: self.decided_bound(),
+            payload,
+        };
+        let client = req.client as NodeId;
+        self.send_direct(env, client, reply);
+    }
+
+    /// Park a too-early read on the per-index wait queue (drained by
+    /// `try_apply`). Absurd freshness demands — beyond anything this
+    /// replica could certify within two windows — and queue overflow are
+    /// shed instead, counted in `reads_stale_rejected`; live clients
+    /// re-solicit on their retry timer.
+    fn park_read(&mut self, env: &mut dyn Env, req: Request, min_index: u64) {
+        let key = (req.client, req.rid);
+        if self.parked_keys.contains(&key) {
+            return; // already parked (client retransmission)
+        }
+        let horizon = self.checkpoint.body.open_hi() + self.cfg.window as u64;
+        if min_index > horizon || self.parked_keys.len() >= MAX_PARKED_READS {
+            self.stats.reads_stale_rejected += 1;
+            return;
+        }
+        self.stats.reads_parked += 1;
+        env.mark("read_parked");
+        self.parked_keys.insert(key);
+        self.parked_reads.entry(min_index).or_default().push(req);
+    }
+
+    /// Answer parked reads whose demanded index execution now covers.
+    fn drain_parked_reads(&mut self, env: &mut dyn Env) {
+        loop {
+            let Some((&idx, _)) = self.parked_reads.iter().next() else { break };
+            if idx > self.applied_upto {
+                break;
+            }
+            let reqs = self.parked_reads.remove(&idx).unwrap();
+            for req in reqs {
+                self.parked_keys.remove(&(req.client, req.rid));
+                self.answer_read(env, req);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
     // Client requests & proposing
     // ------------------------------------------------------------------
 
@@ -929,28 +1084,13 @@ impl Replica {
             }
             DirectMsg::Response { .. } | DirectMsg::Responses { .. } => { /* clients only */ }
             DirectMsg::ReadReply { .. } => { /* clients only */ }
-            DirectMsg::ReadRequest(req) => {
+            DirectMsg::ReadRequest { req, min_index } => {
                 // The replica re-classifies: only genuinely read-only
                 // requests take the non-slot lane. Anything else from a
                 // confused (or Byzantine) client falls back to consensus,
                 // so the lane can never mutate state out of order.
                 match self.service.classify(&req.payload) {
-                    Operation::ReadOnly => {
-                        env.charge(Category::Other, self.service.sim_cost(&req.payload));
-                        let payload = self.service.query(&req.payload);
-                        self.stats.reads_served += 1;
-                        env.mark("read_served");
-                        let client = req.client as NodeId;
-                        self.send_direct(
-                            env,
-                            client,
-                            DirectMsg::ReadReply {
-                                rid: req.rid,
-                                applied_upto: self.applied_upto,
-                                payload,
-                            },
-                        );
-                    }
+                    Operation::ReadOnly => self.serve_read(env, req, min_index),
                     Operation::ReadWrite => {
                         self.handle_direct(env, from, DirectMsg::Request(req));
                     }
@@ -1450,6 +1590,15 @@ impl Replica {
         // stashed + one certified per replica.
         total += self.snapshot_stash.as_ref().map_or(0, |(_, s)| s.len() as u64);
         total += self.latest_snapshot.as_ref().map_or(0, |(_, s)| s.len() as u64);
+        // Read lane: parked too-early reads (bounded by MAX_PARKED_READS)
+        // and the at-most-once read cache (bounded by READ_CACHE_CAP).
+        total += self
+            .parked_reads
+            .values()
+            .flat_map(|reqs| reqs.iter())
+            .map(|r| r.payload.len() as u64 + 48)
+            .sum::<u64>();
+        total += self.read_cache.values().map(|(_, p)| p.len() as u64 + 56).sum::<u64>();
         total
     }
 

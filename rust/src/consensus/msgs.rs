@@ -464,11 +464,19 @@ pub enum DirectMsg {
     /// the slot's batch carried.
     Responses { slot: u64, replies: Vec<RespEntry> },
     /// Client → every replica: an [`crate::smr::Operation::ReadOnly`]
-    /// request on the non-slot read lane.
-    ReadRequest(Request),
-    /// Replica → client: a read-lane answer from applied state. The client
-    /// completes the read on f+1 matching payloads.
-    ReadReply { rid: u64, applied_upto: u64, payload: Vec<u8> },
+    /// request on the non-slot read lane. `min_index` is the client's
+    /// freshness demand (the read-index protocol): a replica whose
+    /// applied state is behind it parks the read and answers once it
+    /// catches up. 0 (the [`crate::smr::ReadMode::Direct`] lane) means
+    /// "answer from whatever is applied now".
+    ReadRequest { req: Request, min_index: u64 },
+    /// Replica → client: a read-lane answer from applied state.
+    /// `applied_upto` stamps the state the answer was served from;
+    /// `decided_upto` vouches the replica's certified decided bound —
+    /// the client's read index is the highest bound f+1 replicas vouch,
+    /// and under [`crate::smr::ReadMode::Linearizable`] only replies
+    /// with `applied_upto ≥ index` count toward the f+1 matching quorum.
+    ReadReply { rid: u64, applied_upto: u64, decided_upto: u64, payload: Vec<u8> },
     /// Lagging replica → peers: fetch the execution snapshot of the
     /// checkpoint at `upto` (or any newer certified one).
     SnapshotRequest { upto: u64 },
@@ -521,14 +529,16 @@ impl Wire for DirectMsg {
                 w.u64(*slot);
                 put_list(w, replies);
             }
-            DirectMsg::ReadRequest(rq) => {
+            DirectMsg::ReadRequest { req, min_index } => {
                 w.u8(7);
-                rq.put(w);
+                req.put(w);
+                w.u64(*min_index);
             }
-            DirectMsg::ReadReply { rid, applied_upto, payload } => {
+            DirectMsg::ReadReply { rid, applied_upto, decided_upto, payload } => {
                 w.u8(8);
                 w.u64(*rid);
                 w.u64(*applied_upto);
+                w.u64(*decided_upto);
                 w.bytes(payload);
             }
             DirectMsg::SnapshotRequest { upto } => {
@@ -559,10 +569,11 @@ impl Wire for DirectMsg {
                 share: Sig::get(r)?,
             },
             6 => DirectMsg::Responses { slot: r.u64()?, replies: get_list(r)? },
-            7 => DirectMsg::ReadRequest(Request::get(r)?),
+            7 => DirectMsg::ReadRequest { req: Request::get(r)?, min_index: r.u64()? },
             8 => DirectMsg::ReadReply {
                 rid: r.u64()?,
                 applied_upto: r.u64()?,
+                decided_upto: r.u64()?,
                 payload: r.bytes()?,
             },
             9 => DirectMsg::SnapshotRequest { upto: r.u64()? },
@@ -660,8 +671,14 @@ mod tests {
                     RespEntry { rid: 6, payload: Vec::new() },
                 ],
             },
-            DirectMsg::ReadRequest(req()),
-            DirectMsg::ReadReply { rid: 8, applied_upto: 40, payload: b"v".to_vec() },
+            DirectMsg::ReadRequest { req: req(), min_index: 0 },
+            DirectMsg::ReadRequest { req: req(), min_index: 77 },
+            DirectMsg::ReadReply {
+                rid: 8,
+                applied_upto: 40,
+                decided_upto: 41,
+                payload: b"v".to_vec(),
+            },
             DirectMsg::SnapshotRequest { upto: 256 },
             DirectMsg::SnapshotReply {
                 cp: CheckpointCert::genesis(100, Hash32::ZERO),

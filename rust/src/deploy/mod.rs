@@ -42,7 +42,7 @@
 //! Real-thread deployments (OS threads, real Ed25519 — the `examples/`)
 //! use the same description via [`Deployment::build_real`].
 
-use crate::byz::{EquivocatingBroadcaster, GarbageRegisterWriter};
+use crate::byz::{EquivocatingBroadcaster, GarbageRegisterWriter, StaleReadReplier};
 use crate::config::Config;
 use crate::consensus::Replica;
 use crate::crypto::{Hash32, KeyStore};
@@ -166,6 +166,11 @@ pub(crate) enum ByzSpec {
     /// Replace the replica with a process that writes garbage checksums
     /// into its disaggregated-memory registers.
     GarbageRegisters { replica: NodeId, reg: u32 },
+    /// Replace the replica with a consensus-correct colluder that
+    /// answers every read-lane request with `payload` and a claimed
+    /// `applied_upto` of `u64::MAX` (the stale-read attack;
+    /// [`crate::byz::StaleReadReplier`]).
+    StaleReads { replica: NodeId, payload: Vec<u8> },
 }
 
 impl ByzSpec {
@@ -173,6 +178,7 @@ impl ByzSpec {
         match self {
             ByzSpec::Equivocate { replica, .. } => *replica,
             ByzSpec::GarbageRegisters { replica, .. } => *replica,
+            ByzSpec::StaleReads { replica, .. } => *replica,
         }
     }
 }
@@ -221,6 +227,18 @@ impl FaultPlan {
     pub fn garbage_registers(replica: NodeId, reg: u32) -> FaultPlan {
         let mut p = FaultPlan::none();
         p.byz.push(ByzSpec::GarbageRegisters { replica, reg });
+        p
+    }
+
+    /// Replace `replica` with a stale-read colluder: it runs consensus
+    /// correctly (writes keep completing) but answers every read-lane
+    /// request with `payload`, claiming maximal freshness. Paired with a
+    /// lagging correct replica this reproduces the stale-read attack the
+    /// read-index protocol ([`crate::smr::ReadMode::Linearizable`])
+    /// defends against.
+    pub fn stale_reads(replica: NodeId, payload: Vec<u8>) -> FaultPlan {
+        let mut p = FaultPlan::none();
+        p.byz.push(ByzSpec::StaleReads { replica, payload });
         p
     }
 
@@ -321,8 +339,9 @@ pub enum DeployError {
     BadProbability { what: &'static str, p: f64 },
     /// The requested feature is unavailable in real-thread mode.
     RealModeUnsupported(&'static str),
-    /// `ReadMode::Direct` on a system whose servers don't speak the read
-    /// lane (the baselines answer `Request` frames only).
+    /// A non-consensus read mode (`Direct` / `Linearizable`) on a system
+    /// whose servers don't speak the read lane (the baselines answer
+    /// `Request` frames only).
     ReadLaneUnsupported(&'static str),
 }
 
@@ -361,7 +380,7 @@ impl std::fmt::Display for DeployError {
                 write!(f, "real-thread mode does not support {what}")
             }
             DeployError::ReadLaneUnsupported(sys) => {
-                write!(f, "ReadMode::Direct requires a uBFT system, got {sys}")
+                write!(f, "non-consensus read modes require a uBFT system, got {sys}")
             }
         }
     }
@@ -435,6 +454,12 @@ impl SystemSpawner for UbftSpawner {
                         reg: *reg,
                         mem_nodes: cfg.m,
                     }));
+                }
+                Some(ByzSpec::StaleReads { payload, .. }) => {
+                    sink.add_actor(Box::new(StaleReadReplier::new(
+                        Replica::new(i, cfg.clone(), d.make_service()),
+                        payload.clone(),
+                    )));
                 }
             }
         }
@@ -583,9 +608,12 @@ impl Deployment {
 
     /// How clients route `ReadOnly`-classified requests: through a
     /// consensus slot like every write ([`ReadMode::Consensus`], the
-    /// default) or on the direct read lane ([`ReadMode::Direct`]:
-    /// answered from applied state, f+1 matching replies, zero slots
-    /// consumed). Overrides the [`Config::read_mode`] default.
+    /// default), on the direct read lane ([`ReadMode::Direct`]: answered
+    /// from applied state, f+1 matching replies, zero slots consumed,
+    /// eventually consistent), or on the lane with the read-index
+    /// freshness protocol ([`ReadMode::Linearizable`]: same quorum rule
+    /// plus a certified freshness bar, still zero slots). Overrides the
+    /// [`Config::read_mode`] default.
     pub fn reads(mut self, mode: ReadMode) -> Deployment {
         self.read_mode = Some(mode);
         self
@@ -679,8 +707,9 @@ impl Deployment {
             return Err(DeployError::ZeroPipeline);
         }
         // The read lane is a uBFT replica capability; a custom spawner is
-        // trusted to wire servers that speak it.
-        if self.resolved_read_mode() == ReadMode::Direct
+        // trusted to wire servers that speak it. Baselines keep rejecting
+        // every non-consensus mode (Direct and Linearizable alike).
+        if self.resolved_read_mode() != ReadMode::Consensus
             && self.custom_spawner.is_none()
             && !self.system.is_ubft()
         {
@@ -1258,17 +1287,21 @@ mod tests {
 
     #[test]
     fn read_lane_validates_against_baselines() {
-        assert!(matches!(
-            Deployment::new(Config::default())
-                .system(System::Mu)
-                .reads(ReadMode::Direct)
-                .build()
-                .err()
-                .unwrap(),
-            DeployError::ReadLaneUnsupported(_)
-        ));
-        // uBFT systems accept it; Consensus mode is fine anywhere.
-        assert!(Deployment::new(Config::default()).reads(ReadMode::Direct).build().is_ok());
+        // Baselines reject every non-consensus read mode.
+        for mode in [ReadMode::Direct, ReadMode::Linearizable] {
+            assert!(matches!(
+                Deployment::new(Config::default())
+                    .system(System::Mu)
+                    .reads(mode)
+                    .build()
+                    .err()
+                    .unwrap(),
+                DeployError::ReadLaneUnsupported(_)
+            ));
+            // uBFT systems accept the lane modes.
+            assert!(Deployment::new(Config::default()).reads(mode).build().is_ok());
+        }
+        // Consensus mode is fine anywhere.
         assert!(Deployment::new(Config::default())
             .system(System::Mu)
             .reads(ReadMode::Consensus)

@@ -6,10 +6,12 @@
 //!   the columns.
 //! * **Read-mix sweep** — the typed `Service` read lane: a KV workload at
 //!   varying GET ratios, routed all-through-consensus
-//!   ([`ReadMode::Consensus`]) vs with reads on the direct lane
-//!   ([`ReadMode::Direct`]). Writes take the identical slot path in both
-//!   modes, so the gap isolates what classification buys on
-//!   read-dominated stores (§7's memcached/Redis regime).
+//!   ([`ReadMode::Consensus`]), on the lane with the read-index freshness
+//!   protocol ([`ReadMode::Linearizable`]), and on the plain
+//!   eventually-consistent lane ([`ReadMode::Direct`]). Writes take the
+//!   identical slot path in all three modes, so the gaps isolate what
+//!   classification buys on read-dominated stores (§7's memcached/Redis
+//!   regime) and what the linearizability guarantee costs on top.
 //!
 //! Both sweeps also emit machine-readable `BENCH_scaling.json`
 //! (override the path with `UBFT_BENCH_SCALING_JSON`) so the perf
@@ -67,7 +69,7 @@ pub fn run_point(clients: usize, requests_per_client: usize) -> Point {
 }
 
 /// One read-mix run: `READ_CLIENTS` KV clients at `get_ratio` GETs,
-/// identical batch/pipeline config in both modes. Returns
+/// identical batch/pipeline config in every mode. Returns
 /// `(kops, p50 µs, reads completed on the lane)`.
 pub fn run_read_point(
     requests_per_client: usize,
@@ -105,8 +107,12 @@ pub struct ReadMixPoint {
     pub read_pct: u32,
     /// (kops, p50 µs) with every request through consensus.
     pub consensus: (f64, f64),
-    /// Same config, reads on the direct lane.
+    /// Same config, reads on the lane with the read-index protocol.
+    pub linearizable: (f64, f64),
+    /// Same config, reads on the eventually-consistent direct lane.
     pub direct: (f64, f64),
+    /// Requests that completed on the lane in Linearizable mode.
+    pub lin_reads: u64,
     /// Requests that completed on the lane in Direct mode.
     pub reads: u64,
 }
@@ -114,26 +120,34 @@ pub struct ReadMixPoint {
 pub fn run_read_mix(read_pct: u32, requests_per_client: usize) -> ReadMixPoint {
     let ratio = read_pct as f64 / 100.0;
     let c = run_read_point(requests_per_client, ratio, ReadMode::Consensus);
+    let l = run_read_point(requests_per_client, ratio, ReadMode::Linearizable);
     let d = run_read_point(requests_per_client, ratio, ReadMode::Direct);
     ReadMixPoint {
         read_pct,
         consensus: (c.0, c.1),
+        linearizable: (l.0, l.1),
         direct: (d.0, d.1),
+        lin_reads: l.2,
         reads: d.2,
     }
 }
 
-/// CI smoke: one read-mix point (e.g. 90% reads), printed and asserted
-/// to complete — `ubft scaling --reads 90`.
+/// CI smoke: one read-mix point (e.g. 90% reads) across all three read
+/// modes, printed and asserted to complete — `ubft scaling --reads 90`.
 pub fn read_smoke(read_pct: u32, samples: usize) {
     let per_client = (samples_per_point(samples) / READ_CLIENTS).clamp(50, 2_000);
     let p = run_read_mix(read_pct, per_client);
     println!(
-        "read-mix smoke @{}% reads: consensus {:.1} kops (p50 {:.2} µs) vs direct {:.1} kops \
-         (p50 {:.2} µs) — {:.2}x, {} lane reads",
+        "read-mix smoke @{}% reads: consensus {:.1} kops (p50 {:.2} µs) vs linearizable \
+         {:.1} kops (p50 {:.2} µs, {:.2}x, {} lane reads) vs direct {:.1} kops \
+         (p50 {:.2} µs, {:.2}x, {} lane reads)",
         p.read_pct,
         p.consensus.0,
         p.consensus.1,
+        p.linearizable.0,
+        p.linearizable.1,
+        p.linearizable.0 / p.consensus.0,
+        p.lin_reads,
         p.direct.0,
         p.direct.1,
         p.direct.0 / p.consensus.0,
@@ -141,6 +155,7 @@ pub fn read_smoke(read_pct: u32, samples: usize) {
     );
     if read_pct > 0 {
         assert!(p.reads > 0, "direct mode never used the read lane");
+        assert!(p.lin_reads > 0, "linearizable mode never used the read lane");
     }
 }
 
@@ -201,7 +216,7 @@ pub fn main_run(samples: usize) {
         );
     }
 
-    // ---- read-mix sweep (consensus vs direct read lane) --------------
+    // ---- read-mix sweep (consensus vs linearizable vs direct) --------
     let per_client = (budget / READ_CLIENTS).clamp(50, 2_000);
     let mixes = [0u32, 50, 90, 99];
     let rpoints: Vec<ReadMixPoint> =
@@ -210,10 +225,13 @@ pub fn main_run(samples: usize) {
         "reads %",
         "kops (consensus)",
         "p50 µs",
+        "kops (linearizable)",
+        "p50 µs",
+        "gain",
         "kops (direct)",
         "p50 µs",
         "gain",
-        "lane reads",
+        "lane reads (lin/dir)",
     ]
     .map(String::from)
     .to_vec();
@@ -224,28 +242,44 @@ pub fn main_run(samples: usize) {
                 p.read_pct.to_string(),
                 format!("{:.1}", p.consensus.0),
                 format!("{:.2}", p.consensus.1),
+                format!("{:.1}", p.linearizable.0),
+                format!("{:.2}", p.linearizable.1),
+                format!("{:.2}x", p.linearizable.0 / p.consensus.0),
                 format!("{:.1}", p.direct.0),
                 format!("{:.2}", p.direct.1),
                 format!("{:.2}x", p.direct.0 / p.consensus.0),
-                p.reads.to_string(),
+                format!("{}/{}", p.lin_reads, p.reads),
             ]
         })
         .collect();
     print_table(
-        "Read mix — KV store, all-through-consensus vs direct read lane (8 clients)",
+        "Read mix — KV store: consensus vs linearizable vs direct read lane (8 clients)",
         &header,
         &rows,
     );
     let ninety = rpoints.iter().find(|p| p.read_pct == 90).unwrap();
     println!(
-        "\nread-lane gain at 90% reads: {:.2}x ({:.1} vs {:.1} kops)",
+        "\nread-lane gain at 90% reads: linearizable {:.2}x, direct {:.2}x \
+         ({:.1} / {:.1} vs {:.1} kops)",
+        ninety.linearizable.0 / ninety.consensus.0,
         ninety.direct.0 / ninety.consensus.0,
+        ninety.linearizable.0,
         ninety.direct.0,
         ninety.consensus.0
     );
     for p in &rpoints {
         json.push(format!("reads={}/consensus/kops", p.read_pct), p.consensus.0, "kops");
         json.push(format!("reads={}/consensus/p50", p.read_pct), p.consensus.1, "us");
+        json.push(
+            format!("reads={}/linearizable/kops", p.read_pct),
+            p.linearizable.0,
+            "kops",
+        );
+        json.push(
+            format!("reads={}/linearizable/p50", p.read_pct),
+            p.linearizable.1,
+            "us",
+        );
         json.push(format!("reads={}/direct/kops", p.read_pct), p.direct.0, "kops");
         json.push(format!("reads={}/direct/p50", p.read_pct), p.direct.1, "us");
     }

@@ -22,7 +22,8 @@ EVALUATION (discrete-event simulator, paper §7):
   throughput  §9 throughput: batch size × pipeline depth
               (emits BENCH_throughput.json)
   scaling     throughput vs concurrent clients + KV read-mix sweep
-              (consensus vs direct read lane; emits BENCH_scaling.json)
+              (consensus vs linearizable vs direct read lane;
+              emits BENCH_scaling.json)
               [--reads PCT]  run only the read-mix smoke at PCT% reads
   all         everything above
 

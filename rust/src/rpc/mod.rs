@@ -7,13 +7,32 @@
 //! a configurable number of interleaved requests for the throughput
 //! experiment (§9).
 //!
-//! Requests are *typed* ([`Operation`]): with
-//! [`ReadMode::Direct`], a [`Workload`]'s `ReadOnly`-classified requests
-//! take the non-slot read lane (`ReadRequest` → f+1 matching
+//! Requests are *typed* ([`Operation`]): with [`ReadMode::Direct`] or
+//! [`ReadMode::Linearizable`], a [`Workload`]'s `ReadOnly`-classified
+//! requests take the non-slot read lane (`ReadRequest` → f+1 matching
 //! `ReadReply`s from applied state) while writes keep the full
 //! Consistent-Tail-Broadcast path. Replicas answer decided slots with one
 //! aggregated `Responses` frame per client per slot; the client unpacks
 //! the per-rid replies and applies the same quorum rule per request.
+//!
+//! `Linearizable` adds the read-index freshness protocol on top of the
+//! lane: every `ReadReply` vouches its replica's certified decided bound,
+//! the client takes the highest bound f+1 replicas vouch (floored at the
+//! slots of its own completed writes) as the *read index*, and only
+//! replies served from `applied_upto ≥ index` count toward the matching
+//! quorum. Replicas park too-early reads and answer the moment they
+//! catch up. Guarantee, precisely: the f+1-voucher rule means liars can
+//! never *inflate* the index past a correct replica's bound (liveness),
+//! and the session floor makes every read observe the client's own
+//! completed writes even against colluders that *deflate* their vouched
+//! bounds; cross-session freshness is as strong as the f+1-vouched
+//! bound, which f colluders inside a write's response quorum can press
+//! down to the session floor — the inherent trade-off of f+1-quorum
+//! fast BFT reads (a 2f+1 read quorum or leases would close it).
+//!
+//! Lost frames are recovered by a retry timer with exponential backoff:
+//! each outstanding request is retransmitted when its *last* send (not
+//! its first) is older than `retry_every · 2^retries`.
 
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
 use crate::crypto::{hash, Hash32};
@@ -59,13 +78,54 @@ impl Workload for BytesWorkload {
 const TOKEN_KICK: u64 = 1;
 const TOKEN_RETRY: u64 = 2;
 
+/// Immediate split-read re-polls before a read falls back to the
+/// (backed-off) retry timer — bounds the re-poll churn a parked,
+/// partitioned, or garbage-spraying replica could otherwise induce.
+const READ_REPOLL_CAP: u32 = 8;
+
+/// One reply folded into an outstanding request's quorum bookkeeping.
+struct ReplyInfo {
+    /// Applied bound the reply was served from (`u64::MAX` for
+    /// consensus-lane replies: a decided slot is fresh by construction).
+    applied: u64,
+    /// Arrived as a `ReadReply` (the read lane).
+    lane: bool,
+    /// Decided slot, for consensus-lane replies (feeds the session
+    /// write bound linearizable reads must observe).
+    slot: Option<u64>,
+}
+
+/// Where a reply came from, with its freshness evidence.
+enum ReplySrc {
+    /// Decided in a consensus slot (`Response` / `Responses` frames).
+    Slot(u64),
+    /// Served from applied state on the read lane (`ReadReply`).
+    Lane { applied: u64, bound: u64 },
+}
+
 struct Outstanding {
     rid: u64,
     payload: Vec<u8>,
     /// Sent on the read lane (completes on f+1 matching `ReadReply`s).
     read: bool,
+    /// When the request was first issued — end-to-end latency is
+    /// measured from here, retransmissions notwithstanding.
     sent_at: Nanos,
-    responses: HashMap<Hash32, BTreeSet<NodeId>>,
+    /// Last (re)transmission, refreshed on every resend so the retry
+    /// timer backs off instead of re-sending on every tick.
+    last_sent: Nanos,
+    /// Retransmissions so far (the exponential-backoff exponent).
+    retries: u32,
+    /// Freshness demand the current `ReadRequest` frame carries
+    /// (`ReadMode::Linearizable`; 0 on the plain direct lane).
+    min_index: u64,
+    /// Immediate split-read re-polls issued so far.
+    repolls: u32,
+    /// Certified decided bound vouched per responding replica.
+    bounds: HashMap<NodeId, u64>,
+    /// Reply buckets by payload digest: the contributing replicas and
+    /// the freshness/lane metadata of each contribution.
+    responses: HashMap<Hash32, HashMap<NodeId, ReplyInfo>>,
 }
 
 impl Outstanding {
@@ -73,7 +133,7 @@ impl Outstanding {
     fn frame(&self, client: u64) -> Vec<u8> {
         let req = Request { client, rid: self.rid, payload: self.payload.clone() };
         let msg = if self.read {
-            DirectMsg::ReadRequest(req)
+            DirectMsg::ReadRequest { req, min_index: self.min_index }
         } else {
             DirectMsg::Request(req)
         };
@@ -89,8 +149,12 @@ pub struct ClientStats {
     pub completed: u64,
     /// Responses the workload's `check_response` rejected.
     pub mismatches: u64,
-    /// Requests completed on the direct read lane (subset of `completed`).
+    /// Requests completed on the direct read lane (subset of `completed`):
+    /// the matching quorum was formed from `ReadReply`s, not from
+    /// consensus responses a replica re-routed a misdeclared read into.
     pub reads: u64,
+    /// Retransmissions issued by the retry timer (exponential backoff).
+    pub retries: u64,
 }
 
 /// Closed-loop client issuing `max_requests` then idling.
@@ -124,6 +188,11 @@ pub struct Client {
     think: Nanos,
     retry_every: Nanos,
     next_rid: u64,
+    /// Slot bound of this session's completed writes (highest decided
+    /// slot + 1 across consensus-lane completions): the floor of every
+    /// linearizable read index, so a client always observes its own
+    /// completed writes.
+    written_upto: u64,
     inflight: Vec<Outstanding>,
     stats: Arc<Mutex<ClientStats>>,
     samples: Arc<Mutex<Samples>>,
@@ -147,6 +216,7 @@ impl Client {
             think: 0,
             retry_every: 5 * crate::MILLI,
             next_rid: 1,
+            written_upto: 0,
             inflight: Vec::new(),
             stats: Arc::new(Mutex::new(ClientStats::default())),
             samples: Arc::new(Mutex::new(Samples::new())),
@@ -188,8 +258,10 @@ impl Client {
         self
     }
 
-    /// Route `ReadOnly`-classified requests on the direct read lane
-    /// (default: [`ReadMode::Consensus`], every request through a slot).
+    /// Route `ReadOnly`-classified requests on the read lane — eventually
+    /// consistent ([`ReadMode::Direct`]) or with the read-index freshness
+    /// protocol ([`ReadMode::Linearizable`]). Default:
+    /// [`ReadMode::Consensus`], every request through a slot.
     pub fn with_read_mode(mut self, mode: ReadMode) -> Client {
         self.read_mode = mode;
         self
@@ -245,13 +317,25 @@ impl Client {
                 env.charge(crate::metrics::Category::Crypto, self.presend_charge);
             }
             let payload = self.workload.next_request(env.rng());
-            let read = self.read_mode == ReadMode::Direct
+            let read = self.read_mode != ReadMode::Consensus
                 && self.workload.classify(&payload) == Operation::ReadOnly;
             let o = Outstanding {
                 rid,
                 payload,
                 read,
                 sent_at: started,
+                last_sent: started,
+                retries: 0,
+                // Linearizable reads demand at least this session's own
+                // completed writes up front, so replicas behind them
+                // park instead of answering stale.
+                min_index: if read && self.read_mode == ReadMode::Linearizable {
+                    self.written_upto
+                } else {
+                    0
+                },
+                repolls: 0,
+                bounds: HashMap::new(),
                 responses: HashMap::new(),
             };
             let frame = o.frame(env.me() as u64);
@@ -263,25 +347,96 @@ impl Client {
         }
     }
 
-    /// Fold one reply into the matching outstanding request. `via_lane`
-    /// is true when the reply arrived as a `ReadReply` (the read lane) —
-    /// replicas may legitimately re-route a misdeclared read through
-    /// consensus, and only genuine lane completions count as `reads`.
+    /// The read index a linearizable read must observe: the highest
+    /// decided bound vouched by f+1 distinct replicas (so up to f liars
+    /// can never inflate it past a correct replica's bound), floored at
+    /// this session's own completed writes. `None` until f+1 replicas
+    /// have vouched — a linearizable read cannot complete before then.
+    fn read_index(&self, o: &Outstanding) -> Option<u64> {
+        let vouchers = self.replicas.len() / 2 + 1; // f+1 of n = 2f+1
+        if o.bounds.len() < vouchers {
+            return None;
+        }
+        let mut bounds: Vec<u64> = o.bounds.values().copied().collect();
+        bounds.sort_unstable_by(|a, b| b.cmp(a));
+        Some(bounds[vouchers - 1].max(self.written_upto))
+    }
+
+    /// Fold one reply into the matching outstanding request. Replicas
+    /// may legitimately re-route a misdeclared read through consensus,
+    /// so the lane is tracked per contributing reply and only a quorum
+    /// genuinely formed from `ReadReply`s counts as a lane completion.
     fn on_response(
         &mut self,
         env: &mut dyn Env,
         from: NodeId,
         rid: u64,
         payload: Vec<u8>,
-        via_lane: bool,
+        src: ReplySrc,
     ) {
         let quorum = self.quorum();
         let Some(pos) = self.inflight.iter().position(|o| o.rid == rid) else { return };
+        let (applied, bound, lane, slot) = match src {
+            // A decided slot is fresh by construction (totally ordered),
+            // and its existence certifies a decided bound of slot + 1.
+            ReplySrc::Slot(s) => (u64::MAX, s.saturating_add(1), false, Some(s)),
+            ReplySrc::Lane { applied, bound } => (applied, bound.max(applied), true, None),
+        };
         let digest = hash(&payload);
-        let o = &mut self.inflight[pos];
-        o.responses.entry(digest).or_default().insert(from);
-        if o.responses[&digest].len() >= quorum {
+        {
+            let o = &mut self.inflight[pos];
+            let b = o.bounds.entry(from).or_insert(0);
+            *b = (*b).max(bound);
+            o.responses
+                .entry(digest)
+                .or_default()
+                .insert(from, ReplyInfo { applied, lane, slot });
+        }
+        // The freshness bar this request must clear: writes and
+        // non-linearizable reads have none; a linearizable read cannot
+        // complete before f+1 replicas vouched a read index.
+        let linearizable =
+            self.read_mode == ReadMode::Linearizable && self.inflight[pos].read;
+        let index = if linearizable {
+            match self.read_index(&self.inflight[pos]) {
+                Some(i) => i,
+                None => return,
+            }
+        } else {
+            0
+        };
+        let (fresh, lane_fresh, slot_floor) = {
+            let bucket = &self.inflight[pos].responses[&digest];
+            let mut fresh = 0usize;
+            let mut lane_fresh = 0usize;
+            let mut slot_floor: Option<u64> = None;
+            for r in bucket.values() {
+                if r.applied < index {
+                    continue; // staler than the read index: cannot contribute
+                }
+                fresh += 1;
+                if r.lane {
+                    lane_fresh += 1;
+                }
+                if let Some(s) = r.slot {
+                    slot_floor = Some(slot_floor.map_or(s, |m| m.min(s)));
+                }
+            }
+            (fresh, lane_fresh, slot_floor)
+        };
+        if fresh >= quorum {
             let o = self.inflight.remove(pos);
+            // A completion through consensus slots advances the session
+            // write bound linearizable reads must observe. The floor is
+            // the minimum slot across the quorum: it never overshoots
+            // reality (at least one contributor is correct), which keeps
+            // reads live — a forged-high slot would park them against an
+            // unreachable index. The cost is that a Byzantine quorum
+            // member can understate it; the f+1-vouched index component
+            // still bounds how stale such a read can get.
+            if let Some(s) = slot_floor {
+                self.written_upto = self.written_upto.max(s.saturating_add(1));
+            }
             let latency = env.now().saturating_sub(o.sent_at);
             env.mark("client_done");
             self.samples.lock().unwrap().record(latency);
@@ -290,7 +445,7 @@ impl Client {
                 if !self.workload.check_response(&o.payload, &payload) {
                     stats.mismatches += 1;
                 }
-                if o.read && via_lane {
+                if o.read && lane_fresh >= quorum {
                     stats.reads += 1;
                 }
                 stats.completed += 1;
@@ -305,20 +460,41 @@ impl Client {
             } else {
                 env.set_timer(self.think, TOKEN_KICK);
             }
+        } else if linearizable && index > self.inflight[pos].min_index {
+            // The certified index outgrew the demand the replicas hold:
+            // re-ask with the new bar, so lagging replicas park and
+            // answer exactly when they catch up instead of re-serving
+            // stale state.
+            let o = &mut self.inflight[pos];
+            o.min_index = index;
+            o.last_sent = env.now();
+            let frame = o.frame(env.me() as u64);
+            env.mark("read_refresh");
+            for &r in &self.replicas {
+                env.send(r, frame.clone());
+            }
         } else if self.inflight[pos].read {
             // A read that raced concurrent writes can split the replica
             // set across values with no f+1 agreement. Once every replica
-            // has answered without a quorum, re-poll immediately — the
-            // replicas converge within a slot, so the next round agrees.
+            // that can still answer has (n - f of them — up to f may be
+            // crashed or Byzantine-silent), waiting longer cannot produce
+            // a quorum, so re-poll — the replicas converge within a slot.
+            // The immediate re-polls are capped (healthy splits resolve
+            // in one or two rounds; beyond the cap the retry timer's
+            // exponential backoff takes over), so neither a partitioned
+            // replica nor one spraying garbage payloads can induce an
+            // unbounded re-poll storm.
             let o = &mut self.inflight[pos];
+            if o.repolls >= READ_REPOLL_CAP {
+                return;
+            }
             let responders: BTreeSet<NodeId> =
-                o.responses.values().flat_map(|s| s.iter().copied()).collect();
-            // Every replica that can still answer has (n - f of them —
-            // up to f may be crashed or Byzantine-silent): waiting longer
-            // cannot produce a quorum, so re-poll now.
+                o.responses.values().flat_map(|m| m.keys().copied()).collect();
             let expected = self.replicas.len().saturating_sub(quorum - 1).max(1);
             if responders.len() >= expected {
+                o.repolls += 1;
                 o.responses.clear();
+                o.last_sent = env.now();
                 let frame = o.frame(env.me() as u64);
                 env.mark("read_retry");
                 for &r in &self.replicas {
@@ -344,32 +520,49 @@ impl Actor for Client {
     fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
         match ev {
             Event::Recv { from, bytes } => match parse_direct(&bytes) {
-                Some(DirectMsg::Response { rid, payload, .. }) => {
-                    self.on_response(env, from, rid, payload, false);
+                Some(DirectMsg::Response { rid, slot, payload }) => {
+                    self.on_response(env, from, rid, payload, ReplySrc::Slot(slot));
                 }
-                Some(DirectMsg::Responses { replies, .. }) => {
+                Some(DirectMsg::Responses { slot, replies }) => {
                     // One aggregated frame per slot: unpack the per-rid
                     // replies and apply the quorum rule per request.
                     for entry in replies {
-                        self.on_response(env, from, entry.rid, entry.payload, false);
+                        self.on_response(env, from, entry.rid, entry.payload, ReplySrc::Slot(slot));
                     }
                 }
-                Some(DirectMsg::ReadReply { rid, payload, .. }) => {
-                    self.on_response(env, from, rid, payload, true);
+                Some(DirectMsg::ReadReply { rid, applied_upto, decided_upto, payload }) => {
+                    self.on_response(
+                        env,
+                        from,
+                        rid,
+                        payload,
+                        ReplySrc::Lane { applied: applied_upto, bound: decided_upto },
+                    );
                 }
                 _ => {}
             },
             Event::Timer { token: TOKEN_KICK } => self.fire(env),
             Event::Timer { token: TOKEN_RETRY } => {
-                // Retransmit stale requests (e.g. across a view change).
+                // Retransmit stalled requests (e.g. across a view change)
+                // with exponential backoff. Each request's *last* send is
+                // what ages — the seed re-sent every outstanding request
+                // on every tick because only the first send was recorded
+                // (the retransmit-storm bug).
                 let now = env.now();
                 let me = env.me() as u64;
-                let frames: Vec<Vec<u8>> = self
-                    .inflight
-                    .iter()
-                    .filter(|o| now.saturating_sub(o.sent_at) > self.retry_every)
-                    .map(|o| o.frame(me))
-                    .collect();
+                let mut frames: Vec<Vec<u8>> = Vec::new();
+                for o in &mut self.inflight {
+                    let backoff =
+                        self.retry_every.saturating_mul(1u64 << o.retries.min(6));
+                    if now.saturating_sub(o.last_sent) >= backoff {
+                        o.last_sent = now;
+                        o.retries += 1;
+                        frames.push(o.frame(me));
+                    }
+                }
+                if !frames.is_empty() {
+                    self.stats.lock().unwrap().retries += frames.len() as u64;
+                }
                 for frame in frames {
                     for &r in &self.replicas {
                         env.send(r, frame.clone());

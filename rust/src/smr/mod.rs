@@ -56,6 +56,17 @@ pub enum Operation {
 
 /// How clients route [`Operation::ReadOnly`] requests
 /// ([`crate::deploy::Deployment::reads`]).
+///
+/// # Consistency model
+///
+/// | mode | guarantee | quorum rule | expected latency |
+/// |---|---|---|---|
+/// | [`ReadMode::Consensus`] | linearizable | request decided in a slot, f+1 matching responses | full consensus round |
+/// | [`ReadMode::Linearizable`] | linearizable | f+1 matching `ReadReply`s with `applied_upto ≥` the read index (the highest decided bound vouched by f+1 replicas, floored at the client's own completed writes) | ~1 RTT; one extra round when a replica must catch up |
+/// | [`ReadMode::Direct`] | eventually consistent | f+1 matching `ReadReply`s, no freshness check | 1 RTT |
+///
+/// `Linearizable` and `Direct` never consume consensus slots; writes take
+/// the identical Consistent-Tail-Broadcast path in all three modes.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum ReadMode {
     /// Every request goes through a consensus slot (the seed's behaviour,
@@ -64,8 +75,24 @@ pub enum ReadMode {
     /// Read-only requests are sent on the direct read lane and complete on
     /// f+1 matching replies from applied state. Writes are unaffected, so
     /// agreement on state is untouched; a read may observe a replica a few
-    /// slots behind the freshest commit.
+    /// slots behind the freshest commit — the documented
+    /// eventually-consistent fast path.
     Direct,
+    /// The read lane with the read-index freshness protocol: the
+    /// `ReadRequest` fan-out doubles as an index fetch (every `ReadReply`
+    /// vouches the replica's certified decided bound), the client computes
+    /// the read index as the highest bound f+1 replicas vouch for (never
+    /// below the slots of its own completed writes), and only completes on
+    /// f+1 matching payloads served from state at least that fresh.
+    /// Replicas park too-early reads until they apply up to the demanded
+    /// index, so a briefly-lagging replica answers as soon as it catches
+    /// up instead of forcing a client re-poll. Lagging-but-honest replicas
+    /// can never serve a stale read in this mode, and a session always
+    /// observes its own completed writes; cross-session freshness rests on
+    /// the f+1-vouched bound, which f bound-deflating colluders can press
+    /// down to the session floor (the f+1-quorum fast-read trade-off —
+    /// see the [`crate::rpc`] module docs).
+    Linearizable,
 }
 
 /// One executed request's reply, produced by [`Service::apply_batch`].

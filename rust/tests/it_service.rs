@@ -1,8 +1,12 @@
-//! Typed `Service` API integration: the direct read lane (throughput and
-//! write-path neutrality), per-client response aggregation, and
-//! checkpoint-driven snapshot state transfer — plus property tests of the
-//! `Service`/`Checkpointable` contracts every app must uphold.
+//! Typed `Service` API integration: the read lane (throughput,
+//! write-path neutrality, and the linearizable read-index freshness
+//! protocol vs the eventually-consistent direct mode), per-client
+//! response aggregation, and checkpoint-driven snapshot state transfer —
+//! plus property tests of the `Service`/`Checkpointable` contracts every
+//! app must uphold.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use ubft::apps::flip::FlipWorkload;
 use ubft::apps::kv::KvWorkload;
 use ubft::apps::orderbook::OrderWorkload;
@@ -115,6 +119,264 @@ fn read_lane_returns_committed_values() {
     let r = cluster.replica(0).expect("replica 0");
     assert_eq!(r.stats.batched_reqs, 60, "reads leaked into consensus slots");
     assert!(r.stats.reads_served > 0);
+}
+
+// ---------------------------------------------------------------------
+// Linearizable reads (the read-index freshness protocol)
+// ---------------------------------------------------------------------
+
+#[test]
+fn linearizable_reads_retain_throughput_at_ninety_percent_reads() {
+    // Acceptance: the freshness protocol must keep >= 1.5x over pure
+    // consensus at a 90% read mix (the eventually-consistent direct lane
+    // stays >= 2x, asserted above).
+    let (c_kops, _, c_reads) =
+        ubft::harness::scaling::run_read_point(150, 0.9, ReadMode::Consensus);
+    let (l_kops, _, l_reads) =
+        ubft::harness::scaling::run_read_point(150, 0.9, ReadMode::Linearizable);
+    assert_eq!(c_reads, 0, "consensus mode must never use the lane");
+    assert!(l_reads > 0, "linearizable mode never used the lane");
+    assert!(
+        l_kops >= 1.5 * c_kops,
+        "linearizable read-lane gain {:.2}x below 1.5x ({l_kops:.1} vs {c_kops:.1} kops)",
+        l_kops / c_kops
+    );
+}
+
+/// Phased workload for the stale-read regression: SET k=old, then
+/// SET k=new, then GET k, recording every GET answer.
+struct StalenessProbe {
+    n: u64,
+    got: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+/// Total writes the probe issues (first half `old`, second half `new`).
+const PROBE_WRITES: u64 = 60;
+/// Reads issued after the writes.
+const PROBE_GETS: u64 = 5;
+
+impl Workload for StalenessProbe {
+    fn next_request(&mut self, _rng: &mut ubft::util::Rng) -> Vec<u8> {
+        self.n += 1;
+        if self.n <= PROBE_WRITES {
+            let val: &[u8] = if self.n <= PROBE_WRITES / 2 { b"old" } else { b"new" };
+            ubft::apps::kv::set(b"k", val)
+        } else {
+            ubft::apps::kv::get(b"k")
+        }
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        ubft::apps::kv::classify_op(req)
+    }
+    fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
+        if req.first() == Some(&ubft::apps::kv::OP_GET) {
+            self.got.lock().unwrap().push(resp.to_vec());
+        }
+        true
+    }
+    fn name(&self) -> &'static str {
+        "staleness-probe"
+    }
+}
+
+/// The issue's attack, end to end: replica 2 is a consensus-correct
+/// colluder serving a frozen stale value with claimed max freshness;
+/// replica 1 is correct but partitioned from its peers (so it honestly
+/// lags while writes keep completing through replicas 0 and 2). The
+/// client completes all writes, then reads — returns every GET answer
+/// plus replica 1's park counter.
+fn run_staleness(mode: ReadMode) -> (Vec<Vec<u8>>, u64) {
+    let mut stale = vec![ubft::apps::kv::ST_OK];
+    stale.extend_from_slice(b"old");
+    let mut cfg = Config::default();
+    cfg.fastpath_timeout = 40 * ubft::MICRO;
+    let from = 150 * ubft::MICRO;
+    let heal = 50 * ubft::MILLI;
+    let plan = FaultPlan::stale_reads(2, stale)
+        .with_partition(1, 0, from, heal)
+        .with_partition(1, 2, from, heal);
+    let got = Arc::new(Mutex::new(Vec::new()));
+    let mut cluster = Deployment::new(cfg)
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(StalenessProbe { n: 0, got: got.clone() }))
+        .requests((PROBE_WRITES + PROBE_GETS) as usize)
+        .reads(mode)
+        .faults(plan)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "staleness run starved ({mode:?})");
+    assert_eq!(cluster.completed(), PROBE_WRITES + PROBE_GETS);
+    let parked = cluster.replica(1).expect("replica 1").stats.reads_parked;
+    let answers = got.lock().unwrap().clone();
+    (answers, parked)
+}
+
+#[test]
+fn direct_reads_can_be_stale_linearizable_reads_never() {
+    let mut stale_resp = vec![ubft::apps::kv::ST_OK];
+    stale_resp.extend_from_slice(b"old");
+    let mut fresh_resp = vec![ubft::apps::kv::ST_OK];
+    fresh_resp.extend_from_slice(b"new");
+
+    // Direct: colluder + lagging replica = f+1 matching stale replies,
+    // so the client observes the OLD value after completing the `new`
+    // writes — the stale-read hole, kept as the documented
+    // eventually-consistent fast path.
+    let (got, _) = run_staleness(ReadMode::Direct);
+    assert_eq!(got.len(), PROBE_GETS as usize);
+    assert!(
+        got.iter().any(|g| g == &stale_resp),
+        "expected the direct lane to expose the stale read: {got:?}"
+    );
+
+    // Linearizable: same cluster, same attack — the read index rejects
+    // the honest-but-stale reply, the lagging replica parks the read and
+    // answers only after catching up, and every GET observes the
+    // freshest completed write.
+    let (got, parked) = run_staleness(ReadMode::Linearizable);
+    assert_eq!(got.len(), PROBE_GETS as usize);
+    assert!(
+        got.iter().all(|g| g == &fresh_resp),
+        "a linearizable read returned stale state: {got:?}"
+    );
+    assert!(parked >= 1, "the lagging replica never parked a too-early read");
+}
+
+/// Workload that shadows its own completed SETs and flags any GET
+/// answer missing one (the linearizable session guarantee). Closed
+/// loop, so at `check_response` time the shadow map holds exactly the
+/// writes completed before the GET was issued.
+struct OwnWritesProbe {
+    keys: u64,
+    get_ratio: f64,
+    next_val: u64,
+    committed: HashMap<Vec<u8>, Vec<u8>>,
+}
+
+impl Workload for OwnWritesProbe {
+    fn next_request(&mut self, rng: &mut ubft::util::Rng) -> Vec<u8> {
+        let key = rng.below(self.keys).to_le_bytes().to_vec();
+        if rng.chance(self.get_ratio) {
+            ubft::apps::kv::get(&key)
+        } else {
+            self.next_val += 1;
+            ubft::apps::kv::set(&key, &self.next_val.to_le_bytes())
+        }
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        ubft::apps::kv::classify_op(req)
+    }
+    fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
+        let klen = req[1] as usize;
+        let key = req[2..2 + klen].to_vec();
+        match req.first() {
+            Some(&ubft::apps::kv::OP_SET) => {
+                self.committed.insert(key, req[2 + klen..].to_vec());
+                resp == [ubft::apps::kv::ST_OK].as_slice()
+            }
+            Some(&ubft::apps::kv::OP_GET) => {
+                let expect = match self.committed.get(&key) {
+                    Some(v) => {
+                        let mut e = vec![ubft::apps::kv::ST_OK];
+                        e.extend_from_slice(v);
+                        e
+                    }
+                    None => vec![ubft::apps::kv::ST_MISS],
+                };
+                resp == expect
+            }
+            _ => false,
+        }
+    }
+    fn name(&self) -> &'static str {
+        "own-writes-probe"
+    }
+}
+
+#[test]
+fn prop_linearizable_reads_observe_own_completed_writes() {
+    // Session guarantee: a linearizable read observes every write the
+    // same client completed earlier — even while a replica lags behind a
+    // randomized partition. Any stale GET answer surfaces as a mismatch.
+    props(5, |g: &mut Gen| {
+        let lag = 1 + g.range(0, 2); // replica 1 or 2 lags behind its peers
+        let peers: Vec<usize> = (0..3).filter(|&r| r != lag).collect();
+        let from = (100 + g.range(0, 400)) as u64 * ubft::MICRO;
+        let heal = from + (1 + g.range(0, 4)) as u64 * ubft::MILLI;
+        let mut cfg = Config::default();
+        cfg.fastpath_timeout = 40 * ubft::MICRO;
+        cfg.seed = 0xBADC0DE ^ g.range(0, 1 << 20) as u64;
+        let plan = FaultPlan::none()
+            .with_partition(lag, peers[0], from, heal)
+            .with_partition(lag, peers[1], from, heal);
+        let mut cluster = Deployment::new(cfg)
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(OwnWritesProbe {
+                keys: 8,
+                get_ratio: 0.4,
+                next_val: 0,
+                committed: HashMap::new(),
+            }))
+            .requests(120)
+            .reads(ReadMode::Linearizable)
+            .faults(plan)
+            .build()
+            .expect("valid deployment");
+        assert!(cluster.run_to_completion(), "linearizable property run starved");
+        assert_eq!(cluster.completed(), 120);
+        assert_eq!(cluster.mismatches(), 0, "a linearizable read missed a completed write");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Client retransmission backoff + read-lane at-most-once (satellites)
+// ---------------------------------------------------------------------
+
+#[test]
+fn retransmissions_back_off_and_are_counted() {
+    // 15% message loss: the retry timer must recover lost frames (and
+    // count them in the client stats) — each outstanding request
+    // retransmits on its own exponential schedule instead of the seed's
+    // every-tick storm.
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 32, get_ratio: 0.0, hit_ratio: 0.0 }))
+        .requests(40)
+        .faults(FaultPlan::none().with_drop_prob(0.15))
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "lossy run starved");
+    assert_eq!(cluster.completed(), 40);
+    let retries: u64 = cluster.clients().iter().map(|c| c.stats().retries).sum();
+    assert!(retries >= 1, "no retransmission was counted under 15% loss");
+}
+
+#[test]
+fn retransmitted_reads_are_answered_from_cache() {
+    // All-GET workload on an empty store: applied state never moves, so
+    // every client retransmission must be answered from the read cache.
+    // `reads_served` counts actual query executions and stays bounded by
+    // the number of distinct reads even though duplicates keep arriving.
+    let requests = 60usize;
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 16, get_ratio: 1.0, hit_ratio: 0.5 }))
+        .requests(requests)
+        .reads(ReadMode::Direct)
+        .faults(FaultPlan::none().with_drop_prob(0.15))
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "lossy read run starved");
+    assert_eq!(cluster.completed(), requests as u64);
+    let retries: u64 = cluster.clients().iter().map(|c| c.stats().retries).sum();
+    assert!(retries >= 1, "loss never forced a read retransmission");
+    for i in 0..3 {
+        let served = cluster.replica(i).expect("replica").stats.reads_served;
+        assert!(
+            served <= requests as u64,
+            "replica {i} re-executed retransmitted reads: {served} > {requests}"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------
