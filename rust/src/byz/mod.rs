@@ -105,22 +105,48 @@ impl Actor for EquivocatingBroadcaster {
 /// lane: it participates in consensus *correctly* (wrapping a real
 /// [`Replica`], so writes keep completing and it may even be part of
 /// their response quorum), but answers every read-lane request with a
-/// fixed stale payload while claiming maximal freshness
+/// fixed stale payload and forged freshness claims.
+///
+/// By default it claims *maximal* freshness
 /// (`applied_upto = decided_upto = u64::MAX`, sailing past any naive
-/// freshness filter). Together with one correct-but-lagging replica
+/// freshness filter): together with one correct-but-lagging replica
 /// this forms f+1 *matching* stale `ReadReply`s — exactly the quorum
 /// [`crate::smr::ReadMode::Direct`] accepts and
 /// [`crate::smr::ReadMode::Linearizable`] rejects (the lagging
 /// partner's honest `applied_upto` fails the read-index check, and the
 /// liar alone is short of a quorum).
+///
+/// [`StaleReadReplier::with_claims`] turns it into the *bound-deflating*
+/// colluder instead: claiming a low `applied_upto`/`decided_upto` drags
+/// the f+1-vouched read index down toward the session floor, so a
+/// fresh-session reader paired with an honest replica stuck at that
+/// level still completes a stale linearizable read — the documented
+/// f+1-quorum fast-read trade-off ([`crate::rpc`] module docs). The
+/// session floor is out of its reach: a client that completed writes
+/// demands an index the deflated claims can never satisfy.
 pub struct StaleReadReplier {
     inner: Replica,
     stale: Vec<u8>,
+    applied_claim: u64,
+    decided_claim: u64,
 }
 
 impl StaleReadReplier {
     pub fn new(inner: Replica, stale: Vec<u8>) -> StaleReadReplier {
-        StaleReadReplier { inner, stale }
+        StaleReadReplier {
+            inner,
+            stale,
+            applied_claim: u64::MAX,
+            decided_claim: u64::MAX,
+        }
+    }
+
+    /// Claim fixed `applied_upto` / `decided_upto` bounds instead of
+    /// maximal freshness (the bound-deflating colluder).
+    pub fn with_claims(mut self, applied: u64, decided: u64) -> StaleReadReplier {
+        self.applied_claim = applied;
+        self.decided_claim = decided;
+        self
     }
 }
 
@@ -134,9 +160,53 @@ impl Actor for StaleReadReplier {
             if let Some(DirectMsg::ReadRequest { req, .. }) = parse_direct(bytes) {
                 let reply = DirectMsg::ReadReply {
                     rid: req.rid,
-                    applied_upto: u64::MAX,
-                    decided_upto: u64::MAX,
+                    applied_upto: self.applied_claim,
+                    decided_upto: self.decided_claim,
                     payload: self.stale.clone(),
+                };
+                env.send(req.client as NodeId, direct_frame(&reply));
+                return; // the honest inner replica never sees the read
+            }
+        }
+        self.inner.on_event(env, ev);
+    }
+}
+
+/// A colluding replica for the forged-slot attack on the client's
+/// session write bound: it runs consensus correctly (wrapping a real
+/// [`Replica`]) but answers every read-lane request with a forged
+/// *consensus-lane* `Response { slot: huge }` carrying `payload`. If
+/// the payload matches what honest replicas serve, the forged reply
+/// lands in their digest bucket — and a client that trusted a read
+/// quorum's slots would jump its `written_upto` to the absurd slot,
+/// demanding an unreachable read index from then on and wedging every
+/// later linearizable read. The fix: only completed *writes* (whose
+/// quorum always contains an honest slot-bearing reply) advance the
+/// session write bound.
+pub struct ForgedSlotReplier {
+    inner: Replica,
+    payload: Vec<u8>,
+    slot: u64,
+}
+
+impl ForgedSlotReplier {
+    pub fn new(inner: Replica, payload: Vec<u8>, slot: u64) -> ForgedSlotReplier {
+        ForgedSlotReplier { inner, payload, slot }
+    }
+}
+
+impl Actor for ForgedSlotReplier {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        self.inner.on_start(env);
+    }
+
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        if let Event::Recv { bytes, .. } = &ev {
+            if let Some(DirectMsg::ReadRequest { req, .. }) = parse_direct(bytes) {
+                let reply = DirectMsg::Response {
+                    rid: req.rid,
+                    slot: self.slot,
+                    payload: self.payload.clone(),
                 };
                 env.send(req.client as NodeId, direct_frame(&reply));
                 return; // the honest inner replica never sees the read

@@ -186,8 +186,10 @@ pub struct Replica {
     /// read-index wait queue (a briefly-lagging replica answers as soon
     /// as it catches up instead of forcing a client re-poll).
     parked_reads: BTreeMap<u64, Vec<Request>>,
-    /// (client, rid) of every parked read (dedupes retransmissions).
-    parked_keys: HashSet<(u64, u64)>,
+    /// (client, rid) → the index each parked read waits under (dedupes
+    /// retransmissions; a retransmission carrying a *higher* demand —
+    /// the client's read_refresh path — re-parks under the new index).
+    parked_keys: HashMap<(u64, u64), u64>,
 
     /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
     my_prepare_k: HashMap<u64, u64>,
@@ -263,7 +265,7 @@ impl Replica {
             read_cache: HashMap::new(),
             read_cache_order: VecDeque::new(),
             parked_reads: BTreeMap::new(),
-            parked_keys: HashSet::new(),
+            parked_keys: HashMap::new(),
             my_prepare_k: HashMap::new(),
             sealing: None,
             vc_shares: HashMap::new(),
@@ -991,23 +993,43 @@ impl Replica {
     }
 
     /// Park a too-early read on the per-index wait queue (drained by
-    /// `try_apply`). Absurd freshness demands — beyond anything this
-    /// replica could certify within two windows — and queue overflow are
-    /// shed instead, counted in `reads_stale_rejected`; live clients
-    /// re-solicit on their retry timer.
+    /// `try_apply`). A retransmission carrying a *higher* demand than an
+    /// already-parked copy (the client's read_refresh path) re-parks the
+    /// read under the new index. Absurd freshness demands — beyond
+    /// anything this replica could certify within two windows — and
+    /// queue overflow are shed instead, counted in
+    /// `reads_stale_rejected`; live clients re-solicit on their retry
+    /// timer.
     fn park_read(&mut self, env: &mut dyn Env, req: Request, min_index: u64) {
         let key = (req.client, req.rid);
-        if self.parked_keys.contains(&key) {
-            return; // already parked (client retransmission)
-        }
+        let reparked = match self.parked_keys.get(&key).copied() {
+            // Already parked at least this fresh (plain retransmission).
+            Some(old) if old >= min_index => return,
+            // A read_refresh raised the client's demand: unpark from the
+            // old index — an answer there would be filtered out client
+            // side — and fall through to re-park under the new one.
+            Some(old) => {
+                if let Some(reqs) = self.parked_reads.get_mut(&old) {
+                    reqs.retain(|r| (r.client, r.rid) != key);
+                    if reqs.is_empty() {
+                        self.parked_reads.remove(&old);
+                    }
+                }
+                self.parked_keys.remove(&key);
+                true
+            }
+            None => false,
+        };
         let horizon = self.checkpoint.body.open_hi() + self.cfg.window as u64;
         if min_index > horizon || self.parked_keys.len() >= MAX_PARKED_READS {
             self.stats.reads_stale_rejected += 1;
             return;
         }
-        self.stats.reads_parked += 1;
+        if !reparked {
+            self.stats.reads_parked += 1;
+        }
         env.mark("read_parked");
-        self.parked_keys.insert(key);
+        self.parked_keys.insert(key, min_index);
         self.parked_reads.entry(min_index).or_default().push(req);
     }
 

@@ -42,7 +42,9 @@
 //! Real-thread deployments (OS threads, real Ed25519 — the `examples/`)
 //! use the same description via [`Deployment::build_real`].
 
-use crate::byz::{EquivocatingBroadcaster, GarbageRegisterWriter, StaleReadReplier};
+use crate::byz::{
+    EquivocatingBroadcaster, ForgedSlotReplier, GarbageRegisterWriter, StaleReadReplier,
+};
 use crate::config::Config;
 use crate::consensus::Replica;
 use crate::crypto::{Hash32, KeyStore};
@@ -167,10 +169,21 @@ pub(crate) enum ByzSpec {
     /// into its disaggregated-memory registers.
     GarbageRegisters { replica: NodeId, reg: u32 },
     /// Replace the replica with a consensus-correct colluder that
-    /// answers every read-lane request with `payload` and a claimed
-    /// `applied_upto` of `u64::MAX` (the stale-read attack;
-    /// [`crate::byz::StaleReadReplier`]).
-    StaleReads { replica: NodeId, payload: Vec<u8> },
+    /// answers every read-lane request with `payload` and the claimed
+    /// `applied_upto`/`decided_upto` bounds (the stale-read attack —
+    /// `u64::MAX` claims — or, with deflated claims, the bound-deflating
+    /// variant; [`crate::byz::StaleReadReplier`]).
+    StaleReads {
+        replica: NodeId,
+        payload: Vec<u8>,
+        applied_claim: u64,
+        decided_claim: u64,
+    },
+    /// Replace the replica with a consensus-correct colluder that
+    /// answers every read-lane request with a forged consensus-lane
+    /// `Response { slot }` carrying `payload`
+    /// ([`crate::byz::ForgedSlotReplier`]).
+    ForgedSlotReads { replica: NodeId, payload: Vec<u8>, slot: u64 },
 }
 
 impl ByzSpec {
@@ -179,6 +192,7 @@ impl ByzSpec {
             ByzSpec::Equivocate { replica, .. } => *replica,
             ByzSpec::GarbageRegisters { replica, .. } => *replica,
             ByzSpec::StaleReads { replica, .. } => *replica,
+            ByzSpec::ForgedSlotReads { replica, .. } => *replica,
         }
     }
 }
@@ -238,7 +252,42 @@ impl FaultPlan {
     /// defends against.
     pub fn stale_reads(replica: NodeId, payload: Vec<u8>) -> FaultPlan {
         let mut p = FaultPlan::none();
-        p.byz.push(ByzSpec::StaleReads { replica, payload });
+        p.byz.push(ByzSpec::StaleReads {
+            replica,
+            payload,
+            applied_claim: u64::MAX,
+            decided_claim: u64::MAX,
+        });
+        p
+    }
+
+    /// Replace `replica` with a *bound-deflating* stale-read colluder:
+    /// consensus-correct, but it answers every read-lane request with
+    /// `payload` while claiming `applied_upto = decided_upto = claim`.
+    /// Deflated claims drag the f+1-vouched read index down toward the
+    /// session floor — paired with an honest replica stuck at `claim`
+    /// this stales a fresh session's linearizable reads (the documented
+    /// f+1-quorum fast-read trade-off), while a session that completed
+    /// writes stays protected by its own floor.
+    pub fn stale_reads_deflated(replica: NodeId, payload: Vec<u8>, claim: u64) -> FaultPlan {
+        let mut p = FaultPlan::none();
+        p.byz.push(ByzSpec::StaleReads {
+            replica,
+            payload,
+            applied_claim: claim,
+            decided_claim: claim,
+        });
+        p
+    }
+
+    /// Replace `replica` with a forged-slot colluder: consensus-correct,
+    /// but it answers every read-lane request with a forged
+    /// consensus-lane `Response { slot: u64::MAX - 1 }` carrying
+    /// `payload` (the session-write-bound wedge attack;
+    /// [`crate::byz::ForgedSlotReplier`]).
+    pub fn forged_slot_reads(replica: NodeId, payload: Vec<u8>) -> FaultPlan {
+        let mut p = FaultPlan::none();
+        p.byz.push(ByzSpec::ForgedSlotReads { replica, payload, slot: u64::MAX - 1 });
         p
     }
 
@@ -455,10 +504,20 @@ impl SystemSpawner for UbftSpawner {
                         mem_nodes: cfg.m,
                     }));
                 }
-                Some(ByzSpec::StaleReads { payload, .. }) => {
-                    sink.add_actor(Box::new(StaleReadReplier::new(
+                Some(ByzSpec::StaleReads { payload, applied_claim, decided_claim, .. }) => {
+                    sink.add_actor(Box::new(
+                        StaleReadReplier::new(
+                            Replica::new(i, cfg.clone(), d.make_service()),
+                            payload.clone(),
+                        )
+                        .with_claims(*applied_claim, *decided_claim),
+                    ));
+                }
+                Some(ByzSpec::ForgedSlotReads { payload, slot, .. }) => {
+                    sink.add_actor(Box::new(ForgedSlotReplier::new(
                         Replica::new(i, cfg.clone(), d.make_service()),
                         payload.clone(),
+                        *slot,
                     )));
                 }
             }

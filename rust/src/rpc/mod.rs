@@ -90,8 +90,10 @@ struct ReplyInfo {
     applied: u64,
     /// Arrived as a `ReadReply` (the read lane).
     lane: bool,
-    /// Decided slot, for consensus-lane replies (feeds the session
-    /// write bound linearizable reads must observe).
+    /// Decided slot, for consensus-lane replies. Feeds the session write
+    /// bound linearizable reads must observe — but only when the
+    /// completed request was a write (a read's quorum need not contain
+    /// an honest slot-bearing reply, so its slots are untrusted).
     slot: Option<u64>,
 }
 
@@ -189,9 +191,9 @@ pub struct Client {
     retry_every: Nanos,
     next_rid: u64,
     /// Slot bound of this session's completed writes (highest decided
-    /// slot + 1 across consensus-lane completions): the floor of every
-    /// linearizable read index, so a client always observes its own
-    /// completed writes.
+    /// slot + 1 across completed *writes*; read completions never move
+    /// it): the floor of every linearizable read index, so a client
+    /// always observes its own completed writes.
     written_upto: u64,
     inflight: Vec<Outstanding>,
     stats: Arc<Mutex<ClientStats>>,
@@ -348,12 +350,15 @@ impl Client {
     }
 
     /// The read index a linearizable read must observe: the highest
-    /// decided bound vouched by f+1 distinct replicas (so up to f liars
-    /// can never inflate it past a correct replica's bound), floored at
-    /// this session's own completed writes. `None` until f+1 replicas
-    /// have vouched — a linearizable read cannot complete before then.
+    /// decided bound vouched by a quorum of distinct replicas (f+1 by
+    /// default, so up to f liars can never inflate it past a correct
+    /// replica's bound), floored at this session's own completed writes.
+    /// `None` until a quorum has vouched — a linearizable read cannot
+    /// complete before then. Uses the same [`Client::quorum`] as reply
+    /// matching, so a `with_quorum` override moves both thresholds
+    /// together.
     fn read_index(&self, o: &Outstanding) -> Option<u64> {
-        let vouchers = self.replicas.len() / 2 + 1; // f+1 of n = 2f+1
+        let vouchers = self.quorum();
         if o.bounds.len() < vouchers {
             return None;
         }
@@ -426,16 +431,24 @@ impl Client {
         };
         if fresh >= quorum {
             let o = self.inflight.remove(pos);
-            // A completion through consensus slots advances the session
-            // write bound linearizable reads must observe. The floor is
-            // the minimum slot across the quorum: it never overshoots
-            // reality (at least one contributor is correct), which keeps
-            // reads live — a forged-high slot would park them against an
-            // unreachable index. The cost is that a Byzantine quorum
-            // member can understate it; the f+1-vouched index component
-            // still bounds how stale such a read can get.
-            if let Some(s) = slot_floor {
-                self.written_upto = self.written_upto.max(s.saturating_add(1));
+            // Only a completed *write* advances the session write bound
+            // linearizable reads must observe, and the floor is the
+            // minimum slot across the quorum. For a write that floor
+            // never overshoots reality: every honest contributor answers
+            // a write with its decided slot, and a quorum contains at
+            // least one honest contributor, so the min is bounded by a
+            // real slot (a Byzantine member can only *understate* it; the
+            // f+1-vouched index component still bounds how stale that can
+            // get). A read-lane completion must ignore slot replies
+            // entirely: its quorum is formed from `ReadReply`s, so a
+            // single forged consensus `Response { slot: huge }` carrying
+            // the matching payload could be the only slot contributor —
+            // taking its slot would pin `written_upto` at an unreachable
+            // index and wedge every later linearizable read.
+            if !o.read {
+                if let Some(s) = slot_floor {
+                    self.written_upto = self.written_upto.max(s.saturating_add(1));
+                }
             }
             let latency = env.now().saturating_sub(o.sent_at);
             env.mark("client_done");

@@ -62,7 +62,7 @@ pub enum Operation {
 /// | mode | guarantee | quorum rule | expected latency |
 /// |---|---|---|---|
 /// | [`ReadMode::Consensus`] | linearizable | request decided in a slot, f+1 matching responses | full consensus round |
-/// | [`ReadMode::Linearizable`] | linearizable | f+1 matching `ReadReply`s with `applied_upto ≥` the read index (the highest decided bound vouched by f+1 replicas, floored at the client's own completed writes) | ~1 RTT; one extra round when a replica must catch up |
+/// | [`ReadMode::Linearizable`] | session-linearizable: read-your-writes always, cross-session freshness up to the f+1-vouched bound (f bound-deflating colluders can press that to the session floor — see the variant docs) | f+1 matching `ReadReply`s with `applied_upto ≥` the read index (the highest decided bound vouched by f+1 replicas, floored at the client's own completed writes) | ~1 RTT; one extra round when a replica must catch up |
 /// | [`ReadMode::Direct`] | eventually consistent | f+1 matching `ReadReply`s, no freshness check | 1 RTT |
 ///
 /// `Linearizable` and `Direct` never consume consensus slots; writes take

@@ -6,6 +6,7 @@
 //! app must uphold.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use ubft::apps::flip::FlipWorkload;
 use ubft::apps::kv::KvWorkload;
@@ -326,6 +327,147 @@ fn prop_linearizable_reads_observe_own_completed_writes() {
         assert_eq!(cluster.completed(), 120);
         assert_eq!(cluster.mismatches(), 0, "a linearizable read missed a completed write");
     });
+}
+
+#[test]
+fn forged_slot_reply_cannot_wedge_linearizable_reads() {
+    // Regression for the session-write-bound wedge: a single Byzantine
+    // replica answers every read-lane request with a forged
+    // consensus-lane `Response { slot: u64::MAX - 1 }` carrying the same
+    // payload the honest replicas serve (MISS on an empty store), so it
+    // lands in the honest digest bucket and completes with it. If read
+    // completions trusted slot-bearing replies, the first completed GET
+    // would jump the client's `written_upto` to the forged slot, every
+    // later linearizable read would demand an unreachable index (shed by
+    // replicas, floored at the forged value by the client), and no read
+    // would ever complete again. Only completed *writes* may advance the
+    // bound — all reads must keep completing.
+    let requests = 40usize;
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 16, get_ratio: 1.0, hit_ratio: 0.0 }))
+        .requests(requests)
+        .reads(ReadMode::Linearizable)
+        .faults(FaultPlan::forged_slot_reads(2, vec![ubft::apps::kv::ST_MISS]))
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "a forged slot reply wedged the read lane");
+    assert_eq!(cluster.completed(), requests as u64);
+    assert_eq!(cluster.mismatches(), 0);
+}
+
+/// Writer session for the bound-deflation test: every request SETs
+/// k=new, and `wrote` flips once the first SET completes — so the
+/// reader can tell which of its GETs were issued strictly after a
+/// completed cross-session write.
+struct KnownWriter {
+    wrote: Arc<AtomicBool>,
+}
+
+impl Workload for KnownWriter {
+    fn next_request(&mut self, _rng: &mut ubft::util::Rng) -> Vec<u8> {
+        ubft::apps::kv::set(b"k", b"new")
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        ubft::apps::kv::classify_op(req)
+    }
+    fn check_response(&mut self, _req: &[u8], resp: &[u8]) -> bool {
+        self.wrote.store(true, Ordering::SeqCst);
+        resp == [ubft::apps::kv::ST_OK].as_slice()
+    }
+    fn name(&self) -> &'static str {
+        "known-writer"
+    }
+}
+
+/// Fresh-session reader for the bound-deflation test: GETs k every
+/// request, recording each answer together with whether the GET was
+/// issued after the writer's first completed SET (closed loop, so the
+/// pairing is exact).
+struct FreshSessionReader {
+    wrote: Arc<AtomicBool>,
+    after_write: bool,
+    got: Arc<Mutex<Vec<(bool, Vec<u8>)>>>,
+}
+
+impl Workload for FreshSessionReader {
+    fn next_request(&mut self, _rng: &mut ubft::util::Rng) -> Vec<u8> {
+        self.after_write = self.wrote.load(Ordering::SeqCst);
+        ubft::apps::kv::get(b"k")
+    }
+    fn classify(&self, req: &[u8]) -> Operation {
+        ubft::apps::kv::classify_op(req)
+    }
+    fn check_response(&mut self, _req: &[u8], resp: &[u8]) -> bool {
+        self.got.lock().unwrap().push((self.after_write, resp.to_vec()));
+        true
+    }
+    fn name(&self) -> &'static str {
+        "fresh-session-reader"
+    }
+}
+
+#[test]
+fn bound_deflating_colluder_limits() {
+    // The documented *limit* of `ReadMode::Linearizable`, and why its
+    // guarantee is session-linearizability rather than linearizability:
+    // f colluders that DEFLATE their vouched bounds (claiming
+    // `applied_upto = decided_upto = 0`), plus one honest replica that
+    // never advanced past that level (partitioned from its peers from
+    // the start), form f+1 matching stale replies whose freshness
+    // passes the deflated read index. A fresh session with no completed
+    // writes of its own — session floor 0 — can therefore miss another
+    // session's completed write. (The session floor itself is out of
+    // the attacker's reach: the *writing* client's reads demand its
+    // `written_upto`, which the deflated claims never satisfy — the
+    // inflating-attacker test above and the own-writes property pin
+    // that side down.)
+    let mut cfg = Config::default();
+    cfg.fastpath_timeout = 40 * ubft::MICRO;
+    let plan = FaultPlan::stale_reads_deflated(2, vec![ubft::apps::kv::ST_MISS], 0)
+        .with_partition(1, 0, ubft::MICRO, ubft::SECOND)
+        .with_partition(1, 2, ubft::MICRO, ubft::SECOND);
+    let wrote = Arc::new(AtomicBool::new(false));
+    let got = Arc::new(Mutex::new(Vec::new()));
+    let (wrote_c, got_c) = (wrote.clone(), got.clone());
+    let mut cluster = Deployment::new(cfg)
+        .app(|| Box::new(KvApp::new()))
+        .clients(2, move |i| -> Box<dyn Workload> {
+            if i == 0 {
+                Box::new(KnownWriter { wrote: wrote_c.clone() })
+            } else {
+                Box::new(FreshSessionReader {
+                    wrote: wrote_c.clone(),
+                    after_write: false,
+                    got: got_c.clone(),
+                })
+            }
+        })
+        .requests(60)
+        .reads(ReadMode::Linearizable)
+        .faults(plan)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion(), "deflation run starved");
+    assert_eq!(cluster.completed(), 120);
+    assert_eq!(cluster.mismatches(), 0);
+    let answers = got.lock().unwrap().clone();
+    assert_eq!(answers.len(), 60);
+    let miss = vec![ubft::apps::kv::ST_MISS];
+    let mut fresh = vec![ubft::apps::kv::ST_OK];
+    fresh.extend_from_slice(b"new");
+    // Never garbage: every answer is the colluder-vouched stale MISS or
+    // the fresh value.
+    assert!(
+        answers.iter().all(|(_, r)| r == &miss || r == &fresh),
+        "unexpected read answer: {answers:?}"
+    );
+    // The documented hole: at least one linearizable GET issued after a
+    // completed cross-session write still answered MISS.
+    assert!(
+        answers.iter().any(|(after, r)| *after && r == &miss),
+        "expected the deflating colluder to stale a cross-session read: {answers:?}"
+    );
 }
 
 // ---------------------------------------------------------------------
