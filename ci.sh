@@ -21,6 +21,11 @@ echo "== read-mix smoke: ubft scaling --reads 90 =="
 # direct).
 UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --reads 90
 
+echo "== real-mode batching smoke: example real_batching =="
+# build_real() + .batch(..) + .slot_pipeline(..) on OS threads, printing
+# the leader's measured batch occupancy (the ROADMAP real-mode demo).
+UBFT_SAMPLES=200 cargo run --release --example real_batching
+
 echo "== cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

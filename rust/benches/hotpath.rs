@@ -215,6 +215,59 @@ fn main() {
         }
     }
 
+    // Speculative execution: the native undo-log apply vs the plain
+    // inline apply on the KV store, plus the rollback cost — what the
+    // speculation pipeline pays per batch for the right to execute ahead
+    // of decide.
+    {
+        use ubft::apps::KvApp;
+        use ubft::consensus::msgs::Request;
+        use ubft::smr::Service;
+        let mk_batch = |batch: usize| -> Vec<Request> {
+            (0..batch as u64)
+                .map(|i| Request {
+                    client: i,
+                    rid: i,
+                    payload: ubft::apps::kv::set(
+                        &i.to_le_bytes(),
+                        &[0x5Au8; 32],
+                    ),
+                })
+                .collect()
+        };
+        for batch in [8usize, 32] {
+            let reqs = mk_batch(batch);
+            let mut kv = KvApp::new();
+            rep.bench(
+                &format!("KV apply_batch inline (batch={batch})"),
+                200_000 / batch as u64,
+                || {
+                    std::hint::black_box(kv.apply_batch(&reqs));
+                },
+            );
+            let mut kv = KvApp::new();
+            rep.bench(
+                &format!("KV apply_speculative+commit (batch={batch})"),
+                200_000 / batch as u64,
+                || {
+                    let (tok, replies) = kv.apply_speculative(&reqs);
+                    std::hint::black_box(replies);
+                    kv.commit_speculation(tok);
+                },
+            );
+            let mut kv = KvApp::new();
+            rep.bench(
+                &format!("KV apply_speculative+rollback (batch={batch})"),
+                200_000 / batch as u64,
+                || {
+                    let (tok, replies) = kv.apply_speculative(&reqs);
+                    std::hint::black_box(replies);
+                    kv.rollback_speculation(tok);
+                },
+            );
+        }
+    }
+
     // DES engine throughput: events/second processed.
     {
         use ubft::env::{Actor, Env, Event};

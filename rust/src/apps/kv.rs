@@ -3,12 +3,13 @@
 //! which 80% hit. GETs are classified [`Operation::ReadOnly`] and served
 //! on the read lane under `ReadMode::Direct`.
 
+use crate::consensus::msgs::Request;
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
-use crate::smr::{Checkpointable, Operation, Service};
+use crate::smr::{Checkpointable, Operation, Reply, Service, SpecToken};
 use crate::util::Rng;
 use crate::Nanos;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Request opcodes.
 pub const OP_GET: u8 = 1;
@@ -42,14 +43,25 @@ pub fn delete(key: &[u8]) -> Vec<u8> {
     v
 }
 
+/// Undo record for one speculatively applied batch: prior value per
+/// mutated key in execution order, plus the version counter to restore.
+struct KvUndo {
+    version: u64,
+    writes: Vec<(Vec<u8>, Option<Vec<u8>>)>,
+}
+
 pub struct KvApp {
     map: BTreeMap<Vec<u8>, Vec<u8>>,
     version: u64,
+    /// Outstanding speculation frames (committed FIFO, rolled back LIFO).
+    /// Never serialized: snapshots are only taken on settled state.
+    spec: VecDeque<(u64, KvUndo)>,
+    next_spec: u64,
 }
 
 impl KvApp {
     pub fn new() -> KvApp {
-        KvApp { map: BTreeMap::new(), version: 0 }
+        KvApp { map: BTreeMap::new(), version: 0, spec: VecDeque::new(), next_spec: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -113,6 +125,9 @@ impl Checkpointable for KvApp {
         if let (Ok(version), Ok(map)) = (r.u64(), crate::util::wire::get_map(&mut r)) {
             self.version = version;
             self.map = map;
+            // A restored state is settled: outstanding undo records would
+            // reference the replaced state.
+            self.spec.clear();
         }
     }
 }
@@ -157,6 +172,59 @@ impl Service for KvApp {
                 }
             }
             _ => vec![ST_ERR],
+        }
+    }
+
+    fn apply_speculative(&mut self, reqs: &[Request]) -> (SpecToken, Vec<Reply>) {
+        let mut undo = KvUndo { version: self.version, writes: Vec::new() };
+        let replies = reqs
+            .iter()
+            .map(|r| {
+                if let Some((op, key, _)) = parse(&r.payload) {
+                    if matches!(op, OP_SET | OP_DELETE) {
+                        undo.writes.push((key.to_vec(), self.map.get(key).cloned()));
+                    }
+                }
+                Reply { client: r.client, rid: r.rid, payload: self.execute(&r.payload) }
+            })
+            .collect();
+        let id = self.next_spec;
+        self.next_spec += 1;
+        self.spec.push_back((id, undo));
+        (SpecToken::Native(id), replies)
+    }
+
+    fn commit_speculation(&mut self, token: SpecToken) {
+        if let SpecToken::Native(id) = token {
+            // FIFO contract: the committed token is always the oldest
+            // outstanding frame, so the fold is constant-time.
+            let front = self.spec.pop_front();
+            debug_assert_eq!(
+                front.map(|(fid, _)| fid),
+                Some(id),
+                "speculation committed out of FIFO order"
+            );
+        }
+    }
+
+    fn rollback_speculation(&mut self, token: SpecToken) {
+        match token {
+            SpecToken::Snapshot(snap) => self.restore(&snap),
+            SpecToken::Native(id) => {
+                let Some((fid, undo)) = self.spec.pop_back() else { return };
+                debug_assert_eq!(fid, id, "speculation rolled back out of LIFO order");
+                for (key, old) in undo.writes.into_iter().rev() {
+                    match old {
+                        Some(v) => {
+                            self.map.insert(key, v);
+                        }
+                        None => {
+                            self.map.remove(&key);
+                        }
+                    }
+                }
+                self.version = undo.version;
+            }
         }
     }
 
@@ -287,6 +355,44 @@ mod tests {
         let mut expect = vec![ST_OK];
         expect.extend_from_slice(b"1");
         assert_eq!(kv2.execute(&get(b"x")), expect);
+    }
+
+    #[test]
+    fn native_speculation_round_trips() {
+        let mk = |c: u64, payload: Vec<u8>| Request { client: c, rid: c, payload };
+        let mut kv = KvApp::new();
+        kv.execute(&set(b"a", b"old"));
+        kv.execute(&set(b"gone", b"x"));
+        let snap0 = kv.snapshot();
+        let batch = vec![
+            mk(1, set(b"a", b"new")),    // overwrite
+            mk(2, set(b"b", b"fresh")),  // insert
+            mk(3, delete(b"gone")),      // delete
+            mk(4, get(b"a")),            // read inside a write batch
+            mk(5, delete(b"absent")),    // miss still bumps the version
+        ];
+        // Reference: plain inline execution.
+        let mut reference = KvApp::new();
+        reference.restore(&snap0);
+        let ref_replies = reference.apply_batch(&batch);
+
+        let (tok, replies) = kv.apply_speculative(&batch);
+        assert_eq!(replies, ref_replies);
+        assert_eq!(kv.digest(), reference.digest());
+        kv.rollback_speculation(tok);
+        assert_eq!(kv.snapshot(), snap0, "rollback must restore bytes exactly");
+
+        // Stacked frames roll back LIFO, commit FIFO.
+        let (t1, _) = kv.apply_speculative(&[mk(10, set(b"k1", b"v1"))]);
+        let (t2, _) = kv.apply_speculative(&[mk(11, set(b"k1", b"v2"))]);
+        kv.rollback_speculation(t2);
+        kv.rollback_speculation(t1);
+        assert_eq!(kv.snapshot(), snap0);
+        let (t1, _) = kv.apply_speculative(&[mk(12, set(b"k1", b"v1"))]);
+        let (t2, _) = kv.apply_speculative(&[mk(13, delete(b"k1"))]);
+        kv.commit_speculation(t1);
+        kv.commit_speculation(t2);
+        assert_eq!(kv.execute(&get(b"k1")), vec![ST_MISS]);
     }
 
     #[test]

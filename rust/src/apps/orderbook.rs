@@ -7,13 +7,14 @@
 //! semantics (aggressive order walks the opposite side of the book,
 //! fills at resting-order prices, remainder rests).
 
+use crate::consensus::msgs::Request;
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
-use crate::smr::{Checkpointable, Service};
+use crate::smr::{Checkpointable, Reply, Service, SpecToken};
 use crate::util::wire::{WireReader, WireWriter};
 use crate::util::Rng;
 use crate::Nanos;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Order side.
 #[derive(Copy, Clone, PartialEq, Eq, Debug)]
@@ -69,6 +70,25 @@ struct Resting {
     qty: u32,
 }
 
+/// One consumed maker in a speculative execution's undo record:
+/// `removed` notes whether the fill emptied the maker (so undo must
+/// re-insert it at the front of its level) or only reduced it.
+struct FillUndo {
+    fill: Fill,
+    removed: bool,
+}
+
+/// Exact undo record for one executed order: remove the rested remainder
+/// (pushed to the back of its level), restore every consumed maker
+/// (reverse fill order, at the front of its level — the matching loop
+/// only ever consumes level fronts), and rewind the counters.
+struct OrderUndo {
+    side: Side,
+    price: u32,
+    rested: bool,
+    fills: Vec<FillUndo>,
+}
+
 pub struct OrderBookApp {
     /// Bids: price → FIFO of resting orders (matched from highest price).
     bids: BTreeMap<u32, Vec<Resting>>,
@@ -76,11 +96,23 @@ pub struct OrderBookApp {
     asks: BTreeMap<u32, Vec<Resting>>,
     seq: u64,
     trades: u64,
+    /// Outstanding speculation frames (committed FIFO, rolled back LIFO);
+    /// one `Option<OrderUndo>` per request (`None` = rejected, no state
+    /// change).
+    spec: VecDeque<(u64, Vec<Option<OrderUndo>>)>,
+    next_spec: u64,
 }
 
 impl OrderBookApp {
     pub fn new() -> OrderBookApp {
-        OrderBookApp { bids: BTreeMap::new(), asks: BTreeMap::new(), seq: 0, trades: 0 }
+        OrderBookApp {
+            bids: BTreeMap::new(),
+            asks: BTreeMap::new(),
+            seq: 0,
+            trades: 0,
+            spec: VecDeque::new(),
+            next_spec: 0,
+        }
     }
 
     pub fn best_bid(&self) -> Option<u32> {
@@ -111,7 +143,7 @@ impl OrderBookApp {
         side: Side,
         price: u32,
         mut qty: u32,
-        fills: &mut Vec<Fill>,
+        fills: &mut Vec<FillUndo>,
     ) -> u32 {
         // Walk the opposite side while the limit price crosses.
         loop {
@@ -148,8 +180,12 @@ impl OrderBookApp {
             maker.qty -= traded;
             qty -= traded;
             self.trades += 1;
-            fills.push(Fill { maker_id: maker.id, price: level_price, qty: traded });
-            if maker.qty == 0 {
+            let removed = maker.qty == 0;
+            fills.push(FillUndo {
+                fill: Fill { maker_id: maker.id, price: level_price, qty: traded },
+                removed,
+            });
+            if removed {
                 level.remove(0);
                 if level.is_empty() {
                     book.remove(&level_price);
@@ -226,27 +262,29 @@ impl Checkpointable for OrderBookApp {
             self.trades = trades;
             self.bids = bids;
             self.asks = asks;
+            // A restored state is settled: drop stale undo records.
+            self.spec.clear();
         }
     }
 }
 
-impl Service for OrderBookApp {
-    // All order-book requests mutate the book (the default ReadWrite
-    // classification stands): even a non-crossing order rests.
-    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+impl OrderBookApp {
+    /// Execute one order, returning the report plus an exact undo record
+    /// (`None` for rejected orders, which leave the state untouched).
+    fn exec_recorded(&mut self, req: &[u8]) -> (Vec<u8>, Option<OrderUndo>) {
         if req.len() < 20 {
-            return vec![1]; // error
+            return (vec![1], None); // error
         }
         let side = match req[0] {
             1 => Side::Buy,
             2 => Side::Sell,
-            _ => return vec![1],
+            _ => return (vec![1], None),
         };
         let price = u32::from_le_bytes(req[4..8].try_into().unwrap());
         let qty = u32::from_le_bytes(req[8..12].try_into().unwrap());
         let id = u64::from_le_bytes(req[12..20].try_into().unwrap());
         if price == 0 || qty == 0 {
-            return vec![1];
+            return (vec![1], None);
         }
 
         self.seq += 1;
@@ -266,11 +304,98 @@ impl Service for OrderBookApp {
         out.push(0u8);
         out.extend_from_slice(&remaining.to_le_bytes());
         for f in &fills {
-            out.extend_from_slice(&f.maker_id.to_le_bytes());
-            out.extend_from_slice(&f.price.to_le_bytes());
-            out.extend_from_slice(&f.qty.to_le_bytes());
+            out.extend_from_slice(&f.fill.maker_id.to_le_bytes());
+            out.extend_from_slice(&f.fill.price.to_le_bytes());
+            out.extend_from_slice(&f.fill.qty.to_le_bytes());
         }
-        out
+        (out, Some(OrderUndo { side, price, rested: remaining > 0, fills }))
+    }
+
+    /// Reverse one executed order exactly. Sound because matching only
+    /// consumes level *fronts* and resting only pushes level *backs*, so
+    /// reversing in strict LIFO order reconstructs every level
+    /// byte-identically.
+    fn undo_order(&mut self, u: OrderUndo) {
+        if u.rested {
+            let book = match u.side {
+                Side::Buy => &mut self.bids,
+                Side::Sell => &mut self.asks,
+            };
+            if let Some(level) = book.get_mut(&u.price) {
+                level.pop();
+                if level.is_empty() {
+                    book.remove(&u.price);
+                }
+            }
+        }
+        let opp = match u.side {
+            Side::Buy => &mut self.asks,
+            Side::Sell => &mut self.bids,
+        };
+        for fu in u.fills.into_iter().rev() {
+            let level = opp.entry(fu.fill.price).or_default();
+            if fu.removed {
+                level.insert(0, Resting { id: fu.fill.maker_id, qty: fu.fill.qty });
+            } else {
+                // A partial fill is always the last at its level and
+                // leaves its maker at the front.
+                let front = level.first_mut().expect("partial fill leaves its maker");
+                debug_assert_eq!(front.id, fu.fill.maker_id);
+                front.qty += fu.fill.qty;
+            }
+            self.trades -= 1;
+        }
+        self.seq -= 1;
+    }
+}
+
+impl Service for OrderBookApp {
+    // All order-book requests mutate the book (the default ReadWrite
+    // classification stands): even a non-crossing order rests.
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        self.exec_recorded(req).0
+    }
+
+    fn apply_speculative(&mut self, reqs: &[Request]) -> (SpecToken, Vec<Reply>) {
+        let mut undos = Vec::with_capacity(reqs.len());
+        let replies = reqs
+            .iter()
+            .map(|r| {
+                let (payload, undo) = self.exec_recorded(&r.payload);
+                undos.push(undo);
+                Reply { client: r.client, rid: r.rid, payload }
+            })
+            .collect();
+        let id = self.next_spec;
+        self.next_spec += 1;
+        self.spec.push_back((id, undos));
+        (SpecToken::Native(id), replies)
+    }
+
+    fn commit_speculation(&mut self, token: SpecToken) {
+        if let SpecToken::Native(id) = token {
+            // FIFO contract: the committed token is always the oldest
+            // outstanding frame, so the fold is constant-time.
+            let front = self.spec.pop_front();
+            debug_assert_eq!(
+                front.map(|(fid, _)| fid),
+                Some(id),
+                "speculation committed out of FIFO order"
+            );
+        }
+    }
+
+    fn rollback_speculation(&mut self, token: SpecToken) {
+        match token {
+            SpecToken::Snapshot(snap) => self.restore(&snap),
+            SpecToken::Native(id) => {
+                let Some((fid, undos)) = self.spec.pop_back() else { return };
+                debug_assert_eq!(fid, id, "speculation rolled back out of LIFO order");
+                for undo in undos.into_iter().rev().flatten() {
+                    self.undo_order(undo);
+                }
+            }
+        }
     }
 
     fn sim_cost(&self, _req: &[u8]) -> Nanos {
@@ -411,6 +536,50 @@ mod tests {
         let d = ob.digest();
         ob.restore(b"nope");
         assert_eq!(ob.digest(), d);
+    }
+
+    #[test]
+    fn native_speculation_round_trips() {
+        let mk = |c: u64, payload: Vec<u8>| Request { client: c, rid: c, payload };
+        let mut ob = OrderBookApp::new();
+        // Seed a book with depth on both sides.
+        ob.execute(&order(Side::Sell, 101, 5, 1));
+        ob.execute(&order(Side::Sell, 101, 3, 2)); // same level, time priority
+        ob.execute(&order(Side::Sell, 103, 7, 3));
+        ob.execute(&order(Side::Buy, 99, 4, 4));
+        let snap0 = ob.snapshot();
+        let batch = vec![
+            mk(1, order(Side::Buy, 101, 6, 10)), // consumes maker 1 fully, 2 partially
+            mk(2, order(Side::Buy, 104, 10, 11)), // sweeps 2 + 3, remainder rests
+            mk(3, order(Side::Sell, 99, 2, 12)), // hits the bid
+            mk(4, order(Side::Sell, 200, 1, 13)), // rests without crossing
+            mk(5, vec![0u8; 4]),                 // malformed: rejected, no state change
+        ];
+        let mut reference = OrderBookApp::new();
+        reference.restore(&snap0);
+        let ref_replies = reference.apply_batch(&batch);
+
+        let (tok, replies) = ob.apply_speculative(&batch);
+        assert_eq!(replies, ref_replies);
+        assert_eq!(ob.digest(), reference.digest());
+        ob.rollback_speculation(tok);
+        assert_eq!(ob.snapshot(), snap0, "rollback must restore the book exactly");
+
+        // Stacked frames: a later batch consumes what an earlier one
+        // rested; LIFO rollback must reconstruct both.
+        let (t1, _) = ob.apply_speculative(&[mk(20, order(Side::Buy, 100, 5, 20))]);
+        let (t2, _) = ob.apply_speculative(&[mk(21, order(Side::Sell, 100, 5, 21))]);
+        ob.rollback_speculation(t2);
+        ob.rollback_speculation(t1);
+        assert_eq!(ob.snapshot(), snap0);
+        // Commit path keeps the executed state.
+        let committed = order(Side::Buy, 101, 6, 22);
+        let (t1, _) = ob.apply_speculative(&[mk(22, committed.clone())]);
+        ob.commit_speculation(t1);
+        let mut inline = OrderBookApp::new();
+        inline.restore(&snap0);
+        inline.execute(&committed);
+        assert_eq!(ob.snapshot(), inline.snapshot());
     }
 
     #[test]

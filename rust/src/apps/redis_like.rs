@@ -4,9 +4,10 @@
 //! operation classes at the same µs-scale cost. GET and LLEN are
 //! classified [`Operation::ReadOnly`] and eligible for the read lane.
 
+use crate::consensus::msgs::Request;
 use crate::crypto::{hash_parts, Hash32};
 use crate::rpc::Workload;
-use crate::smr::{Checkpointable, Operation, Service};
+use crate::smr::{Checkpointable, Operation, Reply, Service, SpecToken};
 use crate::util::Rng;
 use crate::util::wire::{WireReader, WireWriter};
 use crate::Nanos;
@@ -25,6 +26,7 @@ pub const ST_NIL: u8 = 1;
 pub const ST_ERR: u8 = 2;
 pub const ST_INT: u8 = 3;
 
+#[derive(Clone)]
 enum Value {
     Str(Vec<u8>),
     List(VecDeque<Vec<u8>>),
@@ -38,14 +40,24 @@ pub fn cmd(op: u8, key: &[u8], arg: &[u8]) -> Vec<u8> {
     v
 }
 
+/// Undo record for one speculatively applied batch: the prior value of
+/// every key a write-classified request touched, in execution order.
+struct RedisUndo {
+    version: u64,
+    writes: Vec<(Vec<u8>, Option<Value>)>,
+}
+
 pub struct RedisApp {
     map: BTreeMap<Vec<u8>, Value>,
     version: u64,
+    /// Outstanding speculation frames (committed FIFO, rolled back LIFO).
+    spec: VecDeque<(u64, RedisUndo)>,
+    next_spec: u64,
 }
 
 impl RedisApp {
     pub fn new() -> RedisApp {
-        RedisApp { map: BTreeMap::new(), version: 0 }
+        RedisApp { map: BTreeMap::new(), version: 0, spec: VecDeque::new(), next_spec: 0 }
     }
 }
 
@@ -167,6 +179,61 @@ impl Service for RedisApp {
         }
     }
 
+    fn apply_speculative(&mut self, reqs: &[Request]) -> (SpecToken, Vec<Reply>) {
+        let mut undo = RedisUndo { version: self.version, writes: Vec::new() };
+        let replies = reqs
+            .iter()
+            .map(|r| {
+                if let Some((op, key, _)) = parse(&r.payload) {
+                    // Every non-read op may touch (or at least version-
+                    // bump past) its key: remember the prior value.
+                    if !matches!(op, OP_GET | OP_LLEN) {
+                        undo.writes.push((key.to_vec(), self.map.get(key).cloned()));
+                    }
+                }
+                Reply { client: r.client, rid: r.rid, payload: self.execute(&r.payload) }
+            })
+            .collect();
+        let id = self.next_spec;
+        self.next_spec += 1;
+        self.spec.push_back((id, undo));
+        (SpecToken::Native(id), replies)
+    }
+
+    fn commit_speculation(&mut self, token: SpecToken) {
+        if let SpecToken::Native(id) = token {
+            // FIFO contract: the committed token is always the oldest
+            // outstanding frame, so the fold is constant-time.
+            let front = self.spec.pop_front();
+            debug_assert_eq!(
+                front.map(|(fid, _)| fid),
+                Some(id),
+                "speculation committed out of FIFO order"
+            );
+        }
+    }
+
+    fn rollback_speculation(&mut self, token: SpecToken) {
+        match token {
+            SpecToken::Snapshot(snap) => self.restore(&snap),
+            SpecToken::Native(id) => {
+                let Some((fid, undo)) = self.spec.pop_back() else { return };
+                debug_assert_eq!(fid, id, "speculation rolled back out of LIFO order");
+                for (key, old) in undo.writes.into_iter().rev() {
+                    match old {
+                        Some(v) => {
+                            self.map.insert(key, v);
+                        }
+                        None => {
+                            self.map.remove(&key);
+                        }
+                    }
+                }
+                self.version = undo.version;
+            }
+        }
+    }
+
     fn sim_cost(&self, req: &[u8]) -> Nanos {
         // Redis single-threaded command dispatch is slightly heavier than
         // memcached's; lists cost a touch more.
@@ -245,6 +312,8 @@ impl Checkpointable for RedisApp {
         if let Some((version, map)) = parse_snap(snap) {
             self.version = version;
             self.map = map;
+            // A restored state is settled: drop stale undo records.
+            self.spec.clear();
         }
     }
 }
@@ -366,6 +435,41 @@ mod tests {
         let mut untouched = RedisApp::new();
         untouched.restore(b"garbage");
         assert_eq!(untouched.digest(), RedisApp::new().digest());
+    }
+
+    #[test]
+    fn native_speculation_round_trips() {
+        let mk = |c: u64, payload: Vec<u8>| Request { client: c, rid: c, payload };
+        let mut r = RedisApp::new();
+        r.execute(&cmd(OP_SET, b"s", b"old"));
+        r.execute(&cmd(OP_INCR, b"c", &[]));
+        r.execute(&cmd(OP_LPUSH, b"l", b"a"));
+        let snap0 = r.snapshot();
+        let batch = vec![
+            mk(1, cmd(OP_SET, b"s", b"new")),
+            mk(2, cmd(OP_DEL, b"c", &[])),
+            mk(3, cmd(OP_INCR, b"c2", &[])),
+            mk(4, cmd(OP_LPUSH, b"l", b"b")),
+            mk(5, cmd(OP_RPOP, b"l", &[])),
+            mk(6, cmd(OP_GET, b"s", &[])), // read inside a write batch
+            mk(7, cmd(OP_RPOP, b"s", &[])), // WRONGTYPE still bumps version
+        ];
+        let mut reference = RedisApp::new();
+        reference.restore(&snap0);
+        let ref_replies = reference.apply_batch(&batch);
+
+        let (tok, replies) = r.apply_speculative(&batch);
+        assert_eq!(replies, ref_replies);
+        assert_eq!(r.digest(), reference.digest());
+        r.rollback_speculation(tok);
+        assert_eq!(r.snapshot(), snap0, "rollback must restore bytes exactly");
+
+        // Stacked LIFO rollback across list mutations.
+        let (t1, _) = r.apply_speculative(&[mk(10, cmd(OP_LPUSH, b"l", b"x"))]);
+        let (t2, _) = r.apply_speculative(&[mk(11, cmd(OP_RPOP, b"l", &[]))]);
+        r.rollback_speculation(t2);
+        r.rollback_speculation(t1);
+        assert_eq!(r.snapshot(), snap0);
     }
 
     #[test]

@@ -122,6 +122,12 @@ pub struct Config {
     pub retransmit_every: Nanos,
     /// Force the slow path (used by slow-path benchmarks: Fig 8-10).
     pub slow_path_always: bool,
+    /// Speculative execution: apply a slot's batch when its PREPARE is
+    /// delivered (against an undo-logged service state, replies withheld)
+    /// and promote the speculation in constant time at decide, taking
+    /// application execution off the decide critical path. Off by
+    /// default — the seed's apply-at-decide behaviour.
+    pub speculation: bool,
     /// How clients route `ReadOnly`-classified requests (the typed
     /// `Service` read lane). Default: everything through consensus.
     pub read_mode: ReadMode,
@@ -151,6 +157,7 @@ impl Default for Config {
             viewchange_timeout: 2 * MILLI,
             retransmit_every: 500 * MICRO,
             slow_path_always: false,
+            speculation: false,
             read_mode: ReadMode::Consensus,
             sig_backend: SigBackend::Sim,
             lat: LatencyModel::default(),
@@ -232,6 +239,7 @@ impl Config {
                 "viewchange_timeout_ns" => c.viewchange_timeout = u(v)?,
                 "retransmit_every_ns" => c.retransmit_every = u(v)?,
                 "slow_path_always" => c.slow_path_always = v == "true" || v == "1",
+                "speculation" => c.speculation = v == "true" || v == "1",
                 "read_mode" => {
                     c.read_mode = match v {
                         "consensus" => ReadMode::Consensus,
@@ -317,6 +325,14 @@ mod tests {
         // Batches are capped at the consensus window.
         assert!(Config::parse("window = 16\nmax_batch_reqs = 17\n").is_err());
         assert!(Config::parse("window = 16\nmax_batch_reqs = 16\n").is_ok());
+    }
+
+    #[test]
+    fn speculation_parses_and_defaults_off() {
+        assert!(!Config::default().speculation);
+        assert!(Config::parse("speculation = true\n").unwrap().speculation);
+        assert!(Config::parse("speculation = 1\n").unwrap().speculation);
+        assert!(!Config::parse("speculation = false\n").unwrap().speculation);
     }
 
     #[test]

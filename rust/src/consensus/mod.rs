@@ -37,13 +37,13 @@ use crate::crypto::{hash, Certificate, Hash32, KeyStore};
 use crate::ctbcast::{CtbEndpoint, CtbOut, TOKEN_CTB_COOLDOWN};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
-use crate::smr::{Checkpointable, Operation, Service};
+use crate::smr::{Checkpointable, Operation, Service, SpecToken};
 use crate::tbcast::{TAG_DIRECT, TAG_TB};
 use crate::util::wire::{Wire, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use msgs::{
-    certify_digest, checkpoint_cert_digest, direct_frame, parse_direct, Checkpoint,
-    CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, RespEntry,
+    certify_digest, checkpoint_cert_digest, direct_frame, exec_batch_digest, parse_direct,
+    Checkpoint, CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, RespEntry,
     SenderStateEnc, TbMsg, VcCert,
 };
 use state::{leader_of, must_propose, Constraint, Effect, SenderState};
@@ -63,6 +63,9 @@ const TICK_EVERY: Nanos = 20 * crate::MICRO;
 const MAX_PARKED_READS: usize = 256;
 /// Read-lane at-most-once cache bound (entries, not bytes).
 const READ_CACHE_CAP: usize = 128;
+/// At-most-once reply-cache entries retained per client (the dedup
+/// horizon for retransmitted / re-proposed requests).
+const RESP_CACHE_PER_CLIENT: usize = 8;
 
 #[derive(Default)]
 struct SlotState {
@@ -81,6 +84,38 @@ struct SlotState {
     /// When the current-view PREPARE was delivered here (for timeouts).
     prepared_at: Option<Nanos>,
     decided: bool,
+}
+
+/// One speculatively executed batch awaiting its slot's decide
+/// (`Config::speculation`). Entries form a contiguous pipeline from
+/// `applied_upto`: entry `i` covers slot `applied_upto + i`. decide()
+/// promotes the front entry in constant time; any conflict unwinds the
+/// whole stack newest-first.
+struct SpecEntry {
+    slot: u64,
+    /// View-independent execution identity of the speculated batch
+    /// ([`exec_batch_digest`]); the decided batch promotes iff it matches.
+    digest: Hash32,
+    /// Undo token the service handed out (`None` for an all-duplicate /
+    /// all-noop batch that executed nothing).
+    token: Option<SpecToken>,
+    /// Pre-encoded per-client `Responses` frames, **withheld until
+    /// decide**: (client, frame bytes, replies inside).
+    frames: Vec<(NodeId, Vec<u8>, u64)>,
+    /// Reply-cache undo records, in insertion order.
+    cache_undo: Vec<CacheUndo>,
+    /// Execution cost charged for the speculation (wasted on rollback).
+    cost: Nanos,
+}
+
+/// Undo record for one speculative insert into the at-most-once reply
+/// cache (`resp_cache` stays live during speculation so later batches
+/// dedup identically to the inline path).
+struct CacheUndo {
+    client: u64,
+    rid: u64,
+    /// Entry the bounded cache evicted to make room for the insert.
+    evicted: Option<(u64, u64, Vec<u8>)>,
 }
 
 /// Latency instrumentation hooks the harness reads after a run.
@@ -121,6 +156,16 @@ pub struct ReplicaStats {
     pub snapshots_restored: u64,
     /// Decided-but-unreplayed slots skipped via snapshot restore.
     pub snapshot_slots_skipped: u64,
+    /// Batches executed speculatively at PREPARE delivery whose decide
+    /// promoted them — the execution cost overlapped certification
+    /// instead of landing on the decide critical path.
+    pub spec_hits: u64,
+    /// Speculative executions rolled back (view-change re-proposal
+    /// conflict, pruned slot, snapshot catch-up).
+    pub spec_rollbacks: u64,
+    /// Simulated execution nanoseconds charged for speculations that
+    /// later rolled back (the wasted-work budget of the pipeline).
+    pub spec_wasted_ns: u64,
 }
 
 impl ReplicaStats {
@@ -190,6 +235,16 @@ pub struct Replica {
     /// retransmissions; a retransmission carrying a *higher* demand —
     /// the client's read_refresh path — re-parks under the new index).
     parked_keys: HashMap<(u64, u64), u64>,
+    /// Speculative-execution pipeline (`Config::speculation`): endorsed
+    /// PREPARE batches applied ahead of decide, contiguous from
+    /// `applied_upto`.
+    spec: VecDeque<SpecEntry>,
+    /// (client, rid) pairs whose `resp_cache` entry is speculative, with
+    /// a count of outstanding speculative inserts (the same rid can sit
+    /// in two stacked entries after cache cycling): the request-retransmit
+    /// answer path must skip them, so no speculative reply ever leaves
+    /// this replica before its slot decides.
+    spec_rids: HashMap<(u64, u64), u32>,
 
     /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
     my_prepare_k: HashMap<u64, u64>,
@@ -266,6 +321,8 @@ impl Replica {
             read_cache_order: VecDeque::new(),
             parked_reads: BTreeMap::new(),
             parked_keys: HashMap::new(),
+            spec: VecDeque::new(),
+            spec_rids: HashMap::new(),
             my_prepare_k: HashMap::new(),
             sealing: None,
             vc_shares: HashMap::new(),
@@ -493,6 +550,10 @@ impl Replica {
         if self.cfg.slow_path_always {
             self.send_certify(env, pb.view, pb.slot);
         }
+        // The endorsed batch can start executing now, overlapped with the
+        // WILL_CERTIFY/WILL_COMMIT round trips (after the broadcast above,
+        // so the consensus messages are not delayed by execution cost).
+        self.try_speculate(env);
     }
 
     /// Sign and TBcast my CERTIFY share for the delivered PREPARE.
@@ -658,10 +719,29 @@ impl Replica {
 
     /// Apply decided slots in order — each slot's batch goes through
     /// [`Service::apply_batch`] as a unit — and answer clients with one
-    /// aggregated `Responses` frame per client per slot.
+    /// aggregated `Responses` frame per client per slot. A batch that was
+    /// speculatively executed at PREPARE delivery (`Config::speculation`)
+    /// is *promoted* instead: constant-time fold of its undo token and
+    /// release of the pre-encoded frames — the execution cost was already
+    /// paid overlapping certification.
     fn try_apply(&mut self, env: &mut dyn Env) {
-        while let Some(reqs) = self.decided.get(&self.applied_upto).cloned() {
+        // The batch is taken by value — no per-slot clone of every request
+        // payload on the hot path. Applied slots leave `decided`; the
+        // view-change re-proposal scan treats slots below `applied_upto`
+        // as decided.
+        while let Some(reqs) = self.decided.remove(&self.applied_upto) {
             let slot = self.applied_upto;
+            if let Some(front) = self.spec.front() {
+                debug_assert_eq!(front.slot, slot, "speculation stack lost contiguity");
+                if front.digest == exec_batch_digest(slot, &reqs) {
+                    self.promote_speculation(env, slot);
+                    continue;
+                }
+                // The decided batch differs from what we executed (a view
+                // change re-proposed this slot differently): everything
+                // speculated from here on sits on the wrong prefix.
+                self.rollback_all_speculation(env);
+            }
             self.applied_upto += 1;
             // At-most-once execution: a request re-proposed across a view
             // change may decide in two slots (and a Byzantine leader may
@@ -669,17 +749,9 @@ impl Replica {
             let mut fresh: Vec<Request> = Vec::new();
             let mut seen: HashSet<(u64, u64)> = HashSet::new();
             for req in reqs {
-                if req.is_noop() {
-                    continue;
+                if self.is_fresh(&req, &mut seen) {
+                    fresh.push(req);
                 }
-                let cached = self
-                    .resp_cache
-                    .get(&req.client)
-                    .map_or(false, |c| c.iter().any(|(rid, _, _)| *rid == req.rid));
-                if cached || !seen.insert((req.client, req.rid)) {
-                    continue;
-                }
-                fresh.push(req);
             }
             if fresh.is_empty() {
                 continue;
@@ -692,11 +764,7 @@ impl Replica {
             let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
             for reply in replies {
                 env.mark("applied");
-                let cache = self.resp_cache.entry(reply.client).or_default();
-                cache.push_back((reply.rid, slot, reply.payload.clone()));
-                while cache.len() > 8 {
-                    cache.pop_front();
-                }
+                self.cache_reply(reply.client, reply.rid, slot, reply.payload.clone());
                 per_client
                     .entry(reply.client)
                     .or_default()
@@ -718,8 +786,224 @@ impl Replica {
         if self.pending_snapshot.map_or(false, |t| self.applied_upto >= t) {
             self.pending_snapshot = None;
         }
-        // Freshly applied slots may satisfy parked read-index demands.
-        self.drain_parked_reads(env);
+        // Freshly applied slots may satisfy parked read-index demands —
+        // but only non-speculative state may answer reads.
+        if self.spec.is_empty() {
+            self.drain_parked_reads(env);
+        }
+        // The applied frontier moved: later endorsed PREPAREs may now
+        // enter the speculation pipeline.
+        self.try_speculate(env);
+    }
+
+    // ------------------------------------------------------------------
+    // Speculative execution (Config::speculation)
+    // ------------------------------------------------------------------
+
+    /// Should `req` execute in this slot? The at-most-once filter shared
+    /// by the inline apply path and the speculation path — the two MUST
+    /// decide identically, or a speculating replica's reply cache (part
+    /// of the certified execution snapshot) diverges from a
+    /// non-speculating one's. `seen` carries the within-batch dedup.
+    fn is_fresh(&self, req: &Request, seen: &mut HashSet<(u64, u64)>) -> bool {
+        if req.is_noop() {
+            return false;
+        }
+        let cached = self
+            .resp_cache
+            .get(&req.client)
+            .map_or(false, |c| c.iter().any(|(rid, _, _)| *rid == req.rid));
+        !cached && seen.insert((req.client, req.rid))
+    }
+
+    /// Insert one executed reply into the bounded at-most-once cache,
+    /// returning whatever the bound evicted. Shared by the inline apply
+    /// path (which discards the eviction) and the speculation path
+    /// (which records it for rollback).
+    fn cache_reply(
+        &mut self,
+        client: u64,
+        rid: u64,
+        slot: u64,
+        payload: Vec<u8>,
+    ) -> Option<(u64, u64, Vec<u8>)> {
+        let cache = self.resp_cache.entry(client).or_default();
+        cache.push_back((rid, slot, payload));
+        let mut evicted = None;
+        while cache.len() > RESP_CACHE_PER_CLIENT {
+            evicted = cache.pop_front();
+        }
+        evicted
+    }
+
+    /// Feed the speculation pipeline: execute endorsed-but-undecided
+    /// PREPAREs in slot order on top of the applied prefix. Called when a
+    /// PREPARE is endorsed and whenever the applied frontier moves.
+    fn try_speculate(&mut self, env: &mut dyn Env) {
+        if !self.cfg.speculation {
+            return;
+        }
+        loop {
+            let next = self.applied_upto + self.spec.len() as u64;
+            if !self.checkpoint.body.open(next) {
+                return;
+            }
+            if self.decided.contains_key(&next) {
+                return; // decided while a predecessor is in flight: try_apply owns it
+            }
+            // Only endorsed PREPAREs (every request held, Byzantine
+            // checks passed) are worth executing ahead of decide.
+            let endorsed = self
+                .slots
+                .get(&next)
+                .map_or(false, |st| st.sent_will_certify == Some(self.view));
+            if !endorsed {
+                return;
+            }
+            // Dedup over the borrowed batch and clone only the survivors
+            // — no wholesale per-slot batch copy on the speculation path.
+            let leader = leader_of(self.view, self.n);
+            let Some(pb) = self.senders[leader].prepares.get(&next) else { return };
+            if pb.view != self.view {
+                return;
+            }
+            let digest = exec_batch_digest(next, &pb.reqs);
+            let mut fresh: Vec<Request> = Vec::new();
+            let mut seen: HashSet<(u64, u64)> = HashSet::new();
+            for req in &pb.reqs {
+                if self.is_fresh(req, &mut seen) {
+                    fresh.push(req.clone());
+                }
+            }
+            self.speculate(env, next, digest, fresh);
+        }
+    }
+
+    /// Execute one endorsed PREPARE's already-deduped batch ahead of its
+    /// decide: charge the execution cost *now* (overlapping the
+    /// certification round trips), apply through the service's
+    /// speculation capability, and pre-encode the per-client `Responses`
+    /// frames — withheld until the slot decides.
+    fn speculate(&mut self, env: &mut dyn Env, slot: u64, digest: Hash32, fresh: Vec<Request>) {
+        if fresh.is_empty() {
+            // Nothing executes, but the entry still holds the slot's
+            // place so promotion stays positional.
+            self.spec.push_back(SpecEntry {
+                slot,
+                digest,
+                token: None,
+                frames: Vec::new(),
+                cache_undo: Vec::new(),
+                cost: 0,
+            });
+            return;
+        }
+        let mut cost: Nanos = 0;
+        for req in &fresh {
+            cost += self.service.sim_cost(&req.payload);
+        }
+        env.charge(Category::Other, cost);
+        let (token, replies) = self.service.apply_speculative(&fresh);
+        debug_assert_eq!(replies.len(), fresh.len(), "apply_speculative reply misalignment");
+        let mut cache_undo: Vec<CacheUndo> = Vec::with_capacity(replies.len());
+        let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
+        for reply in replies {
+            // Tentative reply-cache insert (kept live so later batches
+            // dedup against it; undone exactly on rollback). The
+            // retransmit answer path skips it via `spec_rids`.
+            let evicted = self.cache_reply(reply.client, reply.rid, slot, reply.payload.clone());
+            *self.spec_rids.entry((reply.client, reply.rid)).or_insert(0) += 1;
+            cache_undo.push(CacheUndo { client: reply.client, rid: reply.rid, evicted });
+            per_client
+                .entry(reply.client)
+                .or_default()
+                .push(RespEntry { rid: reply.rid, payload: reply.payload });
+        }
+        let frames = per_client
+            .into_iter()
+            .map(|(client, replies)| {
+                let n = replies.len() as u64;
+                (client as NodeId, direct_frame(&DirectMsg::Responses { slot, replies }), n)
+            })
+            .collect();
+        env.mark("spec_apply");
+        self.spec.push_back(SpecEntry {
+            slot,
+            digest,
+            token: Some(token),
+            frames,
+            cache_undo,
+            cost,
+        });
+    }
+
+    /// Drop one speculative-insert reference for `(client, rid)` (the
+    /// entry becomes answerable by the retransmit path once no
+    /// speculative insert references it).
+    fn release_spec_rid(&mut self, client: u64, rid: u64) {
+        if let Some(n) = self.spec_rids.get_mut(&(client, rid)) {
+            *n -= 1;
+            if *n == 0 {
+                self.spec_rids.remove(&(client, rid));
+            }
+        }
+    }
+
+    /// decide() confirmed the front speculation: advance the applied
+    /// frontier, fold the undo token, and release the withheld frames —
+    /// constant time, no execution on the decide critical path.
+    fn promote_speculation(&mut self, env: &mut dyn Env, slot: u64) {
+        let e = self.spec.pop_front().unwrap();
+        debug_assert_eq!(e.slot, slot);
+        self.applied_upto = slot + 1;
+        if let Some(token) = e.token {
+            self.service.commit_speculation(token);
+        }
+        for u in &e.cache_undo {
+            self.release_spec_rid(u.client, u.rid);
+        }
+        self.stats.spec_hits += 1;
+        env.mark("spec_promoted");
+        for (client, frame, replies) in e.frames {
+            self.stats.resp_frames += 1;
+            self.stats.resp_replies += replies;
+            // One mark per reply, matching the inline path's unit (fig9
+            // and the decide→apply gap analyses count replies).
+            for _ in 0..replies {
+                env.mark("applied");
+            }
+            env.send(client, frame);
+        }
+    }
+
+    /// Unwind the entire speculation pipeline, newest-first: service
+    /// state (via the undo tokens), the tentative reply-cache inserts,
+    /// and the withheld frames (dropped unsent — no speculative reply
+    /// ever reached a client).
+    fn rollback_all_speculation(&mut self, env: &mut dyn Env) {
+        while let Some(e) = self.spec.pop_back() {
+            if let Some(token) = e.token {
+                self.service.rollback_speculation(token);
+            }
+            for u in e.cache_undo.into_iter().rev() {
+                self.release_spec_rid(u.client, u.rid);
+                if let Some(cache) = self.resp_cache.get_mut(&u.client) {
+                    cache.pop_back();
+                    if let Some(old) = u.evicted {
+                        cache.push_front(old);
+                    }
+                    if cache.is_empty() {
+                        // The insert created this client's deque; a
+                        // leftover empty deque would perturb the certified
+                        // execution-snapshot encoding.
+                        self.resp_cache.remove(&u.client);
+                    }
+                }
+            }
+            self.stats.spec_rollbacks += 1;
+            self.stats.spec_wasted_ns += e.cost;
+            env.mark("spec_rollback");
+        }
     }
 
     // ------------------------------------------------------------------
@@ -732,6 +1016,10 @@ impl Replica {
         if self.applied_upto < self.checkpoint.body.open_hi() {
             return;
         }
+        // Speculation never crosses the checkpoint boundary (PREPAREs
+        // outside the window are not endorsed), so the execution snapshot
+        // below is free of speculative effects.
+        debug_assert!(self.spec.is_empty(), "speculation crossed a checkpoint boundary");
         // Already certifying this boundary: don't re-serialize the full
         // execution snapshot on every decided slot while the certificate
         // is in flight (the stash is cleared when it is adopted).
@@ -775,6 +1063,12 @@ impl Replica {
             self.latest_snapshot = Some((cp.clone(), snap));
         }
         let lo = self.checkpoint.body.open_lo();
+        // Behind the new window: the speculated slots are being pruned
+        // cluster-wide and can never decide here — unwind them (state
+        // transfer will jump execution state wholesale).
+        if self.applied_upto < lo {
+            self.rollback_all_speculation(env);
+        }
         // Drop per-slot state and fast-path promises below the window.
         self.slots = self.slots.split_off(&lo);
         self.decided = self.decided.split_off(&self.applied_upto.min(lo));
@@ -891,6 +1185,9 @@ impl Replica {
         let Some((cache, service_snap)) = Replica::decode_exec_snapshot(&snap) else {
             return; // certified bytes are self-consistent, so this is hostile
         };
+        // Outstanding speculation sits on state this restore replaces:
+        // drain the service's undo log before overwriting it wholesale.
+        self.rollback_all_speculation(env);
         // We are about to restore to this boundary: pre-claim it so the
         // checkpoint adoption below doesn't fan out a redundant round of
         // SnapshotRequests (whose full-state replies we would discard).
@@ -958,6 +1255,18 @@ impl Replica {
                 self.send_direct(env, client, reply);
                 return;
             }
+        }
+        // Speculative effects must stay invisible to the read lane: while
+        // speculation is outstanding the service state runs ahead of the
+        // applied prefix, so park the read until the pipeline next drains
+        // (the drain only runs on a clean stack). Under a saturating
+        // write pipeline that can take several slots — the documented
+        // cost of combining `speculation` with the read lane; see the
+        // ROADMAP follow-up on answering reads from a pre-speculation
+        // overlay.
+        if !self.spec.is_empty() {
+            self.park_read(env, req, min_index.max(self.applied_upto + 1));
+            return;
         }
         if self.applied_upto < min_index {
             self.park_read(env, req, min_index);
@@ -1056,10 +1365,14 @@ impl Replica {
         match msg {
             DirectMsg::Request(req) => {
                 // At-most-once: answer executed duplicates from the cache
-                // (the client's Response may have been lost).
+                // (the client's Response may have been lost). Speculative
+                // entries are invisible here — no reply may leave before
+                // the slot decides.
                 if let Some(cache) = self.resp_cache.get(&req.client) {
-                    if let Some((_, slot, resp)) =
-                        cache.iter().find(|(rid, _, _)| *rid == req.rid)
+                    if let Some((_, slot, resp)) = cache
+                        .iter()
+                        .find(|(rid, _, _)| *rid == req.rid)
+                        .filter(|_| !self.spec_rids.contains_key(&(req.client, req.rid)))
                     {
                         let (slot, resp) = (*slot, resp.clone());
                         let client = req.client as NodeId;
@@ -1266,6 +1579,11 @@ impl Replica {
         self.sealing = None;
         self.stats.view_changes += 1;
         self.last_progress = env.now();
+        // Speculations from the dead view may be re-proposed differently
+        // (or replaced by no-ops): unwind them before entering the new
+        // view. No withheld reply ever left the replica, so a conflicting
+        // re-proposal is invisible to clients.
+        self.rollback_all_speculation(env);
         // Requests proposed in dead views may never decide there; they
         // become proposable again (execution dedups by client rid).
         self.proposed.clear();
@@ -1384,7 +1702,9 @@ impl Replica {
         let hi = self.checkpoint.body.open_hi();
         let mut first_free = None;
         for s in lo..hi {
-            if self.decided.contains_key(&s) {
+            // Applied slots were taken out of `decided` by try_apply;
+            // both count as decided for re-proposal purposes.
+            if s < self.applied_upto || self.decided.contains_key(&s) {
                 continue;
             }
             match must_propose(s, &certs) {
@@ -1621,6 +1941,29 @@ impl Replica {
             .map(|r| r.payload.len() as u64 + 48)
             .sum::<u64>();
         total += self.read_cache.values().map(|(_, p)| p.len() as u64 + 56).sum::<u64>();
+        // Speculation pipeline: withheld reply frames, reply-cache undo
+        // records, and the undo tokens themselves — a default-adapter
+        // token retains a full pre-speculation service snapshot (native
+        // undo logs live inside the service and are not visible here).
+        // Bounded by the checkpoint window: speculation never crosses it.
+        total += self
+            .spec
+            .iter()
+            .map(|e| {
+                let token = match &e.token {
+                    Some(SpecToken::Snapshot(s)) => s.len() as u64,
+                    Some(SpecToken::Native(_)) | None => 8,
+                };
+                token
+                    + e.frames.iter().map(|(_, f, _)| f.len() as u64 + 16).sum::<u64>()
+                    + e.cache_undo
+                        .iter()
+                        .map(|u| {
+                            24 + u.evicted.as_ref().map_or(0, |(_, _, p)| p.len() as u64)
+                        })
+                        .sum::<u64>()
+            })
+            .sum::<u64>();
         total
     }
 

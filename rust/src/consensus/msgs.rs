@@ -106,6 +106,21 @@ impl Wire for PrepareBody {
     }
 }
 
+/// *View-independent* execution identity of a slot's batch: what a
+/// speculative execution is keyed by. Unlike [`PrepareBody::batch_digest`]
+/// it deliberately excludes the view, so a view-change re-proposal of the
+/// *identical* batch in the same slot promotes the speculation instead of
+/// rolling it back — execution only depends on the request sequence.
+pub fn exec_batch_digest(slot: u64, reqs: &[Request]) -> Hash32 {
+    let mut w = WireWriter::with_capacity(16 + 32 * reqs.len());
+    w.u64(slot);
+    w.u32(reqs.len() as u32);
+    for r in reqs {
+        r.digest().put(&mut w);
+    }
+    hash_parts(&[b"ubft-spec-batch", &w.finish()])
+}
+
 /// An application checkpoint body: the state digest after applying slots
 /// `[0, upto)` plus the authorization to work on `[upto, upto + window)`.
 ///

@@ -559,6 +559,7 @@ pub struct Deployment {
     pipeline: Option<usize>,
     batch: Option<(usize, usize)>,
     slot_pipeline: Option<usize>,
+    speculation: bool,
     read_mode: Option<ReadMode>,
     think: Option<Nanos>,
     presend: Option<Nanos>,
@@ -581,6 +582,7 @@ impl Deployment {
             pipeline: None,
             batch: None,
             slot_pipeline: None,
+            speculation: false,
             read_mode: None,
             think: None,
             presend: None,
@@ -662,6 +664,18 @@ impl Deployment {
     /// batches fill.
     pub fn slot_pipeline(mut self, depth: usize) -> Deployment {
         self.slot_pipeline = Some(depth);
+        self
+    }
+
+    /// Speculative execution: uBFT replicas apply a slot's batch when its
+    /// PREPARE is delivered (undo-logged, replies withheld) and promote
+    /// the speculation in constant time at decide — taking application
+    /// execution off the decide critical path. Safe under every fault the
+    /// protocol tolerates (conflicting outcomes roll back; no speculative
+    /// reply is released before decide); off by default. Sets
+    /// [`Config::speculation`].
+    pub fn speculate(mut self) -> Deployment {
+        self.speculation = true;
         self
     }
 
@@ -862,6 +876,9 @@ impl Deployment {
         }
         if let Some(depth) = self.slot_pipeline {
             self.cfg.max_inflight_slots = depth;
+        }
+        if self.speculation {
+            self.cfg.speculation = true;
         }
     }
 
@@ -1366,6 +1383,15 @@ mod tests {
             .reads(ReadMode::Consensus)
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn speculate_knob_plumbs_into_config() {
+        let cluster =
+            Deployment::new(Config::default()).speculate().requests(5).build().unwrap();
+        assert!(cluster.config().speculation);
+        let plain = Deployment::new(Config::default()).requests(5).build().unwrap();
+        assert!(!plain.config().speculation, "speculation must be opt-in");
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! so an uncontended deployment never waits for a batch to fill.
 
 use super::{print_table, samples_per_point, BenchJson};
+use crate::apps::kv::KvWorkload;
+use crate::apps::KvApp;
 use crate::config::Config;
 use crate::deploy::Deployment;
 use crate::rpc::BytesWorkload;
@@ -40,6 +42,46 @@ pub fn run_point(batch: usize, pipeline: usize, slots: usize, requests: usize) -
         .slot_pipeline(slots)
         .build()
         .expect("throughput deployment is valid");
+    cluster.run_to_completion();
+    let finished = cluster.done_at().expect("client must finish");
+    let mut s = cluster.samples();
+    let occupancy =
+        cluster.replica(0).map(|r| r.stats.batch_occupancy()).unwrap_or(0.0);
+    Point {
+        batch,
+        pipeline,
+        slots,
+        kops: requests as f64 / (finished as f64 / 1e9) / 1e3,
+        p50_us: s.median() as f64 / 1000.0,
+        occupancy,
+    }
+}
+
+/// One execution-overlap measurement: an execution-heavy service (the
+/// KV store, ~0.9 µs of simulated cost per request) at a fixed batch ×
+/// pipeline shape, with speculative execution off or on. With
+/// speculation on, replicas apply the batch while the certification
+/// round trips are in flight and decide() releases pre-built reply
+/// frames — so the batch's execution cost leaves the client-visible
+/// decide path.
+pub fn run_exec_point(
+    batch: usize,
+    pipeline: usize,
+    slots: usize,
+    requests: usize,
+    speculate: bool,
+) -> Point {
+    let mut d = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload::paper()))
+        .requests(requests)
+        .pipeline(pipeline)
+        .batch(batch, 64 * 1024)
+        .slot_pipeline(slots);
+    if speculate {
+        d = d.speculate();
+    }
+    let mut cluster = d.build().expect("exec-overlap deployment is valid");
     cluster.run_to_completion();
     let finished = cluster.done_at().expect("client must finish");
     let mut s = cluster.samples();
@@ -102,6 +144,48 @@ pub fn main_run(samples: usize) {
         json.push(format!("{key}/p50"), p.p50_us, "us");
         json.push(format!("{key}/occupancy"), p.occupancy, "reqs_per_slot");
     }
+
+    // Execution-overlap sweep: the KV store (~0.9 µs simulated cost per
+    // request) with speculative execution off vs on at the same batch ×
+    // pipeline shape. Speculation applies the batch while certification
+    // round-trips, so the decide path releases pre-built replies.
+    let exec_sweep: &[(usize, usize, usize)] = &[(8, 32, 2), (32, 32, 2)];
+    let mut exec_rows: Vec<Vec<String>> = Vec::new();
+    for &(b, p, s) in exec_sweep {
+        let off = run_exec_point(b, p, s, requests, false);
+        let on = run_exec_point(b, p, s, requests, true);
+        exec_rows.push(vec![
+            b.to_string(),
+            p.to_string(),
+            format!("{:.2}", off.p50_us),
+            format!("{:.2}", on.p50_us),
+            format!("{:.1}%", (1.0 - on.p50_us / off.p50_us) * 100.0),
+            format!("{:.1}", off.kops),
+            format!("{:.1}", on.kops),
+        ]);
+        let key = format!("kv/batch={b}/inflight={p}/slots={s}");
+        json.push(format!("{key}/spec=off/p50"), off.p50_us, "us");
+        json.push(format!("{key}/spec=on/p50"), on.p50_us, "us");
+        json.push(format!("{key}/spec=off/kops"), off.kops, "kops");
+        json.push(format!("{key}/spec=on/kops"), on.kops, "kops");
+    }
+    let exec_header: Vec<String> = [
+        "batch",
+        "in-flight",
+        "p50 off (µs)",
+        "p50 spec (µs)",
+        "p50 gain",
+        "kops off",
+        "kops spec",
+    ]
+    .map(String::from)
+    .to_vec();
+    print_table(
+        "speculative execution — apply overlapped with certification (KV)",
+        &exec_header,
+        &exec_rows,
+    );
+
     json.write("BENCH_throughput.json", "UBFT_BENCH_THROUGHPUT_JSON");
     let by = |b: usize, pl: usize, sl: usize| {
         points

@@ -19,8 +19,8 @@ EVALUATION (discrete-event simulator, paper §7):
   fig10       non-equivocation mechanisms vs message size
   fig11       tail latency vs CTBcast tail t
   table2      replica + disaggregated memory usage
-  throughput  §9 throughput: batch size × pipeline depth
-              (emits BENCH_throughput.json)
+  throughput  §9 throughput: batch size × pipeline depth, plus the KV
+              speculation on/off sweep (emits BENCH_throughput.json)
   scaling     throughput vs concurrent clients + KV read-mix sweep
               (consensus vs linearizable vs direct read lane;
               emits BENCH_scaling.json)

@@ -38,6 +38,39 @@
 //! fallback path) must leave [`Checkpointable::digest`] unchanged, and
 //! `query` must answer it identically. This is what makes the read lane
 //! safe to serve from any replica's applied state.
+//!
+//! # Speculation (the `SpeculativeService` capability)
+//!
+//! With [`crate::config::Config::speculation`] on (builder:
+//! [`crate::deploy::Deployment::speculate`]), a replica executes a slot's
+//! batch *when its PREPARE is delivered* — overlapping application
+//! execution with the certification round trips — and `decide()` merely
+//! *promotes* the speculation in constant time instead of running
+//! [`Service::apply_batch`] on the client-visible critical path. The
+//! capability is the undo-token triple on [`Service`]:
+//!
+//! * [`Service::apply_speculative`] — apply a batch and return a
+//!   [`SpecToken`] that can undo it (plus the replies, which the replica
+//!   pre-encodes but **withholds until decide**);
+//! * [`Service::commit_speculation`] — the decided batch matched: fold
+//!   the undo record (constant time for native implementations);
+//! * [`Service::rollback_speculation`] — the speculation lost (view
+//!   change re-proposed something else): restore the pre-speculation
+//!   state exactly. Outstanding speculations are always unwound in LIFO
+//!   order, and committed in FIFO order.
+//!
+//! The default adapter clones-and-restores through
+//! [`Checkpointable::snapshot`] / [`Checkpointable::restore`], so every
+//! existing `Service` speculates correctly out of the box; Kv, the
+//! Redis-like store and the order book override the triple with native
+//! per-operation undo logs. The contract that keeps speculation safe:
+//! `apply_speculative` must produce byte-identical replies and digests
+//! to `apply_batch` on the same state, and a rollback must restore a
+//! byte-identical [`Checkpointable::snapshot`] (checkpoint certificates
+//! hash that encoding across replicas). Safety is unaffected — only
+//! *timing* moves: no speculative reply leaves the replica before the
+//! slot decides, so a Byzantine leader cannot exfiltrate divergent
+//! replies through speculation.
 
 use crate::consensus::msgs::Request;
 use crate::crypto::Hash32;
@@ -93,6 +126,21 @@ pub enum ReadMode {
     /// down to the session floor (the f+1-quorum fast-read trade-off —
     /// see the [`crate::rpc`] module docs).
     Linearizable,
+}
+
+/// Undo token for one speculatively applied batch (the
+/// `SpeculativeService` capability — see the [module docs](self)).
+/// Returned by [`Service::apply_speculative`]; handed back to exactly one
+/// of [`Service::commit_speculation`] (FIFO) or
+/// [`Service::rollback_speculation`] (LIFO).
+#[derive(Debug)]
+pub enum SpecToken {
+    /// Pre-speculation [`Checkpointable::snapshot`] held by the default
+    /// clone-and-restore adapter.
+    Snapshot(Vec<u8>),
+    /// Identifier of a service-native undo record (the service keeps the
+    /// undo log internally; cheap commit, surgical rollback).
+    Native(u64),
 }
 
 /// One executed request's reply, produced by [`Service::apply_batch`].
@@ -166,6 +214,36 @@ pub trait Service: Checkpointable + Send {
                 payload: self.execute(&r.payload),
             })
             .collect()
+    }
+
+    /// Speculatively execute one batch ahead of its decide, returning an
+    /// undo token alongside the replies. Must be observably identical to
+    /// [`Service::apply_batch`] (same replies, same digest); after a
+    /// [`Service::rollback_speculation`] of the returned token the state
+    /// must be byte-identical (per [`Checkpointable::snapshot`]) to the
+    /// pre-call state. The default adapter clones-and-restores via
+    /// snapshot, so every service with a faithful
+    /// [`Checkpointable::snapshot`]/[`Checkpointable::restore`] pair
+    /// supports speculation unmodified; override the triple with a
+    /// native undo log to make it cheap.
+    fn apply_speculative(&mut self, reqs: &[Request]) -> (SpecToken, Vec<Reply>) {
+        let snap = self.snapshot();
+        let replies = self.apply_batch(reqs);
+        (SpecToken::Snapshot(snap), replies)
+    }
+
+    /// The speculated batch decided unchanged: discard its undo record.
+    /// Tokens are committed oldest-first (FIFO). The default adapter has
+    /// nothing to fold — dropping the snapshot commits it.
+    fn commit_speculation(&mut self, _token: SpecToken) {}
+
+    /// The speculated batch will not decide (view-change re-proposal,
+    /// pruned slot): restore the pre-speculation state. Tokens are rolled
+    /// back newest-first (LIFO), so a native undo log pops its tail.
+    fn rollback_speculation(&mut self, token: SpecToken) {
+        if let SpecToken::Snapshot(snap) = token {
+            self.restore(&snap);
+        }
     }
 
     /// Simulated execution cost charged by the DES per request (ns).
@@ -263,5 +341,29 @@ mod tests {
     fn default_classification_is_readwrite() {
         let a = NoopApp::new();
         assert_eq!(a.classify(b"anything"), Operation::ReadWrite);
+    }
+
+    #[test]
+    fn default_speculation_adapter_round_trips() {
+        // Every Service speculates via the snapshot adapter: replies match
+        // apply_batch, commit keeps the state, rollback restores it
+        // byte-identically.
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request { client: i, rid: i, payload: vec![i as u8; 8] })
+            .collect();
+        let mut reference = NoopApp::new();
+        let ref_replies = reference.apply_batch(&reqs);
+
+        let mut spec = NoopApp::new();
+        let snap0 = spec.snapshot();
+        let (tok, replies) = spec.apply_speculative(&reqs);
+        assert_eq!(replies, ref_replies);
+        assert_eq!(spec.digest(), reference.digest());
+        spec.rollback_speculation(tok);
+        assert_eq!(spec.snapshot(), snap0, "rollback must restore bytes exactly");
+
+        let (tok, _) = spec.apply_speculative(&reqs);
+        spec.commit_speculation(tok);
+        assert_eq!(spec.digest(), reference.digest());
     }
 }

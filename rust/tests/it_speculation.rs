@@ -1,0 +1,341 @@
+//! Speculative-execution pipeline tests: digest equality between
+//! speculative and inline execution (service level and end-to-end),
+//! constant-time promotion at decide, rollback across view changes, and
+//! the no-early-release guarantee (no reply frame leaves a replica
+//! before its slot decides — speculative or otherwise).
+
+use std::collections::HashMap;
+use ubft::apps::kv::KvWorkload;
+use ubft::apps::orderbook::OrderWorkload;
+use ubft::apps::redis_like::RedisWorkload;
+use ubft::apps::{KvApp, OrderBookApp, RedisApp};
+use ubft::config::Config;
+use ubft::consensus::msgs::Request;
+use ubft::deploy::{Deployment, FaultPlan};
+use ubft::rpc::{BytesWorkload, Workload};
+use ubft::sim::TraceEv;
+use ubft::smr::{NoopApp, ReadMode, Service};
+use ubft::util::Rng;
+
+/// Drive a speculating instance and an inline twin through random
+/// batches: speculations either commit FIFO (the twin applies the same
+/// batches inline) or roll back LIFO (the twin never sees them). After
+/// every settlement the two must agree digest- and snapshot-byte-exactly.
+fn assert_spec_matches_inline(
+    mut spec: Box<dyn Service>,
+    mut inline: Box<dyn Service>,
+    workload: &mut dyn Workload,
+    seed: u64,
+) {
+    let mut ctl = Rng::new(seed);
+    let mut wl = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut rid = 0u64;
+    for round in 0..60 {
+        let n_batches = 1 + ctl.below(3) as usize;
+        let mut batches: Vec<Vec<Request>> = Vec::new();
+        for _ in 0..n_batches {
+            let sz = 1 + ctl.below(8) as usize;
+            let mut batch = Vec::with_capacity(sz);
+            for _ in 0..sz {
+                rid += 1;
+                batch.push(Request {
+                    client: 7,
+                    rid,
+                    payload: workload.next_request(&mut wl),
+                });
+            }
+            batches.push(batch);
+        }
+        let mut toks = Vec::new();
+        let mut spec_replies = Vec::new();
+        for b in &batches {
+            let (t, r) = spec.apply_speculative(b);
+            toks.push(t);
+            spec_replies.push(r);
+        }
+        if ctl.chance(0.5) {
+            // Promote: commit oldest-first; the twin executes inline.
+            for t in toks {
+                spec.commit_speculation(t);
+            }
+            for (b, sr) in batches.iter().zip(&spec_replies) {
+                let ir = inline.apply_batch(b);
+                assert_eq!(&ir, sr, "speculative replies diverged from inline");
+            }
+        } else {
+            // Conflict: unwind newest-first; the twin never executed them.
+            for t in toks.into_iter().rev() {
+                spec.rollback_speculation(t);
+            }
+        }
+        assert_eq!(
+            spec.digest(),
+            inline.digest(),
+            "digest diverged ({} round {round} seed {seed})",
+            spec.name()
+        );
+        assert_eq!(
+            spec.snapshot(),
+            inline.snapshot(),
+            "snapshot bytes diverged ({} round {round} seed {seed})",
+            spec.name()
+        );
+    }
+}
+
+#[test]
+fn speculative_and_inline_execution_digest_equal_on_random_workloads() {
+    for seed in [1u64, 7, 42] {
+        assert_spec_matches_inline(
+            Box::new(KvApp::new()),
+            Box::new(KvApp::new()),
+            &mut KvWorkload::paper(),
+            seed,
+        );
+        assert_spec_matches_inline(
+            Box::new(RedisApp::new()),
+            Box::new(RedisApp::new()),
+            &mut RedisWorkload { keys: 48 },
+            seed ^ 0xBEEF,
+        );
+        assert_spec_matches_inline(
+            Box::new(OrderBookApp::new()),
+            Box::new(OrderBookApp::new()),
+            &mut OrderWorkload::paper(),
+            seed ^ 0xF00D,
+        );
+        // NoopApp exercises the default clone-and-restore adapter.
+        assert_spec_matches_inline(
+            Box::new(NoopApp::new()),
+            Box::new(NoopApp::new()),
+            &mut BytesWorkload { size: 24, label: "noop" },
+            seed,
+        );
+    }
+}
+
+#[test]
+fn speculation_on_matches_inline_execution_end_to_end() {
+    let run = |speculate: bool| {
+        let mut d = Deployment::new(Config::default())
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(KvWorkload::paper()))
+            .requests(240)
+            .pipeline(16)
+            .batch(8, 64 * 1024)
+            .slot_pipeline(2);
+        if speculate {
+            d = d.speculate();
+        }
+        let mut cluster = d.build().expect("valid deployment");
+        assert!(cluster.run_to_completion());
+        assert_eq!(cluster.completed(), 240);
+        assert_eq!(cluster.mismatches(), 0);
+        assert!(cluster.converged());
+        let digest = cluster.probe(1).unwrap().app_digest;
+        let stats = cluster.replica(1).unwrap().stats.clone();
+        (digest, stats)
+    };
+    let (d_off, s_off) = run(false);
+    let (d_on, s_on) = run(true);
+    // One client: the same request set executes in both runs (and the KV
+    // digest — version + size — is insensitive to any cross-run timing
+    // reordering of independent SETs), so the final state must match.
+    assert_eq!(d_off, d_on, "speculative execution changed the final state");
+    // Speculation off is byte-for-byte the seed behaviour: no spec stats.
+    assert_eq!(s_off.spec_hits, 0);
+    assert_eq!(s_off.spec_rollbacks, 0);
+    assert_eq!(s_off.spec_wasted_ns, 0);
+    assert!(s_on.spec_hits > 0, "speculation never engaged");
+    assert_eq!(s_on.spec_rollbacks, 0, "fault-free run must not roll back");
+}
+
+/// Per-reply decide→apply gaps from the DES trace: the time between a
+/// slot's decide mark and each applied mark that follows it on the same
+/// replica. Inline execution puts the batch's whole execution cost in
+/// that gap; promotion releases pre-built frames in constant time.
+fn decide_to_apply_gaps(trace: &[(ubft::Nanos, ubft::NodeId, TraceEv)]) -> Vec<u64> {
+    let mut last_decide: HashMap<usize, u64> = HashMap::new();
+    let mut gaps = Vec::new();
+    for (t, node, ev) in trace {
+        if let TraceEv::Mark(label) = ev {
+            match *label {
+                "decided_fast" | "decided_slow" => {
+                    last_decide.insert(*node, *t);
+                }
+                "applied" => {
+                    if let Some(d) = last_decide.get(node) {
+                        gaps.push(t.saturating_sub(*d));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    gaps
+}
+
+#[test]
+fn speculation_takes_execution_off_the_decide_path() {
+    let run = |speculate: bool| {
+        let mut d = Deployment::new(Config::default())
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(KvWorkload::paper()))
+            .requests(300)
+            .pipeline(32)
+            .batch(8, 64 * 1024)
+            .slot_pipeline(2)
+            .trace();
+        if speculate {
+            d = d.speculate();
+        }
+        let mut cluster = d.build().expect("valid deployment");
+        assert!(cluster.run_to_completion());
+        let mut gaps = decide_to_apply_gaps(cluster.trace());
+        assert!(!gaps.is_empty(), "trace carried no decide/apply marks");
+        gaps.sort_unstable();
+        let median_gap = gaps[gaps.len() / 2];
+        let mut s = cluster.samples();
+        (median_gap, s.median())
+    };
+    let (gap_off, p50_off) = run(false);
+    let (gap_on, p50_on) = run(true);
+    // The acceptance bar: with an execution-heavy service (KV, ~0.9 µs
+    // per request) at batch 8, the median commit-to-reply (decide→apply)
+    // latency improves by well over the 20% target — promotion is
+    // constant-time while inline execution serializes the whole batch
+    // behind decide.
+    assert!(
+        (gap_on as f64) <= 0.8 * gap_off as f64,
+        "decide→apply gap only moved {gap_off} → {gap_on} ns"
+    );
+    // End-to-end latency improves too: the execution cost overlaps the
+    // certification round trips instead of extending the reply path.
+    assert!(
+        p50_on < p50_off,
+        "e2e p50 did not improve: off {p50_off} ns, on {p50_on} ns"
+    );
+}
+
+#[test]
+fn leader_crash_rolls_back_speculation_and_reexecutes_identically() {
+    // fastpath_timeout >> viewchange_timeout opens exactly the window the
+    // issue names: a slot whose PREPARE was delivered (and speculated)
+    // when the leader died cannot be rescued by the slow path before the
+    // survivors seal the view — the seal unwinds the speculation, and the
+    // new leader's re-proposal re-executes to identical state.
+    let mut total_rollbacks = 0u64;
+    for crash_at in [120 * ubft::MICRO, 150 * ubft::MICRO, 180 * ubft::MICRO] {
+        let mut cfg = Config::default();
+        cfg.fastpath_timeout = 5 * ubft::MILLI;
+        cfg.viewchange_timeout = ubft::MILLI;
+        let mut cluster = Deployment::new(cfg)
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(KvWorkload::paper()))
+            .requests(200)
+            .pipeline(16)
+            .batch(4, 64 * 1024)
+            .slot_pipeline(2)
+            .speculate()
+            .faults(FaultPlan::crash(0, crash_at))
+            .build()
+            .expect("valid deployment");
+        cluster.run_until(60 * ubft::SECOND);
+        assert_eq!(
+            cluster.samples().len(),
+            200,
+            "requests must complete after the view change (crash at {crash_at})"
+        );
+        assert_eq!(cluster.mismatches(), 0);
+        // The re-proposed batches re-executed to the identical digest.
+        let a = cluster.probe(1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+        let b = cluster.probe(2).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+        assert_eq!(a, b, "survivors diverged after speculative rollback");
+        for i in [1, 2] {
+            let st = cluster.replica(i).unwrap().stats.clone();
+            assert!(st.spec_hits > 0, "replica {i} never speculated");
+            total_rollbacks += st.spec_rollbacks;
+        }
+    }
+    assert!(
+        total_rollbacks >= 1,
+        "no crash timing left a speculated slot undecided at the seal"
+    );
+}
+
+#[test]
+fn equivocating_leader_cannot_extract_speculative_replies() {
+    // CTBcast neutralizes the equivocator before any divergent PREPARE
+    // can deliver, so divergent batches never even enter the speculation
+    // pipeline; the step-wise invariant below pins the broader guarantee
+    // the pipeline must preserve: a replica's reply-frame counter only
+    // ever grows together with its applied prefix — no reply (speculative
+    // or otherwise) leaves a replica before a slot decides and applies.
+    let attack = FaultPlan::equivocate(
+        0,
+        vec![1],
+        vec![2],
+        b"story a".to_vec(),
+        b"story b".to_vec(),
+    );
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload::paper()))
+        .requests(30)
+        .pipeline(4)
+        .batch(4, 64 * 1024)
+        .speculate()
+        .faults(attack)
+        .build()
+        .expect("valid Byzantine deployment");
+    let mut seen: HashMap<usize, (u64, u64)> = HashMap::new();
+    let mut steps = 0u64;
+    while !cluster.all_done() {
+        if cluster.step().is_none() {
+            break;
+        }
+        steps += 1;
+        if steps % 64 == 0 {
+            for i in [1usize, 2] {
+                let applied = cluster.replica(i).unwrap().applied_upto();
+                let frames = cluster.replica(i).unwrap().stats.resp_frames;
+                let (pa, pf) = seen.get(&i).copied().unwrap_or((0, 0));
+                assert!(
+                    frames == pf || applied > pa,
+                    "replica {i} released reply frames without applying \
+                     (frames {pf}→{frames}, applied {pa}→{applied})"
+                );
+                seen.insert(i, (applied, frames));
+            }
+        }
+        assert!(steps < 50_000_000, "runaway");
+    }
+    assert!(cluster.all_done(), "Byzantine leader starved the cluster");
+    assert_eq!(cluster.mismatches(), 0);
+    assert!(cluster.converged(), "correct replicas diverged under equivocation");
+    for i in [1, 2] {
+        let p = cluster.probe(i).expect("correct replica probes");
+        assert!(p.view >= 1, "replica {i} never view-changed away from the attacker");
+    }
+}
+
+#[test]
+fn read_lane_completes_with_speculation_on() {
+    // Lane reads are answered from settled (non-speculative) state only:
+    // while speculation is outstanding they park and drain at the next
+    // decide. The run must still complete with zero mismatches.
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 64, get_ratio: 0.5, hit_ratio: 0.8 }))
+        .requests(150)
+        .pipeline(8)
+        .batch(4, 64 * 1024)
+        .speculate()
+        .reads(ReadMode::Linearizable)
+        .build()
+        .expect("valid deployment");
+    assert!(cluster.run_to_completion());
+    assert_eq!(cluster.completed(), 150);
+    assert_eq!(cluster.mismatches(), 0);
+    assert!(cluster.converged());
+}
