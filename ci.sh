@@ -21,6 +21,14 @@ echo "== read-mix smoke: ubft scaling --reads 90 =="
 # direct).
 UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --reads 90
 
+echo "== sharded smoke: ubft scaling --shards 4 --cross 10 =="
+# Short end-to-end run of the shard subsystem: the settlement workload
+# (order book + KV accounts, 10% cross-shard 2PC transactions) on one
+# consensus group vs four. Asserts aggregate decided-request throughput
+# scales >= 2x over the batch-matched single-group baseline and that
+# cross-shard transactions commit.
+UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --shards 4 --cross 10
+
 echo "== real-mode batching smoke: example real_batching =="
 # build_real() + .batch(..) + .slot_pipeline(..) on OS threads, printing
 # the leader's measured batch occupancy (the ROADMAP real-mode demo).

@@ -15,6 +15,11 @@ use std::collections::{BTreeMap, VecDeque};
 pub const OP_GET: u8 = 1;
 pub const OP_SET: u8 = 2;
 pub const OP_DELETE: u8 = 3;
+/// Atomic signed add: value is an 8-byte LE `i64` delta, a missing key
+/// counts as 0, and a result that would go negative fails with
+/// [`ST_ERR`] *without mutating* — the balance-safe account primitive
+/// the cross-shard settlement scenario debits through.
+pub const OP_ADD: u8 = 4;
 
 /// Response status.
 pub const ST_OK: u8 = 0;
@@ -40,6 +45,15 @@ pub fn set(key: &[u8], value: &[u8]) -> Vec<u8> {
 pub fn delete(key: &[u8]) -> Vec<u8> {
     let mut v = vec![OP_DELETE, key.len() as u8];
     v.extend_from_slice(key);
+    v
+}
+
+/// Encode an ADD request (atomic signed add of `delta` to the key's
+/// 8-byte LE `i64` value; see [`OP_ADD`]).
+pub fn add(key: &[u8], delta: i64) -> Vec<u8> {
+    let mut v = vec![OP_ADD, key.len() as u8];
+    v.extend_from_slice(key);
+    v.extend_from_slice(&delta.to_le_bytes());
     v
 }
 
@@ -71,6 +85,39 @@ impl KvApp {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// Current `i64` balance of `key` (`None` if absent or the stored
+    /// value is not an 8-byte integer).
+    pub fn balance(&self, key: &[u8]) -> Option<i64> {
+        self.map
+            .get(key)
+            .and_then(|v| <&[u8] as TryInto<[u8; 8]>>::try_into(v.as_slice()).ok())
+            .map(i64::from_le_bytes)
+    }
+
+    /// The value an [`OP_ADD`] would leave behind, or `None` if it would
+    /// fail (malformed delta, non-integer current value, overflow, or a
+    /// negative result). Shared by `execute` and `validate` so the
+    /// prepare-time check and the commit-time transition always agree.
+    fn add_result(&self, key: &[u8], value: &[u8]) -> Option<i64> {
+        let delta = i64::from_le_bytes(value.try_into().ok()?);
+        let cur = match self.map.get(key) {
+            None => 0i64,
+            Some(v) => i64::from_le_bytes(v.as_slice().try_into().ok()?),
+        };
+        let next = cur.checked_add(delta)?;
+        (next >= 0).then_some(next)
+    }
+}
+
+/// Decode a [`KvApp`] snapshot into `(version, map)` — used by sharding
+/// tests to audit account balances straight out of replica state.
+pub fn decode_snapshot(snap: &[u8]) -> Option<(u64, BTreeMap<Vec<u8>, Vec<u8>>)> {
+    let mut r = crate::util::wire::WireReader::new(snap);
+    let version = r.u64().ok()?;
+    let map = crate::util::wire::get_map(&mut r).ok()?;
+    r.done().ok()?;
+    Some((version, map))
 }
 
 impl Default for KvApp {
@@ -171,7 +218,33 @@ impl Service for KvApp {
                     vec![ST_MISS]
                 }
             }
+            OP_ADD => match self.add_result(key, value) {
+                Some(next) => {
+                    self.version += 1;
+                    self.map.insert(key.to_vec(), next.to_le_bytes().to_vec());
+                    let mut out = vec![ST_OK];
+                    out.extend_from_slice(&next.to_le_bytes());
+                    out
+                }
+                None => vec![ST_ERR],
+            },
             _ => vec![ST_ERR],
+        }
+    }
+
+    fn keys(&self, req: &[u8]) -> Vec<Vec<u8>> {
+        match parse(req) {
+            Some((_, key, _)) => vec![key.to_vec()],
+            None => Vec::new(),
+        }
+    }
+
+    fn validate(&self, req: &[u8]) -> bool {
+        let Some((op, key, value)) = parse(req) else { return false };
+        match op {
+            OP_ADD => self.add_result(key, value).is_some(),
+            OP_GET | OP_SET | OP_DELETE => true,
+            _ => false,
         }
     }
 
@@ -181,7 +254,7 @@ impl Service for KvApp {
             .iter()
             .map(|r| {
                 if let Some((op, key, _)) = parse(&r.payload) {
-                    if matches!(op, OP_SET | OP_DELETE) {
+                    if matches!(op, OP_SET | OP_DELETE | OP_ADD) {
                         undo.writes.push((key.to_vec(), self.map.get(key).cloned()));
                     }
                 }
@@ -393,6 +466,37 @@ mod tests {
         kv.commit_speculation(t1);
         kv.commit_speculation(t2);
         assert_eq!(kv.execute(&get(b"k1")), vec![ST_MISS]);
+    }
+
+    #[test]
+    fn add_is_balance_safe() {
+        let mut kv = KvApp::new();
+        // Missing key counts as zero; negative results are rejected
+        // without mutating.
+        assert_eq!(kv.execute(&add(b"acct", -1)), vec![ST_ERR]);
+        assert!(kv.balance(b"acct").is_none());
+        assert_eq!(kv.execute(&add(b"acct", 100))[0], ST_OK);
+        assert_eq!(kv.balance(b"acct"), Some(100));
+        // validate() mirrors execute() exactly.
+        assert!(kv.validate(&add(b"acct", -100)));
+        assert!(!kv.validate(&add(b"acct", -101)));
+        assert_eq!(kv.execute(&add(b"acct", -101)), vec![ST_ERR]);
+        assert_eq!(kv.balance(b"acct"), Some(100));
+        assert_eq!(kv.execute(&add(b"acct", -40))[0], ST_OK);
+        assert_eq!(kv.balance(b"acct"), Some(60));
+        // keys() exposes the touched key for the shard router/lock table.
+        assert_eq!(kv.keys(&add(b"acct", 1)), vec![b"acct".to_vec()]);
+        // The balance survives a snapshot round-trip and is auditable
+        // through the decoder the sharding tests use.
+        let (_, map) = decode_snapshot(&kv.snapshot()).expect("decodable snapshot");
+        assert_eq!(map.get(&b"acct".to_vec()), Some(&60i64.to_le_bytes().to_vec()));
+        // Speculative undo covers ADD.
+        let snap = kv.snapshot();
+        let mk = |payload: Vec<u8>| Request { client: 9, rid: 9, payload };
+        let (tok, _) = kv.apply_speculative(&[mk(add(b"acct", -10))]);
+        assert_eq!(kv.balance(b"acct"), Some(50));
+        kv.rollback_speculation(tok);
+        assert_eq!(kv.snapshot(), snap);
     }
 
     #[test]

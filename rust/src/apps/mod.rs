@@ -6,6 +6,10 @@
 //!   (strings, counters, lists);
 //! * [`orderbook::OrderBookApp`] — a Liquibook-style financial limit-order
 //!   matching engine (price-time priority, BUY/SELL, partial fills);
+//! * [`settle::SettleApp`] — the cross-shard settlement scenario: the
+//!   order book and a KV account store behind one envelope, debited
+//!   atomically by two-phase cross-shard transactions
+//!   ([`crate::shard`]);
 //! * [`tensor::TensorApp`] — a BFT-replicated tensor service executing an
 //!   AOT-compiled JAX/Pallas MLP via the PJRT runtime (the three-layer
 //!   end-to-end demonstration);
@@ -22,10 +26,12 @@ pub mod flip;
 pub mod kv;
 pub mod orderbook;
 pub mod redis_like;
+pub mod settle;
 pub mod tensor;
 
 pub use flip::FlipApp;
 pub use kv::KvApp;
 pub use orderbook::OrderBookApp;
 pub use redis_like::RedisApp;
+pub use settle::{SettleApp, SettleWorkload};
 pub use tensor::TensorApp;

@@ -23,6 +23,12 @@ pub enum Side {
     Sell,
 }
 
+/// The single logical key every order touches (see
+/// [`Service::keys`]): the book is one serialization domain, so a
+/// sharded deployment homes the matching engine on one shard and
+/// settlement transactions lock the book as a whole.
+pub const BOOK_KEY: &[u8] = b"!book";
+
 /// Wire format of an order request (32 B):
 /// `side(1) ‖ pad(3) ‖ price(4) ‖ qty(4) ‖ order_id(8) ‖ pad(12)`.
 pub fn order(side: Side, price: u32, qty: u32, id: u64) -> Vec<u8> {
@@ -395,6 +401,19 @@ impl Service for OrderBookApp {
                     self.undo_order(undo);
                 }
             }
+        }
+    }
+
+    fn keys(&self, req: &[u8]) -> Vec<Vec<u8>> {
+        // The whole book is one serialization domain: every order
+        // touches the same logical key, so a sharded deployment keeps
+        // the matching engine on a single home shard and cross-shard
+        // settlement transactions lock the book alongside the accounts
+        // they debit.
+        if req.len() == 32 {
+            vec![BOOK_KEY.to_vec()]
+        } else {
+            Vec::new()
         }
     }
 

@@ -1,0 +1,378 @@
+//! Cross-shard settlement scenario (the sharding flagship): a
+//! Liquibook-style matching engine on one shard settling against a
+//! KV account shard, glued by two-phase cross-shard transactions.
+//!
+//! [`SettleApp`] hosts *both* sub-services behind one envelope byte —
+//! [`SUB_BOOK`] requests go to the embedded [`OrderBookApp`],
+//! [`SUB_KV`] requests to the embedded [`KvApp`] — and every extracted
+//! key is prefixed with its sub-service byte, so the partitioner sees
+//! disjoint keyspaces: the book (one logical key) homes on a single
+//! shard while accounts spread across the rest.
+//!
+//! [`SettleWorkload`] drives the paper-style mixed load: it funds a
+//! per-client account range, then issues `cross_ratio` settlement
+//! transactions ([`crate::shard::tx_request`] of one order + one
+//! account debit) amid plain KV traffic. The atomicity invariant the
+//! sharding tests audit straight out of replica snapshots:
+//! `settled_orders × SETTLE_AMOUNT == total funded − Σ account
+//! balances` — no settled order without its matching debit, and no
+//! debit without its settled order.
+
+use crate::apps::kv::{self, KvApp};
+use crate::apps::orderbook::{self, OrderBookApp, Side};
+use crate::crypto::{hash_parts, Hash32};
+use crate::rpc::Workload;
+use crate::shard;
+use crate::smr::{Checkpointable, Operation, Service};
+use crate::util::wire::{WireReader, WireWriter};
+use crate::util::Rng;
+use crate::Nanos;
+
+/// Envelope byte of a request for the embedded KV store.
+pub const SUB_KV: u8 = b'K';
+/// Envelope byte of a request for the embedded matching engine.
+pub const SUB_BOOK: u8 = b'B';
+
+/// Initial balance funded into every account.
+pub const FUND: i64 = 1_000_000;
+/// Amount debited per settled order.
+pub const SETTLE_AMOUNT: i64 = 500;
+
+/// Wrap a KV request in the settle envelope.
+pub fn kv_req(inner: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(1 + inner.len());
+    v.push(SUB_KV);
+    v.extend_from_slice(inner);
+    v
+}
+
+/// Wrap an order-book request in the settle envelope.
+pub fn book_req(inner: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(1 + inner.len());
+    v.push(SUB_BOOK);
+    v.extend_from_slice(inner);
+    v
+}
+
+/// Account key for `(client, idx)` — namespaced per client so clients
+/// fund and debit disjoint ranges. Keys carry the `b"acct"` marker the
+/// audit helpers filter on.
+pub fn account_key(client: usize, idx: usize) -> Vec<u8> {
+    let mut k = Vec::with_capacity(12);
+    k.extend_from_slice(b"acct");
+    k.extend_from_slice(&(client as u32).to_le_bytes());
+    k.extend_from_slice(&(idx as u32).to_le_bytes());
+    k
+}
+
+/// Scratch key for the plain (non-transactional) KV traffic; disjoint
+/// from the account range.
+pub fn scratch_key(client: usize, idx: usize) -> Vec<u8> {
+    let mut k = Vec::with_capacity(12);
+    k.extend_from_slice(b"scr-");
+    k.extend_from_slice(&(client as u32).to_le_bytes());
+    k.extend_from_slice(&(idx as u32).to_le_bytes());
+    k
+}
+
+/// The combined settlement service: order book + account store behind
+/// one envelope, with a replicated `settled` counter the tests audit.
+pub struct SettleApp {
+    book: OrderBookApp,
+    kv: KvApp,
+    /// Successfully executed book orders. Orders only ever arrive
+    /// inside settlement transactions, so at any committed state this
+    /// must equal the number of account debits.
+    settled: u64,
+}
+
+impl SettleApp {
+    pub fn new() -> SettleApp {
+        SettleApp { book: OrderBookApp::new(), kv: KvApp::new(), settled: 0 }
+    }
+
+    pub fn settled(&self) -> u64 {
+        self.settled
+    }
+
+    pub fn kv(&self) -> &KvApp {
+        &self.kv
+    }
+
+    pub fn book(&self) -> &OrderBookApp {
+        &self.book
+    }
+}
+
+impl Default for SettleApp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Decode a [`SettleApp`] snapshot into `(settled, book snapshot, kv
+/// snapshot)`; compose with [`kv::decode_snapshot`] to audit balances.
+pub fn decode_snapshot(snap: &[u8]) -> Option<(u64, Vec<u8>, Vec<u8>)> {
+    let mut r = WireReader::new(snap);
+    let settled = r.u64().ok()?;
+    let book = r.bytes().ok()?;
+    let kv = r.bytes().ok()?;
+    r.done().ok()?;
+    Some((settled, book, kv))
+}
+
+impl Checkpointable for SettleApp {
+    fn digest(&self) -> Hash32 {
+        let settled = self.settled.to_le_bytes();
+        let book = self.book.digest();
+        let kv = self.kv.digest();
+        hash_parts(&[&settled[..], &book.0[..], &kv.0[..]])
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u64(self.settled);
+        w.bytes(&self.book.snapshot());
+        w.bytes(&self.kv.snapshot());
+        w.finish()
+    }
+
+    fn restore(&mut self, snap: &[u8]) {
+        let Some((settled, book, kv)) = decode_snapshot(snap) else { return };
+        self.settled = settled;
+        self.book.restore(&book);
+        self.kv.restore(&kv);
+    }
+}
+
+impl Service for SettleApp {
+    fn classify(&self, req: &[u8]) -> Operation {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => self.kv.classify(rest),
+            _ => Operation::ReadWrite,
+        }
+    }
+
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => self.kv.execute(rest),
+            Some((&SUB_BOOK, rest)) => {
+                let resp = self.book.execute(rest);
+                // Only a successful execution report counts as settled.
+                if resp.first() == Some(&0) {
+                    self.settled += 1;
+                }
+                resp
+            }
+            _ => vec![kv::ST_ERR],
+        }
+    }
+
+    fn query(&self, req: &[u8]) -> Vec<u8> {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => self.kv.query(rest),
+            _ => vec![kv::ST_ERR],
+        }
+    }
+
+    fn keys(&self, req: &[u8]) -> Vec<Vec<u8>> {
+        // Prefix every extracted key with its sub-service byte so the
+        // partitioner sees disjoint book/account keyspaces.
+        let prefix = |sub: u8, keys: Vec<Vec<u8>>| {
+            keys.into_iter()
+                .map(|k| {
+                    let mut p = Vec::with_capacity(1 + k.len());
+                    p.push(sub);
+                    p.extend_from_slice(&k);
+                    p
+                })
+                .collect()
+        };
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => prefix(SUB_KV, self.kv.keys(rest)),
+            Some((&SUB_BOOK, rest)) => prefix(SUB_BOOK, self.book.keys(rest)),
+            _ => Vec::new(),
+        }
+    }
+
+    fn validate(&self, req: &[u8]) -> bool {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => self.kv.validate(rest),
+            Some((&SUB_BOOK, rest)) => rest.len() == 32 && matches!(rest[0], 1 | 2),
+            _ => false,
+        }
+    }
+
+    fn sim_cost(&self, req: &[u8]) -> Nanos {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => self.kv.sim_cost(rest),
+            Some((&SUB_BOOK, rest)) => self.book.sim_cost(rest),
+            _ => 300,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "settle"
+    }
+}
+
+/// Mixed settlement workload: fund `accounts` per-client accounts, then
+/// issue `cross_ratio` cross-shard settlement transactions (one order +
+/// one account debit) amid plain KV traffic on scratch keys.
+pub struct SettleWorkload {
+    client: usize,
+    accounts: usize,
+    cross_ratio: f64,
+    funded: usize,
+    next_order: u64,
+}
+
+impl SettleWorkload {
+    pub fn new(client: usize, accounts: usize, cross_ratio: f64) -> SettleWorkload {
+        SettleWorkload { client, accounts, cross_ratio, funded: 0, next_order: 0 }
+    }
+}
+
+impl Workload for SettleWorkload {
+    fn next_request(&mut self, rng: &mut Rng) -> Vec<u8> {
+        if self.funded < self.accounts {
+            let k = account_key(self.client, self.funded);
+            self.funded += 1;
+            return kv_req(&kv::add(&k, FUND));
+        }
+        if rng.chance(self.cross_ratio) {
+            // Settlement: one order against the book shard, one debit
+            // against the account shard, atomically.
+            let side = if rng.chance(0.5) { Side::Buy } else { Side::Sell };
+            let price = (9_975 + rng.range(0, 50)) as u32;
+            let qty = (1 + rng.range(0, 8)) as u32;
+            self.next_order += 1;
+            let id = ((self.client as u64) << 32) | self.next_order;
+            let order = book_req(&orderbook::order(side, price, qty, id));
+            let acct = account_key(self.client, rng.range(0, self.accounts));
+            let debit = kv_req(&kv::add(&acct, -SETTLE_AMOUNT));
+            shard::tx_request(&[order, debit])
+        } else {
+            let idx = rng.range(0, 64);
+            if rng.chance(0.3) {
+                kv_req(&kv::get(&scratch_key(self.client, idx)))
+            } else {
+                kv_req(&kv::set(&scratch_key(self.client, idx), &rng.bytes(16)))
+            }
+        }
+    }
+
+    fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
+        if req.first() == Some(&shard::TAG_TX) {
+            // A transaction must resolve to a definite outcome; both
+            // commit and abort are legitimate (aborts happen under
+            // contention, timeouts, and unfunded accounts).
+            resp.len() >= 2
+                && resp[0] == shard::TAG_CTL
+                && matches!(resp[1], shard::TX_COMMITTED | shard::TX_ABORTED)
+        } else {
+            // Plain ops may be rejected by a transaction's lock
+            // (TX_LOCKED) — any non-empty deterministic reply is fine.
+            !resp.is_empty()
+        }
+    }
+
+    fn classify(&self, req: &[u8]) -> Operation {
+        match req.split_first() {
+            Some((&SUB_KV, rest)) => kv::classify_op(rest),
+            _ => Operation::ReadWrite,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "settle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_dispatches_and_counts_settlements() {
+        let mut app = SettleApp::new();
+        assert_eq!(app.execute(&kv_req(&kv::set(b"k", b"v"))), vec![kv::ST_OK]);
+        let got = app.query(&kv_req(&kv::get(b"k")));
+        assert_eq!(got[0], kv::ST_OK);
+        assert_eq!(&got[1..], b"v");
+        assert_eq!(app.settled(), 0);
+        let resp = app.execute(&book_req(&orderbook::order(Side::Buy, 100, 5, 1)));
+        assert_eq!(resp[0], 0);
+        assert_eq!(app.settled(), 1);
+        // Malformed and mis-routed requests are rejected, not settled.
+        assert_eq!(app.execute(&book_req(b"short")), vec![1]);
+        assert_eq!(app.execute(b"no-envelope"), vec![kv::ST_ERR]);
+        assert_eq!(app.settled(), 1);
+    }
+
+    #[test]
+    fn keys_are_namespaced_per_sub_service() {
+        let app = SettleApp::new();
+        let book_keys = app.keys(&book_req(&orderbook::order(Side::Sell, 10, 1, 2)));
+        assert_eq!(book_keys.len(), 1);
+        assert_eq!(book_keys[0][0], SUB_BOOK);
+        let kv_keys = app.keys(&kv_req(&kv::add(&account_key(0, 0), -1)));
+        assert_eq!(kv_keys.len(), 1);
+        assert_eq!(kv_keys[0][0], SUB_KV);
+        assert_ne!(book_keys[0], kv_keys[0]);
+        // Classification: only embedded-KV GETs ride the read lane.
+        assert_eq!(app.classify(&kv_req(&kv::get(b"k"))), Operation::ReadOnly);
+        assert_eq!(app.classify(&kv_req(&kv::set(b"k", b"v"))), Operation::ReadWrite);
+        assert_eq!(
+            app.classify(&book_req(&orderbook::order(Side::Buy, 1, 1, 3))),
+            Operation::ReadWrite
+        );
+    }
+
+    #[test]
+    fn snapshot_round_trips_with_settled_counter() {
+        let mut app = SettleApp::new();
+        app.execute(&kv_req(&kv::add(&account_key(1, 0), FUND)));
+        app.execute(&book_req(&orderbook::order(Side::Buy, 50, 2, 7)));
+        let snap = app.snapshot();
+        let digest = app.digest();
+        let (settled, _book, kvsnap) = decode_snapshot(&snap).expect("decodable");
+        assert_eq!(settled, 1);
+        let (_, map) = kv::decode_snapshot(&kvsnap).expect("kv decodable");
+        assert_eq!(
+            map.get(&account_key(1, 0)),
+            Some(&FUND.to_le_bytes().to_vec())
+        );
+        let mut fresh = SettleApp::new();
+        fresh.restore(&snap);
+        assert_eq!(fresh.digest(), digest);
+        assert_eq!(fresh.settled(), 1);
+    }
+
+    #[test]
+    fn workload_mix_is_well_formed() {
+        let mut w = SettleWorkload::new(3, 4, 0.5);
+        let mut rng = Rng::new(11);
+        let mut app = SettleApp::new();
+        let (mut txs, mut plain) = (0, 0);
+        for i in 0..500 {
+            let req = w.next_request(&mut rng);
+            if let Some(ops) = shard::parse_tx_request(&req) {
+                assert!(i >= 4, "funding precedes transactions");
+                assert_eq!(ops.len(), 2);
+                assert_eq!(ops[0][0], SUB_BOOK);
+                assert_eq!(ops[1][0], SUB_KV);
+                // Both legs validate against a funded account state.
+                assert!(app.validate(&ops[0]));
+                assert!(app.validate(&ops[1]));
+                txs += 1;
+            } else {
+                let resp = app.execute(&req);
+                assert!(w.check_response(&req, &resp));
+                plain += 1;
+            }
+        }
+        assert!(txs > 100, "cross-shard mix present: {txs}");
+        assert!(plain > 100, "plain mix present: {plain}");
+    }
+}

@@ -106,6 +106,10 @@ struct SpecEntry {
     cache_undo: Vec<CacheUndo>,
     /// Execution cost charged for the speculation (wasted on rollback).
     cost: Nanos,
+    /// Survived a view seal: speculated in a dead view, awaiting the new
+    /// view's re-proposal verdict (identical batch promotes; a
+    /// conflicting one unwinds the stack at apply time).
+    sealed: bool,
 }
 
 /// Undo record for one speculative insert into the at-most-once reply
@@ -166,6 +170,15 @@ pub struct ReplicaStats {
     /// Simulated execution nanoseconds charged for speculations that
     /// later rolled back (the wasted-work budget of the pipeline).
     pub spec_wasted_ns: u64,
+    /// Speculations kept alive across a view seal instead of being
+    /// unwound: the decided re-proposal is the arbiter — an identical
+    /// batch promotes the existing speculation, a conflicting one rolls
+    /// the stack back at apply time.
+    pub spec_seal_kept: u64,
+    /// Seal-surviving speculations whose re-proposed batch matched and
+    /// promoted — the execution carried across the view change for free
+    /// (subset of `spec_hits`).
+    pub spec_promoted_across_views: u64,
 }
 
 impl ReplicaStats {
@@ -895,6 +908,7 @@ impl Replica {
                 frames: Vec::new(),
                 cache_undo: Vec::new(),
                 cost: 0,
+                sealed: false,
             });
             return;
         }
@@ -934,6 +948,7 @@ impl Replica {
             frames,
             cache_undo,
             cost,
+            sealed: false,
         });
     }
 
@@ -955,6 +970,9 @@ impl Replica {
     fn promote_speculation(&mut self, env: &mut dyn Env, slot: u64) {
         let e = self.spec.pop_front().unwrap();
         debug_assert_eq!(e.slot, slot);
+        if e.sealed {
+            self.stats.spec_promoted_across_views += 1;
+        }
         self.applied_upto = slot + 1;
         if let Some(token) = e.token {
             self.service.commit_speculation(token);
@@ -1579,11 +1597,22 @@ impl Replica {
         self.sealing = None;
         self.stats.view_changes += 1;
         self.last_progress = env.now();
-        // Speculations from the dead view may be re-proposed differently
-        // (or replaced by no-ops): unwind them before entering the new
-        // view. No withheld reply ever left the replica, so a conflicting
-        // re-proposal is invisible to clients.
-        self.rollback_all_speculation(env);
+        // Speculations from the dead view are *kept*, not unwound: the
+        // execution-identity digest is view-independent, so when the new
+        // leader re-proposes the identical batch (the common case — a
+        // view change triggered by a follower crash re-certifies exactly
+        // what was endorsed) the decided slot promotes the existing
+        // speculation instead of re-executing; a conflicting re-proposal
+        // still rolls the whole stack back at apply time. Either way no
+        // withheld reply ever left the replica, so clients cannot
+        // observe the difference.
+        self.stats.spec_seal_kept += self.spec.len() as u64;
+        for e in self.spec.iter_mut() {
+            e.sealed = true;
+        }
+        if !self.spec.is_empty() {
+            env.mark("spec_seal_kept");
+        }
         // Requests proposed in dead views may never decide there; they
         // become proposable again (execution dedups by client rid).
         self.proposed.clear();

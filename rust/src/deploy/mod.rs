@@ -41,6 +41,39 @@
 //!
 //! Real-thread deployments (OS threads, real Ed25519 — the `examples/`)
 //! use the same description via [`Deployment::build_real`].
+//!
+//! # Sharded deployments
+//!
+//! [`Deployment::shards`] partitions the keyspace across N independent
+//! uBFT consensus groups (see [`crate::shard`]): the partitioner maps
+//! each key to its home group, every replica's service is wrapped in a
+//! two-phase-commit participant, and each client gets a router that
+//! steers requests — and direct/linearizable reads — to the right
+//! group. Multi-key [`crate::shard::tx_request`] payloads commit
+//! atomically across their touched shards (prepare/lock everywhere,
+//! then commit/abort through each shard's consensus):
+//!
+//! ```no_run
+//! use ubft::apps::{kv::KvWorkload, KvApp};
+//! use ubft::config::Config;
+//! use ubft::deploy::Deployment;
+//! use ubft::shard::HashPartitioner;
+//!
+//! let mut cluster = Deployment::new(Config::default())
+//!     .app(|| Box::new(KvApp::new()))
+//!     .shards(4, HashPartitioner)
+//!     .clients(8, |_i| Box::new(KvWorkload::paper()))
+//!     .requests(500)
+//!     .build()
+//!     .expect("valid sharded deployment");
+//! cluster.run_to_completion();
+//! assert!(cluster.converged()); // per-group state agreement
+//! ```
+//!
+//! Consistency model: single-key operations are linearizable within
+//! their shard (each shard *is* a uBFT group, and the read-lane
+//! freshness protocol applies per group); cross-shard transactions are
+//! serializable via strict two-phase locking at the participants.
 
 use crate::byz::{
     EquivocatingBroadcaster, ForgedSlotReplier, GarbageRegisterWriter, StaleReadReplier,
@@ -392,6 +425,11 @@ pub enum DeployError {
     /// whose servers don't speak the read lane (the baselines answer
     /// `Request` frames only).
     ReadLaneUnsupported(&'static str),
+    /// `.shards(0, ..)` — a sharded deployment needs at least one group.
+    ZeroShards,
+    /// Sharding combined with a feature the shard spawner can't honour
+    /// (non-uBFT systems, custom spawners, Byzantine replacements).
+    ShardingUnsupported(&'static str),
 }
 
 impl std::fmt::Display for DeployError {
@@ -430,6 +468,12 @@ impl std::fmt::Display for DeployError {
             }
             DeployError::ReadLaneUnsupported(sys) => {
                 write!(f, "non-consensus read modes require a uBFT system, got {sys}")
+            }
+            DeployError::ZeroShards => {
+                write!(f, "sharded deployment needs at least one shard")
+            }
+            DeployError::ShardingUnsupported(what) => {
+                write!(f, "sharding does not support {what}")
             }
         }
     }
@@ -565,6 +609,11 @@ pub struct Deployment {
     presend: Option<Nanos>,
     faults: FaultPlan,
     trace: bool,
+    /// Partition the keyspace across this many independent uBFT groups
+    /// (see [`crate::shard`]).
+    shards: Option<(usize, Arc<dyn crate::shard::Partitioner>)>,
+    /// Client-side prepare timeout for cross-shard transactions.
+    tx_timeout: Option<Nanos>,
 }
 
 impl Deployment {
@@ -588,6 +637,8 @@ impl Deployment {
             presend: None,
             faults: FaultPlan::none(),
             trace: false,
+            shards: None,
+            tx_timeout: None,
         }
     }
 
@@ -713,6 +764,31 @@ impl Deployment {
         self
     }
 
+    /// Partition the keyspace across `n` independent uBFT consensus
+    /// groups (see [`crate::shard`]): `partitioner` maps each key
+    /// ([`Service::keys`]) to its home group, every replica's service is
+    /// wrapped in a two-phase-commit participant
+    /// ([`crate::shard::TxService`]), and clients route per request —
+    /// [`crate::shard::tx_request`] payloads commit atomically across
+    /// their touched groups. Consistency: per-key linearizable,
+    /// cross-shard serializable. uBFT systems only.
+    pub fn shards(
+        mut self,
+        n: usize,
+        partitioner: impl crate::shard::Partitioner + 'static,
+    ) -> Deployment {
+        self.shards = Some((n, Arc::new(partitioner)));
+        self
+    }
+
+    /// Abort a cross-shard transaction whose prepare phase has stalled
+    /// this long (default 10 ms virtual time) — the liveness escape when
+    /// a participant shard is wedged, e.g. mid view change.
+    pub fn tx_timeout(mut self, ns: Nanos) -> Deployment {
+        self.tx_timeout = Some(ns);
+        self
+    }
+
     /// Enable Fig-9-style tracing (marks and charges).
     pub fn trace(mut self) -> Deployment {
         self.trace = true;
@@ -768,6 +844,11 @@ impl Deployment {
         self.read_mode.unwrap_or(self.cfg.read_mode)
     }
 
+    /// Consensus groups deployed (1 unless [`Deployment::shards`]).
+    fn shard_count(&self) -> usize {
+        self.shards.as_ref().map_or(1, |(s, _)| *s)
+    }
+
     fn validate(&self) -> Result<(), DeployError> {
         self.cfg.validate().map_err(DeployError::InvalidConfig)?;
         if self.n_clients() == 0 {
@@ -796,7 +877,24 @@ impl Deployment {
                 return Err(DeployError::OversizedBatch { reqs, window: self.cfg.window });
             }
         }
-        let nodes = self.system.server_actors(&self.cfg) + self.n_clients();
+        if self.shards.is_some() {
+            if self.shard_count() == 0 {
+                return Err(DeployError::ZeroShards);
+            }
+            if !self.system.is_ubft() {
+                return Err(DeployError::ShardingUnsupported(self.system.label()));
+            }
+            if self.custom_spawner.is_some() {
+                return Err(DeployError::ShardingUnsupported("custom spawners"));
+            }
+            if !self.faults.byz.is_empty() {
+                return Err(DeployError::ShardingUnsupported(
+                    "Byzantine replica replacement",
+                ));
+            }
+        }
+        let nodes =
+            self.system.server_actors(&self.cfg) * self.shard_count() + self.n_clients();
         if !self.faults.byz.is_empty() {
             if !self.system.is_ubft() {
                 return Err(DeployError::ByzUnsupported(self.system.label()));
@@ -893,8 +991,19 @@ impl Deployment {
         }
         sim.set_faults(self.faults.net.clone());
         let custom = self.custom_spawner.is_some();
-        let spawner =
-            self.custom_spawner.take().unwrap_or_else(|| self.system.spawner());
+        // Captured before the partial moves below: the shard spec and app
+        // factory outlive the builder because every client's router needs
+        // its own service instance for key extraction.
+        let shard_spec = self.shards.clone();
+        let app = self.app.clone();
+        let spawner: Box<dyn SystemSpawner> = match (&shard_spec, self.custom_spawner.take())
+        {
+            // validate() rejected shards + custom spawner, so sharding
+            // owning the spawner here never shadows a custom one.
+            (Some((s, _)), _) => Box::new(crate::shard::ShardSpawner { shards: *s }),
+            (None, Some(sp)) => sp,
+            (None, None) => self.system.spawner(),
+        };
         let (replicas, quorum) = (spawner.spawn(&self, &mut sim), spawner.quorum(&self.cfg));
         let (pipeline, think, presend, read_mode) = (
             self.resolved_pipeline(),
@@ -904,9 +1013,16 @@ impl Deployment {
         );
         let (requests, system, cfg) = (self.requests, self.system, self.cfg.clone());
         let byz = self.faults.byz_replicas();
+        let sharded = shard_spec.as_ref().map(|(s, _)| *s);
+        let groups: Vec<Vec<NodeId>> = if shard_spec.is_some() {
+            replicas.chunks(cfg.n.max(1)).map(|c| c.to_vec()).collect()
+        } else {
+            Vec::new()
+        };
+        let tx_timeout = self.tx_timeout;
         let mut clients = Vec::new();
         for workload in Deployment::take_workloads(self.clients) {
-            let client = Client::new(workload)
+            let mut client = Client::new(workload)
                 .with_replicas(replicas.clone())
                 .with_quorum(quorum)
                 .with_max_requests(requests)
@@ -914,12 +1030,21 @@ impl Deployment {
                 .with_read_mode(read_mode)
                 .with_think(think)
                 .with_presend_charge(presend);
+            if let Some((s, p)) = &shard_spec {
+                client = client.with_shards(
+                    groups.clone(),
+                    crate::shard::ShardRouter::new((app)(), p.clone(), *s),
+                );
+            }
+            if let Some(ns) = tx_timeout {
+                client = client.with_tx_timeout(ns);
+            }
             let (samples, done, stats) =
                 (client.samples_handle(), client.done_handle(), client.stats_handle());
             let id = sim.add_actor(Box::new(client));
             clients.push(ClientHandle { id, samples, done, stats });
         }
-        Ok(Cluster { sim, cfg, system, custom, replicas, byz, clients })
+        Ok(Cluster { sim, cfg, system, custom, replicas, byz, clients, sharded })
     }
 
     /// Validate and instantiate the deployment on OS threads with real
@@ -932,6 +1057,9 @@ impl Deployment {
             return Err(DeployError::RealModeUnsupported(
                 "fault plans (crash memory nodes live via RealHandle::mem)",
             ));
+        }
+        if self.shards.is_some() {
+            return Err(DeployError::RealModeUnsupported("sharded deployments"));
         }
         self.apply_perf_knobs();
         let mut cluster = RealCluster::new(self.cfg.m, self.cfg.seed);
@@ -1033,6 +1161,10 @@ pub struct Cluster {
     replicas: Vec<NodeId>,
     byz: Vec<NodeId>,
     clients: Vec<ClientHandle>,
+    /// `Some(s)` when deployed via [`Deployment::shards`]: `s` groups of
+    /// `cfg.n` replicas each, hosted in [`crate::shard::ShardedReplica`]
+    /// wrappers (introspection downcasts accordingly).
+    sharded: Option<usize>,
 }
 
 impl Cluster {
@@ -1129,13 +1261,30 @@ impl Cluster {
         self.clients.iter().map(|c| c.stats().mismatches).sum()
     }
 
+    /// Consensus groups in this deployment (1 unless sharded).
+    pub fn shard_count(&self) -> usize {
+        self.sharded.unwrap_or(1)
+    }
+
     /// Borrow a (correct, uBFT) replica for introspection. `None` for
     /// baselines, custom-spawned systems, and Byzantine-replaced slots.
+    /// Sharded deployments expose all `shards · n` replicas (replica `i`
+    /// belongs to group `i / n`).
     pub fn replica(&mut self, i: NodeId) -> Option<&Replica> {
-        if self.custom || !self.system.is_ubft() || i >= self.cfg.n || self.byz.contains(&i) {
+        let total = self.cfg.n * self.shard_count();
+        if self.custom || !self.system.is_ubft() || i >= total || self.byz.contains(&i) {
             return None;
         }
         let actor = self.sim.actor_mut(i);
+        if self.sharded.is_some() {
+            // The shard spawner put a `ShardedReplica` wrapper in every
+            // slot `0..shards·n`, so this downcast is sound under the
+            // guard above.
+            let w = unsafe {
+                &*(actor as *const dyn crate::env::Actor as *const crate::shard::ShardedReplica)
+            };
+            return Some(w.replica());
+        }
         // The uBFT spawner put a `Replica` in every non-Byzantine slot
         // `0..n`, so the downcast is sound under the guard above.
         Some(unsafe { &*(actor as *const dyn crate::env::Actor as *const Replica) })
@@ -1153,19 +1302,30 @@ impl Cluster {
         })
     }
 
-    /// `(applied_upto, app_digest)` for every correct uBFT replica.
+    /// `(applied_upto, app_digest)` for every correct uBFT replica —
+    /// all `shards · n` of them in a sharded deployment.
     pub fn digests(&mut self) -> Vec<(u64, Hash32)> {
-        let n = self.cfg.n;
-        (0..n)
+        let total = self.cfg.n * self.shard_count();
+        (0..total)
             .filter_map(|i| self.probe(i).map(|p| (p.applied_upto, p.app_digest)))
             .collect()
     }
 
     /// Do all correct replicas hold identical `(applied_upto, digest)`
-    /// state? (Vacuously true for non-uBFT systems.)
+    /// state? Sharded deployments converge *per group* — distinct shards
+    /// hold distinct keyspace partitions by design. (Vacuously true for
+    /// non-uBFT systems.)
     pub fn converged(&mut self) -> bool {
-        let d = self.digests();
-        d.windows(2).all(|w| w[0] == w[1])
+        let n = self.cfg.n;
+        for s in 0..self.shard_count() {
+            let d: Vec<(u64, Hash32)> = (s * n..(s + 1) * n)
+                .filter_map(|i| self.probe(i).map(|p| (p.applied_upto, p.app_digest)))
+                .collect();
+            if !d.windows(2).all(|w| w[0] == w[1]) {
+                return false;
+            }
+        }
+        true
     }
 
     /// Bytes resident on one disaggregated-memory node (Table 2).
@@ -1359,6 +1519,67 @@ mod tests {
                 .err().unwrap(),
             DeployError::BadProbability { .. }
         ));
+    }
+
+    #[test]
+    fn sharding_validates() {
+        use crate::shard::HashPartitioner;
+        assert_eq!(
+            Deployment::new(Config::default()).shards(0, HashPartitioner).build().err(),
+            Some(DeployError::ZeroShards)
+        );
+        // Sharding is a uBFT replica capability.
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .system(System::Mu)
+                .shards(2, HashPartitioner)
+                .build()
+                .err()
+                .unwrap(),
+            DeployError::ShardingUnsupported(_)
+        ));
+        // Byzantine replacement targets a single-group slot layout.
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .shards(2, HashPartitioner)
+                .faults(FaultPlan::garbage_registers(0, 0))
+                .build()
+                .err()
+                .unwrap(),
+            DeployError::ShardingUnsupported(_)
+        ));
+        assert!(matches!(
+            Deployment::new(Config::default())
+                .shards(2, HashPartitioner)
+                .build_real()
+                .err()
+                .unwrap(),
+            DeployError::RealModeUnsupported(_)
+        ));
+    }
+
+    #[test]
+    fn sharded_kv_deployment_completes() {
+        use crate::apps::kv::KvWorkload;
+        use crate::apps::KvApp;
+        use crate::shard::HashPartitioner;
+        let mut cluster = Deployment::new(Config::default())
+            .app(|| Box::new(KvApp::new()))
+            .shards(2, HashPartitioner)
+            .clients(2, |_i| Box::new(KvWorkload::paper()))
+            .requests(30)
+            .build()
+            .expect("sharded deployment is valid");
+        assert!(cluster.run_to_completion());
+        assert_eq!(cluster.completed(), 60);
+        assert_eq!(cluster.mismatches(), 0);
+        assert!(cluster.converged());
+        assert_eq!(cluster.shard_count(), 2);
+        assert_eq!(cluster.replica_ids().len(), 2 * cluster.config().n);
+        // Second group's replicas probe, too (global ids n..2n).
+        let n = cluster.config().n;
+        assert!(cluster.probe(n).is_some());
+        assert!(cluster.probe(2 * n).is_none());
     }
 
     #[test]

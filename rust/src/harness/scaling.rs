@@ -13,16 +13,26 @@
 //!   classification buys on read-dominated stores (§7's memcached/Redis
 //!   regime) and what the linearizability guarantee costs on top.
 //!
-//! Both sweeps also emit machine-readable `BENCH_scaling.json`
+//! * **Shard sweep** — the [`crate::shard`] subsystem: the settlement
+//!   scenario ([`SettleApp`] + [`SettleWorkload`]) across 1/2/4
+//!   independent consensus groups with a fixed cross-shard transaction
+//!   ratio. Single-key traffic scales with the groups; the 2PC
+//!   settlement path pays for atomicity, and the commit/abort columns
+//!   keep it honest. The one-shard baseline runs through the *same*
+//!   sharded client path (router, per-group sessions) so the
+//!   comparison is batch- and code-path-matched.
+//!
+//! All sweeps also emit machine-readable `BENCH_scaling.json`
 //! (override the path with `UBFT_BENCH_SCALING_JSON`) so the perf
 //! trajectory is diffable across PRs.
 
 use super::{print_table, samples_per_point, BenchJson};
 use crate::apps::kv::KvWorkload;
-use crate::apps::KvApp;
+use crate::apps::{KvApp, SettleApp, SettleWorkload};
 use crate::config::Config;
 use crate::deploy::Deployment;
 use crate::rpc::BytesWorkload;
+use crate::shard::HashPartitioner;
 use crate::smr::ReadMode;
 
 /// Batch request cap used for the "batched" column.
@@ -159,6 +169,99 @@ pub fn read_smoke(read_pct: u32, samples: usize) {
     }
 }
 
+/// Clients used for the shard sweep.
+pub const SHARD_CLIENTS: usize = 8;
+/// Accounts funded per client in the settlement workload.
+pub const SHARD_ACCOUNTS: usize = 8;
+
+pub struct ShardPoint {
+    pub shards: usize,
+    /// Aggregate decided-request throughput in kops.
+    pub kops: f64,
+    /// Client-observed median latency in µs.
+    pub p50: f64,
+    /// Cross-shard transactions that committed / aborted.
+    pub tx_commits: u64,
+    pub tx_aborts: u64,
+}
+
+/// One shard-sweep run: `SHARD_CLIENTS` settlement clients against
+/// `shards` consensus groups at `cross_pct`% cross-shard transactions.
+/// The `shards == 1` baseline still goes through the sharded client
+/// path (router + per-group write sessions), so throughput ratios
+/// against it isolate what the extra groups buy.
+pub fn run_shard_point(shards: usize, requests_per_client: usize, cross_pct: u32) -> ShardPoint {
+    let ratio = cross_pct as f64 / 100.0;
+    let mut cluster = Deployment::new(Config::default())
+        .app(|| Box::new(SettleApp::new()))
+        .shards(shards, HashPartitioner)
+        .clients(SHARD_CLIENTS, move |i| {
+            Box::new(SettleWorkload::new(i, SHARD_ACCOUNTS, ratio))
+        })
+        .requests(requests_per_client)
+        .pipeline(4)
+        .batch(BATCH, 64 * 1024)
+        .slot_pipeline(2)
+        .build()
+        .expect("sharded deployment is valid");
+    assert!(cluster.run_to_completion(), "sharded run starved ({shards} shards)");
+    let finished = cluster.done_at().expect("all clients finish");
+    let total = (SHARD_CLIENTS * requests_per_client) as f64;
+    let mut s = cluster.samples();
+    let (mut commits, mut aborts) = (0u64, 0u64);
+    for c in cluster.clients() {
+        let st = c.stats();
+        commits += st.tx_commits;
+        aborts += st.tx_aborts;
+    }
+    assert!(cluster.converged(), "replicas diverged under the sharded mix");
+    ShardPoint {
+        shards,
+        kops: total / (finished as f64 / 1e9) / 1e3,
+        p50: s.median() as f64 / 1000.0,
+        tx_commits: commits,
+        tx_aborts: aborts,
+    }
+}
+
+/// CI smoke: the settlement workload on one group vs `shards` groups at
+/// `cross_pct`% cross-shard transactions — `ubft scaling --shards 4
+/// --cross 10`. Asserts the aggregate decided-request throughput scales
+/// at least 2x from the batch-matched single-group baseline and, when
+/// the mix includes transactions, that some of them committed.
+pub fn shard_smoke(shards: usize, cross_pct: u32, samples: usize) {
+    let per_client = (samples_per_point(samples) / SHARD_CLIENTS).clamp(50, 2_000);
+    let base = run_shard_point(1, per_client, cross_pct);
+    let wide = run_shard_point(shards, per_client, cross_pct);
+    let gain = wide.kops / base.kops;
+    println!(
+        "shard smoke @{cross_pct}% cross-shard: 1 shard {:.1} kops (p50 {:.2} µs, \
+         {} tx committed / {} aborted) vs {shards} shards {:.1} kops (p50 {:.2} µs, \
+         {} tx committed / {} aborted) — {gain:.2}x",
+        base.kops,
+        base.p50,
+        base.tx_commits,
+        base.tx_aborts,
+        wide.kops,
+        wide.p50,
+        wide.tx_commits,
+        wide.tx_aborts,
+    );
+    if cross_pct > 0 {
+        assert!(base.tx_commits > 0, "no cross-shard transaction committed (1 shard)");
+        assert!(wide.tx_commits > 0, "no cross-shard transaction committed ({shards} shards)");
+    }
+    if shards >= 4 {
+        assert!(
+            gain >= 2.0,
+            "sharding failed to scale: {shards} shards gave {gain:.2}x over one group \
+             ({:.1} vs {:.1} kops)",
+            wide.kops,
+            base.kops
+        );
+    }
+}
+
 pub fn main_run(samples: usize) {
     let budget = samples_per_point(samples);
     let mut json = BenchJson::new("ubft-scaling-v1");
@@ -282,6 +385,47 @@ pub fn main_run(samples: usize) {
         );
         json.push(format!("reads={}/direct/kops", p.read_pct), p.direct.0, "kops");
         json.push(format!("reads={}/direct/p50", p.read_pct), p.direct.1, "us");
+    }
+
+    // ---- shard sweep (multi-group + cross-shard 2PC) -----------------
+    let per_client = (budget / SHARD_CLIENTS).clamp(50, 2_000);
+    let cross_pct = 10u32;
+    let spoints: Vec<ShardPoint> =
+        [1usize, 2, 4].iter().map(|&s| run_shard_point(s, per_client, cross_pct)).collect();
+    let header: Vec<String> =
+        ["shards", "kops", "p50 µs", "gain", "tx commit", "tx abort"].map(String::from).to_vec();
+    let base_kops = spoints[0].kops;
+    let rows: Vec<Vec<String>> = spoints
+        .iter()
+        .map(|p| {
+            vec![
+                p.shards.to_string(),
+                format!("{:.1}", p.kops),
+                format!("{:.2}", p.p50),
+                format!("{:.2}x", p.kops / base_kops),
+                p.tx_commits.to_string(),
+                p.tx_aborts.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Shards — settlement workload across consensus groups (8 clients, 10% cross-shard)",
+        &header,
+        &rows,
+    );
+    let widest = spoints.last().unwrap();
+    println!(
+        "\nsharding gain at {} shards: {:.2}x ({:.1} vs {:.1} kops, {} cross-shard commits)",
+        widest.shards,
+        widest.kops / base_kops,
+        widest.kops,
+        base_kops,
+        widest.tx_commits
+    );
+    for p in &spoints {
+        json.push(format!("shards={}/kops", p.shards), p.kops, "kops");
+        json.push(format!("shards={}/p50", p.shards), p.p50, "us");
+        json.push(format!("shards={}/tx_commits", p.shards), p.tx_commits as f64, "txs");
     }
 
     json.write("BENCH_scaling.json", "UBFT_BENCH_SCALING_JSON");

@@ -8,6 +8,10 @@
 //!   best-effort broadcast), [`consensus`] (the 2f+1 fast/slow-path BFT
 //!   engine with view changes, checkpoints and CTBcast summaries), and
 //!   [`smr`]/[`rpc`] (the replica wrapper and the client library);
+//! * horizontal scale-out: [`shard`] partitions the keyspace across N
+//!   independent uBFT groups behind one deployment, with per-key
+//!   linearizability and atomic, serializable cross-shard transactions
+//!   via a replicated two-phase-commit participant;
 //! * every substrate the paper depends on: [`rdma`] (a simulated RDMA
 //!   fabric with 8-byte atomicity and per-peer permissions), [`dsm`]
 //!   (reliable single-writer multi-reader *regular* registers over
@@ -44,6 +48,7 @@ pub mod ctbcast;
 pub mod consensus;
 pub mod smr;
 pub mod rpc;
+pub mod shard;
 pub mod apps;
 pub mod baselines;
 pub mod byz;

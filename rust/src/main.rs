@@ -22,9 +22,12 @@ EVALUATION (discrete-event simulator, paper §7):
   throughput  §9 throughput: batch size × pipeline depth, plus the KV
               speculation on/off sweep (emits BENCH_throughput.json)
   scaling     throughput vs concurrent clients + KV read-mix sweep
-              (consensus vs linearizable vs direct read lane;
+              (consensus vs linearizable vs direct read lane) + shard
+              sweep (settlement workload across consensus groups;
               emits BENCH_scaling.json)
               [--reads PCT]  run only the read-mix smoke at PCT% reads
+              [--shards N [--cross PCT]]  run only the shard smoke:
+              1 group vs N groups at PCT% cross-shard txs (default 10)
   all         everything above
 
 REAL MODE:
@@ -58,14 +61,35 @@ fn main() {
         "fig11" => harness::fig11::main_run(samples),
         "table2" => harness::table2::main_run(samples),
         "throughput" => harness::throughput::main_run(samples),
-        "scaling" => match args.get_u64("reads", u64::MAX) {
-            Ok(u64::MAX) => harness::scaling::main_run(samples),
-            Ok(pct) if pct <= 100 => harness::scaling::read_smoke(pct as u32, samples),
-            Ok(pct) => {
+        "scaling" => match (args.get_u64("reads", u64::MAX), args.get_u64("shards", u64::MAX)) {
+            (Ok(u64::MAX), Ok(u64::MAX)) => harness::scaling::main_run(samples),
+            (Ok(pct), Ok(u64::MAX)) if pct <= 100 => {
+                harness::scaling::read_smoke(pct as u32, samples)
+            }
+            (Ok(u64::MAX), Ok(shards)) if (1..=16).contains(&shards) => {
+                match args.get_u64("cross", 10) {
+                    Ok(cross) if cross <= 100 => {
+                        harness::scaling::shard_smoke(shards as usize, cross as u32, samples)
+                    }
+                    Ok(cross) => {
+                        eprintln!("error: --cross {cross} outside 0..=100");
+                        std::process::exit(2);
+                    }
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            (Ok(pct), Ok(u64::MAX)) => {
                 eprintln!("error: --reads {pct} outside 0..=100");
                 std::process::exit(2);
             }
-            Err(e) => {
+            (Ok(_), Ok(shards)) => {
+                eprintln!("error: --shards {shards} outside 1..=16 (or combined with --reads)");
+                std::process::exit(2);
+            }
+            (Err(e), _) | (_, Err(e)) => {
                 eprintln!("error: {e}");
                 std::process::exit(2);
             }

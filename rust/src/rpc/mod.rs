@@ -33,6 +33,21 @@
 //! Lost frames are recovered by a retry timer with exponential backoff:
 //! each outstanding request is retransmitted when its *last* send (not
 //! its first) is older than `retry_every · 2^retries`.
+//!
+//! # Sharded deployments
+//!
+//! Under [`Client::with_shards`] the client addresses several replica
+//! groups: a [`crate::shard::ShardRouter`] steers every request —
+//! including direct/linearizable reads — to its home group, the session
+//! write bound becomes *per group* (a linearizable read observes the
+//! session's completed writes on its own shard), and
+//! [`crate::shard::tx_request`] payloads run two-phase commit: the
+//! built-in [`crate::shard::Coordinator`] prepares on every touched
+//! group, commits iff all vote commit, and aborts on any abort vote or
+//! on a prepare timeout ([`Client::with_tx_timeout`], checked on the
+//! retry tick). Transaction sub-requests share the normal outstanding
+//! machinery (quorum matching, retries), but only *user* requests count
+//! toward the pipeline and the completion totals.
 
 use crate::consensus::msgs::{direct_frame, parse_direct, DirectMsg, Request};
 use crate::crypto::{hash, Hash32};
@@ -110,6 +125,12 @@ struct Outstanding {
     payload: Vec<u8>,
     /// Sent on the read lane (completes on f+1 matching `ReadReply`s).
     read: bool,
+    /// Home replica group (always 0 without [`Client::with_shards`]).
+    group: usize,
+    /// Cross-shard transaction this request is a sub-request of: its
+    /// completion feeds the [`crate::shard::Coordinator`] instead of the
+    /// user-facing counters.
+    tx: Option<u64>,
     /// When the request was first issued — end-to-end latency is
     /// measured from here, retransmissions notwithstanding.
     sent_at: Nanos,
@@ -157,6 +178,11 @@ pub struct ClientStats {
     pub reads: u64,
     /// Retransmissions issued by the retry timer (exponential backoff).
     pub retries: u64,
+    /// Cross-shard transactions that committed on every touched shard.
+    pub tx_commits: u64,
+    /// Cross-shard transactions aborted (an abort vote, or the prepare
+    /// timeout fired). Aborted transactions still count as `completed`.
+    pub tx_aborts: u64,
 }
 
 /// Closed-loop client issuing `max_requests` then idling.
@@ -190,11 +216,22 @@ pub struct Client {
     think: Nanos,
     retry_every: Nanos,
     next_rid: u64,
-    /// Slot bound of this session's completed writes (highest decided
-    /// slot + 1 across completed *writes*; read completions never move
-    /// it): the floor of every linearizable read index, so a client
-    /// always observes its own completed writes.
-    written_upto: u64,
+    /// Slot bound of this session's completed writes, *per replica
+    /// group* (highest decided slot + 1 across completed writes on that
+    /// group; read completions never move it): the floor of every
+    /// linearizable read index, so a client always observes its own
+    /// completed writes on the shard it reads. One entry without
+    /// sharding.
+    written: Vec<u64>,
+    /// Per-shard replica sets (empty = unsharded; `replicas` is the lot).
+    groups: Vec<Vec<NodeId>>,
+    /// Steers requests to their home group ([`Client::with_shards`]).
+    router: Option<crate::shard::ShardRouter>,
+    /// Two-phase-commit state for in-flight cross-shard transactions.
+    coord: crate::shard::Coordinator,
+    /// Workload requests issued so far. Distinct from `next_rid`:
+    /// transaction sub-requests consume rids but are not user requests.
+    issued_user: u64,
     inflight: Vec<Outstanding>,
     stats: Arc<Mutex<ClientStats>>,
     samples: Arc<Mutex<Samples>>,
@@ -218,7 +255,11 @@ impl Client {
             think: 0,
             retry_every: 5 * crate::MILLI,
             next_rid: 1,
-            written_upto: 0,
+            written: vec![0],
+            groups: Vec::new(),
+            router: None,
+            coord: crate::shard::Coordinator::new(10 * crate::MILLI),
+            issued_user: 0,
             inflight: Vec::new(),
             stats: Arc::new(Mutex::new(ClientStats::default())),
             samples: Arc::new(Mutex::new(Samples::new())),
@@ -283,6 +324,34 @@ impl Client {
         self
     }
 
+    /// Shard-aware routing: one replica set per consensus group, plus the
+    /// router that steers each request (and each direct/linearizable
+    /// read) to its home group. [`crate::shard::tx_request`] payloads run
+    /// two-phase commit across their touched groups. `replicas` becomes
+    /// the first group (the quorum is still derived per group — all
+    /// groups are the same size n = 2f+1).
+    pub fn with_shards(
+        mut self,
+        groups: Vec<Vec<NodeId>>,
+        router: crate::shard::ShardRouter,
+    ) -> Client {
+        self.written = vec![0; groups.len().max(1)];
+        self.replicas = groups.first().cloned().unwrap_or_default();
+        self.groups = groups;
+        self.router = Some(router);
+        self
+    }
+
+    /// Abort a cross-shard transaction whose prepare phase has stalled
+    /// for `ns` (e.g. a participant shard's leader crashed mid-prepare).
+    /// Checked on the retry tick, so the effective bound is `ns` rounded
+    /// up to the next tick. Safe at any value: participants tombstone
+    /// aborted transactions, so a late prepare cannot resurrect one.
+    pub fn with_tx_timeout(mut self, ns: Nanos) -> Client {
+        self.coord.set_timeout(ns);
+        self
+    }
+
     /// Handle to the latency samples (shared with the harness).
     pub fn samples_handle(&self) -> Arc<Mutex<Samples>> {
         self.samples.clone()
@@ -303,36 +372,78 @@ impl Client {
         self.quorum.unwrap_or(self.replicas.len() / 2 + 1)
     }
 
-    fn issued(&self) -> u64 {
-        self.next_rid - 1
+    /// Session write bound for `group` (0 for out-of-range groups —
+    /// only reachable unsharded, where every request maps to group 0).
+    fn written(&self, group: usize) -> u64 {
+        self.written.get(group).copied().unwrap_or(0)
+    }
+
+    /// The replica set a request for `group` is sent to.
+    fn targets(&self, group: usize) -> &[NodeId] {
+        if self.groups.is_empty() {
+            &self.replicas
+        } else {
+            &self.groups[group.min(self.groups.len() - 1)]
+        }
+    }
+
+    fn send_group(&self, env: &mut dyn Env, group: usize, frame: &[u8]) {
+        for &r in self.targets(group) {
+            env.send(r, frame.to_vec());
+        }
+    }
+
+    /// In-flight *user* requests: plain outstanding requests plus whole
+    /// transactions (each tx occupies one pipeline slot however many
+    /// sub-requests it fans out to).
+    fn user_inflight(&self) -> usize {
+        self.inflight.iter().filter(|o| o.tx.is_none()).count() + self.coord.active()
     }
 
     fn fire(&mut self, env: &mut dyn Env) {
-        while self.inflight.len() < self.pipeline
-            && (self.issued() as usize) < self.max_requests
+        while self.user_inflight() < self.pipeline
+            && (self.issued_user as usize) < self.max_requests
         {
             let rid = self.next_rid;
             self.next_rid += 1;
+            self.issued_user += 1;
             // E2E latency starts before client-side signing (paper §7.2).
             let started = env.now();
             if self.presend_charge > 0 {
                 env.charge(crate::metrics::Category::Crypto, self.presend_charge);
             }
             let payload = self.workload.next_request(env.rng());
+            if self.router.is_some() {
+                if let Some(ops) = crate::shard::parse_tx_request(&payload) {
+                    // Cross-shard transaction: two-phase commit across
+                    // the touched groups. rid is unique per client and
+                    // the client id disambiguates across clients.
+                    let txid = ((env.me() as u64) << 32) | rid;
+                    let by_group =
+                        self.router.as_ref().expect("router").op_groups(&ops);
+                    env.mark("client_tx");
+                    let subs = self.coord.begin(txid, payload, by_group, started);
+                    self.issue_subs(env, txid, subs);
+                    continue;
+                }
+            }
             let read = self.read_mode != ReadMode::Consensus
                 && self.workload.classify(&payload) == Operation::ReadOnly;
+            let group = self.router.as_ref().map_or(0, |r| r.home(&payload));
             let o = Outstanding {
                 rid,
                 payload,
                 read,
+                group,
+                tx: None,
                 sent_at: started,
                 last_sent: started,
                 retries: 0,
                 // Linearizable reads demand at least this session's own
-                // completed writes up front, so replicas behind them
-                // park instead of answering stale.
+                // completed writes (on their home group) up front, so
+                // replicas behind them park instead of answering stale.
                 min_index: if read && self.read_mode == ReadMode::Linearizable {
-                    self.written_upto
+                    self.written(group)
                 } else {
                     0
                 },
@@ -342,10 +453,78 @@ impl Client {
             };
             let frame = o.frame(env.me() as u64);
             env.mark(if read { "client_read" } else { "client_send" });
-            for &r in &self.replicas {
-                env.send(r, frame.clone());
-            }
+            self.send_group(env, group, &frame);
             self.inflight.push(o);
+        }
+    }
+
+    /// Issue coordinator-produced sub-requests (prepares, then the
+    /// commit/abort round) on their home groups. Each gets a fresh rid
+    /// and rides the normal outstanding machinery — quorum matching and
+    /// retry backoff included.
+    fn issue_subs(&mut self, env: &mut dyn Env, txid: u64, subs: Vec<crate::shard::SubReq>) {
+        let me = env.me() as u64;
+        let now = env.now();
+        for sub in subs {
+            let rid = self.next_rid;
+            self.next_rid += 1;
+            let o = Outstanding {
+                rid,
+                payload: sub.payload,
+                read: false,
+                group: sub.group,
+                tx: Some(txid),
+                sent_at: now,
+                last_sent: now,
+                retries: 0,
+                min_index: 0,
+                repolls: 0,
+                bounds: HashMap::new(),
+                responses: HashMap::new(),
+            };
+            let frame = o.frame(me);
+            env.mark("tx_sub");
+            self.send_group(env, o.group, &frame);
+            self.inflight.push(o);
+        }
+    }
+
+    /// Act on a coordinator transition: fan out the next round's
+    /// sub-requests, or surface a finished transaction as one completed
+    /// user request.
+    fn drive_coord(&mut self, env: &mut dyn Env, ev: crate::shard::CoordEvent) {
+        match ev {
+            crate::shard::CoordEvent::None => {}
+            crate::shard::CoordEvent::Issue { txid, subs } => {
+                self.issue_subs(env, txid, subs);
+            }
+            crate::shard::CoordEvent::Done { req, resp, sent_at, committed } => {
+                let latency = env.now().saturating_sub(sent_at);
+                env.mark("client_done");
+                self.samples.lock().unwrap().record(latency);
+                let completed = {
+                    let mut stats = self.stats.lock().unwrap();
+                    if !self.workload.check_response(&req, &resp) {
+                        stats.mismatches += 1;
+                    }
+                    if committed {
+                        stats.tx_commits += 1;
+                    } else {
+                        stats.tx_aborts += 1;
+                    }
+                    stats.completed += 1;
+                    stats.completed
+                };
+                if completed as usize >= self.max_requests {
+                    *self.done_at.lock().unwrap() = Some(env.now());
+                    return;
+                }
+                if self.think == 0 {
+                    self.fire(env);
+                } else {
+                    env.set_timer(self.think, TOKEN_KICK);
+                }
+            }
         }
     }
 
@@ -364,7 +543,7 @@ impl Client {
         }
         let mut bounds: Vec<u64> = o.bounds.values().copied().collect();
         bounds.sort_unstable_by(|a, b| b.cmp(a));
-        Some(bounds[vouchers - 1].max(self.written_upto))
+        Some(bounds[vouchers - 1].max(self.written(o.group)))
     }
 
     /// Fold one reply into the matching outstanding request. Replicas
@@ -447,8 +626,19 @@ impl Client {
             // index and wedge every later linearizable read.
             if !o.read {
                 if let Some(s) = slot_floor {
-                    self.written_upto = self.written_upto.max(s.saturating_add(1));
+                    if let Some(w) = self.written.get_mut(o.group) {
+                        *w = (*w).max(s.saturating_add(1));
+                    }
                 }
+            }
+            if let Some(txid) = o.tx {
+                // A transaction sub-request: its reply is a vote or an
+                // ack for the coordinator, not a user response. (The
+                // write bound still advanced above — prepares and
+                // commits are writes on their group.)
+                let ev = self.coord.on_reply(txid, o.group, &payload);
+                self.drive_coord(env, ev);
+                return;
             }
             let latency = env.now().saturating_sub(o.sent_at);
             env.mark("client_done");
@@ -478,14 +668,15 @@ impl Client {
             // re-ask with the new bar, so lagging replicas park and
             // answer exactly when they catch up instead of re-serving
             // stale state.
-            let o = &mut self.inflight[pos];
-            o.min_index = index;
-            o.last_sent = env.now();
-            let frame = o.frame(env.me() as u64);
+            let me = env.me() as u64;
+            let (frame, group) = {
+                let o = &mut self.inflight[pos];
+                o.min_index = index;
+                o.last_sent = env.now();
+                (o.frame(me), o.group)
+            };
             env.mark("read_refresh");
-            for &r in &self.replicas {
-                env.send(r, frame.clone());
-            }
+            self.send_group(env, group, &frame);
         } else if self.inflight[pos].read {
             // A read that raced concurrent writes can split the replica
             // set across values with no f+1 agreement. Once every replica
@@ -497,23 +688,26 @@ impl Client {
             // exponential backoff takes over), so neither a partitioned
             // replica nor one spraying garbage payloads can induce an
             // unbounded re-poll storm.
-            let o = &mut self.inflight[pos];
-            if o.repolls >= READ_REPOLL_CAP {
-                return;
-            }
-            let responders: BTreeSet<NodeId> =
-                o.responses.values().flat_map(|m| m.keys().copied()).collect();
-            let expected = self.replicas.len().saturating_sub(quorum - 1).max(1);
-            if responders.len() >= expected {
+            let me = env.me() as u64;
+            let group = self.inflight[pos].group;
+            let expected = self.targets(group).len().saturating_sub(quorum - 1).max(1);
+            let frame = {
+                let o = &mut self.inflight[pos];
+                if o.repolls >= READ_REPOLL_CAP {
+                    return;
+                }
+                let responders: BTreeSet<NodeId> =
+                    o.responses.values().flat_map(|m| m.keys().copied()).collect();
+                if responders.len() < expected {
+                    return;
+                }
                 o.repolls += 1;
                 o.responses.clear();
                 o.last_sent = env.now();
-                let frame = o.frame(env.me() as u64);
-                env.mark("read_retry");
-                for &r in &self.replicas {
-                    env.send(r, frame.clone());
-                }
-            }
+                o.frame(me)
+            };
+            env.mark("read_retry");
+            self.send_group(env, group, &frame);
         }
     }
 }
@@ -563,23 +757,36 @@ impl Actor for Client {
                 // (the retransmit-storm bug).
                 let now = env.now();
                 let me = env.me() as u64;
-                let mut frames: Vec<Vec<u8>> = Vec::new();
+                // Transactions stuck in prepare past the tx timeout flip
+                // to abort; drop their in-flight prepares (their votes no
+                // longer matter — and must not keep retrying against a
+                // wedged shard) and send the abort round instead.
+                let expired = self.coord.expired(now);
+                if !expired.is_empty() {
+                    let stale: BTreeSet<u64> =
+                        expired.iter().map(|(txid, _)| *txid).collect();
+                    self.inflight
+                        .retain(|o| o.tx.map_or(true, |t| !stale.contains(&t)));
+                    for (txid, subs) in expired {
+                        env.mark("tx_timeout");
+                        self.issue_subs(env, txid, subs);
+                    }
+                }
+                let mut frames: Vec<(Vec<u8>, usize)> = Vec::new();
                 for o in &mut self.inflight {
                     let backoff =
                         self.retry_every.saturating_mul(1u64 << o.retries.min(6));
                     if now.saturating_sub(o.last_sent) >= backoff {
                         o.last_sent = now;
                         o.retries += 1;
-                        frames.push(o.frame(me));
+                        frames.push((o.frame(me), o.group));
                     }
                 }
                 if !frames.is_empty() {
                     self.stats.lock().unwrap().retries += frames.len() as u64;
                 }
-                for frame in frames {
-                    for &r in &self.replicas {
-                        env.send(r, frame.clone());
-                    }
+                for (frame, group) in frames {
+                    self.send_group(env, group, &frame);
                 }
                 env.set_timer(self.retry_every, TOKEN_RETRY);
             }

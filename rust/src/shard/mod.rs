@@ -1,0 +1,1093 @@
+//! Sharded multi-group uBFT: keyspace partitioning, per-shard consensus
+//! groups, and two-phase cross-shard transactions.
+//!
+//! A single uBFT group decides in ~10 µs, but one leader's proposal rate
+//! caps aggregate throughput. This module turns one [`Deployment`]
+//! (`.shards(N, partitioner)`) into `N` *independent* 2f+1 consensus
+//! groups, each owning a slice of the keyspace:
+//!
+//! * [`Partitioner`] maps a key to its home shard (default:
+//!   [`HashPartitioner`]); closures `Fn(&[u8], usize) -> usize` work too.
+//! * [`ShardRouter`] extracts a request's keys via [`Service::keys`] and
+//!   steers it — writes *and* direct/linearizable reads — to the home
+//!   group.
+//! * [`ShardedReplica`]/`ShardEnv` host an unmodified consensus
+//!   [`Replica`] at a global actor id by translating node ids at the
+//!   environment boundary (peer sends, SWMR register owners, incoming
+//!   message sources), so `N·n` replicas share one simulator.
+//! * [`TxService`] wraps the application [`Service`] on every replica
+//!   with a two-phase-commit participant: `Prepare` validates + locks a
+//!   transaction's keys, `Commit`/`Abort` apply or discard the staged
+//!   ops. All three travel through the shard's consensus as ordinary
+//!   requests, so participant state is replicated, deterministic, and
+//!   checkpointable.
+//! * [`Coordinator`] is the client-side state machine: prepare on every
+//!   touched shard, commit iff all vote commit, abort on any abort vote
+//!   or prepare timeout.
+//!
+//! Consistency model: single-key operations remain linearizable within
+//! their home shard (each shard is a full uBFT group, including the
+//! direct/linearizable read lanes). Cross-shard transactions are atomic
+//! and serializable via strict two-phase locking: while a key is locked
+//! by an in-flight transaction, conflicting plain operations are
+//! rejected with a deterministic [`TX_LOCKED`] reply and conflicting
+//! transactions vote abort.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::consensus::Replica;
+use crate::crypto::{hash, hash_parts, Hash32};
+use crate::deploy::{ActorSink, Deployment, SystemSpawner};
+use crate::env::{Actor, Env, Event, RegionId, Ticket};
+use crate::metrics::Category;
+use crate::smr::{Checkpointable, Operation, Service};
+use crate::util::wire::{get_list, get_map, put_list, put_map, WireReader, WireWriter};
+use crate::util::Rng;
+use crate::{Nanos, NodeId};
+
+// ---------------------------------------------------------------------
+// Partitioning
+// ---------------------------------------------------------------------
+
+/// Maps a key to its home shard. Implementations must be *stable*
+/// (deterministic for a given `(key, shards)`) and *total* (every key
+/// maps to exactly one shard in `0..shards`) — the router and every
+/// replica rely on agreeing about key homes.
+pub trait Partitioner: Send + Sync {
+    fn shard_of(&self, key: &[u8], shards: usize) -> usize;
+}
+
+/// Any `Fn(&[u8], usize) -> usize` closure partitions; handy for tests
+/// that pin specific keys to specific shards.
+impl<F> Partitioner for F
+where
+    F: Fn(&[u8], usize) -> usize + Send + Sync,
+{
+    fn shard_of(&self, key: &[u8], shards: usize) -> usize {
+        self(key, shards)
+    }
+}
+
+/// Default partitioner: first 8 bytes of the key's BLAKE-style digest,
+/// reduced mod `shards`. Uniform for any key distribution.
+pub struct HashPartitioner;
+
+impl Partitioner for HashPartitioner {
+    fn shard_of(&self, key: &[u8], shards: usize) -> usize {
+        if shards <= 1 {
+            return 0;
+        }
+        let h = hash(key);
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&h.0[..8]);
+        (u64::from_le_bytes(b) % shards as u64) as usize
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire formats
+// ---------------------------------------------------------------------
+
+/// First byte of a client-side cross-shard transaction request: a list
+/// of single-shard ops, each routed to its home group.
+pub const TAG_TX: u8 = 0xF6;
+
+/// First byte of a 2PC participant control request (prepare / commit /
+/// abort) and of every participant reply.
+pub const TAG_CTL: u8 = 0xF7;
+
+/// Participant replies (second byte after [`TAG_CTL`]).
+pub const TX_VOTE_ABORT: u8 = 0;
+pub const TX_VOTE_COMMIT: u8 = 1;
+pub const TX_COMMITTED: u8 = 2;
+pub const TX_ABORTED: u8 = 3;
+/// A plain (non-transactional) op touched a key locked by an in-flight
+/// transaction and was rejected deterministically (strict 2PL).
+pub const TX_LOCKED: u8 = 4;
+/// A decision arrived for a transaction this participant no longer (or
+/// never) had staged.
+pub const TX_STALE: u8 = 5;
+
+const CTL_PREPARE: u8 = 1;
+const CTL_COMMIT: u8 = 2;
+const CTL_ABORT: u8 = 3;
+
+/// Encode a client transaction over `ops` (each op is a normal
+/// application request owned by exactly one shard).
+pub fn tx_request(ops: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_TX);
+    put_list(&mut w, ops);
+    w.finish()
+}
+
+/// Decode a [`tx_request`]; `None` if `req` is not a transaction.
+pub fn parse_tx_request(req: &[u8]) -> Option<Vec<Vec<u8>>> {
+    if req.first() != Some(&TAG_TX) {
+        return None;
+    }
+    let mut r = WireReader::new(&req[1..]);
+    let ops: Vec<Vec<u8>> = get_list(&mut r).ok()?;
+    r.done().ok()?;
+    if ops.is_empty() {
+        return None;
+    }
+    Some(ops)
+}
+
+/// A participant control operation, decided through the shard's
+/// consensus like any other request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Ctl {
+    Prepare { txid: u64, ops: Vec<Vec<u8>> },
+    Commit { txid: u64 },
+    Abort { txid: u64 },
+}
+
+pub fn prepare_request(txid: u64, ops: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_CTL);
+    w.u8(CTL_PREPARE);
+    w.u64(txid);
+    put_list(&mut w, ops);
+    w.finish()
+}
+
+pub fn commit_request(txid: u64) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_CTL);
+    w.u8(CTL_COMMIT);
+    w.u64(txid);
+    w.finish()
+}
+
+pub fn abort_request(txid: u64) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_CTL);
+    w.u8(CTL_ABORT);
+    w.u64(txid);
+    w.finish()
+}
+
+/// Decode a participant control request; `None` if `req` is not one.
+pub fn parse_ctl(req: &[u8]) -> Option<Ctl> {
+    if req.len() < 2 || req[0] != TAG_CTL {
+        return None;
+    }
+    let mut r = WireReader::new(&req[2..]);
+    let ctl = match req[1] {
+        CTL_PREPARE => Ctl::Prepare { txid: r.u64().ok()?, ops: get_list(&mut r).ok()? },
+        CTL_COMMIT => Ctl::Commit { txid: r.u64().ok()? },
+        CTL_ABORT => Ctl::Abort { txid: r.u64().ok()? },
+        _ => return None,
+    };
+    r.done().ok()?;
+    Some(ctl)
+}
+
+/// The deterministic reply for a plain op rejected by a lock.
+pub fn locked_reply() -> Vec<u8> {
+    vec![TAG_CTL, TX_LOCKED]
+}
+
+/// Did this reply come from the lock-rejection path?
+pub fn is_locked(reply: &[u8]) -> bool {
+    reply == [TAG_CTL, TX_LOCKED]
+}
+
+fn committed_reply(results: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u8(TAG_CTL);
+    w.u8(TX_COMMITTED);
+    put_list(&mut w, results);
+    w.finish()
+}
+
+/// Decode the per-op results out of a [`TX_COMMITTED`] reply (either a
+/// participant's or the coordinator's combined response).
+pub fn parse_committed(reply: &[u8]) -> Option<Vec<Vec<u8>>> {
+    if reply.len() < 2 || reply[0] != TAG_CTL || reply[1] != TX_COMMITTED {
+        return None;
+    }
+    let mut r = WireReader::new(&reply[2..]);
+    let results = get_list(&mut r).ok()?;
+    r.done().ok()?;
+    Some(results)
+}
+
+// ---------------------------------------------------------------------
+// TxService: the replicated 2PC participant
+// ---------------------------------------------------------------------
+
+/// Bounded history of aborted/finished transaction ids. A tombstoned
+/// txid votes abort on any late `Prepare`, which is what makes the
+/// coordinator's timeout-abort safe: once `Abort` is decided on a
+/// shard, a still-in-flight `Prepare` for the same transaction can
+/// never resurrect its locks.
+const TOMBSTONE_CAP: usize = 4096;
+
+/// Wraps an application [`Service`] with a replicated two-phase-commit
+/// participant. All state (lock table, staged ops, tombstones) mutates
+/// only through `execute`, i.e. through the shard's consensus, so every
+/// replica of the group holds the same participant state and it is
+/// covered by checkpoints like any other application state.
+pub struct TxService {
+    inner: Box<dyn Service>,
+    /// key -> txid holding its lock.
+    locks: BTreeMap<Vec<u8>, u64>,
+    /// txid -> ops staged at prepare, applied at commit.
+    staged: BTreeMap<u64, Vec<Vec<u8>>>,
+    tombstones: VecDeque<u64>,
+    tombstoned: BTreeSet<u64>,
+}
+
+impl TxService {
+    pub fn new(inner: Box<dyn Service>) -> TxService {
+        TxService {
+            inner,
+            locks: BTreeMap::new(),
+            staged: BTreeMap::new(),
+            tombstones: VecDeque::new(),
+            tombstoned: BTreeSet::new(),
+        }
+    }
+
+    /// The wrapped application service.
+    pub fn inner(&self) -> &dyn Service {
+        self.inner.as_ref()
+    }
+
+    /// Number of currently locked keys.
+    pub fn locked_keys(&self) -> usize {
+        self.locks.len()
+    }
+
+    /// Number of prepared-but-undecided transactions.
+    pub fn staged_txs(&self) -> usize {
+        self.staged.len()
+    }
+
+    fn tombstone(&mut self, txid: u64) {
+        if self.tombstoned.insert(txid) {
+            self.tombstones.push_back(txid);
+            if self.tombstones.len() > TOMBSTONE_CAP {
+                if let Some(old) = self.tombstones.pop_front() {
+                    self.tombstoned.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn unlock(&mut self, txid: u64) {
+        self.locks.retain(|_, owner| *owner != txid);
+    }
+
+    fn locked(&self, req: &[u8]) -> bool {
+        self.inner.keys(req).iter().any(|k| self.locks.contains_key(k))
+    }
+
+    fn prepare(&mut self, txid: u64, ops: Vec<Vec<u8>>) -> Vec<u8> {
+        if self.tombstoned.contains(&txid) {
+            return vec![TAG_CTL, TX_VOTE_ABORT];
+        }
+        if self.staged.contains_key(&txid) {
+            // Duplicate prepare (e.g. re-decided after a view change).
+            return vec![TAG_CTL, TX_VOTE_COMMIT];
+        }
+        let mut keys: BTreeSet<Vec<u8>> = BTreeSet::new();
+        for op in &ops {
+            for k in self.inner.keys(op) {
+                keys.insert(k);
+            }
+        }
+        let conflict = keys.iter().any(|k| self.locks.contains_key(k));
+        let valid = !keys.is_empty() && ops.iter().all(|op| self.inner.validate(op));
+        if conflict || !valid {
+            self.tombstone(txid);
+            return vec![TAG_CTL, TX_VOTE_ABORT];
+        }
+        for k in keys {
+            self.locks.insert(k, txid);
+        }
+        self.staged.insert(txid, ops);
+        vec![TAG_CTL, TX_VOTE_COMMIT]
+    }
+
+    fn commit(&mut self, txid: u64) -> Vec<u8> {
+        let Some(ops) = self.staged.remove(&txid) else {
+            return vec![TAG_CTL, TX_STALE];
+        };
+        self.unlock(txid);
+        self.tombstone(txid);
+        let results: Vec<Vec<u8>> = ops.iter().map(|op| self.inner.execute(op)).collect();
+        committed_reply(&results)
+    }
+
+    fn abort(&mut self, txid: u64) -> Vec<u8> {
+        self.staged.remove(&txid);
+        self.unlock(txid);
+        self.tombstone(txid);
+        vec![TAG_CTL, TX_ABORTED]
+    }
+
+    fn meta_bytes(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        put_map(&mut w, &self.locks);
+        w.u32(self.staged.len() as u32);
+        for (txid, ops) in &self.staged {
+            w.u64(*txid);
+            put_list(&mut w, ops);
+        }
+        w.u32(self.tombstones.len() as u32);
+        for t in &self.tombstones {
+            w.u64(*t);
+        }
+        w.finish()
+    }
+
+    fn restore_meta(&mut self, meta: &[u8]) {
+        let mut r = WireReader::new(meta);
+        let Ok(locks) = get_map::<Vec<u8>, u64>(&mut r) else { return };
+        let Ok(n_staged) = r.u32() else { return };
+        let mut staged = BTreeMap::new();
+        for _ in 0..n_staged {
+            let Ok(txid) = r.u64() else { return };
+            let Ok(ops) = get_list::<Vec<u8>>(&mut r) else { return };
+            staged.insert(txid, ops);
+        }
+        let Ok(n_tomb) = r.u32() else { return };
+        let mut tombstones = VecDeque::new();
+        let mut tombstoned = BTreeSet::new();
+        for _ in 0..n_tomb {
+            let Ok(t) = r.u64() else { return };
+            tombstoned.insert(t);
+            tombstones.push_back(t);
+        }
+        self.locks = locks;
+        self.staged = staged;
+        self.tombstones = tombstones;
+        self.tombstoned = tombstoned;
+    }
+
+    /// Split a [`TxService`] snapshot into `(participant meta bytes,
+    /// inner application snapshot)`.
+    pub fn split_snapshot(snap: &[u8]) -> Option<(Vec<u8>, Vec<u8>)> {
+        let mut r = WireReader::new(snap);
+        let meta = r.bytes().ok()?;
+        let inner = r.bytes().ok()?;
+        r.done().ok()?;
+        Some((meta, inner))
+    }
+
+    /// The lock table recorded in a [`TxService`] snapshot.
+    pub fn snapshot_locks(snap: &[u8]) -> Option<BTreeMap<Vec<u8>, u64>> {
+        let (meta, _) = Self::split_snapshot(snap)?;
+        let mut r = WireReader::new(&meta);
+        get_map::<Vec<u8>, u64>(&mut r).ok()
+    }
+
+    /// The wrapped application's snapshot inside a [`TxService`] snapshot.
+    pub fn inner_snapshot(snap: &[u8]) -> Option<Vec<u8>> {
+        Self::split_snapshot(snap).map(|(_, inner)| inner)
+    }
+}
+
+impl Checkpointable for TxService {
+    fn digest(&self) -> Hash32 {
+        let meta = self.meta_bytes();
+        let inner = self.inner.digest();
+        hash_parts(&[&meta[..], &inner.0[..]])
+    }
+
+    fn snapshot(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.bytes(&self.meta_bytes());
+        w.bytes(&self.inner.snapshot());
+        w.finish()
+    }
+
+    fn restore(&mut self, snap: &[u8]) {
+        let Some((meta, inner)) = Self::split_snapshot(snap) else { return };
+        self.restore_meta(&meta);
+        self.inner.restore(&inner);
+    }
+}
+
+impl Service for TxService {
+    fn classify(&self, req: &[u8]) -> Operation {
+        if req.first() == Some(&TAG_CTL) {
+            Operation::ReadWrite
+        } else {
+            self.inner.classify(req)
+        }
+    }
+
+    fn execute(&mut self, req: &[u8]) -> Vec<u8> {
+        if let Some(ctl) = parse_ctl(req) {
+            return match ctl {
+                Ctl::Prepare { txid, ops } => self.prepare(txid, ops),
+                Ctl::Commit { txid } => self.commit(txid),
+                Ctl::Abort { txid } => self.abort(txid),
+            };
+        }
+        if req.first() == Some(&TAG_CTL) {
+            return vec![TAG_CTL, TX_STALE];
+        }
+        if self.locked(req) {
+            return locked_reply();
+        }
+        self.inner.execute(req)
+    }
+
+    fn query(&self, req: &[u8]) -> Vec<u8> {
+        if req.first() == Some(&TAG_CTL) {
+            return vec![TAG_CTL, TX_STALE];
+        }
+        if self.locked(req) {
+            return locked_reply();
+        }
+        self.inner.query(req)
+    }
+
+    fn keys(&self, req: &[u8]) -> Vec<Vec<u8>> {
+        if req.first() == Some(&TAG_CTL) {
+            Vec::new()
+        } else {
+            self.inner.keys(req)
+        }
+    }
+
+    fn validate(&self, req: &[u8]) -> bool {
+        if req.first() == Some(&TAG_CTL) {
+            true
+        } else {
+            self.inner.validate(req)
+        }
+    }
+
+    fn sim_cost(&self, req: &[u8]) -> Nanos {
+        match parse_ctl(req) {
+            Some(Ctl::Prepare { ops, .. }) => {
+                400 + ops.iter().map(|op| self.inner.sim_cost(op) / 2).sum::<Nanos>()
+            }
+            Some(Ctl::Commit { txid }) => {
+                400 + self
+                    .staged
+                    .get(&txid)
+                    .map_or(0, |ops| ops.iter().map(|op| self.inner.sim_cost(op)).sum())
+            }
+            Some(Ctl::Abort { .. }) => 400,
+            None => self.inner.sim_cost(req),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client-side coordinator
+// ---------------------------------------------------------------------
+
+/// One sub-request the client must decide through a shard's consensus.
+#[derive(Clone, Debug)]
+pub struct SubReq {
+    pub group: usize,
+    pub payload: Vec<u8>,
+}
+
+/// What the client should do after feeding the coordinator a reply or a
+/// timer tick.
+#[derive(Debug)]
+pub enum CoordEvent {
+    None,
+    /// Issue these sub-requests for `txid`.
+    Issue { txid: u64, subs: Vec<SubReq> },
+    /// The transaction finished; `resp` is the combined user-visible
+    /// response (commit: [`TX_COMMITTED`] + per-group results in group
+    /// order; abort: [`TX_ABORTED`]).
+    Done { req: Vec<u8>, resp: Vec<u8>, sent_at: Nanos, committed: bool },
+}
+
+enum Phase {
+    Preparing { votes: BTreeMap<usize, bool> },
+    Deciding { commit: bool, acks: BTreeSet<usize>, results: BTreeMap<usize, Vec<u8>> },
+}
+
+struct Tx {
+    req: Vec<u8>,
+    sent_at: Nanos,
+    groups: Vec<usize>,
+    phase: Phase,
+}
+
+enum Next {
+    None,
+    Decide(bool),
+    Finish,
+}
+
+/// Client-side two-phase-commit state machine. The [`crate::rpc::Client`]
+/// drives it: `begin` on a new transaction, `on_reply` whenever a
+/// sub-request completes, `expired` on retry ticks. The decision is a
+/// one-way latch — an abort (vote or timeout) can never be overtaken by
+/// a late commit vote, and participant tombstones void late prepares.
+pub struct Coordinator {
+    timeout: Nanos,
+    txs: HashMap<u64, Tx>,
+    /// Transactions that reached commit / abort, for stats.
+    pub commits: u64,
+    pub aborts: u64,
+}
+
+impl Coordinator {
+    pub fn new(timeout: Nanos) -> Coordinator {
+        Coordinator { timeout, txs: HashMap::new(), commits: 0, aborts: 0 }
+    }
+
+    pub fn set_timeout(&mut self, timeout: Nanos) {
+        self.timeout = timeout;
+    }
+
+    /// In-flight (not yet decided-and-acked) transactions.
+    pub fn active(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Start a transaction: returns the prepare sub-requests, one per
+    /// touched group. `ops_by_group` must be non-empty.
+    pub fn begin(
+        &mut self,
+        txid: u64,
+        req: Vec<u8>,
+        ops_by_group: Vec<(usize, Vec<Vec<u8>>)>,
+        now: Nanos,
+    ) -> Vec<SubReq> {
+        let groups: Vec<usize> = ops_by_group.iter().map(|(g, _)| *g).collect();
+        let subs = ops_by_group
+            .iter()
+            .map(|(g, ops)| SubReq { group: *g, payload: prepare_request(txid, ops) })
+            .collect();
+        self.txs.insert(
+            txid,
+            Tx { req, sent_at: now, groups, phase: Phase::Preparing { votes: BTreeMap::new() } },
+        );
+        subs
+    }
+
+    /// Feed the completed reply of a sub-request for `txid` from `group`.
+    pub fn on_reply(&mut self, txid: u64, group: usize, reply: &[u8]) -> CoordEvent {
+        if reply.len() < 2 || reply[0] != TAG_CTL {
+            return CoordEvent::None;
+        }
+        let kind = reply[1];
+        let next = {
+            let Some(tx) = self.txs.get_mut(&txid) else {
+                return CoordEvent::None;
+            };
+            match &mut tx.phase {
+                Phase::Preparing { votes } => match kind {
+                    TX_VOTE_COMMIT => {
+                        votes.insert(group, true);
+                        if votes.len() == tx.groups.len() {
+                            Next::Decide(true)
+                        } else {
+                            Next::None
+                        }
+                    }
+                    TX_VOTE_ABORT => Next::Decide(false),
+                    _ => Next::None,
+                },
+                Phase::Deciding { acks, results, .. } => match kind {
+                    TX_COMMITTED | TX_ABORTED | TX_STALE => {
+                        acks.insert(group);
+                        if kind == TX_COMMITTED {
+                            results.insert(group, reply.to_vec());
+                        }
+                        if acks.len() == tx.groups.len() {
+                            Next::Finish
+                        } else {
+                            Next::None
+                        }
+                    }
+                    // A late prepare vote after the decision: ignore.
+                    _ => Next::None,
+                },
+            }
+        };
+        match next {
+            Next::None => CoordEvent::None,
+            Next::Decide(commit) => self.decide(txid, commit),
+            Next::Finish => self.finish(txid),
+        }
+    }
+
+    /// Abort every transaction whose prepare phase outlived the timeout;
+    /// returns the decision sub-requests to issue. Called on retry ticks.
+    pub fn expired(&mut self, now: Nanos) -> Vec<(u64, Vec<SubReq>)> {
+        let mut stale: Vec<u64> = self
+            .txs
+            .iter()
+            .filter(|(_, tx)| {
+                matches!(tx.phase, Phase::Preparing { .. })
+                    && now.saturating_sub(tx.sent_at) >= self.timeout
+            })
+            .map(|(txid, _)| *txid)
+            .collect();
+        stale.sort_unstable();
+        stale
+            .into_iter()
+            .filter_map(|txid| match self.decide(txid, false) {
+                CoordEvent::Issue { txid, subs } => Some((txid, subs)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn decide(&mut self, txid: u64, commit: bool) -> CoordEvent {
+        let Some(tx) = self.txs.get_mut(&txid) else {
+            return CoordEvent::None;
+        };
+        let subs = tx
+            .groups
+            .iter()
+            .map(|&g| SubReq {
+                group: g,
+                payload: if commit { commit_request(txid) } else { abort_request(txid) },
+            })
+            .collect();
+        tx.phase =
+            Phase::Deciding { commit, acks: BTreeSet::new(), results: BTreeMap::new() };
+        CoordEvent::Issue { txid, subs }
+    }
+
+    fn finish(&mut self, txid: u64) -> CoordEvent {
+        let Some(tx) = self.txs.remove(&txid) else {
+            return CoordEvent::None;
+        };
+        let Phase::Deciding { commit, results, .. } = tx.phase else {
+            return CoordEvent::None;
+        };
+        let resp = if commit {
+            let combined: Vec<Vec<u8>> = tx
+                .groups
+                .iter()
+                .map(|g| results.get(g).cloned().unwrap_or_default())
+                .collect();
+            let mut w = WireWriter::new();
+            w.u8(TAG_CTL);
+            w.u8(TX_COMMITTED);
+            put_list(&mut w, &combined);
+            w.finish()
+        } else {
+            vec![TAG_CTL, TX_ABORTED]
+        };
+        if commit {
+            self.commits += 1;
+        } else {
+            self.aborts += 1;
+        }
+        CoordEvent::Done { req: tx.req, resp, sent_at: tx.sent_at, committed: commit }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------
+
+/// Steers client requests to their home shard. Each client owns one
+/// router (a private [`Service`] instance is used purely for
+/// [`Service::keys`] extraction — it never executes anything).
+pub struct ShardRouter {
+    service: Box<dyn Service>,
+    partitioner: Arc<dyn Partitioner>,
+    shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(
+        service: Box<dyn Service>,
+        partitioner: Arc<dyn Partitioner>,
+        shards: usize,
+    ) -> ShardRouter {
+        ShardRouter { service, partitioner, shards: shards.max(1) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn shard_of_key(&self, key: &[u8]) -> usize {
+        self.partitioner.shard_of(key, self.shards).min(self.shards - 1)
+    }
+
+    /// Home group of a single-shard request. Requests without extractable
+    /// keys go to group 0.
+    pub fn home(&self, req: &[u8]) -> usize {
+        match self.service.keys(req).first() {
+            Some(k) => self.shard_of_key(k),
+            None => 0,
+        }
+    }
+
+    /// Group a transaction's ops by home shard (ascending shard order,
+    /// preserving per-shard op order).
+    pub fn op_groups(&self, ops: &[Vec<u8>]) -> Vec<(usize, Vec<Vec<u8>>)> {
+        let mut by: BTreeMap<usize, Vec<Vec<u8>>> = BTreeMap::new();
+        for op in ops {
+            by.entry(self.home(op)).or_default().push(op.clone());
+        }
+        by.into_iter().collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hosting a replica at a shard-global actor id
+// ---------------------------------------------------------------------
+
+/// Environment adapter that lets an unmodified [`Replica`] built with a
+/// *local* id `0..n` live at global actor id `base + local`. All node
+/// ids crossing the boundary are translated: peer sends, SWMR register
+/// owners (the simulator enforces write permission against global ids),
+/// and `me()`. Ids `>= n` (clients) pass through untouched — client ids
+/// start at `shards·n`, so the two ranges never collide. Memory-node
+/// indices are a separate namespace shared by all shards; regions stay
+/// disjoint because their owners are globalized.
+struct ShardEnv<'a> {
+    base: NodeId,
+    n: usize,
+    inner: &'a mut dyn Env,
+}
+
+impl ShardEnv<'_> {
+    fn globalize(&self, id: NodeId) -> NodeId {
+        if id < self.n {
+            id + self.base
+        } else {
+            id
+        }
+    }
+}
+
+impl Env for ShardEnv<'_> {
+    fn me(&self) -> NodeId {
+        self.inner.me() - self.base
+    }
+    fn now(&self) -> Nanos {
+        self.inner.now()
+    }
+    fn rng(&mut self) -> &mut Rng {
+        self.inner.rng()
+    }
+    fn send(&mut self, dst: NodeId, bytes: Vec<u8>) {
+        let dst = self.globalize(dst);
+        self.inner.send(dst, bytes);
+    }
+    fn charge(&mut self, cat: Category, ns: Nanos) {
+        self.inner.charge(cat, ns);
+    }
+    fn set_timer(&mut self, after: Nanos, token: u64) {
+        self.inner.set_timer(after, token);
+    }
+    fn mem_write(&mut self, mem_node: usize, region: RegionId, bytes: Vec<u8>) -> Ticket {
+        let region = RegionId { owner: self.globalize(region.owner), reg: region.reg };
+        self.inner.mem_write(mem_node, region, bytes)
+    }
+    fn mem_read(&mut self, mem_node: usize, region: RegionId) -> Ticket {
+        let region = RegionId { owner: self.globalize(region.owner), reg: region.reg };
+        self.inner.mem_read(mem_node, region)
+    }
+    fn mark(&mut self, label: &'static str) {
+        self.inner.mark(label);
+    }
+}
+
+/// Actor wrapper hosting one shard-local [`Replica`] at a global actor
+/// id. Incoming message sources from the replica's own group are
+/// localized before delegation; everything else (client traffic, timer
+/// tokens, memory completions) passes through unchanged.
+pub struct ShardedReplica {
+    base: NodeId,
+    n: usize,
+    inner: Replica,
+}
+
+impl ShardedReplica {
+    pub fn new(base: NodeId, n: usize, inner: Replica) -> ShardedReplica {
+        ShardedReplica { base, n, inner }
+    }
+
+    /// The wrapped consensus replica (for probes and state inspection).
+    pub fn replica(&self) -> &Replica {
+        &self.inner
+    }
+
+    /// First global actor id of this replica's group.
+    pub fn base(&self) -> NodeId {
+        self.base
+    }
+}
+
+impl Actor for ShardedReplica {
+    fn on_start(&mut self, env: &mut dyn Env) {
+        let mut shard_env = ShardEnv { base: self.base, n: self.n, inner: env };
+        self.inner.on_start(&mut shard_env);
+    }
+
+    fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
+        let ev = match ev {
+            Event::Recv { from, bytes } if from >= self.base && from < self.base + self.n => {
+                Event::Recv { from: from - self.base, bytes }
+            }
+            other => other,
+        };
+        let mut shard_env = ShardEnv { base: self.base, n: self.n, inner: env };
+        self.inner.on_event(&mut shard_env, ev);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spawner
+// ---------------------------------------------------------------------
+
+/// [`SystemSpawner`] for sharded deployments: `shards` independent uBFT
+/// groups of `cfg.n` replicas each, every replica's application wrapped
+/// in a [`TxService`] participant. Global actor ids are assigned
+/// densely: group `s` occupies `s·n .. (s+1)·n`.
+pub struct ShardSpawner {
+    pub shards: usize,
+}
+
+impl SystemSpawner for ShardSpawner {
+    fn spawn(&self, d: &Deployment, sink: &mut dyn ActorSink) -> Vec<NodeId> {
+        let cfg: Config = d.config().clone();
+        let mut ids = Vec::with_capacity(self.shards * cfg.n);
+        for s in 0..self.shards {
+            let base = s * cfg.n;
+            for i in 0..cfg.n {
+                let svc = Box::new(TxService::new(d.make_service()));
+                let replica = Replica::new(i, cfg.clone(), svc);
+                ids.push(sink.add_actor(Box::new(ShardedReplica::new(base, cfg.n, replica))));
+            }
+        }
+        ids
+    }
+
+    fn quorum(&self, cfg: &Config) -> usize {
+        cfg.quorum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::kv::{self, KvApp};
+
+    fn txsvc() -> TxService {
+        TxService::new(Box::new(KvApp::new()))
+    }
+
+    #[test]
+    fn tx_request_round_trips() {
+        let ops = vec![kv::set(b"a", b"1"), kv::set(b"b", b"2")];
+        let req = tx_request(&ops);
+        assert_eq!(parse_tx_request(&req), Some(ops));
+        assert_eq!(parse_tx_request(&kv::set(b"a", b"1")), None);
+        assert_eq!(parse_tx_request(&[TAG_TX]), None);
+    }
+
+    #[test]
+    fn ctl_round_trips() {
+        let ops = vec![kv::set(b"k", b"v")];
+        assert_eq!(
+            parse_ctl(&prepare_request(7, &ops)),
+            Some(Ctl::Prepare { txid: 7, ops })
+        );
+        assert_eq!(parse_ctl(&commit_request(9)), Some(Ctl::Commit { txid: 9 }));
+        assert_eq!(parse_ctl(&abort_request(3)), Some(Ctl::Abort { txid: 3 }));
+        assert_eq!(parse_ctl(b"plain"), None);
+    }
+
+    #[test]
+    fn hash_partitioner_is_stable_and_total() {
+        let p = HashPartitioner;
+        for shards in [1usize, 2, 3, 4, 7] {
+            for i in 0..200u32 {
+                let key = i.to_le_bytes();
+                let s = p.shard_of(&key, shards);
+                assert!(s < shards);
+                assert_eq!(s, p.shard_of(&key, shards));
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_locks_and_commit_applies() {
+        let mut svc = txsvc();
+        let ops = vec![kv::set(b"acct", b"value-1")];
+        let vote = svc.execute(&prepare_request(1, &ops));
+        assert_eq!(vote, vec![TAG_CTL, TX_VOTE_COMMIT]);
+        assert_eq!(svc.locked_keys(), 1);
+        // A plain write against the locked key is rejected deterministically.
+        assert!(is_locked(&svc.execute(&kv::set(b"acct", b"other"))));
+        // ... and a read too.
+        assert!(is_locked(&svc.query(&kv::get(b"acct"))));
+        // An unrelated key is untouched.
+        assert_eq!(svc.execute(&kv::set(b"free", b"x"))[0], kv::ST_OK);
+        let reply = svc.execute(&commit_request(1));
+        let results = parse_committed(&reply).expect("committed reply");
+        assert_eq!(results.len(), 1);
+        assert_eq!(svc.locked_keys(), 0);
+        // The staged op actually executed.
+        let got = svc.query(&kv::get(b"acct"));
+        assert_eq!(got[0], kv::ST_OK);
+        assert_eq!(&got[1..], b"value-1");
+    }
+
+    #[test]
+    fn conflicting_prepare_votes_abort_and_tombstones() {
+        let mut svc = txsvc();
+        let ops = vec![kv::set(b"k", b"a")];
+        assert_eq!(svc.execute(&prepare_request(1, &ops)), vec![TAG_CTL, TX_VOTE_COMMIT]);
+        // A second transaction touching the same key conflicts.
+        assert_eq!(svc.execute(&prepare_request(2, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
+        // The loser is tombstoned: a late duplicate prepare still aborts.
+        assert_eq!(svc.execute(&prepare_request(2, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
+        // Aborting the winner releases the lock and voids later prepares.
+        assert_eq!(svc.execute(&abort_request(1)), vec![TAG_CTL, TX_ABORTED]);
+        assert_eq!(svc.locked_keys(), 0);
+        assert_eq!(svc.execute(&prepare_request(1, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
+        // The key is free for plain ops again.
+        assert_eq!(svc.execute(&kv::set(b"k", b"b"))[0], kv::ST_OK);
+    }
+
+    #[test]
+    fn invalid_op_votes_abort_without_locking() {
+        let mut svc = txsvc();
+        // Overdraw: account does not exist, so a negative add must fail
+        // validation at prepare time.
+        let ops = vec![kv::add(b"acct", -5)];
+        assert_eq!(svc.execute(&prepare_request(1, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
+        assert_eq!(svc.locked_keys(), 0);
+        assert_eq!(svc.staged_txs(), 0);
+    }
+
+    #[test]
+    fn commit_of_unknown_tx_is_stale() {
+        let mut svc = txsvc();
+        assert_eq!(svc.execute(&commit_request(42)), vec![TAG_CTL, TX_STALE]);
+    }
+
+    #[test]
+    fn snapshot_restores_mid_transaction_state() {
+        let mut svc = txsvc();
+        svc.execute(&kv::set(b"base", b"v"));
+        let ops = vec![kv::set(b"locked", b"staged")];
+        svc.execute(&prepare_request(5, &ops));
+        let snap = svc.snapshot();
+        let digest = svc.digest();
+        assert_eq!(TxService::snapshot_locks(&snap).expect("locks").len(), 1);
+
+        let mut fresh = txsvc();
+        fresh.restore(&snap);
+        assert_eq!(fresh.digest(), digest);
+        assert_eq!(fresh.locked_keys(), 1);
+        assert!(is_locked(&fresh.execute(&kv::set(b"locked", b"x"))));
+        // The restored replica can still decide the staged transaction.
+        let results = parse_committed(&fresh.execute(&commit_request(5))).expect("commit");
+        assert_eq!(results.len(), 1);
+        let got = fresh.query(&kv::get(b"locked"));
+        assert_eq!(&got[1..], b"staged");
+    }
+
+    #[test]
+    fn coordinator_commits_when_all_vote_commit() {
+        let mut c = Coordinator::new(1_000_000);
+        let subs = c.begin(
+            1,
+            b"user-req".to_vec(),
+            vec![(0, vec![b"op0".to_vec()]), (2, vec![b"op2".to_vec()])],
+            100,
+        );
+        assert_eq!(subs.len(), 2);
+        assert!(matches!(c.on_reply(1, 0, &[TAG_CTL, TX_VOTE_COMMIT]), CoordEvent::None));
+        let CoordEvent::Issue { txid, subs } = c.on_reply(1, 2, &[TAG_CTL, TX_VOTE_COMMIT])
+        else {
+            panic!("expected decision")
+        };
+        assert_eq!(txid, 1);
+        assert_eq!(subs.len(), 2);
+        assert!(subs.iter().all(|s| parse_ctl(&s.payload) == Some(Ctl::Commit { txid: 1 })));
+        assert!(matches!(c.on_reply(1, 0, &committed_reply(&[b"r0".to_vec()])), CoordEvent::None));
+        let CoordEvent::Done { resp, committed, .. } =
+            c.on_reply(1, 2, &committed_reply(&[b"r2".to_vec()]))
+        else {
+            panic!("expected done")
+        };
+        assert!(committed);
+        let per_group = parse_committed(&resp).expect("combined");
+        assert_eq!(per_group.len(), 2);
+        assert_eq!(c.commits, 1);
+        assert_eq!(c.active(), 0);
+    }
+
+    #[test]
+    fn coordinator_aborts_on_any_abort_vote() {
+        let mut c = Coordinator::new(1_000_000);
+        c.begin(7, vec![], vec![(0, vec![b"a".to_vec()]), (1, vec![b"b".to_vec()])], 0);
+        let CoordEvent::Issue { subs, .. } = c.on_reply(7, 1, &[TAG_CTL, TX_VOTE_ABORT])
+        else {
+            panic!("expected abort decision")
+        };
+        assert!(subs.iter().all(|s| parse_ctl(&s.payload) == Some(Ctl::Abort { txid: 7 })));
+        // A late commit vote from the other group cannot flip the latch.
+        assert!(matches!(c.on_reply(7, 0, &[TAG_CTL, TX_VOTE_COMMIT]), CoordEvent::None));
+        assert!(matches!(c.on_reply(7, 0, &[TAG_CTL, TX_ABORTED]), CoordEvent::None));
+        let CoordEvent::Done { committed, resp, .. } = c.on_reply(7, 1, &[TAG_CTL, TX_ABORTED])
+        else {
+            panic!("expected done")
+        };
+        assert!(!committed);
+        assert_eq!(resp, vec![TAG_CTL, TX_ABORTED]);
+        assert_eq!(c.aborts, 1);
+    }
+
+    #[test]
+    fn coordinator_times_out_stuck_prepares() {
+        let mut c = Coordinator::new(1_000);
+        c.begin(3, vec![], vec![(0, vec![b"a".to_vec()])], 0);
+        assert!(c.expired(500).is_empty());
+        let expired = c.expired(1_000);
+        assert_eq!(expired.len(), 1);
+        let (txid, subs) = &expired[0];
+        assert_eq!(*txid, 3);
+        assert!(parse_ctl(&subs[0].payload) == Some(Ctl::Abort { txid: 3 }));
+        // Already deciding: a second tick does not re-abort.
+        assert!(c.expired(2_000).is_empty());
+        let CoordEvent::Done { committed, .. } = c.on_reply(3, 0, &[TAG_CTL, TX_ABORTED])
+        else {
+            panic!("expected done")
+        };
+        assert!(!committed);
+    }
+
+    #[test]
+    fn router_groups_ops_by_home_shard() {
+        let part = Arc::new(|key: &[u8], shards: usize| key[0] as usize % shards);
+        let router = ShardRouter::new(Box::new(KvApp::new()), part, 4);
+        assert_eq!(router.home(&kv::set(&[0, 1], b"x")), 0);
+        assert_eq!(router.home(&kv::set(&[5, 1], b"x")), 1);
+        let groups = router.op_groups(&[
+            kv::set(&[1], b"a"),
+            kv::set(&[2], b"b"),
+            kv::set(&[5], b"c"),
+        ]);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, 1);
+        assert_eq!(groups[0].1.len(), 2);
+        assert_eq!(groups[1].0, 2);
+    }
+}

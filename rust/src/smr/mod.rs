@@ -71,6 +71,30 @@
 //! *timing* moves: no speculative reply leaves the replica before the
 //! slot decides, so a Byzantine leader cannot exfiltrate divergent
 //! replies through speculation.
+//!
+//! # Sharded deployments
+//!
+//! [`crate::deploy::Deployment::shards`] partitions the keyspace across
+//! N independent consensus groups (see [`crate::shard`]). Two optional
+//! `Service` hooks drive it:
+//!
+//! * [`Service::keys`] — the keys a request touches. The client-side
+//!   router sends each request (including direct/linearizable reads) to
+//!   its first key's home group, and cross-shard transactions lock every
+//!   returned key at prepare.
+//! * [`Service::validate`] — a side-effect-free "would this execute
+//!   successfully?" check, evaluated at prepare so a transaction only
+//!   commits ops that cannot fail at commit time (the keys stay locked
+//!   in between).
+//!
+//! Consistency under sharding: single-key operations remain linearizable
+//! within their home shard exactly as in the single-group deployment
+//! (each shard runs the full protocol, read lanes included, with
+//! per-group session read bounds on the client). Multi-key operations
+//! submitted as [`crate::shard::tx_request`] transactions are atomic and
+//! serializable across shards via two-phase commit over strict two-phase
+//! locking: plain operations conflicting with a held lock are rejected
+//! with a deterministic `TX_LOCKED` reply rather than reordered.
 
 use crate::consensus::msgs::Request;
 use crate::crypto::Hash32;
@@ -244,6 +268,26 @@ pub trait Service: Checkpointable + Send {
         if let SpecToken::Snapshot(snap) = token {
             self.restore(&snap);
         }
+    }
+
+    /// The keys a request touches, for sharded deployments (see the
+    /// [module docs](self)): the router steers a request to its first
+    /// key's home shard, and the two-phase-commit participant locks
+    /// every returned key at prepare. Services that never run sharded
+    /// can keep the default (no keys → the request routes to shard 0
+    /// and transactions over it vote abort).
+    fn keys(&self, _req: &[u8]) -> Vec<Vec<u8>> {
+        Vec::new()
+    }
+
+    /// Would this request execute successfully against current state?
+    /// Used by the two-phase-commit participant at prepare time: a
+    /// transaction stages only ops that validate, and the locks it
+    /// holds until commit guarantee validation still holds when the
+    /// staged ops finally execute. Must not mutate state. Default:
+    /// everything validates.
+    fn validate(&self, _req: &[u8]) -> bool {
+        true
     }
 
     /// Simulated execution cost charged by the DES per request (ns).

@@ -1,8 +1,10 @@
 //! Speculative-execution pipeline tests: digest equality between
 //! speculative and inline execution (service level and end-to-end),
-//! constant-time promotion at decide, rollback across view changes, and
-//! the no-early-release guarantee (no reply frame leaves a replica
-//! before its slot decides — speculative or otherwise).
+//! constant-time promotion at decide, seal survival across view changes
+//! (an identically re-proposed batch promotes the kept speculation; a
+//! conflicting one rolls back at apply time), and the no-early-release
+//! guarantee (no reply frame leaves a replica before its slot decides —
+//! speculative or otherwise).
 
 use std::collections::HashMap;
 use ubft::apps::kv::KvWorkload;
@@ -218,12 +220,16 @@ fn speculation_takes_execution_off_the_decide_path() {
 }
 
 #[test]
-fn leader_crash_rolls_back_speculation_and_reexecutes_identically() {
-    // fastpath_timeout >> viewchange_timeout opens exactly the window the
-    // issue names: a slot whose PREPARE was delivered (and speculated)
+fn leader_crash_keeps_speculation_across_the_seal_and_converges() {
+    // fastpath_timeout >> viewchange_timeout opens exactly the window
+    // this targets: a slot whose PREPARE was delivered (and speculated)
     // when the leader died cannot be rescued by the slow path before the
-    // survivors seal the view — the seal unwinds the speculation, and the
-    // new leader's re-proposal re-executes to identical state.
+    // survivors seal the view. The seal *keeps* the speculation — the
+    // decided re-proposal is the arbiter: an identical batch promotes
+    // it, a conflicting one unwinds at apply time. Either way the
+    // survivors must reach identical state.
+    let mut total_kept = 0u64;
+    let mut total_promoted = 0u64;
     let mut total_rollbacks = 0u64;
     for crash_at in [120 * ubft::MICRO, 150 * ubft::MICRO, 180 * ubft::MICRO] {
         let mut cfg = Config::default();
@@ -247,19 +253,85 @@ fn leader_crash_rolls_back_speculation_and_reexecutes_identically() {
             "requests must complete after the view change (crash at {crash_at})"
         );
         assert_eq!(cluster.mismatches(), 0);
-        // The re-proposed batches re-executed to the identical digest.
+        // The re-proposed batches (promoted or re-executed) reach the
+        // identical digest on both survivors.
         let a = cluster.probe(1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
         let b = cluster.probe(2).map(|p| (p.applied_upto, p.app_digest)).unwrap();
-        assert_eq!(a, b, "survivors diverged after speculative rollback");
+        assert_eq!(a, b, "survivors diverged after the view change");
         for i in [1, 2] {
             let st = cluster.replica(i).unwrap().stats.clone();
             assert!(st.spec_hits > 0, "replica {i} never speculated");
+            total_kept += st.spec_seal_kept;
+            total_promoted += st.spec_promoted_across_views;
+            total_rollbacks += st.spec_rollbacks;
+        }
+    }
+    // Under the pre-change behaviour the seal unconditionally rolled the
+    // stack back, so `spec_seal_kept` could never be nonzero: this is
+    // the regression guard for keeping speculation alive at the seal.
+    assert!(
+        total_kept >= 1,
+        "no crash timing left a speculated slot undecided at the seal"
+    );
+    // Every kept speculation must have resolved — promoted by an
+    // identical re-proposal or unwound by a conflicting one. A kept
+    // entry that never resolves would wedge reads and checkpoints (the
+    // completion asserts above would already have tripped).
+    assert!(
+        total_promoted + total_rollbacks >= total_kept,
+        "kept speculations left unresolved: kept {total_kept}, \
+         promoted {total_promoted}, rolled back {total_rollbacks}"
+    );
+}
+
+#[test]
+fn follower_crash_view_change_resolves_kept_speculation() {
+    // Crash a *follower* (node 2) instead: the fast path (which needs
+    // all n) wedges while both the old leader and the next leader
+    // survive with the full endorsed prepares. The view change to
+    // leader 1 re-proposes constrained slots verbatim, so kept
+    // speculations promote whenever the re-proposed batch is identical —
+    // and the run must converge regardless of which way each slot
+    // resolves.
+    let mut total_kept = 0u64;
+    let mut total_promoted = 0u64;
+    let mut total_rollbacks = 0u64;
+    for crash_at in [100 * ubft::MICRO, 140 * ubft::MICRO, 170 * ubft::MICRO] {
+        let mut cfg = Config::default();
+        cfg.fastpath_timeout = 5 * ubft::MILLI;
+        cfg.viewchange_timeout = ubft::MILLI;
+        let mut cluster = Deployment::new(cfg)
+            .app(|| Box::new(KvApp::new()))
+            .client(Box::new(KvWorkload::paper()))
+            .requests(200)
+            .pipeline(16)
+            .batch(4, 64 * 1024)
+            .slot_pipeline(2)
+            .speculate()
+            .faults(FaultPlan::crash(2, crash_at))
+            .build()
+            .expect("valid deployment");
+        cluster.run_until(60 * ubft::SECOND);
+        assert_eq!(
+            cluster.samples().len(),
+            200,
+            "requests must complete after the view change (crash at {crash_at})"
+        );
+        assert_eq!(cluster.mismatches(), 0);
+        let a = cluster.probe(0).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+        let b = cluster.probe(1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
+        assert_eq!(a, b, "survivors diverged after the view change");
+        for i in [0, 1] {
+            let st = cluster.replica(i).unwrap().stats.clone();
+            total_kept += st.spec_seal_kept;
+            total_promoted += st.spec_promoted_across_views;
             total_rollbacks += st.spec_rollbacks;
         }
     }
     assert!(
-        total_rollbacks >= 1,
-        "no crash timing left a speculated slot undecided at the seal"
+        total_promoted + total_rollbacks >= total_kept,
+        "kept speculations left unresolved: kept {total_kept}, \
+         promoted {total_promoted}, rolled back {total_rollbacks}"
     );
 }
 
