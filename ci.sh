@@ -29,6 +29,15 @@ echo "== sharded smoke: ubft scaling --shards 4 --cross 10 =="
 # cross-shard transactions commit.
 UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --shards 4 --cross 10
 
+echo "== alloc gate: pooled PREPARE roundtrip (batch=8) =="
+# Compile the benches with the counting allocator, then run only the
+# allocation-regression gate: the pooled batch=8 PREPARE encode+decode
+# roundtrip must stay at or under 4 allocs/op at steady state (the seed's
+# unpooled roundtrip costs ~20). Exits non-zero on regression. Timed
+# benches are unaffected — the feature stays off everywhere else.
+cargo build --release --benches --features alloc_count
+UBFT_ALLOC_GATE=4 cargo bench --bench hotpath --features alloc_count
+
 echo "== real-mode batching smoke: example real_batching =="
 # build_real() + .batch(..) + .slot_pipeline(..) on OS threads, printing
 # the leader's measured batch occupancy (the ROADMAP real-mode demo).

@@ -12,8 +12,56 @@
 //! path with `UBFT_BENCH_JSON`) so future PRs have a perf trajectory:
 //! `{"schema":"ubft-hotpath-v1","results":[{"name":...,"value":...,
 //! "unit":...},...]}`.
+//!
+//! Built with `--features alloc_count`, a counting global allocator is
+//! swapped in and the codec/apply benches additionally report
+//! allocs-per-op rows (unit `allocs_per_op`). In that build,
+//! `UBFT_ALLOC_GATE=<max>` runs only the pooled batch=8 PREPARE
+//! roundtrip and exits non-zero if its allocs/op exceeds the gate — the
+//! CI allocation-regression check. Keep the feature off for timing runs:
+//! counting every allocation skews ns/op.
 
 use std::time::Instant;
+
+/// Counting global allocator (behind `--features alloc_count`): wraps the
+/// system allocator and counts every `alloc`/`alloc_zeroed`/`realloc` so
+/// the benches can report allocations per operation. `dealloc` is not
+/// counted — we gate on allocation pressure, frees mirror it.
+#[cfg(feature = "alloc_count")]
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    /// Total allocation events since process start.
+    pub fn total() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(l)
+        }
+        unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc_zeroed(l)
+        }
+        unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(p, l, n)
+        }
+        unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+            System.dealloc(p, l)
+        }
+    }
+
+    #[global_allocator]
+    static A: Counting = Counting;
+}
 
 /// Collected `(name, value, unit)` rows for the JSON report.
 struct Report {
@@ -42,6 +90,26 @@ impl Report {
     fn record(&mut self, name: &str, value: f64, unit: &'static str) {
         self.rows.push((name.to_string(), value, unit));
     }
+
+    /// Allocations per op for `f` at steady state (one full warmup pass
+    /// first, so pooled closures measure their hit-path, not cold fills).
+    /// No-op unless built with `--features alloc_count`.
+    #[cfg(feature = "alloc_count")]
+    fn allocs<F: FnMut()>(&mut self, name: &str, iters: u64, mut f: F) {
+        for _ in 0..iters {
+            f();
+        }
+        let before = alloc_count::total();
+        for _ in 0..iters {
+            f();
+        }
+        let per_op = (alloc_count::total() - before) as f64 / iters as f64;
+        println!("{name:<52} {per_op:>12.2} allocs/op");
+        self.rows.push((format!("{name} allocs"), per_op, "allocs_per_op"));
+    }
+
+    #[cfg(not(feature = "alloc_count"))]
+    fn allocs<F: FnMut()>(&mut self, _name: &str, _iters: u64, _f: F) {}
 
     /// Hand-rolled JSON (serde unavailable offline). Names are ASCII
     /// identifiers; only `"` and `\` would need escaping and none occur.
@@ -95,7 +163,66 @@ impl ubft::env::Env for SinkEnv {
     fn mark(&mut self, _: &'static str) {}
 }
 
+/// `UBFT_ALLOC_GATE=<max allocs/op>`: measure only the pooled batch=8
+/// PREPARE encode+decode roundtrip and exit — 0 if at or under the gate,
+/// 1 on regression. This is the CI smoke check; it never runs the timed
+/// benches, so it stays fast enough to gate every push.
+#[cfg(feature = "alloc_count")]
+fn run_alloc_gate() {
+    let Ok(raw) = std::env::var("UBFT_ALLOC_GATE") else { return };
+    let gate: f64 = raw.parse().expect("UBFT_ALLOC_GATE must be a number (max allocs/op)");
+    use ubft::consensus::msgs::{PrepareBody, Request};
+    use ubft::util::pool::{Pool, DEFAULT_CAP_BYTES, DEFAULT_CLASSES};
+    use ubft::util::wire::{Wire, WireWriter};
+    let pool = Pool::new(&DEFAULT_CLASSES, DEFAULT_CAP_BYTES);
+    let pb = PrepareBody {
+        view: 3,
+        slot: 999,
+        reqs: (0..8u64)
+            .map(|i| Request { client: 4 + i, rid: 77 + i, payload: vec![0u8; 64] })
+            .collect(),
+    };
+    let iters = 50_000u64;
+    let mut roundtrip = || {
+        let mut w = WireWriter::pooled(&pool);
+        pb.put(&mut w);
+        let enc = w.finish_pooled();
+        let dec = PrepareBody::decode_pooled(enc.as_slice(), &pool).unwrap();
+        for r in dec.reqs {
+            pool.put_vec(r.payload);
+        }
+    };
+    for _ in 0..iters {
+        roundtrip();
+    }
+    let before = alloc_count::total();
+    for _ in 0..iters {
+        roundtrip();
+    }
+    let per_op = (alloc_count::total() - before) as f64 / iters as f64;
+    println!(
+        "alloc gate: pooled PREPARE roundtrip (batch=8) = {per_op:.2} allocs/op \
+         (gate {gate})"
+    );
+    if per_op > gate {
+        eprintln!("ALLOC REGRESSION: {per_op:.2} allocs/op exceeds gate {gate}");
+        std::process::exit(1);
+    }
+    std::process::exit(0);
+}
+
+/// Without the feature the gate cannot measure anything; fail loudly
+/// rather than letting CI silently pass a no-op.
+#[cfg(not(feature = "alloc_count"))]
+fn run_alloc_gate() {
+    if std::env::var("UBFT_ALLOC_GATE").is_ok() {
+        eprintln!("UBFT_ALLOC_GATE set but built without --features alloc_count");
+        std::process::exit(2);
+    }
+}
+
 fn main() {
+    run_alloc_gate();
     let mut rep = Report::new();
     println!("--- uBFT hot-path micro-benchmarks (real mode) ---");
 
@@ -158,22 +285,77 @@ fn main() {
         };
         for batch in [1usize, 8, 32] {
             let pb = mk(batch);
+            let mut roundtrip = || {
+                let enc = pb.encode();
+                std::hint::black_box(PrepareBody::decode(&enc).unwrap());
+            };
             rep.bench(
                 &format!("PrepareBody encode+decode (batch={batch}, 64 B reqs)"),
                 1_000_000 / batch as u64,
-                || {
-                    let enc = pb.encode();
-                    std::hint::black_box(PrepareBody::decode(&enc).unwrap());
-                },
+                &mut roundtrip,
             );
+            rep.allocs(
+                &format!("PrepareBody encode+decode (batch={batch}, 64 B reqs)"),
+                100_000 / batch as u64,
+                &mut roundtrip,
+            );
+            let mut digest = || {
+                std::hint::black_box(pb.batch_digest());
+            };
             rep.bench(
                 &format!("PrepareBody batch_digest (batch={batch})"),
                 1_000_000 / batch as u64,
-                || {
-                    std::hint::black_box(pb.batch_digest());
-                },
+                &mut digest,
+            );
+            rep.allocs(
+                &format!("PrepareBody batch_digest (batch={batch})"),
+                100_000 / batch as u64,
+                &mut digest,
             );
         }
+    }
+
+    // Pooled codec: the same PREPARE roundtrip drawing every buffer from
+    // the size-classed pool — encode scratch via `WireWriter::pooled`,
+    // decoded payloads via `decode_pooled` — and returning them each
+    // iteration, as the replica does. At steady state the only allocation
+    // left is the decoded request list itself; compare the allocs rows
+    // against the unpooled roundtrip above.
+    {
+        use ubft::consensus::msgs::{PrepareBody, Request};
+        use ubft::util::pool::{Pool, DEFAULT_CAP_BYTES, DEFAULT_CLASSES};
+        use ubft::util::wire::{Wire, WireWriter};
+        let pool = Pool::new(&DEFAULT_CLASSES, DEFAULT_CAP_BYTES);
+        for batch in [8usize, 32] {
+            let pb = PrepareBody {
+                view: 3,
+                slot: 999,
+                reqs: (0..batch as u64)
+                    .map(|i| Request { client: 4 + i, rid: 77 + i, payload: vec![0u8; 64] })
+                    .collect(),
+            };
+            let mut roundtrip = || {
+                let mut w = WireWriter::pooled(&pool);
+                pb.put(&mut w);
+                let enc = w.finish_pooled();
+                let dec = PrepareBody::decode_pooled(enc.as_slice(), &pool).unwrap();
+                for r in dec.reqs {
+                    pool.put_vec(r.payload);
+                }
+            };
+            rep.bench(
+                &format!("PrepareBody encode+decode pooled (batch={batch})"),
+                1_000_000 / batch as u64,
+                &mut roundtrip,
+            );
+            rep.allocs(
+                &format!("PrepareBody encode+decode pooled (batch={batch})"),
+                100_000 / batch as u64,
+                &mut roundtrip,
+            );
+        }
+        let st = pool.stats();
+        assert!(st.hits > 0 && st.returned > 0, "pooled bench never hit the pool");
     }
 
     // Encode-once broadcast: the LOCK frame is encoded once from a
@@ -238,13 +420,15 @@ fn main() {
         for batch in [8usize, 32] {
             let reqs = mk_batch(batch);
             let mut kv = KvApp::new();
-            rep.bench(
-                &format!("KV apply_batch inline (batch={batch})"),
-                200_000 / batch as u64,
-                || {
-                    std::hint::black_box(kv.apply_batch(&reqs));
-                },
-            );
+            let mut inline = |kv: &mut KvApp| {
+                std::hint::black_box(kv.apply_batch(&reqs));
+            };
+            rep.bench(&format!("KV apply_batch inline (batch={batch})"), 200_000 / batch as u64, || {
+                inline(&mut kv)
+            });
+            rep.allocs(&format!("KV apply_batch inline (batch={batch})"), 50_000 / batch as u64, || {
+                inline(&mut kv)
+            });
             let mut kv = KvApp::new();
             rep.bench(
                 &format!("KV apply_speculative+commit (batch={batch})"),
@@ -264,6 +448,67 @@ fn main() {
                     std::hint::black_box(replies);
                     kv.rollback_speculation(tok);
                 },
+            );
+        }
+    }
+
+    // Decode-then-apply — the replica's actual apply path (frame arrives,
+    // request payloads are decoded, the batch is applied): pooled vs
+    // unpooled framing of the same encoded PREPARE. The pooled variant
+    // returns every payload after apply, exactly as the replica recycles
+    // a decided batch.
+    {
+        use ubft::apps::KvApp;
+        use ubft::consensus::msgs::{PrepareBody, Request};
+        use ubft::smr::Service;
+        use ubft::util::pool::{Pool, DEFAULT_CAP_BYTES, DEFAULT_CLASSES};
+        use ubft::util::wire::Wire;
+        let pool = Pool::new(&DEFAULT_CLASSES, DEFAULT_CAP_BYTES);
+        for batch in [8usize, 32] {
+            let pb = PrepareBody {
+                view: 0,
+                slot: 1,
+                reqs: (0..batch as u64)
+                    .map(|i| Request {
+                        client: i,
+                        rid: i,
+                        payload: ubft::apps::kv::set(&i.to_le_bytes(), &[0x5Au8; 32]),
+                    })
+                    .collect(),
+            };
+            let enc = pb.encode();
+            let mut kv = KvApp::new();
+            let mut plain = || {
+                let dec = PrepareBody::decode(&enc).unwrap();
+                std::hint::black_box(kv.apply_batch(&dec.reqs));
+            };
+            rep.bench(
+                &format!("KV decode+apply unpooled (batch={batch})"),
+                100_000 / batch as u64,
+                &mut plain,
+            );
+            rep.allocs(
+                &format!("KV decode+apply unpooled (batch={batch})"),
+                50_000 / batch as u64,
+                &mut plain,
+            );
+            let mut kv = KvApp::new();
+            let mut pooled = || {
+                let dec = PrepareBody::decode_pooled(&enc, &pool).unwrap();
+                std::hint::black_box(kv.apply_batch(&dec.reqs));
+                for r in dec.reqs {
+                    pool.put_vec(r.payload);
+                }
+            };
+            rep.bench(
+                &format!("KV decode+apply pooled (batch={batch})"),
+                100_000 / batch as u64,
+                &mut pooled,
+            );
+            rep.allocs(
+                &format!("KV decode+apply pooled (batch={batch})"),
+                50_000 / batch as u64,
+                &mut pooled,
             );
         }
     }

@@ -128,6 +128,18 @@ pub struct Config {
     /// application execution off the decide critical path. Off by
     /// default — the seed's apply-at-decide behaviour.
     pub speculation: bool,
+    /// Hot-path buffer pool: wire frames, decoded payloads, and digest
+    /// scratch buffers draw from a size-classed per-replica freelist and
+    /// recycle instead of hitting the allocator per message. On by
+    /// default; `pool = off` is the escape hatch restoring the seed's
+    /// plain-allocation behaviour byte-for-byte (encodings are identical
+    /// either way — pooling only changes backing memory).
+    pub pool: bool,
+    /// Pool size classes (bytes, ascending). Empty = the built-in
+    /// [`crate::util::pool::DEFAULT_CLASSES`].
+    pub pool_classes: Vec<usize>,
+    /// Cap on idle bytes the pool retains (bounded-memory story, §7).
+    pub pool_cap_bytes: usize,
     /// How clients route `ReadOnly`-classified requests (the typed
     /// `Service` read lane). Default: everything through consensus.
     pub read_mode: ReadMode,
@@ -158,6 +170,9 @@ impl Default for Config {
             retransmit_every: 500 * MICRO,
             slow_path_always: false,
             speculation: false,
+            pool: true,
+            pool_classes: Vec::new(),
+            pool_cap_bytes: crate::util::pool::DEFAULT_CAP_BYTES,
             read_mode: ReadMode::Consensus,
             sig_backend: SigBackend::Sim,
             lat: LatencyModel::default(),
@@ -240,6 +255,15 @@ impl Config {
                 "retransmit_every_ns" => c.retransmit_every = u(v)?,
                 "slow_path_always" => c.slow_path_always = v == "true" || v == "1",
                 "speculation" => c.speculation = v == "true" || v == "1",
+                "pool" => c.pool = v == "true" || v == "1" || v == "on",
+                "pool_classes" => {
+                    c.pool_classes = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .map_err(|_| format!("line {}: bad pool_classes {v}", lineno + 1))?;
+                }
+                "pool_cap_bytes" => c.pool_cap_bytes = u(v)? as usize,
                 "read_mode" => {
                     c.read_mode = match v {
                         "consensus" => ReadMode::Consensus,
@@ -333,6 +357,26 @@ mod tests {
         assert!(Config::parse("speculation = true\n").unwrap().speculation);
         assert!(Config::parse("speculation = 1\n").unwrap().speculation);
         assert!(!Config::parse("speculation = false\n").unwrap().speculation);
+    }
+
+    #[test]
+    fn pool_parses_and_defaults_on() {
+        let d = Config::default();
+        assert!(d.pool);
+        assert!(d.pool_classes.is_empty());
+        assert_eq!(d.pool_cap_bytes, crate::util::pool::DEFAULT_CAP_BYTES);
+        assert!(!Config::parse("pool = off\n").unwrap().pool);
+        assert!(!Config::parse("pool = false\n").unwrap().pool);
+        assert!(Config::parse("pool = on\n").unwrap().pool);
+        assert_eq!(
+            Config::parse("pool_classes = 128, 512,2048\n").unwrap().pool_classes,
+            vec![128, 512, 2048]
+        );
+        assert_eq!(
+            Config::parse("pool_cap_bytes = 65536\n").unwrap().pool_cap_bytes,
+            65536
+        );
+        assert!(Config::parse("pool_classes = 128,nope\n").is_err());
     }
 
     #[test]

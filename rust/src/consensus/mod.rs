@@ -39,12 +39,13 @@ use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
 use crate::smr::{Checkpointable, Operation, Service, SpecToken};
 use crate::tbcast::{TAG_DIRECT, TAG_TB};
+use crate::util::pool::{Pool, PoolStats};
 use crate::util::wire::{Wire, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use msgs::{
-    certify_digest, checkpoint_cert_digest, direct_frame, exec_batch_digest, parse_direct,
-    Checkpoint, CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, RespEntry,
-    SenderStateEnc, TbMsg, VcCert,
+    certify_digest_in, checkpoint_cert_digest, direct_frame_in, exec_batch_digest_in, Checkpoint,
+    CheckpointCert, Commit, ConsMsg, DirectMsg, PrepareBody, Request, RespEntry, SenderStateEnc,
+    TbMsg, VcCert,
 };
 use state::{leader_of, must_propose, Constraint, Effect, SenderState};
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
@@ -94,7 +95,7 @@ struct SlotState {
 struct SpecEntry {
     slot: u64,
     /// View-independent execution identity of the speculated batch
-    /// ([`exec_batch_digest`]); the decided batch promotes iff it matches.
+    /// ([`msgs::exec_batch_digest`]); the decided batch promotes iff it matches.
     digest: Hash32,
     /// Undo token the service handed out (`None` for an all-duplicate /
     /// all-noop batch that executed nothing).
@@ -179,6 +180,10 @@ pub struct ReplicaStats {
     /// promoted — the execution carried across the view change for free
     /// (subset of `spec_hits`).
     pub spec_promoted_across_views: u64,
+    /// Buffer-pool counters (`Config::pool`): hot-path hit/miss/return
+    /// totals and the retained-bytes high-water mark. All-zero when the
+    /// pool is off. Snapshotted from the live pool on every tick.
+    pub pool: PoolStats,
 }
 
 impl ReplicaStats {
@@ -297,8 +302,22 @@ pub struct Replica {
     /// the suspicion timeout (PBFT-style), preventing view-change livelock
     /// when completing a view change takes longer than the base timeout.
     vc_backoff: u32,
+    /// Hot-path buffer pool (`Config::pool`): wire frames, decoded
+    /// payloads, and digest scratch buffers draw from (and return to) it
+    /// instead of the global allocator. Shared with the CTBcast/TBcast
+    /// endpoint. Disabled (`Pool::off`) it degrades to plain allocation.
+    pool: Pool,
+    /// Recycled `Vec<Request>` batch carriers: propose/apply/speculate
+    /// each consume one per slot, and the decide→apply handoff makes the
+    /// ownership linear, so a small freelist removes the per-slot carrier
+    /// allocation.
+    req_carriers: Vec<Vec<Request>>,
     pub stats: ReplicaStats,
 }
+
+/// Batch-carrier freelist bound: deeper pipelines just fall back to fresh
+/// `Vec`s (the payload bytes themselves are pooled separately).
+const REQ_CARRIER_CAP: usize = 8;
 
 impl Replica {
     pub fn new(me: NodeId, cfg: Config, service: Box<dyn Service>) -> Replica {
@@ -308,6 +327,11 @@ impl Replica {
         };
         let genesis = CheckpointCert::genesis(cfg.window as u64, service.digest());
         let senders = (0..cfg.n).map(|p| SenderState::new(p, genesis.clone())).collect();
+        let pool = if cfg.pool {
+            Pool::new(&cfg.pool_classes, cfg.pool_cap_bytes)
+        } else {
+            Pool::off()
+        };
         Replica {
             me,
             n: cfg.n,
@@ -351,9 +375,75 @@ impl Replica {
             latest_summaries: HashMap::new(),
             last_progress: 0,
             vc_backoff: 0,
+            pool,
+            req_carriers: Vec::new(),
             stats: ReplicaStats::default(),
             cfg,
         }
+    }
+
+    /// Live buffer-pool counters (also snapshotted into
+    /// [`ReplicaStats::pool`] on every tick).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    // ------------------------------------------------------------------
+    // Hot-path recycling (`Config::pool`)
+    // ------------------------------------------------------------------
+
+    /// Pop a recycled batch carrier (empty, capacity retained).
+    fn take_carrier(&mut self) -> Vec<Request> {
+        self.req_carriers.pop().unwrap_or_default()
+    }
+
+    /// Return a batch carrier to the freelist. Any leftover requests are
+    /// dropped *without* recycling their payloads — callers recycle
+    /// payloads explicitly (see [`Replica::recycle_batch`]) exactly when
+    /// ownership is provably linear.
+    fn put_carrier(&mut self, mut c: Vec<Request>) {
+        if self.req_carriers.len() < REQ_CARRIER_CAP {
+            c.clear();
+            self.req_carriers.push(c);
+        }
+    }
+
+    /// Recycle a fully-owned batch: every payload back to the pool, the
+    /// carrier back to the freelist.
+    fn recycle_batch(&mut self, mut reqs: Vec<Request>) {
+        for req in reqs.drain(..) {
+            self.pool.put_vec(req.payload);
+        }
+        self.put_carrier(reqs);
+    }
+
+    /// Recycle the byte buffers of a [`DirectMsg`] we just encoded and
+    /// sent (the encoded frame owns a copy; the message is dead).
+    fn recycle_direct(&mut self, msg: DirectMsg) {
+        match msg {
+            DirectMsg::Request(req) | DirectMsg::ReadRequest { req, .. } => {
+                self.pool.put_vec(req.payload);
+            }
+            DirectMsg::Response { payload, .. } | DirectMsg::ReadReply { payload, .. } => {
+                self.pool.put_vec(payload);
+            }
+            DirectMsg::Responses { replies, .. } => {
+                for e in replies {
+                    self.pool.put_vec(e.payload);
+                }
+            }
+            DirectMsg::SnapshotReply { snap, .. } => self.pool.put_vec(snap),
+            _ => {}
+        }
+    }
+
+    /// Clone a request with the payload drawn from the pool. Used where
+    /// the clone's ownership is linear (the speculation/propose paths
+    /// recycle it at promote, rollback, or broadcast).
+    fn clone_request_in(pool: &Pool, req: &Request) -> Request {
+        let mut payload = pool.take_vec(req.payload.len());
+        payload.extend_from_slice(&req.payload);
+        Request { client: req.client, rid: req.rid, payload }
     }
 
     fn leader(&self) -> NodeId {
@@ -383,12 +473,22 @@ impl Replica {
             self.blocked_broadcasts.push_back(msg);
             return;
         }
-        let enc = msg.encode();
+        let enc = {
+            let mut w = WireWriter::pooled(&self.pool);
+            msg.put(&mut w);
+            w.finish()
+        };
         if let ConsMsg::Prepare(ref pb) = msg {
             self.my_prepare_k.insert(pb.slot, next_k);
         }
         let (_, outs) = self.ctb.as_mut().unwrap().broadcast(env, enc);
         self.handle_outs(env, outs);
+        // The frame owns a full copy and the self-delivery above decoded
+        // its own: a broadcast PREPARE's batch is dead here, so its
+        // payloads (cloned out of `req_store` at propose time) recycle.
+        if let ConsMsg::Prepare(pb) = msg {
+            self.recycle_batch(pb.reqs);
+        }
     }
 
     fn drain_blocked_broadcasts(&mut self, env: &mut dyn Env) {
@@ -403,7 +503,12 @@ impl Replica {
     }
 
     fn tb_broadcast(&mut self, env: &mut dyn Env, msg: TbMsg) {
-        let (_, outs) = self.ctb.as_mut().unwrap().app_broadcast(env, msg.encode());
+        let enc = {
+            let mut w = WireWriter::pooled(&self.pool);
+            msg.put(&mut w);
+            w.finish()
+        };
+        let (_, outs) = self.ctb.as_mut().unwrap().app_broadcast(env, enc);
         self.handle_outs(env, outs);
     }
 
@@ -411,7 +516,8 @@ impl Replica {
         if dst == self.me {
             self.handle_direct(env, self.me, msg);
         } else {
-            env.send(dst, direct_frame(&msg));
+            env.send(dst, direct_frame_in(&self.pool, &msg));
+            self.recycle_direct(msg);
         }
     }
 
@@ -427,9 +533,11 @@ impl Replica {
                     self.drain_fifo(env, bcaster);
                 }
                 CtbOut::App { bcaster, payload, .. } => {
-                    if let Ok(msg) = TbMsg::decode(&payload) {
+                    if let Ok(msg) = TbMsg::decode_pooled(&payload, &self.pool) {
                         self.handle_tb(env, bcaster, msg);
                     }
+                    // The decoded message owns its own (pooled) copies.
+                    self.pool.put_vec(payload);
                 }
                 CtbOut::Byzantine { bcaster } => {
                     self.senders[bcaster].blocked = true;
@@ -455,7 +563,7 @@ impl Replica {
                 }
             }
             let Some((k, m)) = self.senders[b].pop_in_order() else { break };
-            let Ok(msg) = ConsMsg::decode(&m) else {
+            let Ok(msg) = ConsMsg::decode_pooled(&m, &self.pool) else {
                 self.senders[b].blocked = true;
                 self.stats.byz_blocked += 1;
                 break;
@@ -543,8 +651,21 @@ impl Replica {
     fn prune_waiting_prepares(&mut self) {
         let view = self.view;
         let cp = self.checkpoint.body.clone();
+        let pool = self.pool.clone();
         self.waiting_prepares.retain(|_, pbs| {
-            pbs.retain(|pb| pb.view == view && cp.open(pb.slot));
+            // Index loop instead of `retain` so dropped batches are owned
+            // and their (pool-drawn) payloads recycle.
+            let mut i = 0;
+            while i < pbs.len() {
+                if pbs[i].view == view && cp.open(pbs[i].slot) {
+                    i += 1;
+                } else {
+                    let pb = pbs.remove(i);
+                    for req in pb.reqs {
+                        pool.put_vec(req.payload);
+                    }
+                }
+            }
             !pbs.is_empty()
         });
     }
@@ -583,7 +704,7 @@ impl Replica {
             }
             st.sent_certify = Some(view);
         }
-        let digest = certify_digest(&pb);
+        let digest = certify_digest_in(&self.pool, &pb);
         let share = self.ks.sign(self.me, &digest.0);
         crate::env::charge_sign(env, &self.cfg.lat.clone());
         env.mark("certify_sent");
@@ -683,7 +804,7 @@ impl Replica {
         if pb.view != view {
             return;
         }
-        let digest = certify_digest(&pb);
+        let digest = certify_digest_in(&self.pool, &pb);
         let st = self.slots.entry(slot).or_default();
         if st.commit_sent {
             return;
@@ -701,7 +822,7 @@ impl Replica {
     /// A valid COMMIT from `b` folded into its state.
     fn on_committed(&mut self, env: &mut dyn Env, b: NodeId, cm: Commit) {
         let slot = cm.body.slot;
-        let digest = certify_digest(&cm.body);
+        let digest = certify_digest_in(&self.pool, &cm.body);
         let st = self.slots.entry(slot).or_default();
         st.commits_for.entry(digest).or_default().insert(b);
         if st.commits_for[&digest].len() >= self.quorum && !st.decided {
@@ -712,10 +833,13 @@ impl Replica {
     }
 
     fn decide(&mut self, env: &mut dyn Env, slot: u64, reqs: Vec<Request>) {
-        let st = self.slots.entry(slot).or_default();
-        if st.decided {
+        if self.slots.entry(slot).or_default().decided {
+            // Fast and slow path may race to decide: the loser's copy of
+            // the batch is dead on arrival.
+            self.recycle_batch(reqs);
             return;
         }
+        let st = self.slots.get_mut(&slot).unwrap();
         st.decided = true;
         for req in &reqs {
             self.pending_reqs.remove(&req.digest());
@@ -742,12 +866,15 @@ impl Replica {
         // payload on the hot path. Applied slots leave `decided`; the
         // view-change re-proposal scan treats slots below `applied_upto`
         // as decided.
-        while let Some(reqs) = self.decided.remove(&self.applied_upto) {
+        while let Some(mut reqs) = self.decided.remove(&self.applied_upto) {
             let slot = self.applied_upto;
             if let Some(front) = self.spec.front() {
                 debug_assert_eq!(front.slot, slot, "speculation stack lost contiguity");
-                if front.digest == exec_batch_digest(slot, &reqs) {
+                if front.digest == exec_batch_digest_in(&self.pool, slot, &reqs) {
                     self.promote_speculation(env, slot);
+                    // The speculation already executed this batch; the
+                    // decided copy is dead.
+                    self.recycle_batch(reqs);
                     continue;
                 }
                 // The decided batch differs from what we executed (a view
@@ -759,14 +886,18 @@ impl Replica {
             // At-most-once execution: a request re-proposed across a view
             // change may decide in two slots (and a Byzantine leader may
             // repeat a request within one batch); execute only once.
-            let mut fresh: Vec<Request> = Vec::new();
+            let mut fresh: Vec<Request> = self.take_carrier();
             let mut seen: HashSet<(u64, u64)> = HashSet::new();
-            for req in reqs {
+            for req in reqs.drain(..) {
                 if self.is_fresh(&req, &mut seen) {
                     fresh.push(req);
+                } else {
+                    self.pool.put_vec(req.payload);
                 }
             }
+            self.put_carrier(reqs);
             if fresh.is_empty() {
+                self.put_carrier(fresh);
                 continue;
             }
             for req in &fresh {
@@ -774,6 +905,8 @@ impl Replica {
             }
             let replies = self.service.apply_batch(&fresh);
             debug_assert_eq!(replies.len(), fresh.len(), "apply_batch reply misalignment");
+            // Executed: the batch's payloads (and the carrier) recycle.
+            self.recycle_batch(fresh);
             let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
             for reply in replies {
                 env.mark("applied");
@@ -876,16 +1009,20 @@ impl Replica {
             // Dedup over the borrowed batch and clone only the survivors
             // — no wholesale per-slot batch copy on the speculation path.
             let leader = leader_of(self.view, self.n);
-            let Some(pb) = self.senders[leader].prepares.get(&next) else { return };
+            let mut fresh: Vec<Request> = self.take_carrier();
+            let Some(pb) = self.senders[leader].prepares.get(&next) else {
+                self.put_carrier(fresh);
+                return;
+            };
             if pb.view != self.view {
+                self.put_carrier(fresh);
                 return;
             }
-            let digest = exec_batch_digest(next, &pb.reqs);
-            let mut fresh: Vec<Request> = Vec::new();
+            let digest = exec_batch_digest_in(&self.pool, next, &pb.reqs);
             let mut seen: HashSet<(u64, u64)> = HashSet::new();
             for req in &pb.reqs {
                 if self.is_fresh(req, &mut seen) {
-                    fresh.push(req.clone());
+                    fresh.push(Self::clone_request_in(&self.pool, req));
                 }
             }
             self.speculate(env, next, digest, fresh);
@@ -899,6 +1036,7 @@ impl Replica {
     /// frames — withheld until the slot decides.
     fn speculate(&mut self, env: &mut dyn Env, slot: u64, digest: Hash32, fresh: Vec<Request>) {
         if fresh.is_empty() {
+            self.put_carrier(fresh);
             // Nothing executes, but the entry still holds the slot's
             // place so promotion stays positional.
             self.spec.push_back(SpecEntry {
@@ -933,13 +1071,16 @@ impl Replica {
                 .or_default()
                 .push(RespEntry { rid: reply.rid, payload: reply.payload });
         }
+        let pool = &self.pool;
         let frames = per_client
             .into_iter()
             .map(|(client, replies)| {
                 let n = replies.len() as u64;
-                (client as NodeId, direct_frame(&DirectMsg::Responses { slot, replies }), n)
+                (client as NodeId, direct_frame_in(pool, &DirectMsg::Responses { slot, replies }), n)
             })
             .collect();
+        // The speculated batch executed; its (pool-drawn) clones recycle.
+        self.recycle_batch(fresh);
         env.mark("spec_apply");
         self.spec.push_back(SpecEntry {
             slot,
@@ -977,8 +1118,13 @@ impl Replica {
         if let Some(token) = e.token {
             self.service.commit_speculation(token);
         }
-        for u in &e.cache_undo {
+        for u in e.cache_undo {
             self.release_spec_rid(u.client, u.rid);
+            // The bounded-cache eviction this insert displaced is final
+            // now; its payload recycles.
+            if let Some((_, _, p)) = u.evicted {
+                self.pool.put_vec(p);
+            }
         }
         self.stats.spec_hits += 1;
         env.mark("spec_promoted");
@@ -999,14 +1145,21 @@ impl Replica {
     /// and the withheld frames (dropped unsent — no speculative reply
     /// ever reached a client).
     fn rollback_all_speculation(&mut self, env: &mut dyn Env) {
+        let pool = self.pool.clone();
         while let Some(e) = self.spec.pop_back() {
             if let Some(token) = e.token {
                 self.service.rollback_speculation(token);
             }
+            // The withheld frames die unsent; their buffers recycle.
+            for (_, frame, _) in e.frames {
+                pool.put_vec(frame);
+            }
             for u in e.cache_undo.into_iter().rev() {
                 self.release_spec_rid(u.client, u.rid);
                 if let Some(cache) = self.resp_cache.get_mut(&u.client) {
-                    cache.pop_back();
+                    if let Some((_, _, p)) = cache.pop_back() {
+                        pool.put_vec(p);
+                    }
                     if let Some(old) = u.evicted {
                         cache.push_front(old);
                     }
@@ -1271,6 +1424,7 @@ impl Replica {
                 };
                 let client = req.client as NodeId;
                 self.send_direct(env, client, reply);
+                self.pool.put_vec(req.payload);
                 return;
             }
         }
@@ -1302,12 +1456,19 @@ impl Replica {
         self.stats.reads_served += 1;
         env.mark("read_served");
         let key = (req.client, req.rid);
-        if self.read_cache.insert(key, (self.applied_upto, payload.clone())).is_none() {
-            self.read_cache_order.push_back(key);
-            while self.read_cache_order.len() > READ_CACHE_CAP {
-                let old = self.read_cache_order.pop_front().unwrap();
-                self.read_cache.remove(&old);
+        match self.read_cache.insert(key, (self.applied_upto, payload.clone())) {
+            None => {
+                self.read_cache_order.push_back(key);
+                while self.read_cache_order.len() > READ_CACHE_CAP {
+                    let old = self.read_cache_order.pop_front().unwrap();
+                    if let Some((_, p)) = self.read_cache.remove(&old) {
+                        self.pool.put_vec(p);
+                    }
+                }
             }
+            // Re-answered at a fresher applied bound: the stale cached
+            // payload recycles.
+            Some((_, p)) => self.pool.put_vec(p),
         }
         let reply = DirectMsg::ReadReply {
             rid: req.rid,
@@ -1317,6 +1478,8 @@ impl Replica {
         };
         let client = req.client as NodeId;
         self.send_direct(env, client, reply);
+        // The read request is answered; its (pool-drawn) payload recycles.
+        self.pool.put_vec(req.payload);
     }
 
     /// Park a too-early read on the per-index wait queue (drained by
@@ -1399,6 +1562,7 @@ impl Replica {
                             client,
                             DirectMsg::Response { rid: req.rid, slot, payload: resp },
                         );
+                        self.pool.put_vec(req.payload);
                         return;
                     }
                 }
@@ -1407,7 +1571,12 @@ impl Replica {
                 if !self.proposed.contains(&d) {
                     self.pending_reqs.entry(d).or_insert_with(|| env.now());
                 }
-                self.req_store.insert(d, req);
+                if let Some(old) = self.req_store.insert(d, req) {
+                    // Retransmission of a request we already hold: the
+                    // digest pins the content, so the copies are
+                    // interchangeable and the displaced one recycles.
+                    self.pool.put_vec(old.payload);
+                }
                 if self.is_leader() {
                     if !self.proposed.contains(&d) {
                         self.req_queue.push_back(d);
@@ -1502,11 +1671,13 @@ impl Replica {
         while self.next_slot < self.checkpoint.body.open_hi()
             && (inflight_cap == usize::MAX || self.inflight_slots() < inflight_cap)
         {
-            let mut reqs: Vec<Request> = Vec::new();
+            let mut reqs: Vec<Request> = self.take_carrier();
             let mut batch_bytes = 0usize;
             while reqs.len() < self.cfg.max_batch_reqs {
                 let Some(&d) = self.req_queue.front() else { break };
-                let Some(req) = self.req_store.get(&d).cloned() else {
+                let Some(req) =
+                    self.req_store.get(&d).map(|r| Self::clone_request_in(&self.pool, r))
+                else {
                     self.req_queue.pop_front();
                     continue;
                 };
@@ -1527,6 +1698,7 @@ impl Replica {
                 }
                 self.req_queue.pop_front();
                 if self.proposed.contains(&d) {
+                    self.pool.put_vec(req.payload);
                     continue;
                 }
                 self.proposed.insert(d);
@@ -1534,6 +1706,7 @@ impl Replica {
                 reqs.push(req);
             }
             if reqs.is_empty() {
+                self.put_carrier(reqs);
                 break; // nothing proposable right now
             }
             self.stats.batches_proposed += 1;
@@ -1812,6 +1985,7 @@ impl Replica {
 
     fn on_tick(&mut self, env: &mut dyn Env) {
         let now = env.now();
+        self.stats.pool = self.pool.stats();
         // Leader: propose requests whose echo round timed out.
         self.try_propose(env);
         // CTBcast fast path stalled for any of my own broadcasts (PREPARE,
@@ -1870,7 +2044,9 @@ impl Replica {
 
 impl Actor for Replica {
     fn on_start(&mut self, env: &mut dyn Env) {
-        self.ctb = Some(CtbEndpoint::new(self.me, &self.cfg, self.ks.clone()));
+        let mut ctb = CtbEndpoint::new(self.me, &self.cfg, self.ks.clone());
+        ctb.set_pool(self.pool.clone());
+        self.ctb = Some(ctb);
         self.last_progress = env.now();
         env.set_timer(self.cfg.retransmit_every, TOKEN_RETRANSMIT);
         env.set_timer(TICK_EVERY, TOKEN_TICK);
@@ -1878,19 +2054,26 @@ impl Actor for Replica {
 
     fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
         match ev {
-            Event::Recv { from, bytes } => match bytes.first() {
-                Some(&TAG_TB) => {
-                    let outs = self.ctb.as_mut().unwrap().on_recv(env, from, &bytes);
-                    self.handle_outs(env, outs);
-                }
-                Some(&TAG_DIRECT) => {
-                    if let Some(msg) = parse_direct(&bytes) {
-                        env.charge(Category::Other, self.cfg.lat.proc_overhead);
-                        self.handle_direct(env, from, msg);
+            Event::Recv { from, bytes } => {
+                match bytes.first() {
+                    Some(&TAG_TB) => {
+                        let outs = self.ctb.as_mut().unwrap().on_recv(env, from, &bytes);
+                        self.handle_outs(env, outs);
                     }
+                    Some(&TAG_DIRECT) => {
+                        if let Some(msg) = msgs::parse_direct_pooled(&bytes, &self.pool) {
+                            env.charge(Category::Other, self.cfg.lat.proc_overhead);
+                            self.handle_direct(env, from, msg);
+                        }
+                    }
+                    _ => {}
                 }
-                _ => {}
-            },
+                // The handlers above decoded their own (pooled) copies;
+                // the raw frame — drawn from the *sender's* pool — refills
+                // this replica's. With symmetric traffic every pool sits
+                // at steady-state hits.
+                self.pool.put_vec(bytes);
+            }
             Event::Timer { token } => match token {
                 TOKEN_RETRANSMIT => {
                     self.ctb.as_mut().unwrap().on_retransmit(env);
@@ -1934,6 +2117,10 @@ impl Replica {
     /// CTBcast/TBcast buffers, per-sender folded state, slot bookkeeping.
     pub fn mem_bytes(&self) -> u64 {
         let mut total = self.ctb.as_ref().map_or(0, |c| c.mem_bytes());
+        // Idle buffers retained by the hot-path pool. Capped by
+        // `Config::pool_cap_bytes`, so the bounded-memory story (§7)
+        // stays honest with pooling on.
+        total += self.pool.retained_bytes() as u64;
         total += self.senders.iter().map(|s| s.mem_bytes()).sum::<u64>();
         total += (self.slots.len() * std::mem::size_of::<SlotState>()) as u64;
         // Decided batches: count every request of every slot, so the §7

@@ -9,7 +9,8 @@
 //! * [`DirectMsg`] — unicast (thin arrows): client requests/responses,
 //!   request echoes, view-change certificate shares, summary shares.
 
-use crate::crypto::{hash, hash_parts, Certificate, Hash32, Sig};
+use crate::crypto::{hash, hash_concat, hash_parts, Certificate, Hash32, Sig};
+use crate::util::pool::Pool;
 use crate::util::wire::{get_list, put_list, Wire, WireError, WireReader, WireWriter};
 use std::collections::BTreeMap;
 
@@ -33,8 +34,17 @@ impl Request {
         self.client == u64::MAX
     }
 
+    /// Streamed over the exact wire layout of [`Wire::put`] — byte-identical
+    /// to `hash(&self.encode())` without materializing the encoding. This is
+    /// the hottest digest in the replica (echo round, request-store keys,
+    /// batch digests all hash every request), so it must not allocate.
     pub fn digest(&self) -> Hash32 {
-        hash(&self.encode())
+        hash_concat(&[
+            &self.client.to_le_bytes(),
+            &self.rid.to_le_bytes(),
+            &(self.payload.len() as u32).to_le_bytes(),
+            &self.payload,
+        ])
     }
 }
 
@@ -119,6 +129,19 @@ pub fn exec_batch_digest(slot: u64, reqs: &[Request]) -> Hash32 {
         r.digest().put(&mut w);
     }
     hash_parts(&[b"ubft-spec-batch", &w.finish()])
+}
+
+/// [`exec_batch_digest`] with the scratch encoding drawn from (and
+/// returned to) `pool`. Identical digest, pooled transient buffer.
+pub fn exec_batch_digest_in(pool: &Pool, slot: u64, reqs: &[Request]) -> Hash32 {
+    let mut w = WireWriter::pooled_with_capacity(pool, 16 + 32 * reqs.len());
+    w.u64(slot);
+    w.u32(reqs.len() as u32);
+    for r in reqs {
+        r.digest().put(&mut w);
+    }
+    let buf = w.finish_pooled();
+    hash_parts(&[b"ubft-spec-batch", buf.as_slice()])
 }
 
 /// An application checkpoint body: the state digest after applying slots
@@ -227,6 +250,16 @@ impl Wire for CheckpointCert {
 /// replay of shares between commit/checkpoint/view-change certificates).
 pub fn certify_digest(body: &PrepareBody) -> Hash32 {
     hash_parts(&[b"ubft-certify", &body.encode()])
+}
+
+/// [`certify_digest`] with the scratch encoding drawn from (and returned
+/// to) `pool`. Computes an identical digest; it only changes where the
+/// transient buffer's memory comes from.
+pub fn certify_digest_in(pool: &Pool, body: &PrepareBody) -> Hash32 {
+    let mut w = WireWriter::pooled(pool);
+    body.put(&mut w);
+    let buf = w.finish_pooled();
+    hash_parts(&[b"ubft-certify", buf.as_slice()])
 }
 
 /// Domain-separated digest checkpoint shares sign.
@@ -606,9 +639,30 @@ pub fn direct_frame(msg: &DirectMsg) -> Vec<u8> {
     w.finish()
 }
 
+/// [`direct_frame`] with the buffer drawn from `pool`. Byte-identical
+/// frame; the receiver (or the transport) recycles it.
+pub fn direct_frame_in(pool: &Pool, msg: &DirectMsg) -> Vec<u8> {
+    let mut w = WireWriter::pooled(pool);
+    w.u8(crate::tbcast::TAG_DIRECT);
+    msg.put(&mut w);
+    w.finish()
+}
+
 /// Parse a direct frame (first byte already checked).
 pub fn parse_direct(bytes: &[u8]) -> Option<DirectMsg> {
     let mut r = WireReader::new(bytes);
+    if r.u8().ok()? != crate::tbcast::TAG_DIRECT {
+        return None;
+    }
+    let m = DirectMsg::get(&mut r).ok()?;
+    r.done().ok()?;
+    Some(m)
+}
+
+/// [`parse_direct`] with the message's byte-string fields drawn from
+/// `pool` (identical result; only the backing allocations differ).
+pub fn parse_direct_pooled(bytes: &[u8], pool: &Pool) -> Option<DirectMsg> {
+    let mut r = WireReader::pooled(bytes, pool);
     if r.u8().ok()? != crate::tbcast::TAG_DIRECT {
         return None;
     }
@@ -783,5 +837,128 @@ mod tests {
         assert!(later.supersedes(&g));
         assert!(!g.supersedes(&later));
         assert!(!g.supersedes(&g));
+    }
+
+    #[test]
+    fn request_digest_matches_encode_hash() {
+        // The streamed digest must stay byte-identical to hashing the
+        // materialized encoding — certificates sign it.
+        for r in [req(), Request::noop(), Request { client: 0, rid: 0, payload: vec![0; 300] }] {
+            assert_eq!(r.digest(), hash(&r.encode()));
+        }
+    }
+
+    /// Encode `m` with a plain writer and with a pooled writer — twice, so
+    /// the second pooled round runs on a recycled buffer — and demand all
+    /// three byte streams are identical. Pooling must only change where the
+    /// backing memory comes from, never the bytes (signatures cover them).
+    fn assert_pooled_encode_identical<T: Wire>(pool: &Pool, m: &T) {
+        let plain = m.encode();
+        for _ in 0..2 {
+            let mut w = WireWriter::pooled(pool);
+            m.put(&mut w);
+            let pooled = w.finish_pooled();
+            assert_eq!(pooled.as_slice(), plain.as_slice());
+            assert_eq!(T::decode_pooled(&plain, pool).unwrap().encode(), plain);
+        }
+    }
+
+    #[test]
+    fn pooled_encode_identical_for_every_frame_type() {
+        let pool = Pool::new(&[], 1 << 20);
+        let body = PrepareBody { view: 2, slot: 11, reqs: vec![req(), Request::noop()] };
+        let cert = Certificate::new(body.digest());
+        let st = SenderStateEnc {
+            view: 2,
+            sealed: Some(2),
+            prepares: [(3, body.clone())].into(),
+            commits: BTreeMap::new(),
+            checkpoint: CheckpointCert::genesis(10, Hash32::ZERO),
+        };
+        assert_pooled_encode_identical(&pool, &req());
+        assert_pooled_encode_identical(&pool, &body);
+        assert_pooled_encode_identical(&pool, &st);
+        for m in [
+            ConsMsg::Prepare(body.clone()),
+            ConsMsg::Commit(Commit { body: body.clone(), cert: cert.clone() }),
+            ConsMsg::Checkpoint(CheckpointCert::genesis(100, Hash32::ZERO)),
+            ConsMsg::SealView { view: 4 },
+            ConsMsg::NewView {
+                view: 4,
+                certs: vec![VcCert { view: 4, about: 1, state: st.clone(), cert: cert.clone() }],
+            },
+        ] {
+            assert_pooled_encode_identical(&pool, &m);
+        }
+        for m in [
+            TbMsg::Certify { view: 1, slot: 2, digest: hash(b"d"), share: Sig::ZERO },
+            TbMsg::WillCertify { view: 1, slot: 2 },
+            TbMsg::WillCommit { view: 0, slot: 0 },
+            TbMsg::CertifyCheckpoint { body: Checkpoint::genesis(5, Hash32::ZERO), share: Sig::ZERO },
+            TbMsg::Summary {
+                about: 1,
+                id: 64,
+                state: st.clone(),
+                cert: Certificate::new(Hash32::ZERO),
+            },
+        ] {
+            assert_pooled_encode_identical(&pool, &m);
+        }
+        for m in [
+            DirectMsg::Request(req()),
+            DirectMsg::ReqEcho { digest: hash(b"x") },
+            DirectMsg::Response { rid: 5, slot: 2, payload: b"out".to_vec() },
+            DirectMsg::CrtfyVc { view: 3, about: 1, state: st.clone(), share: Sig::ZERO },
+            DirectMsg::CertifySummary { id: 64, digest: hash(b"s"), share: Sig::ZERO },
+            DirectMsg::Responses {
+                slot: 9,
+                replies: vec![RespEntry { rid: 5, payload: b"a".to_vec() }],
+            },
+            DirectMsg::ReadRequest { req: req(), min_index: 77 },
+            DirectMsg::ReadReply { rid: 8, applied_upto: 40, decided_upto: 41, payload: b"v".to_vec() },
+            DirectMsg::SnapshotRequest { upto: 256 },
+            DirectMsg::SnapshotReply {
+                cp: CheckpointCert::genesis(100, Hash32::ZERO),
+                snap: b"snapbytes".to_vec(),
+            },
+        ] {
+            assert_pooled_encode_identical(&pool, &m);
+        }
+        // The stats prove the pool actually cycled: something was returned
+        // and re-used, not silently detached.
+        let s = pool.stats();
+        assert!(s.returned > 0, "pooled encodes never returned buffers");
+        assert!(s.hits > 0, "pooled encodes never recycled a buffer");
+    }
+
+    #[test]
+    fn pooled_digest_helpers_match_plain() {
+        let pool = Pool::new(&[], 1 << 20);
+        let body = PrepareBody { view: 2, slot: 11, reqs: vec![req(), Request::noop()] };
+        for _ in 0..2 {
+            assert_eq!(certify_digest_in(&pool, &body), certify_digest(&body));
+            assert_eq!(
+                exec_batch_digest_in(&pool, 11, &body.reqs),
+                exec_batch_digest(11, &body.reqs)
+            );
+        }
+        assert!(pool.stats().hits > 0);
+    }
+
+    #[test]
+    fn direct_frame_in_identical_to_direct_frame() {
+        let pool = Pool::new(&[], 1 << 20);
+        let m = DirectMsg::Responses {
+            slot: 9,
+            replies: vec![RespEntry { rid: 5, payload: b"a".to_vec() }],
+        };
+        let plain = direct_frame(&m);
+        for _ in 0..2 {
+            let framed = direct_frame_in(&pool, &m);
+            assert_eq!(framed, plain);
+            assert_eq!(parse_direct(&framed).unwrap(), m);
+            pool.put_vec(framed);
+        }
+        assert!(pool.stats().hits > 0);
     }
 }

@@ -314,7 +314,7 @@ mod tests {
     }
 
     fn share(bytes: Vec<u8>) -> Bytes {
-        std::sync::Arc::new(bytes)
+        std::sync::Arc::new(bytes.into())
     }
 
     #[test]

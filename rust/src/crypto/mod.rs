@@ -64,6 +64,19 @@ pub fn hash_parts(parts: &[&[u8]]) -> Hash32 {
     Hash32(h.finalize().into())
 }
 
+/// Digest of the plain *concatenation* of segments: byte-identical to
+/// `hash(&concat)` without materializing the concatenated buffer. Unlike
+/// [`hash_parts`] there is no per-segment length prefix, so callers must
+/// only split along an already-unambiguous layout (e.g. a fixed wire
+/// encoding) — never along attacker-controllable boundaries.
+pub fn hash_concat(parts: &[&[u8]]) -> Hash32 {
+    let mut h = Sha256::new();
+    for p in parts {
+        h.update(p);
+    }
+    Hash32(h.finalize().into())
+}
+
 /// HMAC-SHA256 (BLAKE3-keyed-hash stand-in).
 pub fn hmac(key: &[u8; 32], data: &[u8]) -> Hash32 {
     let mut mac = HmacSha256::new_from_slice(key).expect("hmac accepts 32-byte keys");
@@ -277,6 +290,14 @@ mod tests {
         assert_ne!(hash(b"a"), hash(b"b"));
         // hash_parts is injective across segment boundaries
         assert_ne!(hash_parts(&[b"ab", b"c"]), hash_parts(&[b"a", b"bc"]));
+    }
+
+    #[test]
+    fn hash_concat_matches_hash_of_concatenation() {
+        assert_eq!(hash_concat(&[b"ab", b"c"]), hash(b"abc"));
+        assert_eq!(hash_concat(&[b"", b"abc", b""]), hash(b"abc"));
+        // ...and is deliberately NOT the length-prefixed hash_parts.
+        assert_ne!(hash_concat(&[b"ab", b"c"]), hash_parts(&[b"ab", b"c"]));
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::dsm::{OpId, RegOutcome, RegisterClient, WriteStart};
 use crate::env::{Env, MemResult, Ticket};
 use crate::metrics::Category;
 use crate::tbcast::{Bytes, TbDeliver, TbEndpoint};
+use crate::util::pool::Pool;
 use crate::util::wire::{Wire, WireError, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -98,36 +99,65 @@ impl Wire for CtbMsg {
 }
 
 impl CtbMsg {
+    fn put_lock(w: &mut WireWriter, tag: u8, bcaster: u64, k: u64, m: &[u8]) {
+        w.u8(tag);
+        w.u64(bcaster);
+        w.u64(k);
+        w.bytes(m);
+    }
+
     /// Encode a LOCK frame directly from a borrowed payload — the
     /// encode-once path: no enum construction, no payload clone. Byte-
     /// identical to `CtbMsg::Lock { .. }.encode()`.
     pub fn encode_lock(bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(21 + m.len());
-        w.u8(1);
-        w.u64(bcaster);
-        w.u64(k);
-        w.bytes(m);
+        Self::put_lock(&mut w, 1, bcaster, k, m);
+        w.finish()
+    }
+
+    /// [`Self::encode_lock`] with the buffer drawn from `pool`.
+    pub fn encode_lock_in(pool: &Pool, bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
+        let mut w = WireWriter::pooled_with_capacity(pool, 21 + m.len());
+        Self::put_lock(&mut w, 1, bcaster, k, m);
         w.finish()
     }
 
     /// Encode a LOCKED frame from a borrowed payload (see [`Self::encode_lock`]).
     pub fn encode_locked(bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(21 + m.len());
-        w.u8(2);
-        w.u64(bcaster);
-        w.u64(k);
-        w.bytes(m);
+        Self::put_lock(&mut w, 2, bcaster, k, m);
+        w.finish()
+    }
+
+    /// [`Self::encode_locked`] with the buffer drawn from `pool`.
+    pub fn encode_locked_in(pool: &Pool, bcaster: u64, k: u64, m: &[u8]) -> Vec<u8> {
+        let mut w = WireWriter::pooled_with_capacity(pool, 21 + m.len());
+        Self::put_lock(&mut w, 2, bcaster, k, m);
         w.finish()
     }
 
     /// Encode a SIGNED frame from a borrowed payload (see [`Self::encode_lock`]).
     pub fn encode_signed(bcaster: u64, k: u64, m: &[u8], sig: &Sig) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(85 + m.len());
-        w.u8(3);
-        w.u64(bcaster);
-        w.u64(k);
-        w.bytes(m);
+        Self::put_lock(&mut w, 3, bcaster, k, m);
         sig.put(&mut w);
+        w.finish()
+    }
+
+    /// [`Self::encode_signed`] with the buffer drawn from `pool`.
+    pub fn encode_signed_in(pool: &Pool, bcaster: u64, k: u64, m: &[u8], sig: &Sig) -> Vec<u8> {
+        let mut w = WireWriter::pooled_with_capacity(pool, 85 + m.len());
+        Self::put_lock(&mut w, 3, bcaster, k, m);
+        sig.put(&mut w);
+        w.finish()
+    }
+
+    /// Encode an App frame from a borrowed payload (byte-identical to
+    /// `CtbMsg::App(p.to_vec()).encode()`), buffer drawn from `pool`.
+    pub fn encode_app_in(pool: &Pool, payload: &[u8]) -> Vec<u8> {
+        let mut w = WireWriter::pooled_with_capacity(pool, 5 + payload.len());
+        w.u8(4);
+        w.bytes(payload);
         w.finish()
     }
 }
@@ -233,6 +263,9 @@ pub struct CtbEndpoint {
     reg_ops: HashMap<OpId, RegCtx>,
     /// Writes deferred by the δ cooldown: (reg, ts, image, ctx fields).
     cooldown_q: VecDeque<(u32, u64, Vec<u8>, NodeId, u64)>,
+    /// Buffer pool shared with the TBcast layer (and the replica above).
+    /// Disabled by default; installed via [`Self::set_pool`].
+    pool: Pool,
 }
 
 impl CtbEndpoint {
@@ -265,7 +298,16 @@ impl CtbEndpoint {
             st,
             reg_ops: HashMap::new(),
             cooldown_q: VecDeque::new(),
+            pool: Pool::off(),
         }
+    }
+
+    /// Install a buffer pool, shared down into the TBcast layer: LOCK /
+    /// LOCKED / SIGNED payloads, frames and delivery buffers draw from
+    /// and recycle into it.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.tb.set_pool(pool.clone());
+        self.pool = pool;
     }
 
     /// Register index for (broadcaster, slot): my copy of `SWMR[me]` in
@@ -279,7 +321,7 @@ impl CtbEndpoint {
     /// Encode-once: the payload is wrapped in a shared buffer and the
     /// LOCK frame is encoded a single time for all recipients.
     pub fn broadcast(&mut self, env: &mut dyn Env, m: Vec<u8>) -> (u64, Vec<CtbOut>) {
-        let m: Bytes = Arc::new(m);
+        let m: Bytes = Arc::new(self.pool.adopt(m));
         let k = self.send_k;
         self.send_k += 1;
         self.my_msgs.insert(k, m.clone());
@@ -292,7 +334,7 @@ impl CtbEndpoint {
         }
         let mut out = Vec::new();
         if self.fast_path {
-            let lock = CtbMsg::encode_lock(self.me as u64, k, &m);
+            let lock = CtbMsg::encode_lock_in(&self.pool, self.me as u64, k, &m);
             let (_, selfd) = self.tb.broadcast(env, lock);
             out = self.process(env, vec![selfd]);
         }
@@ -313,7 +355,7 @@ impl CtbEndpoint {
         env.charge(Category::Other, self.lat.hash_cost(m.len()));
         let sig = self.ks.sign(self.me, &signed_bytes(self.me, k, &h));
         crate::env::charge_sign(env, &self.lat);
-        let msg = CtbMsg::encode_signed(self.me as u64, k, &m, &sig);
+        let msg = CtbMsg::encode_signed_in(&self.pool, self.me as u64, k, &m, &sig);
         let (_, selfd) = self.tb.broadcast(env, msg);
         self.process(env, vec![selfd])
     }
@@ -349,7 +391,8 @@ impl CtbEndpoint {
 
     /// Plain TBcast broadcast of an opaque consensus payload.
     pub fn app_broadcast(&mut self, env: &mut dyn Env, payload: Vec<u8>) -> (u64, Vec<CtbOut>) {
-        let msg = CtbMsg::App(payload).encode();
+        let msg = CtbMsg::encode_app_in(&self.pool, &payload);
+        self.pool.put_vec(payload);
         let (seq, selfd) = self.tb.broadcast(env, msg);
         (seq, self.process(env, vec![selfd]))
     }
@@ -398,7 +441,7 @@ impl CtbEndpoint {
         let mut queue: VecDeque<TbDeliver> = deliveries.into();
         let mut out = Vec::new();
         while let Some(d) = queue.pop_front() {
-            let Ok(msg) = CtbMsg::decode(&d.payload) else { continue };
+            let Ok(msg) = CtbMsg::decode_pooled(&d.payload, &self.pool) else { continue };
             match msg {
                 CtbMsg::Lock { bcaster, k, m } => {
                     // LOCK must arrive on the broadcaster's own stream.
@@ -443,9 +486,9 @@ impl CtbEndpoint {
         let slot = (k % self.t as u64) as usize;
         let cur = self.st[b].locks[slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
         if k > cur {
-            let m: Bytes = Arc::new(m);
+            let m: Bytes = Arc::new(self.pool.adopt(m));
             self.st[b].locks[slot] = Some((k, m.clone()));
-            let locked = CtbMsg::encode_locked(b as u64, k, &m);
+            let locked = CtbMsg::encode_locked_in(&self.pool, b as u64, k, &m);
             let (_, selfd) = self.tb.broadcast(env, locked);
             queue.push_back(selfd);
             let _ = out;
@@ -466,7 +509,7 @@ impl CtbEndpoint {
             return;
         }
         let slot = (k % self.t as u64) as usize;
-        let m: Bytes = Arc::new(m);
+        let m: Bytes = Arc::new(self.pool.adopt(m));
         let cur = self.st[b].locked[q][slot].as_ref().map(|(k2, _)| *k2).unwrap_or(0);
         if k > cur {
             self.st[b].locked[q][slot] = Some((k, m.clone()));
@@ -495,7 +538,7 @@ impl CtbEndpoint {
         if self.st[b].delivered[slot].unwrap_or(0) >= k {
             return;
         }
-        let m: Bytes = Arc::new(m);
+        let m: Bytes = Arc::new(self.pool.adopt(m));
         let h = hash(&m);
         env.charge(Category::Other, self.lat.hash_cost(m.len()));
         if b != self.me {

@@ -604,6 +604,11 @@ pub struct Deployment {
     batch: Option<(usize, usize)>,
     slot_pipeline: Option<usize>,
     speculation: bool,
+    /// Size classes for the hot-path buffer pool; `None` keeps the
+    /// built-in defaults (see [`crate::util::pool::DEFAULT_CLASSES`]).
+    pool_classes: Option<Vec<usize>>,
+    /// Disable the buffer pool entirely (the `pool = off` escape hatch).
+    pool_off: bool,
     read_mode: Option<ReadMode>,
     think: Option<Nanos>,
     presend: Option<Nanos>,
@@ -632,6 +637,8 @@ impl Deployment {
             batch: None,
             slot_pipeline: None,
             speculation: false,
+            pool_classes: None,
+            pool_off: false,
             read_mode: None,
             think: None,
             presend: None,
@@ -727,6 +734,24 @@ impl Deployment {
     /// [`Config::speculation`].
     pub fn speculate(mut self) -> Deployment {
         self.speculation = true;
+        self
+    }
+
+    /// Override the hot-path buffer pool's size classes (ascending byte
+    /// capacities; see [`crate::util::pool::Pool`]). The pool itself
+    /// defaults on with [`crate::util::pool::DEFAULT_CLASSES`]; this knob
+    /// only retunes the classes. Sets [`Config::pool_classes`].
+    pub fn buffer_pool(mut self, classes: &[usize]) -> Deployment {
+        self.pool_classes = Some(classes.to_vec());
+        self
+    }
+
+    /// Disable the hot-path buffer pool — every frame, payload, and batch
+    /// carrier falls back to plain heap allocation, byte-for-byte
+    /// identical wire behaviour. The builder form of the `pool = off`
+    /// config escape hatch. Clears [`Config::pool`].
+    pub fn no_buffer_pool(mut self) -> Deployment {
+        self.pool_off = true;
         self
     }
 
@@ -977,6 +1002,12 @@ impl Deployment {
         }
         if self.speculation {
             self.cfg.speculation = true;
+        }
+        if let Some(classes) = &self.pool_classes {
+            self.cfg.pool_classes = classes.clone();
+        }
+        if self.pool_off {
+            self.cfg.pool = false;
         }
     }
 
@@ -1613,6 +1644,22 @@ mod tests {
         assert!(cluster.config().speculation);
         let plain = Deployment::new(Config::default()).requests(5).build().unwrap();
         assert!(!plain.config().speculation, "speculation must be opt-in");
+    }
+
+    #[test]
+    fn pool_knobs_plumb_into_config() {
+        // Pool defaults on; `no_buffer_pool()` is the builder escape hatch.
+        let on = Deployment::new(Config::default()).requests(5).build().unwrap();
+        assert!(on.config().pool, "pool must default on");
+        let off =
+            Deployment::new(Config::default()).no_buffer_pool().requests(5).build().unwrap();
+        assert!(!off.config().pool);
+        let tuned = Deployment::new(Config::default())
+            .buffer_pool(&[128, 2048])
+            .requests(5)
+            .build()
+            .unwrap();
+        assert_eq!(tuned.config().pool_classes, vec![128, 2048]);
     }
 
     #[test]

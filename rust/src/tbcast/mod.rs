@@ -15,6 +15,7 @@
 //! roles and multiplexes everything into per-peer frames.
 
 use crate::env::Env;
+use crate::util::pool::{Pool, PooledBuf};
 use crate::util::wire::{WireReader, WireWriter};
 use crate::NodeId;
 use std::collections::{BTreeMap, VecDeque};
@@ -29,7 +30,13 @@ pub const TAG_DIRECT: u8 = 2;
 /// retransmission buffer, every per-recipient frame, and local
 /// deliveries. A broadcast encodes its payload **once**; fan-out and
 /// buffering only bump a refcount (the encode-once hot-path fix).
-pub type Bytes = Arc<Vec<u8>>;
+///
+/// The inner [`PooledBuf`] generalizes the PR-2 `Arc<Vec<u8>>`: when the
+/// payload came from a [`Pool`], the backing buffer re-enters its size
+/// class as soon as the last reference drops (buffer acked out of the
+/// retransmit window, delivery consumed) — zero allocator traffic at
+/// steady state. Detached buffers behave exactly like the old type.
+pub type Bytes = Arc<PooledBuf>;
 
 /// A TBcast delivery: message `seq` of `bcaster`'s stream.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -60,6 +67,10 @@ pub struct TbEndpoint {
     acked_by: BTreeMap<NodeId, u64>,
     recv: BTreeMap<NodeId, RecvState>,
     retransmit_tick: u64,
+    /// Buffer pool for frames, payload copies and delivery buffers.
+    /// Disabled by default ([`Pool::off`], the seed behaviour); the
+    /// replica installs its shared pool via [`Self::set_pool`].
+    pool: Pool,
 }
 
 impl TbEndpoint {
@@ -79,7 +90,14 @@ impl TbEndpoint {
             acked_by,
             recv,
             retransmit_tick: 0,
+            pool: Pool::off(),
         }
+    }
+
+    /// Install a buffer pool; all subsequent frames and payload buffers
+    /// draw from (and recycle into) it.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
     }
 
     /// TBcast-broadcast `payload` on my stream. Returns the assigned
@@ -88,7 +106,7 @@ impl TbEndpoint {
     /// retransmission buffer, every recipient's frame, and the
     /// self-delivery all reference the same encoded bytes.
     pub fn broadcast(&mut self, env: &mut dyn Env, payload: Vec<u8>) -> (u64, TbDeliver) {
-        let payload: Bytes = Arc::new(payload);
+        let payload: Bytes = Arc::new(self.pool.adopt(payload));
         let seq = self.next_seq;
         self.next_seq += 1;
         if self.buf.len() == self.cap {
@@ -114,7 +132,7 @@ impl TbEndpoint {
     fn frame_for(&self, dst: NodeId, msgs: &[(u64, Bytes)]) -> Vec<u8> {
         let ack = self.recv.get(&dst).map_or(0, |r| r.next - 1);
         let low = self.buf.front().map_or(self.next_seq, |(s, _)| *s);
-        let mut w = WireWriter::with_capacity(64);
+        let mut w = WireWriter::pooled_with_capacity(&self.pool, 64);
         w.u8(TAG_TB);
         w.u64(ack);
         w.u64(low);
@@ -130,7 +148,7 @@ impl TbEndpoint {
     /// [`TAG_TB`]). Malformed frames from Byzantine peers are dropped.
     /// Returns in-order deliveries.
     pub fn on_frame(&mut self, from: NodeId, bytes: &[u8]) -> Vec<TbDeliver> {
-        let mut r = WireReader::new(bytes);
+        let mut r = WireReader::pooled(bytes, &self.pool);
         let Ok(tag) = r.u8() else { return vec![] };
         if tag != TAG_TB {
             return vec![];
@@ -144,26 +162,40 @@ impl TbEndpoint {
         }
         let Some(st) = self.recv.get_mut(&from) else { return vec![] };
         // The sender no longer buffers anything below `low`: skip the gap
-        // (tail-validity permits missing old messages).
+        // (tail-validity permits missing old messages). Skipped copies go
+        // back to the pool.
         if low > st.next {
             st.next = low;
-            st.pending = st.pending.split_off(&low);
+            let keep = st.pending.split_off(&low);
+            for (_, v) in std::mem::replace(&mut st.pending, keep) {
+                self.pool.put_vec(v);
+            }
         }
         for _ in 0..count {
             let (Ok(seq), Ok(m)) = (r.u64(), r.bytes()) else { return vec![] };
             if seq >= st.next {
-                st.pending.insert(seq, m);
+                if let Some(old) = st.pending.insert(seq, m) {
+                    self.pool.put_vec(old); // duplicate retransmission
+                }
+            } else {
+                self.pool.put_vec(m); // already delivered
             }
         }
         // Bound the out-of-order buffer to the tail: keep newest `cap`.
         while st.pending.len() > self.cap {
             let (&k, _) = st.pending.iter().next().unwrap();
-            st.pending.remove(&k);
+            if let Some(v) = st.pending.remove(&k) {
+                self.pool.put_vec(v);
+            }
         }
         // Deliver contiguously.
         let mut out = Vec::new();
         while let Some(m) = st.pending.remove(&st.next) {
-            out.push(TbDeliver { bcaster: from, seq: st.next, payload: Arc::new(m) });
+            out.push(TbDeliver {
+                bcaster: from,
+                seq: st.next,
+                payload: Arc::new(self.pool.adopt(m)),
+            });
             st.next += 1;
         }
         out

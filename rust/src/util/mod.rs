@@ -1,9 +1,12 @@
-//! Small shared utilities: deterministic PRNG, wire encoding, hex.
+//! Small shared utilities: deterministic PRNG, wire encoding, buffer
+//! pooling, hex.
 
 pub mod rng;
 pub mod wire;
+pub mod pool;
 pub mod hex;
 
+pub use pool::{Pool, PoolStats, PooledBuf};
 pub use rng::Rng;
 pub use wire::{WireReader, WireWriter, Wire, WireError};
 

@@ -1,0 +1,396 @@
+//! Size-classed buffer pool for the consensus hot path.
+//!
+//! uBFT's microsecond-scale latency budget leaves no room for a malloc
+//! per message: every PREPARE encode, TBcast frame, LOCK/LOCKED payload
+//! and `Responses` frame used to be a fresh `Vec<u8>`. This pool recycles
+//! those buffers through size-classed freelists so that, at steady state,
+//! the propose→certify→apply pipeline touches the allocator near-zero
+//! times per decided request.
+//!
+//! # Ownership and return discipline
+//!
+//! Buffers leave the pool in one of two shapes:
+//!
+//! * **Plain `Vec<u8>`** via [`Pool::take_vec`] — the caller owns it and
+//!   is responsible for handing it back with [`Pool::put_vec`] at a point
+//!   where ownership is provably linear (e.g. the `decided.remove`
+//!   handoff in `try_apply`, or after a frame has been copied to the
+//!   wire). Forgetting to return a buffer is safe — it simply deallocates
+//!   — the pool just records a miss next time.
+//! * **RAII [`PooledBuf`]** via [`Pool::take_buf`] / [`Pool::adopt`] —
+//!   returns itself to its class on drop. This is what
+//!   `tbcast::Bytes = Arc<PooledBuf>` uses: when the last reference to a
+//!   shared payload drops (retransmit buffer acked, delivery consumed),
+//!   the backing buffer re-enters the pool automatically.
+//!
+//! A buffer re-enters the pool **cleared** (`len == 0`); [`Pool::take_vec`]
+//! hands out empty buffers only. No bytes from a previous message are ever
+//! observable through the pool — a Byzantine-relevant invariant (a reused
+//! frame must not leak another client's payload) that the unit tests pin.
+//!
+//! # Size classes
+//!
+//! The default ladder (see [`DEFAULT_CLASSES`]) covers the repo's message
+//! spectrum:
+//!
+//! | class  | typical occupant                                   |
+//! |--------|----------------------------------------------------|
+//! | 64 B   | acks, WILL_CERTIFY/WILL_COMMIT, ReqEcho frames     |
+//! | 256 B  | single-request PREPAREs, Response frames           |
+//! | 1 KiB  | small batches, LOCK/LOCKED payloads                |
+//! | 4 KiB  | mid batches, summary shares                        |
+//! | 16 KiB | large batches (max_batch_bytes/4)                  |
+//! | 64 KiB | full `max_batch_bytes` batches, snapshots          |
+//!
+//! A request larger than the top class is allocated exactly and, on
+//! return, retained under the largest class (its capacity qualifies).
+//! Total retained bytes are capped ([`Pool::new`]'s `cap_bytes`) so the
+//! Table-2 bounded-memory story stays honest: `retained_bytes()` is
+//! part of `Replica::mem_bytes()`.
+//!
+//! The pool is a [`crate::config::Config`] knob (`pool = on|off`,
+//! default on); `pool = off` yields a disabled pool whose `take_vec`
+//! degenerates to plain allocation and whose `put_vec` drops — exactly
+//! the seed's allocation behaviour (wire bytes are identical either way;
+//! encoding never depends on the pool).
+
+use std::sync::{Arc, Mutex};
+
+/// Default size-class capacities (bytes), ascending.
+pub const DEFAULT_CLASSES: [usize; 6] = [64, 256, 1024, 4096, 16384, 65536];
+
+/// Default cap on bytes retained across all freelists (per pool).
+pub const DEFAULT_CAP_BYTES: usize = 256 * 1024;
+
+/// Counters exposed through `ReplicaStats` (all monotonic except the
+/// high-water mark).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take_vec`/`take_buf` calls served from a freelist (no allocation).
+    pub hits: u64,
+    /// Takes that had to allocate (cold pool, drained class, or oversize).
+    pub misses: u64,
+    /// Buffers actually retained by `put_vec` (returns dropped by the
+    /// byte cap or below the smallest class are not counted).
+    pub returned: u64,
+    /// Highest total bytes ever retained at once (bounded-memory audit).
+    pub high_water_bytes: u64,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    /// Ascending class capacities.
+    classes: Vec<usize>,
+    /// One freelist per class; every entry is empty with capacity >= class.
+    free: Vec<Vec<Vec<u8>>>,
+    /// Sum of capacities of retained buffers.
+    retained: usize,
+    /// Retention cap in bytes.
+    cap: usize,
+    stats: PoolStats,
+}
+
+/// Clonable handle to a shared, thread-safe buffer pool. A disabled
+/// handle ([`Pool::off`]) keeps the whole API callable with seed
+/// allocation behaviour.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    enabled: bool,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl Pool {
+    /// An enabled pool with the given class ladder and retention cap.
+    /// Classes are sorted and deduplicated; an empty ladder falls back to
+    /// [`DEFAULT_CLASSES`].
+    pub fn new(classes: &[usize], cap_bytes: usize) -> Pool {
+        let mut cl: Vec<usize> = classes.iter().copied().filter(|&c| c > 0).collect();
+        if cl.is_empty() {
+            cl = DEFAULT_CLASSES.to_vec();
+        }
+        cl.sort_unstable();
+        cl.dedup();
+        let free = cl.iter().map(|_| Vec::new()).collect();
+        Pool {
+            enabled: true,
+            inner: Arc::new(Mutex::new(PoolInner {
+                classes: cl,
+                free,
+                retained: 0,
+                cap: cap_bytes,
+                stats: PoolStats::default(),
+            })),
+        }
+    }
+
+    /// A disabled pool: `take_vec` allocates, `put_vec` drops, stats stay
+    /// zero. Preserves the seed's allocation behaviour exactly.
+    pub fn off() -> Pool {
+        let mut p = Pool::new(&DEFAULT_CLASSES, 0);
+        p.enabled = false;
+        p
+    }
+
+    /// Whether this handle recycles buffers.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Take an empty buffer with capacity >= `min`. Served from the
+    /// smallest class that fits when possible; allocates otherwise.
+    pub fn take_vec(&self, min: usize) -> Vec<u8> {
+        if !self.enabled {
+            return Vec::with_capacity(min);
+        }
+        let mut g = self.inner.lock().unwrap();
+        let idx = g.classes.iter().position(|&c| c >= min);
+        if let Some(i) = idx {
+            if let Some(v) = g.free[i].pop() {
+                debug_assert!(v.is_empty() && v.capacity() >= min);
+                g.retained -= v.capacity();
+                g.stats.hits += 1;
+                return v;
+            }
+            let class = g.classes[i];
+            g.stats.misses += 1;
+            return Vec::with_capacity(class);
+        }
+        // Larger than the top class: exact allocation.
+        g.stats.misses += 1;
+        Vec::with_capacity(min)
+    }
+
+    /// Return a buffer to the pool. Cleared before it is retained; dropped
+    /// if the pool is disabled, the capacity is below the smallest class,
+    /// or retaining it would exceed the byte cap.
+    pub fn put_vec(&self, mut v: Vec<u8>) {
+        if !self.enabled {
+            return;
+        }
+        let cap = v.capacity();
+        let mut g = self.inner.lock().unwrap();
+        // Largest class the capacity fully covers.
+        let Some(i) = g.classes.iter().rposition(|&c| c <= cap) else {
+            return; // below the smallest class: not worth retaining
+        };
+        if g.retained + cap > g.cap {
+            return; // retention cap: bounded memory beats hit rate
+        }
+        v.clear();
+        g.retained += cap;
+        g.stats.returned += 1;
+        if g.retained as u64 > g.stats.high_water_bytes {
+            g.stats.high_water_bytes = g.retained as u64;
+        }
+        g.free[i].push(v);
+    }
+
+    /// Take an RAII buffer that returns itself to the pool on drop.
+    pub fn take_buf(&self, min: usize) -> PooledBuf {
+        PooledBuf { buf: self.take_vec(min), pool: self.enabled.then(|| self.clone()) }
+    }
+
+    /// Wrap an existing buffer so it returns to this pool on drop.
+    /// On a disabled pool this is [`PooledBuf::detached`].
+    pub fn adopt(&self, buf: Vec<u8>) -> PooledBuf {
+        PooledBuf { buf, pool: self.enabled.then(|| self.clone()) }
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Bytes currently retained across all freelists (Table 2 accounting).
+    pub fn retained_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().retained as u64
+    }
+}
+
+/// An owned buffer that may be attached to a [`Pool`]: on drop the
+/// backing `Vec<u8>` re-enters its size class. Dereferences to `Vec<u8>`
+/// so existing byte-slice code works unchanged; a detached `PooledBuf`
+/// behaves exactly like a plain vector.
+#[derive(Debug, Default)]
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    pool: Option<Pool>,
+}
+
+impl PooledBuf {
+    /// Wrap a buffer with no pool attachment (drops normally).
+    pub fn detached(buf: Vec<u8>) -> PooledBuf {
+        PooledBuf { buf, pool: None }
+    }
+
+    /// Detach and take the backing vector (it will not return to a pool).
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.pool = None;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(p) = self.pool.take() {
+            p.put_vec(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl From<Vec<u8>> for PooledBuf {
+    fn from(buf: Vec<u8>) -> PooledBuf {
+        PooledBuf::detached(buf)
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.buf == other.buf
+    }
+}
+impl Eq for PooledBuf {}
+
+impl Clone for PooledBuf {
+    /// Clones the bytes, not the pool attachment: exactly one owner per
+    /// pooled buffer, so a buffer can never be returned twice.
+    fn clone(&self) -> PooledBuf {
+        PooledBuf::detached(self.buf.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_same_buffer() {
+        let p = Pool::new(&[64, 256], 1 << 20);
+        let mut v = p.take_vec(10);
+        assert_eq!(p.stats().misses, 1);
+        assert!(v.capacity() >= 64);
+        v.extend_from_slice(b"secret-bytes");
+        p.put_vec(v);
+        assert_eq!(p.stats().returned, 1);
+        let v2 = p.take_vec(10);
+        assert_eq!(p.stats().hits, 1);
+        // Byzantine-relevant: no data bleed across messages.
+        assert!(v2.is_empty(), "reused buffer must be cleared");
+        assert!(v2.capacity() >= 64);
+    }
+
+    #[test]
+    fn class_selection_smallest_fit() {
+        let p = Pool::new(&[64, 256, 1024], 1 << 20);
+        p.put_vec(Vec::with_capacity(1024));
+        p.put_vec(Vec::with_capacity(64));
+        // min=100 needs the 256 class; neither retained buffer is in it.
+        let v = p.take_vec(100);
+        assert!(v.capacity() >= 100);
+        assert_eq!(p.stats().misses, 1);
+        // min=300 is served by the retained 1024 buffer.
+        let v2 = p.take_vec(300);
+        assert!(v2.capacity() >= 1024);
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn retention_cap_enforced() {
+        let p = Pool::new(&[64], 128);
+        p.put_vec(Vec::with_capacity(64));
+        p.put_vec(Vec::with_capacity(64));
+        assert_eq!(p.retained_bytes(), 128);
+        p.put_vec(Vec::with_capacity(64)); // over cap: dropped
+        assert_eq!(p.retained_bytes(), 128);
+        assert_eq!(p.stats().returned, 2);
+        assert_eq!(p.stats().high_water_bytes, 128);
+    }
+
+    #[test]
+    fn tiny_buffers_not_retained() {
+        let p = Pool::new(&[64], 1 << 20);
+        p.put_vec(Vec::with_capacity(8));
+        assert_eq!(p.retained_bytes(), 0);
+        assert_eq!(p.stats().returned, 0);
+    }
+
+    #[test]
+    fn disabled_pool_is_seed_behaviour() {
+        let p = Pool::off();
+        let v = p.take_vec(100);
+        assert!(v.capacity() >= 100);
+        p.put_vec(v);
+        assert_eq!(p.retained_bytes(), 0);
+        assert_eq!(p.stats(), PoolStats::default());
+        assert!(!p.is_enabled());
+    }
+
+    #[test]
+    fn pooled_buf_returns_on_drop() {
+        let p = Pool::new(&[64], 1 << 20);
+        {
+            let mut b = p.take_buf(16);
+            b.extend_from_slice(b"abc");
+            assert_eq!(&b[..], b"abc");
+        } // drop returns it
+        assert_eq!(p.stats().returned, 1);
+        let v = p.take_vec(16);
+        assert!(v.is_empty());
+        assert_eq!(p.stats().hits, 1);
+    }
+
+    #[test]
+    fn adopt_and_shared_drop_via_arc() {
+        let p = Pool::new(&[64], 1 << 20);
+        let b = Arc::new(p.adopt(Vec::with_capacity(64)));
+        let b2 = b.clone();
+        drop(b);
+        assert_eq!(p.stats().returned, 0, "still referenced");
+        drop(b2);
+        assert_eq!(p.stats().returned, 1, "last ref returns the buffer");
+    }
+
+    #[test]
+    fn into_vec_detaches() {
+        let p = Pool::new(&[64], 1 << 20);
+        let b = p.take_buf(16);
+        let v = b.into_vec();
+        drop(v);
+        assert_eq!(p.stats().returned, 0);
+    }
+
+    #[test]
+    fn clone_detaches_so_no_double_return() {
+        let p = Pool::new(&[64], 1 << 20);
+        let b = p.take_buf(16);
+        let c = b.clone();
+        drop(c);
+        drop(b);
+        assert_eq!(p.stats().returned, 1);
+    }
+
+    #[test]
+    fn oversize_round_trips_through_top_class() {
+        let p = Pool::new(&[64, 256], 1 << 20);
+        let v = p.take_vec(4096); // above top class: exact alloc
+        assert!(v.capacity() >= 4096);
+        p.put_vec(v); // retained under the 256 class (capacity qualifies)
+        assert_eq!(p.stats().returned, 1);
+        let v2 = p.take_vec(300);
+        assert!(v2.capacity() >= 4096);
+        assert_eq!(p.stats().hits, 1);
+    }
+}

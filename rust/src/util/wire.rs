@@ -6,7 +6,25 @@
 //! which matters for uBFT: CTBcast summaries and view-change certificates
 //! are signatures over encoded state, and f+1 replicas must produce
 //! byte-identical encodings of the same logical state (§5.2, §5.3).
+//!
+//! # Buffer pooling
+//!
+//! Both halves integrate with [`crate::util::pool::Pool`] — the
+//! zero-allocation hot path:
+//!
+//! * [`WireWriter::pooled`] draws its backing buffer from the pool, and
+//!   [`WireWriter::finish_pooled`] hands it back as a [`PooledBuf`] that
+//!   returns to its size class on drop. [`WireWriter::finish`] on a
+//!   pooled writer simply detaches the buffer (the receiver may return
+//!   it). Encoded bytes are byte-identical with and without a pool —
+//!   pooling only changes where the backing memory comes from.
+//! * [`WireReader::pooled`] makes [`WireReader::bytes`] fill its result
+//!   from the pool instead of allocating. [`WireReader::bytes_ref`] and
+//!   [`WireReader::take_ref`] avoid the copy altogether, borrowing
+//!   straight from the input — use them when the bytes are immediately
+//!   hashed or re-encoded.
 
+use crate::util::pool::{Pool, PooledBuf};
 use std::collections::BTreeMap;
 
 /// Error raised when decoding malformed bytes (e.g. from a Byzantine peer).
@@ -26,15 +44,28 @@ pub enum WireError {
 #[derive(Debug, Default)]
 pub struct WireWriter {
     buf: Vec<u8>,
+    pool: Option<Pool>,
 }
 
 impl WireWriter {
     pub fn new() -> Self {
-        WireWriter { buf: Vec::new() }
+        WireWriter { buf: Vec::new(), pool: None }
     }
 
     pub fn with_capacity(n: usize) -> Self {
-        WireWriter { buf: Vec::with_capacity(n) }
+        WireWriter { buf: Vec::with_capacity(n), pool: None }
+    }
+
+    /// Writer backed by a pooled buffer. Finish with
+    /// [`Self::finish_pooled`] to keep the return-on-drop discipline, or
+    /// [`Self::finish`] to detach the buffer.
+    pub fn pooled(pool: &Pool) -> Self {
+        Self::pooled_with_capacity(pool, 0)
+    }
+
+    /// Pooled writer whose initial buffer covers at least `n` bytes.
+    pub fn pooled_with_capacity(pool: &Pool, n: usize) -> Self {
+        WireWriter { buf: pool.take_vec(n), pool: Some(pool.clone()) }
     }
 
     pub fn u8(&mut self, v: u8) {
@@ -64,6 +95,14 @@ impl WireWriter {
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
+    /// Finish into a [`PooledBuf`] that returns to the pool on drop
+    /// (detached if the writer was not pooled).
+    pub fn finish_pooled(self) -> PooledBuf {
+        match self.pool {
+            Some(p) => p.adopt(self.buf),
+            None => PooledBuf::detached(self.buf),
+        }
+    }
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -76,11 +115,18 @@ impl WireWriter {
 pub struct WireReader<'a> {
     buf: &'a [u8],
     pos: usize,
+    pool: Option<Pool>,
 }
 
 impl<'a> WireReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        WireReader { buf, pos: 0 }
+        WireReader { buf, pos: 0, pool: None }
+    }
+
+    /// Reader whose [`Self::bytes`] results are drawn from `pool`
+    /// instead of freshly allocated (contents are identical).
+    pub fn pooled(buf: &'a [u8], pool: &Pool) -> Self {
+        WireReader { buf, pos: 0, pool: Some(pool.clone()) }
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
@@ -107,14 +153,34 @@ impl<'a> WireReader<'a> {
     pub fn bool(&mut self) -> Result<bool, WireError> {
         Ok(self.u8()? != 0)
     }
-    /// Length-prefixed byte string with a sanity limit against hostile input.
+    /// Length-prefixed byte string with a sanity limit against hostile
+    /// input. Allocates (or draws from the pool on a pooled reader); use
+    /// [`Self::bytes_ref`] when a borrow suffices.
     pub fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let s = self.bytes_ref()?;
+        match &self.pool {
+            Some(p) => {
+                let mut v = p.take_vec(s.len());
+                v.extend_from_slice(s);
+                Ok(v)
+            }
+            None => Ok(s.to_vec()),
+        }
+    }
+    /// Borrowing variant of [`Self::bytes`]: the returned slice aliases
+    /// the input — zero-copy for decode paths that immediately hash,
+    /// re-encode, or re-wrap the bytes.
+    pub fn bytes_ref(&mut self) -> Result<&'a [u8], WireError> {
         const LIMIT: usize = 64 << 20;
         let n = self.u32()? as usize;
         if n > LIMIT {
             return Err(WireError::TooLong(n, LIMIT));
         }
-        Ok(self.take(n)?.to_vec())
+        self.take(n)
+    }
+    /// Borrow exactly `n` raw bytes (no length prefix) from the input.
+    pub fn take_ref(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        self.take(n)
     }
     /// Fixed-size array of N raw bytes.
     pub fn array<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
@@ -148,6 +214,15 @@ pub trait Wire: Sized {
     /// Decode, requiring full consumption of `buf`.
     fn decode(buf: &[u8]) -> Result<Self, WireError> {
         let mut r = WireReader::new(buf);
+        let v = Self::get(&mut r)?;
+        r.done()?;
+        Ok(v)
+    }
+
+    /// Decode with byte-string fields drawn from `pool` (identical result
+    /// to [`Self::decode`]; only the backing allocations differ).
+    fn decode_pooled(buf: &[u8], pool: &Pool) -> Result<Self, WireError> {
+        let mut r = WireReader::pooled(buf, pool);
         let v = Self::get(&mut r)?;
         r.done()?;
         Ok(v)
@@ -353,5 +428,56 @@ mod tests {
         let buf = u32::MAX.encode();
         let mut r = WireReader::new(&buf);
         assert!(matches!(r.bytes(), Err(WireError::TooLong(..))));
+        let mut r = WireReader::new(&buf);
+        assert!(matches!(r.bytes_ref(), Err(WireError::TooLong(..))));
+    }
+
+    #[test]
+    fn bytes_ref_borrows_same_bytes() {
+        let mut w = WireWriter::new();
+        w.bytes(b"payload");
+        w.u8(9);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.bytes_ref().unwrap(), b"payload");
+        assert_eq!(r.u8().unwrap(), 9);
+        r.done().unwrap();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.take_ref(4).unwrap(), &buf[..4]);
+    }
+
+    #[test]
+    fn pooled_writer_bytes_identical_and_recycled() {
+        let p = Pool::new(&[64, 256], 1 << 20);
+        let plain = {
+            let mut w = WireWriter::new();
+            w.u64(7);
+            w.bytes(b"abc");
+            w.finish()
+        };
+        for round in 0..3 {
+            let mut w = WireWriter::pooled(&p);
+            w.u64(7);
+            w.bytes(b"abc");
+            let out = w.finish_pooled();
+            assert_eq!(&out[..], &plain[..], "round {round}");
+        } // each drop returns the buffer; rounds 1-2 are hits
+        assert_eq!(p.stats().misses, 1);
+        assert_eq!(p.stats().hits, 2);
+    }
+
+    #[test]
+    fn pooled_reader_decode_matches_plain() {
+        let p = Pool::new(&[64], 1 << 20);
+        let v = b"hello".to_vec();
+        let enc = v.encode();
+        let plain = Vec::<u8>::decode(&enc).unwrap();
+        let pooled = Vec::<u8>::decode_pooled(&enc, &p).unwrap();
+        assert_eq!(plain, pooled);
+        // Recycle and decode again: served from the freelist, same bytes.
+        p.put_vec(pooled);
+        let again = Vec::<u8>::decode_pooled(&enc, &p).unwrap();
+        assert_eq!(plain, again);
+        assert_eq!(p.stats().hits, 1);
     }
 }

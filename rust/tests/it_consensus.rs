@@ -149,3 +149,35 @@ fn batching_multiplies_throughput_under_load() {
         batched.occupancy
     );
 }
+
+#[test]
+fn pooled_run_identical_to_unpooled() {
+    // The buffer pool only changes backing memory, never bytes: a full KV
+    // run with the pool on (the default) must finish with exactly the
+    // same replica digests and sample count as the `pool = off` escape
+    // hatch. Both runs share the seed, so any divergence is the pool's.
+    let run = |pooled: bool| {
+        let mut d = Deployment::new(Config::default())
+            .app(|| Box::new(ubft::apps::KvApp::new()))
+            .client(Box::new(ubft::apps::kv::KvWorkload::paper()))
+            .requests(150);
+        if !pooled {
+            d = d.no_buffer_pool();
+        }
+        let mut cluster = d.build().expect("valid deployment");
+        cluster.run_until(2 * ubft::SECOND);
+        assert!(cluster.converged(), "replicas diverged: {:?}", cluster.digests());
+        let hits = cluster.replica(0).map(|r| r.stats.pool.hits).unwrap_or(0);
+        if pooled {
+            assert!(hits > 0, "pool never hit on the hot path");
+        } else {
+            assert_eq!(hits, 0, "pool = off must not serve pooled buffers");
+        }
+        (cluster.samples().len(), cluster.digests())
+    };
+    let (n_on, dig_on) = run(true);
+    let (n_off, dig_off) = run(false);
+    assert_eq!(n_on, 150, "all requests must complete");
+    assert_eq!(n_on, n_off);
+    assert_eq!(dig_on, dig_off, "pooled run diverged from unpooled");
+}
