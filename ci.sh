@@ -15,6 +15,29 @@ cargo build --release --benches
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo test -q -p ubft-lint =="
+# The lint tool's own tests: per-lint fixtures, waiver syntax, scanner
+# corners, and the self-check that the repo tree is lint-clean with a
+# current UNSAFE_INVENTORY.md. (A workspace member — the root-package
+# `cargo test` above doesn't cover it.)
+cargo test -q -p ubft-lint
+
+echo "== ubft-lint (blocking) =="
+# Repo-specific static analysis (rust/tools/lint/README.md): determinism
+# (nondet-iteration, wall-clock-in-protocol), hot-path-alloc, unsafe-audit,
+# config-knob-coverage. Violations fail the gate; waivers need an inline
+# justification.
+cargo run --release -q -p ubft-lint -- --root ..
+
+echo "== ubft-lint: UNSAFE_INVENTORY.md is current =="
+# Regenerate the machine-readable unsafe inventory and fail on drift, so
+# the committed file can never go stale.
+cargo run --release -q -p ubft-lint -- --root .. --write-inventory
+git -C .. diff --exit-code UNSAFE_INVENTORY.md
+
+echo "== cargo clippy --all-targets (warnings are errors) =="
+cargo clippy --all-targets -- -D warnings
+
 echo "== read-mix smoke: ubft scaling --reads 90 =="
 # Short end-to-end run of the typed-Service read lane: 90% GETs on the
 # KV store across all three read modes (consensus / linearizable /

@@ -41,19 +41,27 @@ mod alloc_count {
 
     struct Counting;
 
+    // SAFETY: a pure pass-through to the `System` allocator — every
+    // GlobalAlloc contract obligation is delegated unchanged; the only
+    // addition is a relaxed atomic counter with no allocation behaviour.
     unsafe impl GlobalAlloc for Counting {
+        // SAFETY: delegates to `System.alloc` with the caller's layout.
         unsafe fn alloc(&self, l: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             System.alloc(l)
         }
+        // SAFETY: delegates to `System.alloc_zeroed` unchanged.
         unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             System.alloc_zeroed(l)
         }
+        // SAFETY: delegates to `System.realloc` with the caller's
+        // pointer/layout, which must have come from this allocator.
         unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
             System.realloc(p, l, n)
         }
+        // SAFETY: delegates to `System.dealloc` unchanged.
         unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
             System.dealloc(p, l)
         }

@@ -134,6 +134,10 @@ impl Default for MuFollower {
 }
 
 impl Actor for MuFollower {
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self) // tests downcast to inspect the replicated log
+    }
+
     fn on_event(&mut self, env: &mut dyn Env, ev: Event) {
         let Event::Recv { from, bytes } = ev else { return };
         if bytes.first() != Some(&TAG_MU_LOG) {
@@ -196,7 +200,7 @@ mod tests {
         assert_eq!(samples.lock().unwrap().len(), 25);
         for f in 1..3 {
             let a = sim.actor_mut(f);
-            let fo = unsafe { &*(a as *const dyn Actor as *const MuFollower) };
+            let fo = a.as_any().unwrap().downcast_ref::<MuFollower>().unwrap();
             assert_eq!(fo.log.len(), 25);
         }
     }

@@ -111,7 +111,7 @@ pub struct Config {
     /// consensus pipeline, generalized). 0 = unbounded (the window is
     /// the only limit — the seed's behaviour). Small values (2–4) make
     /// the request queue accumulate so batches actually fill under load.
-    pub max_inflight_slots: usize,
+    pub max_inflight_slots: usize, // ubft-lint: allow(config-knob-coverage) -- 0 = unbounded
     /// δ — the known post-GST communication bound (register cooldown).
     pub delta: Nanos,
     /// Fast-path timeout before a slot falls back to the slow path.
@@ -121,34 +121,34 @@ pub struct Config {
     /// TBcast retransmission interval.
     pub retransmit_every: Nanos,
     /// Force the slow path (used by slow-path benchmarks: Fig 8-10).
-    pub slow_path_always: bool,
+    pub slow_path_always: bool, // ubft-lint: allow(config-knob-coverage) -- both values valid
     /// Speculative execution: apply a slot's batch when its PREPARE is
     /// delivered (against an undo-logged service state, replies withheld)
     /// and promote the speculation in constant time at decide, taking
     /// application execution off the decide critical path. Off by
     /// default — the seed's apply-at-decide behaviour.
-    pub speculation: bool,
+    pub speculation: bool, // ubft-lint: allow(config-knob-coverage) -- both values valid
     /// Hot-path buffer pool: wire frames, decoded payloads, and digest
     /// scratch buffers draw from a size-classed per-replica freelist and
     /// recycle instead of hitting the allocator per message. On by
     /// default; `pool = off` is the escape hatch restoring the seed's
     /// plain-allocation behaviour byte-for-byte (encodings are identical
     /// either way — pooling only changes backing memory).
-    pub pool: bool,
+    pub pool: bool, // ubft-lint: allow(config-knob-coverage) -- both values valid
     /// Pool size classes (bytes, ascending). Empty = the built-in
     /// [`crate::util::pool::DEFAULT_CLASSES`].
     pub pool_classes: Vec<usize>,
     /// Cap on idle bytes the pool retains (bounded-memory story, §7).
-    pub pool_cap_bytes: usize,
+    pub pool_cap_bytes: usize, // ubft-lint: allow(config-knob-coverage) -- any cap; 0 retains nothing
     /// How clients route `ReadOnly`-classified requests (the typed
     /// `Service` read lane). Default: everything through consensus.
-    pub read_mode: ReadMode,
+    pub read_mode: ReadMode, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
     /// Signature backend.
-    pub sig_backend: SigBackend,
+    pub sig_backend: SigBackend, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
     /// DES latency model.
     pub lat: LatencyModel,
     /// PRNG seed for the deployment.
-    pub seed: u64,
+    pub seed: u64, // ubft-lint: allow(config-knob-coverage) -- any seed is valid
 }
 
 impl Default for Config {
@@ -220,6 +220,23 @@ impl Config {
                 "max_batch_reqs = {} must not exceed window = {}",
                 self.max_batch_reqs, self.window
             ));
+        }
+        if self.max_req == 0 {
+            return Err("max_req must be >= 1".into());
+        }
+        if self.delta == 0 || self.fastpath_timeout == 0 {
+            return Err("delta / fastpath_timeout must be > 0".into());
+        }
+        if self.viewchange_timeout == 0 || self.retransmit_every == 0 {
+            return Err("viewchange_timeout / retransmit_every must be > 0".into());
+        }
+        if self.pool_classes.first() == Some(&0)
+            || self.pool_classes.windows(2).any(|w| w[0] >= w[1])
+        {
+            return Err("pool_classes must be nonzero and strictly ascending".into());
+        }
+        if !self.lat.per_byte.is_finite() || self.lat.per_byte < 0.0 {
+            return Err("lat.per_byte must be finite and non-negative".into());
         }
         Ok(())
     }
@@ -293,6 +310,7 @@ impl Config {
                 "lat.verify" => c.lat.verify = u(v)?,
                 "lat.hmac" => c.lat.hmac = u(v)?,
                 "lat.sgx_call" => c.lat.sgx_call = u(v)?,
+                "lat.hash_per_block" => c.lat.hash_per_block = u(v)?,
                 _ => return Err(format!("line {}: unknown key {k}", lineno + 1)),
             }
         }
@@ -391,6 +409,23 @@ mod tests {
             ReadMode::Linearizable
         );
         assert!(Config::parse("read_mode = sometimes\n").is_err());
+    }
+
+    #[test]
+    fn every_latency_knob_parses() {
+        let c = Config::parse("lat.hash_per_block = 99\nlat.per_byte = 0.5\n").unwrap();
+        assert_eq!(c.lat.hash_per_block, 99);
+        assert!((c.lat.per_byte - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_knobs() {
+        assert!(Config::parse("max_req = 0\n").is_err());
+        assert!(Config::parse("delta_ns = 0\n").is_err());
+        assert!(Config::parse("retransmit_every_ns = 0\n").is_err());
+        assert!(Config::parse("pool_classes = 512,128\n").is_err());
+        assert!(Config::parse("pool_classes = 0,128\n").is_err());
+        assert!(Config::parse("lat.per_byte = -1\n").is_err());
     }
 
     #[test]

@@ -48,7 +48,7 @@ use msgs::{
     TbMsg, VcCert,
 };
 use state::{leader_of, must_propose, Constraint, Effect, SenderState};
-use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Periodic TBcast retransmission timer token.
 pub const TOKEN_RETRANSMIT: u64 = 0x0200_0000_0000_0000;
@@ -78,9 +78,9 @@ struct SlotState {
     sent_will_commit: Option<u64>,
     sent_certify: Option<u64>,
     /// CERTIFY share accumulation per prepare digest.
-    certify_shares: HashMap<Hash32, Certificate>,
+    certify_shares: BTreeMap<Hash32, Certificate>,
     /// COMMIT senders per prepare digest.
-    commits_for: HashMap<Hash32, BTreeSet<NodeId>>,
+    commits_for: BTreeMap<Hash32, BTreeSet<NodeId>>,
     commit_sent: bool,
     /// When the current-view PREPARE was delivered here (for timeouts).
     prepared_at: Option<Nanos>,
@@ -218,16 +218,16 @@ pub struct Replica {
     applied_upto: u64,
 
     // Client requests.
-    req_store: HashMap<Hash32, Request>,
-    req_first_seen: HashMap<Hash32, Nanos>,
+    req_store: BTreeMap<Hash32, Request>,
+    req_first_seen: BTreeMap<Hash32, Nanos>,
     /// Requests received from clients but not yet decided in any slot —
     /// the liveness signal for view-change suspicion.
-    pending_reqs: HashMap<Hash32, Nanos>,
+    pending_reqs: BTreeMap<Hash32, Nanos>,
     req_queue: VecDeque<Hash32>,
-    echoes: HashMap<Hash32, BTreeSet<NodeId>>,
-    proposed: HashSet<Hash32>,
+    echoes: BTreeMap<Hash32, BTreeSet<NodeId>>,
+    proposed: BTreeSet<Hash32>,
     /// PREPAREs endorsed lazily once the client request arrives (§5.4).
-    waiting_prepares: HashMap<Hash32, Vec<PrepareBody>>,
+    waiting_prepares: BTreeMap<Hash32, Vec<PrepareBody>>,
     /// Recently executed responses per client (bounded deque): duplicate
     /// requests (client retries after a lost Response, or re-proposals
     /// across view changes deciding twice) are answered from this cache
@@ -241,7 +241,7 @@ pub struct Replica {
     /// retransmitted `ReadRequest` whose answer cannot have changed
     /// (same `applied_upto`) is re-answered from here without
     /// re-executing `query` or re-charging `sim_cost`.
-    read_cache: HashMap<(u64, u64), (u64, Vec<u8>)>,
+    read_cache: BTreeMap<(u64, u64), (u64, Vec<u8>)>,
     /// Insertion order of `read_cache` keys (bounded eviction).
     read_cache_order: VecDeque<(u64, u64)>,
     /// Read-lane requests whose freshness demand exceeds `applied_upto`,
@@ -252,7 +252,7 @@ pub struct Replica {
     /// (client, rid) → the index each parked read waits under (dedupes
     /// retransmissions; a retransmission carrying a *higher* demand —
     /// the client's read_refresh path — re-parks under the new index).
-    parked_keys: HashMap<(u64, u64), u64>,
+    parked_keys: BTreeMap<(u64, u64), u64>,
     /// Speculative-execution pipeline (`Config::speculation`): endorsed
     /// PREPARE batches applied ahead of decide, contiguous from
     /// `applied_upto`.
@@ -262,20 +262,20 @@ pub struct Replica {
     /// in two stacked entries after cache cycling): the request-retransmit
     /// answer path must skip them, so no speculative reply ever leaves
     /// this replica before its slot decides.
-    spec_rids: HashMap<(u64, u64), u32>,
+    spec_rids: BTreeMap<(u64, u64), u32>,
 
     /// slot → my CTBcast k for the PREPARE I broadcast (slow-path trigger).
-    my_prepare_k: HashMap<u64, u64>,
+    my_prepare_k: BTreeMap<u64, u64>,
 
     // View change.
     sealing: Option<u64>,
     /// Leader-side view-change share assembly:
     /// (view, about, digest) → (state, certificate).
-    vc_shares: HashMap<(u64, u64, Hash32), (SenderStateEnc, Certificate)>,
-    new_view_sent: HashSet<u64>,
+    vc_shares: BTreeMap<(u64, u64, Hash32), (SenderStateEnc, Certificate)>,
+    new_view_sent: BTreeSet<u64>,
 
     // Checkpoint certification.
-    cp_shares: HashMap<Hash32, (Checkpoint, Certificate)>,
+    cp_shares: BTreeMap<Hash32, (Checkpoint, Certificate)>,
 
     // Checkpoint-driven state transfer.
     /// Execution snapshot taken when this replica initiated certification
@@ -295,7 +295,7 @@ pub struct Replica {
     my_boundary_states: BTreeMap<u64, SenderStateEnc>,
     summary_certs: BTreeMap<u64, Certificate>,
     blocked_broadcasts: VecDeque<ConsMsg>,
-    latest_summaries: HashMap<NodeId, (u64, SenderStateEnc)>,
+    latest_summaries: BTreeMap<NodeId, (u64, SenderStateEnc)>,
 
     last_progress: Nanos,
     /// Consecutive view changes without a decision: exponential backoff of
@@ -346,25 +346,25 @@ impl Replica {
             slots: BTreeMap::new(),
             decided: BTreeMap::new(),
             applied_upto: 0,
-            req_store: HashMap::new(),
-            req_first_seen: HashMap::new(),
-            pending_reqs: HashMap::new(),
+            req_store: BTreeMap::new(),
+            req_first_seen: BTreeMap::new(),
+            pending_reqs: BTreeMap::new(),
             req_queue: VecDeque::new(),
-            echoes: HashMap::new(),
-            proposed: HashSet::new(),
-            waiting_prepares: HashMap::new(),
+            echoes: BTreeMap::new(),
+            proposed: BTreeSet::new(),
+            waiting_prepares: BTreeMap::new(),
             resp_cache: BTreeMap::new(),
-            read_cache: HashMap::new(),
+            read_cache: BTreeMap::new(),
             read_cache_order: VecDeque::new(),
             parked_reads: BTreeMap::new(),
-            parked_keys: HashMap::new(),
+            parked_keys: BTreeMap::new(),
             spec: VecDeque::new(),
-            spec_rids: HashMap::new(),
-            my_prepare_k: HashMap::new(),
+            spec_rids: BTreeMap::new(),
+            my_prepare_k: BTreeMap::new(),
             sealing: None,
-            vc_shares: HashMap::new(),
-            new_view_sent: HashSet::new(),
-            cp_shares: HashMap::new(),
+            vc_shares: BTreeMap::new(),
+            new_view_sent: BTreeSet::new(),
+            cp_shares: BTreeMap::new(),
             snapshot_stash: None,
             latest_snapshot: None,
             pending_snapshot: None,
@@ -372,7 +372,7 @@ impl Replica {
             my_boundary_states: BTreeMap::new(),
             summary_certs: BTreeMap::new(),
             blocked_broadcasts: VecDeque::new(),
-            latest_summaries: HashMap::new(),
+            latest_summaries: BTreeMap::new(),
             last_progress: 0,
             vc_backoff: 0,
             pool,
@@ -393,6 +393,7 @@ impl Replica {
     // ------------------------------------------------------------------
 
     /// Pop a recycled batch carrier (empty, capacity retained).
+    // ubft-lint: hot-path
     fn take_carrier(&mut self) -> Vec<Request> {
         self.req_carriers.pop().unwrap_or_default()
     }
@@ -401,6 +402,7 @@ impl Replica {
     /// dropped *without* recycling their payloads — callers recycle
     /// payloads explicitly (see [`Replica::recycle_batch`]) exactly when
     /// ownership is provably linear.
+    // ubft-lint: hot-path
     fn put_carrier(&mut self, mut c: Vec<Request>) {
         if self.req_carriers.len() < REQ_CARRIER_CAP {
             c.clear();
@@ -410,6 +412,7 @@ impl Replica {
 
     /// Recycle a fully-owned batch: every payload back to the pool, the
     /// carrier back to the freelist.
+    // ubft-lint: hot-path
     fn recycle_batch(&mut self, mut reqs: Vec<Request>) {
         for req in reqs.drain(..) {
             self.pool.put_vec(req.payload);
@@ -440,6 +443,7 @@ impl Replica {
     /// Clone a request with the payload drawn from the pool. Used where
     /// the clone's ownership is linear (the speculation/propose paths
     /// recycle it at promote, rollback, or broadcast).
+    // ubft-lint: hot-path
     fn clone_request_in(pool: &Pool, req: &Request) -> Request {
         let mut payload = pool.take_vec(req.payload.len());
         payload.extend_from_slice(&req.payload);
@@ -670,6 +674,7 @@ impl Replica {
         });
     }
 
+    // ubft-lint: hot-path
     fn endorse(&mut self, env: &mut dyn Env, pb: PrepareBody) {
         let slot = self.slots.entry(pb.slot).or_default();
         if slot.prepared_at.is_none() {
@@ -832,6 +837,7 @@ impl Replica {
         }
     }
 
+    // ubft-lint: hot-path
     fn decide(&mut self, env: &mut dyn Env, slot: u64, reqs: Vec<Request>) {
         if self.slots.entry(slot).or_default().decided {
             // Fast and slow path may race to decide: the loser's copy of
@@ -861,6 +867,7 @@ impl Replica {
     /// is *promoted* instead: constant-time fold of its undo token and
     /// release of the pre-encoded frames — the execution cost was already
     /// paid overlapping certification.
+    // ubft-lint: hot-path
     fn try_apply(&mut self, env: &mut dyn Env) {
         // The batch is taken by value — no per-slot clone of every request
         // payload on the hot path. Applied slots leave `decided`; the
@@ -887,7 +894,7 @@ impl Replica {
             // change may decide in two slots (and a Byzantine leader may
             // repeat a request within one batch); execute only once.
             let mut fresh: Vec<Request> = self.take_carrier();
-            let mut seen: HashSet<(u64, u64)> = HashSet::new();
+            let mut seen: BTreeSet<(u64, u64)> = BTreeSet::new();
             for req in reqs.drain(..) {
                 if self.is_fresh(&req, &mut seen) {
                     fresh.push(req);
@@ -910,7 +917,14 @@ impl Replica {
             let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
             for reply in replies {
                 env.mark("applied");
-                self.cache_reply(reply.client, reply.rid, slot, reply.payload.clone());
+                // Pool-drawn copy for the reply cache; the bound's
+                // eviction recycles immediately (it is final here —
+                // unlike the speculation path there is no rollback).
+                let mut cached = self.pool.take_vec(reply.payload.len());
+                cached.extend_from_slice(&reply.payload);
+                if let Some((_, _, p)) = self.cache_reply(reply.client, reply.rid, slot, cached) {
+                    self.pool.put_vec(p);
+                }
                 per_client
                     .entry(reply.client)
                     .or_default()
@@ -951,7 +965,8 @@ impl Replica {
     /// decide identically, or a speculating replica's reply cache (part
     /// of the certified execution snapshot) diverges from a
     /// non-speculating one's. `seen` carries the within-batch dedup.
-    fn is_fresh(&self, req: &Request, seen: &mut HashSet<(u64, u64)>) -> bool {
+    // ubft-lint: hot-path
+    fn is_fresh(&self, req: &Request, seen: &mut BTreeSet<(u64, u64)>) -> bool {
         if req.is_noop() {
             return false;
         }
@@ -966,6 +981,7 @@ impl Replica {
     /// returning whatever the bound evicted. Shared by the inline apply
     /// path (which discards the eviction) and the speculation path
     /// (which records it for rollback).
+    // ubft-lint: hot-path
     fn cache_reply(
         &mut self,
         client: u64,
@@ -985,6 +1001,7 @@ impl Replica {
     /// Feed the speculation pipeline: execute endorsed-but-undecided
     /// PREPAREs in slot order on top of the applied prefix. Called when a
     /// PREPARE is endorsed and whenever the applied frontier moves.
+    // ubft-lint: hot-path
     fn try_speculate(&mut self, env: &mut dyn Env) {
         if !self.cfg.speculation {
             return;
@@ -1019,7 +1036,7 @@ impl Replica {
                 return;
             }
             let digest = exec_batch_digest_in(&self.pool, next, &pb.reqs);
-            let mut seen: HashSet<(u64, u64)> = HashSet::new();
+            let mut seen: BTreeSet<(u64, u64)> = BTreeSet::new();
             for req in &pb.reqs {
                 if self.is_fresh(req, &mut seen) {
                     fresh.push(Self::clone_request_in(&self.pool, req));
@@ -1034,6 +1051,7 @@ impl Replica {
     /// certification round trips), apply through the service's
     /// speculation capability, and pre-encode the per-client `Responses`
     /// frames — withheld until the slot decides.
+    // ubft-lint: hot-path
     fn speculate(&mut self, env: &mut dyn Env, slot: u64, digest: Hash32, fresh: Vec<Request>) {
         if fresh.is_empty() {
             self.put_carrier(fresh);
@@ -1043,6 +1061,7 @@ impl Replica {
                 slot,
                 digest,
                 token: None,
+                // ubft-lint: allow(hot-path-alloc) -- empty Vec::new() never allocates
                 frames: Vec::new(),
                 cache_undo: Vec::new(),
                 cost: 0,
@@ -1057,13 +1076,16 @@ impl Replica {
         env.charge(Category::Other, cost);
         let (token, replies) = self.service.apply_speculative(&fresh);
         debug_assert_eq!(replies.len(), fresh.len(), "apply_speculative reply misalignment");
+        // ubft-lint: allow(hot-path-alloc) -- Vec<CacheUndo> is batch-bounded; the pool recycles byte buffers only
         let mut cache_undo: Vec<CacheUndo> = Vec::with_capacity(replies.len());
         let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
         for reply in replies {
             // Tentative reply-cache insert (kept live so later batches
             // dedup against it; undone exactly on rollback). The
             // retransmit answer path skips it via `spec_rids`.
-            let evicted = self.cache_reply(reply.client, reply.rid, slot, reply.payload.clone());
+            let mut cached = self.pool.take_vec(reply.payload.len());
+            cached.extend_from_slice(&reply.payload);
+            let evicted = self.cache_reply(reply.client, reply.rid, slot, cached);
             *self.spec_rids.entry((reply.client, reply.rid)).or_insert(0) += 1;
             cache_undo.push(CacheUndo { client: reply.client, rid: reply.rid, evicted });
             per_client
@@ -1108,6 +1130,7 @@ impl Replica {
     /// decide() confirmed the front speculation: advance the applied
     /// frontier, fold the undo token, and release the withheld frames —
     /// constant time, no execution on the decide critical path.
+    // ubft-lint: hot-path
     fn promote_speculation(&mut self, env: &mut dyn Env, slot: u64) {
         let e = self.spec.pop_front().unwrap();
         debug_assert_eq!(e.slot, slot);
@@ -1653,6 +1676,7 @@ impl Replica {
     /// Under load, `max_inflight_slots` holds proposals back while slots
     /// are in flight, which is what lets the queue accumulate into full
     /// batches (§9's slot interleaving generalized to depth k).
+    // ubft-lint: hot-path
     fn try_propose(&mut self, env: &mut dyn Env) {
         if !self.is_leader() || self.sealing.is_some() {
             return;
@@ -2043,6 +2067,10 @@ impl Replica {
 }
 
 impl Actor for Replica {
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self) // deployment probes downcast to Replica
+    }
+
     fn on_start(&mut self, env: &mut dyn Env) {
         let mut ctb = CtbEndpoint::new(self.me, &self.cfg, self.ks.clone());
         ctb.set_pool(self.pool.clone());

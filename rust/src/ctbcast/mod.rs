@@ -35,7 +35,7 @@ use crate::tbcast::{Bytes, TbDeliver, TbEndpoint};
 use crate::util::pool::Pool;
 use crate::util::wire::{Wire, WireError, WireReader, WireWriter};
 use crate::{NodeId, Nanos};
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 /// Timer token reserved for the register-write cooldown retry queue.
@@ -215,7 +215,7 @@ struct BcState {
     /// `delivered[k % t]` — highest k delivered per slot (line 9).
     delivered: Vec<Option<u64>>,
     /// In-flight slow-path attempts per k.
-    slow: HashMap<u64, SlowState>,
+    slow: BTreeMap<u64, SlowState>,
     /// Set when this broadcaster is proven Byzantine.
     blocked: bool,
 }
@@ -224,7 +224,7 @@ struct SlowState {
     m: Bytes,
     h: Hash32,
     /// Register values read so far: per register owner.
-    reads: HashMap<NodeId, Option<(u64, Hash32, Sig)>>,
+    reads: BTreeMap<NodeId, Option<(u64, Hash32, Sig)>>,
     reads_outstanding: usize,
     writing: bool,
 }
@@ -260,7 +260,7 @@ pub struct CtbEndpoint {
     /// Messages whose slow path was already triggered.
     slow_triggered: std::collections::BTreeSet<u64>,
     st: Vec<BcState>,
-    reg_ops: HashMap<OpId, RegCtx>,
+    reg_ops: BTreeMap<OpId, RegCtx>,
     /// Writes deferred by the δ cooldown: (reg, ts, image, ctx fields).
     cooldown_q: VecDeque<(u32, u64, Vec<u8>, NodeId, u64)>,
     /// Buffer pool shared with the TBcast layer (and the replica above).
@@ -277,7 +277,7 @@ impl CtbEndpoint {
                 locks: vec![None; t],
                 locked: vec![vec![None; t]; n],
                 delivered: vec![None; t],
-                slow: HashMap::new(),
+                slow: BTreeMap::new(),
                 blocked: false,
             })
             .collect();
@@ -296,7 +296,7 @@ impl CtbEndpoint {
             bcast_at: BTreeMap::new(),
             slow_triggered: std::collections::BTreeSet::new(),
             st,
-            reg_ops: HashMap::new(),
+            reg_ops: BTreeMap::new(),
             cooldown_q: VecDeque::new(),
             pool: Pool::off(),
         }
@@ -557,7 +557,7 @@ impl CtbEndpoint {
         // Line 30: copy the signed message into my own register.
         self.st[b].slow.insert(
             k,
-            SlowState { m, h, reads: HashMap::new(), reads_outstanding: 0, writing: true },
+            SlowState { m, h, reads: BTreeMap::new(), reads_outstanding: 0, writing: true },
         );
         let reg = self.reg_index(b, slot);
         let image = reg_image(k, &h, &sig);
@@ -888,7 +888,7 @@ mod tests {
         // Even with both paths racing (slow_path_always), no (receiver,
         // bcaster, k) pair is delivered twice.
         let log = run(4, false, true);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for (me, b, k, _) in &log {
             assert!(seen.insert((*me, *b, *k)), "duplicate delivery ({me},{b},{k})");
         }
@@ -898,8 +898,8 @@ mod tests {
     fn agreement_under_both_paths() {
         let log = run(6, false, true);
         // For each (bcaster, k), all delivered payloads are identical.
-        let mut by_key: std::collections::HashMap<(NodeId, u64), Vec<u8>> =
-            std::collections::HashMap::new();
+        let mut by_key: std::collections::BTreeMap<(NodeId, u64), Vec<u8>> =
+            std::collections::BTreeMap::new();
         for (_, b, k, m) in &log {
             if let Some(prev) = by_key.insert((*b, *k), m.clone()) {
                 assert_eq!(&prev, m, "agreement violated at ({b},{k})");

@@ -1309,16 +1309,14 @@ impl Cluster {
         let actor = self.sim.actor_mut(i);
         if self.sharded.is_some() {
             // The shard spawner put a `ShardedReplica` wrapper in every
-            // slot `0..shards·n`, so this downcast is sound under the
-            // guard above.
-            let w = unsafe {
-                &*(actor as *const dyn crate::env::Actor as *const crate::shard::ShardedReplica)
-            };
+            // slot `0..shards·n`; `as_any` makes a mismatch a `None`
+            // rather than undefined behaviour.
+            let w = actor.as_any()?.downcast_ref::<crate::shard::ShardedReplica>()?;
             return Some(w.replica());
         }
         // The uBFT spawner put a `Replica` in every non-Byzantine slot
-        // `0..n`, so the downcast is sound under the guard above.
-        Some(unsafe { &*(actor as *const dyn crate::env::Actor as *const Replica) })
+        // `0..n`.
+        actor.as_any()?.downcast_ref::<Replica>()
     }
 
     /// Snapshot one replica's introspection counters.
@@ -1428,11 +1426,13 @@ impl RealHandle {
     /// Block until every client finished or `timeout` elapsed; returns
     /// whether all clients completed.
     pub fn wait(&self, timeout: std::time::Duration) -> bool {
+        // ubft-lint: allow(wall-clock-in-protocol) -- real-mode wait helper; drives OS threads, not protocol logic
         let t0 = std::time::Instant::now();
         while !self.all_done() {
             if t0.elapsed() > timeout {
                 return false;
             }
+            // ubft-lint: allow(wall-clock-in-protocol) -- real-mode polling backoff, not protocol logic
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         true
@@ -1466,7 +1466,7 @@ impl StoppedCluster {
             return None;
         }
         let actor = self.actors.get(i)?;
-        Some(unsafe { &*(actor.as_ref() as *const dyn crate::env::Actor as *const Replica) })
+        actor.as_any()?.downcast_ref::<Replica>()
     }
 
     /// `(applied_upto, app_digest)` for every uBFT replica.

@@ -27,7 +27,7 @@ use crate::crypto::xxhash::xxh64;
 use crate::env::{Env, MemResult, RegionId, Ticket};
 use crate::metrics::Category;
 use crate::{NodeId, Nanos};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Client-facing operation id.
 pub type OpId = u64;
@@ -116,7 +116,7 @@ enum Op {
     Read {
         started: Nanos,
         /// Per memory node: collected sub-register images (sub -> bytes).
-        per_node: HashMap<usize, HashMap<u8, Vec<u8>>>,
+        per_node: BTreeMap<usize, BTreeMap<u8, Vec<u8>>>,
         nodes_done: usize,
         needed: usize,
         done: bool,
@@ -130,9 +130,9 @@ pub struct RegisterClient {
     mem_quorum: usize,
     delta: Nanos,
     next_op: OpId,
-    ops: HashMap<OpId, Op>,
-    tickets: HashMap<Ticket, (OpId, usize, u8)>,
-    wstate: HashMap<u32, WriterReg>,
+    ops: BTreeMap<OpId, Op>,
+    tickets: BTreeMap<Ticket, (OpId, usize, u8)>,
+    wstate: BTreeMap<u32, WriterReg>,
     /// Total payload bytes this process has placed in disaggregated
     /// memory (Table 2 accounting; one copy per sub-register per node).
     pub bytes_written: u64,
@@ -150,9 +150,9 @@ impl RegisterClient {
             mem_quorum: cfg.mem_quorum(),
             delta: cfg.delta,
             next_op: 1,
-            ops: HashMap::new(),
-            tickets: HashMap::new(),
-            wstate: HashMap::new(),
+            ops: BTreeMap::new(),
+            tickets: BTreeMap::new(),
+            wstate: BTreeMap::new(),
             bytes_written: 0,
         }
     }
@@ -201,7 +201,7 @@ impl RegisterClient {
             op,
             Op::Read {
                 started: env.now(),
-                per_node: HashMap::new(),
+                per_node: BTreeMap::new(),
                 nodes_done: 0,
                 needed: self.mem_quorum,
                 done: false,
@@ -269,7 +269,7 @@ impl RegisterClient {
 
     fn conclude_read(
         op: OpId,
-        per_node: &HashMap<usize, HashMap<u8, Vec<u8>>>,
+        per_node: &BTreeMap<usize, BTreeMap<u8, Vec<u8>>>,
         fast: bool,
     ) -> RegOutcome {
         let mut best: Option<(u64, Vec<u8>)> = None;

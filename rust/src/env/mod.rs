@@ -59,6 +59,13 @@ pub trait Actor: Send {
     fn on_start(&mut self, _env: &mut dyn Env) {}
     /// Handle one event. Runs to completion; all effects go through `env`.
     fn on_event(&mut self, env: &mut dyn Env, ev: Event);
+    /// Safe downcast support for introspection (replica probes, tests).
+    /// Actors that want to be downcast override this with `Some(self)`;
+    /// the default opts out, so a wrong cast yields `None` instead of the
+    /// undefined behaviour a raw-pointer cast would risk.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// The world as seen by one actor.

@@ -35,6 +35,8 @@ REAL MODE:
               [--requests N]
 
 MISC:
+  lint        run the repo's static-analysis pass (alias for
+              cargo run -p ubft-lint; see rust/tools/lint/README.md)
   calibration print the DES latency model constants
   help        this text
 
@@ -105,6 +107,7 @@ fn main() {
             harness::scaling::main_run(samples);
         }
         "serve" => serve(&args),
+        "lint" => std::process::exit(ubft_lint::cli_main(&[])),
         "calibration" => {
             let cfg = match args.get("config") {
                 Some(path) => ubft::config::Config::load(path).expect("config"),

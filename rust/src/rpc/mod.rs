@@ -55,7 +55,7 @@ use crate::env::{Actor, Env, Event};
 use crate::metrics::Samples;
 use crate::smr::{Operation, ReadMode};
 use crate::{NodeId, Nanos};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
 /// Generates request payloads (and validates responses, if desired).
@@ -145,10 +145,10 @@ struct Outstanding {
     /// Immediate split-read re-polls issued so far.
     repolls: u32,
     /// Certified decided bound vouched per responding replica.
-    bounds: HashMap<NodeId, u64>,
+    bounds: BTreeMap<NodeId, u64>,
     /// Reply buckets by payload digest: the contributing replicas and
     /// the freshness/lane metadata of each contribution.
-    responses: HashMap<Hash32, HashMap<NodeId, ReplyInfo>>,
+    responses: BTreeMap<Hash32, BTreeMap<NodeId, ReplyInfo>>,
 }
 
 impl Outstanding {
@@ -448,8 +448,8 @@ impl Client {
                     0
                 },
                 repolls: 0,
-                bounds: HashMap::new(),
-                responses: HashMap::new(),
+                bounds: BTreeMap::new(),
+                responses: BTreeMap::new(),
             };
             let frame = o.frame(env.me() as u64);
             env.mark(if read { "client_read" } else { "client_send" });
@@ -479,8 +479,8 @@ impl Client {
                 retries: 0,
                 min_index: 0,
                 repolls: 0,
-                bounds: HashMap::new(),
-                responses: HashMap::new(),
+                bounds: BTreeMap::new(),
+                responses: BTreeMap::new(),
             };
             let frame = o.frame(me);
             env.mark("tx_sub");

@@ -66,6 +66,9 @@ pub struct Module {
 // thread-safe. The xla crate merely fails to declare it.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for Module {}
+// SAFETY: shared references only reach the internally synchronized
+// `execute` path described above; `Module` holds no interior mutability
+// of its own.
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for Module {}
 

@@ -33,7 +33,7 @@
 //! rejected with a deterministic [`TX_LOCKED`] reply and conflicting
 //! transactions vote abort.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use crate::config::Config;
@@ -537,7 +537,7 @@ enum Next {
 /// a late commit vote, and participant tombstones void late prepares.
 pub struct Coordinator {
     timeout: Nanos,
-    txs: HashMap<u64, Tx>,
+    txs: BTreeMap<u64, Tx>,
     /// Transactions that reached commit / abort, for stats.
     pub commits: u64,
     pub aborts: u64,
@@ -545,7 +545,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(timeout: Nanos) -> Coordinator {
-        Coordinator { timeout, txs: HashMap::new(), commits: 0, aborts: 0 }
+        Coordinator { timeout, txs: BTreeMap::new(), commits: 0, aborts: 0 }
     }
 
     pub fn set_timeout(&mut self, timeout: Nanos) {
@@ -832,6 +832,10 @@ impl ShardedReplica {
 }
 
 impl Actor for ShardedReplica {
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self) // deployment probes downcast to ShardedReplica
+    }
+
     fn on_start(&mut self, env: &mut dyn Env) {
         let mut shard_env = ShardEnv { base: self.base, n: self.n, inner: env };
         self.inner.on_start(&mut shard_env);

@@ -477,6 +477,9 @@ mod tests {
     }
 
     impl Actor for Pinger {
+        fn as_any(&self) -> Option<&dyn std::any::Any> {
+            Some(self)
+        }
         fn on_start(&mut self, env: &mut dyn Env) {
             if self.kick {
                 env.send(self.peer, vec![0u8; 32]);
@@ -509,10 +512,8 @@ mod tests {
         sim.run_until(crate::SECOND);
         // b receives at exactly one one-way delay; a at two.
         let get = |sim: &mut Sim, id: NodeId| {
-            let any = sim.actors[id].as_mut().unwrap();
-            // downcast via raw pointer: test-only
-            let p = any.as_mut() as *mut dyn Actor as *mut Pinger;
-            unsafe { (*p).times.clone() }
+            let actor = sim.actors[id].as_ref().unwrap();
+            actor.as_any().unwrap().downcast_ref::<Pinger>().unwrap().times.clone()
         };
         let tb = get(&mut sim, b);
         let ta = get(&mut sim, a);
@@ -542,6 +543,9 @@ mod tests {
     }
 
     impl Actor for MemUser {
+        fn as_any(&self) -> Option<&dyn std::any::Any> {
+            Some(self)
+        }
         fn on_start(&mut self, env: &mut dyn Env) {
             let region = RegionId { owner: 0, reg: 7 };
             if self.do_write {
@@ -568,9 +572,9 @@ mod tests {
         sim.add_actor(Box::new(MemUser { do_write: true, results: vec![] }));
         sim.add_actor(Box::new(MemUser { do_write: false, results: vec![] }));
         sim.run_until(crate::SECOND);
-        let reader = sim.actors[1].as_mut().unwrap();
-        let p = reader.as_mut() as *mut dyn Actor as *mut MemUser;
-        let results = unsafe { (*p).results.clone() };
+        let reader = sim.actors[1].as_ref().unwrap();
+        let results =
+            reader.as_any().unwrap().downcast_ref::<MemUser>().unwrap().results.clone();
         assert_eq!(results.len(), 1);
         match &results[0] {
             MemResult::Read(v) => assert_eq!(v, &vec![1, 2, 3, 4, 5, 6, 7, 8, 9]),
@@ -584,6 +588,9 @@ mod tests {
             got: Option<MemResult>,
         }
         impl Actor for Intruder {
+            fn as_any(&self) -> Option<&dyn std::any::Any> {
+                Some(self)
+            }
             fn on_start(&mut self, env: &mut dyn Env) {
                 // actor 0 tries to write a region owned by node 1
                 env.mem_write(0, RegionId { owner: 1, reg: 0 }, vec![9; 16]);
@@ -597,9 +604,9 @@ mod tests {
         let mut sim = Sim::new(no_jitter_cfg());
         sim.add_actor(Box::new(Intruder { got: None }));
         sim.run_until(crate::SECOND);
-        let a = sim.actors[0].as_mut().unwrap();
-        let p = a.as_mut() as *mut dyn Actor as *mut Intruder;
-        assert_eq!(unsafe { (*p).got.clone() }, Some(MemResult::Denied));
+        let a = sim.actors[0].as_ref().unwrap();
+        let got = a.as_any().unwrap().downcast_ref::<Intruder>().unwrap().got.clone();
+        assert_eq!(got, Some(MemResult::Denied));
     }
 
     #[test]
@@ -610,9 +617,8 @@ mod tests {
         sim.set_faults(faults);
         sim.add_actor(Box::new(MemUser { do_write: true, results: vec![] }));
         sim.run_until(crate::SECOND);
-        let a = sim.actors[0].as_mut().unwrap();
-        let p = a.as_mut() as *mut dyn Actor as *mut MemUser;
-        assert!(unsafe { (*p).results.is_empty() });
+        let a = sim.actors[0].as_ref().unwrap();
+        assert!(a.as_any().unwrap().downcast_ref::<MemUser>().unwrap().results.is_empty());
     }
 
     #[test]

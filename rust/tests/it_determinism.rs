@@ -1,0 +1,81 @@
+//! Same-seed reproducibility: the deterministic simulator plus the
+//! `nondet-iteration` lint (no hash-ordered collections in protocol
+//! state) promise that two independently built deployments with the same
+//! seed run the *same* execution — not just convergent ones. These tests
+//! pin that promise: byte-identical per-replica app digests and identical
+//! `ReplicaStats` across a fresh double run, under batching, pipelining,
+//! and speculation (the paths where an iteration-order leak would show).
+
+use ubft::apps::flip::FlipWorkload;
+use ubft::apps::FlipApp;
+use ubft::config::Config;
+use ubft::crypto::Hash32;
+use ubft::deploy::{Deployment, FaultPlan, System};
+
+/// One full sim run; returns every replica's (applied_upto, app_digest)
+/// and the Debug rendering of every correct replica's stats (ReplicaStats
+/// carries no timing-free PartialEq; the derived Debug covers every
+/// field byte-for-byte).
+fn run_once(seed: u64, faults: Option<FaultPlan>) -> (Vec<(u64, Hash32)>, Vec<String>) {
+    let mut cfg = Config::default();
+    cfg.seed = seed;
+    cfg.speculation = true;
+    let faulty = faults.is_some();
+    let mut d = Deployment::new(cfg)
+        .system(System::UbftFast)
+        .app(|| Box::new(FlipApp::new()))
+        .clients(3, |_i| Box::new(FlipWorkload { size: 32 }))
+        .requests(60)
+        .pipeline(4)
+        .batch(8, 64 * 1024)
+        .slot_pipeline(2);
+    if let Some(plan) = faults {
+        d = d.faults(plan);
+    }
+    let mut cluster = d.build().expect("valid deployment");
+    assert!(cluster.run_to_completion(), "run starved");
+    // A crashed replica's frontier legitimately lags; only fault-free
+    // runs must fully converge. (The frozen state is still part of the
+    // double-run comparison — it too must reproduce byte-for-byte.)
+    if !faulty {
+        assert!(cluster.converged(), "replicas diverged within one run");
+    }
+    let digests = cluster.digests();
+    let stats = (0..3)
+        .filter_map(|i| cluster.replica(i).map(|r| format!("{:?}", r.stats)))
+        .collect();
+    (digests, stats)
+}
+
+#[test]
+fn same_seed_runs_are_byte_identical() {
+    let (d1, s1) = run_once(42, None);
+    let (d2, s2) = run_once(42, None);
+    assert_eq!(d1, d2, "same-seed runs produced different replica digests");
+    assert!(!s1.is_empty(), "no replica stats probed");
+    assert_eq!(s1, s2, "same-seed runs produced different ReplicaStats");
+}
+
+#[test]
+fn same_seed_runs_are_byte_identical_under_view_change() {
+    // A leader crash forces the view-change / re-proposal machinery —
+    // the code where protocol state is *iterated* (promised slots,
+    // sender scans) and hash-order nondeterminism would surface.
+    let plan = || FaultPlan::crash(0, 60 * ubft::MICRO);
+    let (d1, s1) = run_once(7, Some(plan()));
+    let (d2, s2) = run_once(7, Some(plan()));
+    assert_eq!(d1, d2, "view-change runs diverged across same-seed repeats");
+    assert_eq!(s1, s2, "view-change ReplicaStats diverged across same-seed repeats");
+}
+
+#[test]
+fn different_seeds_still_converge() {
+    // Sanity: the determinism above is per-seed, not a degenerate
+    // constant execution — different seeds may schedule differently but
+    // every run must still converge (asserted inside run_once).
+    let (d1, _) = run_once(1, None);
+    let (d2, _) = run_once(2, None);
+    // Digests cover the applied log, which is the same workload either
+    // way — both runs end with every replica at the same frontier.
+    assert_eq!(d1.len(), d2.len());
+}

@@ -1,0 +1,445 @@
+//! The five repo-specific lints. Catalog with rationale and waiver syntax:
+//! `rust/tools/lint/README.md`.
+//!
+//! Waiver syntax (all lints except `unsafe-audit`, whose remedy — a
+//! `// SAFETY:` comment — is always available):
+//!
+//! ```text
+//! // ubft-lint: allow(<lint-name>) -- <justification>
+//! ```
+//!
+//! on the flagged line or up to two lines above it. A waiver without a
+//! `--` justification does not count.
+
+use crate::scan::{find_word, has_word, item_end, Scanned};
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Lint name (kebab-case, as used in waivers).
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+/// One `unsafe` site, for `UNSAFE_INVENTORY.md`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InventoryEntry {
+    pub file: String,
+    /// 1-based line of the `unsafe` keyword.
+    pub line: usize,
+    /// `impl`, `fn`, or `block`.
+    pub kind: &'static str,
+    /// First line of the `// SAFETY:` justification (empty if missing —
+    /// which is itself a violation).
+    pub safety: String,
+}
+
+/// Shared output accumulator for one file.
+pub struct Ctx {
+    pub violations: Vec<Violation>,
+    pub inventory: Vec<InventoryEntry>,
+    /// Waivers that suppressed a finding (reported in the summary so
+    /// they stay visible).
+    pub waived: usize,
+}
+
+impl Ctx {
+    pub fn new() -> Ctx {
+        Ctx { violations: Vec::new(), inventory: Vec::new(), waived: 0 }
+    }
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx::new()
+    }
+}
+
+/// Modules whose state can reach the wire or the decided log: hash-order
+/// nondeterminism here breaks same-seed reproducibility.
+const PROTOCOL_MODULES: &[&str] = &[
+    "rust/src/consensus/",
+    "rust/src/tbcast/",
+    "rust/src/ctbcast/",
+    "rust/src/shard/",
+    "rust/src/rpc/",
+    "rust/src/dsm/",
+];
+
+/// Files/dirs where wall-clock time and OS randomness are legitimate:
+/// the real-thread driver, the CLI, harnesses, benches, tests, examples,
+/// and this tool. Everything else must go through `Env::now`/`Env::rng`.
+const WALL_CLOCK_ALLOWED: &[&str] = &[
+    "rust/src/sim/real.rs",
+    "rust/src/main.rs",
+    "rust/src/harness/",
+    "rust/benches/",
+    "rust/tests/",
+    "rust/tools/",
+    "examples/",
+];
+
+/// Functions on the propose→speculate→certify→apply path. Each must carry
+/// a `// ubft-lint: hot-path` annotation (so the path stays visible in the
+/// source) and is then checked for direct allocations.
+pub const HOT_PATH_SEED: &[&str] = &[
+    "try_propose",
+    "endorse",
+    "try_speculate",
+    "speculate",
+    "decide",
+    "try_apply",
+    "promote_speculation",
+    "is_fresh",
+    "cache_reply",
+    "take_carrier",
+    "put_carrier",
+    "recycle_batch",
+    "clone_request_in",
+];
+
+/// Allocation expressions forbidden in hot-path functions (route through
+/// `util::pool` instead, or waive with a justification).
+const HOT_PATH_FORBIDDEN: &[&str] = &[
+    "Vec::new(",
+    "vec![",
+    ".to_vec(",
+    ".clone(",
+    "format!",
+    "Box::new(",
+    "String::from(",
+    "String::new(",
+    ".to_string(",
+    "::with_capacity(",
+    ".to_owned(",
+];
+
+/// Is line `l` (0-based) covered by a justified waiver for `lint`?
+fn waived(s: &Scanned, l: usize, lint: &str, ctx: &mut Ctx) -> bool {
+    let needle = format!("ubft-lint: allow({lint})");
+    for k in l.saturating_sub(2)..=l {
+        if let Some(p) = s.comments[k].find(needle.as_str()) {
+            if s.comments[k][p + needle.len()..].contains("--") {
+                ctx.waived += 1;
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Lint 1 — `nondet-iteration`: no `HashMap`/`HashSet` in protocol
+/// modules. Iteration order of std hash collections is randomized per
+/// process (SipHash keys), so any iterated/drained hash collection in
+/// replica state silently breaks byte-identical same-seed runs the moment
+/// its order reaches the wire or the decided log. Declarations are
+/// flagged outright — the deterministic fix is `BTreeMap`/`BTreeSet`.
+pub fn nondet_iteration(rel: &str, s: &Scanned, ctx: &mut Ctx) {
+    if !PROTOCOL_MODULES.iter().any(|m| rel.starts_with(m)) {
+        return;
+    }
+    for l in 0..s.code.len() {
+        if s.masked[l] {
+            continue;
+        }
+        for word in ["HashMap", "HashSet"] {
+            if has_word(&s.code[l], word) && !waived(s, l, "nondet-iteration", ctx) {
+                let fix = if word == "HashMap" { "BTreeMap" } else { "BTreeSet" };
+                ctx.violations.push(Violation {
+                    file: rel.to_string(),
+                    line: l + 1,
+                    lint: "nondet-iteration",
+                    msg: format!(
+                        "{word} in protocol module (randomized iteration order): \
+                         use {fix} for deterministic order"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Lint 2 — `hot-path-alloc`: functions annotated `// ubft-lint: hot-path`
+/// (plus the seed list in `consensus/mod.rs`, which must be annotated) may
+/// not allocate directly — the static backstop to the dynamic
+/// `UBFT_ALLOC_GATE` bench gate, which only exercises one bench shape.
+pub fn hot_path_alloc(rel: &str, s: &Scanned, ctx: &mut Ctx) {
+    let n = s.code.len();
+    // Annotated functions: `// ubft-lint: hot-path` directly above (≤ 3
+    // lines, to allow attributes between) a `fn` header.
+    let mut hot: Vec<(usize, String)> = Vec::new(); // (header line, name)
+    for l in 0..n {
+        if !s.comments[l].contains("ubft-lint: hot-path") {
+            continue;
+        }
+        for k in l..(l + 4).min(n) {
+            if let Some(name) = fn_name(&s.code[k]) {
+                hot.push((k, name));
+                break;
+            }
+        }
+    }
+    if rel == "rust/src/consensus/mod.rs" {
+        for seed in HOT_PATH_SEED {
+            if hot.iter().any(|(_, name)| name == seed) {
+                continue;
+            }
+            // Find the unannotated definition so the finding is anchored.
+            let at = (0..n)
+                .find(|&l| {
+                    !s.masked[l] && s.code[l].contains(&format!("fn {seed}("))
+                })
+                .map(|l| l + 1)
+                .unwrap_or(1);
+            ctx.violations.push(Violation {
+                file: rel.to_string(),
+                line: at,
+                lint: "hot-path-alloc",
+                msg: format!(
+                    "hot-path seed function `{seed}` must carry a \
+                     `// ubft-lint: hot-path` annotation"
+                ),
+            });
+        }
+    }
+    for (header, name) in hot {
+        let end = item_end(s, header);
+        for l in header..=end {
+            if s.masked[l] {
+                continue;
+            }
+            for pat in HOT_PATH_FORBIDDEN {
+                if s.code[l].contains(pat) && !waived(s, l, "hot-path-alloc", ctx) {
+                    ctx.violations.push(Violation {
+                        file: rel.to_string(),
+                        line: l + 1,
+                        lint: "hot-path-alloc",
+                        msg: format!(
+                            "`{}` allocates in hot-path fn `{name}`: take buffers \
+                             from util::pool instead",
+                            pat.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Extract the function name from a `fn` header line, if any.
+fn fn_name(code: &str) -> Option<String> {
+    let p = find_word(code, "fn")?;
+    let rest = code[p + 2..].trim_start();
+    let end = rest.find(|c: char| !(c.is_alphanumeric() || c == '_'))?;
+    if end == 0 {
+        return None;
+    }
+    Some(rest[..end].to_string())
+}
+
+/// Lint 3 — `wall-clock-in-protocol`: `Instant`/`SystemTime`/
+/// `thread::sleep`/`rand::` outside the real-mode driver and harness code
+/// makes protocol behaviour depend on the host, which the deterministic
+/// simulator cannot reproduce. Protocol code gets time and randomness
+/// only through `Env::now` / `Env::rng`.
+pub fn wall_clock(rel: &str, s: &Scanned, ctx: &mut Ctx) {
+    if WALL_CLOCK_ALLOWED.iter().any(|m| rel.starts_with(m)) {
+        return;
+    }
+    for l in 0..s.code.len() {
+        if s.masked[l] {
+            continue;
+        }
+        let code = &s.code[l];
+        let hit = ["Instant", "SystemTime"].iter().find(|w| has_word(code, w)).copied()
+            .or_else(|| ["thread::sleep", "rand::"].iter().find(|p| code.contains(*p)).copied());
+        if let Some(what) = hit {
+            if !waived(s, l, "wall-clock-in-protocol", ctx) {
+                ctx.violations.push(Violation {
+                    file: rel.to_string(),
+                    line: l + 1,
+                    lint: "wall-clock-in-protocol",
+                    msg: format!(
+                        "`{what}` outside the real-mode driver: protocol code must \
+                         use Env::now / Env::rng so the sim stays deterministic"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Lint 4 — `unsafe-audit`: every `unsafe` block/fn/impl must carry a
+/// `// SAFETY:` comment — on the same line, or above it across a
+/// contiguous run of comment/attribute/blank lines (so `#[cfg(...)]`
+/// attributes between the comment and the `unsafe` don't break the
+/// association). Also collects the machine-readable inventory committed
+/// as `UNSAFE_INVENTORY.md`. Not waivable — the remedy is writing the
+/// justification itself.
+pub fn unsafe_audit(rel: &str, s: &Scanned, ctx: &mut Ctx) {
+    for l in 0..s.code.len() {
+        if !has_word(&s.code[l], "unsafe") {
+            continue;
+        }
+        let kind = if s.code[l].contains("unsafe impl") {
+            "impl"
+        } else if s.code[l].contains("unsafe fn") {
+            "fn"
+        } else {
+            "block"
+        };
+        let mut safety = safety_text(&s.comments[l]);
+        let mut k = l;
+        while safety.is_empty() && k > 0 {
+            k -= 1;
+            safety = safety_text(&s.comments[k]);
+            if !safety.is_empty() {
+                break;
+            }
+            let code = s.code[k].trim();
+            if !(code.is_empty() || code.starts_with("#[")) {
+                break; // a real code line ends the comment block
+            }
+        }
+        if safety.is_empty() {
+            ctx.violations.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "unsafe-audit",
+                msg: format!("unsafe {kind} without a `// SAFETY:` justification"),
+            });
+        }
+        ctx.inventory.push(InventoryEntry {
+            file: rel.to_string(),
+            line: l + 1,
+            kind,
+            safety,
+        });
+    }
+}
+
+/// Text after `SAFETY:` in a comment line, if present.
+fn safety_text(comment: &str) -> String {
+    match comment.find("SAFETY:") {
+        Some(p) => comment[p + "SAFETY:".len()..].trim().to_string(),
+        None => String::new(),
+    }
+}
+
+/// Lint 5 — `config-knob-coverage`: every `Config` field needs a parse
+/// key, a `validate()` mention (or a justified waiver on the field), and
+/// a doc comment; every `LatencyModel` field needs a `lat.*` parse key
+/// and a doc comment. Catches the drift a fast-growing config accumulates
+/// (e.g. a field added without a `parse()` arm is silently unsettable
+/// from `.conf` files).
+pub fn config_knobs(rel: &str, s: &Scanned, ctx: &mut Ctx) {
+    if rel != "rust/src/config/mod.rs" {
+        return;
+    }
+    let parse = fn_region(s, "parse");
+    let validate = fn_region(s, "validate");
+    let (Some(parse), Some(validate)) = (parse, validate) else {
+        ctx.violations.push(Violation {
+            file: rel.to_string(),
+            line: 1,
+            lint: "config-knob-coverage",
+            msg: "Config::parse / Config::validate not found".to_string(),
+        });
+        return;
+    };
+    let parse_raw = s.raw[parse.0..=parse.1].join("\n");
+    let validate_code = s.code[validate.0..=validate.1].join("\n");
+    for (l, field) in struct_fields(s, "Config") {
+        if !parse_raw.contains(&format!("\"{field}")) {
+            ctx.violations.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "config-knob-coverage",
+                msg: format!("Config field `{field}` has no `\"{field}\"` arm in Config::parse"),
+            });
+        }
+        if !has_word(&validate_code, &field) && !waived(s, l, "config-knob-coverage", ctx) {
+            ctx.violations.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "config-knob-coverage",
+                msg: format!(
+                    "Config field `{field}` is never checked in Config::validate \
+                     (add a check or waive with a justification)"
+                ),
+            });
+        }
+        require_doc(rel, s, l, &field, ctx);
+    }
+    for (l, field) in struct_fields(s, "LatencyModel") {
+        if !parse_raw.contains(&format!("\"lat.{field}\"")) {
+            ctx.violations.push(Violation {
+                file: rel.to_string(),
+                line: l + 1,
+                lint: "config-knob-coverage",
+                msg: format!(
+                    "LatencyModel field `{field}` has no `\"lat.{field}\"` arm in Config::parse"
+                ),
+            });
+        }
+        require_doc(rel, s, l, &field, ctx);
+    }
+}
+
+fn require_doc(rel: &str, s: &Scanned, l: usize, field: &str, ctx: &mut Ctx) {
+    let documented = l > 0 && s.comments[l - 1].trim_start().starts_with('/');
+    if !documented {
+        ctx.violations.push(Violation {
+            file: rel.to_string(),
+            line: l + 1,
+            lint: "config-knob-coverage",
+            msg: format!("config field `{field}` has no doc comment"),
+        });
+    }
+}
+
+/// Field names (with 0-based declaration lines) of `pub struct <name>`.
+fn struct_fields(s: &Scanned, name: &str) -> Vec<(usize, String)> {
+    let header = format!("struct {name} ");
+    for l in 0..s.code.len() {
+        if s.masked[l] || !s.code[l].contains(header.trim_end()) || !s.code[l].contains('{') {
+            continue;
+        }
+        // Require an exact-word struct name (`Config`, not `ConfigX`).
+        if !has_word(&s.code[l], name) {
+            continue;
+        }
+        let end = item_end(s, l);
+        let mut out = Vec::new();
+        for k in (l + 1)..end {
+            let t = s.code[k].trim();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some(colon) = rest.find(':') {
+                    let ident = rest[..colon].trim();
+                    if !ident.is_empty()
+                        && ident.chars().all(|c| c.is_alphanumeric() || c == '_')
+                    {
+                        out.push((k, ident.to_string()));
+                    }
+                }
+            }
+        }
+        return out;
+    }
+    Vec::new()
+}
+
+/// (start, end) lines of `fn <name>(`, brace-matched.
+fn fn_region(s: &Scanned, name: &str) -> Option<(usize, usize)> {
+    let needle = format!("fn {name}(");
+    for l in 0..s.code.len() {
+        if !s.masked[l] && s.code[l].contains(needle.as_str()) {
+            return Some((l, item_end(s, l)));
+        }
+    }
+    None
+}

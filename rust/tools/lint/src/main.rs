@@ -1,0 +1,6 @@
+//! `ubft-lint` binary: blocking repo lint (see `../README.md`).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(ubft_lint::cli_main(&args));
+}

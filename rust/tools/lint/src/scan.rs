@@ -1,0 +1,363 @@
+//! A token-level Rust source scanner.
+//!
+//! The lints only need line-granular facts: "does this line of *code*
+//! mention `HashMap`", "what comment text sits on or above line N", "is
+//! this line inside a `#[cfg(test)]` item". A full AST is overkill for
+//! that — and `syn` is unavailable offline — so this module hand-rolls
+//! the one hard part: classifying every character as code, comment, or
+//! literal. String/char literal *contents* are blanked out of the code
+//! view (so `"HashMap"` in a message never trips a lint) and comments are
+//! collected per line (so waivers and `SAFETY:` annotations are visible).
+
+/// One source file, split into per-line views.
+pub struct Scanned {
+    /// Original lines, verbatim (string literals intact — the config lint
+    /// matches parse keys against these).
+    pub raw: Vec<String>,
+    /// Code view: comments stripped, string/char literal contents blanked
+    /// to spaces (the delimiting quotes are kept so literals still occupy
+    /// a token position).
+    pub code: Vec<String>,
+    /// Comment text per line (both `//` and `/* */` forms, doc comments
+    /// included — a `///` doc line appears here starting with `/`).
+    pub comments: Vec<String>,
+    /// Lines inside a `#[cfg(test)]` item (the attribute line itself and
+    /// the whole brace-matched body). Most lints skip these.
+    pub masked: Vec<bool>,
+}
+
+enum St {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Scan a source file into its per-line views and mask `#[cfg(test)]`
+/// items.
+pub fn scan(src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut raw_lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+    if raw_lines.is_empty() {
+        raw_lines.push(String::new());
+    }
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_com = String::new();
+    let mut st = St::Normal;
+    // Whether the previous code char continues an identifier (distinguishes
+    // the raw-string sigil `r"` from an identifier ending in `r`).
+    let mut prev_ident = false;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Normal;
+            }
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_com));
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur_code.push('"');
+                    st = St::Str;
+                    prev_ident = false;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    if let Some((hashes, consumed)) = raw_str_open(&chars, i) {
+                        for _ in 0..consumed {
+                            cur_code.push(' ');
+                        }
+                        st = St::RawStr(hashes);
+                        i += consumed;
+                    } else {
+                        cur_code.push(c);
+                        prev_ident = true;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    i = scan_quote(&chars, i, &mut cur_code);
+                    prev_ident = false;
+                } else {
+                    cur_code.push(c);
+                    prev_ident = c.is_alphanumeric() || c == '_';
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur_com.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Normal } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else {
+                    cur_com.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    cur_code.push(' ');
+                    i += 1;
+                    if i < n && chars[i] != '\n' {
+                        cur_code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur_code.push('"');
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && closes_raw(&chars, i, h) {
+                    cur_code.push('"');
+                    for _ in 0..h {
+                        cur_code.push(' ');
+                    }
+                    st = St::Normal;
+                    i += 1 + h as usize;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_com);
+    // Align with `raw` (src.lines() drops a trailing newline's empty line).
+    while code.len() > raw_lines.len() {
+        raw_lines.push(String::new());
+    }
+    while code.len() < raw_lines.len() {
+        code.push(String::new());
+        comments.push(String::new());
+    }
+    let masked = vec![false; code.len()];
+    let mut s = Scanned { raw: raw_lines, code, comments, masked };
+    mask_cfg_test(&mut s);
+    s
+}
+
+/// Does `r`/`b` at position `i` open a raw string (`r"`, `r#"`, `br"`,…)?
+/// Returns (hash count, chars consumed including the opening quote).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        // Plain `b"…"` byte strings take the escape-aware Str path; only
+        // `br…` raw forms are handled here.
+        j += 1;
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j - i + 1))
+    } else {
+        None // raw identifier (`r#match`) or plain ident char
+    }
+}
+
+/// Does the `"` at position `i` close a raw string with `h` hashes?
+fn closes_raw(chars: &[char], i: usize, h: u32) -> bool {
+    (1..=h as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Handle `'` in code: a char literal (contents blanked) or a lifetime
+/// (passed through). Heuristic: `'\` or `'x'` is a literal; anything else
+/// (`'a`, `'static`, `'_`) is a lifetime.
+fn scan_quote(chars: &[char], i: usize, cur: &mut String) -> usize {
+    let n = chars.len();
+    let is_char = chars.get(i + 1) == Some(&'\\')
+        || (chars.get(i + 2) == Some(&'\'') && chars.get(i + 1).is_some_and(|c| *c != '\''));
+    cur.push('\'');
+    let mut j = i + 1;
+    if !is_char {
+        return j; // lifetime: following ident chars are ordinary code
+    }
+    while j < n && chars[j] != '\n' {
+        if chars[j] == '\\' {
+            cur.push(' ');
+            j += 1;
+            if j < n && chars[j] != '\n' {
+                cur.push(' ');
+                j += 1;
+            }
+        } else if chars[j] == '\'' {
+            cur.push('\'');
+            j += 1;
+            break;
+        } else {
+            cur.push(' ');
+            j += 1;
+        }
+    }
+    j
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (attribute through
+/// the end of the brace-matched body, or through the `;` for brace-less
+/// items) as masked.
+fn mask_cfg_test(s: &mut Scanned) {
+    let n = s.code.len();
+    let mut l = 0;
+    while l < n {
+        if !s.code[l].contains("#[cfg(test)]") {
+            l += 1;
+            continue;
+        }
+        let start = l;
+        // Find where the item's body opens: the first `{` at or after the
+        // attribute, skipping further attributes/blank lines. A `;` first
+        // means a brace-less item (e.g. a `use`).
+        let mut open = None;
+        let mut j = l;
+        while j < n {
+            let line = &s.code[j];
+            if let Some(pos) = line.find('{') {
+                // A `;` before the `{` on an earlier or this line ends it.
+                if let Some(sp) = line.find(';') {
+                    if sp < pos {
+                        open = None;
+                        l = j + 1;
+                        break;
+                    }
+                }
+                open = Some((j, pos));
+                break;
+            }
+            if line.contains(';') {
+                open = None;
+                l = j + 1;
+                break;
+            }
+            j += 1;
+        }
+        let Some((open_line, open_pos)) = open else {
+            for m in s.masked.iter_mut().take(l.min(n)).skip(start) {
+                *m = true;
+            }
+            if l <= start {
+                l = start + 1; // unterminated item: don't loop forever
+            }
+            continue;
+        };
+        // Brace-match from the opening line.
+        let mut depth = 0i64;
+        let mut end = open_line;
+        'outer: for k in open_line..n {
+            let from = if k == open_line { open_pos } else { 0 };
+            for ch in s.code[k][char_floor(&s.code[k], from)..].chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = k;
+                            break 'outer;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            end = k;
+        }
+        for m in s.masked.iter_mut().take(end + 1).skip(start) {
+            *m = true;
+        }
+        l = end + 1;
+    }
+}
+
+/// Clamp a byte offset to a char boundary (blanked literals are ASCII
+/// spaces, but raw code may hold multi-byte chars before the offset).
+fn char_floor(line: &str, byte: usize) -> usize {
+    let mut b = byte.min(line.len());
+    while b > 0 && !line.is_char_boundary(b) {
+        b -= 1;
+    }
+    b
+}
+
+/// Brace-match the body of the item whose header is on `start` (the line
+/// holding the opening `{`, e.g. a `fn` signature line). Returns the
+/// inclusive end line.
+pub fn item_end(s: &Scanned, start: usize) -> usize {
+    let n = s.code.len();
+    let mut depth = 0i64;
+    let mut seen_open = false;
+    for k in start..n {
+        for ch in s.code[k].chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    seen_open = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if seen_open && depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    n - 1
+}
+
+/// Does `code` contain `word` as a whole identifier (not a substring of a
+/// longer identifier)?
+pub fn has_word(code: &str, word: &str) -> bool {
+    find_word(code, word).is_some()
+}
+
+/// Byte offset of `word` as a whole identifier in `code`.
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + word.len();
+        let after_ok = after >= code.len()
+            || !code[after..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + word.len();
+    }
+    None
+}

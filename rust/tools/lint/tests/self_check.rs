@@ -1,0 +1,57 @@
+//! Self-check: the lint pass must run clean on this repository — every
+//! pre-existing violation is either fixed or carries a justified waiver.
+//! This is the same invariant `ci.sh` enforces, kept inside `cargo test`
+//! so it cannot be skipped.
+
+use std::path::Path;
+
+fn repo_root() -> std::path::PathBuf {
+    // rust/tools/lint → repo root is three levels up.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.parent().unwrap().parent().unwrap().parent().unwrap();
+    assert!(
+        root.join("ci.sh").is_file() && root.join("rust/src/lib.rs").is_file(),
+        "repo root not found from {}",
+        manifest.display()
+    );
+    root.to_path_buf()
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let report = ubft_lint::run(&repo_root()).expect("lint run");
+    assert!(report.files > 50, "tree walk found only {} files", report.files);
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.lint, v.msg))
+        .collect();
+    assert!(rendered.is_empty(), "lint violations:\n{}", rendered.join("\n"));
+}
+
+#[test]
+fn committed_unsafe_inventory_is_current() {
+    let root = repo_root();
+    let report = ubft_lint::run(&root).expect("lint run");
+    let want = ubft_lint::render_inventory(&report.inventory);
+    let have = std::fs::read_to_string(root.join(ubft_lint::INVENTORY_PATH))
+        .expect("UNSAFE_INVENTORY.md is committed");
+    assert_eq!(
+        have, want,
+        "UNSAFE_INVENTORY.md is stale — refresh with `cargo run -p ubft-lint -- --write-inventory`"
+    );
+}
+
+#[test]
+fn every_unsafe_site_is_inventoried_with_a_justification() {
+    let report = ubft_lint::run(&repo_root()).expect("lint run");
+    for e in &report.inventory {
+        assert!(
+            !e.safety.is_empty(),
+            "{}:{} ({}) has no SAFETY justification",
+            e.file,
+            e.line,
+            e.kind
+        );
+    }
+}
