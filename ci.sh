@@ -52,6 +52,18 @@ echo "== sharded smoke: ubft scaling --shards 4 --cross 10 =="
 # cross-shard transactions commit.
 UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --shards 4 --cross 10
 
+echo "== model-check smoke: ubft check base [dfs] =="
+# Systematic schedule exploration over the deterministic sim (README.md,
+# "Model checking"): DFS over the n=5 linearizable-read scenario. A
+# violation exits non-zero and prints the shrunk counterexample trace —
+# save it and reproduce with `ubft check --replay <file>`.
+cargo run --release --bin ubft -- check --scenario base --driver dfs --budget 20000
+
+echo "== model-check smoke: ubft check sharded-settle [random] =="
+# Seeded random-walk scheduling + fault injection over the cross-shard
+# 2PC settlement scenario (deep schedules DFS can't reach).
+cargo run --release --bin ubft -- check --scenario sharded-settle --driver random --budget 20000
+
 echo "== alloc gate: pooled PREPARE roundtrip (batch=8) =="
 # Compile the benches with the counting allocator, then run only the
 # allocation-regression gate: the pooled batch=8 PREPARE encode+decode

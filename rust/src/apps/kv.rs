@@ -354,6 +354,63 @@ impl Workload for KvWorkload {
     }
 }
 
+/// Sequential per-key read-your-writes checker: SET a rotating key,
+/// then GET it and demand exactly the value just written. Run with
+/// pipeline 1 the GET issues only after its SET completed, so any stale
+/// read — e.g. a replica serving a lane read below the session write
+/// bound — fails the response check and shows up in client mismatch
+/// stats (and thus in the `read-lane` invariant of
+/// [`crate::testing::invariants`]).
+pub struct SeqCheckWorkload {
+    pub client: usize,
+    step: u64,
+    expect: Option<Vec<u8>>,
+}
+
+impl SeqCheckWorkload {
+    pub fn new(client: usize) -> SeqCheckWorkload {
+        SeqCheckWorkload { client, step: 0, expect: None }
+    }
+
+    fn key(&self, round: u64) -> Vec<u8> {
+        format!("c{}-key-{}", self.client, round % 16).into_bytes()
+    }
+}
+
+impl Workload for SeqCheckWorkload {
+    fn next_request(&mut self, _rng: &mut Rng) -> Vec<u8> {
+        let round = self.step / 2;
+        let key = self.key(round);
+        let val = round.to_le_bytes().to_vec();
+        let req = if self.step % 2 == 0 {
+            self.expect = None;
+            set(&key, &val)
+        } else {
+            self.expect = Some(val);
+            get(&key)
+        };
+        self.step += 1;
+        req
+    }
+
+    fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
+        if req.first() == Some(&OP_GET) {
+            let Some(v) = self.expect.take() else { return false };
+            resp.first() == Some(&ST_OK) && resp.get(1..) == Some(&v[..])
+        } else {
+            resp == [ST_OK]
+        }
+    }
+
+    fn classify(&self, req: &[u8]) -> Operation {
+        classify_op(req)
+    }
+
+    fn name(&self) -> &'static str {
+        "seqcheck"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

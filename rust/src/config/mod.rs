@@ -143,6 +143,17 @@ pub struct Config {
     /// How clients route `ReadOnly`-classified requests (the typed
     /// `Service` read lane). Default: everything through consensus.
     pub read_mode: ReadMode, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
+    /// Model-checking mode (`ubft check`): replicas additionally keep the
+    /// bounded per-slot applied-digest and CTBcast delivery logs the
+    /// `testing::invariants` oracle cross-checks. Off by default — the
+    /// logs cost memory and are useless outside the checker.
+    pub mc: bool, // ubft-lint: allow(config-knob-coverage) -- both values valid
+    /// Mutation-testing hook for the checker's self-validation: names one
+    /// deliberately re-broken historical defense (see `ubft::mc`
+    /// module docs for the catalog). `None` (the default, spelled
+    /// `mc_mutation = none` in config files) runs the real protocol;
+    /// anything else is for `ubft check` self-tests ONLY.
+    pub mc_mutation: Option<String>, // ubft-lint: allow(config-knob-coverage) -- free-form mutation name; unknown names are inert
     /// Signature backend.
     pub sig_backend: SigBackend, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
     /// DES latency model.
@@ -174,6 +185,8 @@ impl Default for Config {
             pool_classes: Vec::new(),
             pool_cap_bytes: crate::util::pool::DEFAULT_CAP_BYTES,
             read_mode: ReadMode::Consensus,
+            mc: false,
+            mc_mutation: None,
             sig_backend: SigBackend::Sim,
             lat: LatencyModel::default(),
             seed: 0xDEADBEEF,
@@ -288,6 +301,10 @@ impl Config {
                         "linearizable" => ReadMode::Linearizable,
                         _ => return Err(format!("line {}: unknown read_mode {v}", lineno + 1)),
                     }
+                }
+                "mc" => c.mc = v == "true" || v == "1",
+                "mc_mutation" => {
+                    c.mc_mutation = if v == "none" { None } else { Some(v.to_string()) }
                 }
                 "sig_backend" => {
                     c.sig_backend = match v {
@@ -409,6 +426,19 @@ mod tests {
             ReadMode::Linearizable
         );
         assert!(Config::parse("read_mode = sometimes\n").is_err());
+    }
+
+    #[test]
+    fn mc_knobs_parse_and_default_off() {
+        let d = Config::default();
+        assert!(!d.mc);
+        assert!(d.mc_mutation.is_none());
+        assert!(Config::parse("mc = true\n").unwrap().mc);
+        assert!(Config::parse("mc_mutation = none\n").unwrap().mc_mutation.is_none());
+        assert_eq!(
+            Config::parse("mc_mutation = stale-read-lane\n").unwrap().mc_mutation.as_deref(),
+            Some("stale-read-lane")
+        );
     }
 
     #[test]

@@ -312,8 +312,22 @@ pub struct Replica {
     /// ownership linear, so a small freelist removes the per-slot carrier
     /// allocation.
     req_carriers: Vec<Vec<Request>>,
+    /// Model-checking probe (`Config::mc`): bounded `(slot, exec-batch
+    /// digest)` log in apply order, cross-checked across replicas by
+    /// `testing::invariants` (agreement). Empty outside the checker.
+    mc_applied_log: VecDeque<(u64, Hash32)>,
+    /// Model-checking probe (`Config::mc`): bounded CTBcast delivery log
+    /// `(bcaster, k, payload hash)`, cross-checked across replicas by
+    /// `testing::invariants` (non-equivocation). Empty outside the
+    /// checker.
+    mc_ctb_log: VecDeque<(NodeId, u64, Hash32)>,
     pub stats: ReplicaStats,
 }
+
+/// Bound on the model-checking probe logs (`Config::mc`). Checker runs
+/// are a few thousand steps, so in practice the logs never wrap; the cap
+/// only guards against a runaway scenario.
+const MC_LOG_CAP: usize = 16384;
 
 /// Batch-carrier freelist bound: deeper pipelines just fall back to fresh
 /// `Vec`s (the payload bytes themselves are pooled separately).
@@ -377,8 +391,36 @@ impl Replica {
             vc_backoff: 0,
             pool,
             req_carriers: Vec::new(),
+            mc_applied_log: VecDeque::new(),
+            mc_ctb_log: VecDeque::new(),
             stats: ReplicaStats::default(),
             cfg,
+        }
+    }
+
+    /// Model-checking probe: the applied `(slot, exec-batch digest)` log
+    /// (`Config::mc`; empty otherwise).
+    pub fn mc_applied_log(&self) -> &VecDeque<(u64, Hash32)> {
+        &self.mc_applied_log
+    }
+
+    /// Model-checking probe: the CTBcast delivery log
+    /// `(bcaster, k, payload hash)` (`Config::mc`; empty otherwise).
+    pub fn mc_ctb_log(&self) -> &VecDeque<(NodeId, u64, Hash32)> {
+        &self.mc_ctb_log
+    }
+
+    fn mc_record_applied(&mut self, slot: u64, digest: Hash32) {
+        self.mc_applied_log.push_back((slot, digest));
+        if self.mc_applied_log.len() > MC_LOG_CAP {
+            self.mc_applied_log.pop_front();
+        }
+    }
+
+    fn mc_record_ctb(&mut self, bcaster: NodeId, k: u64, h: Hash32) {
+        self.mc_ctb_log.push_back((bcaster, k, h));
+        if self.mc_ctb_log.len() > MC_LOG_CAP {
+            self.mc_ctb_log.pop_front();
         }
     }
 
@@ -533,6 +575,9 @@ impl Replica {
         for out in outs {
             match out {
                 CtbOut::Deliver { bcaster, k, m } => {
+                    if self.cfg.mc {
+                        self.mc_record_ctb(bcaster, k, hash(&m[..]));
+                    }
                     self.senders[bcaster].buffer_delivery(k, m, self.cfg.tail);
                     self.drain_fifo(env, bcaster);
                 }
@@ -875,6 +920,10 @@ impl Replica {
         // as decided.
         while let Some(mut reqs) = self.decided.remove(&self.applied_upto) {
             let slot = self.applied_upto;
+            if self.cfg.mc {
+                let d = exec_batch_digest_in(&self.pool, slot, &reqs);
+                self.mc_record_applied(slot, d);
+            }
             if let Some(front) = self.spec.front() {
                 debug_assert_eq!(front.slot, slot, "speculation stack lost contiguity");
                 if front.digest == exec_batch_digest_in(&self.pool, slot, &reqs) {

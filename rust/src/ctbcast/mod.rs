@@ -266,6 +266,12 @@ pub struct CtbEndpoint {
     /// Buffer pool shared with the TBcast layer (and the replica above).
     /// Disabled by default; installed via [`Self::set_pool`].
     pool: Pool,
+    /// Mutation-testing hook (`Config::mc_mutation =
+    /// skip-equivocation-check`; `ubft check` self-validation ONLY):
+    /// disables the Alg 1 line-33 conflicting-register check, so an
+    /// equivocating broadcaster's deliveries silently diverge across
+    /// receivers instead of blocking the broadcaster.
+    mc_skip_equivocation: bool,
 }
 
 impl CtbEndpoint {
@@ -299,6 +305,7 @@ impl CtbEndpoint {
             reg_ops: BTreeMap::new(),
             cooldown_q: VecDeque::new(),
             pool: Pool::off(),
+            mc_skip_equivocation: cfg.mc_mutation.as_deref() == Some("skip-equivocation-check"),
         }
     }
 
@@ -679,7 +686,7 @@ impl CtbEndpoint {
             if !self.ks.verify(b, &signed_bytes(b, *k2, h2), sig2) {
                 continue;
             }
-            if *k2 == k && *h2 != me_h {
+            if *k2 == k && *h2 != me_h && !self.mc_skip_equivocation {
                 conflict = true; // line 33: Byzantine broadcaster
             }
             if *k2 > k && *k2 % t == k % t {

@@ -820,6 +820,24 @@ impl Deployment {
         self
     }
 
+    /// Prepare the deployment for model checking ([`crate::mc`]): turn
+    /// on the replica-side apply/CTB logs the invariant oracle reads
+    /// ([`Config::mc`]) and zero out network jitter so concurrent
+    /// messages land at the same instant — every ordering then surfaces
+    /// as a scheduler choice instead of being decided by jitter.
+    pub fn model_check(mut self) -> Deployment {
+        self.cfg.mc = true;
+        self.cfg.lat.jitter_mean = 0;
+        self
+    }
+
+    /// Re-install a known-fixed bug for checker self-validation
+    /// ([`Config::mc_mutation`]; see `rust/tests/it_mc.rs`).
+    pub fn mutation(mut self, name: &str) -> Deployment {
+        self.cfg.mc_mutation = Some(name.to_string());
+        self
+    }
+
     /// The (possibly adjusted) deployment configuration.
     pub fn config(&self) -> &Config {
         &self.cfg
@@ -1060,7 +1078,8 @@ impl Deployment {
                 .with_pipeline(pipeline)
                 .with_read_mode(read_mode)
                 .with_think(think)
-                .with_presend_charge(presend);
+                .with_presend_charge(presend)
+                .with_mc_mutation(cfg.mc_mutation.clone());
             if let Some((s, p)) = &shard_spec {
                 client = client.with_shards(
                     groups.clone(),
@@ -1360,6 +1379,11 @@ impl Cluster {
     /// Bytes resident on one disaggregated-memory node (Table 2).
     pub fn mem_node_bytes(&self, node: usize) -> u64 {
         self.sim.mem_node_bytes(node)
+    }
+
+    /// Has replica `i` crashed (fault plan or checker-injected)?
+    pub fn is_crashed(&self, i: NodeId) -> bool {
+        self.sim.is_crashed(i)
     }
 
     /// The simulator's trace (requires [`Deployment::trace`]).

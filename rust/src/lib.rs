@@ -56,6 +56,7 @@ pub mod deploy;
 pub mod runtime;
 pub mod harness;
 pub mod testing;
+pub mod mc;
 pub mod cli;
 
 /// Identifier of a process (replica, client or memory node) in a deployment.

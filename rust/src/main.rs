@@ -34,6 +34,19 @@ REAL MODE:
   serve       run a real-thread 3-replica KV deployment and a workload
               [--requests N]
 
+MODEL CHECKING (see README.md \"Model checking\"):
+  check       systematic schedule exploration over the deterministic sim
+              [--scenario NAME]   target scenario (default base; --list)
+              [--driver D]        dfs | dpor | random (default dfs)
+              [--budget N]        total scheduler decisions (default 20000)
+              [--depth N]         DFS/DPOR branching depth (default 40)
+              [--seed S]          random-walk base seed
+              [--mutation M]      re-install a known-fixed bug (--list)
+              [--trace-out FILE]  write the shrunk counterexample trace
+              [--replay FILE]     re-execute a recorded trace bit-for-bit
+              [--list]            list scenarios and mutations
+              exit code: 0 clean, 1 violation found/reproduced, 2 usage
+
 MISC:
   lint        run the repo's static-analysis pass (alias for
               cargo run -p ubft-lint; see rust/tools/lint/README.md)
@@ -107,6 +120,7 @@ fn main() {
             harness::scaling::main_run(samples);
         }
         "serve" => serve(&args),
+        "check" => std::process::exit(ubft::mc::cli_check(&args)),
         "lint" => std::process::exit(ubft_lint::cli_main(&[])),
         "calibration" => {
             let cfg = match args.get("config") {

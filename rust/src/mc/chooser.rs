@@ -1,0 +1,358 @@
+//! The [`Chooser`]: the model checker's end of the [`Scheduler`] seam.
+//!
+//! One `ChooserCore` lives for exactly one explored schedule. It replays
+//! a *prefix* of recorded choices, then extends with either the default
+//! decision (pick index 0, inject nothing — the DFS/DPOR extension
+//! rule) or seeded random decisions (the random-walk driver). Every
+//! decision point it passes through is appended to `record`, so the
+//! full record of a run is itself a replayable schedule: feeding it
+//! back as the prefix reproduces the run bit-for-bit (the simulator is
+//! deterministic given the scheduler's answers).
+
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{EnabledEv, Scheduler};
+use crate::util::Rng;
+use crate::{Nanos, NodeId};
+
+/// What kind of decision a choice point resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChoiceKind {
+    /// Which same-instant enabled event dispatches next (`n` = enabled
+    /// set size, `picked` = index into it).
+    Pick,
+    /// Drop a message just before delivery (`picked`: 0 = deliver,
+    /// 1 = drop).
+    Drop,
+    /// Crash a node just before it processes an event (`picked`: 0 =
+    /// live, 1 = crash).
+    Crash,
+    /// Tear a memory write (`picked`: 0 = atomic, `w` = split after the
+    /// `w`-th 8-byte word).
+    Tear,
+}
+
+impl ChoiceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            ChoiceKind::Pick => "pick",
+            ChoiceKind::Drop => "drop",
+            ChoiceKind::Crash => "crash",
+            ChoiceKind::Tear => "tear",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<ChoiceKind> {
+        match s {
+            "pick" => Some(ChoiceKind::Pick),
+            "drop" => Some(ChoiceKind::Drop),
+            "crash" => Some(ChoiceKind::Crash),
+            "tear" => Some(ChoiceKind::Tear),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded decision. `n` is how many alternatives existed at this
+/// point and `keys` the receiver keys of the enabled set (`Pick` only)
+/// — both are what the drivers need to enumerate untried branches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Choice {
+    pub kind: ChoiceKind,
+    pub picked: u32,
+    pub n: u32,
+    pub keys: Vec<u32>,
+}
+
+impl Choice {
+    /// The decision the default extension would have taken here.
+    pub fn is_default(&self) -> bool {
+        self.picked == 0
+    }
+}
+
+/// How many of each fault the chooser may inject into one schedule.
+/// Zero budget means the corresponding hook is never even a choice
+/// point — the search space only contains faults the scenario allows.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultBudget {
+    pub drops: u32,
+    pub crashes: u32,
+    pub tears: u32,
+}
+
+impl FaultBudget {
+    pub const NONE: FaultBudget = FaultBudget { drops: 0, crashes: 0, tears: 0 };
+}
+
+/// Extension policy past the replay prefix.
+pub enum Mode {
+    /// Pick index 0, inject nothing (DFS / DPOR / replay extension).
+    Default,
+    /// Seeded random decisions (the random-walk driver).
+    Random(Rng),
+}
+
+/// Injection probabilities for random-walk extensions. Deliberately
+/// small: a walk should mostly explore orderings and sprinkle faults,
+/// not degenerate into a lossy network.
+const RAND_DROP_P: f64 = 0.02;
+const RAND_CRASH_P: f64 = 0.002;
+const RAND_TEAR_P: f64 = 0.05;
+
+/// Backstop on recorded choices per schedule; a run that somehow blows
+/// past this keeps running with default decisions but stops recording
+/// (and therefore stops being branchable / fully replayable — the
+/// drivers treat hitting the cap as schedule-too-deep).
+const RECORD_CAP: usize = 200_000;
+
+pub struct ChooserCore {
+    prefix: Vec<Choice>,
+    cursor: usize,
+    pub record: Vec<Choice>,
+    mode: Mode,
+    budget: FaultBudget,
+    /// Nodes eligible for crash injection (correct replicas only).
+    crashable: Vec<NodeId>,
+    /// Replicas per consensus group (`group = id / group_n`).
+    group_n: usize,
+    /// Remaining crash injections per group (≤ f minus Byzantine slots).
+    crash_left: Vec<u32>,
+    /// Total decisions made (the unit `--budget` is charged in).
+    pub decisions: u64,
+}
+
+impl ChooserCore {
+    pub fn new(
+        prefix: Vec<Choice>,
+        mode: Mode,
+        budget: FaultBudget,
+        crashable: Vec<NodeId>,
+        group_n: usize,
+        crash_left: Vec<u32>,
+    ) -> ChooserCore {
+        ChooserCore {
+            prefix,
+            cursor: 0,
+            record: Vec::new(),
+            mode,
+            budget,
+            crashable,
+            group_n: group_n.max(1),
+            crash_left,
+            decisions: 0,
+        }
+    }
+
+    /// Resolve one choice point: replay the prefix while it lasts, then
+    /// extend per `mode`; always record what was decided.
+    fn next(
+        &mut self,
+        kind: ChoiceKind,
+        n: u32,
+        keys: Vec<u32>,
+        rand: impl FnOnce(&mut Rng) -> u32,
+    ) -> u32 {
+        self.decisions += 1;
+        let picked = if self.cursor < self.prefix.len() {
+            let c = &self.prefix[self.cursor];
+            self.cursor += 1;
+            // A kind mismatch means the schedule diverged from the
+            // prefix (e.g. a trace replayed against the wrong scenario);
+            // fall back to the default decision rather than misapplying
+            // an index.
+            if c.kind == kind {
+                c.picked.min(n.saturating_sub(1))
+            } else {
+                0
+            }
+        } else {
+            match &mut self.mode {
+                Mode::Default => 0,
+                Mode::Random(rng) => rand(rng).min(n.saturating_sub(1)),
+            }
+        };
+        if self.record.len() < RECORD_CAP {
+            self.record.push(Choice { kind, picked, n, keys });
+        }
+        picked
+    }
+
+    pub fn record_truncated(&self) -> bool {
+        self.record.len() >= RECORD_CAP
+    }
+
+    /// Install the crash-eligibility policy once the deployment is
+    /// built (the correct-replica set is only known post-build; no
+    /// choice point fires before the scheduler is installed, so doing
+    /// this after `new` is race-free).
+    pub fn set_crash_policy(
+        &mut self,
+        crashable: Vec<NodeId>,
+        group_n: usize,
+        crash_left: Vec<u32>,
+    ) {
+        self.crashable = crashable;
+        self.group_n = group_n.max(1);
+        self.crash_left = crash_left;
+    }
+}
+
+/// The [`Scheduler`] handed to the simulator. Shares its core with the
+/// runner so the record survives the run.
+pub struct Chooser(pub Arc<Mutex<ChooserCore>>);
+
+impl Scheduler for Chooser {
+    fn pick(&mut self, _now: Nanos, evs: &[EnabledEv]) -> usize {
+        let mut core = self.0.lock().unwrap();
+        let keys: Vec<u32> = evs.iter().map(|e| e.key as u32).collect();
+        let n = evs.len() as u32;
+        core.next(ChoiceKind::Pick, n, keys, |rng| rng.range(0, n as usize) as u32) as usize
+    }
+
+    fn drop_message(&mut self, _from: NodeId, _dst: NodeId) -> bool {
+        let mut core = self.0.lock().unwrap();
+        if core.budget.drops == 0 {
+            return false;
+        }
+        let picked = core.next(ChoiceKind::Drop, 2, Vec::new(), |rng| {
+            u32::from(rng.chance(RAND_DROP_P))
+        });
+        if picked == 1 {
+            core.budget.drops -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn crash_node(&mut self, node: NodeId) -> bool {
+        let mut core = self.0.lock().unwrap();
+        if core.budget.crashes == 0 || !core.crashable.contains(&node) {
+            return false;
+        }
+        let group = node / core.group_n;
+        if core.crash_left.get(group).copied().unwrap_or(0) == 0 {
+            return false;
+        }
+        let picked = core.next(ChoiceKind::Crash, 2, Vec::new(), |rng| {
+            u32::from(rng.chance(RAND_CRASH_P))
+        });
+        if picked == 1 {
+            core.budget.crashes -= 1;
+            core.crash_left[group] -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn tear_write(&mut self, _mem_node: usize, words: usize) -> Option<usize> {
+        let mut core = self.0.lock().unwrap();
+        if core.budget.tears == 0 || words < 2 {
+            return None;
+        }
+        // 0 = atomic; w in 1..n = split after word w. Capping the split
+        // positions keeps the branching factor small — the interesting
+        // distinction is torn-vs-atomic, not where exactly.
+        let n = (words.min(4)) as u32;
+        let picked = core.next(ChoiceKind::Tear, n, Vec::new(), |rng| {
+            if rng.chance(RAND_TEAR_P) {
+                rng.range(1, n as usize) as u32
+            } else {
+                0
+            }
+        });
+        if picked == 0 {
+            None
+        } else {
+            core.budget.tears -= 1;
+            Some(picked as usize)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pick_ev(key: usize) -> EnabledEv {
+        EnabledEv { kind: crate::sim::EvKind::Recv, key, from: Some(0) }
+    }
+
+    #[test]
+    fn default_mode_picks_zero_and_records() {
+        let core = Arc::new(Mutex::new(ChooserCore::new(
+            Vec::new(),
+            Mode::Default,
+            FaultBudget::NONE,
+            vec![0, 1, 2],
+            3,
+            vec![1],
+        )));
+        let mut ch = Chooser(core.clone());
+        assert_eq!(ch.pick(0, &[pick_ev(1), pick_ev(2)]), 0);
+        // Zero fault budget: hooks are not choice points.
+        assert!(!ch.drop_message(0, 1));
+        assert!(!ch.crash_node(1));
+        assert_eq!(ch.tear_write(0, 8), None);
+        let core = core.lock().unwrap();
+        assert_eq!(core.record.len(), 1);
+        assert_eq!(core.record[0].kind, ChoiceKind::Pick);
+        assert_eq!(core.record[0].keys, vec![1, 2]);
+        assert_eq!(core.decisions, 1);
+    }
+
+    #[test]
+    fn prefix_replays_then_defaults() {
+        let prefix = vec![Choice { kind: ChoiceKind::Pick, picked: 1, n: 2, keys: vec![] }];
+        let core = Arc::new(Mutex::new(ChooserCore::new(
+            prefix,
+            Mode::Default,
+            FaultBudget::NONE,
+            vec![],
+            3,
+            vec![],
+        )));
+        let mut ch = Chooser(core.clone());
+        assert_eq!(ch.pick(0, &[pick_ev(1), pick_ev(2)]), 1);
+        assert_eq!(ch.pick(0, &[pick_ev(1), pick_ev(2)]), 0);
+        assert_eq!(core.lock().unwrap().record.len(), 2);
+    }
+
+    #[test]
+    fn crash_budget_respects_group_cap() {
+        let prefix = vec![
+            Choice { kind: ChoiceKind::Crash, picked: 1, n: 2, keys: vec![] },
+            Choice { kind: ChoiceKind::Crash, picked: 1, n: 2, keys: vec![] },
+        ];
+        let core = Arc::new(Mutex::new(ChooserCore::new(
+            prefix,
+            Mode::Default,
+            FaultBudget { drops: 0, crashes: 2, tears: 0 },
+            vec![0, 1, 2],
+            3,
+            vec![1], // one group, f = 1
+        )));
+        let mut ch = Chooser(core.clone());
+        assert!(ch.crash_node(1));
+        // Group cap exhausted: not even a choice point any more.
+        assert!(!ch.crash_node(2));
+        assert_eq!(core.lock().unwrap().record.len(), 1);
+    }
+
+    #[test]
+    fn kind_mismatch_in_prefix_falls_back_to_default() {
+        let prefix = vec![Choice { kind: ChoiceKind::Drop, picked: 1, n: 2, keys: vec![] }];
+        let core = Arc::new(Mutex::new(ChooserCore::new(
+            prefix,
+            Mode::Default,
+            FaultBudget::NONE,
+            vec![],
+            3,
+            vec![],
+        )));
+        let mut ch = Chooser(core.clone());
+        assert_eq!(ch.pick(0, &[pick_ev(1), pick_ev(2), pick_ev(3)]), 0);
+    }
+}

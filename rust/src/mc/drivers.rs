@@ -1,0 +1,254 @@
+//! Exploration drivers: exhaustive DFS, DPOR-lite, seeded random walk —
+//! plus the greedy counterexample shrinker.
+//!
+//! All drivers share the stateless core ([`super::run_one`]): a
+//! schedule is a choice prefix, executing it yields a full record, and
+//! branching means re-running with a longer prefix. Budgets are charged
+//! in *scheduler decisions* (the unit that actually costs wall clock),
+//! summed across every schedule a driver executes.
+
+use super::chooser::{Choice, ChoiceKind, Mode};
+use super::scenarios::Scenario;
+use super::run_one;
+use crate::testing::invariants::Violation;
+use crate::util::Rng;
+
+pub struct ExploreOpts {
+    pub budget: u64,
+    pub depth: usize,
+    pub seed: u64,
+    pub mutation: Option<String>,
+}
+
+pub struct Exploration {
+    pub schedules: u64,
+    pub decisions: u64,
+    /// Frontier emptied before the budget did (DFS/DPOR), or the
+    /// scenario exposed no choice points at all (random walk).
+    pub exhausted: bool,
+    /// First violation and the full record of the schedule that hit it.
+    pub violation: Option<(Violation, Vec<Choice>)>,
+}
+
+impl Exploration {
+    fn new() -> Exploration {
+        Exploration { schedules: 0, decisions: 0, exhausted: false, violation: None }
+    }
+}
+
+/// Depth-first enumeration of choice prefixes.
+///
+/// Invariant of the extension rule: beyond its prefix a schedule runs
+/// with *default* decisions, so from one executed record every untried
+/// sibling branch at decision points `prefix.len()..depth` can be
+/// enumerated without re-running anything. Branches are pushed in
+/// ascending (index, alternative) order onto a stack, so deeper/later
+/// branches pop first — classic DFS, which keeps the frontier small.
+///
+/// With `dpor` set, sibling alternatives of a `Pick` whose enabled
+/// event has the same receiver key as one already scheduled for
+/// exploration at that point are skipped: same-instant events at
+/// different receivers commute through the immediate dispatch, so one
+/// representative per key suffices. This is a heuristic reduction (it
+/// does not track cross-step happens-before like full DPOR), bought at
+/// zero bookkeeping cost.
+pub fn dfs(scn: &Scenario, opts: &ExploreOpts, dpor: bool) -> Exploration {
+    let mut ex = Exploration::new();
+    let mut stack: Vec<Vec<Choice>> = vec![Vec::new()];
+    while let Some(prefix) = stack.pop() {
+        if ex.decisions >= opts.budget {
+            return ex; // budget spent with frontier remaining
+        }
+        let plen = prefix.len();
+        let out = run_one(scn, opts.mutation.as_deref(), prefix, Mode::Default);
+        ex.schedules += 1;
+        ex.decisions += out.decisions;
+        if let Some(v) = out.violation {
+            ex.violation = Some((v, out.record));
+            return ex;
+        }
+        if out.truncated {
+            continue; // record capped: cannot branch this schedule reliably
+        }
+        let hi = out.record.len().min(opts.depth);
+        for i in plen..hi {
+            let c = &out.record[i];
+            let mut seen_keys: Vec<u32> = Vec::new();
+            if dpor && c.kind == ChoiceKind::Pick {
+                if let Some(&k) = c.keys.get(c.picked as usize) {
+                    seen_keys.push(k);
+                }
+            }
+            for alt in 0..c.n {
+                if alt == c.picked {
+                    continue;
+                }
+                if dpor && c.kind == ChoiceKind::Pick {
+                    if let Some(&k) = c.keys.get(alt as usize) {
+                        if seen_keys.contains(&k) {
+                            continue;
+                        }
+                        seen_keys.push(k);
+                    }
+                }
+                let mut p = out.record[..i].to_vec();
+                let mut nc = c.clone();
+                nc.picked = alt;
+                p.push(nc);
+                stack.push(p);
+            }
+        }
+    }
+    ex.exhausted = true;
+    ex
+}
+
+/// Seeded random walks until the budget is spent. Each walk gets a
+/// distinct derived seed, so a violation is reproducible from
+/// `(base seed, walk index)` — though the preferred artifact is the
+/// recorded trace, which needs neither.
+pub fn random_walk(scn: &Scenario, opts: &ExploreOpts) -> Exploration {
+    let mut ex = Exploration::new();
+    let mut walk: u64 = 0;
+    loop {
+        if ex.decisions >= opts.budget {
+            return ex;
+        }
+        let seed = opts.seed ^ walk.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let out = run_one(scn, opts.mutation.as_deref(), Vec::new(), Mode::Random(Rng::new(seed)));
+        ex.schedules += 1;
+        ex.decisions += out.decisions;
+        if let Some(v) = out.violation {
+            ex.violation = Some((v, out.record));
+            return ex;
+        }
+        if out.decisions == 0 {
+            // No choice points at all: every walk is the same schedule.
+            ex.exhausted = true;
+            return ex;
+        }
+        walk += 1;
+    }
+}
+
+/// Reruns the shrinker is willing to pay for a smaller counterexample.
+const SHRINK_TRIALS: usize = 150;
+/// Default-flip pass only touches the first this-many choices — random
+/// records can hold thousands of non-default picks and flipping each
+/// would dwarf the exploration budget, while violations almost always
+/// hinge on early decisions.
+const FLIP_WINDOW: usize = 96;
+
+pub struct Shrunk {
+    pub choices: Vec<Choice>,
+    pub violation: Violation,
+    pub schedules: u64,
+    pub decisions: u64,
+}
+
+fn trim_trailing_defaults(mut v: Vec<Choice>) -> Vec<Choice> {
+    while v.last().map_or(false, |c| c.is_default()) {
+        v.pop();
+    }
+    v
+}
+
+/// Greedily shrink a violating record to a short prefix that still
+/// violates *some* invariant (not necessarily the same one — any
+/// violation is a counterexample worth keeping):
+///
+/// 1. drop trailing default choices (free — the default extension
+///    re-derives them on replay);
+/// 2. halve: while the front half of the record still violates, keep
+///    only it;
+/// 3. flip early non-default choices back to the default one at a
+///    time, keeping each flip that still violates.
+pub fn shrink(
+    scn: &Scenario,
+    mutation: Option<&str>,
+    record: Vec<Choice>,
+    violation: Violation,
+) -> Shrunk {
+    let mut s = Shrunk {
+        choices: trim_trailing_defaults(record),
+        violation,
+        schedules: 0,
+        decisions: 0,
+    };
+    let mut trials = 0usize;
+
+    let mut try_candidate = |s: &mut Shrunk, candidate: Vec<Choice>| -> bool {
+        s.schedules += 1;
+        let out = run_one(scn, mutation, candidate.clone(), Mode::Default);
+        s.decisions += out.decisions;
+        match out.violation {
+            Some(v) => {
+                s.choices = trim_trailing_defaults(candidate);
+                s.violation = v;
+                true
+            }
+            None => false,
+        }
+    };
+
+    while trials < SHRINK_TRIALS {
+        let k = s.choices.len() / 2;
+        if k == 0 {
+            break;
+        }
+        trials += 1;
+        if !try_candidate(&mut s, s.choices[..k].to_vec()) {
+            break;
+        }
+    }
+
+    let mut i = 0;
+    while i < s.choices.len().min(FLIP_WINDOW) && trials < SHRINK_TRIALS {
+        if !s.choices[i].is_default() {
+            trials += 1;
+            let mut candidate = s.choices.clone();
+            candidate[i].picked = 0;
+            // On success `s.choices` shrinks or changes in place; index
+            // `i` still points at the next unexamined position either way.
+            try_candidate(&mut s, candidate);
+        }
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mc::scenarios;
+
+    #[test]
+    fn dfs_with_tiny_budget_stops_without_violation_on_base() {
+        let scn = scenarios::find("base").unwrap();
+        let opts =
+            ExploreOpts { budget: 400, depth: 6, seed: 1, mutation: None };
+        let ex = dfs(scn, &opts, false);
+        assert!(ex.violation.is_none(), "unexpected violation: {:?}", ex.violation);
+        assert!(ex.schedules >= 1);
+        assert!(ex.decisions >= opts.budget || ex.exhausted);
+    }
+
+    #[test]
+    fn dpor_explores_no_more_schedules_than_dfs_per_budget() {
+        let scn = scenarios::find("base").unwrap();
+        let opts = ExploreOpts { budget: 300, depth: 4, seed: 1, mutation: None };
+        let plain = dfs(scn, &opts, false);
+        let reduced = dfs(scn, &opts, true);
+        assert!(plain.violation.is_none() && reduced.violation.is_none());
+        // Same budget: the reduced frontier can only exhaust sooner.
+        assert!(reduced.schedules <= plain.schedules + 1);
+    }
+
+    #[test]
+    fn trim_drops_only_trailing_defaults() {
+        let c = |picked: u32| Choice { kind: ChoiceKind::Pick, picked, n: 3, keys: vec![] };
+        let v = trim_trailing_defaults(vec![c(0), c(2), c(0), c(0)]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[1].picked, 2);
+    }
+}

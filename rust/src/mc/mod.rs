@@ -1,0 +1,490 @@
+//! `ubft::mc` — stateless model checking of the protocol stack over the
+//! deterministic simulator.
+//!
+//! The simulator already collapses the whole deployment — replicas,
+//! clients, disaggregated memory, timers — into one deterministic event
+//! queue. This module replaces the queue's time-ordered tie-break with a
+//! controllable [`crate::sim::Scheduler`]: at every instant where more
+//! than one event is enabled (same-time deliveries, ready timers,
+//! memory completions) the checker *chooses* which dispatches next, and
+//! at every delivery/write it may *inject* a fault (message drop,
+//! replica crash, torn memory write) from the scenario's budget.
+//!
+//! Exploration is **stateless** (VeriSoft-style): the checker never
+//! snapshots protocol state. A schedule is just the sequence of choices
+//! taken; to visit a different branch the runner re-executes the whole
+//! deployment from scratch with a different choice prefix. That trades
+//! CPU for total simplicity — and makes every recorded schedule
+//! replayable bit-for-bit, which is what turns a violation into a
+//! regression test ([`Trace`], `ubft check --replay`).
+//!
+//! Three drivers ([`drivers`]):
+//!
+//! * **DFS** — exhaustive depth-first enumeration of all choice
+//!   prefixes up to `--depth`, budgeted in scheduler decisions.
+//! * **DPOR-lite** — DFS that skips sibling branches whose picked
+//!   events target the *same receiver key* as one already explored at
+//!   that point: two same-instant events at different receivers
+//!   commute through the next dispatch, so only per-key representatives
+//!   are explored. (A heuristic reduction, not full persistent-set
+//!   DPOR: cross-step dependencies are not tracked.)
+//! * **Random walk** — seeded random scheduling and fault injection,
+//!   good at depths DFS cannot reach.
+//!
+//! Every explored schedule is audited by the invariant oracle
+//! ([`crate::testing::invariants`]) after each scheduling chunk, plus
+//! liveness bookkeeping (deadline, premature queue drain, panics).
+//! On violation the recorded schedule is greedily shrunk
+//! ([`drivers::shrink`]) and serialized as a [`Trace`].
+//!
+//! Checker self-validation: the mutations in [`MUTATIONS`] re-install
+//! known-fixed protocol bugs behind `Config::mc_mutation`; the suite in
+//! `rust/tests/it_mc.rs` asserts each is re-caught and that its shrunk
+//! trace replays to the same violation twice.
+
+pub mod chooser;
+pub mod drivers;
+pub mod scenarios;
+pub mod trace;
+
+pub use chooser::{Choice, ChoiceKind, FaultBudget, Mode};
+pub use scenarios::Scenario;
+pub use trace::Trace;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+use crate::testing::invariants::{self, Violation};
+use crate::NodeId;
+use chooser::{Chooser, ChooserCore};
+
+/// Known-fixed bugs the checker can re-install for self-validation
+/// (`--mutation`, [`crate::config::Config::mc_mutation`]). Each was a
+/// real bug class fixed in an earlier revision of this repo:
+///
+/// * `skip-equivocation-check` — CTBcast delivers without the
+///   conflicting-register check, so an equivocator splits the group
+///   (caught as `ctb-non-equivocation` / `agreement`).
+/// * `forged-slot-wedge` — the client's session write bound advances on
+///   read-lane responses too, so a forged-slot replier wedges every
+///   later linearizable read (caught as `liveness`).
+/// * `stale-read-lane` — linearizable reads skip the f+1-vouched read
+///   index and accept any fresh-looking quorum, so a stale colluder
+///   plus one lagging honest replica serve stale data (caught as
+///   `read-lane`).
+pub const MUTATIONS: &[&str] =
+    &["skip-equivocation-check", "forged-slot-wedge", "stale-read-lane"];
+
+/// Steps between oracle evaluations. Smaller catches violations closer
+/// to their cause but costs oracle time per schedule; 64 keeps the
+/// oracle under ~10% of run time at these scenario sizes.
+const CHECK_EVERY: usize = 64;
+
+/// Outcome of executing one schedule to completion (or violation).
+pub(crate) struct RunOutcome {
+    pub violation: Option<Violation>,
+    /// Every decision taken — itself a replayable schedule.
+    pub record: Vec<Choice>,
+    pub decisions: u64,
+    /// Record hit its cap; this schedule cannot be branched reliably.
+    pub truncated: bool,
+}
+
+fn liveness(detail: String) -> Violation {
+    Violation { invariant: "liveness", detail }
+}
+
+fn panic_detail(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Execute one schedule: build the scenario's deployment fresh, replay
+/// `prefix`, extend per `mode`, audit invariants every [`CHECK_EVERY`]
+/// steps, and classify the outcome.
+///
+/// Completion means every client is done *or crashed* (a deliberately
+/// crashed client — e.g. the 2PC coordinator in `coordinator-crash-2pc`
+/// — can never report done); a drained event queue or a blown virtual
+/// deadline before that is a liveness violation, and a panic anywhere
+/// in the stack is a violation of its own kind.
+pub(crate) fn run_one(
+    scn: &Scenario,
+    mutation: Option<&str>,
+    prefix: Vec<Choice>,
+    mode: Mode,
+) -> RunOutcome {
+    let core = Arc::new(Mutex::new(ChooserCore::new(
+        prefix,
+        mode,
+        scn.faults,
+        Vec::new(),
+        1,
+        Vec::new(),
+    )));
+    let core_in = core.clone();
+    let result: Result<Result<(), Violation>, _> = catch_unwind(AssertUnwindSafe(move || {
+        let mut cluster = scn
+            .deployment(mutation)
+            .build()
+            .map_err(|e| Violation { invariant: "deploy", detail: e.to_string() })?;
+        let n = cluster.config().n;
+        let f = cluster.config().f;
+        let groups = cluster.shard_count();
+        let replicas = groups * n;
+        let byz = cluster.byz_ids().to_vec();
+        let crashable: Vec<NodeId> =
+            (0..replicas).filter(|i| !byz.contains(i)).collect();
+        // Per group, crash injection may consume at most the fault
+        // slots not already burned by Byzantine replacements: f minus
+        // the group's byz count — never push a group past f faults.
+        let crash_left: Vec<u32> = (0..groups)
+            .map(|g| {
+                let byz_in_g = byz.iter().filter(|&&b| b < replicas && b / n == g).count();
+                f.saturating_sub(byz_in_g) as u32
+            })
+            .collect();
+        core_in.lock().unwrap().set_crash_policy(crashable, n, crash_left);
+        cluster.sim().set_scheduler(Box::new(Chooser(core_in)));
+
+        loop {
+            let mut drained = false;
+            for _ in 0..CHECK_EVERY {
+                if cluster.step().is_none() {
+                    drained = true;
+                    break;
+                }
+            }
+            invariants::stepwise(&mut cluster)?;
+            let done = cluster
+                .clients()
+                .iter()
+                .all(|c| c.done_at().is_some() || cluster.is_crashed(c.id));
+            if done {
+                return invariants::quiescent(&mut cluster);
+            }
+            if drained {
+                return Err(liveness(
+                    "event queue drained before surviving clients completed".into(),
+                ));
+            }
+            if cluster.now() > scn.deadline {
+                return Err(liveness(format!(
+                    "surviving clients not done by the {} µs scenario deadline",
+                    scn.deadline / crate::MICRO
+                )));
+            }
+        }
+    }));
+    let (record, decisions, truncated) = {
+        let c = core.lock().unwrap();
+        (c.record.clone(), c.decisions, c.record_truncated())
+    };
+    let violation = match result {
+        Ok(Ok(())) => None,
+        Ok(Err(v)) => Some(v),
+        Err(e) => Some(Violation { invariant: "panic", detail: panic_detail(e.as_ref()) }),
+    };
+    RunOutcome { violation, record, decisions, truncated }
+}
+
+/// Which exploration driver to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Driver {
+    Dfs,
+    Dpor,
+    Random,
+}
+
+impl Driver {
+    pub fn parse(s: &str) -> Option<Driver> {
+        match s {
+            "dfs" => Some(Driver::Dfs),
+            "dpor" => Some(Driver::Dpor),
+            "random" | "rand" => Some(Driver::Random),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Driver::Dfs => "dfs",
+            Driver::Dpor => "dpor",
+            Driver::Random => "random",
+        }
+    }
+}
+
+pub struct CheckOpts {
+    pub driver: Driver,
+    /// Total scheduler decisions across all explored schedules — the
+    /// unit of work `check` is budgeted in.
+    pub budget: u64,
+    /// DFS/DPOR branch only within the first `depth` decisions of a
+    /// schedule (the tail still runs with default choices).
+    pub depth: usize,
+    /// Random-walk base seed.
+    pub seed: u64,
+    /// Known-fixed bug to re-install ([`MUTATIONS`]).
+    pub mutation: Option<String>,
+}
+
+impl Default for CheckOpts {
+    fn default() -> CheckOpts {
+        CheckOpts { driver: Driver::Dfs, budget: 20_000, depth: 40, seed: 1, mutation: None }
+    }
+}
+
+/// A violation plus its shrunk, replayable counterexample.
+pub struct Found {
+    pub violation: Violation,
+    pub trace: Trace,
+}
+
+pub struct CheckReport {
+    pub scenario: String,
+    pub driver: &'static str,
+    /// Schedules fully executed (including shrink reruns).
+    pub schedules: u64,
+    /// Scheduler decisions spent (including shrink reruns).
+    pub decisions: u64,
+    /// DFS/DPOR frontier emptied before the budget did: the state space
+    /// within the depth bound is exhausted.
+    pub exhausted: bool,
+    pub found: Option<Found>,
+}
+
+/// Explore `scn` under `opts`; on violation, shrink and package the
+/// counterexample.
+pub fn check(scn: &Scenario, opts: &CheckOpts) -> CheckReport {
+    let eopts = drivers::ExploreOpts {
+        budget: opts.budget,
+        depth: opts.depth,
+        seed: opts.seed,
+        mutation: opts.mutation.clone(),
+    };
+    let expl = match opts.driver {
+        Driver::Dfs => drivers::dfs(scn, &eopts, false),
+        Driver::Dpor => drivers::dfs(scn, &eopts, true),
+        Driver::Random => drivers::random_walk(scn, &eopts),
+    };
+    let mut report = CheckReport {
+        scenario: scn.name.to_string(),
+        driver: opts.driver.label(),
+        schedules: expl.schedules,
+        decisions: expl.decisions,
+        exhausted: expl.exhausted,
+        found: None,
+    };
+    if let Some((violation, record)) = expl.violation {
+        let shrunk = drivers::shrink(scn, opts.mutation.as_deref(), record, violation);
+        report.schedules += shrunk.schedules;
+        report.decisions += shrunk.decisions;
+        let trace = Trace {
+            scenario: scn.name.to_string(),
+            mutation: opts.mutation.clone(),
+            violation: Some(shrunk.violation.invariant.to_string()),
+            choices: shrunk.choices,
+        };
+        report.found = Some(Found { violation: shrunk.violation, trace });
+    }
+    report
+}
+
+/// Replay a counterexample trace bit-for-bit: rebuild the scenario
+/// (re-installing the trace's mutation), feed the recorded choices back
+/// as the prefix, extend with defaults. Returns the violation the
+/// schedule reproduces, if any.
+pub fn replay(t: &Trace) -> Result<Option<Violation>, String> {
+    let scn = scenarios::find(&t.scenario)
+        .ok_or_else(|| format!("unknown scenario `{}` in trace", t.scenario))?;
+    if let Some(m) = &t.mutation {
+        if !MUTATIONS.contains(&m.as_str()) {
+            return Err(format!("unknown mutation `{m}` in trace"));
+        }
+    }
+    let out = run_one(scn, t.mutation.as_deref(), t.choices.clone(), Mode::Default);
+    Ok(out.violation)
+}
+
+/// `ubft check` entry point. Returns the process exit code: 0 = clean,
+/// 1 = violation found (or reproduced under `--replay`), 2 = usage /
+/// I/O error.
+pub fn cli_check(args: &crate::cli::Args) -> i32 {
+    if args.has_flag("list") {
+        println!("scenarios:");
+        for s in scenarios::ALL {
+            println!("  {:<24} {}", s.name, s.about);
+        }
+        println!("\nmutations (self-validation; see rust/tests/it_mc.rs):");
+        for m in MUTATIONS {
+            println!("  {m}");
+        }
+        return 0;
+    }
+
+    if let Some(path) = args.get("replay") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ubft check: cannot read {path}: {e}");
+                return 2;
+            }
+        };
+        let t = match Trace::parse(&text) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ubft check: {path}: {e}");
+                return 2;
+            }
+        };
+        let mutation = t
+            .mutation
+            .as_deref()
+            .map(|m| format!(", mutation {m}"))
+            .unwrap_or_default();
+        println!(
+            "replaying {} recorded choices against `{}`{mutation}",
+            t.choices.len(),
+            t.scenario
+        );
+        return match replay(&t) {
+            Err(e) => {
+                eprintln!("ubft check: {e}");
+                2
+            }
+            Ok(Some(v)) => {
+                println!("reproduced: {v}");
+                1
+            }
+            Ok(None) => {
+                println!("schedule ran clean — violation NOT reproduced");
+                0
+            }
+        };
+    }
+
+    let name = args.get("scenario").unwrap_or("base");
+    let Some(scn) = scenarios::find(name) else {
+        eprintln!("ubft check: unknown scenario `{name}` (see `ubft check --list`)");
+        return 2;
+    };
+    let mut opts = CheckOpts::default();
+    if let Some(d) = args.get("driver") {
+        match Driver::parse(d) {
+            Some(d) => opts.driver = d,
+            None => {
+                eprintln!("ubft check: unknown driver `{d}` (dfs | dpor | random)");
+                return 2;
+            }
+        }
+    }
+    opts.budget = match args.get_u64("budget", opts.budget) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("ubft check: {e}");
+            return 2;
+        }
+    };
+    opts.depth = match args.get_usize("depth", opts.depth) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("ubft check: {e}");
+            return 2;
+        }
+    };
+    opts.seed = match args.get_u64("seed", opts.seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("ubft check: {e}");
+            return 2;
+        }
+    };
+    if let Some(m) = args.get("mutation") {
+        if !MUTATIONS.contains(&m) {
+            eprintln!("ubft check: unknown mutation `{m}` (see `ubft check --list`)");
+            return 2;
+        }
+        opts.mutation = Some(m.to_string());
+    }
+
+    println!(
+        "checking `{}` [{}] budget={} depth={}{}",
+        scn.name,
+        opts.driver.label(),
+        opts.budget,
+        opts.depth,
+        opts.mutation.as_deref().map(|m| format!(" mutation={m}")).unwrap_or_default()
+    );
+    let report = check(scn, &opts);
+    println!(
+        "explored {} schedules, {} scheduler decisions{}",
+        report.schedules,
+        report.decisions,
+        if report.exhausted { " (state space exhausted within depth bound)" } else { "" }
+    );
+    match &report.found {
+        None => {
+            println!("no violation found");
+            0
+        }
+        Some(f) => {
+            println!("VIOLATION: {}", f.violation);
+            let text = f.trace.to_text();
+            if let Some(out) = args.get("trace-out") {
+                match std::fs::write(out, &text) {
+                    Ok(()) => println!(
+                        "shrunk counterexample ({} choices) written to {out}; \
+                         replay with `ubft check --replay {out}`",
+                        f.trace.choices.len()
+                    ),
+                    Err(e) => eprintln!("ubft check: cannot write {out}: {e}"),
+                }
+            } else {
+                println!(
+                    "shrunk counterexample ({} choices); save and replay with \
+                     `ubft check --replay <file>`:",
+                    f.trace.choices.len()
+                );
+                print!("{text}");
+            }
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_parse_round_trips() {
+        for d in [Driver::Dfs, Driver::Dpor, Driver::Random] {
+            assert_eq!(Driver::parse(d.label()), Some(d));
+        }
+        assert_eq!(Driver::parse("bfs"), None);
+    }
+
+    #[test]
+    fn default_schedule_of_base_scenario_is_clean() {
+        let scn = scenarios::find("base").unwrap();
+        let out = run_one(scn, None, Vec::new(), Mode::Default);
+        assert!(out.violation.is_none(), "default run violated: {:?}", out.violation);
+        assert!(out.decisions > 0, "mc runs should hit at least one choice point");
+        assert!(!out.truncated);
+    }
+
+    #[test]
+    fn replay_of_a_recorded_run_is_bit_for_bit() {
+        let scn = scenarios::find("base").unwrap();
+        let a = run_one(scn, None, Vec::new(), Mode::Random(crate::util::Rng::new(42)));
+        assert!(a.violation.is_none(), "random run violated: {:?}", a.violation);
+        let b = run_one(scn, None, a.record.clone(), Mode::Default);
+        assert_eq!(a.record, b.record, "replaying a full record must reproduce it");
+    }
+}

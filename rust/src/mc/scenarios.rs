@@ -1,0 +1,242 @@
+//! The checker's scenario registry: small, deterministic deployments
+//! that each aim the search at one slice of the protocol's state space.
+//!
+//! Scenarios deliberately stay tiny (a handful of requests, one or two
+//! groups): stateless exploration re-runs the whole deployment once per
+//! schedule, so per-run cost multiplies directly into schedules
+//! explored per unit budget. Configs follow `n = 2f + 1` (the paper's
+//! replica count), so the "at least four replicas" smoke target maps to
+//! `n = 5, f = 2` — 4 itself is not an expressible uBFT group size.
+
+use crate::apps::kv::{self, KvApp, KvWorkload, SeqCheckWorkload};
+use crate::apps::settle::{self, SettleApp, SettleWorkload};
+use crate::config::Config;
+use crate::deploy::{Deployment, FaultPlan};
+use crate::shard::HashPartitioner;
+use crate::smr::ReadMode;
+use crate::{Nanos, MICRO, MILLI, SECOND};
+
+use super::chooser::FaultBudget;
+
+/// One model-checking scenario: a deployment builder plus the fault
+/// budget and completion deadline the runner enforces around it.
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// Faults the chooser may inject per schedule (beyond whatever the
+    /// deployment's own [`FaultPlan`] stages deterministically).
+    pub faults: FaultBudget,
+    /// Virtual-time completion deadline: a schedule whose surviving
+    /// clients are not all done by then violates liveness.
+    pub deadline: Nanos,
+    build: fn() -> Deployment,
+}
+
+impl Scenario {
+    /// Instantiate the deployment in checker mode, optionally with a
+    /// mutation re-installing a known-fixed bug
+    /// ([`crate::config::Config::mc_mutation`]).
+    pub fn deployment(&self, mutation: Option<&str>) -> Deployment {
+        let mut d = (self.build)().model_check();
+        if let Some(m) = mutation {
+            d = d.mutation(m);
+        }
+        d
+    }
+}
+
+/// Single group, `n = 5` (f = 2), two sequential read-your-writes
+/// clients on the linearizable read lane. The bread-and-butter DFS
+/// target: every interleaving of five replicas' deliveries and the two
+/// clients' request streams, plus a sprinkle of droppable messages.
+fn base() -> Deployment {
+    let mut cfg = Config::default();
+    cfg.n = 5;
+    cfg.f = 2;
+    Deployment::new(cfg)
+        .app(|| Box::new(KvApp::new()))
+        .clients(2, |i| Box::new(SeqCheckWorkload::new(i)))
+        .requests(8)
+        .pipeline(1)
+        .reads(ReadMode::Linearizable)
+}
+
+/// Two uBFT groups behind the hash partitioner running the cross-shard
+/// settlement app — every schedule exercises 2PC prepares, votes,
+/// commits and the per-group read/write lanes concurrently.
+fn sharded_settle() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(SettleApp::new()))
+        .shards(2, HashPartitioner)
+        .clients(2, |i| Box::new(SettleWorkload::new(i, 2, 0.5)))
+        .requests(10)
+        .pipeline(2)
+        .batch(4, 64 * 1024)
+        .tx_timeout(2 * MILLI)
+}
+
+/// Replica 0 replaced by a CTBcast equivocator telling replica 1 one
+/// story and replica 2 another. Under the real protocol the conflict
+/// check neutralizes it; under `skip-equivocation-check` the receivers
+/// deliver diverging payloads and the `ctb-non-equivocation` /
+/// `agreement` invariants trip.
+fn byz_equivocation() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload::paper()))
+        .requests(20)
+        .pipeline(4)
+        .batch(4, 64 * 1024)
+        .faults(FaultPlan::equivocate(
+            0,
+            vec![1],
+            vec![2],
+            b"story a".to_vec(),
+            b"story b".to_vec(),
+        ))
+}
+
+/// Replica 2 replaced by a stale-read colluder that answers every lane
+/// read with `[ST_MISS]` while claiming maximal freshness. Harmless
+/// under the f+1-vouched read index; under `stale-read-lane` (the
+/// pre-read-index hole) a schedule where the other honest replica lags
+/// behind the session's writes completes a GET from stale replies and
+/// the sequential checker reports a `read-lane` mismatch. Drop budget
+/// helps the checker manufacture that lag.
+fn byz_stale_read() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(SeqCheckWorkload::new(0)))
+        .requests(12)
+        .pipeline(1)
+        .reads(ReadMode::Linearizable)
+        .faults(FaultPlan::stale_reads(2, vec![kv::ST_MISS]))
+}
+
+/// Replica 1 replaced by a forged-slot colluder: consensus-correct, but
+/// it answers lane reads with a forged consensus `Response` claiming an
+/// astronomically high slot. The all-miss GET mix makes its payload
+/// match honest replies, so under `forged-slot-wedge` the first
+/// completed read pins the client's write bound at an unreachable index
+/// and every later linearizable read wedges — a `liveness` violation at
+/// the deadline.
+fn byz_forged_slot() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .client(Box::new(KvWorkload { keys: 16, get_ratio: 0.5, hit_ratio: 0.0 }))
+        .requests(12)
+        .pipeline(1)
+        .reads(ReadMode::Linearizable)
+        .faults(FaultPlan::forged_slot_reads(1, vec![kv::ST_MISS]))
+}
+
+/// The known coordinator-crash-mid-2PC gap: the 2PC coordinator lives
+/// in the *client* (see [`crate::shard::Coordinator`]), and participant
+/// locks release only through coordinator-sent `Commit`/`Abort` — there
+/// is no participant-side lease. Crashing client 0 mid-traffic pins the
+/// current behavior: keys locked by its in-flight transactions stay
+/// locked forever (conflicting plain ops get `TX_LOCKED`, conflicting
+/// transactions vote abort), while the surviving client must still
+/// complete every transaction and settlement atomicity must hold at
+/// quiescence. The liveness bound this implies is documented in
+/// README.md (Model checking).
+///
+/// The load is shaped so the crash always lands mid-transaction: every
+/// post-funding request is a cross-shard settle, the four-deep pipeline
+/// keeps several 2PC rounds in flight at once (they contend on the
+/// single book key, so completions immediately issue fresh prepares),
+/// and 40 requests per client put quiescence far past the 150 µs crash.
+fn coordinator_crash_2pc() -> Deployment {
+    let cfg = Config::default();
+    let first_client = 2 * cfg.n; // two shard groups of n replicas, then clients
+    Deployment::new(cfg)
+        .app(|| Box::new(SettleApp::new()))
+        .shards(2, |key: &[u8], _shards: usize| -> usize {
+            // Book on shard 0, accounts (and scratch keys) on shard 1:
+            // every settlement is a genuine cross-shard transaction.
+            if key.first() == Some(&settle::SUB_BOOK) {
+                0
+            } else {
+                1
+            }
+        })
+        .clients(2, |i| Box::new(SettleWorkload::new(i, 2, 1.0)))
+        .requests(40)
+        .pipeline(4)
+        .tx_timeout(2 * MILLI)
+        .faults(FaultPlan::crash(first_client, 150 * MICRO))
+}
+
+/// Every scenario, in documentation order.
+pub const ALL: &[Scenario] = &[
+    Scenario {
+        name: "base",
+        about: "1 group, n=5: linearizable read lane under two sequential checkers",
+        faults: FaultBudget { drops: 2, crashes: 1, tears: 1 },
+        deadline: 60 * SECOND,
+        build: base,
+    },
+    Scenario {
+        name: "sharded-settle",
+        about: "2 groups, cross-shard 2PC settlement atomicity",
+        faults: FaultBudget { drops: 2, crashes: 1, tears: 1 },
+        deadline: 120 * SECOND,
+        build: sharded_settle,
+    },
+    Scenario {
+        name: "byz-equivocation",
+        about: "CTBcast equivocator vs the conflicting-register check",
+        faults: FaultBudget::NONE,
+        deadline: 60 * SECOND,
+        build: byz_equivocation,
+    },
+    Scenario {
+        name: "byz-stale-read",
+        about: "stale-read colluder vs the f+1-vouched read index",
+        faults: FaultBudget { drops: 2, crashes: 0, tears: 0 },
+        deadline: 60 * SECOND,
+        build: byz_stale_read,
+    },
+    Scenario {
+        name: "byz-forged-slot",
+        about: "forged-slot colluder vs the read-lane write-bound guard",
+        faults: FaultBudget::NONE,
+        deadline: 5 * SECOND,
+        build: byz_forged_slot,
+    },
+    Scenario {
+        name: "coordinator-crash-2pc",
+        about: "client coordinator crash mid-2PC: locks leak, survivors stay live",
+        faults: FaultBudget { drops: 2, crashes: 0, tears: 0 },
+        deadline: 120 * SECOND,
+        build: coordinator_crash_2pc,
+    },
+];
+
+pub fn find(name: &str) -> Option<&'static Scenario> {
+    ALL.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scenario_builds_a_valid_deployment() {
+        for s in ALL {
+            let mut cluster = s
+                .deployment(None)
+                .build()
+                .unwrap_or_else(|e| panic!("scenario {} invalid: {e}", s.name));
+            assert!(cluster.config().mc, "{}: model_check() must set cfg.mc", s.name);
+            // One step sanity-checks the wiring without running the world.
+            let _ = cluster.step();
+        }
+    }
+
+    #[test]
+    fn find_resolves_names() {
+        assert!(find("base").is_some());
+        assert!(find("no-such-scenario").is_none());
+    }
+}

@@ -1,0 +1,156 @@
+//! Counterexample traces: a violating schedule serialized as text,
+//! replayable bit-for-bit with `ubft check --replay <file>`.
+//!
+//! Format (`v1`):
+//!
+//! ```text
+//! # ubft-check trace v1
+//! scenario = byz-equivocation
+//! mutation = skip-equivocation-check
+//! violation = ctb-non-equivocation
+//! pick 2/5 keys=0,1,1,3,4
+//! drop 1/2
+//! crash 0/2
+//! tear 3/4
+//! ```
+//!
+//! Header lines are `key = value`; each following line is one recorded
+//! choice, `<kind> <picked>/<n>` with an optional `keys=` annotation
+//! (informational — replay only consumes `picked`). Unknown header keys
+//! are ignored, so the format can grow.
+
+use super::chooser::{Choice, ChoiceKind};
+
+/// A parsed (or to-be-written) counterexample trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    pub scenario: String,
+    /// The mutation the schedule ran under, if any — replay must
+    /// re-install it to reproduce the violation.
+    pub mutation: Option<String>,
+    /// The invariant the recorded run violated (informational).
+    pub violation: Option<String>,
+    pub choices: Vec<Choice>,
+}
+
+const MAGIC: &str = "# ubft-check trace v1";
+
+impl Trace {
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(MAGIC);
+        out.push('\n');
+        out.push_str(&format!("scenario = {}\n", self.scenario));
+        if let Some(m) = &self.mutation {
+            out.push_str(&format!("mutation = {m}\n"));
+        }
+        if let Some(v) = &self.violation {
+            out.push_str(&format!("violation = {v}\n"));
+        }
+        for c in &self.choices {
+            out.push_str(&format!("{} {}/{}", c.kind.label(), c.picked, c.n));
+            if !c.keys.is_empty() {
+                let keys: Vec<String> = c.keys.iter().map(|k| k.to_string()).collect();
+                out.push_str(&format!(" keys={}", keys.join(",")));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(l) if l.trim() == MAGIC => {}
+            other => return Err(format!("not a ubft-check trace (first line: {other:?})")),
+        }
+        let mut t = Trace {
+            scenario: String::new(),
+            mutation: None,
+            violation: None,
+            choices: Vec::new(),
+        };
+        for (lineno, raw) in lines.enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                if !k.trim().contains(' ') {
+                    match k.trim() {
+                        "scenario" => t.scenario = v.trim().to_string(),
+                        "mutation" => t.mutation = Some(v.trim().to_string()),
+                        "violation" => t.violation = Some(v.trim().to_string()),
+                        _ => {} // forward compatibility
+                    }
+                    continue;
+                }
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts
+                .next()
+                .and_then(ChoiceKind::from_label)
+                .ok_or_else(|| format!("line {}: unknown choice kind in `{line}`", lineno + 2))?;
+            let frac = parts
+                .next()
+                .ok_or_else(|| format!("line {}: missing picked/n in `{line}`", lineno + 2))?;
+            let (p, n) = frac
+                .split_once('/')
+                .ok_or_else(|| format!("line {}: malformed `{frac}`", lineno + 2))?;
+            let picked: u32 =
+                p.parse().map_err(|e| format!("line {}: picked: {e}", lineno + 2))?;
+            let n: u32 = n.parse().map_err(|e| format!("line {}: n: {e}", lineno + 2))?;
+            let mut keys = Vec::new();
+            for extra in parts {
+                if let Some(list) = extra.strip_prefix("keys=") {
+                    for k in list.split(',').filter(|s| !s.is_empty()) {
+                        keys.push(k.parse().map_err(|e| {
+                            format!("line {}: keys: {e}", lineno + 2)
+                        })?);
+                    }
+                }
+            }
+            t.choices.push(Choice { kind, picked, n, keys });
+        }
+        if t.scenario.is_empty() {
+            return Err("trace missing `scenario = …` header".into());
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let t = Trace {
+            scenario: "base".into(),
+            mutation: Some("skip-equivocation-check".into()),
+            violation: Some("agreement".into()),
+            choices: vec![
+                Choice { kind: ChoiceKind::Pick, picked: 2, n: 5, keys: vec![0, 1, 1, 3, 4] },
+                Choice { kind: ChoiceKind::Drop, picked: 1, n: 2, keys: vec![] },
+                Choice { kind: ChoiceKind::Tear, picked: 3, n: 4, keys: vec![] },
+            ],
+        };
+        let parsed = Trace::parse(&t.to_text()).expect("round trip parses");
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Trace::parse("hello\n").is_err());
+        assert!(Trace::parse("# ubft-check trace v1\npick nonsense\n").is_err());
+        assert!(Trace::parse("# ubft-check trace v1\npick 1/2\n").is_err()); // no scenario
+    }
+
+    #[test]
+    fn ignores_unknown_headers_and_comments() {
+        let text = "# ubft-check trace v1\nscenario = base\nfuture-key = 7\n# note\n\npick 0/3\n";
+        let t = Trace::parse(text).expect("parses");
+        assert_eq!(t.scenario, "base");
+        assert_eq!(t.choices.len(), 1);
+    }
+}

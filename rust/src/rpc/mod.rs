@@ -232,6 +232,17 @@ pub struct Client {
     /// Workload requests issued so far. Distinct from `next_rid`:
     /// transaction sub-requests consume rids but are not user requests.
     issued_user: u64,
+    /// Mutation-testing hook (`Config::mc_mutation = stale-read-lane`;
+    /// `ubft check` self-validation ONLY): re-opens the pre-read-index
+    /// stale-read hole — linearizable reads stop demanding the session
+    /// write bound and skip the f+1-vouched freshness bar entirely.
+    mc_stale_read_lane: bool,
+    /// Mutation-testing hook (`Config::mc_mutation = forged-slot-wedge`;
+    /// `ubft check` self-validation ONLY): re-opens the forged-slot
+    /// wedge — read-lane completions advance the session write bound
+    /// from slot replies again, so a single forged `Response { slot }`
+    /// pins `written` at an unreachable index.
+    mc_forged_slot_wedge: bool,
     inflight: Vec<Outstanding>,
     stats: Arc<Mutex<ClientStats>>,
     samples: Arc<Mutex<Samples>>,
@@ -260,6 +271,8 @@ impl Client {
             router: None,
             coord: crate::shard::Coordinator::new(10 * crate::MILLI),
             issued_user: 0,
+            mc_stale_read_lane: false,
+            mc_forged_slot_wedge: false,
             inflight: Vec::new(),
             stats: Arc::new(Mutex::new(ClientStats::default())),
             samples: Arc::new(Mutex::new(Samples::new())),
@@ -314,6 +327,17 @@ impl Client {
     /// Included in the measured end-to-end latency, as in the paper.
     pub fn with_presend_charge(mut self, ns: Nanos) -> Client {
         self.presend_charge = ns;
+        self
+    }
+
+    /// Install a checker mutation ([`crate::config::Config::mc_mutation`]):
+    /// deliberately re-breaks one known-fixed client-side defense so
+    /// `ubft check` can prove it would have caught the bug. Names not
+    /// recognized by this client are inert here (they may hook other
+    /// layers). NEVER set outside checker self-validation.
+    pub fn with_mc_mutation(mut self, m: Option<String>) -> Client {
+        self.mc_stale_read_lane = m.as_deref() == Some("stale-read-lane");
+        self.mc_forged_slot_wedge = m.as_deref() == Some("forged-slot-wedge");
         self
     }
 
@@ -442,7 +466,10 @@ impl Client {
                 // Linearizable reads demand at least this session's own
                 // completed writes (on their home group) up front, so
                 // replicas behind them park instead of answering stale.
-                min_index: if read && self.read_mode == ReadMode::Linearizable {
+                min_index: if read
+                    && self.read_mode == ReadMode::Linearizable
+                    && !self.mc_stale_read_lane
+                {
                     self.written(group)
                 } else {
                     0
@@ -581,7 +608,9 @@ impl Client {
         // complete before f+1 replicas vouched a read index.
         let linearizable =
             self.read_mode == ReadMode::Linearizable && self.inflight[pos].read;
-        let index = if linearizable {
+        // `mc_stale_read_lane` re-opens the pre-PR-4 hole: no freshness
+        // bar, a read completes on any f+1 matching replies however stale.
+        let index = if linearizable && !self.mc_stale_read_lane {
             match self.read_index(&self.inflight[pos]) {
                 Some(i) => i,
                 None => return,
@@ -624,7 +653,9 @@ impl Client {
             // the matching payload could be the only slot contributor —
             // taking its slot would pin `written_upto` at an unreachable
             // index and wedge every later linearizable read.
-            if !o.read {
+            // `mc_forged_slot_wedge` re-opens the forged-slot wedge: the
+            // read-lane guard below is the defense under test.
+            if !o.read || self.mc_forged_slot_wedge {
                 if let Some(s) = slot_floor {
                     if let Some(w) = self.written.get_mut(o.group) {
                         *w = (*w).max(s.saturating_add(1));

@@ -63,6 +63,82 @@ pub enum TraceEv {
     Charge(Category, Nanos),
 }
 
+/// Coarse classification of an enabled event, exposed to a [`Scheduler`]
+/// (and rendered in model-checker traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvKind {
+    /// A network message delivery ([`Event::Recv`]).
+    Recv,
+    /// A timer firing ([`Event::Timer`]).
+    Timer,
+    /// A memory-operation completion surfacing at the requester.
+    MemDone,
+    /// An engine-internal memory-node event (read, write half, ack).
+    MemOp,
+}
+
+/// One member of the *enabled set*: an event whose virtual time equals the
+/// minimal time in the queue, described receiver-first so a scheduler can
+/// apply partial-order reduction — events with different `key`s touch
+/// disjoint state and commute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EnabledEv {
+    pub kind: EvKind,
+    /// Receiver identity: the destination actor for `Recv`/`Timer`/
+    /// `MemDone`, or `actor_count + mem_node` for `MemOp`s.
+    pub key: usize,
+    /// Sender, for `Recv` events (identifies droppable deliveries).
+    pub from: Option<NodeId>,
+}
+
+/// Scheduler seam for the stateless model checker ([`crate::mc`]).
+///
+/// With a scheduler installed ([`Sim::set_scheduler`]) the engine stops
+/// dequeuing strictly in `(time, seq)` insertion order: whenever more than
+/// one event is enabled at the minimal virtual time, [`Scheduler::pick`]
+/// chooses which dispatches first, and the fault hooks are consulted at
+/// every actual delivery / memory write so a checker can *inject* drops,
+/// crashes, and torn writes as explicit choice points instead of sampling
+/// them from the fault-plan RNG. A scheduler that always picks index 0 and
+/// injects nothing reproduces the default run bit-for-bit.
+pub trait Scheduler: Send {
+    /// Choose which of the enabled same-instant events dispatches next.
+    /// Called only when `evs.len() > 1`; out-of-range returns are clamped.
+    fn pick(&mut self, now: Nanos, evs: &[EnabledEv]) -> usize;
+    /// Fault injection: drop this message just before delivery?
+    fn drop_message(&mut self, _from: NodeId, _dst: NodeId) -> bool {
+        false
+    }
+    /// Fault injection: crash this node just before it processes an event?
+    fn crash_node(&mut self, _node: NodeId) -> bool {
+        false
+    }
+    /// Fault injection: tear this memory write? `words` is the number of
+    /// 8-byte words in the payload; returning `Some(w)` splits the write
+    /// at word `w` (clamped to `1..words`), exposing RDMA's 8-byte
+    /// atomicity to concurrent reads.
+    fn tear_write(&mut self, _mem_node: usize, _words: usize) -> Option<usize> {
+        None
+    }
+}
+
+fn describe(ev: &QEv, actor_count: usize) -> EnabledEv {
+    match ev {
+        QEv::Actor(dst, Event::Recv { from, .. }) => {
+            EnabledEv { kind: EvKind::Recv, key: *dst, from: Some(*from) }
+        }
+        QEv::Actor(dst, Event::Timer { .. }) => {
+            EnabledEv { kind: EvKind::Timer, key: *dst, from: None }
+        }
+        QEv::Actor(dst, _) => EnabledEv { kind: EvKind::MemDone, key: *dst, from: None },
+        QEv::MemRead { mem_node, .. }
+        | QEv::MemWriteApply { mem_node, .. }
+        | QEv::MemWriteAck { mem_node, .. } => {
+            EnabledEv { kind: EvKind::MemOp, key: actor_count + mem_node, from: None }
+        }
+    }
+}
+
 /// Aggregate run statistics.
 #[derive(Clone, Debug, Default)]
 pub struct SimStats {
@@ -121,6 +197,9 @@ struct Core {
     pub stats: SimStats,
     trace: Vec<(Nanos, NodeId, TraceEv)>,
     trace_enabled: bool,
+    /// Model-checker seam; `None` outside `ubft check`. Taken/restored
+    /// around each callback so the engine keeps `&mut` access to itself.
+    scheduler: Option<Box<dyn Scheduler>>,
 }
 
 impl Core {
@@ -159,6 +238,7 @@ impl Sim {
                 stats: SimStats::default(),
                 trace: Vec::new(),
                 trace_enabled: false,
+                scheduler: None,
             },
             cfg,
             actors: Vec::new(),
@@ -169,6 +249,14 @@ impl Sim {
     /// Install the fault plan (before `run`).
     pub fn set_faults(&mut self, f: FaultPlan) {
         self.core.faults = f;
+    }
+
+    /// Install a [`Scheduler`] (model checking). From now on every
+    /// same-instant enabled set is resolved by `pick`, and fault
+    /// injection is driven by the scheduler's hooks instead of the
+    /// fault-plan probabilities.
+    pub fn set_scheduler(&mut self, s: Box<dyn Scheduler>) {
+        self.core.scheduler = Some(s);
     }
 
     /// Enable Fig-9-style tracing (marks + charges).
@@ -186,6 +274,12 @@ impl Sim {
 
     pub fn now(&self) -> Nanos {
         self.core.now
+    }
+
+    /// Has `node` crashed (fault plan or scheduler-injected)? Nodes
+    /// outside the actor range report `false`.
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.core.crashed.get(node).copied().unwrap_or(false)
     }
 
     /// Register an actor; returns its node id (assigned densely from 0).
@@ -238,7 +332,7 @@ impl Sim {
     /// `until`. Returns the final virtual time.
     pub fn run_until(&mut self, until: Nanos) -> Nanos {
         self.start_all();
-        while let Some(Reverse(item)) = self.core.heap.pop() {
+        while let Some(item) = self.pop_next() {
             if item.at > until {
                 // put it back and stop
                 self.core.heap.push(Reverse(item));
@@ -254,10 +348,47 @@ impl Sim {
     /// returns its virtual time, or `None` when the queue is empty.
     pub fn step(&mut self) -> Option<Nanos> {
         self.start_all();
-        let Reverse(item) = self.core.heap.pop()?;
+        let item = self.pop_next()?;
         let at = item.at;
         self.dispatch(item);
         Some(at)
+    }
+
+    /// Pop the next event. With a scheduler installed, gather every event
+    /// at the minimal virtual time (the enabled set) and let the
+    /// scheduler pick which dispatches; unpicked events keep their
+    /// original `seq`, so a scheduler that always picks 0 reproduces the
+    /// default time-ordered run.
+    fn pop_next(&mut self) -> Option<QItem> {
+        let Reverse(first) = self.core.heap.pop()?;
+        if self.core.scheduler.is_none() {
+            return Some(first);
+        }
+        let at = first.at;
+        let mut batch = vec![first];
+        while let Some(Reverse(it)) = self.core.heap.pop() {
+            if it.at == at {
+                batch.push(it);
+            } else {
+                self.core.heap.push(Reverse(it));
+                break;
+            }
+        }
+        let picked = if batch.len() > 1 {
+            let evs: Vec<EnabledEv> =
+                batch.iter().map(|it| describe(&it.ev, self.actors.len())).collect();
+            let mut sched = self.core.scheduler.take().expect("checked above");
+            let i = sched.pick(at, &evs).min(batch.len() - 1);
+            self.core.scheduler = Some(sched);
+            i
+        } else {
+            0
+        };
+        let item = batch.remove(picked);
+        for it in batch {
+            self.core.heap.push(Reverse(it));
+        }
+        Some(item)
     }
 
     fn dispatch(&mut self, item: QItem) {
@@ -314,6 +445,26 @@ impl Sim {
             let when = self.core.busy_until[dst];
             self.core.push(when, QEv::Actor(dst, ev));
             return;
+        }
+        // Model-checker fault injection: consulted exactly once per
+        // *actual* dispatch (busy requeues return above).
+        if self.core.scheduler.is_some() {
+            let mut sched = self.core.scheduler.take().expect("checked above");
+            let crash = sched.crash_node(dst);
+            let dropped = !crash
+                && match &ev {
+                    Event::Recv { from, .. } => sched.drop_message(*from, dst),
+                    _ => false,
+                };
+            self.core.scheduler = Some(sched);
+            if crash {
+                self.core.crashed[dst] = true;
+                return;
+            }
+            if dropped {
+                self.core.stats.msgs_dropped += 1;
+                return;
+            }
         }
         let mut actor = self.actors[dst].take().expect("actor present");
         let mut env = EnvImpl { core: &mut self.core, me: dst, charged: 0, handler_start: at };
@@ -402,17 +553,27 @@ impl<'a> Env for EnvImpl<'a> {
         }
         let done = now + self.core.lat.rdma_write;
         let mid = now + self.core.lat.rdma_write / 2;
-        let torn = self.core.faults.torn_write_prob > 0.0
-            && bytes.len() > 8
-            && self.core.net_rng.chance(self.core.faults.torn_write_prob);
-        if torn {
+        let words = bytes.len() / 8;
+        let cut = if bytes.len() <= 8 {
+            None
+        } else if self.core.scheduler.is_some() {
+            // Model checking: torn writes are scheduler choices, not
+            // RNG samples.
+            let mut sched = self.core.scheduler.take().expect("checked above");
+            let c = sched.tear_write(mem_node, words);
+            self.core.scheduler = Some(sched);
+            c.map(|w| 8 * w.clamp(1, words.saturating_sub(1).max(1)))
+        } else if self.core.faults.torn_write_prob > 0.0
+            && self.core.net_rng.chance(self.core.faults.torn_write_prob)
+        {
+            Some(8 * self.core.net_rng.range(1, words.max(2)))
+        } else {
+            None
+        };
+        if let Some(cut) = cut {
             // The write lands in two 8-byte-aligned halves: RDMA only
             // guarantees 8-byte atomicity (§6.1). A READ landing between
             // the two applies observes a torn value.
-            let cut = {
-                let words = bytes.len() / 8;
-                8 * self.core.net_rng.range(1, words.max(2))
-            };
             let (a, b) = bytes.split_at(cut.min(bytes.len()));
             let (a, b) = (a.to_vec(), b.to_vec());
             let cut = a.len();

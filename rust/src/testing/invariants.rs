@@ -1,0 +1,282 @@
+//! Reusable invariant oracle over a [`Cluster`].
+//!
+//! Every check here is phrased as a pure observation of a deployment —
+//! no stepping, no mutation of protocol state — so the same oracle
+//! serves both the integration tests (assert once at the end of a run)
+//! and the model checker ([`crate::mc`]), which evaluates it after
+//! every scheduling step of every explored schedule.
+//!
+//! Two tiers:
+//!
+//! * **step-wise** invariants ([`stepwise`]) hold at *every* point of a
+//!   run: agreement on the applied sequence, CTBcast non-equivocation,
+//!   zero client-visible read-lane mismatches, and the Table-2 memory
+//!   bound. A violation at any instant is a bug.
+//! * **quiescent** invariants ([`quiescent`]) additionally hold once
+//!   the run settles: per-group convergence of `(applied, digest)` and
+//!   cross-shard settlement atomicity (no settled order without its
+//!   matching account debit).
+//!
+//! The cross-replica checks read the `mc_applied_log` / `mc_ctb_log`
+//! probes, which replicas record only under `Config::mc`; with the
+//! knob off those checks pass vacuously (the logs are empty).
+
+use std::collections::BTreeMap;
+
+use crate::apps::{kv, settle};
+use crate::crypto::Hash32;
+use crate::deploy::Cluster;
+use crate::harness::table2::prealloc_model;
+use crate::shard::TxService;
+use crate::NodeId;
+
+/// One observed invariant violation: which invariant, and a
+/// human-readable description precise enough to debug from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invariant `{}` violated: {}", self.invariant, self.detail)
+    }
+}
+
+fn violation(invariant: &'static str, detail: String) -> Violation {
+    Violation { invariant, detail }
+}
+
+/// Correct-replica ids of one consensus group (`group · n .. group · n + n`,
+/// minus Byzantine-replaced slots — those return `None` from
+/// [`Cluster::replica`] and are skipped by the callers below).
+fn group_members(cluster: &Cluster, group: usize) -> std::ops::Range<usize> {
+    let n = cluster.config().n;
+    group * n..(group + 1) * n
+}
+
+/// **Agreement.** For every consensus group and every slot recorded by
+/// at least two correct replicas, the applied-batch digests must be
+/// identical. Catches divergent execution orders and divergent batch
+/// contents (e.g. an equivocation that slipped past CTBcast). Crashed
+/// replicas simply stop recording — their prefix still participates.
+pub fn check_agreement(cluster: &mut Cluster) -> Result<(), Violation> {
+    for group in 0..cluster.shard_count() {
+        let mut per_slot: BTreeMap<u64, (NodeId, Hash32)> = BTreeMap::new();
+        for i in group_members(cluster, group) {
+            let Some(r) = cluster.replica(i) else { continue };
+            let log: Vec<(u64, Hash32)> = r.mc_applied_log().iter().copied().collect();
+            for (slot, digest) in log {
+                match per_slot.get(&slot) {
+                    None => {
+                        per_slot.insert(slot, (i, digest));
+                    }
+                    Some((first, d)) if *d != digest => {
+                        return Err(violation(
+                            "agreement",
+                            format!(
+                                "group {group} slot {slot}: replica {first} applied \
+                                 {} but replica {i} applied {}",
+                                d.short(),
+                                digest.short()
+                            ),
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// **CTBcast non-equivocation.** For every group, broadcaster and
+/// broadcast index `k`, every correct replica that delivered `(b, k)`
+/// must have delivered the same payload hash. This is the client-visible
+/// face of the paper's Alg-1 guarantee: an equivocating broadcaster may
+/// wedge, but two correct replicas never *deliver* conflicting copies.
+pub fn check_ctb_non_equivocation(cluster: &mut Cluster) -> Result<(), Violation> {
+    for group in 0..cluster.shard_count() {
+        let mut per_key: BTreeMap<(NodeId, u64), (NodeId, Hash32)> = BTreeMap::new();
+        for i in group_members(cluster, group) {
+            let Some(r) = cluster.replica(i) else { continue };
+            let log: Vec<(NodeId, u64, Hash32)> = r.mc_ctb_log().iter().copied().collect();
+            for (bcaster, k, h) in log {
+                match per_key.get(&(bcaster, k)) {
+                    None => {
+                        per_key.insert((bcaster, k), (i, h));
+                    }
+                    Some((first, h0)) if *h0 != h => {
+                        return Err(violation(
+                            "ctb-non-equivocation",
+                            format!(
+                                "group {group}: broadcaster {bcaster} k={k} delivered \
+                                 as {} at replica {first} but {} at replica {i}",
+                                h0.short(),
+                                h.short()
+                            ),
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// **Read-lane session linearizability (client-visible).** Workloads
+/// that check their own responses (e.g. a sequential read-your-writes
+/// checker) report mismatches through the client stats; any mismatch is
+/// a linearizability violation surfaced at the session boundary.
+pub fn check_read_lane(cluster: &Cluster) -> Result<(), Violation> {
+    let m = cluster.mismatches();
+    if m != 0 {
+        return Err(violation(
+            "read-lane",
+            format!("{m} client response check(s) failed (stale or wrong value served)"),
+        ));
+    }
+    Ok(())
+}
+
+/// **Table-2 memory bound.** Every correct replica's live protocol
+/// memory must stay within the paper's preallocation model for its
+/// config — the bounded-memory claim of §7 (Table 2). Lazily-allocating
+/// implementations sit far below the bound; crossing it means some
+/// structure (parked reads, waiting PREPAREs, spec stack, pool) grew
+/// past what a production deployment would have pinned.
+pub fn check_memory_bound(cluster: &mut Cluster) -> Result<(), Violation> {
+    let bound = prealloc_model(cluster.config());
+    let total = cluster.config().n * cluster.shard_count();
+    for i in 0..total {
+        let Some(p) = cluster.probe(i) else { continue };
+        if p.mem_bytes > bound {
+            return Err(violation(
+                "table2-memory-bound",
+                format!(
+                    "replica {i} holds {} protocol bytes, above the preallocation \
+                     model's {} for this config",
+                    p.mem_bytes, bound
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// **Per-group convergence** (quiescence only): all correct,
+/// non-crashed replicas of each group hold identical
+/// `(applied_upto, app_digest)`. Crashed replicas are excluded — their
+/// state is a legitimate stale prefix.
+pub fn check_convergence(cluster: &mut Cluster) -> Result<(), Violation> {
+    for group in 0..cluster.shard_count() {
+        let mut first: Option<(NodeId, u64, Hash32)> = None;
+        for i in group_members(cluster, group) {
+            if cluster.is_crashed(i) {
+                continue;
+            }
+            let Some(p) = cluster.probe(i) else { continue };
+            match first {
+                None => first = Some((i, p.applied_upto, p.app_digest)),
+                Some((j, a, d)) if (a, d) != (p.applied_upto, p.app_digest) => {
+                    return Err(violation(
+                        "convergence",
+                        format!(
+                            "group {group}: replica {j} settled at ({a}, {}) but \
+                             replica {i} at ({}, {})",
+                            d.short(),
+                            p.applied_upto,
+                            p.app_digest.short()
+                        ),
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Audit `(Σ settled orders, Σ account debits)` across the given
+/// replicas, straight out of the participant snapshots. Returns `None`
+/// when a snapshot is not a 2PC-participant settle snapshot (the
+/// deployment runs some other app) — callers treat that as
+/// not-applicable, not as a pass.
+pub fn audit_settlement(cluster: &mut Cluster, replicas: &[NodeId]) -> Option<(u64, i64)> {
+    let (mut settled_total, mut debited_total) = (0u64, 0i64);
+    for &i in replicas {
+        let snap = cluster.replica(i)?.service().snapshot();
+        let app = TxService::inner_snapshot(&snap)?;
+        let (settled, _book, kvsnap) = settle::decode_snapshot(&app)?;
+        let (_version, map) = kv::decode_snapshot(&kvsnap)?;
+        settled_total += settled;
+        for (k, v) in &map {
+            if k.starts_with(b"acct") {
+                let bal = i64::from_le_bytes(v.as_slice().try_into().ok()?);
+                debited_total += settle::FUND - bal;
+            }
+        }
+    }
+    Some((settled_total, debited_total))
+}
+
+/// **Cross-shard settlement atomicity** (quiescence only): summing one
+/// non-crashed replica per shard group, `settled × SETTLE_AMOUNT` must
+/// equal the total account debit — no settled order without its debit,
+/// no debit without its settled order (2PC atomicity). Passes vacuously
+/// for deployments not running the settle app.
+pub fn check_settlement_atomicity(cluster: &mut Cluster) -> Result<(), Violation> {
+    let mut sample = Vec::new();
+    for group in 0..cluster.shard_count() {
+        let member = group_members(cluster, group)
+            .find(|&i| !cluster.is_crashed(i) && cluster.replica(i).is_some());
+        match member {
+            Some(i) => sample.push(i),
+            None => return Ok(()), // a whole group of byz/crashed replicas: nothing to audit
+        }
+    }
+    let Some((settled, debited)) = audit_settlement(cluster, &sample) else {
+        return Ok(()); // not a settle deployment
+    };
+    if settled as i64 * settle::SETTLE_AMOUNT != debited {
+        return Err(violation(
+            "settlement-atomicity",
+            format!(
+                "{settled} settled orders imply {} debited, but accounts show {debited} \
+                 (sampled replicas {sample:?})",
+                settled as i64 * settle::SETTLE_AMOUNT
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// All invariants that must hold at *every* point of a run. Returns the
+/// first violation found.
+pub fn stepwise(cluster: &mut Cluster) -> Result<(), Violation> {
+    check_agreement(cluster)?;
+    check_ctb_non_equivocation(cluster)?;
+    check_read_lane(cluster)?;
+    check_memory_bound(cluster)?;
+    Ok(())
+}
+
+/// All invariants, including the ones that only hold once the run has
+/// settled (convergence, settlement atomicity).
+pub fn quiescent(cluster: &mut Cluster) -> Result<(), Violation> {
+    stepwise(cluster)?;
+    check_convergence(cluster)?;
+    check_settlement_atomicity(cluster)?;
+    Ok(())
+}
+
+/// Test-facing helper: panic with the violation message if any
+/// quiescent invariant fails. Integration tests call this once at the
+/// end of a run instead of re-deriving per-test assertions.
+pub fn assert_safe(cluster: &mut Cluster) {
+    if let Err(v) = quiescent(cluster) {
+        panic!("{v}");
+    }
+}

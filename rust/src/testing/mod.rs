@@ -15,6 +15,8 @@
 
 use crate::util::Rng;
 
+pub mod invariants;
+
 /// A seeded generator handed to property closures.
 pub struct Gen {
     rng: Rng,

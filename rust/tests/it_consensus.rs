@@ -6,6 +6,7 @@
 use ubft::config::Config;
 use ubft::deploy::{Cluster, Deployment, FaultPlan};
 use ubft::rpc::BytesWorkload;
+use ubft::testing::invariants;
 
 /// Build a 3-replica + 1-client deployment.
 fn deploy(cfg: Config, requests: usize, faults: FaultPlan) -> Cluster {
@@ -62,7 +63,9 @@ fn replicas_apply_same_sequence() {
     cluster.run_until(ubft::SECOND);
     assert_eq!(cluster.samples().len(), 120);
     assert_eq!(cluster.digests().len(), n);
-    assert!(cluster.converged(), "replicas diverged: {:?}", cluster.digests());
+    // The shared oracle checks convergence plus the rest of the safety
+    // tier (read lane, Table-2 memory bound) in one place.
+    invariants::assert_safe(&mut cluster);
 }
 
 #[test]
@@ -166,7 +169,7 @@ fn pooled_run_identical_to_unpooled() {
         }
         let mut cluster = d.build().expect("valid deployment");
         cluster.run_until(2 * ubft::SECOND);
-        assert!(cluster.converged(), "replicas diverged: {:?}", cluster.digests());
+        invariants::assert_safe(&mut cluster);
         let hits = cluster.replica(0).map(|r| r.stats.pool.hits).unwrap_or(0);
         if pooled {
             assert!(hits > 0, "pool never hit on the hot path");

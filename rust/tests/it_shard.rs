@@ -2,14 +2,19 @@
 //! linearizability across shards, and cross-shard two-phase-commit
 //! atomicity — audited straight out of replica snapshots, including
 //! under a participant-shard leader crash.
+//!
+//! End-of-run safety (mismatches, per-shard convergence, settlement
+//! atomicity) is asserted through the shared invariant oracle
+//! (`ubft::testing::invariants`) — the same checks the model checker
+//! (`ubft check`) evaluates after every scheduling step.
 
-use ubft::apps::kv::{self, KvApp};
+use ubft::apps::kv::{KvApp, SeqCheckWorkload};
 use ubft::apps::settle::{self, SettleApp, SettleWorkload};
 use ubft::config::Config;
-use ubft::deploy::{Cluster, Deployment, FaultPlan};
-use ubft::rpc::Workload;
-use ubft::shard::{HashPartitioner, Partitioner, TxService};
-use ubft::smr::{Operation, ReadMode};
+use ubft::deploy::{Deployment, FaultPlan};
+use ubft::shard::{HashPartitioner, Partitioner};
+use ubft::smr::ReadMode;
+use ubft::testing::invariants;
 use ubft::util::Rng;
 
 #[test]
@@ -35,63 +40,16 @@ fn hash_partitioner_is_stable_and_total() {
     assert_eq!(p.shard_of(&[], 4), p.shard_of(&[], 4), "empty key is stable too");
 }
 
-/// Sequential per-key checker: SET a rotating key, then GET it and
-/// demand exactly the value just written. With pipeline 1 the GET
-/// issues only after its SET completed, so any stale read — e.g. a
-/// shard serving a lane read below its session write bound — fails the
-/// response check and shows up in `Cluster::mismatches`.
-struct SeqCheck {
-    client: usize,
-    step: u64,
-    expect: Option<Vec<u8>>,
-}
-
-impl SeqCheck {
-    fn key(&self, round: u64) -> Vec<u8> {
-        format!("c{}-key-{}", self.client, round % 16).into_bytes()
-    }
-}
-
-impl Workload for SeqCheck {
-    fn next_request(&mut self, _rng: &mut Rng) -> Vec<u8> {
-        let round = self.step / 2;
-        let key = self.key(round);
-        let val = round.to_le_bytes().to_vec();
-        let req = if self.step % 2 == 0 {
-            self.expect = None;
-            kv::set(&key, &val)
-        } else {
-            self.expect = Some(val);
-            kv::get(&key)
-        };
-        self.step += 1;
-        req
-    }
-
-    fn check_response(&mut self, req: &[u8], resp: &[u8]) -> bool {
-        if req.first() == Some(&kv::OP_GET) {
-            let Some(v) = self.expect.take() else { return false };
-            resp.first() == Some(&kv::ST_OK) && resp.get(1..) == Some(&v[..])
-        } else {
-            resp == [kv::ST_OK]
-        }
-    }
-
-    fn classify(&self, req: &[u8]) -> Operation {
-        kv::classify_op(req)
-    }
-
-    fn name(&self) -> &'static str {
-        "seqcheck"
-    }
-}
-
 #[test]
 fn reads_stay_per_key_linearizable_across_four_shards() {
+    // `SeqCheckWorkload` (apps::kv) SETs a rotating key then GETs it,
+    // demanding exactly the value just written; with pipeline 1 any
+    // stale lane read fails the response check and trips the oracle's
+    // read-lane invariant.
     let mut cluster = Deployment::new(Config::default())
         .app(|| Box::new(KvApp::new()))
         .shards(4, HashPartitioner)
-        .clients(2, |i| Box::new(SeqCheck { client: i, step: 0, expect: None }))
+        .clients(2, |i| Box::new(SeqCheckWorkload::new(i)))
         .requests(160)
         .pipeline(1)
         .reads(ReadMode::Linearizable)
@@ -99,33 +57,7 @@ fn reads_stay_per_key_linearizable_across_four_shards() {
         .expect("sharded linearizable deployment is valid");
     assert!(cluster.run_to_completion(), "sharded linearizable run starved");
     assert_eq!(cluster.completed(), 320);
-    assert_eq!(cluster.mismatches(), 0, "a GET observed a stale value");
-    assert!(cluster.converged());
-}
-
-/// Audit `(Σ settled orders, Σ account debits)` across one replica per
-/// shard, straight out of the participant snapshots. The settlement
-/// invariant — no settled order without its matching debit and vice
-/// versa — is `settled × SETTLE_AMOUNT == Σ (FUND − balance)`: account
-/// keys exist only once funded, and only committed transactions debit.
-fn audit_settlement(cluster: &mut Cluster, replicas: &[usize]) -> (u64, i64) {
-    let (mut settled_total, mut debited_total) = (0u64, 0i64);
-    for &i in replicas {
-        let snap = cluster.replica(i).expect("replica probes").service().snapshot();
-        let app = TxService::inner_snapshot(&snap).expect("participant snapshot splits");
-        let (settled, _book, kvsnap) =
-            settle::decode_snapshot(&app).expect("settle snapshot decodes");
-        let (_version, map) = kv::decode_snapshot(&kvsnap).expect("kv snapshot decodes");
-        settled_total += settled;
-        for (k, v) in &map {
-            if k.starts_with(b"acct") {
-                let bal =
-                    i64::from_le_bytes(v.as_slice().try_into().expect("8-byte account balance"));
-                debited_total += settle::FUND - bal;
-            }
-        }
-    }
-    (settled_total, debited_total)
+    invariants::assert_safe(&mut cluster);
 }
 
 #[test]
@@ -141,8 +73,9 @@ fn cross_shard_settlement_commits_atomically() {
         .expect("settlement deployment is valid");
     assert!(cluster.run_to_completion(), "settlement run starved");
     assert_eq!(cluster.completed(), 480);
-    assert_eq!(cluster.mismatches(), 0);
-    assert!(cluster.converged(), "a shard's replicas diverged");
+    // Safety: convergence per shard + the settlement-atomicity audit
+    // (`settled × SETTLE_AMOUNT == Σ debits`, sampled per shard).
+    invariants::assert_safe(&mut cluster);
     let (mut commits, mut aborts) = (0u64, 0u64);
     for c in cluster.clients() {
         let st = c.stats();
@@ -150,16 +83,14 @@ fn cross_shard_settlement_commits_atomically() {
         aborts += st.tx_aborts;
     }
     assert!(commits >= 1, "no cross-shard settlement committed");
+    // Beyond atomicity: every commit settles exactly one order, and
+    // aborted transactions leave no trace in either shard.
     let n = cluster.config().n;
-    let (settled, debited) = audit_settlement(&mut cluster, &[0, n]);
-    // Every commit settles exactly one order; aborted transactions
-    // leave no trace in either shard.
-    assert_eq!(settled, commits, "settled counter diverged from committed txs");
+    let (settled, _debited) = invariants::audit_settlement(&mut cluster, &[0, n])
+        .expect("settle deployment audits");
     assert_eq!(
-        settled as i64 * settle::SETTLE_AMOUNT,
-        debited,
-        "partial commit: {settled} settled orders vs {debited} debited \
-         ({commits} commits, {aborts} aborts)"
+        settled, commits,
+        "settled counter diverged from committed txs ({commits} commits, {aborts} aborts)"
     );
 }
 
@@ -198,12 +129,10 @@ fn participant_leader_crash_aborts_cleanly_without_partial_commit() {
         160,
         "requests must complete once the account shard recovers"
     );
-    assert_eq!(cluster.mismatches(), 0);
-    // The account shard's survivors must agree with each other (the
-    // crashed leader at global id `n` is excluded).
-    let a = cluster.probe(n + 1).map(|p| (p.applied_upto, p.app_digest)).unwrap();
-    let b = cluster.probe(n + 2).map(|p| (p.applied_upto, p.app_digest)).unwrap();
-    assert_eq!(a, b, "account-shard survivors diverged after the view change");
+    // The oracle's convergence check skips the crashed leader (global
+    // id `n`) and demands the account shard's survivors agree; its
+    // settlement audit samples the first live replica per shard.
+    invariants::assert_safe(&mut cluster);
     let (mut commits, mut aborts) = (0u64, 0u64);
     for c in cluster.clients() {
         let st = c.stats();
@@ -214,12 +143,10 @@ fn participant_leader_crash_aborts_cleanly_without_partial_commit() {
     assert!(commits >= 1, "no settlement committed after the view change");
     // Audit the surviving account-shard replica (the leader at global
     // id `n` is crashed) against the book shard.
-    let (settled, debited) = audit_settlement(&mut cluster, &[0, n + 1]);
-    assert_eq!(settled, commits, "settled counter diverged from committed txs");
+    let (settled, _debited) = invariants::audit_settlement(&mut cluster, &[0, n + 1])
+        .expect("settle deployment audits");
     assert_eq!(
-        settled as i64 * settle::SETTLE_AMOUNT,
-        debited,
-        "partial commit under leader crash: {settled} settled orders vs {debited} \
-         debited ({commits} commits, {aborts} aborts)"
+        settled, commits,
+        "settled counter diverged from committed txs ({commits} commits, {aborts} aborts)"
     );
 }

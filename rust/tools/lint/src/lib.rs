@@ -17,7 +17,9 @@
 //! See `rust/tools/lint/README.md` for the full catalog and the waiver
 //! syntax (`// ubft-lint: allow(<lint>) -- <justification>`).
 
+pub mod fix;
 pub mod lints;
+pub mod python;
 pub mod scan;
 
 use lints::{Ctx, InventoryEntry, Violation};
@@ -25,6 +27,10 @@ use std::path::{Path, PathBuf};
 
 /// Directories (repo-relative) the tree walk lints.
 const SCAN_DIRS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "rust/tools", "examples"];
+
+/// Python directories scanned by the `wall-clock-in-protocol` lint
+/// ([`python::lint_python_source`]).
+const PY_SCAN_DIRS: &[&str] = &["python"];
 
 /// The inventory file the `unsafe-audit` lint maintains, repo-relative.
 pub const INVENTORY_PATH: &str = "UNSAFE_INVENTORY.md";
@@ -53,22 +59,16 @@ pub fn lint_source(rel: &str, src: &str, ctx: &mut Ctx) {
 
 /// Lint the repo tree under `root`.
 pub fn run(root: &Path) -> Result<Report, String> {
-    let mut files = Vec::new();
-    for dir in SCAN_DIRS {
-        collect_rs(&root.join(dir), &mut files);
-    }
-    files.sort();
+    let (rs_files, py_files) = collect_tree(root);
     let mut ctx = Ctx::new();
-    let count = files.len();
-    for path in files {
-        let rel = path
-            .strip_prefix(root)
-            .map_err(|e| e.to_string())?
-            .to_string_lossy()
-            .replace('\\', "/");
-        let src = std::fs::read_to_string(&path)
-            .map_err(|e| format!("{}: {e}", path.display()))?;
+    let count = rs_files.len() + py_files.len();
+    for path in rs_files {
+        let (rel, src) = load(root, &path)?;
         lint_source(&rel, &src, &mut ctx);
+    }
+    for path in py_files {
+        let (rel, src) = load(root, &path)?;
+        python::lint_python_source(&rel, &src, &mut ctx);
     }
     ctx.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
     ctx.inventory.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
@@ -80,21 +80,69 @@ pub fn run(root: &Path) -> Result<Report, String> {
     })
 }
 
-fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+/// All lintable files under `root`, sorted: (.rs files, .py files).
+fn collect_tree(root: &Path) -> (Vec<PathBuf>, Vec<PathBuf>) {
+    let mut rs_files = Vec::new();
+    for dir in SCAN_DIRS {
+        collect_ext(&root.join(dir), "rs", &mut rs_files);
+    }
+    rs_files.sort();
+    let mut py_files = Vec::new();
+    for dir in PY_SCAN_DIRS {
+        collect_ext(&root.join(dir), "py", &mut py_files);
+    }
+    py_files.sort();
+    (rs_files, py_files)
+}
+
+fn load(root: &Path, path: &Path) -> Result<(String, String), String> {
+    let rel = path
+        .strip_prefix(root)
+        .map_err(|e| e.to_string())?
+        .to_string_lossy()
+        .replace('\\', "/");
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok((rel, src))
+}
+
+fn collect_ext(dir: &Path, ext: &str, out: &mut Vec<PathBuf>) {
     let Ok(entries) = std::fs::read_dir(dir) else {
         return;
     };
     for e in entries.flatten() {
         let p = e.path();
         if p.is_dir() {
-            if p.file_name().is_some_and(|n| n == "target") {
+            if p.file_name().is_some_and(|n| n == "target" || n == "__pycache__") {
                 continue;
             }
-            collect_rs(&p, out);
-        } else if p.extension().is_some_and(|x| x == "rs") {
+            collect_ext(&p, ext, out);
+        } else if p.extension().is_some_and(|x| x == ext) {
             out.push(p);
         }
     }
+}
+
+/// Apply [`fix::fix_source`] across the tree, writing changed files back.
+/// Returns (files changed, rewrites, scaffolds).
+pub fn run_fix(root: &Path) -> Result<(usize, usize, usize), String> {
+    let (rs_files, _py) = collect_tree(root);
+    let (mut changed, mut rewrites, mut scaffolds) = (0, 0, 0);
+    for path in rs_files {
+        let (rel, src) = load(root, &path)?;
+        if let Some(out) = fix::fix_source(&rel, &src) {
+            std::fs::write(&path, &out.fixed)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            println!(
+                "ubft-lint: fixed {rel} ({} rewrites, {} waiver scaffolds)",
+                out.rewrites, out.scaffolds
+            );
+            changed += 1;
+            rewrites += out.rewrites;
+            scaffolds += out.scaffolds;
+        }
+    }
+    Ok((changed, rewrites, scaffolds))
 }
 
 /// Render the machine-readable `UNSAFE_INVENTORY.md`.
@@ -140,6 +188,7 @@ pub fn find_root(start: &Path) -> Option<PathBuf> {
 pub fn cli_main(args: &[String]) -> i32 {
     let mut root_arg: Option<PathBuf> = None;
     let mut write_inventory = false;
+    let mut apply_fixes = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -152,11 +201,14 @@ pub fn cli_main(args: &[String]) -> i32 {
                 root_arg = Some(PathBuf::from(p));
             }
             "--write-inventory" => write_inventory = true,
+            "--fix" => apply_fixes = true,
             "--help" | "-h" => {
                 println!(
-                    "ubft-lint [--root PATH] [--write-inventory]\n\
+                    "ubft-lint [--root PATH] [--write-inventory] [--fix]\n\
                      Repo-specific lints (see rust/tools/lint/README.md).\n\
-                     --write-inventory  rewrite UNSAFE_INVENTORY.md from the tree"
+                     --write-inventory  rewrite UNSAFE_INVENTORY.md from the tree\n\
+                     --fix              apply HashMap/HashSet -> BTree rewrites and\n\
+                                        insert FIXME waiver scaffolds, then re-lint"
                 );
                 return 0;
             }
@@ -176,6 +228,19 @@ pub fn cli_main(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if apply_fixes {
+        match run_fix(&root) {
+            Ok((changed, rewrites, scaffolds)) => println!(
+                "ubft-lint: --fix changed {changed} files \
+                 ({rewrites} BTree rewrites, {scaffolds} waiver scaffolds)"
+            ),
+            Err(e) => {
+                eprintln!("ubft-lint: --fix: {e}");
+                return 2;
+            }
+        }
+        // Fall through: re-lint so the exit code reflects what remains.
+    }
     let report = match run(&root) {
         Ok(r) => r,
         Err(e) => {

@@ -1,0 +1,212 @@
+//! `wall-clock-in-protocol` for the `python/` tree.
+//!
+//! The python side compiles the repo's accelerator kernels and checks
+//! them against references; like the Rust protocol code it must be
+//! reproducible from explicit seeds. Wall-clock reads and the global
+//! `random` module make compile fingerprints and test tensors vary per
+//! host/process, so they are flagged everywhere except the harness
+//! entry points (tests, the AOT CLI). Seeded NumPy generators
+//! (`np.random.default_rng(seed)`) are the sanctioned idiom and are not
+//! flagged — the bare-`random.` detector requires a word boundary, so
+//! `np.random.` never matches.
+
+use crate::lints::{Ctx, Violation};
+
+/// Python files where wall-clock time and OS randomness are legitimate:
+/// the test harness and the AOT compile CLI (an entry point that may
+/// time compilation, not model/kernel code).
+const PY_ALLOWED: &[&str] = &["python/tests/", "python/compile/aot.py"];
+
+/// Call sites that read the host clock.
+const PY_CLOCK: &[&str] = &[
+    "time.time(",
+    "time.sleep(",
+    "time.perf_counter(",
+    "time.monotonic(",
+    "datetime.now(",
+];
+
+/// Lint one python source file. Same waiver syntax as the Rust lints,
+/// with a `#` comment: `# ubft-lint: allow(wall-clock-in-protocol) -- why`.
+pub fn lint_python_source(rel: &str, src: &str, ctx: &mut Ctx) {
+    if PY_ALLOWED.iter().any(|m| rel.starts_with(m)) {
+        return;
+    }
+    let raw: Vec<&str> = src.lines().collect();
+    let code = strip_python(&raw);
+    for l in 0..code.len() {
+        let Some(what) = py_hit(&code[l]) else { continue };
+        if py_waived(&raw, l) {
+            ctx.waived += 1;
+            continue;
+        }
+        ctx.violations.push(Violation {
+            file: rel.to_string(),
+            line: l + 1,
+            lint: "wall-clock-in-protocol",
+            msg: format!(
+                "`{what}` in python model/kernel code: results must be \
+                 reproducible from explicit seeds (np.random.default_rng(seed)), \
+                 free of wall-clock dependence"
+            ),
+        });
+    }
+}
+
+/// First wall-clock/nondeterminism pattern on a code line, if any.
+fn py_hit(code: &str) -> Option<&'static str> {
+    for p in PY_CLOCK {
+        if code.contains(p) {
+            return Some(p);
+        }
+    }
+    let t = code.trim_start();
+    if t.starts_with("import random") || t.starts_with("from random import") {
+        return Some("import random");
+    }
+    // Bare `random.` — the stdlib global-state module. A preceding
+    // identifier char or `.` means it's an attribute of something else
+    // (`np.random.`, `jax.random.`) and is fine.
+    let mut from = 0;
+    while let Some(p) = code[from..].find("random.") {
+        let at = from + p;
+        let bounded = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_' || c == '.');
+        if bounded {
+            return Some("random.");
+        }
+        from = at + "random.".len();
+    }
+    None
+}
+
+/// Is line `l` (0-based) covered by a justified waiver comment?
+fn py_waived(raw: &[&str], l: usize) -> bool {
+    let needle = "ubft-lint: allow(wall-clock-in-protocol)";
+    for k in l.saturating_sub(2)..=l {
+        let line = raw[k];
+        let Some(h) = line.find('#') else { continue };
+        if let Some(p) = line[h..].find(needle) {
+            if line[h + p + needle.len()..].contains("--") {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Per-line code view: `#` comments stripped, string-literal contents
+/// blanked (including triple-quoted blocks spanning lines), so text
+/// mentioning `time.time(` never trips the lint.
+fn strip_python(raw: &[&str]) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Normal,
+        Str(char),
+        Triple(char),
+    }
+    let mut st = St::Normal;
+    let mut out = Vec::with_capacity(raw.len());
+    for line in raw {
+        let chars: Vec<char> = line.chars().collect();
+        let mut code = String::with_capacity(line.len());
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match st {
+                St::Normal => {
+                    if c == '#' {
+                        break; // rest of line is comment
+                    } else if c == '"' || c == '\'' {
+                        if chars.get(i + 1) == Some(&c) && chars.get(i + 2) == Some(&c) {
+                            st = St::Triple(c);
+                            code.push_str("   ");
+                            i += 3;
+                        } else {
+                            st = St::Str(c);
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                St::Str(q) => {
+                    if c == '\\' {
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == q {
+                        st = St::Normal;
+                        code.push(q);
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Triple(q) => {
+                    if c == q && chars.get(i + 1) == Some(&q) && chars.get(i + 2) == Some(&q) {
+                        st = St::Normal;
+                        code.push_str("   ");
+                        i += 3;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // Single-quoted strings do not span lines in python.
+        if matches!(st, St::Str(_)) {
+            st = St::Normal;
+        }
+        out.push(code);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(rel: &str, src: &str) -> Vec<Violation> {
+        let mut ctx = Ctx::new();
+        lint_python_source(rel, src, &mut ctx);
+        ctx.violations
+    }
+
+    #[test]
+    fn flags_wall_clock_and_global_random() {
+        let bad = "import random\nt0 = time.time()\nx = random.random()\n";
+        let v = check("python/compile/model.py", bad);
+        assert_eq!(v.len(), 3);
+        assert!(v.iter().all(|x| x.lint == "wall-clock-in-protocol"));
+        assert_eq!(v[1].line, 2);
+    }
+
+    #[test]
+    fn seeded_numpy_and_entry_points_pass() {
+        let good = "rng = np.random.default_rng(seed)\nx = jax.random.uniform(key)\n";
+        assert!(check("python/compile/kernels/matmul.py", good).is_empty());
+        // Harness entry points may read the clock.
+        let timed = "t0 = time.perf_counter()\n";
+        assert!(check("python/tests/test_kernel.py", timed).is_empty());
+        assert!(check("python/compile/aot.py", timed).is_empty());
+    }
+
+    #[test]
+    fn strings_comments_and_waivers_are_ignored() {
+        let masked = "msg = \"call time.time() maybe\"  # or random.choice\n\
+                      doc = '''\nrandom.seed is bad\n'''\n";
+        assert!(check("python/compile/model.py", masked).is_empty());
+        let waived = "# ubft-lint: allow(wall-clock-in-protocol) -- coarse progress log only\n\
+                      t0 = time.time()\n";
+        assert!(check("python/compile/model.py", waived).is_empty());
+        let unjustified = "# ubft-lint: allow(wall-clock-in-protocol)\nt0 = time.time()\n";
+        assert_eq!(check("python/compile/model.py", unjustified).len(), 1);
+    }
+}
