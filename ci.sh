@@ -64,6 +64,22 @@ echo "== model-check smoke: ubft check sharded-settle [random] =="
 # 2PC settlement scenario (deep schedules DFS can't reach).
 cargo run --release --bin ubft -- check --scenario sharded-settle --driver random --budget 20000
 
+echo "== model-check smoke: ubft check replica-crash-restart [random] =="
+# Crash-recovery exploration: replicas journal to the durable sim-disk
+# WAL; the chooser may crash a replica and later revive it, and the
+# revived replica recovers from its own durable state (torn final WAL
+# record included) before rejoining. Convergence at quiescence is part
+# of the audited invariants, so a recovery that loses decided state
+# fails this smoke.
+cargo run --release --bin ubft -- check --scenario replica-crash-restart --driver random --budget 20000
+
+echo "== durability smoke: ubft scaling --restart =="
+# End-to-end rolling crash-restarts on the durable backend under the
+# sequential read-your-writes checker: zero acknowledged-write loss.
+# (The FileSystem backend's tmpdir round-trip + torn-tail recovery run
+# as unit tests in `cargo test` above — smr::persist::tests.)
+UBFT_SAMPLES=240 cargo run --release --bin ubft -- scaling --restart
+
 echo "== alloc gate: pooled PREPARE roundtrip (batch=8) =="
 # Compile the benches with the counting allocator, then run only the
 # allocation-regression gate: the pooled batch=8 PREPARE encode+decode

@@ -6,7 +6,7 @@
 //! loaded from simple `key = value` files (`examples/*.conf`) — serde is
 //! unavailable offline, so parsing is hand-rolled.
 
-use crate::smr::ReadMode;
+use crate::smr::{PersistMode, ReadMode};
 use crate::{Nanos, MICRO, MILLI};
 
 /// Calibrated latency constants for the discrete-event simulator.
@@ -154,6 +154,24 @@ pub struct Config {
     /// `mc_mutation = none` in config files) runs the real protocol;
     /// anything else is for `ubft check` self-tests ONLY.
     pub mc_mutation: Option<String>, // ubft-lint: allow(config-knob-coverage) -- free-form mutation name; unknown names are inert
+    /// How replicas persist consensus state across crash-restarts:
+    /// `memory` (no durability, the seed behaviour), `sim-disk`
+    /// (deterministic in-sim store, required for restart fault
+    /// injection), or `file` (real WAL + snapshot files under
+    /// [`Config::persist_dir`] with async group-fsync).
+    pub persistence: PersistMode, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
+    /// Directory for `file`-mode WAL/snapshot files (one
+    /// `wal-<node>.log` + `snap-<node>.bin` pair per replica).
+    pub persist_dir: String, // ubft-lint: allow(config-knob-coverage) -- free-form path; deploy validates non-empty for file mode
+    /// Group-fsync interval for `file` mode: the fsync worker batches
+    /// WAL appends and syncs at most once per interval, keeping
+    /// durability cost off the decide critical path.
+    pub persist_fsync_interval_ns: Nanos,
+    /// 2PC participant lock lease: a staged transaction whose commit or
+    /// abort has not been decided within this long is aborted through
+    /// consensus by the surviving participants (coordinator-crash lock
+    /// leak defense; see `ubft::shard`).
+    pub tx_lease_ns: Nanos,
     /// Signature backend.
     pub sig_backend: SigBackend, // ubft-lint: allow(config-knob-coverage) -- closed enum; parse rejects unknowns
     /// DES latency model.
@@ -187,6 +205,10 @@ impl Default for Config {
             read_mode: ReadMode::Consensus,
             mc: false,
             mc_mutation: None,
+            persistence: PersistMode::InMemory,
+            persist_dir: String::new(),
+            persist_fsync_interval_ns: 100 * MICRO,
+            tx_lease_ns: 50 * MILLI,
             sig_backend: SigBackend::Sim,
             lat: LatencyModel::default(),
             seed: 0xDEADBEEF,
@@ -251,6 +273,12 @@ impl Config {
         if !self.lat.per_byte.is_finite() || self.lat.per_byte < 0.0 {
             return Err("lat.per_byte must be finite and non-negative".into());
         }
+        if self.persist_fsync_interval_ns == 0 {
+            return Err("persist_fsync_interval_ns must be > 0".into());
+        }
+        if self.tx_lease_ns == 0 {
+            return Err("tx_lease_ns must be > 0".into());
+        }
         Ok(())
     }
 
@@ -306,6 +334,17 @@ impl Config {
                 "mc_mutation" => {
                     c.mc_mutation = if v == "none" { None } else { Some(v.to_string()) }
                 }
+                "persistence" => {
+                    c.persistence = match v {
+                        "memory" => PersistMode::InMemory,
+                        "sim-disk" => PersistMode::SimDisk,
+                        "file" => PersistMode::FileSystem,
+                        _ => return Err(format!("line {}: unknown persistence {v}", lineno + 1)),
+                    }
+                }
+                "persist_dir" => c.persist_dir = v.to_string(),
+                "persist_fsync_interval_ns" => c.persist_fsync_interval_ns = u(v)?,
+                "tx_lease_ns" => c.tx_lease_ns = u(v)?,
                 "sig_backend" => {
                     c.sig_backend = match v {
                         "ed25519" => SigBackend::Ed25519,
@@ -439,6 +478,39 @@ mod tests {
             Config::parse("mc_mutation = stale-read-lane\n").unwrap().mc_mutation.as_deref(),
             Some("stale-read-lane")
         );
+    }
+
+    #[test]
+    fn persistence_knobs_parse_and_default_off() {
+        let d = Config::default();
+        assert_eq!(d.persistence, PersistMode::InMemory);
+        assert!(d.persist_dir.is_empty());
+        assert_eq!(d.persist_fsync_interval_ns, 100 * MICRO);
+        assert_eq!(d.tx_lease_ns, 50 * MILLI);
+        assert_eq!(
+            Config::parse("persistence = sim-disk\n").unwrap().persistence,
+            PersistMode::SimDisk
+        );
+        assert_eq!(
+            Config::parse("persistence = file\npersist_dir = /tmp/ubft\n")
+                .unwrap()
+                .persistence,
+            PersistMode::FileSystem
+        );
+        assert_eq!(
+            Config::parse("persist_dir = data/wal\n").unwrap().persist_dir,
+            "data/wal"
+        );
+        assert_eq!(
+            Config::parse("persist_fsync_interval_ns = 50000\n")
+                .unwrap()
+                .persist_fsync_interval_ns,
+            50_000
+        );
+        assert_eq!(Config::parse("tx_lease_ns = 1000000\n").unwrap().tx_lease_ns, 1_000_000);
+        assert!(Config::parse("persistence = floppy\n").is_err());
+        assert!(Config::parse("persist_fsync_interval_ns = 0\n").is_err());
+        assert!(Config::parse("tx_lease_ns = 0\n").is_err());
     }
 
     #[test]

@@ -28,15 +28,25 @@
 //!   the delivered PREPARE; f+1 shares form an unforgeable certificate
 //!   that is CTBcast in a COMMIT; f+1 COMMITs decide the slot. The
 //!   PREPARE's own CTBcast falls back to its signed register path.
+//!
+//! Deployed on a durable [`crate::smr::Persistence`] backend, replicas
+//! are crash-*recovery* rather than crash-stop: endorse/decide/view
+//! events append [`wal::WalRecord`]s, checkpoints persist their
+//! certified execution snapshot, and [`Replica::with_persistence`]
+//! replays both at boot (see the `wal` module docs for the safety
+//! argument). The default `InMemory` backend keeps all of this off the
+//! hot path — every hook is a gated no-op.
 
 pub mod msgs;
 pub mod state;
+pub mod wal;
 
 use crate::config::Config;
 use crate::crypto::{hash, Certificate, Hash32, KeyStore};
 use crate::ctbcast::{CtbEndpoint, CtbOut, TOKEN_CTB_COOLDOWN};
 use crate::env::{Actor, Env, Event};
 use crate::metrics::Category;
+use crate::smr::persist::{InMemory, Persistence, Recovered, RETAIN};
 use crate::smr::{Checkpointable, Operation, Service, SpecToken};
 use crate::tbcast::{TAG_DIRECT, TAG_TB};
 use crate::util::pool::{Pool, PoolStats};
@@ -49,6 +59,7 @@ use msgs::{
 };
 use state::{leader_of, must_propose, Constraint, Effect, SenderState};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use wal::WalRecord;
 
 /// Periodic TBcast retransmission timer token.
 pub const TOKEN_RETRANSMIT: u64 = 0x0200_0000_0000_0000;
@@ -67,6 +78,12 @@ const READ_CACHE_CAP: usize = 128;
 /// At-most-once reply-cache entries retained per client (the dedup
 /// horizon for retransmitted / re-proposed requests).
 const RESP_CACHE_PER_CLIENT: usize = 8;
+/// Pseudo-client id for service-emitted housekeeping operations
+/// ([`crate::smr::Service::housekeep`], e.g. 2PC lease-expiry aborts):
+/// decided and applied like any request, but no `Responses` frame is
+/// sent and no reply is cached — there is no real client behind it.
+/// (`u64::MAX` itself is taken by [`Request::noop`].)
+pub const LEASE_CLIENT: u64 = u64::MAX - 1;
 
 #[derive(Default)]
 struct SlotState {
@@ -180,6 +197,19 @@ pub struct ReplicaStats {
     /// promoted — the execution carried across the view change for free
     /// (subset of `spec_hits`).
     pub spec_promoted_across_views: u64,
+    /// WAL records appended through the [`Persistence`] backend (always
+    /// 0 with the default `InMemory` backend, whose hooks are no-ops).
+    pub wal_appends: u64,
+    /// WAL record payload bytes appended (framing overhead excluded).
+    pub wal_bytes: u64,
+    /// Decided slots re-executed from the WAL at boot-time recovery.
+    pub wal_replayed_slots: u64,
+    /// Boot-time recoveries that restored durable state (a snapshot or
+    /// at least one WAL record) — 0 on a fresh boot.
+    pub recoveries: u64,
+    /// Torn/truncated final WAL records dropped at recovery (the
+    /// crash-during-append case the CRC framing exists for).
+    pub wal_torn_tail: u64,
     /// Buffer-pool counters (`Config::pool`): hot-path hit/miss/return
     /// totals and the retained-bytes high-water mark. All-zero when the
     /// pool is off. Snapshotted from the live pool on every tick.
@@ -318,9 +348,31 @@ pub struct Replica {
     mc_applied_log: VecDeque<(u64, Hash32)>,
     /// Model-checking probe (`Config::mc`): bounded CTBcast delivery log
     /// `(bcaster, k, payload hash)`, cross-checked across replicas by
-    /// `testing::invariants` (non-equivocation). Empty outside the
+    /// `testing::invariants` (non-equivocation). Self-deliveries are
+    /// not logged — the invariant is cross-receiver, and a recovered
+    /// incarnation's restarted stream (k = 0 again) must not collide
+    /// with peers' records of its previous life. Empty outside the
     /// checker.
     mc_ctb_log: VecDeque<(NodeId, u64, Hash32)>,
+    /// Durable WAL + snapshot backend ([`crate::smr::Persistence`]).
+    /// The default `InMemory` backend keeps every hook a gated no-op,
+    /// so the hot path is byte-identical to the pre-durability seed.
+    persist: Box<dyn Persistence>,
+    /// Recovered certify obligations from replayed `Certify` WAL
+    /// records: slot → (view, exec-batch digest, batch). A recovered
+    /// replica refuses to endorse or certify-share a *conflicting*
+    /// batch for these slots — a batch that was client-visibly decided
+    /// has ≥ f+1 durable Certify records cluster-wide (fast path needs
+    /// all n endorsements, slow path f+1 shares, clients wait for f+1
+    /// replies), so as long as those replicas keep refusing, a
+    /// conflicting batch can never assemble a quorum. A recovered
+    /// leader re-proposes these batches. Pruned at checkpoints; always
+    /// empty unless this replica recovered from a crash.
+    certified: BTreeMap<u64, (u64, Hash32, Vec<Request>)>,
+    /// Recovered a non-genesis checkpoint: re-announce it on start so
+    /// peers that lost more state adopt the window and fetch the
+    /// certified snapshot.
+    announce_checkpoint: bool,
     pub stats: ReplicaStats,
 }
 
@@ -335,6 +387,22 @@ const REQ_CARRIER_CAP: usize = 8;
 
 impl Replica {
     pub fn new(me: NodeId, cfg: Config, service: Box<dyn Service>) -> Replica {
+        Self::with_persistence(me, cfg, service, Box::new(InMemory))
+    }
+
+    /// Build a replica on an explicit [`Persistence`] backend and run
+    /// boot-time recovery: restore the newest durable snapshot, replay
+    /// the WAL onto it, and rejoin at the recovered view and applied
+    /// frontier — all before the actor starts. The default `InMemory`
+    /// backend recovers nothing, keeping [`Replica::new`] byte-identical
+    /// to the seed constructor.
+    pub fn with_persistence(
+        me: NodeId,
+        cfg: Config,
+        service: Box<dyn Service>,
+        mut persist: Box<dyn Persistence>,
+    ) -> Replica {
+        let recovered = persist.recover();
         let ks = match cfg.sig_backend {
             crate::config::SigBackend::Ed25519 => KeyStore::ed25519(cfg.n + 64, cfg.seed),
             crate::config::SigBackend::Sim => KeyStore::sim(cfg.seed),
@@ -346,7 +414,7 @@ impl Replica {
         } else {
             Pool::off()
         };
-        Replica {
+        let mut r = Replica {
             me,
             n: cfg.n,
             quorum: cfg.quorum(),
@@ -393,9 +461,14 @@ impl Replica {
             req_carriers: Vec::new(),
             mc_applied_log: VecDeque::new(),
             mc_ctb_log: VecDeque::new(),
+            persist,
+            certified: BTreeMap::new(),
+            announce_checkpoint: false,
             stats: ReplicaStats::default(),
             cfg,
-        }
+        };
+        r.recover_from(recovered);
+        r
     }
 
     /// Model-checking probe: the applied `(slot, exec-batch digest)` log
@@ -492,6 +565,235 @@ impl Replica {
         Request { client: req.client, rid: req.rid, payload }
     }
 
+    // ------------------------------------------------------------------
+    // Durability: WAL append hooks + boot-time recovery
+    // ------------------------------------------------------------------
+
+    /// Append one framed WAL record (callers gate on `durable()`).
+    fn wal_append(&mut self, slot: u64, rec: &WalRecord) {
+        let bytes = rec.encode();
+        self.stats.wal_appends += 1;
+        self.stats.wal_bytes += bytes.len() as u64;
+        self.persist.append(slot, &bytes);
+    }
+
+    /// Durably record "I endorsed `reqs` for `slot` in `view`" — called
+    /// from both the fast-path WILL_CERTIFY and the slow-path CERTIFY
+    /// share. No-op unless the backend is durable.
+    fn wal_certify(&mut self, view: u64, slot: u64, reqs: &[Request]) {
+        if !self.persist.durable() {
+            return;
+        }
+        let rec = WalRecord::Certify { view, slot, reqs: reqs.to_vec() };
+        self.wal_append(slot, &rec);
+    }
+
+    /// Durably record a decided slot. Reply-cache deltas deliberately
+    /// ride these records: recovery re-executes the decided batches,
+    /// which reproduces the cached replies deterministically.
+    fn wal_decide(&mut self, slot: u64, reqs: &[Request]) {
+        if !self.persist.durable() {
+            return;
+        }
+        let rec = WalRecord::Decide { slot, reqs: reqs.to_vec() };
+        self.wal_append(slot, &rec);
+    }
+
+    /// Durably record a view adoption, stamped [`RETAIN`] so snapshot
+    /// pruning never drops it (the recovered view is derivable only from
+    /// the WAL — checkpoint certificates carry no view).
+    fn wal_view(&mut self, view: u64) {
+        if !self.persist.durable() {
+            return;
+        }
+        self.wal_append(RETAIN, &WalRecord::View { view });
+    }
+
+    /// Durably store a certified execution snapshot as a
+    /// `(CheckpointCert, snapshot bytes)` pair. The backend prunes WAL
+    /// records for slots the snapshot covers (RETAIN-stamped View
+    /// records survive).
+    fn persist_snapshot(&mut self, cp: &CheckpointCert, snap: &[u8]) {
+        if !self.persist.durable() {
+            return;
+        }
+        let mut w = WireWriter::new();
+        cp.put(&mut w);
+        w.bytes(snap);
+        self.persist.put_snapshot(cp.body.upto, &w.finish());
+    }
+
+    /// Does `pb` conflict with a recovered certify obligation for its
+    /// slot? Empty outside crash-recovery, so the common case is one
+    /// branch on an empty map.
+    fn conflicts_with_recovered(&self, pb: &PrepareBody) -> bool {
+        if self.certified.is_empty() {
+            return false;
+        }
+        match self.certified.get(&pb.slot) {
+            Some((_, digest, _)) => {
+                *digest != exec_batch_digest_in(&self.pool, pb.slot, &pb.reqs)
+            }
+            None => false,
+        }
+    }
+
+    /// Leader-side recovery constraint: a slot carrying a replayed
+    /// certify obligation re-proposes that exact batch (a fresh batch
+    /// could never assemble a quorum past recovered replicas refusing
+    /// conflicting endorsements), and a slot already decided across the
+    /// crash is skipped outright. Returns true when it consumed
+    /// `next_slot`; the proposing loop then advances.
+    fn propose_recovered(&mut self, env: &mut dyn Env) -> bool {
+        if self.certified.is_empty() && self.decided.is_empty() {
+            return false;
+        }
+        if self.decided.contains_key(&self.next_slot) {
+            self.next_slot += 1;
+            return true;
+        }
+        let Some((_, _, reqs)) = self.certified.get(&self.next_slot) else {
+            return false;
+        };
+        let reqs = reqs.clone();
+        let pb = PrepareBody { view: self.view, slot: self.next_slot, reqs };
+        self.next_slot += 1;
+        env.mark("propose_recovered");
+        self.ctb_broadcast(env, ConsMsg::Prepare(pb));
+        true
+    }
+
+    /// Drain [`Service::housekeep`]: each emitted payload is wrapped as
+    /// a [`LEASE_CLIENT`] request and fed through the normal client
+    /// request path, so the housekeeping action (e.g. a 2PC lease-expiry
+    /// abort) is *decided through consensus* and applies on every
+    /// replica — never locally. The request id derives from the payload
+    /// digest, so every replica observing the same expiry emits the
+    /// identical request and execution dedups the copies.
+    fn service_housekeep(&mut self, env: &mut dyn Env, now: Nanos) {
+        let ops = self.service.housekeep(now);
+        for payload in ops {
+            let d = hash(&payload);
+            let rid = u64::from_le_bytes([
+                d.0[0], d.0[1], d.0[2], d.0[3], d.0[4], d.0[5], d.0[6], d.0[7],
+            ]);
+            let req = Request { client: LEASE_CLIENT, rid, payload };
+            self.handle_direct(env, self.me, DirectMsg::Request(req));
+        }
+    }
+
+    /// Boot-time crash recovery (called from [`Replica::with_persistence`]
+    /// before the actor starts; a fresh boot recovers nothing).
+    ///
+    /// 1. Restore the newest durable snapshot — verified against its own
+    ///    f+1 certificate: the local disk gets no more trust than a peer.
+    /// 2. Replay the WAL: decided slots ≥ the snapshot frontier, the
+    ///    adopted view, and certify obligations (kept per slot at the
+    ///    highest view).
+    /// 3. Re-execute the contiguous decided prefix env-free — an exact
+    ///    mirror of `try_apply` minus sends and charges — which rebuilds
+    ///    both service state and the at-most-once reply cache.
+    /// 4. Rejoin at the recovered view. The view was adopted before the
+    ///    crash (it has a durable record), so a recovered leader treats
+    ///    its NEW_VIEW as installed rather than re-winning an election,
+    ///    which lets `try_propose` re-propose the recovered obligations.
+    ///
+    /// Slots decided cluster-wide but missing here (WAL appended
+    /// asynchronously; the group-fsync tail can be lost) are caught up
+    /// through the existing certified snapshot transfer, and lost client
+    /// requests through client retransmission — both already exercised
+    /// by the crash-stop fault matrix.
+    fn recover_from(&mut self, rec: Recovered) {
+        if rec.torn_tail {
+            self.stats.wal_torn_tail += 1;
+        }
+        if rec.snapshot.is_none() && rec.wal.is_empty() {
+            return;
+        }
+        self.stats.recoveries += 1;
+        if let Some((_, bytes)) = rec.snapshot {
+            self.restore_durable_snapshot(&bytes);
+        }
+        let mut max_view = self.view;
+        for (_, payload) in rec.wal {
+            let Ok(record) = WalRecord::decode(&payload) else { continue };
+            match record {
+                WalRecord::Decide { slot, reqs } => {
+                    if slot >= self.applied_upto {
+                        self.decided.insert(slot, reqs);
+                    }
+                }
+                WalRecord::View { view } => max_view = max_view.max(view),
+                WalRecord::Certify { view, slot, reqs } => {
+                    if slot < self.checkpoint.body.open_lo() {
+                        continue;
+                    }
+                    let digest = msgs::exec_batch_digest(slot, &reqs);
+                    let newer =
+                        self.certified.get(&slot).map_or(true, |(v, _, _)| view >= *v);
+                    if newer {
+                        self.certified.insert(slot, (view, digest, reqs));
+                    }
+                }
+            }
+        }
+        while let Some(mut reqs) = self.decided.remove(&self.applied_upto) {
+            let slot = self.applied_upto;
+            if self.cfg.mc {
+                let d = msgs::exec_batch_digest(slot, &reqs);
+                self.mc_record_applied(slot, d);
+            }
+            self.applied_upto += 1;
+            let mut fresh: Vec<Request> = Vec::new();
+            let mut seen: BTreeSet<(u64, u64)> = BTreeSet::new();
+            for req in reqs.drain(..) {
+                if self.is_fresh(&req, &mut seen) {
+                    fresh.push(req);
+                }
+            }
+            if !fresh.is_empty() {
+                let replies = self.service.apply_batch(&fresh);
+                for reply in replies {
+                    if reply.client == LEASE_CLIENT {
+                        continue;
+                    }
+                    self.cache_reply(reply.client, reply.rid, slot, reply.payload);
+                }
+            }
+            self.stats.wal_replayed_slots += 1;
+        }
+        self.view = max_view;
+        if self.view > 0 {
+            self.new_view_sent.insert(self.view);
+        }
+        self.next_slot = self.applied_upto.max(self.checkpoint.body.open_lo());
+    }
+
+    /// Decode + verify a durable `(CheckpointCert, exec snapshot)` blob
+    /// and restore from it. Invalid bytes are ignored — boot continues
+    /// from genesis and live peers re-supply state via snapshot
+    /// transfer, exactly as if the disk were a lying peer.
+    fn restore_durable_snapshot(&mut self, bytes: &[u8]) {
+        let mut r = WireReader::new(bytes);
+        let Ok(cp) = CheckpointCert::get(&mut r) else { return };
+        let Ok(snap) = r.bytes() else { return };
+        if r.done().is_err() || cp.is_genesis() {
+            return;
+        }
+        if !cp.verify(&self.ks, self.quorum) || hash(&snap) != cp.body.snap_digest {
+            return;
+        }
+        let Some((cache, service_snap)) = Replica::decode_exec_snapshot(&snap) else {
+            return;
+        };
+        self.service.restore(&service_snap);
+        self.resp_cache = cache;
+        self.applied_upto = cp.body.upto;
+        self.checkpoint = cp.clone();
+        self.latest_snapshot = Some((cp, snap));
+        self.announce_checkpoint = true;
+    }
+
     fn leader(&self) -> NodeId {
         leader_of(self.view, self.n)
     }
@@ -575,7 +877,14 @@ impl Replica {
         for out in outs {
             match out {
                 CtbOut::Deliver { bcaster, k, m } => {
-                    if self.cfg.mc {
+                    // The non-equivocation invariant is about *cross-
+                    // receiver* consistency, so self-deliveries are not
+                    // logged: a broadcaster's own copy is trivially
+                    // consistent with itself, and a crash-recovered
+                    // incarnation restarts its stream at k = 0 — logging
+                    // its fresh self-copies would falsely collide with
+                    // peers' records of the previous life's stream.
+                    if self.cfg.mc && bcaster != self.me {
                         self.mc_record_ctb(bcaster, k, hash(&m[..]));
                     }
                     self.senders[bcaster].buffer_delivery(k, m, self.cfg.tail);
@@ -721,6 +1030,9 @@ impl Replica {
 
     // ubft-lint: hot-path
     fn endorse(&mut self, env: &mut dyn Env, pb: PrepareBody) {
+        if self.conflicts_with_recovered(&pb) {
+            return;
+        }
         let slot = self.slots.entry(pb.slot).or_default();
         if slot.prepared_at.is_none() {
             slot.prepared_at = Some(env.now());
@@ -729,6 +1041,7 @@ impl Replica {
             return;
         }
         slot.sent_will_certify = Some(pb.view);
+        self.wal_certify(pb.view, pb.slot, &pb.reqs);
         env.mark("prepare_endorsed");
         self.tb_broadcast(env, TbMsg::WillCertify { view: pb.view, slot: pb.slot });
         if self.cfg.slow_path_always {
@@ -747,6 +1060,9 @@ impl Replica {
         if pb.view != view {
             return;
         }
+        if self.conflicts_with_recovered(&pb) {
+            return;
+        }
         {
             let st = self.slots.entry(slot).or_default();
             if st.sent_certify == Some(view) {
@@ -754,6 +1070,7 @@ impl Replica {
             }
             st.sent_certify = Some(view);
         }
+        self.wal_certify(view, slot, &pb.reqs);
         let digest = certify_digest_in(&self.pool, &pb);
         let share = self.ks.sign(self.me, &digest.0);
         crate::env::charge_sign(env, &self.cfg.lat.clone());
@@ -895,6 +1212,9 @@ impl Replica {
         for req in &reqs {
             self.pending_reqs.remove(&req.digest());
         }
+        self.wal_decide(slot, &reqs);
+        // The slot decided: its recovery obligation (if any) is discharged.
+        self.certified.remove(&slot);
         self.decided.insert(slot, reqs);
         self.last_progress = env.now();
         self.vc_backoff = 0; // progress: reset view-change backoff
@@ -965,6 +1285,11 @@ impl Replica {
             self.recycle_batch(fresh);
             let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
             for reply in replies {
+                // Housekeeping ops have no real client: nothing cached,
+                // no frame sent, no "applied" mark.
+                if reply.client == LEASE_CLIENT {
+                    continue;
+                }
                 env.mark("applied");
                 // Pool-drawn copy for the reply cache; the bound's
                 // eviction recycles immediately (it is final here —
@@ -1129,6 +1454,11 @@ impl Replica {
         let mut cache_undo: Vec<CacheUndo> = Vec::with_capacity(replies.len());
         let mut per_client: BTreeMap<u64, Vec<RespEntry>> = BTreeMap::new();
         for reply in replies {
+            // Housekeeping ops: skipped identically to the inline apply
+            // path, so both paths leave the same reply-cache state.
+            if reply.client == LEASE_CLIENT {
+                continue;
+            }
             // Tentative reply-cache insert (kept live so later batches
             // dedup against it; undone exactly on rollback). The
             // retransmit answer path skips it via `spec_rids`.
@@ -1303,9 +1633,12 @@ impl Replica {
             .map_or(false, |(upto, _)| *upto == cp.body.upto);
         if promote {
             let (_, snap) = self.snapshot_stash.take().unwrap();
+            self.persist_snapshot(&cp, &snap);
             self.latest_snapshot = Some((cp.clone(), snap));
         }
         let lo = self.checkpoint.body.open_lo();
+        // Recovery obligations below the window can never matter again.
+        self.certified = self.certified.split_off(&lo);
         // Behind the new window: the speculated slots are being pruned
         // cluster-wide and can never decide here — unwind them (state
         // transfer will jump execution state wholesale).
@@ -1449,6 +1782,7 @@ impl Replica {
         // suspicion.
         self.pending_reqs.clear();
         self.pending_snapshot = None;
+        self.persist_snapshot(&cp, &snap);
         self.latest_snapshot = Some((cp, snap));
         self.stats.snapshots_restored += 1;
         self.stats.snapshot_slots_skipped += skipped;
@@ -1744,6 +2078,9 @@ impl Replica {
         while self.next_slot < self.checkpoint.body.open_hi()
             && (inflight_cap == usize::MAX || self.inflight_slots() < inflight_cap)
         {
+            if self.propose_recovered(env) {
+                continue;
+            }
             let mut reqs: Vec<Request> = self.take_carrier();
             let mut batch_bytes = 0usize;
             while reqs.len() < self.cfg.max_batch_reqs {
@@ -1840,6 +2177,7 @@ impl Replica {
             return; // keep waiting; tick re-checks
         }
         self.view = target;
+        self.wal_view(target);
         self.sealing = None;
         self.stats.view_changes += 1;
         self.last_progress = env.now();
@@ -1988,7 +2326,14 @@ impl Replica {
                     self.ctb_broadcast(env, ConsMsg::Prepare(pb));
                 }
                 Constraint::Free => {
-                    if first_free.is_none() {
+                    if let Some((_, _, reqs)) = self.certified.get(&s) {
+                        // A recovered certify obligation is invisible to
+                        // the (post-restart, freshly-started) certified
+                        // sender states: re-propose it instead of
+                        // treating the slot as free.
+                        let pb = PrepareBody { view, slot: s, reqs: reqs.clone() };
+                        self.ctb_broadcast(env, ConsMsg::Prepare(pb));
+                    } else if first_free.is_none() {
                         first_free = Some(s);
                     }
                 }
@@ -2059,6 +2404,9 @@ impl Replica {
     fn on_tick(&mut self, env: &mut dyn Env) {
         let now = env.now();
         self.stats.pool = self.pool.stats();
+        // Time-driven service housekeeping (e.g. 2PC lease expiry):
+        // emitted ops go through consensus like any client request.
+        self.service_housekeep(env, now);
         // Leader: propose requests whose echo round timed out.
         self.try_propose(env);
         // CTBcast fast path stalled for any of my own broadcasts (PREPARE,
@@ -2125,6 +2473,15 @@ impl Actor for Replica {
         ctb.set_pool(self.pool.clone());
         self.ctb = Some(ctb);
         self.last_progress = env.now();
+        // Crash-recovery: re-announce the recovered checkpoint so peers
+        // that lost more state adopt the window and fetch the certified
+        // snapshot (everyone's CTBcast streams restarted at k=0, so the
+        // original Checkpoint broadcast is gone).
+        if self.announce_checkpoint {
+            self.announce_checkpoint = false;
+            let cp = self.checkpoint.clone();
+            self.ctb_broadcast(env, ConsMsg::Checkpoint(cp));
+        }
         env.set_timer(self.cfg.retransmit_every, TOKEN_RETRANSMIT);
         env.set_timer(TICK_EVERY, TOKEN_TICK);
     }
@@ -2198,6 +2555,17 @@ impl Replica {
         // `Config::pool_cap_bytes`, so the bounded-memory story (§7)
         // stays honest with pooling on.
         total += self.pool.retained_bytes() as u64;
+        // Durable-backend WAL bytes retained since the last snapshot
+        // prune (0 for `InMemory`), plus recovered certify obligations
+        // (pruned at checkpoints; empty outside crash-recovery).
+        total += self.persist.wal_bytes();
+        total += self
+            .certified
+            .values()
+            .map(|(_, _, reqs)| {
+                48 + reqs.iter().map(|r| r.payload.len() as u64 + 32).sum::<u64>()
+            })
+            .sum::<u64>();
         total += self.senders.iter().map(|s| s.mem_bytes()).sum::<u64>();
         total += (self.slots.len() * std::mem::size_of::<SlotState>()) as u64;
         // Decided batches: count every request of every slot, so the §7

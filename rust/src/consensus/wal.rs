@@ -1,0 +1,101 @@
+//! Write-ahead-log records the consensus engine appends through
+//! [`crate::smr::Persistence`] and replays at boot.
+//!
+//! Three record kinds, covering exactly the state a crash-recovering
+//! replica must not forget:
+//!
+//! * [`WalRecord::Certify`] — "I endorsed this batch for this slot":
+//!   appended when the replica sends WILL_CERTIFY (fast path) or a
+//!   signed CERTIFY share (slow path). A decided slot always has ≥ f+1
+//!   durable Certify records across the cluster (fast path needs all n
+//!   endorsements, slow path f+1 shares), so as long as recovered
+//!   replicas refuse to endorse a *conflicting* batch for a recovered
+//!   slot, a conflicting decision can never gather a quorum — this is
+//!   what preserves agreement across crash-recovery.
+//! * [`WalRecord::Decide`] — a slot's decided batch. Replayed in slot
+//!   order onto the recovered snapshot to rebuild applied state *and*
+//!   the at-most-once reply cache (reply-cache deltas deliberately ride
+//!   these records instead of having their own kind: re-execution
+//!   reproduces the cached replies deterministically and cannot
+//!   double-insert them).
+//! * [`WalRecord::View`] — the replica adopted a view (sealed into a
+//!   view change). Stamped [`crate::smr::persist::RETAIN`] so snapshot
+//!   pruning never drops it: the recovered view is derivable only from
+//!   the WAL, and rejoining below the cluster's view would make the
+//!   replica a perpetual straggler.
+
+use crate::consensus::msgs::Request;
+use crate::util::wire::{get_list, put_list, Wire, WireError, WireReader, WireWriter};
+
+/// One durable consensus event (see the [module docs](self)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WalRecord {
+    /// This replica endorsed `reqs` for `slot` in `view` (WILL_CERTIFY
+    /// or a CERTIFY share) — its recovery-constraint obligation.
+    Certify { view: u64, slot: u64, reqs: Vec<Request> },
+    /// `slot` decided `reqs`.
+    Decide { slot: u64, reqs: Vec<Request> },
+    /// The replica adopted `view`.
+    View { view: u64 },
+}
+
+impl Wire for WalRecord {
+    fn put(&self, w: &mut WireWriter) {
+        match self {
+            WalRecord::Certify { view, slot, reqs } => {
+                w.u8(1);
+                w.u64(*view);
+                w.u64(*slot);
+                put_list(w, reqs);
+            }
+            WalRecord::Decide { slot, reqs } => {
+                w.u8(2);
+                w.u64(*slot);
+                put_list(w, reqs);
+            }
+            WalRecord::View { view } => {
+                w.u8(3);
+                w.u64(*view);
+            }
+        }
+    }
+    fn get(r: &mut WireReader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            1 => WalRecord::Certify { view: r.u64()?, slot: r.u64()?, reqs: get_list(r)? },
+            2 => WalRecord::Decide { slot: r.u64()?, reqs: get_list(r)? },
+            3 => WalRecord::View { view: r.u64()? },
+            tag => return Err(WireError::BadTag { what: "WalRecord", tag }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs() -> Vec<Request> {
+        (0..3)
+            .map(|i| Request { client: i, rid: 100 + i, payload: vec![i as u8; 8] })
+            .collect()
+    }
+
+    #[test]
+    fn wal_record_round_trips() {
+        for rec in [
+            WalRecord::Certify { view: 2, slot: 7, reqs: reqs() },
+            WalRecord::Decide { slot: 7, reqs: reqs() },
+            WalRecord::Decide { slot: 0, reqs: vec![Request::noop()] },
+            WalRecord::View { view: 3 },
+        ] {
+            assert_eq!(WalRecord::decode(&rec.encode()).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn bad_tag_is_an_error_not_a_panic() {
+        let mut w = WireWriter::new();
+        w.u8(9);
+        w.u64(1);
+        assert!(WalRecord::decode(&w.finish()).is_err());
+    }
+}

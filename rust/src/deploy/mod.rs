@@ -85,8 +85,10 @@ use crate::metrics::Samples;
 use crate::rpc::{BytesWorkload, Client, ClientStats, Workload};
 use crate::sim::real::{RealCluster, RealMem};
 use crate::sim::{self, Sim, TraceEv};
-use crate::smr::{Checkpointable, NoopApp, ReadMode, Service};
+use crate::smr::persist::{FileSystemLog, InMemory, SharedSimDisk, SimDisk, SimDiskStore};
+use crate::smr::{Checkpointable, NoopApp, Persistence, PersistMode, ReadMode, Service};
 use crate::{Nanos, NodeId, MICRO, SECOND};
+use std::collections::BTreeSet;
 use std::sync::{Arc, Mutex};
 
 /// Systems compared across the evaluation (§7, §9).
@@ -244,6 +246,11 @@ impl ByzSpec {
 pub struct FaultPlan {
     pub(crate) net: sim::FaultPlan,
     pub(crate) byz: Vec<ByzSpec>,
+    /// Replicas whose durable WAL loses its final record (torn mid-write)
+    /// at restart time — exercises the CRC-framed torn-tail recovery.
+    /// Requires a matching [`FaultPlan::with_restart`] entry and
+    /// [`PersistMode::SimDisk`].
+    pub(crate) torn_wal: BTreeSet<NodeId>,
 }
 
 impl FaultPlan {
@@ -353,6 +360,25 @@ impl FaultPlan {
         self
     }
 
+    /// Restart replica `node` at virtual time `at`: a fresh incarnation is
+    /// spawned that recovers solely from its durable store (snapshot + WAL
+    /// replay). Requires [`PersistMode::SimDisk`] persistence and a matching
+    /// earlier [`FaultPlan::with_crash`] — a restart without a crash has
+    /// nothing to recover from.
+    pub fn with_restart(mut self, node: NodeId, at: Nanos) -> FaultPlan {
+        self.net.restart_at.insert(node, at);
+        self
+    }
+
+    /// Tear the final WAL record of replica `node`'s durable log at restart
+    /// time, simulating power loss mid-append. The recovering incarnation
+    /// must detect the bad CRC frame and drop the partial tail. Requires a
+    /// matching [`FaultPlan::with_restart`] entry.
+    pub fn with_torn_wal(mut self, node: NodeId) -> FaultPlan {
+        self.torn_wal.insert(node);
+        self
+    }
+
     pub fn with_equivocation(
         mut self,
         replica: NodeId,
@@ -369,10 +395,12 @@ impl FaultPlan {
     pub fn is_empty(&self) -> bool {
         self.net.crash_at.is_empty()
             && self.net.mem_crash_at.is_empty()
+            && self.net.restart_at.is_empty()
             && self.net.drop_prob == 0.0
             && self.net.torn_write_prob == 0.0
             && self.net.partitions.is_empty()
             && self.byz.is_empty()
+            && self.torn_wal.is_empty()
     }
 
     /// Replica slots replaced by Byzantine actors.
@@ -430,6 +458,11 @@ pub enum DeployError {
     /// Sharding combined with a feature the shard spawner can't honour
     /// (non-uBFT systems, custom spawners, Byzantine replacements).
     ShardingUnsupported(&'static str),
+    /// A crash-restart plan combined with a feature the restart factory
+    /// can't honour (non-`SimDisk` persistence, non-uBFT systems, custom
+    /// spawners, sharding, Byzantine slots, or a restart with no matching
+    /// crash).
+    RestartUnsupported(&'static str),
 }
 
 impl std::fmt::Display for DeployError {
@@ -474,6 +507,9 @@ impl std::fmt::Display for DeployError {
             }
             DeployError::ShardingUnsupported(what) => {
                 write!(f, "sharding does not support {what}")
+            }
+            DeployError::RestartUnsupported(what) => {
+                write!(f, "crash-restart plans do not support {what}")
             }
         }
     }
@@ -528,7 +564,12 @@ impl SystemSpawner for UbftSpawner {
         for i in 0..cfg.n {
             match d.faults.byz_for(i) {
                 None => {
-                    sink.add_actor(Box::new(Replica::new(i, cfg.clone(), d.make_service())));
+                    sink.add_actor(Box::new(Replica::with_persistence(
+                        i,
+                        cfg.clone(),
+                        d.make_service(),
+                        d.make_persistence(i),
+                    )));
                 }
                 Some(ByzSpec::Equivocate { recv_a, recv_b, m_a, m_b, slow, .. }) => {
                     sink.add_actor(Box::new(EquivocatingBroadcaster::new(
@@ -619,6 +660,10 @@ pub struct Deployment {
     shards: Option<(usize, Arc<dyn crate::shard::Partitioner>)>,
     /// Client-side prepare timeout for cross-shard transactions.
     tx_timeout: Option<Nanos>,
+    /// The one deployment-wide [`SimDiskStore`] every replica's `SimDisk`
+    /// handle writes into; created by [`Deployment::build`] when
+    /// [`Config::persistence`] is [`PersistMode::SimDisk`].
+    sim_store: Option<SharedSimDisk>,
 }
 
 impl Deployment {
@@ -646,6 +691,7 @@ impl Deployment {
             trace: false,
             shards: None,
             tx_timeout: None,
+            sim_store: None,
         }
     }
 
@@ -814,6 +860,38 @@ impl Deployment {
         self
     }
 
+    /// Replica durability backend, setting [`Config::persistence`]:
+    /// [`PersistMode::InMemory`] (the default — nothing survives a crash,
+    /// the 10 µs hot path is untouched), [`PersistMode::SimDisk`] (a
+    /// deterministic in-simulation store that survives actor
+    /// crash-restart; pairs with [`FaultPlan::with_restart`] and the
+    /// model checker's restart injection), or [`PersistMode::FileSystem`]
+    /// (real WAL + snapshot files under the [`Deployment::persist_dir`]
+    /// directory, fsyncs batched off the hot path).
+    pub fn persistence(mut self, mode: PersistMode) -> Deployment {
+        self.cfg.persistence = mode;
+        self
+    }
+
+    /// Directory holding [`PersistMode::FileSystem`] blobs
+    /// (`wal-<node>.log`, `snap-<node>.bin` per replica). Sets
+    /// [`Config::persist_dir`]; created at build time if absent.
+    pub fn persist_dir(mut self, dir: &str) -> Deployment {
+        self.cfg.persist_dir = dir.to_string();
+        self
+    }
+
+    /// Participant-side lease on staged cross-shard transactions
+    /// ([`Config::tx_lease_ns`]): a participant whose staged transaction
+    /// has held its locks this long proposes an abort *through its
+    /// shard's consensus* — no unilateral local-time action — releasing
+    /// the locks even when the coordinating client crashed between
+    /// prepare and decision.
+    pub fn tx_lease(mut self, ns: Nanos) -> Deployment {
+        self.cfg.tx_lease_ns = ns;
+        self
+    }
+
     /// Enable Fig-9-style tracing (marks and charges).
     pub fn trace(mut self) -> Deployment {
         self.trace = true;
@@ -851,6 +929,27 @@ impl Deployment {
     /// Seed-era name for [`Deployment::make_service`].
     pub fn make_app(&self) -> Box<dyn Service> {
         (self.app)()
+    }
+
+    /// Instantiate one replica's durable store per the configured
+    /// [`PersistMode`] (used by [`SystemSpawner`]s). `node` is the
+    /// replica's *global* actor id — it keys the WAL/snapshot blobs, so
+    /// a restarted incarnation finds its own state.
+    pub fn make_persistence(&self, node: NodeId) -> Box<dyn Persistence> {
+        match self.cfg.persistence {
+            PersistMode::InMemory => Box::new(InMemory),
+            PersistMode::SimDisk => {
+                let store = self.sim_store.clone().expect("sim store created in build()");
+                Box::new(SimDisk::new(node, store))
+            }
+            PersistMode::FileSystem => {
+                let dir = std::path::Path::new(&self.cfg.persist_dir);
+                Box::new(
+                    FileSystemLog::open(dir, node, self.cfg.persist_fsync_interval_ns)
+                        .expect("persist_dir validated as creatable at build time"),
+                )
+            }
+        }
     }
 
     fn n_clients(&self) -> usize {
@@ -994,6 +1093,63 @@ impl Deployment {
                 return Err(DeployError::BadProbability { what, p });
             }
         }
+        if self.cfg.persistence == PersistMode::FileSystem {
+            if self.cfg.persist_dir.is_empty() {
+                return Err(DeployError::InvalidConfig(
+                    "persistence = file requires a non-empty persist_dir".into(),
+                ));
+            }
+            std::fs::create_dir_all(&self.cfg.persist_dir).map_err(|e| {
+                DeployError::InvalidConfig(format!(
+                    "persist_dir {:?} not creatable: {e}",
+                    self.cfg.persist_dir
+                ))
+            })?;
+        }
+        if !self.faults.net.restart_at.is_empty() {
+            // Restart factories rebuild plain uBFT replicas from their
+            // durable store; anything they can't reconstruct faithfully
+            // (baselines, custom wiring, shard wrapping, Byzantine
+            // replacements) rejects the plan instead of reviving a
+            // differently-shaped actor.
+            if self.cfg.persistence != PersistMode::SimDisk {
+                return Err(DeployError::RestartUnsupported(
+                    "persistence modes other than sim-disk (an amnesiac restart has no durable state to recover)",
+                ));
+            }
+            if !self.system.is_ubft() {
+                return Err(DeployError::RestartUnsupported("non-uBFT systems"));
+            }
+            if self.custom_spawner.is_some() {
+                return Err(DeployError::RestartUnsupported("custom spawners"));
+            }
+            if self.shards.is_some() {
+                return Err(DeployError::RestartUnsupported("sharded deployments"));
+            }
+            for (&node, &at) in &self.faults.net.restart_at {
+                if node >= self.cfg.n {
+                    return Err(DeployError::NodeOutOfRange { node, nodes: self.cfg.n });
+                }
+                if self.faults.byz_for(node).is_some() {
+                    return Err(DeployError::RestartUnsupported("Byzantine replica slots"));
+                }
+                match self.faults.net.crash_at.get(&node) {
+                    Some(&crash) if crash < at => {}
+                    _ => {
+                        return Err(DeployError::RestartUnsupported(
+                            "a restart with no earlier crash of the same replica",
+                        ));
+                    }
+                }
+            }
+        }
+        for &node in &self.faults.torn_wal {
+            if !self.faults.net.restart_at.contains_key(&node) {
+                return Err(DeployError::RestartUnsupported(
+                    "a torn WAL tail on a replica with no restart to observe it",
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -1039,6 +1195,13 @@ impl Deployment {
             sim.enable_trace();
         }
         sim.set_faults(self.faults.net.clone());
+        if self.cfg.persistence == PersistMode::SimDisk {
+            // One deployment-wide store, created before the spawners run:
+            // every replica's SimDisk handle (make_persistence) and every
+            // restart factory below share it, so a fresh incarnation sees
+            // exactly the bytes its predecessor made durable.
+            self.sim_store = Some(SimDiskStore::shared());
+        }
         let custom = self.custom_spawner.is_some();
         // Captured before the partial moves below: the shard spec and app
         // factory outlive the builder because every client's router needs
@@ -1063,6 +1226,40 @@ impl Deployment {
         let (requests, system, cfg) = (self.requests, self.system, self.cfg.clone());
         let byz = self.faults.byz_replicas();
         let sharded = shard_spec.as_ref().map(|(s, _)| *s);
+        // With sim-disk persistence on a plain uBFT deployment, every
+        // honest replica gets a restart factory, so both planned restarts
+        // ([`FaultPlan::with_restart`]) and scheduler-injected ones (the
+        // model checker's crash-recovery choices) can revive it as a
+        // fresh incarnation recovering solely from the shared store.
+        if let Some(store) = self.sim_store.clone() {
+            if !custom && self.system.is_ubft() && sharded.is_none() {
+                for node in 0..cfg.n {
+                    if self.faults.byz_for(node).is_some() {
+                        continue;
+                    }
+                    let (app, cfg, store) =
+                        (self.app.clone(), cfg.clone(), store.clone());
+                    let mut tear = self.faults.torn_wal.contains(&node);
+                    sim.set_restart_factory(
+                        node,
+                        Box::new(move || {
+                            if tear {
+                                // Power loss mid-append: the first revival
+                                // finds its final WAL record torn.
+                                tear = false;
+                                store.lock().unwrap().tear_tail(node);
+                            }
+                            Box::new(Replica::with_persistence(
+                                node,
+                                cfg.clone(),
+                                (app)(),
+                                Box::new(SimDisk::new(node, store.clone())),
+                            ))
+                        }),
+                    );
+                }
+            }
+        }
         let groups: Vec<Vec<NodeId>> = if shard_spec.is_some() {
             replicas.chunks(cfg.n.max(1)).map(|c| c.to_vec()).collect()
         } else {
@@ -1110,6 +1307,11 @@ impl Deployment {
         }
         if self.shards.is_some() {
             return Err(DeployError::RealModeUnsupported("sharded deployments"));
+        }
+        if self.cfg.persistence == PersistMode::SimDisk {
+            return Err(DeployError::RealModeUnsupported(
+                "sim-disk persistence (a simulator construct; use file persistence)",
+            ));
         }
         self.apply_perf_knobs();
         let mut cluster = RealCluster::new(self.cfg.m, self.cfg.seed);
@@ -1668,6 +1870,52 @@ mod tests {
         assert!(cluster.config().speculation);
         let plain = Deployment::new(Config::default()).requests(5).build().unwrap();
         assert!(!plain.config().speculation, "speculation must be opt-in");
+    }
+
+    #[test]
+    fn persistence_knob_plumbs_and_defaults_in_memory() {
+        let plain = Deployment::new(Config::default()).requests(5).build().unwrap();
+        assert_eq!(
+            plain.config().persistence,
+            crate::smr::PersistMode::InMemory,
+            "durability must be opt-in — the default hot path writes no WAL"
+        );
+        let durable = Deployment::new(Config::default())
+            .persistence(crate::smr::PersistMode::SimDisk)
+            .requests(5)
+            .build()
+            .unwrap();
+        assert_eq!(durable.config().persistence, crate::smr::PersistMode::SimDisk);
+    }
+
+    #[test]
+    fn restart_plans_are_validated() {
+        // A restart without sim-disk persistence has nothing to recover.
+        let err = Deployment::new(Config::default())
+            .faults(FaultPlan::crash(1, 50 * MICRO).with_restart(1, 200 * MICRO))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, DeployError::RestartUnsupported(_)), "got {err}");
+        // A restart with no earlier crash of the same replica is vacuous.
+        let err = Deployment::new(Config::default())
+            .persistence(crate::smr::PersistMode::SimDisk)
+            .faults(FaultPlan::none().with_restart(1, 200 * MICRO))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, DeployError::RestartUnsupported(_)), "got {err}");
+        // Torn WAL tails are only observable through a restart.
+        let err = Deployment::new(Config::default())
+            .persistence(crate::smr::PersistMode::SimDisk)
+            .faults(FaultPlan::none().with_torn_wal(1))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, DeployError::RestartUnsupported(_)), "got {err}");
+        // A well-formed plan builds.
+        Deployment::new(Config::default())
+            .persistence(crate::smr::PersistMode::SimDisk)
+            .faults(FaultPlan::crash(1, 50 * MICRO).with_restart(1, 200 * MICRO))
+            .build()
+            .unwrap();
     }
 
     #[test]

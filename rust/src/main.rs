@@ -28,6 +28,8 @@ EVALUATION (discrete-event simulator, paper §7):
               [--reads PCT]  run only the read-mix smoke at PCT% reads
               [--shards N [--cross PCT]]  run only the shard smoke:
               1 group vs N groups at PCT% cross-shard txs (default 10)
+              [--restart]  run only the durability smoke: sim-disk WAL
+              replicas under rolling crash-restarts, zero write loss
   all         everything above
 
 REAL MODE:
@@ -76,6 +78,7 @@ fn main() {
         "fig11" => harness::fig11::main_run(samples),
         "table2" => harness::table2::main_run(samples),
         "throughput" => harness::throughput::main_run(samples),
+        "scaling" if args.has_flag("restart") => harness::scaling::restart_smoke(samples),
         "scaling" => match (args.get_u64("reads", u64::MAX), args.get_u64("shards", u64::MAX)) {
             (Ok(u64::MAX), Ok(u64::MAX)) => harness::scaling::main_run(samples),
             (Ok(pct), Ok(u64::MAX)) if pct <= 100 => {

@@ -30,6 +30,12 @@ pub enum ChoiceKind {
     /// Tear a memory write (`picked`: 0 = atomic, `w` = split after the
     /// `w`-th 8-byte word).
     Tear,
+    /// Revive a chooser-crashed node as a fresh incarnation recovering
+    /// from its durable store (`picked`: 0 = stay down, 1 = restart).
+    /// Only a choice point for nodes this chooser crashed, on
+    /// deployments with restart factories registered (sim-disk
+    /// persistence).
+    Restart,
 }
 
 impl ChoiceKind {
@@ -39,6 +45,7 @@ impl ChoiceKind {
             ChoiceKind::Drop => "drop",
             ChoiceKind::Crash => "crash",
             ChoiceKind::Tear => "tear",
+            ChoiceKind::Restart => "restart",
         }
     }
 
@@ -48,6 +55,7 @@ impl ChoiceKind {
             "drop" => Some(ChoiceKind::Drop),
             "crash" => Some(ChoiceKind::Crash),
             "tear" => Some(ChoiceKind::Tear),
+            "restart" => Some(ChoiceKind::Restart),
             _ => None,
         }
     }
@@ -79,10 +87,15 @@ pub struct FaultBudget {
     pub drops: u32,
     pub crashes: u32,
     pub tears: u32,
+    /// Revivals of chooser-crashed nodes (crash-recovery scenarios;
+    /// needs sim-disk persistence so the fresh incarnation has a
+    /// durable store to recover from).
+    pub restarts: u32,
 }
 
 impl FaultBudget {
-    pub const NONE: FaultBudget = FaultBudget { drops: 0, crashes: 0, tears: 0 };
+    pub const NONE: FaultBudget =
+        FaultBudget { drops: 0, crashes: 0, tears: 0, restarts: 0 };
 }
 
 /// Extension policy past the replay prefix.
@@ -99,6 +112,9 @@ pub enum Mode {
 const RAND_DROP_P: f64 = 0.02;
 const RAND_CRASH_P: f64 = 0.002;
 const RAND_TEAR_P: f64 = 0.05;
+/// Consulted once per event targeting a crashed node, so even a small
+/// probability revives within a few microseconds of virtual time.
+const RAND_RESTART_P: f64 = 0.01;
 
 /// Backstop on recorded choices per schedule; a run that somehow blows
 /// past this keeps running with default decisions but stops recording
@@ -118,6 +134,10 @@ pub struct ChooserCore {
     group_n: usize,
     /// Remaining crash injections per group (≤ f minus Byzantine slots).
     crash_left: Vec<u32>,
+    /// Nodes this chooser crashed and has not yet revived — the only
+    /// restart candidates (plan-crashed nodes belong to the scenario's
+    /// deterministic fault plan, not the search space).
+    crashed_by_us: Vec<NodeId>,
     /// Total decisions made (the unit `--budget` is charged in).
     pub decisions: u64,
 }
@@ -140,6 +160,7 @@ impl ChooserCore {
             crashable,
             group_n: group_n.max(1),
             crash_left,
+            crashed_by_us: Vec::new(),
             decisions: 0,
         }
     }
@@ -241,6 +262,27 @@ impl Scheduler for Chooser {
         if picked == 1 {
             core.budget.crashes -= 1;
             core.crash_left[group] -= 1;
+            core.crashed_by_us.push(node);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn restart_node(&mut self, node: NodeId) -> bool {
+        let mut core = self.0.lock().unwrap();
+        if core.budget.restarts == 0 {
+            return false;
+        }
+        let Some(idx) = core.crashed_by_us.iter().position(|&n| n == node) else {
+            return false;
+        };
+        let picked = core.next(ChoiceKind::Restart, 2, Vec::new(), |rng| {
+            u32::from(rng.chance(RAND_RESTART_P))
+        });
+        if picked == 1 {
+            core.budget.restarts -= 1;
+            core.crashed_by_us.swap_remove(idx);
             true
         } else {
             false
@@ -329,7 +371,7 @@ mod tests {
         let core = Arc::new(Mutex::new(ChooserCore::new(
             prefix,
             Mode::Default,
-            FaultBudget { drops: 0, crashes: 2, tears: 0 },
+            FaultBudget { drops: 0, crashes: 2, tears: 0, restarts: 0 },
             vec![0, 1, 2],
             3,
             vec![1], // one group, f = 1
@@ -339,6 +381,32 @@ mod tests {
         // Group cap exhausted: not even a choice point any more.
         assert!(!ch.crash_node(2));
         assert_eq!(core.lock().unwrap().record.len(), 1);
+    }
+
+    #[test]
+    fn restart_is_only_a_choice_for_chooser_crashed_nodes() {
+        let prefix = vec![
+            Choice { kind: ChoiceKind::Crash, picked: 1, n: 2, keys: vec![] },
+            Choice { kind: ChoiceKind::Restart, picked: 1, n: 2, keys: vec![] },
+        ];
+        let core = Arc::new(Mutex::new(ChooserCore::new(
+            prefix,
+            Mode::Default,
+            FaultBudget { drops: 0, crashes: 1, tears: 0, restarts: 1 },
+            vec![0, 1, 2],
+            3,
+            vec![1],
+        )));
+        let mut ch = Chooser(core.clone());
+        // Node 2 was never crashed by us: not even a choice point.
+        assert!(!ch.restart_node(2));
+        assert!(ch.crash_node(1));
+        assert!(ch.restart_node(1));
+        // Revived: no longer a restart candidate, budget spent anyway.
+        assert!(!ch.restart_node(1));
+        let core = core.lock().unwrap();
+        assert_eq!(core.record.len(), 2);
+        assert_eq!(core.record[1].kind, ChoiceKind::Restart);
     }
 
     #[test]

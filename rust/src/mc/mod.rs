@@ -8,7 +8,10 @@
 //! than one event is enabled (same-time deliveries, ready timers,
 //! memory completions) the checker *chooses* which dispatches next, and
 //! at every delivery/write it may *inject* a fault (message drop,
-//! replica crash, torn memory write) from the scenario's budget.
+//! replica crash, torn memory write — and, on deployments with sim-disk
+//! persistence, *crash-recovery*: reviving a chooser-crashed replica as
+//! a fresh incarnation that recovers solely from its durable WAL +
+//! snapshot) from the scenario's budget.
 //!
 //! Exploration is **stateless** (VeriSoft-style): the checker never
 //! snapshots protocol state. A schedule is just the sequence of choices
@@ -80,6 +83,14 @@ pub const MUTATIONS: &[&str] =
 /// oracle under ~10% of run time at these scenario sizes.
 const CHECK_EVERY: usize = 64;
 
+/// Virtual time the run keeps stepping after the last surviving client
+/// finishes, before the quiescent audit. Clients finishing is not
+/// quiescence: stragglers — most notably a crash-recovered replica
+/// still catching up through summary adoption and snapshot transfer —
+/// need bounded settling to converge, and the quiescent invariants are
+/// defined over the settled system.
+const SETTLE_NS: crate::Nanos = 5 * crate::MILLI;
+
 /// Outcome of executing one schedule to completion (or violation).
 pub(crate) struct RunOutcome {
     pub violation: Option<Violation>,
@@ -110,9 +121,10 @@ fn panic_detail(e: &(dyn std::any::Any + Send)) -> String {
 ///
 /// Completion means every client is done *or crashed* (a deliberately
 /// crashed client — e.g. the 2PC coordinator in `coordinator-crash-2pc`
-/// — can never report done); a drained event queue or a blown virtual
-/// deadline before that is a liveness violation, and a panic anywhere
-/// in the stack is a violation of its own kind.
+/// — can never report done), followed by a [`SETTLE_NS`] settling
+/// window before the quiescent audit; a drained event queue or a blown
+/// virtual deadline before completion is a liveness violation, and a
+/// panic anywhere in the stack is a violation of its own kind.
 pub(crate) fn run_one(
     scn: &Scenario,
     mutation: Option<&str>,
@@ -152,6 +164,7 @@ pub(crate) fn run_one(
         core_in.lock().unwrap().set_crash_policy(crashable, n, crash_left);
         cluster.sim().set_scheduler(Box::new(Chooser(core_in)));
 
+        let mut settle_until: Option<crate::Nanos> = None;
         loop {
             let mut drained = false;
             for _ in 0..CHECK_EVERY {
@@ -166,7 +179,11 @@ pub(crate) fn run_one(
                 .iter()
                 .all(|c| c.done_at().is_some() || cluster.is_crashed(c.id));
             if done {
-                return invariants::quiescent(&mut cluster);
+                let until = *settle_until.get_or_insert(cluster.now() + SETTLE_NS);
+                if drained || cluster.now() >= until {
+                    return invariants::quiescent(&mut cluster);
+                }
+                continue;
             }
             if drained {
                 return Err(liveness(
@@ -477,6 +494,26 @@ mod tests {
         assert!(out.violation.is_none(), "default run violated: {:?}", out.violation);
         assert!(out.decisions > 0, "mc runs should hit at least one choice point");
         assert!(!out.truncated);
+    }
+
+    #[test]
+    fn default_schedule_of_replica_crash_restart_is_clean() {
+        // Default mode injects no faults: this pins that sim-disk
+        // persistence alone (WAL appends, checkpoint snapshots, restart
+        // factories armed but unused) changes no protocol outcome.
+        let scn = scenarios::find("replica-crash-restart").unwrap();
+        let out = run_one(scn, None, Vec::new(), Mode::Default);
+        assert!(out.violation.is_none(), "default run violated: {:?}", out.violation);
+    }
+
+    #[test]
+    fn default_schedule_of_wal_torn_tail_recovers() {
+        // The crash, restart, and torn WAL tail here are *planned*
+        // (deterministic FaultPlan), so even the default schedule
+        // exercises a full recovery with a corrupt final record.
+        let scn = scenarios::find("wal-torn-tail").unwrap();
+        let out = run_one(scn, None, Vec::new(), Mode::Default);
+        assert!(out.violation.is_none(), "torn-tail recovery violated: {:?}", out.violation);
     }
 
     #[test]

@@ -130,22 +130,27 @@ fn byz_forged_slot() -> Deployment {
         .faults(FaultPlan::forged_slot_reads(1, vec![kv::ST_MISS]))
 }
 
-/// The known coordinator-crash-mid-2PC gap: the 2PC coordinator lives
-/// in the *client* (see [`crate::shard::Coordinator`]), and participant
-/// locks release only through coordinator-sent `Commit`/`Abort` — there
-/// is no participant-side lease. Crashing client 0 mid-traffic pins the
-/// current behavior: keys locked by its in-flight transactions stay
-/// locked forever (conflicting plain ops get `TX_LOCKED`, conflicting
-/// transactions vote abort), while the surviving client must still
-/// complete every transaction and settlement atomicity must hold at
-/// quiescence. The liveness bound this implies is documented in
-/// README.md (Model checking).
+/// Coordinator crash mid-2PC, now covered by the participant-side
+/// lease: the 2PC coordinator lives in the *client* (see
+/// [`crate::shard::Coordinator`]), and before the lease existed its
+/// crash stranded participant locks forever (the historical gap this
+/// scenario was born to pin). With `tx_lease` set, a participant whose
+/// staged transaction outlives the lease proposes an abort *through its
+/// shard's consensus* — every replica of the group decides the same
+/// abort at the same slot, so locks release deterministically with no
+/// unilateral local-time action. Crashing client 0 mid-traffic now
+/// pins the fixed behavior: the surviving client completes every
+/// transaction, settlement atomicity holds at quiescence, and no lock
+/// outlives its lease (`rust/tests/it_mc.rs` asserts zero leaked locks
+/// at quiescence).
 ///
 /// The load is shaped so the crash always lands mid-transaction: every
 /// post-funding request is a cross-shard settle, the four-deep pipeline
 /// keeps several 2PC rounds in flight at once (they contend on the
 /// single book key, so completions immediately issue fresh prepares),
 /// and 40 requests per client put quiescence far past the 150 µs crash.
+/// The 500 µs lease expires well before the 2 ms client-side prepare
+/// timeout, so the abort path under test is the participants' own.
 fn coordinator_crash_2pc() -> Deployment {
     let cfg = Config::default();
     let first_client = 2 * cfg.n; // two shard groups of n replicas, then clients
@@ -164,7 +169,51 @@ fn coordinator_crash_2pc() -> Deployment {
         .requests(40)
         .pipeline(4)
         .tx_timeout(2 * MILLI)
+        .tx_lease(500 * MICRO)
         .faults(FaultPlan::crash(first_client, 150 * MICRO))
+}
+
+/// A durable replica crashed and revived by the *chooser*: sim-disk
+/// persistence registers a restart factory per replica, the crash
+/// budget lets the search kill one replica at any event boundary, and
+/// the restart budget lets it revive that replica at any later one —
+/// exploring every (crash point, recovery point) pair within budget.
+/// The fresh incarnation recovers solely from its snapshot + WAL
+/// (amnesiac otherwise) and must rejoin without violating agreement,
+/// CTB non-equivocation, or convergence: a restarted replica is live at
+/// quiescence, so the oracle holds it to the same applied-state digest
+/// as everyone else.
+fn replica_crash_restart() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .persistence(crate::smr::PersistMode::SimDisk)
+        .client(Box::new(SeqCheckWorkload::new(0)))
+        .requests(10)
+        .pipeline(1)
+        .batch(4, 64 * 1024)
+}
+
+/// Power loss mid-WAL-append, staged deterministically: replica 1
+/// crashes at 150 µs and restarts at 400 µs, and `with_torn_wal` rips
+/// the final record off its durable log at revival — exactly what a
+/// machine losing power halfway through an append leaves behind. The
+/// CRC framing must make recovery drop the partial tail and rejoin
+/// from the surviving prefix; the chooser explores delivery orderings
+/// (plus a drop) around the fixed fault plan, so the torn record's
+/// identity varies schedule to schedule.
+fn wal_torn_tail() -> Deployment {
+    Deployment::new(Config::default())
+        .app(|| Box::new(KvApp::new()))
+        .persistence(crate::smr::PersistMode::SimDisk)
+        .client(Box::new(KvWorkload::paper()))
+        .requests(16)
+        .pipeline(2)
+        .batch(4, 64 * 1024)
+        .faults(
+            FaultPlan::crash(1, 150 * MICRO)
+                .with_restart(1, 400 * MICRO)
+                .with_torn_wal(1),
+        )
 }
 
 /// Every scenario, in documentation order.
@@ -172,14 +221,14 @@ pub const ALL: &[Scenario] = &[
     Scenario {
         name: "base",
         about: "1 group, n=5: linearizable read lane under two sequential checkers",
-        faults: FaultBudget { drops: 2, crashes: 1, tears: 1 },
+        faults: FaultBudget { drops: 2, crashes: 1, tears: 1, restarts: 0 },
         deadline: 60 * SECOND,
         build: base,
     },
     Scenario {
         name: "sharded-settle",
         about: "2 groups, cross-shard 2PC settlement atomicity",
-        faults: FaultBudget { drops: 2, crashes: 1, tears: 1 },
+        faults: FaultBudget { drops: 2, crashes: 1, tears: 1, restarts: 0 },
         deadline: 120 * SECOND,
         build: sharded_settle,
     },
@@ -193,7 +242,7 @@ pub const ALL: &[Scenario] = &[
     Scenario {
         name: "byz-stale-read",
         about: "stale-read colluder vs the f+1-vouched read index",
-        faults: FaultBudget { drops: 2, crashes: 0, tears: 0 },
+        faults: FaultBudget { drops: 2, crashes: 0, tears: 0, restarts: 0 },
         deadline: 60 * SECOND,
         build: byz_stale_read,
     },
@@ -206,10 +255,24 @@ pub const ALL: &[Scenario] = &[
     },
     Scenario {
         name: "coordinator-crash-2pc",
-        about: "client coordinator crash mid-2PC: locks leak, survivors stay live",
-        faults: FaultBudget { drops: 2, crashes: 0, tears: 0 },
+        about: "client coordinator crash mid-2PC: leases abort staged txs, no lock leaks",
+        faults: FaultBudget { drops: 2, crashes: 0, tears: 0, restarts: 0 },
         deadline: 120 * SECOND,
         build: coordinator_crash_2pc,
+    },
+    Scenario {
+        name: "replica-crash-restart",
+        about: "durable replica crash + recovery: WAL replay rejoins without divergence",
+        faults: FaultBudget { drops: 1, crashes: 1, tears: 0, restarts: 1 },
+        deadline: 60 * SECOND,
+        build: replica_crash_restart,
+    },
+    Scenario {
+        name: "wal-torn-tail",
+        about: "power loss mid-WAL-append: torn final record dropped, recovery still safe",
+        faults: FaultBudget { drops: 1, crashes: 0, tears: 0, restarts: 0 },
+        deadline: 60 * SECOND,
+        build: wal_torn_tail,
     },
 ];
 

@@ -20,7 +20,11 @@
 //!   transaction's keys, `Commit`/`Abort` apply or discard the staged
 //!   ops. All three travel through the shard's consensus as ordinary
 //!   requests, so participant state is replicated, deterministic, and
-//!   checkpointable.
+//!   checkpointable. Staged locks carry a *lease*
+//!   ([`crate::config::Config::tx_lease_ns`]): when a coordinator
+//!   crashes between prepare and decision, the participants themselves
+//!   emit an abort through their shard's consensus once the lease
+//!   expires, so no lock outlives a dead coordinator.
 //! * [`Coordinator`] is the client-side state machine: prepare on every
 //!   touched shard, commit iff all vote commit, abort on any abort vote
 //!   or prepare timeout.
@@ -241,16 +245,41 @@ pub struct TxService {
     staged: BTreeMap<u64, Vec<Vec<u8>>>,
     tombstones: VecDeque<u64>,
     tombstoned: BTreeSet<u64>,
+    /// Participant-side lock lease ([`crate::config::Config::tx_lease_ns`];
+    /// 0 disables): a staged transaction whose decision hasn't arrived
+    /// within the lease is aborted *through consensus* — every replica's
+    /// [`Service::housekeep`] emits an [`abort_request`], the engine
+    /// proposes it like any client request, and the decided abort releases
+    /// the locks on all replicas identically. This closes the
+    /// coordinator-crash lock leak without any replica acting unilaterally
+    /// on local time.
+    lease: Nanos,
+    /// When each staged txid was first observed by housekeeping.
+    /// Local-only: never enters the digest/snapshot (replicas stamp at
+    /// their own housekeep ticks, so stamps differ across replicas).
+    staged_at: BTreeMap<u64, Nanos>,
+    /// Txids whose lease abort was already emitted (emit once; the
+    /// decided abort is idempotent anyway). Local-only, like `staged_at`.
+    abort_emitted: BTreeSet<u64>,
 }
 
 impl TxService {
     pub fn new(inner: Box<dyn Service>) -> TxService {
+        TxService::with_lease(inner, 0)
+    }
+
+    /// A participant whose staged locks expire after `lease` ns
+    /// (0 = never, the [`TxService::new`] behaviour).
+    pub fn with_lease(inner: Box<dyn Service>, lease: Nanos) -> TxService {
         TxService {
             inner,
             locks: BTreeMap::new(),
             staged: BTreeMap::new(),
             tombstones: VecDeque::new(),
             tombstoned: BTreeSet::new(),
+            lease,
+            staged_at: BTreeMap::new(),
+            abort_emitted: BTreeSet::new(),
         }
     }
 
@@ -465,6 +494,27 @@ impl Service for TxService {
         } else {
             self.inner.validate(req)
         }
+    }
+
+    fn housekeep(&mut self, now: Nanos) -> Vec<Vec<u8>> {
+        let mut out = self.inner.housekeep(now);
+        if self.lease == 0 {
+            return out;
+        }
+        // Stamps and emission flags are local-only bookkeeping: they never
+        // enter the digest or snapshot, so housekeeping cannot diverge
+        // replicated state. The only replicated effect is the emitted
+        // abort request, which travels through consensus.
+        self.staged_at.retain(|txid, _| self.staged.contains_key(txid));
+        self.abort_emitted.retain(|txid| self.staged.contains_key(txid));
+        let staged: Vec<u64> = self.staged.keys().copied().collect();
+        for txid in staged {
+            let at = *self.staged_at.entry(txid).or_insert(now);
+            if now.saturating_sub(at) >= self.lease && self.abort_emitted.insert(txid) {
+                out.push(abort_request(txid));
+            }
+        }
+        out
     }
 
     fn sim_cost(&self, req: &[u8]) -> Nanos {
@@ -872,8 +922,11 @@ impl SystemSpawner for ShardSpawner {
         for s in 0..self.shards {
             let base = s * cfg.n;
             for i in 0..cfg.n {
-                let svc = Box::new(TxService::new(d.make_service()));
-                let replica = Replica::new(i, cfg.clone(), svc);
+                let svc = Box::new(TxService::with_lease(d.make_service(), cfg.tx_lease_ns));
+                // Persistence is keyed by the *global* actor id so every
+                // replica of every group gets a distinct durable store.
+                let replica =
+                    Replica::with_persistence(i, cfg.clone(), svc, d.make_persistence(base + i));
                 ids.push(sink.add_actor(Box::new(ShardedReplica::new(base, cfg.n, replica))));
             }
         }
@@ -977,6 +1030,45 @@ mod tests {
         assert_eq!(svc.execute(&prepare_request(1, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
         assert_eq!(svc.locked_keys(), 0);
         assert_eq!(svc.staged_txs(), 0);
+    }
+
+    #[test]
+    fn lease_expiry_emits_one_consensus_abort() {
+        let mut svc = TxService::with_lease(Box::new(KvApp::new()), 1_000);
+        let ops = vec![kv::set(b"k", b"v")];
+        svc.execute(&prepare_request(1, &ops));
+        assert_eq!(svc.locked_keys(), 1);
+        // First sighting stamps the txid; no abort before the lease runs out.
+        assert!(svc.housekeep(100).is_empty());
+        assert!(svc.housekeep(600).is_empty());
+        // Lease expired: exactly one abort_request, never re-emitted.
+        assert_eq!(svc.housekeep(1_100), vec![abort_request(1)]);
+        assert!(svc.housekeep(2_000).is_empty());
+        // Housekeeping never touches replicated state.
+        let d0 = svc.digest();
+        svc.housekeep(3_000);
+        assert_eq!(svc.digest(), d0);
+        // The decided abort (via consensus) releases the locks for good:
+        // the tombstone voids any late prepare.
+        assert_eq!(svc.execute(&abort_request(1)), vec![TAG_CTL, TX_ABORTED]);
+        assert_eq!(svc.locked_keys(), 0);
+        assert!(svc.housekeep(4_000).is_empty());
+        assert_eq!(svc.execute(&prepare_request(1, &ops)), vec![TAG_CTL, TX_VOTE_ABORT]);
+    }
+
+    #[test]
+    fn decided_tx_never_lease_aborts() {
+        let mut svc = TxService::with_lease(Box::new(KvApp::new()), 1_000);
+        let ops = vec![kv::set(b"k", b"v")];
+        svc.execute(&prepare_request(1, &ops));
+        svc.housekeep(0);
+        svc.execute(&commit_request(1));
+        assert!(svc.housekeep(5_000).is_empty());
+        // new() keeps the lease off entirely.
+        let mut off = txsvc();
+        off.execute(&prepare_request(2, &ops));
+        assert!(off.housekeep(u64::MAX / 2).is_empty());
+        assert_eq!(off.locked_keys(), 1);
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //! Determinism: a single seed drives every PRNG (network jitter, workload
 //! generators, fault injection); re-running a configuration reproduces the
 //! exact event sequence.
+//!
+//! Crash-*recovery*: beyond crash-stop, the engine can revive a crashed
+//! node ([`FaultPlan::restart_at`], or a [`Scheduler::restart_node`]
+//! choice under model checking). The replacement actor comes from a
+//! registered factory ([`Sim::set_restart_factory`]) — amnesiac except
+//! for whatever its persistence backend recovers — and per-node
+//! incarnation counters guarantee that timers and memory completions
+//! armed by the previous life never fire into the new one.
 
 pub mod real;
 
@@ -37,6 +45,13 @@ pub struct Partition {
 pub struct FaultPlan {
     /// Compute nodes that crash at a given time.
     pub crash_at: BTreeMap<NodeId, Nanos>,
+    /// Crashed compute nodes that *restart* at a given time. The node is
+    /// revived from its registered restart factory
+    /// ([`Sim::set_restart_factory`]) with a fresh actor — amnesiac
+    /// except for whatever the factory recovers from durable storage
+    /// (see [`crate::smr::persist`]). Without a factory the event is a
+    /// no-op and the node stays down (crash-stop).
+    pub restart_at: BTreeMap<NodeId, Nanos>,
     /// Memory nodes that crash at a given time.
     pub mem_crash_at: BTreeMap<usize, Nanos>,
     /// Probability that any point-to-point message is dropped.
@@ -75,6 +90,9 @@ pub enum EvKind {
     MemDone,
     /// An engine-internal memory-node event (read, write half, ack).
     MemOp,
+    /// A planned crash-restart ([`FaultPlan::restart_at`]) reviving a
+    /// crashed node from its restart factory.
+    Restart,
 }
 
 /// One member of the *enabled set*: an event whose virtual time equals the
@@ -120,22 +138,32 @@ pub trait Scheduler: Send {
     fn tear_write(&mut self, _mem_node: usize, _words: usize) -> Option<usize> {
         None
     }
+    /// Fault injection: restart this *crashed* node now? Consulted when
+    /// an event targets a crashed node; returning `true` revives it from
+    /// its restart factory (no factory ⇒ the node stays down). The
+    /// triggering event is then delivered to the fresh incarnation
+    /// (stale timers and memory completions from the previous life are
+    /// filtered out by incarnation stamps).
+    fn restart_node(&mut self, _node: NodeId) -> bool {
+        false
+    }
 }
 
 fn describe(ev: &QEv, actor_count: usize) -> EnabledEv {
     match ev {
-        QEv::Actor(dst, Event::Recv { from, .. }) => {
+        QEv::Actor(dst, _, Event::Recv { from, .. }) => {
             EnabledEv { kind: EvKind::Recv, key: *dst, from: Some(*from) }
         }
-        QEv::Actor(dst, Event::Timer { .. }) => {
+        QEv::Actor(dst, _, Event::Timer { .. }) => {
             EnabledEv { kind: EvKind::Timer, key: *dst, from: None }
         }
-        QEv::Actor(dst, _) => EnabledEv { kind: EvKind::MemDone, key: *dst, from: None },
+        QEv::Actor(dst, _, _) => EnabledEv { kind: EvKind::MemDone, key: *dst, from: None },
         QEv::MemRead { mem_node, .. }
         | QEv::MemWriteApply { mem_node, .. }
         | QEv::MemWriteAck { mem_node, .. } => {
             EnabledEv { kind: EvKind::MemOp, key: actor_count + mem_node, from: None }
         }
+        QEv::Restart(node) => EnabledEv { kind: EvKind::Restart, key: *node, from: None },
     }
 }
 
@@ -151,10 +179,16 @@ pub struct SimStats {
 }
 
 enum QEv {
-    Actor(NodeId, Event),
+    /// An event for an actor, stamped with the target's *incarnation* at
+    /// enqueue time: after a crash-restart, pending `Timer`/`MemDone`
+    /// events from the previous life are dropped (their stamp is stale),
+    /// while `Recv` always passes — the network outlives the node.
+    Actor(NodeId, u32, Event),
     MemRead { requester: NodeId, mem_node: usize, region: RegionId, ticket: Ticket },
     MemWriteApply { mem_node: usize, region: RegionId, from: usize, bytes: Vec<u8> },
     MemWriteAck { requester: NodeId, mem_node: usize, ticket: Ticket },
+    /// Planned revival of a crashed node ([`FaultPlan::restart_at`]).
+    Restart(NodeId),
 }
 
 struct QItem {
@@ -190,6 +224,8 @@ struct Core {
     rngs: Vec<Rng>,
     net_rng: Rng,
     crashed: Vec<bool>,
+    /// Bumped on every crash-restart; see [`QEv::Actor`] stamps.
+    incarnation: Vec<u32>,
     busy_until: Vec<Nanos>,
     mem_regions: BTreeMap<(usize, RegionId), Vec<u8>>,
     mem_crashed: Vec<bool>,
@@ -214,6 +250,10 @@ pub struct Sim {
     pub cfg: Config,
     core: Core,
     actors: Vec<Option<Box<dyn Actor>>>,
+    /// Per-node factories for crash-restart revival: called to build the
+    /// replacement actor, which recovers whatever its persistence backend
+    /// kept and starts otherwise amnesiac.
+    restart_factories: BTreeMap<NodeId, Box<dyn FnMut() -> Box<dyn Actor>>>,
     started: bool,
 }
 
@@ -231,6 +271,7 @@ impl Sim {
                 rngs: Vec::new(),
                 net_rng,
                 crashed: Vec::new(),
+                incarnation: Vec::new(),
                 busy_until: Vec::new(),
                 mem_regions: BTreeMap::new(),
                 mem_crashed: vec![false; cfg.m],
@@ -242,6 +283,7 @@ impl Sim {
             },
             cfg,
             actors: Vec::new(),
+            restart_factories: BTreeMap::new(),
             started: false,
         }
     }
@@ -289,8 +331,23 @@ impl Sim {
         let mut seed_rng = Rng::new(self.cfg.seed ^ (0x9E37 + id as u64 * 0xABCD_EF01));
         self.core.rngs.push(seed_rng.fork());
         self.core.crashed.push(false);
+        self.core.incarnation.push(0);
         self.core.busy_until.push(0);
         id
+    }
+
+    /// Register a restart factory for `node`: on crash-restart (planned
+    /// via [`FaultPlan::restart_at`] or injected by a
+    /// [`Scheduler::restart_node`] choice) the node's actor is replaced
+    /// by `f()` and `on_start` runs again. Crashed nodes without a
+    /// factory stay down (crash-stop, the pre-restart model).
+    pub fn set_restart_factory(&mut self, node: NodeId, f: Box<dyn FnMut() -> Box<dyn Actor>>) {
+        self.restart_factories.insert(node, f);
+    }
+
+    /// How many times `node` has been crash-restarted.
+    pub fn incarnation(&self, node: NodeId) -> u32 {
+        self.core.incarnation.get(node).copied().unwrap_or(0)
     }
 
     /// Borrow an actor back (e.g. to extract metrics after the run).
@@ -313,6 +370,11 @@ impl Sim {
             return;
         }
         self.started = true;
+        let restarts: Vec<(NodeId, Nanos)> =
+            self.core.faults.restart_at.iter().map(|(&n, &t)| (n, t)).collect();
+        for (node, at) in restarts {
+            self.core.push(at, QEv::Restart(node));
+        }
         for id in 0..self.actors.len() {
             self.dispatch_start(id);
         }
@@ -395,7 +457,7 @@ impl Sim {
         self.core.now = item.at;
         self.core.stats.events += 1;
         match item.ev {
-            QEv::Actor(dst, ev) => self.deliver(dst, item.at, ev),
+            QEv::Actor(dst, stamp, ev) => self.deliver(dst, item.at, stamp, ev),
             QEv::MemRead { requester, mem_node, region, ticket } => {
                 let bytes = self
                     .core
@@ -403,10 +465,12 @@ impl Sim {
                     .get(&(mem_node, region))
                     .cloned()
                     .unwrap_or_default();
+                let stamp = self.core.incarnation[requester];
                 self.core.push(
                     self.core.now,
                     QEv::Actor(
                         requester,
+                        stamp,
                         Event::MemDone { mem_node, ticket, result: MemResult::Read(bytes) },
                     ),
                 );
@@ -419,20 +483,73 @@ impl Sim {
                 slot[from..from + bytes.len()].copy_from_slice(&bytes);
             }
             QEv::MemWriteAck { requester, mem_node, ticket } => {
+                let stamp = self.core.incarnation[requester];
                 self.core.push(
                     self.core.now,
                     QEv::Actor(
                         requester,
+                        stamp,
                         Event::MemDone { mem_node, ticket, result: MemResult::Written },
                     ),
                 );
             }
+            QEv::Restart(node) => {
+                if node >= self.actors.len() {
+                    return;
+                }
+                // A pending fault-plan crash that no delivery has applied
+                // yet still counts: apply it before deciding to revive.
+                if let Some(&t) = self.core.faults.crash_at.get(&node) {
+                    if item.at >= t {
+                        self.core.crashed[node] = true;
+                    }
+                }
+                if self.core.crashed[node] {
+                    self.revive(node);
+                }
+            }
         }
     }
 
-    fn deliver(&mut self, dst: NodeId, at: Nanos, ev: Event) {
-        if dst >= self.actors.len() || self.core.crashed[dst] {
+    /// Revive a crashed node from its restart factory: a fresh actor,
+    /// a bumped incarnation (stale timers/completions die), and a clean
+    /// CPU. The fault-plan crash entry is cleared so deliveries do not
+    /// immediately re-crash the revived node. Returns `false` (leaving
+    /// the node down) when no factory is registered.
+    fn revive(&mut self, node: NodeId) -> bool {
+        let Some(factory) = self.restart_factories.get_mut(&node) else {
+            return false;
+        };
+        let fresh = factory();
+        self.core.faults.crash_at.remove(&node);
+        self.core.crashed[node] = false;
+        self.core.incarnation[node] += 1;
+        self.core.busy_until[node] = self.core.now;
+        self.actors[node] = Some(fresh);
+        self.dispatch_start(node);
+        true
+    }
+
+    fn deliver(&mut self, dst: NodeId, at: Nanos, stamp: u32, ev: Event) {
+        if dst >= self.actors.len() {
             return;
+        }
+        if self.core.crashed[dst] {
+            // Model-checker restart injection: an event reaching a downed
+            // node is the choice point for reviving it. On revive the
+            // triggering event falls through to normal delivery (stale
+            // timers/completions are filtered by the stamp check below).
+            let revived = if self.core.scheduler.is_some() {
+                let mut sched = self.core.scheduler.take().expect("checked above");
+                let restart = sched.restart_node(dst);
+                self.core.scheduler = Some(sched);
+                restart && self.revive(dst)
+            } else {
+                false
+            };
+            if !revived {
+                return;
+            }
         }
         if let Some(&t) = self.core.faults.crash_at.get(&dst) {
             if at >= t {
@@ -440,10 +557,15 @@ impl Sim {
                 return;
             }
         }
+        // Timers and memory completions die with the incarnation that
+        // armed them; network messages outlive the crash.
+        if stamp < self.core.incarnation[dst] && !matches!(ev, Event::Recv { .. }) {
+            return;
+        }
         // Model serial event processing: if the actor is busy, requeue.
         if self.core.busy_until[dst] > at {
             let when = self.core.busy_until[dst];
-            self.core.push(when, QEv::Actor(dst, ev));
+            self.core.push(when, QEv::Actor(dst, stamp, ev));
             return;
         }
         // Model-checker fault injection: consulted exactly once per
@@ -515,7 +637,8 @@ impl<'a> Env for EnvImpl<'a> {
             0
         };
         let at = now + self.core.lat.msg(bytes.len()) + jitter;
-        self.core.push(at, QEv::Actor(dst, Event::Recv { from: self.me, bytes }));
+        let stamp = self.core.incarnation.get(dst).copied().unwrap_or(0);
+        self.core.push(at, QEv::Actor(dst, stamp, Event::Recv { from: self.me, bytes }));
     }
 
     fn charge(&mut self, cat: Category, ns: Nanos) {
@@ -528,7 +651,8 @@ impl<'a> Env for EnvImpl<'a> {
 
     fn set_timer(&mut self, after: Nanos, token: u64) {
         let at = self.now() + after;
-        self.core.push(at, QEv::Actor(self.me, Event::Timer { token }));
+        let stamp = self.core.incarnation[self.me];
+        self.core.push(at, QEv::Actor(self.me, stamp, Event::Timer { token }));
     }
 
     fn mem_write(&mut self, mem_node: usize, region: RegionId, bytes: Vec<u8>) -> Ticket {
@@ -539,10 +663,12 @@ impl<'a> Env for EnvImpl<'a> {
 
         // Single-writer permission: enforced by the (trusted) memory node.
         if region.owner != self.me {
+            let stamp = self.core.incarnation[self.me];
             self.core.push(
                 now + self.core.lat.rdma_write,
                 QEv::Actor(
                     self.me,
+                    stamp,
                     Event::MemDone { mem_node, ticket, result: MemResult::Denied },
                 ),
             );
@@ -795,5 +921,86 @@ mod tests {
         sim.run_until(crate::SECOND);
         // Far fewer than 1000 rounds happened.
         assert!(sim.stats().msgs_sent < 20);
+    }
+
+    #[test]
+    fn restart_revives_a_crashed_node() {
+        let mut cfg = no_jitter_cfg();
+        cfg.seed = 5;
+        let mut sim = Sim::new(cfg);
+        sim.add_actor(Box::new(Pinger { peer: 1, times: vec![], rounds: 1000, kick: true }));
+        sim.add_actor(Box::new(Pinger { peer: 0, times: vec![], rounds: 1000, kick: false }));
+        // The revived node kicks a fresh ping-pong from on_start.
+        sim.set_restart_factory(
+            1,
+            Box::new(|| Box::new(Pinger { peer: 0, times: vec![], rounds: 1000, kick: true })),
+        );
+        let mut faults = FaultPlan::default();
+        faults.crash_at.insert(1, 3_000);
+        faults.restart_at.insert(1, 1_000_000);
+        sim.set_faults(faults);
+        sim.run_until(crate::SECOND);
+        assert!(!sim.is_crashed(1));
+        assert_eq!(sim.incarnation(1), 1);
+        // The post-restart ping-pong ran essentially unhindered.
+        assert!(sim.stats().msgs_sent > 100, "sent {}", sim.stats().msgs_sent);
+    }
+
+    #[test]
+    fn restart_without_factory_stays_down() {
+        let mut cfg = no_jitter_cfg();
+        cfg.seed = 5;
+        let mut sim = Sim::new(cfg);
+        sim.add_actor(Box::new(Pinger { peer: 1, times: vec![], rounds: 1000, kick: true }));
+        sim.add_actor(Box::new(Pinger { peer: 0, times: vec![], rounds: 1000, kick: false }));
+        let mut faults = FaultPlan::default();
+        faults.crash_at.insert(1, 3_000);
+        faults.restart_at.insert(1, 1_000_000);
+        sim.set_faults(faults);
+        sim.run_until(crate::SECOND);
+        assert!(sim.is_crashed(1));
+        assert_eq!(sim.incarnation(1), 0);
+        assert!(sim.stats().msgs_sent < 20);
+    }
+
+    /// Each incarnation arms one timer tagged with its own token and logs
+    /// what actually fires. The pre-crash timer lands *after* the restart
+    /// and must be swallowed by the incarnation stamp.
+    struct TimerBox {
+        log: std::sync::Arc<std::sync::Mutex<Vec<u64>>>,
+        token: u64,
+    }
+
+    impl Actor for TimerBox {
+        fn on_start(&mut self, env: &mut dyn Env) {
+            env.set_timer(200_000, self.token);
+        }
+        fn on_event(&mut self, _env: &mut dyn Env, ev: Event) {
+            if let Event::Timer { token } = ev {
+                self.log.lock().unwrap().push(token);
+            }
+        }
+    }
+
+    #[test]
+    fn stale_timers_die_with_their_incarnation() {
+        use std::sync::{Arc, Mutex};
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut sim = Sim::new(no_jitter_cfg());
+        sim.add_actor(Box::new(TimerBox { log: log.clone(), token: 1 }));
+        let log2 = log.clone();
+        sim.set_restart_factory(
+            0,
+            Box::new(move || Box::new(TimerBox { log: log2.clone(), token: 2 })),
+        );
+        let mut faults = FaultPlan::default();
+        // Crash at 10µs (applied lazily by the restart event at 100µs);
+        // incarnation 1's timer for t=200µs must not fire, incarnation
+        // 2's (armed at 100µs, fires at 300µs) must.
+        faults.crash_at.insert(0, 10_000);
+        faults.restart_at.insert(0, 100_000);
+        sim.set_faults(faults);
+        sim.run_until(crate::SECOND);
+        assert_eq!(*log.lock().unwrap(), vec![2]);
     }
 }

@@ -95,10 +95,34 @@
 //! serializable across shards via two-phase commit over strict two-phase
 //! locking: plain operations conflicting with a held lock are rejected
 //! with a deterministic `TX_LOCKED` reply rather than reordered.
+//!
+//! # Durability & recovery
+//!
+//! The [`persist`] submodule converts the failure model from crash-stop
+//! to crash-recovery: behind the [`Persistence`] trait a replica keeps
+//! an append-only WAL (certify endorsements, decided batches, view
+//! changes) plus checkpointed snapshots, and on restart replays the WAL
+//! onto its newest durable snapshot — f-independent recovery, no live
+//! peer required. The default [`persist::InMemory`] backend keeps the
+//! seed's memoryless behaviour (and the allocation-free hot path)
+//! untouched; [`persist::SimDisk`] survives simulated crash-restart for
+//! the model checker; [`persist::FileSystemLog`] writes real files with
+//! async group-fsync. Reply-cache deltas deliberately ride the decided
+//! batches rather than their own WAL records: recovery rebuilds the
+//! at-most-once cache by re-executing the replayed batches, which keeps
+//! the WAL smaller *and* cannot double-insert a reply. Time-driven
+//! service housekeeping (the 2PC participant lease) hooks in through
+//! [`Service::housekeep`], whose emitted operations are decided through
+//! consensus like any other request — never applied locally out of
+//! order.
 
 use crate::consensus::msgs::Request;
 use crate::crypto::Hash32;
 use crate::Nanos;
+
+pub mod persist;
+
+pub use persist::{PersistMode, Persistence, Recovered};
 
 /// How a request interacts with service state (the typed operation
 /// classes of the `Service` API).
@@ -288,6 +312,19 @@ pub trait Service: Checkpointable + Send {
     /// everything validates.
     fn validate(&self, _req: &[u8]) -> bool {
         true
+    }
+
+    /// Time-driven housekeeping, called from the replica's periodic tick
+    /// with the current (simulated or real) time. Returns request
+    /// payloads the replica should *propose through consensus* on the
+    /// service's behalf — e.g. the 2PC participant lease emitting an
+    /// abort for a transaction whose coordinator went silent. Emitted
+    /// operations are decided and applied in slot order on every
+    /// replica; `housekeep` itself must not mutate digest-visible state
+    /// (replicas tick at different times, so anything digest-visible
+    /// here would diverge). Default: no housekeeping.
+    fn housekeep(&mut self, _now: Nanos) -> Vec<Vec<u8>> {
+        Vec::new()
     }
 
     /// Simulated execution cost charged by the DES per request (ns).

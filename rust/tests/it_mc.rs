@@ -9,10 +9,12 @@
 //! (including a round trip through the on-disk trace format, the same
 //! path `ubft check --replay` takes).
 //!
-//! The suite also pins the one *known* open gap the checker documents
-//! rather than fails on: a crashed 2PC coordinator leaks participant
-//! locks forever (no participant-side lease — see README.md, "Model
-//! checking").
+//! The suite also pins the closure of a formerly-open gap the checker
+//! used to document rather than fail on: a crashed 2PC coordinator once
+//! leaked participant locks forever; participant-side leases
+//! (`Config::tx_lease_ns`) now abort the staged transaction through
+//! shard consensus, so the pin asserts zero leaked locks (see
+//! README.md, "Model checking").
 
 use ubft::mc::{self, scenarios, CheckOpts, Driver, Found, Trace};
 use ubft::shard::TxService;
@@ -133,22 +135,24 @@ fn base_scenario_explores_clean() {
 }
 
 #[test]
-fn coordinator_crash_mid_2pc_leaks_participant_locks_but_stays_safe() {
-    // The regression pin for the known 2PC gap (see the scenario's doc
-    // and README.md "Model checking"): the coordinator lives in the
-    // client, and participant locks release only via coordinator-sent
-    // Commit/Abort — there is no participant-side lease. Crashing the
-    // coordinator mid-traffic therefore leaks its in-flight locks
-    // *forever*; that bounds liveness for conflicting keys, but never
-    // safety. This test pins all three faces of that behavior:
+fn coordinator_crash_mid_2pc_releases_all_locks_via_lease() {
+    // The regression pin for the (closed) 2PC coordinator-crash gap
+    // (see the scenario's doc and README.md "Model checking"): the
+    // coordinator lives in the client, and participant locks used to
+    // release only via coordinator-sent Commit/Abort — a crashed
+    // coordinator leaked its in-flight locks forever. Participants now
+    // carry a lease (`Config::tx_lease_ns`): when a staged transaction
+    // outlives it, the leader proposes an abort *through shard
+    // consensus*, so every replica releases the lock at the same slot.
+    // This test pins all three faces of the fix:
     //
     // 1. the surviving client still completes every request (conflicting
     //    transactions abort rather than block),
     // 2. every safety invariant — including settlement atomicity — holds
     //    at quiescence (a staged-but-undecided transaction applies
     //    nothing), and
-    // 3. the leak is real: at least one participant lock remains in the
-    //    final lock tables, which a participant-side lease would clear.
+    // 3. the leak is gone: no participant lock remains in the final
+    //    lock tables once the lease has fired.
     let scn = scenarios::find("coordinator-crash-2pc").expect("scenario registered");
     let mut cluster = scn.deployment(None).build().expect("scenario builds");
     cluster.run_until(scn.deadline);
@@ -177,10 +181,10 @@ fn coordinator_crash_mid_2pc_leaks_participant_locks_but_stays_safe() {
         let locks = TxService::snapshot_locks(&snap).expect("2pc participant snapshot");
         leaked += locks.len();
     }
-    assert!(
-        leaked > 0,
-        "no participant lock survived the coordinator crash — if a \
-         participant-side lease now releases them, update the scenario \
-         doc, README.md (Model checking) and this pin together"
+    assert_eq!(
+        leaked, 0,
+        "participant locks survived the coordinator crash — the \
+         tx_lease abort path (TxService::housekeep) must release every \
+         staged lock through shard consensus before quiescence"
     );
 }
